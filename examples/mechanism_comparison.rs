@@ -1,0 +1,70 @@
+//! Mechanism comparison (the Fig 1 protocol) for one model pair: baseline
+//! vs priority streams vs time-slicing vs MPS vs the paper's proposed
+//! fine-grained preemption.
+//!
+//! Run: `cargo run --release --example mechanism_comparison -- [--model vgg19] [--requests 80]`
+
+use gpushare::exp::{paper_mechanisms, MechanismComparison, Protocol};
+use gpushare::sched::Mechanism;
+use gpushare::util::cli::Args;
+use gpushare::util::table::{bench_out_dir, fmt_f, Table};
+use gpushare::workload::DlModel;
+
+fn main() {
+    let args = Args::from_env();
+    let model = DlModel::from_name(&args.get_or("model", "resnet50")).expect("unknown model");
+    let proto = Protocol {
+        requests: args.get_u64("requests", 60) as u32,
+        train_steps: args.get_u64("steps", 24) as u32,
+        seed: args.get_u64("seed", 42),
+        ..Protocol::default()
+    };
+    let mut mechanisms = paper_mechanisms();
+    mechanisms.push(Mechanism::fine_grained_default());
+
+    println!(
+        "running {}-infer + {}-train across {} mechanisms...",
+        model.name(),
+        model.name(),
+        mechanisms.len()
+    );
+    let cmp = MechanismComparison::run(&proto, model, model, &mechanisms);
+
+    let mut t = Table::new(
+        &format!("mechanism comparison — {}", model.name()),
+        &[
+            "mechanism",
+            "turnaround ms",
+            "vs baseline",
+            "p99 ms",
+            "variance",
+            "train s",
+            "train +s",
+        ],
+    );
+    t.row(&[
+        "baseline".into(),
+        fmt_f(cmp.baseline_turnaround_ms, 3),
+        "1.00x".into(),
+        "-".into(),
+        "-".into(),
+        fmt_f(cmp.baseline_train_s, 3),
+        "+0.000".into(),
+    ]);
+    for (name, rep) in &cmp.per_mechanism {
+        let s = rep.turnaround_summary();
+        t.row(&[
+            name.clone(),
+            fmt_f(s.mean, 3),
+            format!("{:.2}x", s.mean / cmp.baseline_turnaround_ms),
+            fmt_f(s.p99, 3),
+            fmt_f(s.variance, 4),
+            fmt_f(rep.train_time_s().unwrap_or(f64::NAN), 3),
+            format!(
+                "{:+.3}",
+                rep.train_time_s().unwrap_or(f64::NAN) - cmp.baseline_train_s
+            ),
+        ]);
+    }
+    t.emit(&bench_out_dir());
+}

@@ -1,0 +1,122 @@
+//! Preemption study (§5): evaluates the paper's proposed fine-grained
+//! block-level preemption against the three hardware mechanisms, across
+//! its policy space (reactive / proactive / proactive+hold-space, most-room
+//! vs contention-aware placement), and reports the O9 cost-hiding analysis
+//! for the model's inference kernel sequence.
+//!
+//! Run: `cargo run --release --example preemption_study -- [--model vgg19]`
+
+use gpushare::exp::{MechanismComparison, Protocol};
+use gpushare::gpu::DeviceConfig;
+use gpushare::preempt::{HidingAnalysis, PreemptCostModel};
+use gpushare::sched::{Mechanism, PlacementPolicy, PreemptConfig, PreemptPolicy};
+use gpushare::util::cli::Args;
+use gpushare::util::rng::Rng;
+use gpushare::util::table::{bench_out_dir, fmt_f, Table};
+use gpushare::workload::DlModel;
+
+fn main() {
+    let args = Args::from_env();
+    let model = DlModel::from_name(&args.get_or("model", "vgg19")).expect("unknown model");
+    let proto = Protocol {
+        requests: args.get_u64("requests", 50) as u32,
+        train_steps: args.get_u64("steps", 20) as u32,
+        seed: args.get_u64("seed", 42),
+        ..Protocol::default()
+    };
+
+    let variants: Vec<(&str, Mechanism)> = vec![
+        ("streams", Mechanism::PriorityStreams),
+        ("time-slicing", Mechanism::TimeSlicing),
+        ("mps", Mechanism::mps_default()),
+        (
+            "fg-reactive",
+            Mechanism::FineGrained(PreemptConfig {
+                policy: PreemptPolicy::Reactive,
+                placement: PlacementPolicy::MostRoom,
+                ..Default::default()
+            }),
+        ),
+        (
+            "fg-proactive",
+            Mechanism::FineGrained(PreemptConfig {
+                policy: PreemptPolicy::Proactive { hold_space: false },
+                placement: PlacementPolicy::MostRoom,
+                ..Default::default()
+            }),
+        ),
+        (
+            "fg-proactive+hold",
+            Mechanism::FineGrained(PreemptConfig {
+                policy: PreemptPolicy::Proactive { hold_space: true },
+                placement: PlacementPolicy::MostRoom,
+                ..Default::default()
+            }),
+        ),
+        (
+            "fg-contention-aware",
+            Mechanism::FineGrained(PreemptConfig {
+                policy: PreemptPolicy::Proactive { hold_space: true },
+                placement: PlacementPolicy::LeastContention,
+                ..Default::default()
+            }),
+        ),
+    ];
+    let mechs: Vec<Mechanism> = variants.iter().map(|(_, m)| m.clone()).collect();
+    println!("evaluating {} scheduler variants on {} ...", mechs.len(), model.name());
+    let cmp = MechanismComparison::run(&proto, model, model, &mechs);
+
+    let mut t = Table::new(
+        &format!("fine-grained preemption vs hardware mechanisms — {}", model.name()),
+        &["variant", "turnaround ms", "vs baseline", "variance", "train s", "preemptions", "save hidden %"],
+    );
+    t.row(&[
+        "baseline".into(),
+        fmt_f(cmp.baseline_turnaround_ms, 3),
+        "1.00x".into(),
+        "-".into(),
+        fmt_f(cmp.baseline_train_s, 3),
+        "0".into(),
+        "-".into(),
+    ]);
+    for ((label, _), (_, rep)) in variants.iter().zip(&cmp.per_mechanism) {
+        let s = rep.turnaround_summary();
+        t.row(&[
+            label.to_string(),
+            fmt_f(s.mean, 3),
+            format!("{:.2}x", s.mean / cmp.baseline_turnaround_ms),
+            fmt_f(s.variance, 4),
+            fmt_f(rep.train_time_s().unwrap_or(f64::NAN), 3),
+            rep.preemptions.to_string(),
+            if rep.total_save_ns > 0 {
+                fmt_f(rep.hidden_save_fraction() * 100.0, 1)
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    t.emit(&bench_out_dir());
+
+    // O9 static hiding analysis on this model's inference stream.
+    let dev = DeviceConfig::rtx3090();
+    let cost = PreemptCostModel::new();
+    let save = cost.single_sm_save_ns(&dev);
+    let profile = model.infer_profile().expect("inference profile");
+    let mut rng = Rng::new(7);
+    let mut ops = Vec::new();
+    for _ in 0..20 {
+        ops.extend(profile.gen_unit(&dev, &mut rng));
+    }
+    let analysis = HidingAnalysis::analyze(&ops, &dev, save);
+    println!(
+        "\nO9 hiding analysis over {} inference kernels (save = {:.1} µs):",
+        analysis.per_kernel.len(),
+        save as f64 / 1e3
+    );
+    println!(
+        "  fully hidden: {:.1}%   mean hidden fraction: {:.1}%   exposed total: {:.3} ms",
+        analysis.fully_hidden_frac() * 100.0,
+        analysis.mean_hidden_frac() * 100.0,
+        analysis.exposed_ns() as f64 / 1e6
+    );
+}

@@ -1,0 +1,95 @@
+//! End-to-end driver (deliverable (b)/EXPERIMENTS.md §E2E): serves the
+//! AOT-compiled MLP through the rust coordinator via PJRT — batched
+//! requests with Poisson arrivals — while a best-effort trainer runs real
+//! SGD steps through the same artifact set, under each governor mode
+//! (the process-level analogues of the paper's mechanisms). Reports
+//! latency/throughput per mode and the trainer's loss curve.
+//!
+//! Requires `make artifacts` first.
+//!
+//! Run: `cargo run --release --example serve_inference -- [--requests 120] [--steps 30]`
+
+use gpushare::coordinator::{serve, BatcherConfig, GovernorMode, ServeConfig};
+use gpushare::examples_support::{mlp_runner, mlp_trainer_factory, MLP_IN};
+use gpushare::runtime::artifacts_dir;
+use gpushare::util::cli::Args;
+use gpushare::util::table::{bench_out_dir, fmt_f, Table};
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn main() {
+    let args = Args::from_env();
+    let dir: PathBuf = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(artifacts_dir);
+    let requests = args.get_u64("requests", 120) as u32;
+    let steps = args.get_u64("steps", 30) as u32;
+
+    let modes = [
+        GovernorMode::Shared,
+        GovernorMode::Serialized {
+            slice: Duration::from_millis(2),
+        },
+        GovernorMode::InferencePriority,
+        GovernorMode::Preemptive,
+    ];
+
+    let mut t = Table::new(
+        "e2e PJRT serving: MLP inference + best-effort SGD trainer",
+        &[
+            "governor",
+            "completed",
+            "lat mean ms",
+            "lat p99 ms",
+            "req/s",
+            "mean batch",
+            "train steps/s",
+            "trainer waits",
+            "loss start→end",
+        ],
+    );
+    for mode in modes {
+        let cfg = ServeConfig {
+            mode,
+            requests,
+            train_steps: steps,
+            mean_interarrival: Some(Duration::from_millis(4)),
+            batcher: BatcherConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(2),
+            },
+            in_features: MLP_IN,
+            ..Default::default()
+        };
+        let d = dir.clone();
+        let runner_factory = move || mlp_runner(&d).expect("build runner (run `make artifacts`)");
+        let trainer = mlp_trainer_factory(dir.clone());
+        eprintln!("mode {} ...", mode.name());
+        let rep = serve(cfg, runner_factory, Some(trainer));
+        t.row(&[
+            rep.mode.to_string(),
+            format!("{}/{}", rep.completed, requests),
+            fmt_f(rep.latency_ms.mean, 3),
+            fmt_f(rep.latency_ms.p99, 3),
+            fmt_f(rep.throughput_rps, 1),
+            fmt_f(rep.mean_batch, 2),
+            fmt_f(rep.train_steps_per_s, 2),
+            rep.trainer_waits.to_string(),
+            format!(
+                "{} → {}",
+                rep.losses.first().map(|l| format!("{l:.3}")).unwrap_or("-".into()),
+                rep.losses.last().map(|l| format!("{l:.3}")).unwrap_or("-".into())
+            ),
+        ]);
+        if let (Some(first), Some(last)) = (rep.losses.first(), rep.losses.last()) {
+            assert!(
+                last < first,
+                "trainer loss did not fall under {}: {first} -> {last}",
+                rep.mode
+            );
+        }
+    }
+    t.emit(&bench_out_dir());
+    println!("\nall layers composed: rust coordinator -> PJRT -> AOT HLO (JAX + Pallas kernels).");
+}

@@ -1,0 +1,200 @@
+"""AOT compile path: lower the L2 JAX models (with L1 Pallas kernels inside)
+to HLO **text** artifacts the rust runtime loads through PJRT.
+
+HLO text — not ``serialize()``-d protos — is the interchange format: jax
+≥ 0.5 emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Parameters are **explicit inputs** everywhere (never baked as closure
+constants): the HLO text printer elides large literals as ``constant({...})``
+which would not survive the text round-trip. The rust side loads the
+initial values from ``{mlp,cnn}_params.bin`` and feeds them on every call —
+which also means the serving path can pick up parameters updated by the
+best-effort trainer (the e2e story of the paper's workload).
+
+Artifacts (written to ``artifacts/``):
+  * ``mlp_infer_b{1,8,32}.hlo.txt``  — MLP forward: inputs = params…, x;
+  * ``mlp_train_b32.hlo.txt``        — MLP SGD step: inputs = params…, x, y;
+    outputs = new params…, loss;
+  * ``cnn_infer_b{1,8}.hlo.txt``     — CNN forward: inputs = params…, x;
+  * ``manifest.json``                — entry name → file, input/output
+    shapes+dtypes, and `param_inputs` (how many leading inputs are params);
+  * ``mlp_params.bin`` / ``cnn_params.bin`` — f32 little-endian initial
+    parameters (flat, manifest order).
+
+Run via ``make artifacts`` (a no-op when inputs are unchanged).
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(arr):
+    return {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+
+
+def build_artifacts(out_dir: str, seed: int = 0):
+    os.makedirs(out_dir, exist_ok=True)
+    key = jax.random.PRNGKey(seed)
+    kmlp, kcnn, kenc = jax.random.split(key, 3)
+    mlp_params = M.mlp_init(kmlp)
+    cnn_params = M.cnn_init(kcnn)
+    enc_params = M.encoder_init(kenc)
+    manifest = {"entries": []}
+
+    def spec_of(s):
+        return {"shape": list(s.shape), "dtype": str(np.dtype(s.dtype))}
+
+    def emit(name, fn, arg_shapes, out_specs, param_inputs):
+        lowered = jax.jit(fn).lower(*arg_shapes)
+        text = to_hlo_text(lowered)
+        if "constant({...})" in text:
+            raise RuntimeError(
+                f"{name}: HLO text contains an elided large constant — "
+                "parameters must be explicit inputs"
+            )
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [spec_of(s) for s in arg_shapes],
+                "outputs": out_specs,
+                "param_inputs": param_inputs,
+            }
+        )
+        print(f"  {fname}: {len(text)/1e6:.2f} MB, {len(arg_shapes)} inputs")
+
+    def dump_params(fname, flat):
+        with open(os.path.join(out_dir, fname), "wb") as f:
+            for p in flat:
+                f.write(np.asarray(p, dtype="<f4").tobytes())
+
+    # ---- MLP: params explicit everywhere ----
+    mlp_flat, mlp_tree = jax.tree_util.tree_flatten(mlp_params)
+    mlp_pspecs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in mlp_flat]
+
+    def mlp_infer(*args):
+        n = len(mlp_flat)
+        params = jax.tree_util.tree_unflatten(mlp_tree, args[:n])
+        return (M.mlp_forward(params, args[n]),)
+
+    for b in (1, 8, 32):
+        x = jax.ShapeDtypeStruct((b, 784), jnp.float32)
+        emit(
+            f"mlp_infer_b{b}",
+            mlp_infer,
+            tuple(mlp_pspecs) + (x,),
+            [{"shape": [b, 10], "dtype": "float32"}],
+            len(mlp_flat),
+        )
+
+    b = 32
+    x = jax.ShapeDtypeStruct((b, 784), jnp.float32)
+    y = jax.ShapeDtypeStruct((b,), jnp.int32)
+
+    def mlp_train(*args):
+        n = len(mlp_flat)
+        params = jax.tree_util.tree_unflatten(mlp_tree, args[:n])
+        new_params, loss = M.mlp_train_step(params, args[n], args[n + 1])
+        new_flat, _ = jax.tree_util.tree_flatten(new_params)
+        return tuple(new_flat) + (loss,)
+
+    emit(
+        "mlp_train_b32",
+        mlp_train,
+        tuple(mlp_pspecs) + (x, y),
+        [spec_of(s) for s in mlp_pspecs] + [{"shape": [], "dtype": "float32"}],
+        len(mlp_flat),
+    )
+    dump_params("mlp_params.bin", mlp_flat)
+    manifest["mlp_params"] = {
+        "file": "mlp_params.bin",
+        "arrays": [_spec(np.asarray(p)) for p in mlp_flat],
+    }
+
+    # ---- CNN: params explicit ----
+    cnn_flat, cnn_tree = jax.tree_util.tree_flatten(cnn_params)
+    cnn_pspecs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in cnn_flat]
+
+    def cnn_infer(*args):
+        n = len(cnn_flat)
+        params = jax.tree_util.tree_unflatten(cnn_tree, args[:n])
+        return (M.cnn_forward(params, args[n]),)
+
+    for b in (1, 8):
+        x = jax.ShapeDtypeStruct((b, 28, 28, 1), jnp.float32)
+        emit(
+            f"cnn_infer_b{b}",
+            cnn_infer,
+            tuple(cnn_pspecs) + (x,),
+            [{"shape": [b, 10], "dtype": "float32"}],
+            len(cnn_flat),
+        )
+    dump_params("cnn_params.bin", cnn_flat)
+    manifest["cnn_params"] = {
+        "file": "cnn_params.bin",
+        "arrays": [_spec(np.asarray(p)) for p in cnn_flat],
+    }
+
+    # ---- tiny-BERT encoder (attention kernel inside): params explicit ----
+    enc_flat, enc_tree = jax.tree_util.tree_flatten(enc_params)
+    enc_pspecs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in enc_flat]
+
+    def enc_infer(*args):
+        n = len(enc_flat)
+        params = jax.tree_util.tree_unflatten(enc_tree, args[:n])
+        return (M.encoder_forward(params, args[n]),)
+
+    for b in (1, 4):
+        x = jax.ShapeDtypeStruct((b, M.ENC_SEQ, M.ENC_DIM), jnp.float32)
+        emit(
+            f"bert_tiny_infer_b{b}",
+            enc_infer,
+            tuple(enc_pspecs) + (x,),
+            [{"shape": [b, M.ENC_CLASSES], "dtype": "float32"}],
+            len(enc_flat),
+        )
+    dump_params("bert_tiny_params.bin", enc_flat)
+    manifest["bert_tiny_params"] = {
+        "file": "bert_tiny_params.bin",
+        "arrays": [_spec(np.asarray(p)) for p in enc_flat],
+    }
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  manifest.json: {len(manifest['entries'])} entries")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print(f"building AOT artifacts in {args.out}")
+    build_artifacts(args.out, args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Pallas kernels (L1) and their pure-jnp oracles (ref)."""
+
+from . import ref
+from .attention import attention, attention_ref
+from .conv import avg_pool2, conv2d, im2col
+from .elementwise import bias_add, bias_relu
+from .matmul import matmul, matmul_pallas_raw, mxu_utilization_estimate, vmem_bytes
+from .softmax import softmax
+
+__all__ = [
+    "ref",
+    "attention",
+    "attention_ref",
+    "matmul",
+    "matmul_pallas_raw",
+    "vmem_bytes",
+    "mxu_utilization_estimate",
+    "bias_relu",
+    "bias_add",
+    "softmax",
+    "conv2d",
+    "im2col",
+    "avg_pool2",
+]

@@ -1,0 +1,112 @@
+"""L1 Pallas kernel: single-head scaled-dot-product attention.
+
+The BERT workload in Table 1 spends its time in attention + GEMM kernels;
+this kernel is the attention half of the tiny-BERT encoder in model.py.
+
+TPU shaping: the grid blocks over query rows; each grid step holds a
+(BQ, d) query tile plus the full (S, d) key/value panels in VMEM (the
+served sequence lengths are ≤ 128, so K/V panels are a few tens of KB —
+far under the VMEM budget; a production kernel would pipeline K/V in
+S-blocks, flash-attention style, which changes the BlockSpec but not the
+call signature). Numerically stable row softmax inside the tile.
+
+Differentiable via ``jax.custom_vjp`` with the standard attention backward
+expressed through the same Pallas matmul primitives.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import matmul_pallas_raw
+
+BLOCK_Q = 128
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    q = q_ref[...]  # (bq, d)
+    k = k_ref[...]  # (s, d)
+    v = v_ref[...]  # (s, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, s)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def _ceil_to(v, m):
+    return (v + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=())
+def attention_raw(q, k, v):
+    """softmax(q kᵀ / sqrt(d)) v for 2-D (S_q, d), (S, d), (S, d)."""
+    sq, d = q.shape
+    s, d2 = k.shape
+    assert d == d2 and v.shape == (s, d)
+    scale = 1.0 / (d ** 0.5)
+    bq = min(BLOCK_Q, _ceil_to(sq, 8))
+    sqp = _ceil_to(sq, bq)
+    qp = jnp.pad(q, ((0, sqp - sq), (0, 0))) if sqp != sq else q
+    out = pl.pallas_call(
+        functools.partial(_attention_kernel, scale=scale),
+        grid=(sqp // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((s, d), lambda i: (0, 0)),
+            pl.BlockSpec((s, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sqp, d), q.dtype),
+        interpret=True,
+    )(qp, k, v)
+    return out[:sq]
+
+
+@jax.custom_vjp
+def attention(q, k, v):
+    """Differentiable single-head attention on Pallas tiles."""
+    return attention_raw(q, k, v)
+
+
+def _attn_fwd(q, k, v):
+    # recompute the probabilities in the backward (memory-light fwd)
+    o = attention_raw(q, k, v)
+    return o, (q, k, v)
+
+
+def _attn_bwd(res, g):
+    q, k, v = res
+    d = q.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+    # p = softmax(q k^T * scale)
+    s = matmul_pallas_raw(q, k.T) * scale
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    dv = matmul_pallas_raw(p.T, g)
+    dp = matmul_pallas_raw(g, v.T)
+    # softmax backward: ds = p * (dp - sum(dp * p, axis=-1, keepdims))
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = matmul_pallas_raw(ds, k) * scale
+    dk = matmul_pallas_raw(ds.T, q) * scale
+    return dq, dk, dv
+
+
+attention.defvjp(_attn_fwd, _attn_bwd)
+
+
+def attention_ref(q, k, v):
+    """Pure-jnp oracle."""
+    d = q.shape[-1]
+    s = jnp.matmul(q, k.T) / (d ** 0.5)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.matmul(p, v).astype(q.dtype)
+
+
+def vmem_bytes(sq, s, d, bq=BLOCK_Q, dtype_bytes=4):
+    """Per-grid-step VMEM estimate: Q tile + K + V panels + outputs."""
+    bq = min(bq, sq)
+    return (bq * d + 2 * s * d + bq * d + bq * s) * dtype_bytes

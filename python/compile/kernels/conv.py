@@ -1,0 +1,46 @@
+"""L1: conv2d lowered to im2col + the tiled Pallas matmul.
+
+The paper's CNN workloads spend their time in convolutional SGEMM kernels
+(§5/O10 names "convolutional implicit SGEMM" as the canonical inference
+kernel); on TPU the idiomatic mapping is exactly im2col + MXU matmul, so
+the conv shares the matmul kernel's VMEM/MXU schedule.
+"""
+
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def im2col(x, kh, kw):
+    """NHWC -> (N*OH*OW, KH*KW*C) patch matrix (stride 1, VALID)."""
+    n, h, w, c = x.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(x[:, i : i + oh, j : j + ow, :])
+    patches = jnp.stack(cols, axis=-2)  # (n, oh, ow, kh*kw, c)
+    return patches.reshape(n * oh * ow, kh * kw * c)
+
+
+def conv2d(x, w):
+    """NHWC x HWIO -> NHWC via im2col + Pallas matmul (stride 1, VALID).
+
+    Differentiable: the patch extraction is plain jnp (jax transposes it),
+    and the matmul carries its own custom VJP.
+    """
+    n, h, wd, _ = x.shape
+    kh, kw, ci, co = w.shape
+    oh, ow = h - kh + 1, wd - kw + 1
+    patches = im2col(x, kh, kw)  # (n*oh*ow, kh*kw*ci)
+    wmat = w.reshape(kh * kw * ci, co)
+    out = matmul(patches, wmat)  # (n*oh*ow, co)
+    return out.reshape(n, oh, ow, co)
+
+
+def avg_pool2(x):
+    """2×2 average pooling, stride 2 (NHWC). Plain jnp — memory-bound
+    reshape, nothing for the MXU."""
+    n, h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0, "avg_pool2 needs even spatial dims"
+    return x.reshape(n, h // 2, 2, w // 2, 2, c).mean(axis=(2, 4))

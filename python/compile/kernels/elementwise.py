@@ -1,0 +1,94 @@
+"""L1 Pallas kernels: fused elementwise epilogues (VPU-shaped).
+
+``bias_relu`` fuses the dense layer's bias add and activation into one
+row-blocked kernel so the lowered HLO keeps one fusion per layer (the L2
+optimization target in DESIGN.md §10). ``bias_add`` is the no-activation
+variant for the logits layer. Both carry custom VJPs so the training step
+differentiates through them.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+
+
+def _bias_relu_kernel(x_ref, b_ref, o_ref):
+    o_ref[...] = jnp.maximum(x_ref[...] + b_ref[...][None, :], 0.0)
+
+
+def _bias_add_kernel(x_ref, b_ref, o_ref):
+    o_ref[...] = x_ref[...] + b_ref[...][None, :]
+
+
+def _ceil_to(v, m):
+    return (v + m - 1) // m * m
+
+
+def _rowblocked(kernel, x, b):
+    m, n = x.shape
+    bm = min(BLOCK_ROWS, _ceil_to(m, 8))
+    mp = _ceil_to(m, bm)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), x.dtype),
+        interpret=True,
+    )(xp, b)
+    return out[:m]
+
+
+@functools.partial(jax.jit)
+def bias_relu_raw(x, b):
+    return _rowblocked(_bias_relu_kernel, x, b)
+
+
+@functools.partial(jax.jit)
+def bias_add_raw(x, b):
+    return _rowblocked(_bias_add_kernel, x, b)
+
+
+@jax.custom_vjp
+def bias_relu(x, b):
+    """Fused ``max(x + b, 0)`` with row-broadcast bias."""
+    return bias_relu_raw(x, b)
+
+
+def _bias_relu_fwd(x, b):
+    y = bias_relu_raw(x, b)
+    return y, y  # the output is its own mask: y > 0 iff pre-activation > 0
+
+
+def _bias_relu_bwd(y, g):
+    mask = (y > 0).astype(g.dtype)
+    gm = g * mask
+    return gm, jnp.sum(gm, axis=0)
+
+
+bias_relu.defvjp(_bias_relu_fwd, _bias_relu_bwd)
+
+
+@jax.custom_vjp
+def bias_add(x, b):
+    """``x + b`` with row-broadcast bias (logits layer)."""
+    return bias_add_raw(x, b)
+
+
+def _bias_add_fwd(x, b):
+    return bias_add_raw(x, b), None
+
+
+def _bias_add_bwd(_, g):
+    return g, jnp.sum(g, axis=0)
+
+
+bias_add.defvjp(_bias_add_fwd, _bias_add_bwd)

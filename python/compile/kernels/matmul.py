@@ -1,0 +1,111 @@
+"""L1 Pallas kernel: tiled matmul — the compute hot-spot of the served model.
+
+TPU-shaped design (DESIGN.md §3 Hardware-Adaptation): the grid tiles the
+output into ``(BM, BN)`` VMEM blocks feeding the 128×128 MXU; the K
+dimension is kept whole per block (K ≤ 1024 for every layer of the served
+models, so the working set ``(BM·K + K·BN + BM·BN)·4 B`` stays well inside
+the ~16 MB VMEM budget — see DESIGN.md §8 for the footprint table). The
+HBM↔VMEM schedule the paper's CUDA kernels expressed with threadblocks is
+expressed here with ``BlockSpec`` index maps.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; the interpret lowering emits plain HLO that both pytest and
+the rust runtime execute. Real-TPU performance is *estimated*, not
+measured (system constraint).
+
+A ``jax.custom_vjp`` wrapper makes the kernel differentiable (pallas_call
+has no automatic transpose rule), with the backward pass reusing the same
+kernel on transposed operands — so the AOT-lowered *training* step also
+runs on Pallas tiles.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default output tile. 128 matches the MXU systolic-array edge; smaller
+# matrices fall back to their own (padded) size.
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (BM, K) x (K, BN) -> (BM, BN) MXU tile."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pad_to(a, rows, cols):
+    pr, pc = rows - a.shape[0], cols - a.shape[1]
+    if pr == 0 and pc == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pc)))
+
+
+def _ceil_to(v, m):
+    return (v + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul_pallas_raw(x, y, bm=BLOCK_M, bn=BLOCK_N):
+    """Tiled pallas matmul; pads operands to tile multiples and slices back."""
+    (m, k), (k2, n) = x.shape, y.shape
+    assert k == k2, f"inner dims differ: {k} vs {k2}"
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    xp = _pad_to(x, mp, k)
+    yp = _pad_to(y, k, np_)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x, y):
+    """Differentiable tiled-Pallas matmul: ``x @ y``."""
+    return matmul_pallas_raw(x, y)
+
+
+def _matmul_fwd(x, y):
+    return matmul_pallas_raw(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    # dX = g @ Y^T, dY = X^T @ g — the same Pallas kernel, transposed views.
+    dx = matmul_pallas_raw(g, y.T)
+    dy = matmul_pallas_raw(x.T, g)
+    return dx, dy
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_bytes(m, k, n, bm=BLOCK_M, bn=BLOCK_N, dtype_bytes=4):
+    """Per-grid-step VMEM footprint estimate for the DESIGN.md §8 table."""
+    bm = min(bm, m)
+    bn = min(bn, n)
+    return (bm * k + k * bn + bm * bn) * dtype_bytes
+
+
+def mxu_utilization_estimate(m, k, n, bm=BLOCK_M, bn=BLOCK_N):
+    """Fraction of MXU issue slots doing useful work for this tiling:
+    edge-padding waste only (the systolic array processes bm×bn×k MACs
+    regardless of padding)."""
+    mp, np_ = _ceil_to(m, min(bm, m)), _ceil_to(n, min(bn, n))
+    useful = m * n * k
+    issued = mp * np_ * k
+    return useful / issued

@@ -1,0 +1,58 @@
+"""Pure-jnp oracle implementations for every Pallas kernel in this package.
+
+These are the ground truth the pytest/hypothesis suites compare the kernels
+against (``assert_allclose``), and the reference used for the L1 roofline
+comparison in DESIGN.md §8. Keep them boring: no pallas, no custom
+primitives — plain jax.numpy / lax only.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(x, y):
+    """Plain matmul with f32 accumulation."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def bias_relu_ref(x, b):
+    """Row-broadcast bias add + ReLU."""
+    return jnp.maximum(x + b[None, :], 0.0).astype(x.dtype)
+
+
+def bias_add_ref(x, b):
+    """Row-broadcast bias add (no activation — final logits layer)."""
+    return (x + b[None, :]).astype(x.dtype)
+
+
+def softmax_ref(x):
+    """Numerically-stable row softmax."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return (e / jnp.sum(e, axis=-1, keepdims=True)).astype(x.dtype)
+
+
+def conv2d_ref(x, w):
+    """NHWC x HWIO -> NHWC, stride 1, VALID padding."""
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ).astype(x.dtype)
+
+
+def im2col_ref(x, kh, kw):
+    """Extract kh×kw patches of NHWC into (N*OH*OW, KH*KW*C) rows.
+
+    Patch layout matches kernels.conv.im2col: row-major over (kh, kw, c).
+    """
+    n, h, w, c = x.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(x[:, i : i + oh, j : j + ow, :])
+    patches = jnp.stack(cols, axis=-2)  # (n, oh, ow, kh*kw, c)
+    return patches.reshape(n * oh * ow, kh * kw * c)

@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: row-blocked, numerically-stable softmax (VPU-shaped).
+
+Whole rows live in one block (class counts are small for the served
+models), so the max/normalize reductions stay in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _ceil_to(v, m):
+    return (v + m - 1) // m * m
+
+
+@functools.partial(jax.jit)
+def softmax(x):
+    """Row softmax over the last axis of a 2-D array."""
+    m, n = x.shape
+    bm = min(BLOCK_ROWS, _ceil_to(m, 8))
+    mp = _ceil_to(m, bm)
+    # pad rows with zeros: padded rows softmax among themselves, then get
+    # sliced away — no effect on real rows.
+    xp = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+    out = pl.pallas_call(
+        _softmax_kernel,
+        grid=(mp // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), x.dtype),
+        interpret=True,
+    )(xp)
+    return out[:m]

@@ -1,0 +1,224 @@
+"""L2: the served models' forward/backward passes in JAX, built on the
+Pallas kernels (L1).
+
+Two models, matching the paper's workload domain (image recognition):
+
+* ``Mlp`` — a 784→256→128→10 classifier; every dense layer is the tiled
+  Pallas matmul + fused bias(+ReLU) epilogue.
+* ``SmallCnn`` — 28×28×1 images through two conv(Pallas im2col-matmul) +
+  avg-pool stages and a dense head.
+
+Both expose: parameter init, ``forward(params, x) -> logits``,
+cross-entropy ``loss``, and an SGD ``train_step`` differentiated straight
+through the Pallas kernels (their custom VJPs re-use the kernels for the
+backward matmuls). ``aot.py`` lowers: inference with parameters baked in as
+constants (the rust serving path only feeds inputs), and the train step
+with parameters as explicit inputs (the rust trainer feeds them back each
+step).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention, avg_pool2, bias_add, bias_relu, conv2d, matmul
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+MLP_DIMS = (784, 256, 128, 10)
+
+
+def mlp_init(key, dims=MLP_DIMS):
+    """He-initialized parameter list [(W, b), ...]."""
+    params = []
+    for din, dout in zip(dims[:-1], dims[1:]):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (din, dout), jnp.float32) * jnp.sqrt(2.0 / din)
+        b = jnp.zeros((dout,), jnp.float32)
+        params.append((w, b))
+    return params
+
+
+def mlp_forward(params, x):
+    """(B, 784) -> (B, 10) logits, all dense math on Pallas tiles."""
+    h = x
+    for w, b in params[:-1]:
+        h = bias_relu(matmul(h, w), b)
+    w, b = params[-1]
+    return bias_add(matmul(h, w), b)
+
+
+# ---------------------------------------------------------------------------
+# Small CNN
+# ---------------------------------------------------------------------------
+
+CNN_SHAPE = (28, 28, 1)
+
+
+def cnn_init(key):
+    """Conv(3x3,8) -> pool -> Conv(3x3,16) -> pool -> dense(400->64->10)."""
+    ks = jax.random.split(key, 4)
+    w1 = jax.random.normal(ks[0], (3, 3, 1, 8), jnp.float32) * jnp.sqrt(2.0 / 9)
+    w2 = jax.random.normal(ks[1], (3, 3, 8, 16), jnp.float32) * jnp.sqrt(2.0 / 72)
+    # 28 -conv3-> 26 -pool-> 13 ... 13 is odd; conv again: 11 -> pad to 12?
+    # Use: 28 -conv-> 26 -pool-> 13 -conv-> 11, crop to 10 -pool-> 5: 5*5*16=400
+    wd1 = jax.random.normal(ks[2], (400, 64), jnp.float32) * jnp.sqrt(2.0 / 400)
+    wd2 = jax.random.normal(ks[3], (64, 10), jnp.float32) * jnp.sqrt(2.0 / 64)
+    return {
+        "w1": w1,
+        "w2": w2,
+        "wd1": wd1,
+        "bd1": jnp.zeros((64,), jnp.float32),
+        "wd2": wd2,
+        "bd2": jnp.zeros((10,), jnp.float32),
+    }
+
+
+def cnn_forward(params, x):
+    """(B, 28, 28, 1) -> (B, 10) logits."""
+    h = jnp.maximum(conv2d(x, params["w1"]), 0.0)  # (B, 26, 26, 8)
+    h = avg_pool2(h)  # (B, 13, 13, 8)
+    h = jnp.maximum(conv2d(h, params["w2"]), 0.0)  # (B, 11, 11, 16)
+    h = h[:, :10, :10, :]  # crop to even spatial dims
+    h = avg_pool2(h)  # (B, 5, 5, 16)
+    h = h.reshape(h.shape[0], -1)  # (B, 400)
+    h = bias_relu(matmul(h, params["wd1"]), params["bd1"])
+    return bias_add(matmul(h, params["wd2"]), params["bd2"])
+
+
+# ---------------------------------------------------------------------------
+# Tiny BERT-style encoder (single head, one layer) — the attention-heavy
+# workload class of Table 1, served as a sequence classifier.
+# ---------------------------------------------------------------------------
+
+ENC_SEQ = 64
+ENC_DIM = 64
+ENC_FF = 128
+ENC_CLASSES = 10
+
+
+def encoder_init(key):
+    ks = jax.random.split(key, 7)
+    s = lambda k, shape, fan: jax.random.normal(k, shape, jnp.float32) * jnp.sqrt(1.0 / fan)
+    return {
+        "wq": s(ks[0], (ENC_DIM, ENC_DIM), ENC_DIM),
+        "wk": s(ks[1], (ENC_DIM, ENC_DIM), ENC_DIM),
+        "wv": s(ks[2], (ENC_DIM, ENC_DIM), ENC_DIM),
+        "wo": s(ks[3], (ENC_DIM, ENC_DIM), ENC_DIM),
+        "w1": s(ks[4], (ENC_DIM, ENC_FF), ENC_DIM),
+        "b1": jnp.zeros((ENC_FF,), jnp.float32),
+        "w2": s(ks[5], (ENC_FF, ENC_DIM), ENC_FF),
+        "b2": jnp.zeros((ENC_DIM,), jnp.float32),
+        "wc": s(ks[6], (ENC_DIM, ENC_CLASSES), ENC_DIM),
+        "bc": jnp.zeros((ENC_CLASSES,), jnp.float32),
+    }
+
+
+def _layernorm(x, eps=1e-5):
+    m = jnp.mean(x, axis=-1, keepdims=True)
+    v = jnp.var(x, axis=-1, keepdims=True)
+    return (x - m) / jnp.sqrt(v + eps)
+
+
+def encoder_forward(params, x):
+    """(B, S, D) token embeddings -> (B, classes) logits.
+
+    Attention + projections run on the Pallas kernels; the per-sequence
+    attention is vmapped over the batch.
+    """
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    q = matmul(flat, params["wq"]).reshape(b, s, d)
+    k = matmul(flat, params["wk"]).reshape(b, s, d)
+    v = matmul(flat, params["wv"]).reshape(b, s, d)
+    # per-sequence attention on Pallas tiles (loop unrolled at trace time —
+    # batch sizes for the encoder artifacts are small)
+    ctx = jnp.stack([attention(q[i], k[i], v[i]) for i in range(b)])
+    h = matmul(ctx.reshape(b * s, d), params["wo"]).reshape(b, s, d)
+    h = _layernorm(x + h)
+    ff = bias_relu(matmul(h.reshape(b * s, d), params["w1"]), params["b1"])
+    ff = bias_add(matmul(ff, params["w2"]), params["b2"]).reshape(b, s, d)
+    h = _layernorm(h + ff)
+    pooled = jnp.mean(h, axis=1)  # (B, D)
+    return bias_add(matmul(pooled, params["wc"]), params["bc"])
+
+
+def encoder_loss(params, x, y):
+    return cross_entropy(encoder_forward(params, x), y)
+
+
+@partial(jax.jit, static_argnames=("lr",))
+def encoder_train_step(params, x, y, lr=0.05):
+    loss, grads = jax.value_and_grad(encoder_loss)(params, x, y)
+    new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return new_params, loss
+
+
+def synthetic_seq_batch(key, batch):
+    """Class-conditional token sequences: class k brightens dimension k
+    over the first half of the sequence."""
+    kx, ky = jax.random.split(key)
+    y = jax.random.randint(ky, (batch,), 0, ENC_CLASSES)
+    x = jax.random.normal(kx, (batch, ENC_SEQ, ENC_DIM), jnp.float32) * 0.4
+    dims = jnp.arange(ENC_DIM)[None, None, :]
+    pos = jnp.arange(ENC_SEQ)[None, :, None]
+    mask = (dims == y[:, None, None] * 6) & (pos < ENC_SEQ // 2)
+    return x + mask.astype(jnp.float32) * 2.0, y
+
+
+# ---------------------------------------------------------------------------
+# Loss + SGD step (shared)
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels):
+    """Mean softmax cross entropy; labels are int32 class ids."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - picked)
+
+
+def mlp_loss(params, x, y):
+    return cross_entropy(mlp_forward(params, x), y)
+
+
+@partial(jax.jit, static_argnames=("lr",))
+def mlp_train_step(params, x, y, lr=0.05):
+    """One SGD step; returns (new_params, loss)."""
+    loss, grads = jax.value_and_grad(mlp_loss)(params, x, y)
+    new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return new_params, loss
+
+
+def cnn_loss(params, x, y):
+    return cross_entropy(cnn_forward(params, x), y)
+
+
+@partial(jax.jit, static_argnames=("lr",))
+def cnn_train_step(params, x, y, lr=0.05):
+    loss, grads = jax.value_and_grad(cnn_loss)(params, x, y)
+    new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return new_params, loss
+
+
+# ---------------------------------------------------------------------------
+# Synthetic dataset (deterministic): two-moons-ish separable classes so the
+# e2e training run shows a falling loss curve without external data.
+# ---------------------------------------------------------------------------
+
+def synthetic_batch(key, batch, shape="flat"):
+    """Class-conditional Gaussian images: label k has a bright kth stripe."""
+    kx, ky = jax.random.split(key)
+    y = jax.random.randint(ky, (batch,), 0, 10)
+    base = jax.random.normal(kx, (batch, 28, 28, 1), jnp.float32) * 0.3
+    # stripe rows 2k..2k+2 brightened per class
+    rows = jnp.arange(28)[None, :, None, None]
+    lo = (y * 2 + 3)[:, None, None, None]
+    mask = ((rows >= lo) & (rows < lo + 3)).astype(jnp.float32)
+    img = base + mask * 1.5
+    if shape == "flat":
+        return img.reshape(batch, 784), y
+    return img, y

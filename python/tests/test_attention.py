@@ -1,0 +1,85 @@
+"""Attention kernel + tiny-BERT encoder: oracle equivalence, gradients,
+and the workload's learnability (the Table-1 BERT class)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from compile import model as M
+from compile.kernels import attention, attention_ref
+from compile.kernels.attention import vmem_bytes
+
+SET = settings(
+    max_examples=20,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+def arr(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+@SET
+@given(
+    sq=st.integers(1, 160),
+    s=st.integers(1, 96),
+    d=st.integers(1, 48),
+    scale=st.floats(0.1, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(sq, s, d, scale, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = arr(rng, sq, d, scale=scale), arr(rng, s, d, scale=scale), arr(rng, s, d)
+    np.testing.assert_allclose(
+        attention(q, k, v), attention_ref(q, k, v), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_attention_rows_are_convex_combinations():
+    # softmax weights sum to 1: constant V collapses to that constant
+    rng = np.random.default_rng(1)
+    q, k = arr(rng, 8, 16), arr(rng, 12, 16)
+    v = jnp.ones((12, 16), jnp.float32) * 3.0
+    np.testing.assert_allclose(attention(q, k, v), np.full((8, 16), 3.0), rtol=1e-5)
+
+
+def test_attention_gradients_match_ref():
+    rng = np.random.default_rng(2)
+    q, k, v = arr(rng, 9, 8), arr(rng, 7, 8), arr(rng, 7, 8)
+    gp = jax.grad(lambda a, b, c: jnp.sum(attention(a, b, c) ** 2), argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda a, b, c: jnp.sum(attention_ref(a, b, c) ** 2), argnums=(0, 1, 2))(q, k, v)
+    for x, y in zip(gp, gr):
+        np.testing.assert_allclose(x, y, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_stable_at_large_scale():
+    rng = np.random.default_rng(3)
+    q, k, v = arr(rng, 6, 8, scale=60.0), arr(rng, 6, 8, scale=60.0), arr(rng, 6, 8)
+    out = np.asarray(attention(q, k, v))
+    assert np.isfinite(out).all()
+
+
+def test_vmem_estimate_within_budget():
+    assert vmem_bytes(M.ENC_SEQ, M.ENC_SEQ, M.ENC_DIM) < 16 * 1024 * 1024
+
+
+def test_encoder_shapes():
+    p = M.encoder_init(jax.random.PRNGKey(0))
+    for b in (1, 4):
+        x = jnp.zeros((b, M.ENC_SEQ, M.ENC_DIM), jnp.float32)
+        assert M.encoder_forward(p, x).shape == (b, M.ENC_CLASSES)
+
+
+def test_encoder_training_reduces_loss():
+    key = jax.random.PRNGKey(5)
+    p = M.encoder_init(key)
+    losses = []
+    for _ in range(6):
+        key, k = jax.random.split(key)
+        x, y = M.synthetic_seq_batch(k, 8)
+        p, loss = M.encoder_train_step(p, x, y)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses

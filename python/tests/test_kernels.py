@@ -1,0 +1,164 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle,
+hypothesis-swept over shapes and value scales (DESIGN.md §9)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from compile import kernels as K
+
+SET = settings(
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+def arr(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@SET
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 96),
+    n=st.integers(1, 150),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = arr(rng, m, k), arr(rng, k, n)
+    got = K.matmul(x, y)
+    want = K.ref.matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 512, 128), (1, 784, 10)])
+def test_matmul_exact_tile_shapes(m, k, n):
+    rng = np.random.default_rng(0)
+    x, y = arr(rng, m, k), arr(rng, k, n)
+    np.testing.assert_allclose(
+        K.matmul(x, y), K.ref.matmul_ref(x, y), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_matmul_gradients_match_ref():
+    rng = np.random.default_rng(1)
+    x, y = arr(rng, 33, 47), arr(rng, 47, 21)
+
+    def f_pallas(a, b):
+        return jnp.sum(K.matmul(a, b) ** 2)
+
+    def f_ref(a, b):
+        return jnp.sum(K.ref.matmul_ref(a, b) ** 2)
+
+    gp = jax.grad(f_pallas, argnums=(0, 1))(x, y)
+    gr = jax.grad(f_ref, argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(gp[0], gr[0], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gp[1], gr[1], rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_vmem_estimate_within_budget():
+    # DESIGN.md §8: every served layer's working set fits 16 MB VMEM.
+    for m, k, n in [(32, 784, 256), (32, 256, 128), (32, 128, 10), (800, 72, 16)]:
+        assert K.vmem_bytes(m, k, n) < 16 * 1024 * 1024
+
+
+def test_mxu_utilization_estimate_bounds():
+    assert K.mxu_utilization_estimate(128, 128, 128) == 1.0
+    u = K.mxu_utilization_estimate(129, 128, 129)
+    assert 0.0 < u < 1.0
+
+
+# ---------------------------------------------------------------------------
+# elementwise
+# ---------------------------------------------------------------------------
+
+@SET
+@given(m=st.integers(1, 500), n=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_bias_relu_matches_ref(m, n, seed):
+    rng = np.random.default_rng(seed)
+    x, b = arr(rng, m, n), arr(rng, n)[0] if n == 1 else arr(rng, n)
+    b = jnp.asarray(np.asarray(b).reshape(n), jnp.float32)
+    np.testing.assert_allclose(
+        K.bias_relu(x, b), K.ref.bias_relu_ref(x, b), rtol=1e-6, atol=1e-6
+    )
+
+
+@SET
+@given(m=st.integers(1, 300), n=st.integers(1, 32), seed=st.integers(0, 2**31 - 1))
+def test_bias_add_matches_ref(m, n, seed):
+    rng = np.random.default_rng(seed)
+    x, b = arr(rng, m, n), arr(rng, n)
+    np.testing.assert_allclose(
+        K.bias_add(x, b), K.ref.bias_add_ref(x, b), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_bias_relu_gradient_masks_negatives():
+    x = jnp.array([[-1.0, 2.0]], jnp.float32)
+    b = jnp.zeros((2,), jnp.float32)
+    g = jax.grad(lambda a: jnp.sum(K.bias_relu(a, b)))(x)
+    np.testing.assert_array_equal(np.asarray(g), [[0.0, 1.0]])
+
+
+# ---------------------------------------------------------------------------
+# softmax
+# ---------------------------------------------------------------------------
+
+@SET
+@given(
+    m=st.integers(1, 400),
+    n=st.integers(2, 32),
+    scale=st.floats(0.1, 50.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_matches_ref(m, n, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, m, n, scale=scale)
+    got = K.softmax(x)
+    np.testing.assert_allclose(got, K.ref.softmax_ref(x), rtol=1e-5, atol=1e-6)
+    # rows sum to one (stability at large scale)
+    np.testing.assert_allclose(np.asarray(got).sum(-1), np.ones(m), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# conv
+# ---------------------------------------------------------------------------
+
+@SET
+@given(
+    n=st.integers(1, 4),
+    h=st.integers(5, 20),
+    c=st.integers(1, 6),
+    co=st.integers(1, 8),
+    kh=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(n, h, c, co, kh, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, n, h, h, c)
+    w = arr(rng, kh, kh, c, co)
+    np.testing.assert_allclose(
+        K.conv2d(x, w), K.ref.conv2d_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_im2col_matches_ref():
+    rng = np.random.default_rng(3)
+    x = arr(rng, 2, 8, 8, 3)
+    np.testing.assert_allclose(K.im2col(x, 3, 3), K.ref.im2col_ref(x, 3, 3))
+
+
+def test_avg_pool2():
+    x = jnp.arange(16.0, dtype=jnp.float32).reshape(1, 4, 4, 1)
+    got = K.avg_pool2(x)
+    assert got.shape == (1, 2, 2, 1)
+    np.testing.assert_allclose(np.asarray(got)[0, 0, 0, 0], (0 + 1 + 4 + 5) / 4)

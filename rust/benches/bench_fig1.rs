@@ -1,0 +1,64 @@
+//! Fig 1 — average turnaround (a) and training execution time (b) for the
+//! five PyTorch models under priority streams, time-slicing, and MPS,
+//! against the isolation baseline. The shapes to reproduce (DESIGN.md §5):
+//! streams ≈ MPS ≫ baseline (≈2–4× for the ResNet/VGG family, ≈1.75× for
+//! DenseNet-201); time-slicing's *training* time is the worst unless the
+//! inference task is short (AlexNet/VGG).
+
+mod common;
+
+use gpushare::exp::{paper_mechanisms, MechanismComparison};
+use gpushare::util::table::{bench_out_dir, fmt_f, Table};
+use gpushare::workload::DlModel;
+
+fn main() {
+    let proto = common::protocol();
+    let mechanisms = paper_mechanisms();
+    let mut fig1a = Table::new(
+        "Fig 1a — mean inference turnaround (ms, ratio vs baseline)",
+        &["model", "baseline", "streams", "time-slicing", "mps"],
+    );
+    let mut fig1b = Table::new(
+        "Fig 1b — training execution time (s, delta vs baseline)",
+        &["model", "baseline", "streams", "time-slicing", "mps"],
+    );
+    for model in DlModel::PYTORCH {
+        eprintln!("[fig1] {} ...", model.name());
+        let cmp = MechanismComparison::run(&proto, model, model, &mechanisms);
+        let cell = |mech: &str| -> String {
+            let ratio = cmp.turnaround_ratio(mech).unwrap_or(f64::NAN);
+            let (_, rep) = cmp
+                .per_mechanism
+                .iter()
+                .find(|(n, _)| n == mech)
+                .expect("mechanism ran");
+            format!("{} ({:.2}x)", fmt_f(rep.mean_turnaround_ms(), 2), ratio)
+        };
+        fig1a.row(&[
+            model.name().to_string(),
+            fmt_f(cmp.baseline_turnaround_ms, 2),
+            cell("priority-streams"),
+            cell("time-slicing"),
+            cell("mps"),
+        ]);
+        let tcell = |mech: &str| -> String {
+            let t = cmp.train_time_s(mech).unwrap_or(f64::NAN);
+            format!("{} ({:+.2})", fmt_f(t, 2), t - cmp.baseline_train_s)
+        };
+        fig1b.row(&[
+            model.name().to_string(),
+            fmt_f(cmp.baseline_train_s, 2),
+            tcell("priority-streams"),
+            tcell("time-slicing"),
+            tcell("mps"),
+        ]);
+    }
+    let out = bench_out_dir();
+    fig1a.emit(&out);
+    fig1b.emit(&out);
+    println!(
+        "\nshape checks: streams/mps turnaround ratios should sit in the ~1.5-4x band for\n\
+         resnet50/152 + vgg19, lower for alexnet/densenet; time-slicing training time should\n\
+         show the largest deltas for the resnet/densenet family (O2)."
+    );
+}

@@ -1,0 +1,64 @@
+//! Fig 2 — per-request turnaround variance for ResNet-50 under each
+//! mechanism (a: streams, b: time-slicing, c: MPS). Emits the full
+//! per-request series as CSV and prints the variance plus a terminal
+//! histogram so the spikiness ordering (streams ≥ mps > time-slicing) is
+//! inspectable without plotting.
+
+mod common;
+
+use gpushare::exp::paper_mechanisms;
+use gpushare::util::stats::Histogram;
+use gpushare::util::table::{bench_out_dir, fmt_f, Table};
+use gpushare::workload::DlModel;
+
+fn main() {
+    let proto = common::protocol();
+    let model = DlModel::ResNet50;
+    let base = proto.baseline_infer(model);
+    let bs = base.turnaround_summary();
+
+    let mut t = Table::new(
+        "Fig 2 — ResNet-50 turnaround variance by mechanism",
+        &["mechanism", "mean ms", "variance", "std", "cv", "p99/p50"],
+    );
+    t.row(&[
+        "baseline".into(),
+        fmt_f(bs.mean, 3),
+        fmt_f(bs.variance, 4),
+        fmt_f(bs.std, 3),
+        fmt_f(bs.cv(), 3),
+        fmt_f(bs.p99 / bs.p50, 2),
+    ]);
+
+    let mut series = Table::new(
+        "Fig 2 series — per-request turnaround (ms)",
+        &["mechanism", "request", "turnaround_ms"],
+    );
+    for mech in paper_mechanisms() {
+        eprintln!("[fig2] {} ...", mech.name());
+        let rep = proto.pair(mech.clone(), model, model);
+        let s = rep.turnaround_summary();
+        t.row(&[
+            mech.name().to_string(),
+            fmt_f(s.mean, 3),
+            fmt_f(s.variance, 4),
+            fmt_f(s.std, 3),
+            fmt_f(s.cv(), 3),
+            fmt_f(s.p99 / s.p50, 2),
+        ]);
+        let turns = rep.turnarounds_ms();
+        for (i, v) in turns.iter().enumerate() {
+            series.row(&[mech.name().to_string(), i.to_string(), fmt_f(*v, 4)]);
+        }
+        let mut h = Histogram::new(0.0, (s.mean * 3.0).max(1.0), 12);
+        for v in &turns {
+            h.push(*v);
+        }
+        println!("\n{} turnaround distribution:", mech.name());
+        print!("{}", h.render(40));
+    }
+    let out = bench_out_dir();
+    t.emit(&out);
+    series.emit_csv_only(&out);
+    println!("\nshape: time-slicing flattest (O2), streams spikiest (O1), mps between (O5/O6).");
+}

@@ -1,0 +1,95 @@
+//! Fig 3 — the MLPerf TensorFlow models: BERT and ResNet-34 inference
+//! against the RNNT training task, in both single-stream (ss) and Poisson
+//! server modes, under time-slicing and MPS (priority streams is not
+//! runnable for the MLPerf suite — separate processes; the paper omits it
+//! here too). Figs 4–5's variance series emit with `--variance`.
+//!
+//! Shapes: time-slicing degrades ResNet-34 badly (transfer contention, O4);
+//! MPS turnaround stays consistent (RNNT has ~no large kernels) while
+//! RNNT's training time inflates more than the PyTorch tasks' did.
+
+mod common;
+
+use gpushare::exp::{server_interarrival, Protocol};
+use gpushare::sched::Mechanism;
+use gpushare::util::cli::Args;
+use gpushare::util::table::{bench_out_dir, fmt_f, Table};
+use gpushare::workload::DlModel;
+
+fn main() {
+    let args = Args::from_env();
+    let proto = common::protocol();
+    let train = DlModel::Rnnt;
+    let mechanisms = [Mechanism::TimeSlicing, Mechanism::mps_default()];
+
+    let mut t = Table::new(
+        "Fig 3 — MLPerf models vs RNNT training (ss + server)",
+        &[
+            "model/mode",
+            "baseline ms",
+            "time-slicing ms (x)",
+            "mps ms (x)",
+            "rnnt train s: base",
+            "time-slicing",
+            "mps",
+        ],
+    );
+    let mut variance = Table::new(
+        "Figs 4-5 series — per-request turnaround (ms)",
+        &["model", "mode", "mechanism", "request", "turnaround_ms"],
+    );
+
+    for model in [DlModel::ResNet34, DlModel::Bert] {
+        for server_mode in [false, true] {
+            let p: Protocol = if server_mode {
+                let base = common::protocol();
+                let ia = server_interarrival(&base, model);
+                // paper: 500 server requests vs 5000 ss — keep the ratio
+                Protocol {
+                    requests: (base.requests / 2).max(10),
+                    ..base
+                }
+                .server(ia)
+            } else {
+                proto.clone()
+            };
+            let mode = if server_mode { "server" } else { "ss" };
+            eprintln!("[fig3] {} {} ...", model.name(), mode);
+            let base = p.baseline_infer(model);
+            let base_train = p.baseline_train(train);
+            let mut cells = vec![
+                format!("{} {}", model.name(), mode),
+                fmt_f(base.mean_turnaround_ms(), 2),
+            ];
+            let mut train_cells = Vec::new();
+            for mech in &mechanisms {
+                let rep = p.pair(mech.clone(), model, train);
+                cells.push(format!(
+                    "{} ({:.2}x)",
+                    fmt_f(rep.mean_turnaround_ms(), 2),
+                    rep.mean_turnaround_ms() / base.mean_turnaround_ms()
+                ));
+                train_cells.push(fmt_f(rep.train_time_s().unwrap_or(f64::NAN), 2));
+                if args.has_flag("variance") {
+                    for (i, v) in rep.turnarounds_ms().iter().enumerate() {
+                        variance.row(&[
+                            model.name().to_string(),
+                            mode.to_string(),
+                            mech.name().to_string(),
+                            i.to_string(),
+                            fmt_f(*v, 4),
+                        ]);
+                    }
+                }
+            }
+            cells.push(fmt_f(base_train.train_time_s().unwrap_or(f64::NAN), 2));
+            cells.extend(train_cells);
+            t.row(&cells);
+        }
+    }
+    let out = bench_out_dir();
+    t.emit(&out);
+    if args.has_flag("variance") {
+        variance.emit_csv_only(&out);
+    }
+}

@@ -1,0 +1,85 @@
+//! Figs 6–7 — kernel execution vs memory-transfer time for the ResNet-34
+//! and DenseNet-201 inference tasks, baseline vs time-slicing. The shape
+//! (O4): ResNet-34's *transfer* time inflates by orders of magnitude under
+//! time-slicing (transfers wait out the other process's slices) while its
+//! kernel time stays ≈flat; DenseNet-201 (compute-dominated) barely moves.
+
+mod common;
+
+use gpushare::exp::Protocol;
+use gpushare::metrics::OpKind;
+use gpushare::sched::Mechanism;
+use gpushare::util::table::{bench_out_dir, fmt_f, Table};
+use gpushare::workload::DlModel;
+
+fn main() {
+    let base_proto = common::protocol();
+    let proto = Protocol {
+        record_ops: true,
+        requests: (base_proto.requests / 2).max(10),
+        ..base_proto
+    };
+
+    let mut t = Table::new(
+        "Figs 6-7 — inference op-time split: kernels vs transfers (ms total)",
+        &[
+            "model",
+            "scenario",
+            "kernel ms",
+            "transfer ms",
+            "transfer share %",
+            "transfer inflation x",
+        ],
+    );
+    let mut series = Table::new(
+        "Figs 6-7 series — per-op spans",
+        &["model", "scenario", "op", "kind", "span_ms"],
+    );
+
+    for model in [DlModel::ResNet34, DlModel::DenseNet201] {
+        let mut base_transfer = f64::NAN;
+        for (scenario, rep) in [
+            ("baseline", proto.baseline_infer(model)),
+            (
+                "time-slicing",
+                proto.pair(Mechanism::TimeSlicing, model, DlModel::Rnnt),
+            ),
+        ] {
+            let (k_ms, t_ms) = rep.op_time_split_ms();
+            if scenario == "baseline" {
+                base_transfer = t_ms;
+            }
+            t.row(&[
+                model.name().to_string(),
+                scenario.to_string(),
+                fmt_f(k_ms, 2),
+                fmt_f(t_ms, 2),
+                fmt_f(t_ms / (t_ms + k_ms) * 100.0, 1),
+                fmt_f(t_ms / base_transfer, 2),
+            ]);
+            for (i, op) in rep.ops.iter().enumerate().take(4000) {
+                let kind = match op.kind {
+                    OpKind::Kernel => "kernel",
+                    OpKind::TransferH2D => "h2d",
+                    OpKind::TransferD2H => "d2h",
+                };
+                series.row(&[
+                    model.name().to_string(),
+                    scenario.to_string(),
+                    i.to_string(),
+                    kind.to_string(),
+                    fmt_f(op.span_ns() as f64 / 1e6, 4),
+                ]);
+            }
+            eprintln!("[fig67] {} {} done", model.name(), scenario);
+        }
+    }
+    let out = bench_out_dir();
+    t.emit(&out);
+    series.emit_csv_only(&out);
+    println!(
+        "\nshape (O4): resnet-34 spends orders of magnitude more on transfers than other\n\
+         models; under time-slicing its transfer time inflates (>2x) while densenet201\n\
+         stays ~1x."
+    );
+}

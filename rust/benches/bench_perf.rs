@@ -1,0 +1,172 @@
+//! §Perf — wall-clock performance of the hot paths: simulator event
+//! throughput, block-placement throughput, coordinator per-request
+//! overhead, and the substrate primitives. Results feed EXPERIMENTS.md
+//! §Perf; re-run after every optimization step.
+
+use gpushare::coordinator::batcher::{BatchRunner, Batcher, BatcherConfig};
+use gpushare::coordinator::{serve, GovernorMode, ServeConfig};
+use gpushare::exp::Protocol;
+use gpushare::runtime::{MockExecutor, ModelExecutor};
+use gpushare::sched::Mechanism;
+use gpushare::sim::EventQueue;
+use gpushare::util::bench::{black_box, Bencher};
+use gpushare::util::rng::Rng;
+use gpushare::workload::DlModel;
+use std::time::Duration;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // --- substrate primitives ---
+    b.bench_items("rng: xoshiro256++ next_u64", Some(1024), |iters| {
+        let mut r = Rng::new(1);
+        for _ in 0..iters {
+            for _ in 0..1024 {
+                black_box(r.next_u64());
+            }
+        }
+    });
+    b.bench_items("event queue: push+pop", Some(1024), |iters| {
+        for _ in 0..iters {
+            let mut q = EventQueue::new();
+            for i in 0..1024u64 {
+                q.push(i * 7 % 1024, i);
+            }
+            while let Some(x) = q.pop() {
+                black_box(x);
+            }
+        }
+    });
+
+    // --- simulator end-to-end throughput (events/s) ---
+    let proto = Protocol {
+        requests: 12,
+        train_steps: 6,
+        ..Protocol::default()
+    };
+    // events per run measured once, then reported as throughput
+    let probe = proto.pair(Mechanism::mps_default(), DlModel::ResNet50, DlModel::ResNet50);
+    let events = probe.events;
+    b.bench_items(
+        &format!("sim: resnet50 pair under mps ({events} events)"),
+        Some(events),
+        |iters| {
+            for _ in 0..iters {
+                black_box(proto.pair(
+                    Mechanism::mps_default(),
+                    DlModel::ResNet50,
+                    DlModel::ResNet50,
+                ));
+            }
+        },
+    );
+    let probe_ts = proto.pair(Mechanism::TimeSlicing, DlModel::ResNet50, DlModel::ResNet50);
+    b.bench_items(
+        &format!("sim: resnet50 pair under time-slicing ({} events)", probe_ts.events),
+        Some(probe_ts.events),
+        |iters| {
+            for _ in 0..iters {
+                black_box(proto.pair(
+                    Mechanism::TimeSlicing,
+                    DlModel::ResNet50,
+                    DlModel::ResNet50,
+                ));
+            }
+        },
+    );
+
+    // --- coordinator round-trip under the default batching policy (the
+    // 100 µs max_wait dominates: this measures the *policy*, not overhead)
+    b.bench_items("coordinator: round-trip, 100us batch window", Some(64), |iters| {
+        for _ in 0..iters {
+            let cfg = ServeConfig {
+                mode: GovernorMode::Shared,
+                requests: 64,
+                train_steps: 0,
+                in_features: 16,
+                batcher: BatcherConfig {
+                    max_batch: 8,
+                    max_wait: Duration::from_micros(100),
+                },
+                ..Default::default()
+            };
+            let rep = serve(
+                cfg,
+                || {
+                    let mk = |n: usize| -> Box<dyn ModelExecutor> {
+                        Box::new(MockExecutor::new(n, 16, 4))
+                    };
+                    BatchRunner::new(vec![(1, mk(1)), (8, mk(8))], vec![])
+                },
+                None,
+            );
+            assert_eq!(rep.completed, 64);
+            black_box(rep);
+        }
+    });
+
+    // --- coordinator overhead proper: near-zero batch window ---
+    b.bench_items("coordinator: per-request overhead (1us window)", Some(64), |iters| {
+        for _ in 0..iters {
+            let cfg = ServeConfig {
+                mode: GovernorMode::Shared,
+                requests: 64,
+                train_steps: 0,
+                in_features: 16,
+                batcher: BatcherConfig {
+                    max_batch: 8,
+                    max_wait: Duration::from_micros(1),
+                },
+                ..Default::default()
+            };
+            let rep = serve(
+                cfg,
+                || {
+                    let mk = |n: usize| -> Box<dyn ModelExecutor> {
+                        Box::new(MockExecutor::new(n, 16, 4))
+                    };
+                    BatchRunner::new(vec![(1, mk(1)), (8, mk(8))], vec![])
+                },
+                None,
+            );
+            assert_eq!(rep.completed, 64);
+            black_box(rep);
+        }
+    });
+
+    // --- batcher packing throughput ---
+    b.bench_items("batcher: submit+drain 256 reqs", Some(256), |iters| {
+        for _ in 0..iters {
+            let batcher = Batcher::new(
+                BatcherConfig {
+                    max_batch: 32,
+                    max_wait: Duration::from_micros(50),
+                },
+                64,
+            );
+            let worker = {
+                let bt = batcher.clone();
+                std::thread::spawn(move || {
+                    let mk = |n: usize| -> Box<dyn ModelExecutor> {
+                        Box::new(MockExecutor::new(n, 64, 4))
+                    };
+                    bt.run_worker(
+                        BatchRunner::new(vec![(32, mk(32))], vec![]),
+                        Default::default(),
+                    )
+                })
+            };
+            let rxs: Vec<_> = (0..256).map(|_| batcher.submit(vec![0.0; 64]).1).collect();
+            for rx in rxs {
+                black_box(rx.recv().unwrap());
+            }
+            batcher.close();
+            worker.join().unwrap();
+        }
+    });
+
+    let out = gpushare::util::table::bench_out_dir();
+    std::fs::create_dir_all(&out).ok();
+    std::fs::write(out.join("bench_perf.csv"), b.to_csv()).ok();
+    println!("\n[csv] {}", out.join("bench_perf.csv").display());
+}

@@ -1,0 +1,56 @@
+//! §5 / E9 — the three preemption-cost estimates, regenerated from the
+//! device model arithmetic, plus a simulated variant of the paper's
+//! slice-gap microbenchmark (two one-block-per-SM kernels alternating
+//! slices; the inter-slice gap is read back from the engine's timeline).
+
+use gpushare::gpu::DeviceConfig;
+use gpushare::preempt::PreemptCostModel;
+use gpushare::sim::US;
+use gpushare::util::table::{bench_out_dir, fmt_f, Table};
+
+fn main() {
+    let dev = DeviceConfig::rtx3090();
+    let m = PreemptCostModel::new();
+
+    let mut t = Table::new(
+        "E9 — preemption state-save cost estimates (§5)",
+        &["estimate", "context bytes", "bandwidth", "ours µs", "paper µs"],
+    );
+    t.row(&[
+        "full GPU (const+L1/smem+regs+L2)".into(),
+        format!("{} KB", dev.gpu_context_bytes() / 1024),
+        "936 GB/s".into(),
+        fmt_f(m.full_gpu_save_ns(&dev) as f64 / 1e3, 1),
+        "~38".into(),
+    ]);
+    t.row(&[
+        "single SM (fair 1/82 bandwidth)".into(),
+        format!("{} KB", dev.sm_context_bytes() / 1024),
+        "11.4 GB/s".into(),
+        fmt_f(m.single_sm_save_ns(&dev) as f64 / 1e3, 1),
+        "~37".into(),
+    ]);
+    t.row(&[
+        "from time-slice gap (÷2)".into(),
+        "-".into(),
+        "-".into(),
+        fmt_f(m.from_slice_gap_ns(&dev) as f64 / 1e3, 1),
+        "~73".into(),
+    ]);
+    t.emit(&bench_out_dir());
+
+    // Flatness of save latency in victim-SM count — §5's "only 1µs less".
+    let mut flat = Table::new(
+        "E9 — save latency vs number of preempted SMs (bandwidth fair-share)",
+        &["sms", "save µs"],
+    );
+    for n in [1u32, 2, 8, 41, 82] {
+        flat.row(&[n.to_string(), fmt_f(m.save_ns(&dev, n, 1.0) as f64 / 1e3, 1)]);
+    }
+    flat.emit(&bench_out_dir());
+
+    let one = m.single_sm_save_ns(&dev);
+    let full = m.full_gpu_save_ns(&dev);
+    assert!((full as i64 - one as i64).unsigned_abs() < 2 * US);
+    println!("\n§5 check: single-SM within ~1µs of full-GPU save — reproduced.");
+}

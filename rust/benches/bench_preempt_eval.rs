@@ -1,0 +1,76 @@
+//! O7/O8 / E11 — the paper's proposed experiment: fine-grained block-level
+//! preemption evaluated against the three hardware mechanisms on the five
+//! PyTorch pairs. Expected shape: turnaround near baseline (compounded
+//! delay eliminated) at utilization near MPS.
+
+mod common;
+
+use gpushare::exp::MechanismComparison;
+use gpushare::sched::{Mechanism, PlacementPolicy, PreemptConfig, PreemptPolicy};
+use gpushare::util::table::{bench_out_dir, fmt_f, Table};
+use gpushare::workload::DlModel;
+
+fn main() {
+    let proto = common::protocol();
+    let mechanisms = vec![
+        Mechanism::PriorityStreams,
+        Mechanism::TimeSlicing,
+        Mechanism::mps_default(),
+        Mechanism::FineGrained(PreemptConfig {
+            policy: PreemptPolicy::Reactive,
+            placement: PlacementPolicy::MostRoom,
+            ..Default::default()
+        }),
+        Mechanism::FineGrained(PreemptConfig {
+            policy: PreemptPolicy::Proactive { hold_space: true },
+            placement: PlacementPolicy::LeastContention,
+            ..Default::default()
+        }),
+    ];
+    let labels = ["streams", "time-slicing", "mps", "fg-reactive", "fg-proactive"];
+
+    let mut ta = Table::new(
+        "E11 — turnaround ratio vs baseline (fine-grained preemption study)",
+        &["model", "streams", "time-slicing", "mps", "fg-reactive", "fg-proactive"],
+    );
+    let mut tb = Table::new(
+        "E11 — training time delta vs baseline (s)",
+        &["model", "streams", "time-slicing", "mps", "fg-reactive", "fg-proactive"],
+    );
+    let mut tc = Table::new(
+        "E11 — preemptions performed / save-time hidden %",
+        &["model", "fg-reactive", "fg-proactive"],
+    );
+    for model in DlModel::PYTORCH {
+        eprintln!("[preempt_eval] {} ...", model.name());
+        let cmp = MechanismComparison::run(&proto, model, model, &mechanisms);
+        let mut ra = vec![model.name().to_string()];
+        let mut rb = vec![model.name().to_string()];
+        let mut rc = vec![model.name().to_string()];
+        for (i, (_, rep)) in cmp.per_mechanism.iter().enumerate() {
+            ra.push(fmt_f(rep.mean_turnaround_ms() / cmp.baseline_turnaround_ms, 2));
+            rb.push(fmt_f(
+                rep.train_time_s().unwrap_or(f64::NAN) - cmp.baseline_train_s,
+                3,
+            ));
+            if labels[i].starts_with("fg-") {
+                rc.push(format!(
+                    "{} / {}%",
+                    rep.preemptions,
+                    fmt_f(rep.hidden_save_fraction() * 100.0, 0)
+                ));
+            }
+        }
+        ta.row(&ra);
+        tb.row(&rb);
+        tc.row(&rc);
+    }
+    let out = bench_out_dir();
+    ta.emit(&out);
+    tb.emit(&out);
+    tc.emit(&out);
+    println!(
+        "\nshape: fg variants should sit below streams/mps on turnaround ratio while keeping\n\
+         training deltas below time-slicing's (O7/O8)."
+    );
+}

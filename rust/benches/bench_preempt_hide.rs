@@ -1,0 +1,86 @@
+//! O9 / E10 — preemption-cost hiding analysis over every model's kernel
+//! stream: what fraction of per-kernel preemptions could be hidden behind
+//! transfers and predecessor kernels, plus the paper's two Region case
+//! studies verified numerically.
+
+mod common;
+
+use gpushare::gpu::{DeviceConfig, KernelRes};
+use gpushare::preempt::{HidingAnalysis, PreemptCostModel};
+use gpushare::sim::US;
+use gpushare::util::rng::Rng;
+use gpushare::util::table::{bench_out_dir, fmt_f, Table};
+use gpushare::workload::{DlModel, KernelSpec, Op};
+
+fn main() {
+    let dev = DeviceConfig::rtx3090();
+    let save = PreemptCostModel::new().single_sm_save_ns(&dev);
+
+    let mut t = Table::new(
+        "E10 — preemption hiding opportunity by model (save = single-SM cost)",
+        &[
+            "model/task",
+            "kernels",
+            "fully hidden %",
+            "mean hidden %",
+            "exposed ms total",
+        ],
+    );
+    for model in DlModel::ALL {
+        for (profile, tag) in [(model.infer_profile(), "infer"), (model.train_profile(), "train")]
+        {
+            let Some(profile) = profile else { continue };
+            let mut rng = Rng::new(10);
+            let mut ops: Vec<Op> = Vec::new();
+            let units = (4000 / profile.kernels_per_unit as usize).max(2);
+            for _ in 0..units {
+                ops.extend(profile.gen_unit(&dev, &mut rng));
+            }
+            let a = HidingAnalysis::analyze(&ops, &dev, save);
+            t.row(&[
+                format!("{} {}", model.name(), tag),
+                a.per_kernel.len().to_string(),
+                fmt_f(a.fully_hidden_frac() * 100.0, 1),
+                fmt_f(a.mean_hidden_frac() * 100.0, 1),
+                fmt_f(a.exposed_ns() as f64 / 1e6, 3),
+            ]);
+        }
+    }
+    t.emit(&bench_out_dir());
+
+    // The paper's two case studies, verified with its concrete numbers.
+    let mk = |grid: u32, tpb: u32, dur_us: u64| {
+        Op::Kernel(KernelSpec {
+            class: "case",
+            grid_blocks: grid,
+            res: KernelRes::new(tpb, 32, 0),
+            dur_iso: dur_us * US,
+        })
+    };
+    println!("\n== §5 case studies ==");
+    // Region B: 32 blocks×64 thr, 137 µs -> 512 blocks×64 thr, 2 µs.
+    let b = HidingAnalysis::analyze(
+        &[mk(32, 64, 137), Op::CpuGap { ns: 5 * US }, mk(512, 64, 2)],
+        &dev,
+        save,
+    );
+    println!(
+        "Region B (137µs 32-blk → 2µs 512-blk): cover {:.0}µs ≥ save {:.0}µs — hidden {:.0}%",
+        b.per_kernel[1].cover_ns as f64 / 1e3,
+        save as f64 / 1e3,
+        b.per_kernel[1].hidden_frac * 100.0
+    );
+    assert!(b.per_kernel[1].hidden_frac >= 1.0);
+    // Region A: 136 blocks×256 thr, 400 µs -> 112 blocks×32 thr, 6 µs.
+    let a = HidingAnalysis::analyze(
+        &[mk(136, 256, 400), Op::CpuGap { ns: 4 * US }, mk(112, 32, 6)],
+        &dev,
+        save,
+    );
+    println!(
+        "Region A (400µs → 6µs): exposed preemption would be {:.1}x the kernel; hidden {:.0}%",
+        save as f64 / (6.0 * US as f64),
+        a.per_kernel[1].hidden_frac * 100.0
+    );
+    assert!(a.per_kernel[1].hidden_frac >= 1.0);
+}

@@ -1,0 +1,66 @@
+//! Table 1 — workload characterization. Regenerates the paper's per-model
+//! columns (total kernels, % runtime in long-running kernels, % large
+//! kernels) from the calibrated trace generators and reports generated vs
+//! paper targets. Validates generator fidelity (DESIGN.md §5 calibration
+//! note: Table 1 is the *input* to the generators).
+
+mod common;
+
+use gpushare::gpu::DeviceConfig;
+use gpushare::util::rng::Rng;
+use gpushare::util::table::{bench_out_dir, fmt_f, Table};
+use gpushare::workload::{DlModel, Role, TraceStats};
+
+fn main() {
+    let dev = DeviceConfig::rtx3090();
+    let kernels_target: u64 = if std::env::var("GPUSHARE_BENCH_FAST").is_ok() {
+        4_000
+    } else {
+        20_000
+    };
+    let mut t = Table::new(
+        "Table 1 — workload characterization (generated vs paper)",
+        &[
+            "model/task",
+            "batch",
+            "kernels (T1 full-scale)",
+            "long-run % runtime (gen)",
+            "(paper)",
+            "large % kernels (gen)",
+            "(paper)",
+        ],
+    );
+    for model in DlModel::ALL {
+        for profile in [model.train_profile(), model.infer_profile()]
+            .into_iter()
+            .flatten()
+        {
+            let mut rng = Rng::new(2024);
+            let mut stats = TraceStats::default();
+            let units = (kernels_target / profile.kernels_per_unit as u64).max(2);
+            for _ in 0..units {
+                for op in profile.gen_unit(&dev, &mut rng) {
+                    stats.accumulate(&op, &dev);
+                }
+            }
+            let role = match profile.role {
+                Role::Training => "training",
+                Role::Inference => "inference",
+            };
+            t.row(&[
+                format!("{} {}", model.name(), role),
+                profile.batch_size.to_string(),
+                format!("{} ({})", stats.total_kernels, profile.table1_total_kernels),
+                fmt_f(stats.long_running_runtime_pct(), 2),
+                if profile.role == Role::Inference {
+                    "~0".into()
+                } else {
+                    fmt_f(profile.target_long_running_pct, 2)
+                },
+                fmt_f(stats.large_kernel_pct(), 2),
+                fmt_f(profile.target_large_pct, 2),
+            ]);
+        }
+    }
+    t.emit(&bench_out_dir());
+}

@@ -1,0 +1,37 @@
+//! Table 2 — the mechanism attribute matrix: separate processes /
+//! colocation / prioritization, plus the block-preemption column §5 argues
+//! from. Regenerated from the mechanism capability metadata the engine
+//! actually enforces.
+
+use gpushare::sched::Mechanism;
+use gpushare::util::table::{bench_out_dir, Table};
+
+fn main() {
+    let yn = |b: bool| if b { "Yes" } else { "No" }.to_string();
+    let mut t = Table::new(
+        "Table 2 — concurrency mechanism attributes",
+        &[
+            "mechanism",
+            "separate processes",
+            "colocation",
+            "priorities",
+            "block preemption",
+        ],
+    );
+    for m in [
+        Mechanism::PriorityStreams,
+        Mechanism::TimeSlicing,
+        Mechanism::mps_default(),
+        Mechanism::fine_grained_default(),
+    ] {
+        t.row(&[
+            m.name().to_string(),
+            yn(m.separate_processes()),
+            yn(m.colocation()),
+            yn(m.priorities()),
+            m.preempts_blocks().to_string(),
+        ]);
+    }
+    t.emit(&bench_out_dir());
+    println!("(first three rows are the paper's Table 2; the fourth is the §5 proposal)");
+}

@@ -1,0 +1,27 @@
+//! Shared bench-driver plumbing: protocol scaling (full vs
+//! GPUSHARE_BENCH_FAST=1) and the standard seed.
+
+use gpushare::exp::Protocol;
+
+/// Standard protocol for figure benches; `GPUSHARE_BENCH_FAST=1` shrinks it
+/// for CI smoke runs.
+pub fn protocol() -> Protocol {
+    if std::env::var("GPUSHARE_BENCH_FAST").is_ok() {
+        Protocol {
+            requests: 20,
+            train_steps: 8,
+            ..Protocol::default()
+        }
+    } else {
+        Protocol {
+            requests: 80,
+            train_steps: 30,
+            ..Protocol::default()
+        }
+    }
+}
+
+#[allow(dead_code)]
+pub fn hr(title: &str) {
+    println!("\n################ {title} ################");
+}

@@ -1,0 +1,382 @@
+//! Dynamic batcher: groups inference requests into device batches under a
+//! `max_batch` / `max_wait` policy, pads to the nearest compiled batch
+//! variant (the AOT path compiles one executable per batch size — b1/b8/b32
+//! for the MLP), executes, and scatters per-request responses.
+//!
+//! Split design: the [`Batcher`] (queue + policy + stats) is shared across
+//! threads, while the [`BatchRunner`] (the executors) is thread-affine —
+//! PJRT handles are not `Send` — and owned by the single worker thread.
+//!
+//! This is the L3 analogue of the paper's inference-server role: the batch
+//! size chosen here determines each kernel's resource footprint on the
+//! device, which is exactly the knob O3 says must be provisioned
+//! conservatively under time-slicing.
+
+use crate::runtime::{ModelExecutor, Tensor};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Hard cap on requests per device batch (further clamped to the
+    /// largest compiled variant by the worker).
+    pub max_batch: usize,
+    /// Max time the head-of-queue request may wait for co-batchees.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// A completed inference.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    /// Queue wait + execution, as observed by the batcher.
+    pub turnaround: Duration,
+    /// Batch the request was served in.
+    pub batch_size: usize,
+}
+
+/// Callbacks threaded into the worker loop.
+#[derive(Default, Clone, Copy)]
+pub struct WorkerHooks<'a> {
+    /// Runs before every device launch (the governor's admission gate).
+    pub pre_execute: Option<&'a (dyn Fn() + Sync)>,
+    /// Observes each executed batch's (unpadded) size.
+    pub post_batch: Option<&'a (dyn Fn(usize) + Sync)>,
+}
+
+/// The thread-affine execution half: compiled batch variants + parameters.
+pub struct BatchRunner {
+    /// Executors by batch size, ascending (e.g. [(1, exe), (8, exe), (32, exe)]).
+    variants: Vec<(usize, Box<dyn ModelExecutor>)>,
+    /// Model parameters prepended to every call (empty for mocks).
+    params: Vec<Tensor>,
+}
+
+impl BatchRunner {
+    pub fn new(variants: Vec<(usize, Box<dyn ModelExecutor>)>, params: Vec<Tensor>) -> BatchRunner {
+        assert!(!variants.is_empty());
+        assert!(
+            variants.windows(2).all(|w| w[0].0 < w[1].0),
+            "variants must be ascending by batch size"
+        );
+        BatchRunner { variants, params }
+    }
+
+    pub fn max_variant(&self) -> usize {
+        self.variants.last().unwrap().0
+    }
+
+    fn pick(&self, n: usize) -> &(usize, Box<dyn ModelExecutor>) {
+        self.variants
+            .iter()
+            .find(|(b, _)| *b >= n)
+            .unwrap_or_else(|| self.variants.last().unwrap())
+    }
+}
+
+struct PendingRequest {
+    id: u64,
+    input: Vec<f32>,
+    enqueued: Instant,
+    resp: mpsc::Sender<InferResponse>,
+}
+
+#[derive(Default)]
+struct Queue {
+    items: Vec<PendingRequest>,
+    closed: bool,
+}
+
+/// The shared batching front: submit requests from any thread; one worker
+/// thread drains them through a [`BatchRunner`].
+pub struct Batcher {
+    cfg: BatcherConfig,
+    q: Mutex<Queue>,
+    cv: Condvar,
+    in_features: usize,
+    next_id: Mutex<u64>,
+    pub stats: Mutex<BatcherStats>,
+}
+
+/// Aggregate serving statistics.
+#[derive(Clone, Debug, Default)]
+pub struct BatcherStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub padded_rows: u64,
+    pub total_batch_size: u64,
+}
+
+impl BatcherStats {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.total_batch_size as f64 / self.batches as f64
+        }
+    }
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig, in_features: usize) -> Arc<Batcher> {
+        assert!(cfg.max_batch >= 1);
+        Arc::new(Batcher {
+            cfg,
+            q: Mutex::new(Queue::default()),
+            cv: Condvar::new(),
+            in_features,
+            next_id: Mutex::new(0),
+            stats: Mutex::new(BatcherStats::default()),
+        })
+    }
+
+    pub fn in_features(&self) -> usize {
+        self.in_features
+    }
+
+    /// Submit a request; the response arrives on the returned receiver.
+    pub fn submit(&self, input: Vec<f32>) -> (u64, mpsc::Receiver<InferResponse>) {
+        assert_eq!(input.len(), self.in_features, "input feature mismatch");
+        let id = {
+            let mut n = self.next_id.lock().unwrap();
+            *n += 1;
+            *n
+        };
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.q.lock().unwrap();
+            assert!(!q.closed, "batcher closed");
+            q.items.push(PendingRequest {
+                id,
+                input,
+                enqueued: Instant::now(),
+                resp: tx,
+            });
+        }
+        self.cv.notify_all();
+        (id, rx)
+    }
+
+    /// Stop accepting work and wake the worker so it can drain + exit.
+    pub fn close(&self) {
+        self.q.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Worker loop: call from the (single) thread that owns `runner`.
+    /// Returns when closed and drained.
+    pub fn run_worker(&self, runner: BatchRunner, hooks: WorkerHooks) {
+        let max_batch = self.cfg.max_batch.min(runner.max_variant());
+        loop {
+            let batch = {
+                let mut q = self.q.lock().unwrap();
+                loop {
+                    if q.items.is_empty() {
+                        if q.closed {
+                            return;
+                        }
+                        q = self.cv.wait(q).unwrap_or_else(|e| e.into_inner());
+                        continue;
+                    }
+                    let head_age = q.items[0].enqueued.elapsed();
+                    if q.items.len() >= max_batch || head_age >= self.cfg.max_wait || q.closed {
+                        let n = q.items.len().min(max_batch);
+                        break q.items.drain(..n).collect::<Vec<_>>();
+                    }
+                    let remaining = self.cfg.max_wait - head_age;
+                    let (guard, _) = self
+                        .cv
+                        .wait_timeout(q, remaining)
+                        .unwrap_or_else(|e| e.into_inner());
+                    q = guard;
+                }
+            };
+            if let Some(gate) = hooks.pre_execute {
+                gate();
+            }
+            self.execute_batch(&runner, batch, hooks.post_batch);
+        }
+    }
+
+    fn execute_batch(
+        &self,
+        runner: &BatchRunner,
+        batch: Vec<PendingRequest>,
+        on_batch: Option<&(dyn Fn(usize) + Sync)>,
+    ) {
+        let n = batch.len();
+        let (vb, exe) = runner.pick(n);
+        let vb = *vb;
+        debug_assert!(vb >= n);
+        // pack + zero-pad
+        let mut data = vec![0f32; vb * self.in_features];
+        for (i, r) in batch.iter().enumerate() {
+            data[i * self.in_features..(i + 1) * self.in_features].copy_from_slice(&r.input);
+        }
+        let mut inputs: Vec<Tensor> = runner.params.clone();
+        inputs.push(Tensor::f32(data, &[vb, self.in_features]));
+        let result = exe.execute(&inputs);
+        if let Some(cb) = on_batch {
+            cb(n);
+        }
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.requests += n as u64;
+            st.batches += 1;
+            st.padded_rows += (vb - n) as u64;
+            st.total_batch_size += n as u64;
+        }
+        match result {
+            Ok(outputs) => {
+                let logits = outputs[0].as_f32().expect("f32 logits");
+                let classes = logits.len() / vb;
+                for (i, r) in batch.into_iter().enumerate() {
+                    let _ = r.resp.send(InferResponse {
+                        id: r.id,
+                        logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                        turnaround: r.enqueued.elapsed(),
+                        batch_size: n,
+                    });
+                }
+            }
+            Err(e) => {
+                // failure injection path: drop senders => receivers see Err
+                eprintln!("batch execution failed: {e:#}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockExecutor;
+
+    fn runner() -> BatchRunner {
+        BatchRunner::new(
+            vec![
+                (1, Box::new(MockExecutor::new(1, 8, 4))),
+                (4, Box::new(MockExecutor::new(4, 8, 4))),
+            ],
+            vec![],
+        )
+    }
+
+    fn with_worker<T>(b: &Arc<Batcher>, f: impl FnOnce() -> T) -> T {
+        let worker = {
+            let b = b.clone();
+            std::thread::spawn(move || b.run_worker(runner(), WorkerHooks::default()))
+        };
+        let out = f();
+        b.close();
+        worker.join().unwrap();
+        out
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let b = Batcher::new(
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+            8,
+        );
+        let resp = with_worker(&b, || {
+            let (_, rx) = b.submit(vec![1.0; 8]);
+            rx.recv_timeout(Duration::from_secs(5)).unwrap()
+        });
+        assert_eq!(resp.logits.len(), 4);
+        assert_eq!(resp.batch_size, 1);
+    }
+
+    #[test]
+    fn batches_coalesce_under_load() {
+        let b = Batcher::new(
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(50),
+            },
+            8,
+        );
+        let responses = with_worker(&b, || {
+            let rxs: Vec<_> = (0..4).map(|_| b.submit(vec![0.5; 8]).1).collect();
+            rxs.into_iter()
+                .map(|rx| rx.recv_timeout(Duration::from_secs(5)).unwrap())
+                .collect::<Vec<_>>()
+        });
+        // all four served; at least one batch had >1 request
+        assert_eq!(responses.len(), 4);
+        assert!(responses.iter().any(|r| r.batch_size > 1));
+        let st = b.stats.lock().unwrap().clone();
+        assert_eq!(st.requests, 4);
+        assert!(st.batches <= 4);
+    }
+
+    #[test]
+    fn max_batch_clamped_to_largest_variant() {
+        let b = Batcher::new(
+            BatcherConfig {
+                max_batch: 100, // > largest variant (4)
+                max_wait: Duration::from_millis(5),
+            },
+            8,
+        );
+        with_worker(&b, || {
+            let rxs: Vec<_> = (0..9).map(|_| b.submit(vec![0.1; 8]).1).collect();
+            for rx in rxs {
+                let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+                assert!(r.batch_size <= 4);
+            }
+        });
+    }
+
+    #[test]
+    fn batched_result_matches_single() {
+        // MockExecutor is batch-consistent, so responses must not depend on
+        // batching decisions.
+        let b = Batcher::new(
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(20),
+            },
+            8,
+        );
+        let input: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let expected = {
+            let solo = MockExecutor::new(1, 8, 4);
+            let out = solo
+                .execute(&[Tensor::f32(input.clone(), &[1, 8])])
+                .unwrap();
+            out[0].as_f32().unwrap().to_vec()
+        };
+        let got = with_worker(&b, || {
+            let rxs: Vec<_> = (0..3).map(|_| b.submit(input.clone()).1).collect();
+            rxs.into_iter()
+                .map(|rx| rx.recv_timeout(Duration::from_secs(5)).unwrap().logits)
+                .collect::<Vec<_>>()
+        });
+        for g in got {
+            assert_eq!(g, expected);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "feature mismatch")]
+    fn wrong_width_rejected() {
+        let b = Batcher::new(BatcherConfig::default(), 8);
+        let _ = b.submit(vec![0.0; 3]);
+    }
+}

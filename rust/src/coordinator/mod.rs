@@ -1,0 +1,14 @@
+//! L3 serving coordinator (DESIGN.md §7): request router, dynamic batcher,
+//! mechanism-semantics governor, and the serving loop that pairs a
+//! latency-sensitive inference service with a best-effort trainer on real
+//! PJRT compute.
+
+pub mod batcher;
+pub mod governor;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig, BatcherStats, InferResponse, WorkerHooks};
+pub use governor::{Governor, GovernorMode};
+pub use router::{Router, RouterStats, Ticket};
+pub use server::{serve, ServeConfig, ServeReport, TrainStepFn};

@@ -1,0 +1,170 @@
+//! Request router: the front door of the serving coordinator. Routes
+//! requests by model name to the matching batcher, tracks conservation
+//! (every admitted request is answered or reported failed), and exposes the
+//! latency statistics the experiments report.
+
+use super::batcher::{Batcher, InferResponse};
+use crate::util::stats::Summary;
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Router over named models.
+pub struct Router {
+    routes: BTreeMap<String, Arc<Batcher>>,
+    pub stats: Mutex<RouterStats>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RouterStats {
+    pub admitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub rejected: u64,
+    /// Turnarounds in ms for completed requests.
+    pub turnaround_ms: Vec<f64>,
+}
+
+impl RouterStats {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.turnaround_ms)
+    }
+}
+
+/// A pending routed request.
+pub struct Ticket {
+    pub id: u64,
+    rx: mpsc::Receiver<InferResponse>,
+    router: Arc<Router>,
+}
+
+impl Ticket {
+    /// Wait for the response (recording stats on the router).
+    pub fn wait(self, timeout: Duration) -> Option<InferResponse> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(resp) => {
+                let mut st = self.router.stats.lock().unwrap();
+                st.completed += 1;
+                st.turnaround_ms.push(resp.turnaround.as_secs_f64() * 1e3);
+                Some(resp)
+            }
+            Err(_) => {
+                self.router.stats.lock().unwrap().failed += 1;
+                None
+            }
+        }
+    }
+}
+
+impl Router {
+    pub fn new(routes: BTreeMap<String, Arc<Batcher>>) -> Arc<Router> {
+        Arc::new(Router {
+            routes,
+            stats: Mutex::new(RouterStats::default()),
+        })
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.routes.keys().map(String::as_str).collect()
+    }
+
+    pub fn batcher(&self, model: &str) -> Option<&Arc<Batcher>> {
+        self.routes.get(model)
+    }
+
+    /// Route a request. Returns None (and counts a rejection) for unknown
+    /// models or malformed inputs.
+    pub fn route(self: &Arc<Self>, model: &str, input: Vec<f32>) -> Option<Ticket> {
+        let Some(batcher) = self.routes.get(model) else {
+            self.stats.lock().unwrap().rejected += 1;
+            return None;
+        };
+        if input.len() != batcher.in_features() {
+            self.stats.lock().unwrap().rejected += 1;
+            return None;
+        }
+        let (id, rx) = batcher.submit(input);
+        self.stats.lock().unwrap().admitted += 1;
+        Some(Ticket {
+            id,
+            rx,
+            router: self.clone(),
+        })
+    }
+
+    /// Conservation check: admitted == completed + failed (+ in flight = 0
+    /// at quiescence). Property tests assert this.
+    pub fn conserved(&self) -> bool {
+        let st = self.stats.lock().unwrap();
+        st.admitted == st.completed + st.failed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::{BatchRunner, BatcherConfig};
+    use crate::runtime::{MockExecutor, ModelExecutor};
+
+    fn router() -> (Arc<Router>, Arc<Batcher>) {
+        let b = Batcher::new(
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+            },
+            4,
+        );
+        let mut routes = BTreeMap::new();
+        routes.insert("mlp".to_string(), b.clone());
+        (Router::new(routes), b)
+    }
+
+    fn runner() -> BatchRunner {
+        let variants: Vec<(usize, Box<dyn ModelExecutor>)> =
+            vec![(1, Box::new(MockExecutor::new(1, 4, 2)))];
+        BatchRunner::new(variants, vec![])
+    }
+
+    #[test]
+    fn routes_known_model() {
+        let (r, b) = router();
+        let worker = {
+            let b = b.clone();
+            std::thread::spawn(move || b.run_worker(runner(), Default::default()))
+        };
+        let t = r.route("mlp", vec![1.0; 4]).unwrap();
+        let resp = t.wait(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.logits.len(), 2);
+        b.close();
+        worker.join().unwrap();
+        assert!(r.conserved());
+        assert_eq!(r.stats.lock().unwrap().completed, 1);
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let (r, _b) = router();
+        assert!(r.route("nope", vec![0.0; 4]).is_none());
+        assert_eq!(r.stats.lock().unwrap().rejected, 1);
+        assert!(r.conserved()); // rejections are not admissions
+    }
+
+    #[test]
+    fn malformed_input_rejected() {
+        let (r, _b) = router();
+        assert!(r.route("mlp", vec![0.0; 3]).is_none());
+        assert_eq!(r.stats.lock().unwrap().rejected, 1);
+    }
+
+    #[test]
+    fn timeout_counts_failed() {
+        let (r, _b) = router();
+        // no worker running -> response never arrives
+        let t = r.route("mlp", vec![0.0; 4]).unwrap();
+        assert!(t.wait(Duration::from_millis(30)).is_none());
+        let st = r.stats.lock().unwrap();
+        assert_eq!(st.failed, 1);
+        assert_eq!(st.admitted, 1);
+    }
+}

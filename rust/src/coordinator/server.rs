@@ -1,0 +1,298 @@
+//! The serving loop: assembles router + batcher + governor + best-effort
+//! trainer and drives a synthetic client load, reproducing the paper's
+//! workload (latency-sensitive inference + best-effort training) on *real*
+//! compute. Used by `examples/serve_inference.rs` (with PJRT executors) and
+//! by the coordinator tests/benches (with mocks).
+
+use super::batcher::{BatchRunner, Batcher, BatcherConfig, WorkerHooks};
+use super::governor::{Governor, GovernorMode};
+use super::router::Router;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Serving experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub mode: GovernorMode,
+    pub batcher: BatcherConfig,
+    /// Total inference requests to issue.
+    pub requests: u32,
+    /// Mean inter-arrival (Poisson); `None` = closed loop.
+    pub mean_interarrival: Option<Duration>,
+    /// Best-effort trainer steps to run (0 = no trainer).
+    pub train_steps: u32,
+    pub seed: u64,
+    /// Input feature width of the served model.
+    pub in_features: usize,
+    pub timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            mode: GovernorMode::Shared,
+            batcher: BatcherConfig::default(),
+            requests: 100,
+            mean_interarrival: None,
+            train_steps: 0,
+            seed: 42,
+            in_features: 784,
+            timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// One trainer step: returns the loss. The closure owns the parameters
+/// (feeding updated ones back each call). Created *on* the trainer thread
+/// by a [`TrainerFactory`] because PJRT handles are thread-affine.
+pub type TrainStepFn = Box<dyn FnMut() -> anyhow::Result<f32>>;
+
+/// Builds the trainer step closure on the trainer thread.
+pub type TrainerFactory = Box<dyn FnOnce() -> anyhow::Result<TrainStepFn> + Send>;
+
+/// Outcome of a serving run.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub mode: &'static str,
+    pub latency_ms: Summary,
+    pub completed: u64,
+    pub failed: u64,
+    pub wall: Duration,
+    pub throughput_rps: f64,
+    pub mean_batch: f64,
+    /// Trainer progress: steps completed and the loss curve.
+    pub train_steps_done: u32,
+    pub losses: Vec<f32>,
+    pub trainer_waits: u64,
+    /// Trainer steps per wall second — the utilization proxy (O10).
+    pub train_steps_per_s: f64,
+}
+
+/// Run the serving experiment. `runner_factory` builds the compiled batch
+/// variants on the batcher worker thread; `trainer` (optional) builds the
+/// train-step closure on the trainer thread.
+pub fn serve(
+    cfg: ServeConfig,
+    runner_factory: impl FnOnce() -> BatchRunner + Send + 'static,
+    trainer: Option<TrainerFactory>,
+) -> ServeReport {
+    let batcher = Batcher::new(cfg.batcher.clone(), cfg.in_features);
+    let gov = Arc::new(Governor::new(cfg.mode));
+    let mut routes = BTreeMap::new();
+    routes.insert("model".to_string(), batcher.clone());
+    let router = Router::new(routes);
+
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // Batcher worker with the governor as the admission gate. The ready
+    // channel keeps executable-compilation time out of the latency figures.
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<()>();
+    let worker = {
+        let b = batcher.clone();
+        let g = gov.clone();
+        std::thread::spawn(move || {
+            let runner = runner_factory();
+            let _ = ready_tx.send(());
+            let gate = move || g.infer_permit();
+            b.run_worker(
+                runner,
+                WorkerHooks {
+                    pre_execute: Some(&gate),
+                    post_batch: None,
+                },
+            )
+        })
+    };
+    let _ = ready_rx.recv();
+    let start = Instant::now();
+
+    // Best-effort trainer.
+    let trainer_handle = trainer.map(|factory| {
+        let g = gov.clone();
+        let stop = stop.clone();
+        let steps = cfg.train_steps;
+        std::thread::spawn(move || {
+            let mut step = match factory() {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("trainer init failed: {e:#}");
+                    return (0, Vec::new());
+                }
+            };
+            let mut losses = Vec::new();
+            let mut done = 0;
+            while done < steps {
+                if !g.trainer_permit(Duration::from_millis(50)) {
+                    if stop.load(Ordering::SeqCst) && g.infer_pending() == 0 {
+                        continue; // server drained; permit will succeed next
+                    }
+                    continue;
+                }
+                if g.trainer_should_yield() {
+                    continue;
+                }
+                match step() {
+                    Ok(loss) => {
+                        losses.push(loss);
+                        done += 1;
+                    }
+                    Err(e) => {
+                        eprintln!("trainer step failed: {e:#}");
+                        break;
+                    }
+                }
+            }
+            (done, losses)
+        })
+    });
+
+    // Client load: closed loop waits for each response before the next
+    // issue (MLPerf single-stream); open loop issues at Poisson arrivals
+    // and drains afterwards (MLPerf server).
+    let mut rng = Rng::new(cfg.seed);
+    let mut outstanding = Vec::new();
+    let issue_start = Instant::now();
+    let mut next_arrival = Duration::ZERO;
+    for _ in 0..cfg.requests {
+        if let Some(mean) = cfg.mean_interarrival {
+            next_arrival += Duration::from_nanos(rng.exponential(mean.as_nanos() as f64) as u64);
+            let now = issue_start.elapsed();
+            if next_arrival > now {
+                std::thread::sleep(next_arrival - now);
+            }
+        }
+        let input: Vec<f32> = (0..cfg.in_features)
+            .map(|_| rng.normal(0.0, 1.0) as f32)
+            .collect();
+        gov.infer_begin();
+        match router.route("model", input) {
+            Some(t) => {
+                if cfg.mean_interarrival.is_none() {
+                    let _ = t.wait(cfg.timeout);
+                    gov.infer_end();
+                } else {
+                    outstanding.push(t);
+                }
+            }
+            None => gov.infer_end(),
+        }
+    }
+    for t in outstanding {
+        let _ = t.wait(cfg.timeout);
+        gov.infer_end();
+    }
+
+    stop.store(true, Ordering::SeqCst);
+    let (train_steps_done, losses) = match trainer_handle {
+        Some(h) => h.join().unwrap(),
+        None => (0, Vec::new()),
+    };
+    batcher.close();
+    worker.join().unwrap();
+
+    let wall = start.elapsed();
+    let rstats = router.stats.lock().unwrap().clone();
+    let bstats = batcher.stats.lock().unwrap().clone();
+    ServeReport {
+        mode: gov.mode().name(),
+        latency_ms: rstats.summary(),
+        completed: rstats.completed,
+        failed: rstats.failed,
+        wall,
+        throughput_rps: rstats.completed as f64 / wall.as_secs_f64(),
+        mean_batch: bstats.mean_batch(),
+        train_steps_done,
+        losses,
+        trainer_waits: gov.trainer_waits.load(Ordering::Relaxed),
+        train_steps_per_s: train_steps_done as f64 / wall.as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{MockExecutor, ModelExecutor};
+
+    fn factory(latency_ms: u64) -> impl FnOnce() -> BatchRunner + Send + 'static {
+        move || {
+            let mk = |b: usize| -> Box<dyn ModelExecutor> {
+                let mut m = MockExecutor::new(b, 16, 4);
+                m.latency = Duration::from_millis(latency_ms);
+                Box::new(m)
+            };
+            BatchRunner::new(vec![(1, mk(1)), (8, mk(8))], vec![])
+        }
+    }
+
+    fn cfg(requests: u32, train_steps: u32, mode: GovernorMode) -> ServeConfig {
+        ServeConfig {
+            mode,
+            requests,
+            train_steps,
+            in_features: 16,
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn closed_loop_serves_all() {
+        let rep = serve(cfg(20, 0, GovernorMode::Shared), factory(0), None);
+        assert_eq!(rep.completed, 20);
+        assert_eq!(rep.failed, 0);
+        assert!(rep.latency_ms.mean >= 0.0);
+        assert!(rep.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn open_loop_with_trainer() {
+        let trainer: TrainerFactory = Box::new(|| {
+            let mut fake_loss = 2.5f32;
+            Ok(Box::new(move || {
+                std::thread::sleep(Duration::from_millis(1));
+                fake_loss *= 0.95;
+                Ok(fake_loss)
+            }) as TrainStepFn)
+        });
+        let mut c = cfg(30, 25, GovernorMode::Shared);
+        c.mean_interarrival = Some(Duration::from_millis(2));
+        let rep = serve(c, factory(0), Some(trainer));
+        assert_eq!(rep.completed, 30);
+        assert_eq!(rep.train_steps_done, 25);
+        assert_eq!(rep.losses.len(), 25);
+        assert!(rep.losses.windows(2).all(|w| w[1] < w[0]));
+    }
+
+    #[test]
+    fn priority_mode_makes_trainer_wait_under_load() {
+        let trainer: TrainerFactory = Box::new(|| {
+            Ok(Box::new(|| {
+                std::thread::sleep(Duration::from_millis(2));
+                Ok(1.0f32)
+            }) as TrainStepFn)
+        });
+        let mut c = cfg(40, 10, GovernorMode::InferencePriority);
+        c.mean_interarrival = Some(Duration::from_micros(500));
+        let rep = serve(c, factory(1), Some(trainer));
+        assert_eq!(rep.completed, 40);
+        // the trainer should have been gated at least once under load
+        assert!(rep.trainer_waits > 0, "waits={}", rep.trainer_waits);
+    }
+
+    #[test]
+    fn serialized_mode_completes() {
+        let mut c = cfg(10, 3, GovernorMode::Serialized { slice: Duration::from_millis(5) });
+        c.mean_interarrival = Some(Duration::from_millis(1));
+        let trainer: TrainerFactory = Box::new(|| Ok(Box::new(|| Ok(0.5f32)) as TrainStepFn));
+        let rep = serve(c, factory(0), Some(trainer));
+        assert_eq!(rep.completed, 10);
+        assert_eq!(rep.train_steps_done, 3);
+    }
+}

@@ -1,0 +1,102 @@
+//! Shared wiring for the real-compute (PJRT) paths used by the CLI `serve`
+//! command and `examples/serve_inference.rs`: factories that build the
+//! batch-variant runner and the best-effort SGD trainer on their own
+//! threads (PJRT handles are thread-affine).
+
+use crate::coordinator::batcher::BatchRunner;
+use crate::coordinator::server::{TrainStepFn, TrainerFactory};
+use crate::runtime::{ModelExecutor, PjrtRuntime, Tensor};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Context, Result};
+use std::path::PathBuf;
+
+/// MLP input width (matches python/compile/model.py MLP_DIMS[0]).
+pub const MLP_IN: usize = 784;
+/// Train-step batch size (matches the mlp_train_b32 artifact).
+pub const TRAIN_BATCH: usize = 32;
+
+/// Build the inference [`BatchRunner`] from the AOT artifacts: one compiled
+/// executable per batch variant plus the current parameters.
+pub fn mlp_runner(dir: &PathBuf) -> Result<BatchRunner> {
+    let rt = PjrtRuntime::load(dir).context("loading artifacts (run `make artifacts`)")?;
+    let params = rt.load_params("mlp_params")?;
+    let mut variants: Vec<(usize, Box<dyn ModelExecutor>)> = Vec::new();
+    for b in [1usize, 8, 32] {
+        let m = rt.compile(&format!("mlp_infer_b{b}"))?;
+        variants.push((b, Box::new(m)));
+    }
+    Ok(BatchRunner::new(variants, params))
+}
+
+/// The class-conditional synthetic batch of python/compile/model.py
+/// (`synthetic_batch`), regenerated host-side: label k gets a bright
+/// 3-row stripe starting at row 2k+3 on a noisy background.
+pub fn synthetic_batch(rng: &mut Rng, batch: usize) -> (Vec<f32>, Vec<i32>) {
+    let mut xs = vec![0f32; batch * MLP_IN];
+    let mut ys = vec![0i32; batch];
+    for i in 0..batch {
+        let y = rng.below(10) as i32;
+        ys[i] = y;
+        let lo = (y * 2 + 3) as usize;
+        for r in 0..28 {
+            for c in 0..28 {
+                let mut v = rng.normal(0.0, 0.3) as f32;
+                if r >= lo && r < lo + 3 {
+                    v += 1.5;
+                }
+                xs[i * MLP_IN + r * 28 + c] = v;
+            }
+        }
+    }
+    (xs, ys)
+}
+
+/// Trainer factory: compiles `mlp_train_b32`, loads the initial params, and
+/// returns a closure performing one SGD step per call on synthetic data,
+/// feeding the updated parameters back (the L2 step is
+/// `(params…, x, y) -> (params'…, loss)`).
+pub fn mlp_trainer_factory(dir: PathBuf) -> TrainerFactory {
+    Box::new(move || {
+        let rt = PjrtRuntime::load(&dir).context("loading artifacts")?;
+        let model = rt.compile("mlp_train_b32")?;
+        let mut params = rt.load_params("mlp_params")?;
+        let mut rng = Rng::new(0xBADC0FFEE);
+        let step: TrainStepFn = Box::new(move || {
+            let (xs, ys) = synthetic_batch(&mut rng, TRAIN_BATCH);
+            let mut inputs = params.clone();
+            inputs.push(Tensor::f32(xs, &[TRAIN_BATCH, MLP_IN]));
+            inputs.push(Tensor::i32(ys, &[TRAIN_BATCH]));
+            let mut outputs = model.execute(&inputs)?;
+            let loss = outputs
+                .pop()
+                .ok_or_else(|| anyhow!("train step returned no outputs"))?;
+            let loss = loss.as_f32()?[0];
+            params = outputs; // new params for the next step
+            Ok(loss)
+        });
+        Ok(step)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_batch_shapes_and_labels() {
+        let mut rng = Rng::new(1);
+        let (xs, ys) = synthetic_batch(&mut rng, 8);
+        assert_eq!(xs.len(), 8 * MLP_IN);
+        assert_eq!(ys.len(), 8);
+        assert!(ys.iter().all(|&y| (0..10).contains(&y)));
+        // stripe rows are visibly brighter than background
+        let i = 0;
+        let y = ys[i] as usize;
+        let stripe_mean: f32 = (0..28)
+            .map(|c| xs[i * MLP_IN + (y * 2 + 3) * 28 + c])
+            .sum::<f32>()
+            / 28.0;
+        let bg_mean: f32 = (0..28).map(|c| xs[i * MLP_IN + c]).sum::<f32>() / 28.0;
+        assert!(stripe_mean > bg_mean + 0.5);
+    }
+}

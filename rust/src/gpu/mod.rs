@@ -1,0 +1,12 @@
+//! GPU device model: resource vectors, the device configuration (defaults
+//! to the paper's NVIDIA GeForce RTX 3090 / Ampere GA102), the occupancy
+//! calculator (blocks-per-SM, limiting resource, large-kernel test), and
+//! the per-SM residency state the block scheduler mutates.
+
+pub mod config;
+pub mod occupancy;
+pub mod sm;
+
+pub use config::{DeviceConfig, ResourceVec};
+pub use occupancy::{KernelRes, LimitingResource, Occupancy};
+pub use sm::{BlockState, Cohort, CohortId, FreezeMode, SmState};

@@ -1,0 +1,239 @@
+//! The occupancy calculator: how many blocks of a kernel fit per SM, which
+//! resource runs out first (the *limiting resource*, §3.2 / [Gilman et al.
+//! 2020]), and whether a kernel is *large* (its grid cannot fully reside on
+//! the device — §3.2's definition).
+
+use super::config::{DeviceConfig, ResourceVec};
+
+/// Per-block resource requirements of a kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelRes {
+    pub threads_per_block: u32,
+    pub regs_per_thread: u32,
+    pub smem_per_block: u32,
+}
+
+impl KernelRes {
+    pub fn new(threads_per_block: u32, regs_per_thread: u32, smem_per_block: u32) -> Self {
+        assert!(threads_per_block > 0, "a block has at least one thread");
+        Self {
+            threads_per_block,
+            regs_per_thread,
+            smem_per_block,
+        }
+    }
+
+    /// The [`ResourceVec`] one block occupies on an SM.
+    pub fn block_footprint(&self) -> ResourceVec {
+        ResourceVec {
+            threads: self.threads_per_block as u64,
+            blocks: 1,
+            regs: self.threads_per_block as u64 * self.regs_per_thread as u64,
+            smem: self.smem_per_block as u64,
+        }
+    }
+
+    /// Warps per block (ceil division by warp size).
+    pub fn warps_per_block(&self, warp_size: u32) -> u32 {
+        self.threads_per_block.div_ceil(warp_size)
+    }
+}
+
+/// Which SM resource is exhausted first when packing blocks of a kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LimitingResource {
+    Threads,
+    Blocks,
+    Registers,
+    SharedMem,
+}
+
+impl std::fmt::Display for LimitingResource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            LimitingResource::Threads => "threads",
+            LimitingResource::Blocks => "blocks",
+            LimitingResource::Registers => "registers",
+            LimitingResource::SharedMem => "shared-mem",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Result of the occupancy computation for a kernel on a device.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Occupancy {
+    /// Blocks of this kernel that fit on one empty SM.
+    pub blocks_per_sm: u32,
+    /// `blocks_per_sm * num_sms` — device capacity for this kernel.
+    pub device_blocks: u32,
+    /// The first resource to run out on an SM.
+    pub limiting: LimitingResource,
+}
+
+impl Occupancy {
+    /// Compute occupancy of `res` on `dev` (empty device).
+    pub fn compute(dev: &DeviceConfig, res: &KernelRes) -> Occupancy {
+        Self::compute_within(&dev.sm_limits, dev.num_sms, res)
+    }
+
+    /// Compute against explicit per-SM limits (used for MPS thread-limited
+    /// views and for brute-force cross-checking in tests).
+    pub fn compute_within(limits: &ResourceVec, num_sms: u32, res: &KernelRes) -> Occupancy {
+        let fp = res.block_footprint();
+        let per = |cap: u64, need: u64| -> u64 {
+            if need == 0 {
+                u64::MAX
+            } else {
+                cap / need
+            }
+        };
+        let by_threads = per(limits.threads, fp.threads);
+        let by_blocks = per(limits.blocks, fp.blocks);
+        let by_regs = per(limits.regs, fp.regs);
+        let by_smem = per(limits.smem, fp.smem);
+        let cap = by_threads.min(by_blocks).min(by_regs).min(by_smem);
+        // Tie-break order mirrors the order the paper discusses resources:
+        // threads, blocks, registers, shared memory.
+        let limiting = if by_threads == cap {
+            LimitingResource::Threads
+        } else if by_blocks == cap {
+            LimitingResource::Blocks
+        } else if by_regs == cap {
+            LimitingResource::Registers
+        } else {
+            LimitingResource::SharedMem
+        };
+        let blocks_per_sm = u32::try_from(cap.min(u32::MAX as u64)).unwrap();
+        Occupancy {
+            blocks_per_sm,
+            device_blocks: blocks_per_sm.saturating_mul(num_sms),
+            limiting,
+        }
+    }
+
+    /// §3.2: a kernel is *large* if its grid cannot fully reside on the GPU.
+    pub fn is_large(&self, grid_blocks: u32) -> bool {
+        grid_blocks > self.device_blocks
+    }
+
+    /// Number of full-device waves the grid needs in isolation.
+    pub fn waves(&self, grid_blocks: u32) -> u32 {
+        if self.device_blocks == 0 {
+            return u32::MAX; // does not fit at all
+        }
+        grid_blocks.div_ceil(self.device_blocks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> DeviceConfig {
+        DeviceConfig::rtx3090()
+    }
+
+    #[test]
+    fn o10_training_kernel_example() {
+        // §5/O10: ResNet-152 training kernel — 200704 blocks × 256 threads,
+        // 32 regs/thread. 1536/256 = 6 blocks/SM (thread-limited), 492 on
+        // the device, 49152 regs in use per SM.
+        let res = KernelRes::new(256, 32, 0);
+        let occ = Occupancy::compute(&dev(), &res);
+        assert_eq!(occ.blocks_per_sm, 6);
+        assert_eq!(occ.device_blocks, 492);
+        assert_eq!(occ.limiting, LimitingResource::Threads);
+        assert!(occ.is_large(200_704));
+        let regs_used = res.block_footprint().regs * 6;
+        assert_eq!(regs_used, 49_152);
+        // 200704 / 492 = 408 waves
+        assert_eq!(occ.waves(200_704), 408);
+    }
+
+    #[test]
+    fn o10_inference_sgemm_example() {
+        // §5/O10: convolutional implicit SGEMM — 64 threads/block, 80
+        // regs/thread. Register-limited: 65536 / (64*80) = 12 blocks/SM.
+        let res = KernelRes::new(64, 80, 0);
+        let occ = Occupancy::compute(&dev(), &res);
+        assert_eq!(occ.limiting, LimitingResource::Registers);
+        assert_eq!(occ.blocks_per_sm, 12);
+        // O10's arithmetic: removing ONE 256-thread training block (256
+        // threads, 8192 regs) frees room for four 64-thread SGEMM blocks
+        // (256 threads, 20480 regs): 49152 - 8192 + 4*5120 = 61440 regs.
+        let train = KernelRes::new(256, 32, 0).block_footprint();
+        let sgemm = res.block_footprint();
+        let regs_after = 6 * train.regs - train.regs + 4 * sgemm.regs;
+        assert_eq!(regs_after, 61_440);
+        let threads_after = 6 * train.threads - train.threads + 4 * sgemm.threads;
+        assert_eq!(threads_after, 1536); // same thread usage, more blocks
+    }
+
+    #[test]
+    fn block_slot_limited_kernel() {
+        // Tiny blocks: 32 threads, few regs -> 16-block slot limit binds.
+        let res = KernelRes::new(32, 16, 0);
+        let occ = Occupancy::compute(&dev(), &res);
+        assert_eq!(occ.blocks_per_sm, 16);
+        assert_eq!(occ.limiting, LimitingResource::Blocks);
+        assert!(!occ.is_large(16 * 82));
+        assert!(occ.is_large(16 * 82 + 1));
+    }
+
+    #[test]
+    fn smem_limited_kernel() {
+        let res = KernelRes::new(64, 16, 50 * 1024);
+        let occ = Occupancy::compute(&dev(), &res);
+        assert_eq!(occ.blocks_per_sm, 2);
+        assert_eq!(occ.limiting, LimitingResource::SharedMem);
+    }
+
+    #[test]
+    fn kernel_too_big_for_sm() {
+        // More smem than an SM has: zero blocks fit anywhere.
+        let res = KernelRes::new(32, 1, 200 * 1024);
+        let occ = Occupancy::compute(&dev(), &res);
+        assert_eq!(occ.blocks_per_sm, 0);
+        assert_eq!(occ.device_blocks, 0);
+        assert_eq!(occ.waves(1), u32::MAX);
+    }
+
+    #[test]
+    fn waves_rounds_up() {
+        let res = KernelRes::new(256, 32, 0); // 492 device blocks
+        let occ = Occupancy::compute(&dev(), &res);
+        assert_eq!(occ.waves(492), 1);
+        assert_eq!(occ.waves(493), 2);
+        assert_eq!(occ.waves(1), 1);
+    }
+
+    #[test]
+    fn warps_per_block() {
+        assert_eq!(KernelRes::new(64, 1, 0).warps_per_block(32), 2);
+        assert_eq!(KernelRes::new(65, 1, 0).warps_per_block(32), 3);
+        assert_eq!(KernelRes::new(1, 1, 0).warps_per_block(32), 1);
+    }
+
+    #[test]
+    fn occupancy_matches_brute_force() {
+        // Cross-check the divide-based computation against literal packing.
+        let limits = ResourceVec::new(1536, 16, 65_536, 102_400);
+        for (t, r, s) in [(256u32, 32u32, 0u32), (64, 80, 0), (128, 40, 12_288), (1024, 64, 48 * 1024)] {
+            let res = KernelRes::new(t, r, s);
+            let occ = Occupancy::compute_within(&limits, 1, &res);
+            // brute force: keep adding blocks until one doesn't fit
+            let mut used = ResourceVec::ZERO;
+            let mut n = 0u32;
+            loop {
+                let next = used.plus(&res.block_footprint());
+                if !next.fits_within(&limits) {
+                    break;
+                }
+                used = next;
+                n += 1;
+            }
+            assert_eq!(occ.blocks_per_sm, n, "res={res:?}");
+        }
+    }
+}

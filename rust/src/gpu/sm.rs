@@ -1,0 +1,458 @@
+//! Per-SM residency state. The block scheduler places *cohorts* — groups of
+//! blocks of one kernel placed on one SM at the same instant, which
+//! therefore start and finish together. A cohort is the simulator's unit of
+//! residency, completion, freezing (time-slice switch) and preemption
+//! (fine-grained mechanism), keeping event counts proportional to
+//! `waves × SMs` rather than to raw block counts (DESIGN.md §6).
+
+use super::config::ResourceVec;
+use crate::sim::SimTime;
+
+/// Globally unique cohort identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CohortId(pub u64);
+
+/// Execution state of a resident cohort.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockState {
+    /// Executing; will complete at `started + remaining` absent interference.
+    Running,
+    /// Frozen on-SM (time-slice switch): no progress is made and `remaining`
+    /// holds the unfinished execution time. Per O3 the *memory* resources
+    /// (registers, shared memory) stay allocated across slices — the paper
+    /// hypothesizes they are never transferred off the SM — while the
+    /// execution resources (thread slots, block slots) are yielded to the
+    /// incoming context.
+    Frozen,
+}
+
+/// What a frozen cohort keeps allocated.
+///
+/// Two readings of the paper coexist (DESIGN.md §6): O2 measures *no SM
+/// resource contention during block execution* under time-slicing (each
+/// process sees a clean device in its slice ⇒ `ReleaseAll`), while O3's
+/// microbenchmark shows register/shared-memory demands of both processes
+/// must *jointly* fit (⇒ `KeepMemOnly` residency). The engine defaults to
+/// `ReleaseAll` for the performance experiments and uses `KeepMemOnly`
+/// when `strict_residency_oom` is set (the O3 crash demo, E13).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FreezeMode {
+    /// Keep the full footprint (used by fine-grained preemption *before*
+    /// the state save completes — nothing is freed until saved).
+    KeepAll,
+    /// Keep registers + shared memory, release threads + block slots
+    /// (time-slicing per O3: execution state switched off, memory resident).
+    KeepMemOnly,
+    /// Release everything schedulable (time-slicing per O2: the incoming
+    /// process sees the whole SM).
+    ReleaseAll,
+}
+
+/// The thread/block-slot part of a footprint (released by `KeepMemOnly`).
+fn exec_part(held: &ResourceVec) -> ResourceVec {
+    ResourceVec {
+        threads: held.threads,
+        blocks: held.blocks,
+        regs: 0,
+        smem: 0,
+    }
+}
+
+/// A group of blocks of one kernel resident together on one SM.
+#[derive(Clone, Debug)]
+pub struct Cohort {
+    pub id: CohortId,
+    /// Owning context (application).
+    pub ctx: usize,
+    /// Owning kernel instance (index into the engine's kernel table).
+    pub kernel: u64,
+    /// Number of thread blocks in the cohort.
+    pub blocks: u32,
+    /// Total resources held (= per-block footprint × blocks).
+    pub held: ResourceVec,
+    /// Simulation time the cohort (re)started running.
+    pub started: SimTime,
+    /// Execution time still owed when (re)started (contention-adjusted).
+    pub remaining: SimTime,
+    pub state: BlockState,
+    /// How the current freeze (if any) accounts resources.
+    pub freeze_mode: FreezeMode,
+}
+
+impl Cohort {
+    /// Time still owed as of `now` (only meaningful while Running).
+    pub fn remaining_at(&self, now: SimTime) -> SimTime {
+        match self.state {
+            BlockState::Running => {
+                let elapsed = now.saturating_sub(self.started);
+                self.remaining.saturating_sub(elapsed)
+            }
+            BlockState::Frozen => self.remaining,
+        }
+    }
+
+    /// Scheduled completion time (Running only).
+    pub fn finish_time(&self) -> SimTime {
+        debug_assert_eq!(self.state, BlockState::Running);
+        self.started + self.remaining
+    }
+}
+
+/// Mutable state of one streaming multiprocessor.
+#[derive(Clone, Debug)]
+pub struct SmState {
+    /// Hardware limits (copied from the device config).
+    pub limits: ResourceVec,
+    /// Sum of resources held by resident cohorts (Running *and* Frozen —
+    /// frozen state stays on-SM per O3).
+    pub used: ResourceVec,
+    /// Resident cohorts.
+    pub cohorts: Vec<Cohort>,
+}
+
+impl SmState {
+    pub fn new(limits: ResourceVec) -> Self {
+        Self {
+            limits,
+            used: ResourceVec::ZERO,
+            cohorts: Vec::new(),
+        }
+    }
+
+    /// Free resources right now.
+    pub fn free(&self) -> ResourceVec {
+        self.limits.minus(&self.used)
+    }
+
+    /// How many blocks with `footprint` fit in the current free space.
+    pub fn fits_blocks(&self, footprint: &ResourceVec) -> u32 {
+        let free = self.free();
+        let per = |cap: u64, need: u64| if need == 0 { u64::MAX } else { cap / need };
+        let n = per(free.threads, footprint.threads)
+            .min(per(free.blocks, footprint.blocks))
+            .min(per(free.regs, footprint.regs))
+            .min(per(free.smem, footprint.smem));
+        u32::try_from(n.min(u32::MAX as u64)).unwrap()
+    }
+
+    /// Place a cohort; panics if it does not fit (callers must check via
+    /// [`Self::fits_blocks`] — placement is never speculative).
+    pub fn place(&mut self, cohort: Cohort) {
+        let after = self.used.plus(&cohort.held);
+        assert!(
+            after.fits_within(&self.limits),
+            "cohort {:?} overflows SM: used={:?} held={:?} limits={:?}",
+            cohort.id,
+            self.used,
+            cohort.held,
+            self.limits
+        );
+        self.used = after;
+        self.cohorts.push(cohort);
+    }
+
+    /// What `used` currently charges for a cohort given its state.
+    fn charged(c: &Cohort) -> ResourceVec {
+        if c.state != BlockState::Frozen {
+            return c.held;
+        }
+        match c.freeze_mode {
+            FreezeMode::KeepMemOnly => c.held.minus(&exec_part(&c.held)),
+            FreezeMode::ReleaseAll => ResourceVec::ZERO,
+            FreezeMode::KeepAll => c.held,
+        }
+    }
+
+    /// Remove a cohort by id, releasing whatever it currently holds.
+    /// Returns the cohort.
+    pub fn remove(&mut self, id: CohortId) -> Cohort {
+        let idx = self
+            .cohorts
+            .iter()
+            .position(|c| c.id == id)
+            .unwrap_or_else(|| panic!("cohort {id:?} not resident"));
+        let cohort = self.cohorts.swap_remove(idx);
+        self.used = self.used.minus(&Self::charged(&cohort));
+        cohort
+    }
+
+    pub fn get(&self, id: CohortId) -> Option<&Cohort> {
+        self.cohorts.iter().find(|c| c.id == id)
+    }
+
+    pub fn get_mut(&mut self, id: CohortId) -> Option<&mut Cohort> {
+        self.cohorts.iter_mut().find(|c| c.id == id)
+    }
+
+    /// Freeze every Running cohort owned by `ctx` at time `now`. With
+    /// [`FreezeMode::KeepMemOnly`] the thread/block slots are released
+    /// (time-slice semantics); with `KeepAll` the full footprint stays.
+    /// Returns the frozen cohort ids.
+    pub fn freeze_ctx(&mut self, ctx: usize, now: SimTime, mode: FreezeMode) -> Vec<CohortId> {
+        let mut frozen = Vec::new();
+        for c in &mut self.cohorts {
+            if c.ctx == ctx && c.state == BlockState::Running {
+                c.remaining = c.remaining_at(now);
+                c.state = BlockState::Frozen;
+                c.freeze_mode = mode;
+                match mode {
+                    FreezeMode::KeepMemOnly => {
+                        self.used = self.used.minus(&exec_part(&c.held));
+                    }
+                    FreezeMode::ReleaseAll => {
+                        self.used = self.used.minus(&c.held);
+                    }
+                    FreezeMode::KeepAll => {}
+                }
+                frozen.push(c.id);
+            }
+        }
+        frozen
+    }
+
+    /// Freeze one specific cohort (fine-grained preemption victim).
+    pub fn freeze_one(&mut self, id: CohortId, now: SimTime, mode: FreezeMode) {
+        let used = &mut self.used;
+        let c = self
+            .cohorts
+            .iter_mut()
+            .find(|c| c.id == id)
+            .unwrap_or_else(|| panic!("cohort {id:?} not resident"));
+        assert_eq!(c.state, BlockState::Running, "freezing non-running cohort");
+        c.remaining = c.remaining_at(now);
+        c.state = BlockState::Frozen;
+        c.freeze_mode = mode;
+        match mode {
+            FreezeMode::KeepMemOnly => *used = used.minus(&exec_part(&c.held)),
+            FreezeMode::ReleaseAll => *used = used.minus(&c.held),
+            FreezeMode::KeepAll => {}
+        }
+    }
+
+    /// Resume every Frozen cohort owned by `ctx` at time `now`, re-acquiring
+    /// any released execution resources (panics if they no longer fit — the
+    /// engine guarantees the outgoing context released them first). Returns
+    /// `(id, finish_time)` pairs so the engine can schedule completions.
+    pub fn resume_ctx(&mut self, ctx: usize, now: SimTime) -> Vec<(CohortId, SimTime)> {
+        let mut resumed = Vec::new();
+        for i in 0..self.cohorts.len() {
+            if self.cohorts[i].ctx == ctx && self.cohorts[i].state == BlockState::Frozen {
+                let add = match self.cohorts[i].freeze_mode {
+                    FreezeMode::KeepMemOnly => exec_part(&self.cohorts[i].held),
+                    FreezeMode::ReleaseAll => self.cohorts[i].held,
+                    FreezeMode::KeepAll => ResourceVec::ZERO,
+                };
+                if !add.is_zero() {
+                    let after = self.used.plus(&add);
+                    assert!(
+                        after.fits_within(&self.limits),
+                        "resume of cohort {:?} overflows SM resources",
+                        self.cohorts[i].id
+                    );
+                    self.used = after;
+                }
+                let c = &mut self.cohorts[i];
+                c.started = now;
+                c.state = BlockState::Running;
+                resumed.push((c.id, c.finish_time()));
+            }
+        }
+        resumed
+    }
+
+    /// Threads resident for contention purposes, split (ctx, others).
+    pub fn threads_by_ctx(&self, ctx: usize) -> (u64, u64) {
+        let mut own = 0;
+        let mut other = 0;
+        for c in &self.cohorts {
+            if c.ctx == ctx {
+                own += c.held.threads;
+            } else {
+                other += c.held.threads;
+            }
+        }
+        (own, other)
+    }
+
+    /// Distinct contexts with resident blocks.
+    pub fn resident_ctxs(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.cohorts.iter().map(|c| c.ctx).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Debug invariant: `used` equals the sum of cohort holdings and fits
+    /// the limits. Property tests call this after every simulated event.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut sum = ResourceVec::ZERO;
+        for c in &self.cohorts {
+            sum = sum.plus(&Self::charged(c));
+        }
+        if sum != self.used {
+            return Err(format!("used {:?} != cohort sum {:?}", self.used, sum));
+        }
+        if !self.used.fits_within(&self.limits) {
+            return Err(format!("used {:?} exceeds limits {:?}", self.used, self.limits));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn limits() -> ResourceVec {
+        ResourceVec::new(1536, 16, 65_536, 100 * 1024)
+    }
+
+    fn cohort(id: u64, ctx: usize, blocks: u32, per_block: ResourceVec, now: SimTime, dur: SimTime) -> Cohort {
+        Cohort {
+            id: CohortId(id),
+            ctx,
+            kernel: 0,
+            blocks,
+            held: per_block.times(blocks as u64),
+            started: now,
+            remaining: dur,
+            state: BlockState::Running,
+            freeze_mode: FreezeMode::KeepAll,
+        }
+    }
+
+    #[test]
+    fn place_and_remove_roundtrip() {
+        let mut sm = SmState::new(limits());
+        let per = ResourceVec::new(256, 1, 8192, 0);
+        sm.place(cohort(1, 0, 3, per, 0, 100));
+        assert_eq!(sm.used, per.times(3));
+        assert_eq!(sm.fits_blocks(&per), 3); // 1536/256=6 total, 3 used
+        let c = sm.remove(CohortId(1));
+        assert_eq!(c.blocks, 3);
+        assert!(sm.used.is_zero());
+        sm.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows SM")]
+    fn overplacement_panics() {
+        let mut sm = SmState::new(limits());
+        let per = ResourceVec::new(256, 1, 8192, 0);
+        sm.place(cohort(1, 0, 7, per, 0, 100)); // 7*256 > 1536
+    }
+
+    #[test]
+    fn fits_blocks_respects_every_resource() {
+        let mut sm = SmState::new(limits());
+        // regs-hungry: 64 threads * 80 regs = 5120/block -> 12 fit by regs
+        let per = ResourceVec::new(64, 1, 5120, 0);
+        assert_eq!(sm.fits_blocks(&per), 12);
+        sm.place(cohort(1, 0, 12, per, 0, 50));
+        assert_eq!(sm.fits_blocks(&per), 0);
+        // block-slot limited
+        let mut sm2 = SmState::new(limits());
+        let tiny = ResourceVec::new(32, 1, 512, 0);
+        assert_eq!(sm2.fits_blocks(&tiny), 16);
+        sm2.place(cohort(2, 0, 16, tiny, 0, 50));
+        assert_eq!(sm2.fits_blocks(&tiny), 0);
+    }
+
+    #[test]
+    fn freeze_keep_all_keeps_resources_and_remaining_time() {
+        let mut sm = SmState::new(limits());
+        let per = ResourceVec::new(256, 1, 8192, 0);
+        sm.place(cohort(1, 0, 2, per, 1000, 500));
+        let frozen = sm.freeze_ctx(0, 1200, FreezeMode::KeepAll);
+        assert_eq!(frozen, vec![CohortId(1)]);
+        let c = sm.get(CohortId(1)).unwrap();
+        assert_eq!(c.state, BlockState::Frozen);
+        assert_eq!(c.remaining, 300); // 500 - (1200-1000)
+        assert_eq!(sm.used, per.times(2)); // still held
+        // resume at t=5000 -> finishes at 5300
+        let resumed = sm.resume_ctx(0, 5000);
+        assert_eq!(resumed, vec![(CohortId(1), 5300)]);
+        sm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn freeze_mem_only_releases_exec_resources() {
+        // O3: time-slice switch keeps regs/smem on-SM, yields threads/blocks.
+        let mut sm = SmState::new(limits());
+        let per = ResourceVec::new(256, 1, 8192, 1024);
+        sm.place(cohort(1, 0, 2, per, 0, 500));
+        sm.freeze_ctx(0, 100, FreezeMode::KeepMemOnly);
+        assert_eq!(sm.used, ResourceVec::new(0, 0, 16384, 2048));
+        sm.check_invariants().unwrap();
+        // incoming ctx can use the freed thread slots but sees fewer regs
+        let free = sm.free();
+        assert_eq!(free.threads, 1536);
+        assert_eq!(free.regs, 65_536 - 16_384);
+        // resume re-acquires exec resources
+        sm.resume_ctx(0, 500);
+        assert_eq!(sm.used, per.times(2));
+        sm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn remove_frozen_mem_only_cohort_releases_only_mem() {
+        let mut sm = SmState::new(limits());
+        let per = ResourceVec::new(256, 1, 8192, 0);
+        sm.place(cohort(1, 0, 2, per, 0, 500));
+        sm.freeze_ctx(0, 100, FreezeMode::KeepMemOnly);
+        let c = sm.remove(CohortId(1));
+        assert_eq!(c.blocks, 2);
+        assert!(sm.used.is_zero());
+        sm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn freeze_one_targets_single_cohort() {
+        let mut sm = SmState::new(limits());
+        let per = ResourceVec::new(128, 1, 4096, 0);
+        sm.place(cohort(1, 0, 1, per, 0, 100));
+        sm.place(cohort(2, 0, 1, per, 0, 100));
+        sm.freeze_one(CohortId(1), 50, FreezeMode::KeepAll);
+        assert_eq!(sm.get(CohortId(1)).unwrap().state, BlockState::Frozen);
+        assert_eq!(sm.get(CohortId(2)).unwrap().state, BlockState::Running);
+        assert_eq!(sm.get(CohortId(1)).unwrap().remaining, 50);
+    }
+
+    #[test]
+    fn freeze_only_targets_ctx() {
+        let mut sm = SmState::new(limits());
+        let per = ResourceVec::new(128, 1, 4096, 0);
+        sm.place(cohort(1, 0, 1, per, 0, 100));
+        sm.place(cohort(2, 1, 1, per, 0, 100));
+        let frozen = sm.freeze_ctx(0, 50, FreezeMode::KeepAll);
+        assert_eq!(frozen.len(), 1);
+        assert_eq!(sm.get(CohortId(2)).unwrap().state, BlockState::Running);
+    }
+
+    #[test]
+    fn threads_by_ctx_partitions() {
+        let mut sm = SmState::new(limits());
+        let per = ResourceVec::new(128, 1, 4096, 0);
+        sm.place(cohort(1, 0, 2, per, 0, 100));
+        sm.place(cohort(2, 1, 3, per, 0, 100));
+        assert_eq!(sm.threads_by_ctx(0), (256, 384));
+        assert_eq!(sm.threads_by_ctx(1), (384, 256));
+        assert_eq!(sm.resident_ctxs(), vec![0, 1]);
+    }
+
+    #[test]
+    fn remaining_at_saturates() {
+        let c = cohort(1, 0, 1, ResourceVec::new(32, 1, 0, 0), 100, 50);
+        assert_eq!(c.remaining_at(100), 50);
+        assert_eq!(c.remaining_at(125), 25);
+        assert_eq!(c.remaining_at(1000), 0);
+    }
+
+    #[test]
+    fn invariant_check_detects_corruption() {
+        let mut sm = SmState::new(limits());
+        sm.place(cohort(1, 0, 1, ResourceVec::new(32, 1, 0, 0), 0, 10));
+        sm.used.threads += 1; // corrupt
+        assert!(sm.check_invariants().is_err());
+    }
+}

@@ -1,0 +1,37 @@
+//! # gpushare
+//!
+//! A microarchitecture-level GPU concurrency simulator and serving
+//! coordinator reproducing *"Characterizing Concurrency Mechanisms for
+//! NVIDIA GPUs under Deep Learning Workloads"* (Gilman & Walls, 2021).
+//!
+//! The crate models the CUDA scheduling hierarchy — SM resource vectors,
+//! the hardware thread block scheduler (leftover policy + most-room
+//! placement), application-level scheduling — and the three concurrency
+//! mechanisms the paper characterizes (priority streams, time-slicing,
+//! MPS) plus its proposed fine-grained block-level preemption, under
+//! deep-learning workloads calibrated to the paper's Table 1.
+//!
+//! Layer map (DESIGN.md §2):
+//! * [`gpu`] — device model (RTX 3090 default), occupancy calculator, SMs;
+//! * [`sim`] — discrete-event substrate;
+//! * [`sched`] — the engine + mechanisms + contention model;
+//! * [`preempt`] — preemption cost model (38/37/73 µs estimates) + O9
+//!   hiding analysis;
+//! * [`workload`] — Table-1-calibrated DL trace generators and arrivals;
+//! * [`metrics`] — turnaround/variance/utilization-proxy reporting;
+//! * [`exp`] — experiment drivers, one per paper table/figure;
+//! * [`coordinator`] — the serving coordinator (router/batcher/governor);
+//! * [`runtime`] — PJRT runtime loading AOT-compiled JAX/Pallas artifacts;
+//! * [`util`] — PRNG, stats, CLI, tables, property-testing, bench harness.
+
+pub mod coordinator;
+pub mod examples_support;
+pub mod exp;
+pub mod gpu;
+pub mod metrics;
+pub mod preempt;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,209 @@
+//! `gpushare` CLI: the leader entrypoint.
+//!
+//! Subcommands:
+//! * `models`   — list the Table-1 workload models and their attributes;
+//! * `simulate` — run one concurrent pair under a mechanism on the
+//!                simulated RTX 3090 and report the §3 metrics;
+//! * `baseline` — run a single task in isolation;
+//! * `serve`    — the real-compute path: serve the AOT-compiled MLP via
+//!                PJRT with a best-effort trainer (see also
+//!                examples/serve_inference.rs);
+//! * `costs`    — print the §5 preemption-cost estimates.
+
+use gpushare::coordinator::{serve, BatcherConfig, GovernorMode, ServeConfig};
+use gpushare::examples_support::{mlp_runner, mlp_trainer_factory, MLP_IN};
+use gpushare::exp::Protocol;
+use gpushare::gpu::DeviceConfig;
+use gpushare::preempt::PreemptCostModel;
+use gpushare::runtime::artifacts_dir;
+use gpushare::sched::Mechanism;
+use gpushare::sim::ns_to_ms;
+use gpushare::util::cli::Args;
+use gpushare::util::table::{fmt_f, Table};
+use gpushare::workload::DlModel;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn main() {
+    let args = Args::from_env()
+        .describe("model", "workload model (resnet50, vgg19, ...)", Some("resnet50"))
+        .describe("mech", "mechanism: baseline|streams|timeslice|mps|preempt", Some("mps"))
+        .describe("requests", "inference requests", Some("60"))
+        .describe("steps", "training steps", Some("20"))
+        .describe("seed", "RNG seed", Some("42"))
+        .describe("mode", "serve governor: shared|serialized|priority|preemptive", Some("shared"))
+        .describe("artifacts", "artifacts directory", Some("artifacts"));
+    let cmd = args.positional().first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "models" => models(),
+        "simulate" => simulate(&args),
+        "baseline" => baseline(&args),
+        "serve" => serve_cmd(&args),
+        "costs" => costs(),
+        _ => print!(
+            "{}",
+            args.usage(
+                "gpushare — GPU concurrency-mechanism simulator + serving coordinator\n\
+                 commands: models | simulate | baseline | serve | costs"
+            )
+        ),
+    }
+}
+
+fn models() {
+    let dev = DeviceConfig::rtx3090();
+    let mut t = Table::new(
+        "workload models (Table 1)",
+        &[
+            "model",
+            "backend",
+            "train batch",
+            "train large%",
+            "train long-run%",
+            "infer kernels/req",
+            "infer large%",
+        ],
+    );
+    for m in DlModel::ALL {
+        let tp = m.train_profile();
+        let ip = m.infer_profile();
+        t.row(&[
+            m.name().to_string(),
+            m.backend().to_string(),
+            tp.as_ref().map(|p| p.batch_size.to_string()).unwrap_or("-".into()),
+            tp.as_ref().map(|p| fmt_f(p.target_large_pct, 2)).unwrap_or("-".into()),
+            tp.as_ref()
+                .map(|p| fmt_f(p.target_long_running_pct, 2))
+                .unwrap_or("-".into()),
+            ip.as_ref().map(|p| p.kernels_per_unit.to_string()).unwrap_or("-".into()),
+            ip.as_ref().map(|p| fmt_f(p.target_large_pct, 2)).unwrap_or("-".into()),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("device: {} ({} SMs)", dev.name, dev.num_sms);
+}
+
+fn proto_from(args: &Args) -> Protocol {
+    Protocol {
+        seed: args.get_u64("seed", 42),
+        requests: args.get_u64("requests", 60) as u32,
+        train_steps: args.get_u64("steps", 20) as u32,
+        ..Protocol::default()
+    }
+}
+
+fn simulate(args: &Args) {
+    let model = DlModel::from_name(&args.get_or("model", "resnet50")).expect("unknown model");
+    let mech = Mechanism::from_name(&args.get_or("mech", "mps")).expect("unknown mechanism");
+    let proto = proto_from(args);
+    let train_model = if model.train_profile().is_some() {
+        model
+    } else {
+        DlModel::Rnnt
+    };
+    println!(
+        "simulating {} inference + {} training under {} ...",
+        model.name(),
+        train_model.name(),
+        mech.name()
+    );
+    let base = proto.baseline_infer(model);
+    let rep = proto.pair(mech, model, train_model);
+    if let Some(oom) = &rep.oom {
+        println!("OOM: {oom}");
+        return;
+    }
+    let s = rep.turnaround_summary();
+    let bs = base.turnaround_summary();
+    println!(
+        "requests: {} | sim time: {:.3}s | events: {}",
+        rep.requests.len(),
+        ns_to_ms(rep.sim_end) / 1e3,
+        rep.events
+    );
+    println!(
+        "turnaround: mean {:.3} ms (baseline {:.3} ms, {:.2}x) p99 {:.3} ms var {:.4}",
+        s.mean,
+        bs.mean,
+        s.mean / bs.mean,
+        s.p99,
+        s.variance
+    );
+    if let Some(t) = rep.train_time_s() {
+        println!("training execution time (utilization proxy): {t:.3} s");
+    }
+}
+
+fn baseline(args: &Args) {
+    let model = DlModel::from_name(&args.get_or("model", "resnet50")).expect("unknown model");
+    let proto = proto_from(args);
+    let rep = proto.baseline_infer(model);
+    let s = rep.turnaround_summary();
+    println!(
+        "{} baseline: mean {:.3} ms p50 {:.3} p99 {:.3} over {} requests",
+        model.name(),
+        s.mean,
+        s.p50,
+        s.p99,
+        s.count
+    );
+}
+
+fn serve_cmd(args: &Args) {
+    let dir = PathBuf::from(args.get_or("artifacts", artifacts_dir().to_string_lossy().as_ref()));
+    let mode = match args.get_or("mode", "shared").as_str() {
+        "serialized" | "timeslice" => GovernorMode::Serialized {
+            slice: Duration::from_millis(2),
+        },
+        "priority" | "streams" => GovernorMode::InferencePriority,
+        "preemptive" | "preempt" => GovernorMode::Preemptive,
+        _ => GovernorMode::Shared,
+    };
+    let cfg = ServeConfig {
+        mode,
+        requests: args.get_u64("requests", 60) as u32,
+        train_steps: args.get_u64("steps", 20) as u32,
+        mean_interarrival: Some(Duration::from_millis(5)),
+        batcher: BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+        },
+        in_features: MLP_IN,
+        ..Default::default()
+    };
+    let dir2 = dir.clone();
+    let runner_factory = move || mlp_runner(&dir2).expect("build runner");
+    let trainer = mlp_trainer_factory(dir);
+    println!("serving mlp via PJRT under {} ...", mode.name());
+    let rep = serve(cfg, runner_factory, Some(trainer));
+    println!(
+        "completed {} ({} failed) | latency mean {:.3} ms p99 {:.3} ms | {:.1} req/s",
+        rep.completed, rep.failed, rep.latency_ms.mean, rep.latency_ms.p99, rep.throughput_rps
+    );
+    println!(
+        "trainer: {} steps ({:.2} steps/s, {} waits); loss {} -> {}",
+        rep.train_steps_done,
+        rep.train_steps_per_s,
+        rep.trainer_waits,
+        rep.losses.first().map(|l| format!("{l:.3}")).unwrap_or("-".into()),
+        rep.losses.last().map(|l| format!("{l:.3}")).unwrap_or("-".into()),
+    );
+}
+
+fn costs() {
+    let dev = DeviceConfig::rtx3090();
+    let m = PreemptCostModel::new();
+    println!("§5 preemption cost estimates on {}:", dev.name);
+    println!(
+        "  full-GPU context save : {:.1} µs (paper: ~38 µs)",
+        m.full_gpu_save_ns(&dev) as f64 / 1e3
+    );
+    println!(
+        "  single-SM context save: {:.1} µs (paper: ~37 µs)",
+        m.single_sm_save_ns(&dev) as f64 / 1e3
+    );
+    println!(
+        "  from slice-gap measure: {:.1} µs (paper: ~73 µs)",
+        m.from_slice_gap_ns(&dev) as f64 / 1e3
+    );
+}

@@ -1,0 +1,197 @@
+//! Experiment metrics (§3): per-request turnaround, its variance, the
+//! training-task execution time used as the utilization proxy (O10), plus
+//! per-op timelines (for Figs 6–7) and occupancy sampling (for O10/E12).
+
+use crate::sim::{ns_to_ms, ns_to_s, SimTime};
+use crate::util::stats::Summary;
+
+/// A completed inference request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub arrived: SimTime,
+    pub completed: SimTime,
+}
+
+impl RequestRecord {
+    pub fn turnaround_ns(&self) -> SimTime {
+        self.completed.saturating_sub(self.arrived)
+    }
+}
+
+/// What kind of op a timeline record describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Kernel,
+    TransferH2D,
+    TransferD2H,
+}
+
+/// One inference-task op as observed on the device (Figs 6–7 plot these).
+#[derive(Clone, Copy, Debug)]
+pub struct OpRecord {
+    pub kind: OpKind,
+    /// When the op was issued to the GPU.
+    pub issued: SimTime,
+    /// When it finished.
+    pub done: SimTime,
+    /// Isolated-duration reference (kernels) or bytes (transfers).
+    pub reference: u64,
+}
+
+impl OpRecord {
+    pub fn span_ns(&self) -> SimTime {
+        self.done.saturating_sub(self.issued)
+    }
+}
+
+/// Periodic device-occupancy sample (O10 utilization discussion).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OccupancySample {
+    pub t: SimTime,
+    pub thread_frac: f64,
+    pub reg_frac: f64,
+    pub smem_frac: f64,
+    pub block_frac: f64,
+    /// SMs with at least one running block.
+    pub active_sms: u32,
+}
+
+/// Everything a single simulated run produces.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub mechanism: String,
+    pub workload: String,
+    /// Completed inference requests in completion order.
+    pub requests: Vec<RequestRecord>,
+    /// Completion time of the training task, if one ran to completion.
+    pub train_done: Option<SimTime>,
+    /// Completion time of the inference task (last request done).
+    pub infer_done: Option<SimTime>,
+    /// Per-op records for the inference task (empty unless enabled).
+    pub ops: Vec<OpRecord>,
+    /// Occupancy samples (empty unless enabled).
+    pub occupancy: Vec<OccupancySample>,
+    /// Set when the run aborted with an out-of-memory condition (O3).
+    pub oom: Option<String>,
+    /// Total simulated time at run end.
+    pub sim_end: SimTime,
+    /// Number of events processed (perf accounting).
+    pub events: u64,
+    /// Number of block-preemptions performed (fine-grained mechanism).
+    pub preemptions: u64,
+    /// Preempted-save nanoseconds hidden behind gaps/transfers (O9
+    /// accounting; only the fine-grained mechanism fills this).
+    pub hidden_save_ns: u128,
+    pub total_save_ns: u128,
+}
+
+impl RunReport {
+    /// Turnaround times in milliseconds, completion order.
+    pub fn turnarounds_ms(&self) -> Vec<f64> {
+        self.requests
+            .iter()
+            .map(|r| ns_to_ms(r.turnaround_ns()))
+            .collect()
+    }
+
+    pub fn turnaround_summary(&self) -> Summary {
+        Summary::of(&self.turnarounds_ms())
+    }
+
+    /// The utilization proxy (O10): training execution time in seconds.
+    pub fn train_time_s(&self) -> Option<f64> {
+        self.train_done.map(ns_to_s)
+    }
+
+    /// Inference-task span in seconds (first arrival is t=0 by construction
+    /// for closed loops).
+    pub fn infer_span_s(&self) -> Option<f64> {
+        self.infer_done.map(ns_to_s)
+    }
+
+    /// Mean turnaround in ms — the Fig 1a/3 series.
+    pub fn mean_turnaround_ms(&self) -> f64 {
+        self.turnaround_summary().mean
+    }
+
+    /// Kernel vs transfer split of inference op time (Figs 6–7).
+    pub fn op_time_split_ms(&self) -> (f64, f64) {
+        let mut k = 0u128;
+        let mut t = 0u128;
+        for op in &self.ops {
+            match op.kind {
+                OpKind::Kernel => k += op.span_ns() as u128,
+                _ => t += op.span_ns() as u128,
+            }
+        }
+        (k as f64 / 1e6, t as f64 / 1e6)
+    }
+
+    /// Fraction of preemption save time hidden off the critical path (O9).
+    pub fn hidden_save_fraction(&self) -> f64 {
+        if self.total_save_ns == 0 {
+            return 0.0;
+        }
+        self.hidden_save_ns as f64 / self.total_save_ns as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::MS;
+
+    #[test]
+    fn turnaround_arithmetic() {
+        let r = RequestRecord {
+            id: 0,
+            arrived: 10 * MS,
+            completed: 25 * MS,
+        };
+        assert_eq!(r.turnaround_ns(), 15 * MS);
+    }
+
+    #[test]
+    fn report_summaries() {
+        let mut rep = RunReport::default();
+        for i in 0..10u64 {
+            rep.requests.push(RequestRecord {
+                id: i,
+                arrived: i * MS,
+                completed: i * MS + 2 * MS,
+            });
+        }
+        rep.train_done = Some(3_000 * MS);
+        let s = rep.turnaround_summary();
+        assert_eq!(s.count, 10);
+        assert!((s.mean - 2.0).abs() < 1e-9);
+        assert_eq!(rep.train_time_s(), Some(3.0));
+    }
+
+    #[test]
+    fn op_split() {
+        let mut rep = RunReport::default();
+        rep.ops.push(OpRecord {
+            kind: OpKind::Kernel,
+            issued: 0,
+            done: 4 * MS,
+            reference: 0,
+        });
+        rep.ops.push(OpRecord {
+            kind: OpKind::TransferH2D,
+            issued: 0,
+            done: MS,
+            reference: 1024,
+        });
+        let (k, t) = rep.op_time_split_ms();
+        assert_eq!(k, 4.0);
+        assert_eq!(t, 1.0);
+    }
+
+    #[test]
+    fn hidden_fraction_guards_zero() {
+        let rep = RunReport::default();
+        assert_eq!(rep.hidden_save_fraction(), 0.0);
+    }
+}

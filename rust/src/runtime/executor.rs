@@ -1,0 +1,304 @@
+//! PJRT execution of the AOT artifacts: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`, per the
+//! reference wiring in /opt/xla-example. Python never runs here — the rust
+//! binary is self-contained once `make artifacts` has produced the HLO
+//! text files.
+//!
+//! The [`ModelExecutor`] trait abstracts the executor so the coordinator
+//! can be tested without artifacts ([`MockExecutor`]) and benchmarked
+//! against the real thing ([`PjrtModel`]).
+
+use super::manifest::{EntrySpec, Manifest, TensorSpec};
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+
+/// A host tensor fed to / returned from an executable.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>().max(1));
+        Tensor::F32(data, shape.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>().max(1));
+        Tensor::I32(data, shape.to_vec())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, s) | Tensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(d, _) => Ok(d),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn matches(&self, spec: &TensorSpec) -> bool {
+        let dtype_ok = match self {
+            Tensor::F32(..) => spec.dtype == "float32",
+            Tensor::I32(..) => spec.dtype == "int32",
+        };
+        dtype_ok && self.shape() == spec.shape.as_slice()
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32(d, _) => xla::Literal::vec1(d),
+            Tensor::I32(d, _) => xla::Literal::vec1(d),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// Anything that can run a named model entry on batched tensors.
+///
+/// NOT `Send`/`Sync`: PJRT executables hold thread-affine handles, so each
+/// executor lives on the thread that created it (the batcher/trainer
+/// workers construct their own via factories).
+pub trait ModelExecutor {
+    /// Entry metadata.
+    fn entry(&self) -> &EntrySpec;
+    /// Execute with full input list (params then data, per the manifest).
+    fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// The real PJRT-backed runtime holding the client and manifest.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtRuntime { client, manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one entry to an executable model.
+    pub fn compile(&self, name: &str) -> Result<PjrtModel> {
+        let entry = self.manifest.entry(name)?.clone();
+        let path = self.manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        Ok(PjrtModel { exe, entry })
+    }
+
+    /// Load a parameter blob as tensors shaped per the manifest.
+    pub fn load_params(&self, blob: &str) -> Result<Vec<Tensor>> {
+        let arrays = self.manifest.load_params(blob)?;
+        let specs = &self.manifest.param_blobs[blob].arrays;
+        Ok(arrays
+            .into_iter()
+            .zip(specs)
+            .map(|(data, spec)| Tensor::f32(data, &spec.shape))
+            .collect())
+    }
+}
+
+/// One compiled entry point.
+pub struct PjrtModel {
+    exe: xla::PjRtLoadedExecutable,
+    entry: EntrySpec,
+}
+
+impl ModelExecutor for PjrtModel {
+    fn entry(&self) -> &EntrySpec {
+        &self.entry
+    }
+
+    fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.entry.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.entry.name,
+                self.entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&self.entry.inputs).enumerate() {
+            if !t.matches(spec) {
+                bail!(
+                    "{}: input {i} mismatch: got {:?} {:?}, want {:?} {}",
+                    self.entry.name,
+                    t.shape(),
+                    match t {
+                        Tensor::F32(..) => "f32",
+                        Tensor::I32(..) => "i32",
+                    },
+                    spec.shape,
+                    spec.dtype
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.entry.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unpack N outputs.
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple result: {e:?}"))?;
+        if parts.len() != self.entry.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.entry.name,
+                self.entry.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&self.entry.outputs)
+            .map(|(lit, spec)| {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("output to_vec: {e:?}"))?;
+                Ok(Tensor::f32(data, &spec.shape))
+            })
+            .collect()
+    }
+}
+
+/// A deterministic stand-in executor for coordinator tests and
+/// artifact-free environments: "logits" are a fixed affine map of the
+/// input so batching invariances are checkable.
+pub struct MockExecutor {
+    entry: EntrySpec,
+    /// Simulated device latency per call (used by serving benchmarks).
+    pub latency: std::time::Duration,
+}
+
+impl MockExecutor {
+    pub fn new(batch: usize, in_features: usize, classes: usize) -> MockExecutor {
+        MockExecutor {
+            entry: EntrySpec {
+                name: format!("mock_infer_b{batch}"),
+                file: String::new(),
+                inputs: vec![TensorSpec {
+                    shape: vec![batch, in_features],
+                    dtype: "float32".into(),
+                }],
+                outputs: vec![TensorSpec {
+                    shape: vec![batch, classes],
+                    dtype: "float32".into(),
+                }],
+                param_inputs: 0,
+            },
+            latency: std::time::Duration::ZERO,
+        }
+    }
+}
+
+impl ModelExecutor for MockExecutor {
+    fn entry(&self) -> &EntrySpec {
+        &self.entry
+    }
+
+    fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if !self.latency.is_zero() {
+            std::thread::sleep(self.latency);
+        }
+        let x = inputs
+            .last()
+            .ok_or_else(|| anyhow!("mock: no inputs"))?
+            .as_f32()?;
+        let spec = &self.entry.outputs[0];
+        let (b, c) = (spec.shape[0], spec.shape[1]);
+        let f = x.len() / b;
+        let mut out = vec![0f32; b * c];
+        for i in 0..b {
+            for j in 0..c {
+                // class j's score = strided sum over the row, offset j
+                let mut s = 0f32;
+                let mut k = j;
+                while k < f {
+                    s += x[i * f + k];
+                    k += c;
+                }
+                out[i * c + j] = s;
+            }
+        }
+        Ok(vec![Tensor::f32(out, &spec.shape)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::f32(vec![0.0; 6], &[2, 3]);
+        assert!(t.matches(&TensorSpec {
+            shape: vec![2, 3],
+            dtype: "float32".into()
+        }));
+        assert!(!t.matches(&TensorSpec {
+            shape: vec![3, 2],
+            dtype: "float32".into()
+        }));
+        assert!(!t.matches(&TensorSpec {
+            shape: vec![2, 3],
+            dtype: "int32".into()
+        }));
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_len_mismatch_panics() {
+        Tensor::f32(vec![0.0; 5], &[2, 3]);
+    }
+
+    #[test]
+    fn mock_executor_is_deterministic_and_batch_consistent() {
+        let m1 = MockExecutor::new(1, 8, 4);
+        let m2 = MockExecutor::new(2, 8, 4);
+        let row: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let single = m1
+            .execute(&[Tensor::f32(row.clone(), &[1, 8])])
+            .unwrap();
+        let mut two = row.clone();
+        two.extend_from_slice(&row);
+        let batched = m2.execute(&[Tensor::f32(two, &[2, 8])]).unwrap();
+        // each row of the batch equals the single-row result
+        let s = single[0].as_f32().unwrap();
+        let b = batched[0].as_f32().unwrap();
+        assert_eq!(&b[0..4], s);
+        assert_eq!(&b[4..8], s);
+    }
+
+    #[test]
+    fn mock_rejects_empty_inputs() {
+        let m = MockExecutor::new(1, 4, 2);
+        assert!(m.execute(&[]).is_err());
+    }
+}

@@ -1,0 +1,242 @@
+//! The AOT artifact manifest (`artifacts/manifest.json`) and parameter
+//! blobs produced by `python/compile/aot.py`.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one tensor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor spec missing dtype"))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One compiled entry point.
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// The first `param_inputs` inputs are model parameters.
+    pub param_inputs: usize,
+}
+
+impl EntrySpec {
+    /// Non-parameter (data) inputs.
+    pub fn data_inputs(&self) -> &[TensorSpec] {
+        &self.inputs[self.param_inputs..]
+    }
+}
+
+/// A serialized flat-f32 parameter set.
+#[derive(Clone, Debug)]
+pub struct ParamBlob {
+    pub file: String,
+    pub arrays: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<EntrySpec>,
+    pub param_blobs: BTreeMap<String, ParamBlob>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let mut entries = Vec::new();
+        for e in j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+        {
+            let grab = |k: &str| -> Result<String> {
+                e.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("entry missing {k}"))
+            };
+            let tensors = |k: &str| -> Result<Vec<TensorSpec>> {
+                e.get(k)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("entry missing {k}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            entries.push(EntrySpec {
+                name: grab("name")?,
+                file: grab("file")?,
+                inputs: tensors("inputs")?,
+                outputs: tensors("outputs")?,
+                param_inputs: e
+                    .get("param_inputs")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(0),
+            });
+        }
+        let mut param_blobs = BTreeMap::new();
+        if let Json::Obj(m) = &j {
+            for (k, v) in m {
+                if !k.ends_with("_params") {
+                    continue;
+                }
+                let file = v
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("{k} missing file"))?
+                    .to_string();
+                let arrays = v
+                    .get("arrays")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("{k} missing arrays"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                param_blobs.insert(k.clone(), ParamBlob { file, arrays });
+            }
+        }
+        Ok(Manifest {
+            dir,
+            entries,
+            param_blobs,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("no artifact entry named '{name}'"))
+    }
+
+    /// Load a parameter blob (little-endian f32) split into per-array Vecs.
+    pub fn load_params(&self, blob_name: &str) -> Result<Vec<Vec<f32>>> {
+        let blob = self
+            .param_blobs
+            .get(blob_name)
+            .ok_or_else(|| anyhow!("no param blob '{blob_name}'"))?;
+        let bytes = std::fs::read(self.dir.join(&blob.file))
+            .with_context(|| format!("reading {}", blob.file))?;
+        let total: usize = blob.arrays.iter().map(TensorSpec::elements).sum();
+        if bytes.len() != total * 4 {
+            bail!(
+                "param blob {} has {} bytes, expected {}",
+                blob.file,
+                bytes.len(),
+                total * 4
+            );
+        }
+        let mut out = Vec::with_capacity(blob.arrays.len());
+        let mut off = 0usize;
+        for a in &blob.arrays {
+            let n = a.elements();
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[(off + i) * 4..(off + i) * 4 + 4];
+                v.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n;
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "entries": [
+        {"name": "m_b1", "file": "m.hlo.txt",
+         "inputs": [{"shape": [784, 256], "dtype": "float32"},
+                    {"shape": [1, 784], "dtype": "float32"}],
+         "outputs": [{"shape": [1, 10], "dtype": "float32"}],
+         "param_inputs": 1}
+      ],
+      "mlp_params": {"file": "p.bin",
+                     "arrays": [{"shape": [2, 2], "dtype": "float32"}]}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.entry("m_b1").unwrap();
+        assert_eq!(e.param_inputs, 1);
+        assert_eq!(e.data_inputs().len(), 1);
+        assert_eq!(e.data_inputs()[0].shape, vec![1, 784]);
+        assert_eq!(e.outputs[0].elements(), 10);
+        assert!(m.param_blobs.contains_key("mlp_params"));
+        assert!(m.entry("missing").is_err());
+    }
+
+    #[test]
+    fn param_blob_roundtrip() {
+        let dir = std::env::temp_dir().join("gpushare-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let vals: Vec<f32> = vec![1.5, -2.0, 3.25, 0.0];
+        let mut bytes = Vec::new();
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(dir.join("p.bin"), bytes).unwrap();
+        let m = Manifest::parse(SAMPLE, dir).unwrap();
+        let params = m.load_params("mlp_params").unwrap();
+        assert_eq!(params, vec![vals]);
+    }
+
+    #[test]
+    fn blob_size_mismatch_detected() {
+        let dir = std::env::temp_dir().join("gpushare-manifest-test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("p.bin"), [0u8; 4]).unwrap(); // too small
+        let m = Manifest::parse(SAMPLE, dir).unwrap();
+        assert!(m.load_params("mlp_params").is_err());
+    }
+
+    #[test]
+    fn scalar_tensor_spec() {
+        let t = TensorSpec {
+            shape: vec![],
+            dtype: "float32".into(),
+        };
+        assert_eq!(t.elements(), 1);
+    }
+}

@@ -1,0 +1,16 @@
+//! Runtime layer: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts`) and executes them through the PJRT C API via
+//! the `xla` crate. Python is never on this path.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{MockExecutor, ModelExecutor, PjrtModel, PjrtRuntime, Tensor};
+pub use manifest::{EntrySpec, Manifest, ParamBlob, TensorSpec};
+
+/// Default artifacts directory (overridable via `GPUSHARE_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("GPUSHARE_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,148 @@
+//! Intra-SM and memory-system contention model (O1, O4, O5).
+//!
+//! When blocks from different contexts are colocated on an SM they contend
+//! for the warp schedulers and the memory pipeline; when two processes run
+//! at once they additionally contend for DRAM bandwidth. The paper observes
+//! the *effects* (inflated kernel runtimes under MPS/streams, Fig 1) without
+//! measuring a slowdown law, so we use a standard linear-interference model:
+//!
+//! `slowdown = 1 + sm_coeff · other_warp_frac + mem_coeff · [other ctx active]`
+//!
+//! evaluated at block placement time. The coefficients are fixed once,
+//! globally (not per-figure): they were chosen so the MPS turnaround
+//! inflation on the ResNet-50 workload lands in the paper's observed 1.5–2×
+//! band, and every other figure's shape must then emerge (DESIGN.md §5
+//! "Calibration note").
+
+use crate::gpu::{DeviceConfig, SmState};
+
+/// Linear interference coefficients.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ContentionModel {
+    /// Weight of warp-scheduler contention from other-context warps
+    /// colocated on the same SM.
+    pub sm_coeff: f64,
+    /// Weight of device-wide memory-path contention when at least one other
+    /// context has running blocks anywhere on the GPU.
+    pub mem_coeff: f64,
+}
+
+impl Default for ContentionModel {
+    fn default() -> Self {
+        Self {
+            sm_coeff: 0.9,
+            mem_coeff: 0.18,
+        }
+    }
+}
+
+impl ContentionModel {
+    /// No interference at all (useful for isolating scheduler effects in
+    /// tests and ablations).
+    pub fn none() -> Self {
+        Self {
+            sm_coeff: 0.0,
+            mem_coeff: 0.0,
+        }
+    }
+
+    /// Slowdown factor for a cohort of context `ctx` about to be placed on
+    /// `sm`, with `other_ctx_running_anywhere` precomputed by the engine.
+    pub fn factor(
+        &self,
+        dev: &DeviceConfig,
+        sm: &SmState,
+        ctx: usize,
+        other_ctx_running_anywhere: bool,
+    ) -> f64 {
+        let (_, other_threads) = sm.threads_by_ctx(ctx);
+        let other_frac = other_threads as f64 / dev.sm_limits.threads as f64;
+        let mut f = 1.0 + self.sm_coeff * other_frac.min(1.0);
+        if other_ctx_running_anywhere {
+            f += self.mem_coeff;
+        }
+        f
+    }
+
+    /// Apply a factor to a duration, rounding up so contention never makes
+    /// work free.
+    pub fn stretch(dur_ns: u64, factor: f64) -> u64 {
+        ((dur_ns as f64 * factor).ceil() as u64).max(dur_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::{Cohort, CohortId, BlockState, FreezeMode, ResourceVec};
+
+    fn dev() -> DeviceConfig {
+        DeviceConfig::rtx3090()
+    }
+
+    fn sm_with(ctx: usize, threads: u64) -> SmState {
+        let d = dev();
+        let mut sm = SmState::new(d.sm_limits);
+        sm.place(Cohort {
+            id: CohortId(1),
+            ctx,
+            kernel: 0,
+            blocks: 1,
+            held: ResourceVec::new(threads, 1, 0, 0),
+            started: 0,
+            remaining: 100,
+            state: BlockState::Running,
+            freeze_mode: FreezeMode::KeepAll,
+        });
+        sm
+    }
+
+    #[test]
+    fn empty_sm_no_contention() {
+        let d = dev();
+        let sm = SmState::new(d.sm_limits);
+        let m = ContentionModel::default();
+        assert_eq!(m.factor(&d, &sm, 0, false), 1.0);
+    }
+
+    #[test]
+    fn own_blocks_do_not_contend() {
+        let d = dev();
+        let sm = sm_with(0, 1024);
+        let m = ContentionModel::default();
+        assert_eq!(m.factor(&d, &sm, 0, false), 1.0);
+    }
+
+    #[test]
+    fn other_ctx_threads_slow_us_down() {
+        let d = dev();
+        let sm = sm_with(1, 768); // half the SM's threads are ctx 1's
+        let m = ContentionModel::default();
+        let f = m.factor(&d, &sm, 0, false);
+        assert!((f - (1.0 + 0.9 * 0.5)).abs() < 1e-12, "f={f}");
+    }
+
+    #[test]
+    fn global_memory_pressure_adds() {
+        let d = dev();
+        let sm = SmState::new(d.sm_limits);
+        let m = ContentionModel::default();
+        let f = m.factor(&d, &sm, 0, true);
+        assert!((f - 1.18).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stretch_monotone_and_never_shrinks() {
+        assert_eq!(ContentionModel::stretch(1000, 1.0), 1000);
+        assert_eq!(ContentionModel::stretch(1000, 1.5), 1500);
+        assert!(ContentionModel::stretch(3, 1.1) >= 3);
+    }
+
+    #[test]
+    fn none_model_is_identity() {
+        let d = dev();
+        let sm = sm_with(1, 1536);
+        let m = ContentionModel::none();
+        assert_eq!(m.factor(&d, &sm, 0, true), 1.0);
+    }
+}

@@ -1,0 +1,1602 @@
+//! The simulation engine: a discrete-event model of the CUDA scheduling
+//! hierarchy (§2.1) executing two concurrent tasks under one of the
+//! concurrency mechanisms (§2.2, §4, §5).
+//!
+//! One engine implements every mechanism; they differ only in
+//!  * which contexts' kernels may dispatch blocks at a given time
+//!    (time-slicing masks all but the active context),
+//!  * the dispatch-queue order (leftover FIFO vs priority-first),
+//!  * per-context thread limits (MPS),
+//!  * and whether/what can be preempted (nothing for streams/MPS, the whole
+//!    GPU at slice boundaries for time-slicing, arbitrary cohorts for the
+//!    proposed fine-grained mechanism).
+//!
+//! Event-count scaling, freeze semantics (O3), transfer contention (O4) and
+//! compounded delay (O1) are discussed in DESIGN.md §6.
+
+use crate::gpu::{
+    BlockState, Cohort, CohortId, DeviceConfig, FreezeMode, Occupancy, ResourceVec, SmState,
+};
+use crate::metrics::{OccupancySample, OpKind, OpRecord, RequestRecord, RunReport};
+use crate::preempt::PreemptCostModel;
+use crate::sched::contention::ContentionModel;
+use crate::sched::mechanism::{Mechanism, PlacementPolicy, PreemptConfig, PreemptFlavor, PreemptPolicy};
+use crate::sim::{EventQueue, SimTime, SEC, US};
+use crate::workload::{Op, Source, SourceOut};
+use std::collections::VecDeque;
+
+/// Engine configuration shared by all experiments.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub dev: DeviceConfig,
+    pub mechanism: Mechanism,
+    pub contention: ContentionModel,
+    pub cost: PreemptCostModel,
+    /// Record per-op timelines for inference contexts (Figs 6–7).
+    pub record_ops: bool,
+    /// Sample device occupancy every N ns (None = off).
+    pub occupancy_sample_ns: Option<SimTime>,
+    /// Safety cap on simulated time.
+    pub max_sim_ns: SimTime,
+    /// Paper-faithful eager OOM when a kernel cannot place any block due to
+    /// another process's resident registers/shared memory (O3's crash).
+    /// Off by default: the DL workloads are batch-sized to avoid it, and
+    /// the engine then models the (hypothetical) waiting behaviour.
+    pub strict_residency_oom: bool,
+    /// Fixed per-transfer latency added to the bandwidth term.
+    pub transfer_latency_ns: SimTime,
+}
+
+impl EngineConfig {
+    pub fn new(dev: DeviceConfig, mechanism: Mechanism) -> Self {
+        Self {
+            dev,
+            mechanism,
+            contention: ContentionModel::default(),
+            cost: PreemptCostModel::new(),
+            record_ops: false,
+            occupancy_sample_ns: None,
+            max_sim_ns: 600 * SEC,
+            strict_residency_oom: false,
+            transfer_latency_ns: 10 * US,
+        }
+    }
+}
+
+/// A context (application) definition handed to the engine.
+pub struct CtxDef {
+    pub name: String,
+    pub source: Source,
+    /// Stream priority: higher = more important. The paper's protocol puts
+    /// inference above training.
+    pub priority: i8,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum CtxState {
+    /// Between ops; a Poll event is pending.
+    Idle,
+    /// Open-loop wait for a future request arrival.
+    Waiting,
+    RunningKernel,
+    Transferring,
+    InGap,
+    Done,
+}
+
+struct CtxRt {
+    name: String,
+    source: Source,
+    priority: i8,
+    state: CtxState,
+    /// In-flight request (inference): (id, arrival).
+    req: Option<(u64, SimTime)>,
+    /// MPS accounting: threads currently resident on the device.
+    threads_resident: u64,
+    done_at: Option<SimTime>,
+    is_inference: bool,
+    /// When the currently-running op was issued (for op records).
+    op_issued: SimTime,
+}
+
+/// Runtime state of one dispatched kernel.
+struct KernelRt {
+    ctx: usize,
+    grid: u32,
+    fp: ResourceVec,
+    occ: Occupancy,
+    base_block_dur: SimTime,
+    dur_iso: SimTime,
+    /// Fresh blocks not yet placed.
+    unplaced: u32,
+    /// Preempted chunks awaiting re-placement: (blocks, remaining exec ns).
+    resume: VecDeque<(u32, SimTime)>,
+    /// Blocks resident on SMs (running, frozen, or saving).
+    inflight: u32,
+    finished: u32,
+    issued_at: SimTime,
+    done: bool,
+}
+
+impl KernelRt {
+    fn pending_blocks(&self) -> u32 {
+        self.unplaced + self.resume.iter().map(|&(b, _)| b).sum::<u32>()
+    }
+}
+
+/// One DMA transfer in flight or queued.
+struct ActiveTransfer {
+    ctx: usize,
+    bytes_remaining: u64,
+    expected_done: SimTime,
+    started: SimTime,
+}
+
+struct QueuedTransfer {
+    ctx: usize,
+    bytes: u64,
+}
+
+#[derive(Default)]
+struct Channel {
+    active: Option<ActiveTransfer>,
+    queue: VecDeque<QueuedTransfer>,
+}
+
+#[derive(Clone, Debug)]
+enum Ev {
+    Poll { ctx: usize },
+    CohortDone { sm: usize, id: CohortId },
+    TransferDone { chan: usize },
+    SliceExpire { epoch: u64 },
+    SliceStart { ctx: usize, epoch: u64 },
+    SaveDone { sm: usize, id: CohortId },
+    /// A hold-space reservation lapsed: re-run placement for the masked
+    /// contexts (without this, a run could quiesce with pending work).
+    HoldExpire { at: SimTime },
+}
+
+/// The engine itself. Construct with [`Engine::new`], run with
+/// [`Engine::run`]; a fresh engine is needed per run.
+pub struct Engine {
+    cfg: EngineConfig,
+    ctxs: Vec<CtxRt>,
+    sms: Vec<SmState>,
+    kernels: Vec<KernelRt>,
+    /// Dispatch queue: kernel ids in arrival order (leftover policy order).
+    queue: Vec<usize>,
+    events: EventQueue<Ev>,
+    now: SimTime,
+    next_cohort: u64,
+    /// Running block count per ctx (contention's global term).
+    running_blocks: Vec<u32>,
+    // --- time-slicing state ---
+    active_ctx: usize,
+    slicing: bool,
+    slice_epoch: u64,
+    /// True during the inter-slice switch gap (nothing executes).
+    in_switch_gap: bool,
+    // --- fine-grained state ---
+    /// Cohorts whose state save is in progress: (expected done).
+    saving: Vec<(CohortId, SimTime)>,
+    /// Time the last preemption campaign started (cooldown guard).
+    last_campaign: SimTime,
+    /// Space reservation: placement of contexts with priority < holder's is
+    /// masked until the given time (Proactive{hold_space}).
+    hold: Option<(usize, SimTime)>,
+    // --- DMA ---
+    channels: [Channel; 2],
+    // --- metrics ---
+    report: RunReport,
+    next_occ_sample: SimTime,
+}
+
+const H2D: usize = 0;
+const D2H: usize = 1;
+
+impl Engine {
+    pub fn new(cfg: EngineConfig, defs: Vec<CtxDef>) -> Self {
+        assert!(!defs.is_empty());
+        if let Mechanism::Baseline = cfg.mechanism {
+            assert_eq!(defs.len(), 1, "baseline runs a single task");
+        }
+        let sms = (0..cfg.dev.num_sms)
+            .map(|_| SmState::new(cfg.dev.sm_limits))
+            .collect();
+        let n = defs.len();
+        let ctxs: Vec<CtxRt> = defs
+            .into_iter()
+            .map(|d| CtxRt {
+                name: d.name,
+                is_inference: d.source.is_inference(),
+                source: d.source,
+                priority: d.priority,
+                state: CtxState::Idle,
+                req: None,
+                threads_resident: 0,
+                done_at: None,
+                op_issued: 0,
+            })
+            .collect();
+        let mut report = RunReport {
+            mechanism: cfg.mechanism.name().to_string(),
+            ..Default::default()
+        };
+        // DRAM admission (applies to every mechanism: one physical memory).
+        let total_dram: u64 = ctxs.iter().map(|c| c.source.profile().dram_footprint).sum();
+        if total_dram > cfg.dev.dram_bytes {
+            report.oom = Some(format!(
+                "global memory over-subscribed: {} B requested > {} B device",
+                total_dram, cfg.dev.dram_bytes
+            ));
+        }
+        Self {
+            cfg,
+            ctxs,
+            sms,
+            kernels: Vec::new(),
+            queue: Vec::new(),
+            events: EventQueue::new(),
+            now: 0,
+            next_cohort: 0,
+            running_blocks: vec![0; n],
+            active_ctx: 0,
+            slicing: false,
+            slice_epoch: 0,
+            in_switch_gap: false,
+            saving: Vec::new(),
+            last_campaign: 0,
+            hold: None,
+            channels: [Channel::default(), Channel::default()],
+            report,
+            next_occ_sample: 0,
+        }
+    }
+
+    fn is_timeslicing(&self) -> bool {
+        matches!(self.cfg.mechanism, Mechanism::TimeSlicing)
+    }
+
+    fn priority_ordered(&self) -> bool {
+        matches!(
+            self.cfg.mechanism,
+            Mechanism::PriorityStreams | Mechanism::FineGrained(_)
+        )
+    }
+
+    fn preempt_cfg(&self) -> Option<PreemptConfig> {
+        match self.cfg.mechanism {
+            Mechanism::FineGrained(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// Under static partitioning, may `ctx` place blocks on SM `sm`?
+    /// (ctx 0 owns the first `ctx0_sms`, every other ctx the rest.)
+    fn sm_allowed(&self, ctx: usize, sm: usize) -> bool {
+        match self.cfg.mechanism {
+            Mechanism::Partitioned { ctx0_sms } => {
+                if ctx == 0 {
+                    sm < ctx0_sms as usize
+                } else {
+                    sm >= ctx0_sms as usize
+                }
+            }
+            _ => true,
+        }
+    }
+
+    /// Execute the simulation to completion and return the report.
+    pub fn run(mut self) -> RunReport {
+        if self.report.oom.is_some() {
+            return self.report;
+        }
+        for i in 0..self.ctxs.len() {
+            self.events.push(0, Ev::Poll { ctx: i });
+        }
+        while let Some((t, ev)) = self.events.pop() {
+            self.now = t;
+            if t > self.cfg.max_sim_ns {
+                self.report.oom.get_or_insert(format!(
+                    "simulation exceeded max_sim_ns at {t} — likely starvation/deadlock"
+                ));
+                break;
+            }
+            self.report.events += 1;
+            self.maybe_sample_occupancy();
+            match ev {
+                Ev::Poll { ctx } => self.do_poll(ctx),
+                Ev::CohortDone { sm, id } => self.on_cohort_done(sm, id),
+                Ev::TransferDone { chan } => self.on_transfer_done(chan),
+                Ev::SliceExpire { epoch } => self.on_slice_expire(epoch),
+                Ev::SliceStart { ctx, epoch } => self.on_slice_start(ctx, epoch),
+                Ev::SaveDone { sm, id } => self.on_save_done(sm, id),
+                Ev::HoldExpire { at } => {
+                    if let Some((_, until)) = self.hold {
+                        if until <= at {
+                            self.hold = None;
+                            self.try_place();
+                        }
+                    }
+                }
+            }
+            if self.ctxs.iter().all(|c| c.state == CtxState::Done) {
+                break;
+            }
+            if self.report.oom.is_some() {
+                break;
+            }
+        }
+        self.report.sim_end = self.now;
+        self.report
+    }
+
+    // ------------------------------------------------------------------
+    // Source polling / op issue
+    // ------------------------------------------------------------------
+
+    fn do_poll(&mut self, ctx: usize) {
+        if self.ctxs[ctx].state == CtxState::Done {
+            return;
+        }
+        loop {
+            let out = self.ctxs[ctx].source.next(self.now);
+            match out {
+                SourceOut::Op(op) => {
+                    self.issue_op(ctx, op);
+                    break;
+                }
+                SourceOut::StartRequest { id, arrived } => {
+                    self.ctxs[ctx].req = Some((id, arrived));
+                    // a newly-arrived request may wake slicing
+                    self.reeval_slicing();
+                }
+                SourceOut::EndRequest { id } => {
+                    let (rid, arrived) = self.ctxs[ctx]
+                        .req
+                        .take()
+                        .expect("EndRequest without StartRequest");
+                    debug_assert_eq!(rid, id);
+                    self.report.requests.push(RequestRecord {
+                        id,
+                        arrived,
+                        completed: self.now,
+                    });
+                }
+                SourceOut::WaitUntil(t) => {
+                    self.ctxs[ctx].state = CtxState::Waiting;
+                    self.events.push(t.max(self.now), Ev::Poll { ctx });
+                    // the waiting ctx has no GPU work: maybe yield its slice
+                    self.reeval_slicing();
+                    break;
+                }
+                SourceOut::Done => {
+                    self.ctxs[ctx].state = CtxState::Done;
+                    self.ctxs[ctx].done_at = Some(self.now);
+                    if self.ctxs[ctx].is_inference {
+                        self.report.infer_done = Some(self.now);
+                    } else {
+                        self.report.train_done = Some(self.now);
+                    }
+                    self.reeval_slicing();
+                    // freed space may unblock the other ctx
+                    self.try_place();
+                    break;
+                }
+            }
+        }
+    }
+
+    fn issue_op(&mut self, ctx: usize, op: Op) {
+        self.ctxs[ctx].op_issued = self.now;
+        match op {
+            Op::Kernel(spec) => {
+                let occ = Occupancy::compute(&self.cfg.dev, &spec.res);
+                if occ.device_blocks == 0 {
+                    self.report.oom = Some(format!(
+                        "kernel {} cannot fit a single block on any SM",
+                        spec.class
+                    ));
+                    return;
+                }
+                let kid = self.kernels.len();
+                self.kernels.push(KernelRt {
+                    ctx,
+                    grid: spec.grid_blocks,
+                    fp: spec.res.block_footprint(),
+                    occ,
+                    base_block_dur: spec.block_dur(&self.cfg.dev),
+                    dur_iso: spec.dur_iso,
+                    unplaced: spec.grid_blocks,
+                    resume: VecDeque::new(),
+                    inflight: 0,
+                    finished: 0,
+                    issued_at: self.now,
+                    done: false,
+                });
+                let hide = self.kernels[kid].dur_iso;
+                self.queue.push(kid);
+                self.ctxs[ctx].state = CtxState::RunningKernel;
+                self.reeval_slicing();
+                self.try_place();
+                // O9: this kernel's whole execution can hide a proactive
+                // preemption for the *next* kernel in the sequence.
+                self.proactive_preempt(ctx, hide);
+            }
+            Op::TransferH2D { bytes } => {
+                self.ctxs[ctx].state = CtxState::Transferring;
+                let hide = self.transfer_ns(bytes);
+                self.enqueue_transfer(H2D, ctx, bytes);
+                self.proactive_preempt(ctx, hide);
+            }
+            Op::TransferD2H { bytes } => {
+                self.ctxs[ctx].state = CtxState::Transferring;
+                let hide = self.transfer_ns(bytes);
+                self.enqueue_transfer(D2H, ctx, bytes);
+                self.proactive_preempt(ctx, hide);
+            }
+            Op::CpuGap { ns } => {
+                self.ctxs[ctx].state = CtxState::InGap;
+                self.events.push(self.now + ns, Ev::Poll { ctx });
+                // O9: a gap is a preemption-hiding opportunity.
+                self.proactive_preempt(ctx, ns);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Block placement (the hardware thread block scheduler)
+    // ------------------------------------------------------------------
+
+    /// Is `ctx` allowed to dispatch blocks right now?
+    fn ctx_dispatchable(&self, ctx: usize) -> bool {
+        if self.is_timeslicing() {
+            !self.in_switch_gap && ctx == self.active_ctx
+        } else if let Some((holder, until)) = self.hold {
+            // space reservation: only the holder and higher-priority ctxs
+            ctx == holder
+                || self.ctxs[ctx].priority >= self.ctxs[holder].priority
+                || self.now >= until
+        } else {
+            true
+        }
+    }
+
+    /// MPS: additional thread headroom for `ctx` (u64::MAX when unlimited).
+    fn thread_headroom(&self, ctx: usize) -> u64 {
+        match self.cfg.mechanism {
+            Mechanism::Mps { thread_limit } => {
+                let cap = (thread_limit * self.cfg.dev.total_threads() as f64) as u64;
+                cap.saturating_sub(self.ctxs[ctx].threads_resident)
+            }
+            _ => u64::MAX,
+        }
+    }
+
+    /// The dispatch-queue order for this mechanism: indices into
+    /// `self.queue` of kernels with pending blocks, most-preferred first.
+    fn dispatch_order(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = self
+            .queue
+            .iter()
+            .copied()
+            .filter(|&k| {
+                let kr = &self.kernels[k];
+                kr.pending_blocks() > 0 && self.ctx_dispatchable(kr.ctx)
+            })
+            .collect();
+        if self.priority_ordered() {
+            // Highest stream priority first; FIFO within a priority level
+            // (stable sort preserves arrival order).
+            ids.sort_by_key(|&k| std::cmp::Reverse(self.ctxs[self.kernels[k].ctx].priority));
+        }
+        ids
+    }
+
+    /// Run the block scheduler until no further placement is possible.
+    fn try_place(&mut self) {
+        loop {
+            let order = self.dispatch_order();
+            let mut placed_any = false;
+            for &kid in &order {
+                let placed = self.place_kernel(kid);
+                if placed > 0 {
+                    placed_any = true;
+                }
+                if self.kernels[kid].pending_blocks() > 0 {
+                    // Head-of-line: the leftover policy dispatches all of
+                    // this kernel's blocks before any later kernel's (§4.3).
+                    // Exceptions: an MPS client at its thread limit does not
+                    // block others, and static partitions dispatch
+                    // independently (separate hardware queues per instance).
+                    let capped = self.thread_headroom(self.kernels[kid].ctx)
+                        < self.kernels[kid].fp.threads;
+                    let independent =
+                        matches!(self.cfg.mechanism, Mechanism::Partitioned { .. });
+                    if !capped && !independent {
+                        // genuinely resource-blocked: reactive preemption
+                        // may clear space (fine-grained mechanism only)
+                        if placed == 0 {
+                            self.reactive_preempt(kid);
+                        }
+                        return;
+                    }
+                    // else: fall through to the next kernel in the queue
+                }
+            }
+            if !placed_any {
+                return;
+            }
+        }
+    }
+
+    /// Place as many of kernel `kid`'s pending blocks as fit. Returns the
+    /// number of blocks placed.
+    fn place_kernel(&mut self, kid: usize) -> u32 {
+        let (ctx, fp) = {
+            let k = &self.kernels[kid];
+            (k.ctx, k.fp)
+        };
+        let headroom = self.thread_headroom(ctx);
+        let mut budget_threads = headroom;
+        let mut total_placed = 0u32;
+
+        // Strict-residency OOM probe (O3): if not a single block fits
+        // anywhere *and* the kernel has nothing resident *and* another
+        // process holds frozen memory resources, the paper observed a crash.
+        if self.cfg.strict_residency_oom
+            && self.is_timeslicing()
+            && self.kernels[kid].inflight == 0
+            && self.kernels[kid].finished == 0
+        {
+            let any_fit = self.sms.iter().any(|sm| sm.fits_blocks(&fp) > 0);
+            let other_mem_held = self.sms.iter().any(|sm| {
+                sm.cohorts
+                    .iter()
+                    .any(|c| c.ctx != ctx && (c.held.regs > 0 || c.held.smem > 0))
+            });
+            if !any_fit && other_mem_held {
+                self.report.oom = Some(format!(
+                    "process '{}' cannot schedule any block: registers/shared memory \
+                     held resident by the other process across time slices (O3)",
+                    self.ctxs[ctx].name
+                ));
+                return 0;
+            }
+        }
+
+        // Resume chunks first (they are older work), then fresh blocks.
+        loop {
+            let (blocks_needed, remaining, is_resume) = {
+                let k = &self.kernels[kid];
+                if let Some(&(b, rem)) = k.resume.front() {
+                    (b, rem, true)
+                } else if k.unplaced > 0 {
+                    (k.unplaced, 0, false)
+                } else {
+                    break;
+                }
+            };
+            if budget_threads < fp.threads {
+                break;
+            }
+            let max_by_threads =
+                u32::try_from((budget_threads / fp.threads.max(1)).min(u32::MAX as u64)).unwrap();
+            let want = blocks_needed.min(max_by_threads);
+            if want == 0 {
+                break;
+            }
+            let placed = self.place_blocks(kid, ctx, want, remaining, is_resume);
+            if placed == 0 {
+                break;
+            }
+            budget_threads -= fp.threads * placed as u64;
+            total_placed += placed;
+            {
+                let k = &mut self.kernels[kid];
+                if is_resume {
+                    let (b, rem) = k.resume.pop_front().unwrap();
+                    if placed < b {
+                        k.resume.push_front((b - placed, rem));
+                    }
+                } else {
+                    k.unplaced -= placed;
+                }
+                k.inflight += placed;
+            }
+        }
+        if total_placed > 0 {
+            self.ctxs[ctx].threads_resident += fp.threads * total_placed as u64;
+        }
+        total_placed
+    }
+
+    /// Most-room (or least-contention) placement of up to `want` blocks of
+    /// one kernel; creates at most one cohort per SM. Returns blocks placed.
+    fn place_blocks(
+        &mut self,
+        kid: usize,
+        ctx: usize,
+        want: u32,
+        resume_remaining: SimTime,
+        is_resume: bool,
+    ) -> u32 {
+        let fp = self.kernels[kid].fp;
+        let placement = self
+            .preempt_cfg()
+            .map(|p| p.placement)
+            .unwrap_or(PlacementPolicy::MostRoom);
+        let nsms = self.sms.len();
+        // Per-SM scratch: how many more blocks fit, and how many we assign.
+        let mut fits: Vec<u32> = (0..nsms)
+            .map(|i| {
+                if self.sm_allowed(ctx, i) {
+                    self.sms[i].fits_blocks(&fp)
+                } else {
+                    0
+                }
+            })
+            .collect();
+        // Fast exit: nothing fits anywhere (the common steady state while a
+        // kernel is resource-blocked) — skip sorting entirely.
+        if fits.iter().all(|&f| f == 0) {
+            return 0;
+        }
+        let mut assigned: Vec<u32> = vec![0; nsms];
+        // SMs with room, ordered by the policy's preference. Keys are
+        // precomputed once (sorting with recomputed float keys dominated
+        // the event loop before — see EXPERIMENTS.md §Perf).
+        let mut idx: Vec<usize> = (0..nsms).filter(|&i| fits[i] > 0).collect();
+        match placement {
+            PlacementPolicy::MostRoom => {
+                idx.sort_by_cached_key(|&a| {
+                    let frac = self.sms[a].used.max_fraction_of(&self.sms[a].limits);
+                    (frac * 1e9) as u64
+                });
+            }
+            PlacementPolicy::LeastContention => {
+                idx.sort_by_cached_key(|&a| {
+                    let (_, other) = self.sms[a].threads_by_ctx(ctx);
+                    (other, self.sms[a].used.threads)
+                });
+            }
+        }
+        // Round-robin passes over the preference order ≈ most-room argmax;
+        // exhausted SMs drop out of the eligible list.
+        let mut left = want;
+        while left > 0 && !idx.is_empty() {
+            let mut w = 0;
+            for r in 0..idx.len() {
+                let s = idx[r];
+                if left == 0 {
+                    break;
+                }
+                fits[s] -= 1;
+                assigned[s] += 1;
+                left -= 1;
+                if fits[s] > 0 {
+                    idx[w] = s;
+                    w += 1;
+                }
+            }
+            idx.truncate(w.min(idx.len()));
+            if left > 0 && w == 0 {
+                break;
+            }
+        }
+        let mut placed = 0u32;
+        let other_running = self
+            .running_blocks
+            .iter()
+            .enumerate()
+            .any(|(c, &n)| c != ctx && n > 0);
+        for s in 0..nsms {
+            if assigned[s] == 0 {
+                continue;
+            }
+            let dur = if is_resume {
+                // A resumed chunk owes its frozen remaining time (already
+                // contention-stretched when first placed — never re-stretch,
+                // or repeated preempt/resume cycles would compound the
+                // factor) plus the state-restore latency.
+                let restore = self
+                    .preempt_cfg()
+                    .and_then(|p| p.fixed_restore_ns)
+                    .unwrap_or_else(|| self.cfg.cost.restore_ns(&self.cfg.dev, 1, 1.0));
+                resume_remaining.saturating_add(restore)
+            } else {
+                let factor = self
+                    .cfg
+                    .contention
+                    .factor(&self.cfg.dev, &self.sms[s], ctx, other_running);
+                ContentionModel::stretch(self.kernels[kid].base_block_dur, factor)
+            };
+            let id = CohortId(self.next_cohort);
+            self.next_cohort += 1;
+            let cohort = Cohort {
+                id,
+                ctx,
+                kernel: kid as u64,
+                blocks: assigned[s],
+                held: fp.times(assigned[s] as u64),
+                started: self.now,
+                remaining: dur,
+                state: BlockState::Running,
+                freeze_mode: FreezeMode::KeepAll,
+            };
+            self.sms[s].place(cohort);
+            self.running_blocks[ctx] += assigned[s];
+            self.events.push(self.now + dur, Ev::CohortDone { sm: s, id });
+            placed += assigned[s];
+        }
+        placed
+    }
+
+    fn on_cohort_done(&mut self, sm: usize, id: CohortId) {
+        // Staleness check: the cohort must still exist, be running, and be
+        // due exactly now (freeze/resume schedules a fresh event).
+        let valid = match self.sms[sm].get(id) {
+            Some(c) => c.state == BlockState::Running && c.finish_time() == self.now,
+            None => false,
+        };
+        if !valid {
+            return;
+        }
+        let cohort = self.sms[sm].remove(id);
+        let kid = cohort.kernel as usize;
+        let ctx = cohort.ctx;
+        self.running_blocks[ctx] -= cohort.blocks;
+        self.ctxs[ctx].threads_resident = self.ctxs[ctx]
+            .threads_resident
+            .saturating_sub(cohort.held.threads);
+        let kernel_done = {
+            let k = &mut self.kernels[kid];
+            k.inflight -= cohort.blocks;
+            k.finished += cohort.blocks;
+            debug_assert!(k.finished <= k.grid);
+            k.finished == k.grid
+        };
+        if kernel_done {
+            self.kernels[kid].done = true;
+            self.queue.retain(|&q| q != kid);
+            if self.cfg.record_ops && self.ctxs[ctx].is_inference {
+                self.report.ops.push(OpRecord {
+                    kind: OpKind::Kernel,
+                    issued: self.kernels[kid].issued_at,
+                    done: self.now,
+                    reference: self.kernels[kid].dur_iso,
+                });
+            }
+            if self.ctxs[ctx].state == CtxState::RunningKernel {
+                self.ctxs[ctx].state = CtxState::Idle;
+                self.events.push(self.now, Ev::Poll { ctx });
+            }
+        }
+        self.try_place();
+    }
+
+    // ------------------------------------------------------------------
+    // DMA transfers (O4)
+    // ------------------------------------------------------------------
+
+    fn transfer_eligible(&self, ctx: usize) -> bool {
+        if self.is_timeslicing() {
+            // A process's transfer commands only progress during its slice.
+            !self.in_switch_gap && ctx == self.active_ctx
+        } else {
+            true
+        }
+    }
+
+    fn enqueue_transfer(&mut self, chan: usize, ctx: usize, bytes: u64) {
+        self.channels[chan].queue.push_back(QueuedTransfer { ctx, bytes });
+        self.reeval_slicing();
+        self.pump_channel(chan);
+    }
+
+    fn transfer_ns(&self, bytes: u64) -> SimTime {
+        self.cfg.transfer_latency_ns
+            + (bytes as f64 / self.cfg.dev.pcie_bw_bytes_per_s as f64 * 1e9).ceil() as SimTime
+    }
+
+    /// Start the next eligible queued transfer if the channel is free.
+    fn pump_channel(&mut self, chan: usize) {
+        if self.channels[chan].active.is_some() {
+            return;
+        }
+        let pos = self.channels[chan]
+            .queue
+            .iter()
+            .position(|t| self.transfer_eligible(t.ctx));
+        let Some(pos) = pos else { return };
+        let t = self.channels[chan].queue.remove(pos).unwrap();
+        let dur = self.transfer_ns(t.bytes);
+        self.channels[chan].active = Some(ActiveTransfer {
+            ctx: t.ctx,
+            bytes_remaining: t.bytes,
+            expected_done: self.now + dur,
+            started: self.now,
+        });
+        self.events.push(self.now + dur, Ev::TransferDone { chan });
+    }
+
+    fn on_transfer_done(&mut self, chan: usize) {
+        let valid = self.channels[chan]
+            .active
+            .as_ref()
+            .is_some_and(|a| a.expected_done == self.now);
+        if !valid {
+            return;
+        }
+        let a = self.channels[chan].active.take().unwrap();
+        let ctx = a.ctx;
+        if self.cfg.record_ops && self.ctxs[ctx].is_inference {
+            self.report.ops.push(OpRecord {
+                kind: if chan == H2D {
+                    OpKind::TransferH2D
+                } else {
+                    OpKind::TransferD2H
+                },
+                issued: self.ctxs[ctx].op_issued,
+                done: self.now,
+                reference: a.bytes_remaining,
+            });
+        }
+        if self.ctxs[ctx].state == CtxState::Transferring {
+            self.ctxs[ctx].state = CtxState::Idle;
+            self.events.push(self.now, Ev::Poll { ctx });
+        }
+        self.pump_channel(chan);
+    }
+
+    /// Pause the active transfer on `chan` if its owner lost the slice.
+    fn pause_ineligible_transfer(&mut self, chan: usize) {
+        let should_pause = self.channels[chan]
+            .active
+            .as_ref()
+            .is_some_and(|a| !self.transfer_eligible(a.ctx));
+        if !should_pause {
+            return;
+        }
+        let a = self.channels[chan].active.take().unwrap();
+        // Compute remaining bytes from progress (latency excluded —
+        // conservative, transfers are restarted with fresh latency, which
+        // is part of the cross-process interference the paper observed).
+        let elapsed = self.now.saturating_sub(a.started) as f64;
+        let total = (a.expected_done - a.started) as f64;
+        let frac_left = if total > 0.0 { (1.0 - elapsed / total).max(0.0) } else { 0.0 };
+        let bytes_left = (a.bytes_remaining as f64 * frac_left).ceil() as u64;
+        self.channels[chan].queue.push_front(QueuedTransfer {
+            ctx: a.ctx,
+            bytes: bytes_left.max(1),
+        });
+        self.pump_channel(chan);
+    }
+
+    // ------------------------------------------------------------------
+    // Time-slicing (§4.2)
+    // ------------------------------------------------------------------
+
+    /// Does `ctx` currently have device work (kernels pending/in-flight or
+    /// transfers)? CPU gaps count (they are µs-scale); open-loop waits don't.
+    fn ctx_has_gpu_work(&self, ctx: usize) -> bool {
+        match self.ctxs[ctx].state {
+            CtxState::Done | CtxState::Waiting => false,
+            CtxState::Idle | CtxState::RunningKernel | CtxState::Transferring | CtxState::InGap => {
+                true
+            }
+        }
+    }
+
+    /// Re-evaluate the slicing state after any work-set change.
+    fn reeval_slicing(&mut self) {
+        if !self.is_timeslicing() || self.in_switch_gap {
+            return;
+        }
+        let workers: Vec<usize> = (0..self.ctxs.len())
+            .filter(|&c| self.ctx_has_gpu_work(c))
+            .collect();
+        match workers.len() {
+            0 => {
+                self.slicing = false;
+            }
+            1 => {
+                self.slicing = false;
+                if self.active_ctx != workers[0] {
+                    // sole worker takes over (pays the switch gap)
+                    self.begin_switch(workers[0]);
+                }
+            }
+            _ => {
+                if !self.slicing {
+                    self.slicing = true;
+                    self.slice_epoch += 1;
+                    let epoch = self.slice_epoch;
+                    self.events.push(
+                        self.now + self.cfg.dev.timeslice_ns,
+                        Ev::SliceExpire { epoch },
+                    );
+                }
+            }
+        }
+    }
+
+    fn begin_switch(&mut self, incoming: usize) {
+        let outgoing = self.active_ctx;
+        // Freeze the outgoing process's execution state. Default: the
+        // incoming process sees a clean device (O2 — no SM contention
+        // across slices). Strict mode keeps registers/shared memory
+        // resident (O3's hypothesis) to reproduce the crash experiment.
+        let mode = if self.cfg.strict_residency_oom {
+            FreezeMode::KeepMemOnly
+        } else {
+            FreezeMode::ReleaseAll
+        };
+        if outgoing != incoming {
+            let mut frozen_blocks = 0u32;
+            for s in 0..self.sms.len() {
+                for id in self.sms[s].freeze_ctx(outgoing, self.now, mode) {
+                    let c = self.sms[s].get(id).unwrap();
+                    frozen_blocks += c.blocks;
+                }
+            }
+            if frozen_blocks > 0 {
+                self.running_blocks[outgoing] -= frozen_blocks;
+            }
+            // exec-state threads leave the device during the freeze
+            let mut threads_frozen = 0u64;
+            for s in 0..self.sms.len() {
+                for c in &self.sms[s].cohorts {
+                    if c.ctx == outgoing && c.state == BlockState::Frozen {
+                        threads_frozen += c.held.threads;
+                    }
+                }
+            }
+            self.ctxs[outgoing].threads_resident = self.ctxs[outgoing]
+                .threads_resident
+                .saturating_sub(threads_frozen);
+        }
+        self.in_switch_gap = true;
+        self.slice_epoch += 1;
+        let epoch = self.slice_epoch;
+        self.events.push(
+            self.now + self.cfg.dev.slice_switch_gap_ns,
+            Ev::SliceStart {
+                ctx: incoming,
+                epoch,
+            },
+        );
+        for chan in 0..2 {
+            self.pause_ineligible_transfer(chan);
+        }
+    }
+
+    fn on_slice_expire(&mut self, epoch: u64) {
+        if !self.is_timeslicing() || epoch != self.slice_epoch || self.in_switch_gap {
+            return;
+        }
+        let n = self.ctxs.len();
+        // Round-robin: the next worker after the active context.
+        let next = (1..=n)
+            .map(|i| (self.active_ctx + i) % n)
+            .find(|&c| self.ctx_has_gpu_work(c));
+        match next {
+            Some(c) if c != self.active_ctx => self.begin_switch(c),
+            Some(_) => {
+                // only the active ctx has work: keep running, re-arm
+                self.slice_epoch += 1;
+                let e = self.slice_epoch;
+                self.events
+                    .push(self.now + self.cfg.dev.timeslice_ns, Ev::SliceExpire { epoch: e });
+            }
+            None => {
+                self.slicing = false;
+            }
+        }
+    }
+
+    fn on_slice_start(&mut self, ctx: usize, epoch: u64) {
+        if epoch != self.slice_epoch {
+            return;
+        }
+        self.in_switch_gap = false;
+        self.active_ctx = ctx;
+        // Resume the incoming process's frozen cohorts.
+        let mut resumed_blocks = 0u32;
+        let mut resumed_threads = 0u64;
+        for s in 0..self.sms.len() {
+            for (id, finish) in self.sms[s].resume_ctx(ctx, self.now) {
+                let c = self.sms[s].get(id).unwrap();
+                resumed_blocks += c.blocks;
+                resumed_threads += c.held.threads;
+                self.events.push(finish, Ev::CohortDone { sm: s, id });
+            }
+        }
+        self.running_blocks[ctx] += resumed_blocks;
+        self.ctxs[ctx].threads_resident += resumed_threads;
+        // Arm the next slice if more than one worker remains.
+        let workers = (0..self.ctxs.len())
+            .filter(|&c| self.ctx_has_gpu_work(c))
+            .count();
+        if workers > 1 {
+            self.slicing = true;
+            self.slice_epoch += 1;
+            let e = self.slice_epoch;
+            self.events
+                .push(self.now + self.cfg.dev.timeslice_ns, Ev::SliceExpire { epoch: e });
+        } else {
+            self.slicing = false;
+        }
+        for chan in 0..2 {
+            self.pump_channel(chan);
+        }
+        self.try_place();
+    }
+
+    // ------------------------------------------------------------------
+    // Fine-grained preemption (§5)
+    // ------------------------------------------------------------------
+
+    /// Reactive policy: a high-priority kernel placed nothing; free space by
+    /// preempting lower-priority resident cohorts (O7/O8).
+    fn reactive_preempt(&mut self, kid: usize) {
+        let Some(pc) = self.preempt_cfg() else { return };
+        let ctx = self.kernels[kid].ctx;
+        // only preempt on behalf of the *highest*-priority context
+        let my_prio = self.ctxs[ctx].priority;
+        if self.ctxs.iter().any(|c| c.priority > my_prio) {
+            return;
+        }
+        let needed = self.kernels[kid]
+            .pending_blocks()
+            .min(self.kernels[kid].occ.device_blocks);
+        self.preempt_for(kid, ctx, needed, pc);
+    }
+
+    /// O9: proactive preemption during a CPU gap (or transfer) of the
+    /// high-priority context, using kernel lookahead.
+    fn proactive_preempt(&mut self, ctx: usize, gap_ns: SimTime) {
+        let Some(pc) = self.preempt_cfg() else { return };
+        let PreemptPolicy::Proactive { hold_space } = pc.policy else {
+            return;
+        };
+        let my_prio = self.ctxs[ctx].priority;
+        if self.ctxs.iter().any(|c| c.priority > my_prio) {
+            return; // only the top-priority task pre-clears space
+        }
+        let Some(next) = self.ctxs[ctx].source.peek_kernel().cloned() else {
+            return;
+        };
+        let occ = Occupancy::compute(&self.cfg.dev, &next.res);
+        let first_wave = next.grid_blocks.min(occ.device_blocks);
+        // How many of those fit already?
+        let fp = next.res.block_footprint();
+        let fit_now: u32 = self.sms.iter().map(|s| s.fits_blocks(&fp)).sum();
+        // Reservation window: the cover period (current kernel/transfer/gap)
+        // plus slack for the launch gap that follows it.
+        let hold_until = self.now + gap_ns.max(50 * US) + 20 * US;
+        if fit_now >= first_wave {
+            if hold_space {
+                self.set_hold(ctx, hold_until);
+            }
+            return;
+        }
+        // Fake a kernel-shaped request for the victim search: we need space
+        // for (first_wave - fit_now) blocks of footprint fp.
+        let needed = first_wave - fit_now;
+        self.preempt_victims(ctx, &fp, needed, gap_ns);
+        if hold_space {
+            self.set_hold(ctx, hold_until);
+        }
+    }
+
+    fn set_hold(&mut self, ctx: usize, until: SimTime) {
+        self.hold = Some((ctx, until));
+        self.events.push(until, Ev::HoldExpire { at: until });
+    }
+
+    fn preempt_for(&mut self, kid: usize, ctx: usize, needed_blocks: u32, _pc: PreemptConfig) {
+        let fp = self.kernels[kid].fp;
+        self.preempt_victims(ctx, &fp, needed_blocks, 0);
+    }
+
+    /// Freeze enough lower-priority Running cohorts that `needed` blocks of
+    /// footprint `fp` will fit once their saves complete.
+    fn preempt_victims(&mut self, for_ctx: usize, fp: &ResourceVec, needed: u32, hide_ns: SimTime) {
+        // One save campaign at a time, with a cooldown: re-triggering on
+        // every scheduler event would escalate to freezing the whole
+        // device and thrash the victims (preempt/restore livelock).
+        if !self.saving.is_empty() {
+            return;
+        }
+        let cooldown = self.cfg.cost.save_ns(&self.cfg.dev, 1, 1.0);
+        if self.now > 0 && self.now < self.last_campaign + cooldown {
+            return;
+        }
+        self.last_campaign = self.now;
+        let flavor = self
+            .preempt_cfg()
+            .map(|p| p.flavor)
+            .unwrap_or(PreemptFlavor::ContextSave);
+        if flavor == PreemptFlavor::SmDraining {
+            // No interruption: reserve space by masking lower-priority
+            // placement until the kernel arrives (victims drain naturally).
+            self.set_hold(for_ctx, self.now + 2 * crate::sim::MS);
+            return;
+        }
+        let my_prio = self.ctxs[for_ctx].priority;
+        let save_ns = match flavor {
+            PreemptFlavor::SmFlushing => US, // kill signal, no state to move
+            _ => self
+                .preempt_cfg()
+                .and_then(|p| p.fixed_save_ns)
+                .unwrap_or_else(|| self.cfg.cost.save_ns(&self.cfg.dev, 1, 1.0)),
+        };
+        // Victim order: SMs with the most lower-priority threads first.
+        let mut order: Vec<usize> = (0..self.sms.len()).collect();
+        order.sort_by_key(|&s| {
+            let (_, other) = self.sms[s].threads_by_ctx(for_ctx);
+            std::cmp::Reverse(other)
+        });
+        let capacity = |free: &ResourceVec| -> u32 {
+            let per = |cap: u64, need: u64| if need == 0 { u64::MAX } else { cap / need };
+            per(free.threads, fp.threads)
+                .min(per(free.blocks, fp.blocks))
+                .min(per(free.regs, fp.regs))
+                .min(per(free.smem, fp.smem))
+                .min(u32::MAX as u64) as u32
+        };
+        // Projected post-save capacity across the device: current fits plus
+        // every frozen victim's contribution — so a campaign frees exactly
+        // enough, not the whole device.
+        let mut will_fit = 0u32;
+        'outer: for s in order {
+            let mut projected_free = self.sms[s].free();
+            let mut sm_cap = capacity(&projected_free);
+            will_fit += sm_cap;
+            if will_fit >= needed {
+                break;
+            }
+            let victims: Vec<CohortId> = self.sms[s]
+                .cohorts
+                .iter()
+                .filter(|c| {
+                    c.state == BlockState::Running
+                        && self.ctxs[c.ctx].priority < my_prio
+                        // preempting a block that finishes within the save
+                        // latency frees nothing sooner — skip it
+                        && c.remaining_at(self.now) > save_ns
+                })
+                .map(|c| c.id)
+                .collect();
+            for id in victims {
+                // freeze now; resources free when the save completes
+                let (blocks, held, vctx) = {
+                    let c = self.sms[s].get(id).unwrap();
+                    (c.blocks, c.held, c.ctx)
+                };
+                self.sms[s].freeze_one(id, self.now, FreezeMode::KeepAll);
+                self.running_blocks[vctx] -= blocks;
+                self.ctxs[vctx].threads_resident = self.ctxs[vctx]
+                    .threads_resident
+                    .saturating_sub(held.threads);
+                self.saving.push((id, self.now + save_ns));
+                self.events
+                    .push(self.now + save_ns, Ev::SaveDone { sm: s, id });
+                self.report.preemptions += 1;
+                self.report.total_save_ns += save_ns as u128;
+                self.report.hidden_save_ns += save_ns.min(hide_ns) as u128;
+                // account this victim's projected contribution
+                projected_free = projected_free.plus(&held);
+                let new_cap = capacity(&projected_free);
+                will_fit += new_cap - sm_cap;
+                sm_cap = new_cap;
+                if will_fit >= needed {
+                    break 'outer;
+                }
+            }
+        }
+    }
+
+    fn on_save_done(&mut self, sm: usize, id: CohortId) {
+        let pos = self
+            .saving
+            .iter()
+            .position(|&(cid, t)| cid == id && t == self.now);
+        let Some(pos) = pos else { return };
+        self.saving.swap_remove(pos);
+        let cohort = self.sms[sm].remove(id);
+        debug_assert_eq!(cohort.state, BlockState::Frozen);
+        let flavor = self
+            .preempt_cfg()
+            .map(|p| p.flavor)
+            .unwrap_or(PreemptFlavor::ContextSave);
+        let kid = cohort.kernel as usize;
+        let k = &mut self.kernels[kid];
+        k.inflight -= cohort.blocks;
+        let remaining = match flavor {
+            // Chimera-style flush: no state saved, blocks restart whole.
+            PreemptFlavor::SmFlushing => k.base_block_dur,
+            _ => cohort.remaining,
+        };
+        k.resume.push_back((cohort.blocks, remaining));
+        self.try_place();
+    }
+
+    // ------------------------------------------------------------------
+    // Occupancy sampling (O10)
+    // ------------------------------------------------------------------
+
+    fn maybe_sample_occupancy(&mut self) {
+        let Some(interval) = self.cfg.occupancy_sample_ns else {
+            return;
+        };
+        if self.now < self.next_occ_sample {
+            return;
+        }
+        self.next_occ_sample = self.now + interval;
+        let dev = &self.cfg.dev;
+        let mut used = ResourceVec::ZERO;
+        let mut active_sms = 0;
+        for sm in &self.sms {
+            used = used.plus(&sm.used);
+            if sm.cohorts.iter().any(|c| c.state == BlockState::Running) {
+                active_sms += 1;
+            }
+        }
+        let total = dev.sm_limits.times(dev.num_sms as u64);
+        self.report.occupancy.push(OccupancySample {
+            t: self.now,
+            thread_frac: used.threads as f64 / total.threads as f64,
+            reg_frac: used.regs as f64 / total.regs as f64,
+            smem_frac: used.smem as f64 / total.smem as f64,
+            block_frac: used.blocks as f64 / total.blocks as f64,
+            active_sms,
+        });
+    }
+
+    /// Test hook: validate all SM invariants.
+    #[cfg(test)]
+    fn check_all_sms(&self) {
+        for (i, sm) in self.sms.iter().enumerate() {
+            if let Err(e) = sm.check_invariants() {
+                panic!("SM {i} invariant violation at t={}: {e}", self.now);
+            }
+        }
+    }
+}
+
+/// Convenience: build and run in one call.
+pub fn run(cfg: EngineConfig, defs: Vec<CtxDef>) -> RunReport {
+    Engine::new(cfg, defs).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::MS;
+    use crate::util::rng::Rng;
+    use crate::workload::{ArrivalPattern, DlModel};
+
+    fn dev() -> DeviceConfig {
+        DeviceConfig::rtx3090()
+    }
+
+    fn infer_src(model: DlModel, requests: u32, seed: u64) -> Source {
+        Source::inference(
+            model.infer_profile().unwrap(),
+            dev(),
+            ArrivalPattern::ClosedLoop,
+            requests,
+            Rng::new(seed),
+        )
+    }
+
+    fn train_src(model: DlModel, steps: u32, seed: u64) -> Source {
+        Source::training(model.train_profile().unwrap(), dev(), steps, Rng::new(seed))
+    }
+
+    fn baseline_infer(model: DlModel, requests: u32) -> RunReport {
+        let cfg = EngineConfig::new(dev(), Mechanism::Baseline);
+        run(
+            cfg,
+            vec![CtxDef {
+                name: "infer".into(),
+                source: infer_src(model, requests, 1),
+                priority: 0,
+            }],
+        )
+    }
+
+    fn pair(mechanism: Mechanism, model: DlModel, requests: u32, steps: u32) -> RunReport {
+        let cfg = EngineConfig::new(dev(), mechanism);
+        run(
+            cfg,
+            vec![
+                CtxDef {
+                    name: "infer".into(),
+                    source: infer_src(model, requests, 1),
+                    priority: 0,
+                },
+                CtxDef {
+                    name: "train".into(),
+                    source: train_src(model, steps, 2),
+                    priority: -2,
+                },
+            ],
+        )
+    }
+
+    #[test]
+    fn baseline_completes_all_requests() {
+        let rep = baseline_infer(DlModel::AlexNet, 10);
+        assert!(rep.oom.is_none(), "{:?}", rep.oom);
+        assert_eq!(rep.requests.len(), 10);
+        assert!(rep.infer_done.is_some());
+        let s = rep.turnaround_summary();
+        assert!(s.mean > 0.0 && s.mean < 100.0, "mean={} ms", s.mean);
+    }
+
+    #[test]
+    fn baseline_training_completes() {
+        let cfg = EngineConfig::new(dev(), Mechanism::Baseline);
+        let rep = run(
+            cfg,
+            vec![CtxDef {
+                name: "train".into(),
+                source: train_src(DlModel::AlexNet, 5, 3),
+                priority: 0,
+            }],
+        );
+        assert!(rep.oom.is_none());
+        assert!(rep.train_done.is_some());
+        assert!(rep.requests.is_empty());
+    }
+
+    #[test]
+    fn all_mechanisms_complete_the_pair() {
+        for mech in [
+            Mechanism::PriorityStreams,
+            Mechanism::TimeSlicing,
+            Mechanism::mps_default(),
+            Mechanism::fine_grained_default(),
+        ] {
+            let rep = pair(mech.clone(), DlModel::AlexNet, 8, 4);
+            assert!(rep.oom.is_none(), "{}: {:?}", mech.name(), rep.oom);
+            assert_eq!(rep.requests.len(), 8, "{}", mech.name());
+            assert!(rep.train_done.is_some(), "{}", mech.name());
+        }
+    }
+
+    #[test]
+    fn concurrency_slows_inference_vs_baseline() {
+        let base = baseline_infer(DlModel::ResNet50, 12).mean_turnaround_ms();
+        for mech in [
+            Mechanism::PriorityStreams,
+            Mechanism::TimeSlicing,
+            Mechanism::mps_default(),
+        ] {
+            let rep = pair(mech.clone(), DlModel::ResNet50, 12, 20);
+            let t = rep.mean_turnaround_ms();
+            assert!(
+                t > base * 1.02,
+                "{}: concurrent {t:.3} ms not above baseline {base:.3} ms",
+                mech.name()
+            );
+        }
+    }
+
+    #[test]
+    fn timeslice_never_colocates() {
+        // Structural property: under time-slicing the running blocks on the
+        // device never belong to two contexts at once. We verify via the
+        // engine by stepping manually.
+        let cfg = EngineConfig::new(dev(), Mechanism::TimeSlicing);
+        let mut eng = Engine::new(
+            cfg,
+            vec![
+                CtxDef {
+                    name: "a".into(),
+                    source: infer_src(DlModel::AlexNet, 4, 7),
+                    priority: 0,
+                },
+                CtxDef {
+                    name: "b".into(),
+                    source: train_src(DlModel::AlexNet, 3, 8),
+                    priority: 0,
+                },
+            ],
+        );
+        for i in 0..eng.ctxs.len() {
+            eng.events.push(0, Ev::Poll { ctx: i });
+        }
+        let mut steps = 0u64;
+        while let Some((t, ev)) = eng.events.pop() {
+            eng.now = t;
+            match ev {
+                Ev::Poll { ctx } => eng.do_poll(ctx),
+                Ev::CohortDone { sm, id } => eng.on_cohort_done(sm, id),
+                Ev::TransferDone { chan } => eng.on_transfer_done(chan),
+                Ev::SliceExpire { epoch } => eng.on_slice_expire(epoch),
+                Ev::SliceStart { ctx, epoch } => eng.on_slice_start(ctx, epoch),
+                Ev::SaveDone { sm, id } => eng.on_save_done(sm, id),
+                Ev::HoldExpire { .. } => {
+                    eng.hold = None;
+                    eng.try_place();
+                }
+            }
+            eng.check_all_sms();
+            let running: Vec<usize> = (0..eng.ctxs.len())
+                .filter(|&c| eng.running_blocks[c] > 0)
+                .collect();
+            assert!(
+                running.len() <= 1,
+                "contexts {running:?} running concurrently under time-slicing at t={t}"
+            );
+            steps += 1;
+            if eng.ctxs.iter().all(|c| c.state == CtxState::Done) {
+                break;
+            }
+            assert!(steps < 20_000_000, "runaway simulation");
+        }
+        assert!(eng.ctxs.iter().all(|c| c.state == CtxState::Done));
+    }
+
+    #[test]
+    fn mps_thread_limit_enforced() {
+        let cfg = EngineConfig::new(dev(), Mechanism::Mps { thread_limit: 0.25 });
+        let mut eng = Engine::new(
+            cfg,
+            vec![
+                CtxDef {
+                    name: "a".into(),
+                    source: infer_src(DlModel::Vgg19, 3, 9),
+                    priority: 0,
+                },
+                CtxDef {
+                    name: "b".into(),
+                    source: train_src(DlModel::Vgg19, 2, 10),
+                    priority: 0,
+                },
+            ],
+        );
+        let cap = (0.25 * eng.cfg.dev.total_threads() as f64) as u64;
+        for i in 0..eng.ctxs.len() {
+            eng.events.push(0, Ev::Poll { ctx: i });
+        }
+        while let Some((t, ev)) = eng.events.pop() {
+            eng.now = t;
+            match ev {
+                Ev::Poll { ctx } => eng.do_poll(ctx),
+                Ev::CohortDone { sm, id } => eng.on_cohort_done(sm, id),
+                Ev::TransferDone { chan } => eng.on_transfer_done(chan),
+                Ev::SliceExpire { epoch } => eng.on_slice_expire(epoch),
+                Ev::SliceStart { ctx, epoch } => eng.on_slice_start(ctx, epoch),
+                Ev::SaveDone { sm, id } => eng.on_save_done(sm, id),
+                Ev::HoldExpire { .. } => {
+                    eng.hold = None;
+                    eng.try_place();
+                }
+            }
+            for c in &eng.ctxs {
+                assert!(
+                    c.threads_resident <= cap,
+                    "ctx '{}' resident {} > cap {cap}",
+                    c.name,
+                    c.threads_resident
+                );
+            }
+            if eng.ctxs.iter().all(|c| c.state == CtxState::Done) {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn fine_grained_preempts_and_requests_finish() {
+        let rep = pair(
+            Mechanism::fine_grained_default(),
+            DlModel::Vgg19,
+            6,
+            10,
+        );
+        assert!(rep.oom.is_none());
+        assert_eq!(rep.requests.len(), 6);
+        assert!(rep.preemptions > 0, "expected preemptions on VGG-19 pair");
+        assert!(rep.train_done.is_some());
+    }
+
+    #[test]
+    fn fine_grained_beats_streams_on_turnaround() {
+        // O7/O8: with preemption the inference task should see lower
+        // turnaround than priority streams on a long-kernel-heavy model.
+        let streams = pair(Mechanism::PriorityStreams, DlModel::Vgg19, 10, 16);
+        let fg = pair(Mechanism::fine_grained_default(), DlModel::Vgg19, 10, 16);
+        let ts = streams.mean_turnaround_ms();
+        let tf = fg.mean_turnaround_ms();
+        assert!(
+            tf < ts,
+            "fine-grained {tf:.3} ms !< streams {ts:.3} ms"
+        );
+    }
+
+    #[test]
+    fn dram_oversubscription_is_oom() {
+        // Two max-batch trainers: 17 GB + 18 GB > 24 GB.
+        let cfg = EngineConfig::new(dev(), Mechanism::TimeSlicing);
+        let rep = run(
+            cfg,
+            vec![
+                CtxDef {
+                    name: "t1".into(),
+                    source: train_src(DlModel::ResNet50, 2, 1),
+                    priority: 0,
+                },
+                CtxDef {
+                    name: "t2".into(),
+                    source: train_src(DlModel::ResNet152, 2, 2),
+                    priority: 0,
+                },
+            ],
+        );
+        assert!(rep.oom.is_some());
+        assert!(rep.requests.is_empty());
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let a = pair(Mechanism::mps_default(), DlModel::AlexNet, 6, 4);
+        let b = pair(Mechanism::mps_default(), DlModel::AlexNet, 6, 4);
+        assert_eq!(a.requests.len(), b.requests.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.completed, y.completed);
+        }
+        assert_eq!(a.train_done, b.train_done);
+        assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn record_ops_collects_kernels_and_transfers() {
+        let mut cfg = EngineConfig::new(dev(), Mechanism::Baseline);
+        cfg.record_ops = true;
+        let rep = run(
+            cfg,
+            vec![CtxDef {
+                name: "infer".into(),
+                source: infer_src(DlModel::ResNet34, 3, 4),
+                priority: 0,
+            }],
+        );
+        let kernels = rep.ops.iter().filter(|o| o.kind == OpKind::Kernel).count();
+        let transfers = rep.ops.iter().filter(|o| o.kind != OpKind::Kernel).count();
+        assert_eq!(kernels, 370 * 3);
+        // 24 mid + input + output per request
+        assert_eq!(transfers, 26 * 3);
+    }
+
+    #[test]
+    fn occupancy_sampling_produces_series() {
+        let mut cfg = EngineConfig::new(dev(), Mechanism::mps_default());
+        cfg.occupancy_sample_ns = Some(MS);
+        let rep = run(
+            cfg,
+            vec![
+                CtxDef {
+                    name: "i".into(),
+                    source: infer_src(DlModel::ResNet50, 4, 5),
+                    priority: 0,
+                },
+                CtxDef {
+                    name: "t".into(),
+                    source: train_src(DlModel::ResNet50, 4, 6),
+                    priority: -2,
+                },
+            ],
+        );
+        assert!(!rep.occupancy.is_empty());
+        for s in &rep.occupancy {
+            assert!(s.thread_frac <= 1.0 + 1e-9);
+            assert!(s.reg_frac <= 1.0 + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! The concurrency mechanisms under study (§2.2, Table 2) plus the paper's
+//! proposed fine-grained preemption (§5), expressed as engine configuration.
+
+use crate::sim::SimTime;
+
+/// Placement policy used by the hardware thread block scheduler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// NVIDIA's observed policy: next block goes to the SM with the most
+    /// free room (Gilman et al. 2020).
+    MostRoom,
+    /// Contention-aware variant (§5/O7): prefer SMs with the fewest
+    /// other-context threads, breaking ties by most room. Only meaningful
+    /// with the fine-grained mechanism — existing hardware cannot do this.
+    LeastContention,
+}
+
+/// *How* a victim block leaves the SM — the three preemption techniques of
+/// the temporal-multiplexing literature the paper builds on (§6):
+/// context save (Tanasic et al.'s context-switching; the paper's §5 cost
+/// model), SM draining (wait for victims to finish; Tanasic et al.), and
+/// SM flushing (kill without saving; Park et al.'s Chimera).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PreemptFlavor {
+    /// Save victim state to global memory (latency from the §5 cost model),
+    /// resume later with the remaining time + restore cost.
+    ContextSave,
+    /// Don't interrupt: reserve the space and let victims drain. Zero
+    /// direct cost, but the space frees only at victim completion.
+    SmDraining,
+    /// Kill instantly (≈1 µs): zero save cost, but victims restart from
+    /// scratch when re-placed — work is lost.
+    SmFlushing,
+}
+
+/// When the fine-grained mechanism preempts (§5, O8/O9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PreemptPolicy {
+    /// Preempt victims the moment a higher-priority kernel arrives and
+    /// cannot fully place (the straightforward strategy; pays the save
+    /// latency on the critical path).
+    Reactive,
+    /// Exploit the sequential-kernel structure: while the high-priority
+    /// context is in a CPU launch gap or transfer, look ahead at its next
+    /// kernel and preempt *now*, hiding the save latency (O9). Optionally
+    /// hold the freed space (don't refill with best-effort blocks) until
+    /// the kernel arrives.
+    Proactive { hold_space: bool },
+}
+
+/// Configuration of the proposed fine-grained preemption mechanism.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PreemptConfig {
+    pub policy: PreemptPolicy,
+    pub placement: PlacementPolicy,
+    pub flavor: PreemptFlavor,
+    /// If set, overrides the cost model's computed state-save latency.
+    pub fixed_save_ns: Option<SimTime>,
+    /// Restore latency when a preempted cohort is re-placed (state load).
+    /// Defaults to the save latency if `None`.
+    pub fixed_restore_ns: Option<SimTime>,
+}
+
+impl Default for PreemptConfig {
+    fn default() -> Self {
+        Self {
+            policy: PreemptPolicy::Reactive,
+            placement: PlacementPolicy::MostRoom,
+            flavor: PreemptFlavor::ContextSave,
+            fixed_save_ns: None,
+            fixed_restore_ns: None,
+        }
+    }
+}
+
+/// A concurrency mechanism (§2.2) as the engine runs it.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Mechanism {
+    /// Each task alone on the device — the comparison baseline (§3.1).
+    Baseline,
+    /// Both tasks in one process on different-priority CUDA streams (§4.1).
+    /// The inference context gets the higher priority.
+    PriorityStreams,
+    /// Separate processes, CUDA application-level round-robin time-slicing
+    /// (§4.2). Slice length and switch gap come from the device config.
+    TimeSlicing,
+    /// Multi-Process Service (§4.3) with a per-client thread limit as a
+    /// fraction of total device threads (the paper runs 1.0 = 100%).
+    Mps { thread_limit: f64 },
+    /// The paper's proposed fine-grained block-level preemption (§5),
+    /// layered on MPS-style spatial sharing with stream-style priorities.
+    FineGrained(PreemptConfig),
+    /// Static spatial partitioning (§6 related work: Adriaens et al.'s
+    /// GPGPU spatial multitasking; the MIG mechanism §2.2 notes is absent
+    /// on the 3090): the first context owns `ctx0_sms` SMs exclusively,
+    /// the second the remainder. No temporal interference, no sharing of
+    /// idle partitions.
+    Partitioned { ctx0_sms: u32 },
+}
+
+impl Mechanism {
+    pub fn mps_default() -> Mechanism {
+        Mechanism::Mps { thread_limit: 1.0 }
+    }
+
+    pub fn fine_grained_default() -> Mechanism {
+        Mechanism::FineGrained(PreemptConfig::default())
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mechanism::Baseline => "baseline",
+            Mechanism::PriorityStreams => "priority-streams",
+            Mechanism::TimeSlicing => "time-slicing",
+            Mechanism::Mps { .. } => "mps",
+            Mechanism::FineGrained(_) => "fine-grained",
+            Mechanism::Partitioned { .. } => "partitioned",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Mechanism> {
+        match s {
+            "baseline" => Some(Mechanism::Baseline),
+            "priority-streams" | "streams" => Some(Mechanism::PriorityStreams),
+            "time-slicing" | "timeslice" => Some(Mechanism::TimeSlicing),
+            "mps" => Some(Mechanism::mps_default()),
+            "fine-grained" | "preempt" => Some(Mechanism::fine_grained_default()),
+            "partitioned" | "mig" => Some(Mechanism::Partitioned { ctx0_sms: 41 }),
+            _ => None,
+        }
+    }
+
+    // ----- Table 2 capability matrix -----
+
+    /// Can the two applications live in separate OS processes?
+    pub fn separate_processes(&self) -> bool {
+        match self {
+            Mechanism::Baseline => true,
+            Mechanism::PriorityStreams => false, // same process, two streams
+            Mechanism::TimeSlicing => true,
+            Mechanism::Mps { .. } => true, // separate CUDA contexts via MPS server
+            Mechanism::FineGrained(_) => true,
+            Mechanism::Partitioned { .. } => true,
+        }
+    }
+
+    /// Can blocks of the two tasks be colocated on one SM at the same time?
+    pub fn colocation(&self) -> bool {
+        match self {
+            Mechanism::Baseline => false, // single task
+            Mechanism::PriorityStreams => true,
+            Mechanism::TimeSlicing => false, // never execute simultaneously
+            Mechanism::Mps { .. } => true,
+            Mechanism::FineGrained(_) => true,
+            Mechanism::Partitioned { .. } => false, // exclusive SM subsets
+        }
+    }
+
+    /// Can one task be prioritized over the other?
+    pub fn priorities(&self) -> bool {
+        match self {
+            Mechanism::Baseline => false,
+            Mechanism::PriorityStreams => true, // three levels, -2..0
+            Mechanism::TimeSlicing => false,    // fixed RR, unconfigurable
+            Mechanism::Mps { .. } => false,     // thread limits only
+            Mechanism::FineGrained(_) => true,
+            // partition sizes are a static priority of sorts, but no
+            // runtime prioritization exists
+            Mechanism::Partitioned { .. } => false,
+        }
+    }
+
+    /// Can an executing thread block be interrupted mid-execution?
+    pub fn preempts_blocks(&self) -> &'static str {
+        match self {
+            Mechanism::Baseline => "n/a",
+            Mechanism::PriorityStreams => "no (waits for running blocks)",
+            Mechanism::TimeSlicing => "coarse (entire GPU at slice boundary)",
+            Mechanism::Mps { .. } => "no (leftover policy, FCFS)",
+            Mechanism::FineGrained(_) => "yes (arbitrary block subsets)",
+            Mechanism::Partitioned { .. } => "n/a (no sharing to preempt)",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_matrix_matches_paper() {
+        let streams = Mechanism::PriorityStreams;
+        let ts = Mechanism::TimeSlicing;
+        let mps = Mechanism::mps_default();
+        // Row 1: priority streams — same process, colocation, priorities.
+        assert!(!streams.separate_processes());
+        assert!(streams.colocation());
+        assert!(streams.priorities());
+        // Row 2: time-slicing — separate processes, no colocation, no prio.
+        assert!(ts.separate_processes());
+        assert!(!ts.colocation());
+        assert!(!ts.priorities());
+        // Row 3: MPS — separate processes, colocation, no priorities.
+        assert!(mps.separate_processes());
+        assert!(mps.colocation());
+        assert!(!mps.priorities());
+    }
+
+    #[test]
+    fn fine_grained_subsumes_all_capabilities() {
+        let fg = Mechanism::fine_grained_default();
+        assert!(fg.separate_processes());
+        assert!(fg.colocation());
+        assert!(fg.priorities());
+        assert!(fg.preempts_blocks().starts_with("yes"));
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for m in [
+            Mechanism::Baseline,
+            Mechanism::PriorityStreams,
+            Mechanism::TimeSlicing,
+            Mechanism::mps_default(),
+            Mechanism::fine_grained_default(),
+        ] {
+            assert_eq!(Mechanism::from_name(m.name()).unwrap().name(), m.name());
+        }
+        assert!(Mechanism::from_name("bogus").is_none());
+    }
+}

@@ -1,0 +1,11 @@
+//! The NVIDIA scheduling hierarchy model (§2.1) and the concurrency
+//! mechanisms under study (§2.2/§4/§5): the engine, the mechanism
+//! definitions, and the contention model.
+
+pub mod contention;
+pub mod engine;
+pub mod mechanism;
+
+pub use contention::ContentionModel;
+pub use engine::{run, CtxDef, Engine, EngineConfig};
+pub use mechanism::{Mechanism, PlacementPolicy, PreemptConfig, PreemptFlavor, PreemptPolicy};

@@ -1,0 +1,43 @@
+//! Discrete-event simulation substrate: simulated time and a stable
+//! priority event queue. The GPU/scheduler semantics live in [`crate::sched`];
+//! this module is the domain-independent core.
+
+pub mod queue;
+
+pub use queue::EventQueue;
+
+/// Simulated time in nanoseconds. u64 gives ~584 years of range; all
+/// experiments run for simulated seconds-to-minutes.
+pub type SimTime = u64;
+
+/// One microsecond in [`SimTime`] units.
+pub const US: SimTime = 1_000;
+/// One millisecond in [`SimTime`] units.
+pub const MS: SimTime = 1_000_000;
+/// One second in [`SimTime`] units.
+pub const SEC: SimTime = 1_000_000_000;
+
+/// Convert [`SimTime`] to fractional milliseconds (reporting unit of the
+/// paper's turnaround figures).
+pub fn ns_to_ms(t: SimTime) -> f64 {
+    t as f64 / MS as f64
+}
+
+/// Convert [`SimTime`] to fractional seconds (reporting unit of the paper's
+/// training-time figures).
+pub fn ns_to_s(t: SimTime) -> f64 {
+    t as f64 / SEC as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_conversions() {
+        assert_eq!(ns_to_ms(2 * MS), 2.0);
+        assert_eq!(ns_to_s(3 * SEC), 3.0);
+        assert_eq!(1000 * US, MS);
+        assert_eq!(1000 * MS, SEC);
+    }
+}

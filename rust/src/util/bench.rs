@@ -1,0 +1,247 @@
+//! Minimal benchmarking harness (the `criterion` crate is not vendored in
+//! this offline environment).
+//!
+//! Provides warmup + multi-sample wall-clock measurement with median /
+//! MAD-based dispersion reporting, plus a tiny `black_box` to defeat
+//! constant folding. Used by `rust/benches/bench_perf.rs` and the §Perf
+//! iteration loop; the figure/table benches are *experiment drivers* and
+//! mostly report simulated time rather than wall time.
+
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from eliding a value. Stable-rust equivalent of
+/// `std::hint::black_box` (which we also call through to; kept as a wrapper
+/// so call sites read like criterion).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// One benchmark measurement result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Median wall time per iteration.
+    pub median: Duration,
+    /// Median absolute deviation.
+    pub mad: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+    /// Optional throughput item count per iteration (events, requests...).
+    pub items_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> Option<f64> {
+        self.items_per_iter
+            .map(|n| n as f64 / self.median.as_secs_f64())
+    }
+
+    pub fn report_line(&self) -> String {
+        let tput = match self.throughput_per_sec() {
+            Some(t) if t >= 1e6 => format!("  [{:.2} Mitems/s]", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  [{:.1} Kitems/s]", t / 1e3),
+            Some(t) => format!("  [{t:.1} items/s]"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} median {:>12?}  mad {:>10?}  ({} samples x {} iters){}",
+            self.name, self.median, self.mad, self.samples, self.iters_per_sample, tput
+        )
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub samples: usize,
+    /// Target time per sample; the harness calibrates iters/sample to this.
+    pub sample_target: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // GPUSHARE_BENCH_FAST=1 makes `cargo bench` runs cheap in CI.
+        let fast = std::env::var("GPUSHARE_BENCH_FAST").is_ok();
+        if fast {
+            Self {
+                warmup: Duration::from_millis(50),
+                samples: 5,
+                sample_target: Duration::from_millis(30),
+            }
+        } else {
+            Self {
+                warmup: Duration::from_millis(300),
+                samples: 15,
+                sample_target: Duration::from_millis(100),
+            }
+        }
+    }
+}
+
+/// The harness: collects named results, prints a summary.
+#[derive(Default)]
+pub struct Bencher {
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self {
+            cfg: BenchConfig::default(),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_config(cfg: BenchConfig) -> Self {
+        Self {
+            cfg,
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        self.bench_items(name, None, move |iters| {
+            for _ in 0..iters {
+                f();
+            }
+        })
+    }
+
+    /// Measure with a per-iteration item count for throughput reporting.
+    /// `f(iters)` must run the workload `iters` times.
+    pub fn bench_items(
+        &mut self,
+        name: &str,
+        items_per_iter: Option<u64>,
+        mut f: impl FnMut(u64),
+    ) -> &BenchResult {
+        // Warmup + calibration: figure out iters per sample.
+        let mut iters: u64 = 1;
+        let warm_start = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            f(iters);
+            let dt = t0.elapsed();
+            if warm_start.elapsed() >= self.cfg.warmup && dt >= Duration::from_micros(50) {
+                let scale = self.cfg.sample_target.as_secs_f64() / dt.as_secs_f64().max(1e-9);
+                iters = ((iters as f64 * scale).round() as u64).max(1);
+                break;
+            }
+            if dt < self.cfg.sample_target / 2 {
+                iters = iters.saturating_mul(2);
+            }
+        }
+        // Measurement.
+        let mut per_iter: Vec<Duration> = Vec::with_capacity(self.cfg.samples);
+        for _ in 0..self.cfg.samples {
+            let t0 = Instant::now();
+            f(iters);
+            per_iter.push(t0.elapsed() / iters as u32);
+        }
+        per_iter.sort();
+        let median = per_iter[per_iter.len() / 2];
+        let mut devs: Vec<Duration> = per_iter
+            .iter()
+            .map(|&d| if d > median { d - median } else { median - d })
+            .collect();
+        devs.sort();
+        let mad = devs[devs.len() / 2];
+        let res = BenchResult {
+            name: name.to_string(),
+            median,
+            mad,
+            min: per_iter[0],
+            max: *per_iter.last().unwrap(),
+            samples: self.cfg.samples,
+            iters_per_sample: iters,
+            items_per_iter,
+        };
+        println!("{}", res.report_line());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write results as CSV for the §Perf before/after log.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("name,median_ns,mad_ns,min_ns,max_ns,samples,iters,throughput_per_s\n");
+        for r in &self.results {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{}\n",
+                r.name,
+                r.median.as_nanos(),
+                r.mad.as_nanos(),
+                r.min.as_nanos(),
+                r.max.as_nanos(),
+                r.samples,
+                r.iters_per_sample,
+                r.throughput_per_sec().map(|t| format!("{t:.1}")).unwrap_or_default()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(1),
+            samples: 3,
+            sample_target: Duration::from_millis(2),
+        }
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher::with_config(tiny_cfg());
+        let r = b.bench("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(r.median > Duration::ZERO);
+        assert_eq!(r.samples, 3);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut b = Bencher::with_config(tiny_cfg());
+        let r = b.bench_items("items", Some(1000), |iters| {
+            for _ in 0..iters {
+                let mut s = 0u64;
+                for i in 0..1000u64 {
+                    s = s.wrapping_add(black_box(i));
+                }
+                black_box(s);
+            }
+        });
+        assert!(r.throughput_per_sec().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        let mut b = Bencher::with_config(tiny_cfg());
+        b.bench("a", || {
+            black_box(1 + 1);
+        });
+        b.bench("b", || {
+            black_box(2 + 2);
+        });
+        let csv = b.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+    }
+}

@@ -1,0 +1,182 @@
+//! Minimal command-line argument parser (the `clap` crate is not available
+//! in this offline environment). Supports `--flag`, `--key value`,
+//! `--key=value`, and positional arguments, with typed accessors and a
+//! generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec used only for `usage()` rendering.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed argument bag.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    program: String,
+    flags: Vec<String>,
+    kv: BTreeMap<String, String>,
+    positional: Vec<String>,
+    specs: Vec<OptSpec>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()`.
+    pub fn from_env() -> Self {
+        let v: Vec<String> = std::env::args().collect();
+        Self::parse(&v)
+    }
+
+    /// Parse from an explicit argv (index 0 is the program name).
+    pub fn parse(argv: &[String]) -> Self {
+        let mut out = Args {
+            program: argv.first().cloned().unwrap_or_default(),
+            ..Default::default()
+        };
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.kv.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.kv.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Register an option for `usage()`; returns self for chaining.
+    pub fn describe(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.specs.push(OptSpec { name, help, default });
+        self
+    }
+
+    pub fn program(&self) -> &str {
+        &self.program
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get_u64(key, default as u64) as usize
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Render a usage string from the registered specs.
+    pub fn usage(&self, about: &str) -> String {
+        let mut out = format!("{about}\n\nUSAGE: {} [OPTIONS]\n\nOPTIONS:\n", self.program);
+        for s in &self.specs {
+            let d = s
+                .default
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            out.push_str(&format!("  --{:<18} {}{}\n", s.name, s.help, d));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_both_styles() {
+        let a = Args::parse(&argv(&["prog", "--seed", "42", "--model=resnet50"]));
+        assert_eq!(a.get_u64("seed", 0), 42);
+        assert_eq!(a.get("model"), Some("resnet50"));
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        // NB: `--key value` is greedy, so flags must not be followed by a
+        // bare value ("--verbose trace.csv" would parse as verbose=trace.csv).
+        let a = Args::parse(&argv(&["prog", "run", "trace.csv", "--verbose"]));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional(), &["run".to_string(), "trace.csv".to_string()]);
+    }
+
+    #[test]
+    fn trailing_flag_is_flag_not_kv() {
+        let a = Args::parse(&argv(&["prog", "--fast"]));
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.get("fast"), None);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(&argv(&["prog", "--a", "--b", "3"]));
+        assert!(a.has_flag("a"));
+        assert_eq!(a.get_u64("b", 0), 3);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv(&["prog"]));
+        assert_eq!(a.get_or("mech", "mps"), "mps");
+        assert_eq!(a.get_f64("lambda", 1.5), 1.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_int_panics() {
+        let a = Args::parse(&argv(&["prog", "--n", "abc"]));
+        a.get_u64("n", 0);
+    }
+
+    #[test]
+    fn usage_lists_specs() {
+        let a = Args::parse(&argv(&["prog"]))
+            .describe("seed", "RNG seed", Some("42"))
+            .describe("verbose", "chatty output", None);
+        let u = a.usage("demo tool");
+        assert!(u.contains("--seed"));
+        assert!(u.contains("default: 42"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Utility substrates built in-crate because the offline environment only
+//! ships the vendor set from /opt/xla-example (no rand/clap/criterion/
+//! proptest). See DESIGN.md §2 "Dependency reality".
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

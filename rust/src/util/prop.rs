@@ -1,0 +1,242 @@
+//! A small property-based testing framework (the `proptest` crate is not
+//! vendored in this offline environment).
+//!
+//! Design: a [`Gen`] wraps the crate RNG and produces random structured
+//! inputs; [`run_prop`] executes a property over `n` cases and, on failure,
+//! re-reports the case index and seed so the exact failing input can be
+//! reproduced by re-running with that seed. A lightweight shrink pass for
+//! integer-vector inputs is provided via [`shrink_vec`].
+//!
+//! Used by `rust/tests/properties.rs` for the scheduler/coordinator
+//! invariants DESIGN.md §9 lists.
+
+use super::rng::Rng;
+
+/// Random-input generator handle passed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint: properties should scale their structures with this, which
+    /// ramps from small to large over the case sequence (like proptest).
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Self {
+            rng: Rng::new(seed),
+            size,
+        }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// A vector with length in `[0, max_len]`, elements from `f`.
+    pub fn vec_of<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.usize(0, max_len);
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Pick one of the provided items.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        let i = self.usize(0, xs.len() - 1);
+        &xs[i]
+    }
+}
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Convenience macro-free assertion helpers for properties.
+pub fn check(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn check_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, ctx: &str) -> PropResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a:?} != {b:?}"))
+    }
+}
+
+pub fn check_le<T: PartialOrd + std::fmt::Debug>(a: T, b: T, ctx: &str) -> PropResult {
+    if a <= b {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a:?} > {b:?}"))
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub base_seed: u64,
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // Allow CI to scale the case count without editing tests.
+        let cases = std::env::var("GPUSHARE_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Self {
+            cases,
+            base_seed: 0x9e3779b97f4a7c15,
+            max_size: 40,
+        }
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases. Panics (test failure) with the
+/// seed and case number on the first failing case.
+pub fn run_prop(name: &str, cfg: PropConfig, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    for case in 0..cfg.cases {
+        let seed = cfg
+            .base_seed
+            .wrapping_add((case as u64).wrapping_mul(0x2545F4914F6CDD1D));
+        // Size ramps up over the run so early failures are small inputs.
+        let size = 2 + (cfg.max_size.saturating_sub(2)) * case / cfg.cases.max(1);
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case}/{} (seed={seed:#x}, size={size}):\n  {msg}\n\
+                 reproduce with Gen::new({seed:#x}, {size})",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Greedy shrink for vector-shaped counterexamples: repeatedly tries
+/// removing chunks and halving elements while the predicate still fails.
+/// `fails` returns true if the input still triggers the bug.
+pub fn shrink_vec<T: Clone>(
+    mut input: Vec<T>,
+    mut fails: impl FnMut(&[T]) -> bool,
+    mut half: impl FnMut(&T) -> Option<T>,
+) -> Vec<T> {
+    // Pass 1: chunk removal.
+    let mut chunk = input.len() / 2;
+    while chunk >= 1 {
+        let mut i = 0;
+        while i + chunk <= input.len() {
+            let mut candidate = input.clone();
+            candidate.drain(i..i + chunk);
+            if fails(&candidate) {
+                input = candidate;
+            } else {
+                i += chunk;
+            }
+        }
+        chunk /= 2;
+    }
+    // Pass 2: element-wise halving.
+    let mut progress = true;
+    while progress {
+        progress = false;
+        for i in 0..input.len() {
+            if let Some(smaller) = half(&input[i]) {
+                let mut candidate = input.clone();
+                candidate[i] = smaller;
+                if fails(&candidate) {
+                    input = candidate;
+                    progress = true;
+                }
+            }
+        }
+    }
+    input
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        run_prop("sum-commutes", PropConfig { cases: 50, ..Default::default() }, |g| {
+            let a = g.u64(0, 1000);
+            let b = g.u64(0, 1000);
+            check_eq(a + b, b + a, "commutativity")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        run_prop(
+            "always-fails",
+            PropConfig { cases: 5, ..Default::default() },
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        run_prop("collect", PropConfig { cases: 10, ..Default::default() }, |g| {
+            first.push(g.u64(0, u64::MAX - 1));
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        run_prop("collect", PropConfig { cases: 10, ..Default::default() }, |g| {
+            second.push(g.u64(0, u64::MAX - 1));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn shrink_vec_finds_minimal_trigger() {
+        // Bug triggers iff the vec contains an element >= 10.
+        let input = vec![3u64, 15, 7, 200, 1];
+        let shrunk = shrink_vec(
+            input,
+            |xs| xs.iter().any(|&x| x >= 10),
+            |&x| if x > 0 { Some(x / 2) } else { None },
+        );
+        // Minimal failing input is a single element == 10..19 range after halving.
+        assert_eq!(shrunk.len(), 1);
+        assert!(shrunk[0] >= 10 && shrunk[0] < 20, "shrunk={shrunk:?}");
+    }
+
+    #[test]
+    fn gen_vec_of_respects_bounds() {
+        let mut g = Gen::new(1, 10);
+        for _ in 0..100 {
+            let v = g.vec_of(5, |g| g.u64(0, 9));
+            assert!(v.len() <= 5);
+            assert!(v.iter().all(|&x| x < 10));
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! Console-table and CSV rendering for bench output.
+//!
+//! Every bench target prints the same rows/series the paper's tables and
+//! figures report, both as an aligned console table and as a CSV file under
+//! `bench_out/` so the series can be re-plotted.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// An aligned console table with a CSV twin.
+#[derive(Clone, Debug)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: headers
+                .iter()
+                .enumerate()
+                .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+                .collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn with_aligns(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience for building a row from display-able values.
+    pub fn rowd<D: std::fmt::Display>(&mut self, cells: &[D]) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells)
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render the aligned console form.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let total: usize = widths.iter().sum::<usize>() + 3 * ncols + 1;
+        let _ = writeln!(out, "\n== {} ==", self.title);
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        let fmt_row = |out: &mut String, cells: &[String], widths: &[usize], aligns: &[Align]| {
+            let mut line = String::from("|");
+            for ((cell, w), a) in cells.iter().zip(widths).zip(aligns) {
+                match a {
+                    Align::Left => line.push_str(&format!(" {:<w$} |", cell, w = w)),
+                    Align::Right => line.push_str(&format!(" {:>w$} |", cell, w = w)),
+                }
+            }
+            let _ = writeln!(out, "{line}");
+        };
+        fmt_row(&mut out, &self.headers, &widths, &self.aligns);
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            fmt_row(&mut out, row, &widths, &self.aligns);
+        }
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        out
+    }
+
+    /// Render CSV (RFC-4180-ish quoting: quotes only when needed).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    /// Print to stdout and persist the CSV twin under `dir/<slug>.csv`.
+    pub fn emit(&self, dir: &Path) {
+        print!("{}", self.render());
+        self.emit_csv_only(dir);
+    }
+
+    /// Persist only the CSV (for large per-request/per-op series that
+    /// would flood the console).
+    pub fn emit_csv_only(&self, dir: &Path) {
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            eprintln!("warn: cannot create {}: {e}", dir.display());
+            return;
+        }
+        let slug: String = self
+            .title
+            .to_lowercase()
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c } else { '_' })
+            .collect();
+        let path = dir.join(format!("{slug}.csv"));
+        match std::fs::File::create(&path) {
+            Ok(mut f) => {
+                let _ = f.write_all(self.to_csv().as_bytes());
+                println!("[csv] {} ({} rows)", path.display(), self.rows.len());
+            }
+            Err(e) => eprintln!("warn: cannot write {}: {e}", path.display()),
+        }
+    }
+}
+
+/// Format nanoseconds human-readably (ns/µs/ms/s autoselect).
+pub fn fmt_ns(ns: u64) -> String {
+    let f = ns as f64;
+    if f < 1e3 {
+        format!("{ns}ns")
+    } else if f < 1e6 {
+        format!("{:.2}us", f / 1e3)
+    } else if f < 1e9 {
+        format!("{:.3}ms", f / 1e6)
+    } else {
+        format!("{:.3}s", f / 1e9)
+    }
+}
+
+/// Format a float with fixed precision, NaN-safe.
+pub fn fmt_f(x: f64, prec: usize) -> String {
+    if x.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{:.*}", prec, x)
+    }
+}
+
+/// Default output directory for bench CSVs.
+pub fn bench_out_dir() -> std::path::PathBuf {
+    std::env::var("GPUSHARE_BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("bench_out"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["model", "value"]);
+        t.row(&["resnet50".into(), "12.5".into()]);
+        t.row(&["a".into(), "3".into()]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("resnet50"));
+        // column width consistency: every data line has same length
+        let lines: Vec<&str> = r.lines().filter(|l| l.starts_with('|')).collect();
+        assert!(lines.windows(2).all(|w| w[0].len() == w[1].len()));
+    }
+
+    #[test]
+    fn csv_quotes_only_when_needed() {
+        let mut t = Table::new("q", &["a", "b"]);
+        t.row(&["x,y".into(), "plain".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\",plain"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new("bad", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(12), "12ns");
+        assert_eq!(fmt_ns(1_500), "1.50us");
+        assert_eq!(fmt_ns(2_000_000), "2.000ms");
+        assert_eq!(fmt_ns(3_000_000_000), "3.000s");
+    }
+}

@@ -1,0 +1,124 @@
+//! Inference request arrival processes (§3.1): the paper drives the
+//! inference task either with MLPerf *single-stream* semantics (each request
+//! issued the moment the previous completes — a closed loop) or *server*
+//! semantics (arrivals follow a Poisson process and queue).
+
+use crate::sim::SimTime;
+use crate::util::rng::Rng;
+
+/// Request arrival pattern.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalPattern {
+    /// MLPerf single-stream: closed loop, zero think time.
+    ClosedLoop,
+    /// MLPerf server mode: open-loop Poisson arrivals with the given mean
+    /// inter-arrival time.
+    Poisson { mean_interarrival: SimTime },
+}
+
+impl ArrivalPattern {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalPattern::ClosedLoop => "single-stream",
+            ArrivalPattern::Poisson { .. } => "server",
+        }
+    }
+}
+
+/// Stateful arrival generator: yields each request's arrival time.
+#[derive(Clone, Debug)]
+pub struct ArrivalGen {
+    pattern: ArrivalPattern,
+    /// Time of the most recent arrival (Poisson) — the process is memoryless
+    /// so we only need the previous point.
+    last_arrival: SimTime,
+    issued: u64,
+}
+
+impl ArrivalGen {
+    pub fn new(pattern: ArrivalPattern) -> Self {
+        Self {
+            pattern,
+            last_arrival: 0,
+            issued: 0,
+        }
+    }
+
+    pub fn pattern(&self) -> ArrivalPattern {
+        self.pattern
+    }
+
+    pub fn issued(&self) -> u64 {
+        self.issued
+    }
+
+    /// Arrival time of the next request, given the completion time of the
+    /// previous one (`prev_done`, used by the closed loop).
+    ///
+    /// Closed loop: arrives exactly at `prev_done`. Poisson: arrives at the
+    /// next point of the process, independent of completions (a queue forms
+    /// when the service is slower than arrivals).
+    pub fn next_arrival(&mut self, prev_done: SimTime, rng: &mut Rng) -> SimTime {
+        self.issued += 1;
+        match self.pattern {
+            ArrivalPattern::ClosedLoop => {
+                self.last_arrival = prev_done;
+                prev_done
+            }
+            ArrivalPattern::Poisson { mean_interarrival } => {
+                let gap = rng.exponential(mean_interarrival as f64).max(0.0) as SimTime;
+                self.last_arrival += gap;
+                self.last_arrival
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::MS;
+
+    #[test]
+    fn closed_loop_tracks_completions() {
+        let mut g = ArrivalGen::new(ArrivalPattern::ClosedLoop);
+        let mut rng = Rng::new(1);
+        assert_eq!(g.next_arrival(0, &mut rng), 0);
+        assert_eq!(g.next_arrival(12_345, &mut rng), 12_345);
+        assert_eq!(g.issued(), 2);
+    }
+
+    #[test]
+    fn poisson_is_monotone_and_ignores_completions() {
+        let mut g = ArrivalGen::new(ArrivalPattern::Poisson {
+            mean_interarrival: 10 * MS,
+        });
+        let mut rng = Rng::new(2);
+        let mut prev = 0;
+        for _ in 0..1000 {
+            // completions wildly in the future must not drag arrivals
+            let a = g.next_arrival(999_999_999_999, &mut rng);
+            assert!(a >= prev);
+            prev = a;
+        }
+    }
+
+    #[test]
+    fn poisson_mean_interarrival_close() {
+        let mean = 10 * MS;
+        let mut g = ArrivalGen::new(ArrivalPattern::Poisson {
+            mean_interarrival: mean,
+        });
+        let mut rng = Rng::new(3);
+        let n = 20_000;
+        let mut last = 0;
+        for _ in 0..n {
+            last = g.next_arrival(0, &mut rng);
+        }
+        let avg = last as f64 / n as f64;
+        assert!(
+            (avg - mean as f64).abs() < mean as f64 * 0.05,
+            "avg={avg} mean={mean}"
+        );
+    }
+}

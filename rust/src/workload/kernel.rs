@@ -1,0 +1,217 @@
+//! Kernel and operation model. A deep-learning task is a *serial* sequence
+//! of operations — kernel launches, host↔device transfers, and CPU-side
+//! launch gaps (§3.2: "a deep learning model consists of a sequence of
+//! kernels that are launched onto the GPU serially").
+
+use crate::gpu::{DeviceConfig, KernelRes, Occupancy};
+use crate::sim::{SimTime, MS};
+
+/// A kernel launch: grid geometry, per-block resources, and the execution
+/// time of the whole kernel when run on an otherwise-idle device.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KernelSpec {
+    /// Workload-class tag for reporting (e.g. "conv-sgemm", "bn-elementwise").
+    pub class: &'static str,
+    /// Number of thread blocks in the grid.
+    pub grid_blocks: u32,
+    /// Per-block resource requirements.
+    pub res: KernelRes,
+    /// Isolated whole-kernel execution time on the target device.
+    pub dur_iso: SimTime,
+}
+
+impl KernelSpec {
+    /// §3.2: long-running = takes > 1 ms when executed in isolation.
+    pub const LONG_RUNNING_NS: SimTime = MS;
+
+    pub fn is_long_running(&self) -> bool {
+        self.dur_iso > Self::LONG_RUNNING_NS
+    }
+
+    /// Occupancy of this kernel on `dev`.
+    pub fn occupancy(&self, dev: &DeviceConfig) -> Occupancy {
+        Occupancy::compute(dev, &self.res)
+    }
+
+    /// §3.2: large = grid cannot fully reside on the device.
+    pub fn is_large(&self, dev: &DeviceConfig) -> bool {
+        self.occupancy(dev).is_large(self.grid_blocks)
+    }
+
+    /// Per-wave (= per-block, since blocks of a wave run concurrently)
+    /// execution time such that running `waves` full-device waves serially
+    /// reproduces `dur_iso`. Every block of the kernel is assumed uniform —
+    /// the paper reasons about kernels as units with a single runtime.
+    pub fn block_dur(&self, dev: &DeviceConfig) -> SimTime {
+        let occ = self.occupancy(dev);
+        let waves = occ.waves(self.grid_blocks).max(1);
+        if waves == u32::MAX {
+            // Kernel cannot run on this device at all; callers must have
+            // rejected it earlier (admission check).
+            return self.dur_iso;
+        }
+        (self.dur_iso / waves as u64).max(1)
+    }
+}
+
+/// One operation in a task's serial program.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    Kernel(KernelSpec),
+    /// Host→device transfer (input batches, parameter updates...).
+    TransferH2D { bytes: u64 },
+    /// Device→host transfer (logits, metrics...).
+    TransferD2H { bytes: u64 },
+    /// CPU-side delay before the next op reaches the GPU — the window in
+    /// which compounded delay (O1) develops.
+    CpuGap { ns: SimTime },
+}
+
+impl Op {
+    pub fn kernel(&self) -> Option<&KernelSpec> {
+        match self {
+            Op::Kernel(k) => Some(k),
+            _ => None,
+        }
+    }
+
+    pub fn is_transfer(&self) -> bool {
+        matches!(self, Op::TransferH2D { .. } | Op::TransferD2H { .. })
+    }
+
+    pub fn transfer_bytes(&self) -> Option<u64> {
+        match self {
+            Op::TransferH2D { bytes } | Op::TransferD2H { bytes } => Some(*bytes),
+            _ => None,
+        }
+    }
+}
+
+/// Summary characteristics of an op sequence — the quantities Table 1
+/// reports per task.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceStats {
+    pub total_kernels: u64,
+    pub large_kernels: u64,
+    pub long_running_kernels: u64,
+    /// Total isolated kernel runtime.
+    pub kernel_ns: u128,
+    /// Isolated runtime spent in long-running kernels.
+    pub long_running_ns: u128,
+    pub transfers: u64,
+    pub transfer_bytes: u64,
+    pub cpu_gap_ns: u128,
+}
+
+impl TraceStats {
+    pub fn accumulate(&mut self, op: &Op, dev: &DeviceConfig) {
+        match op {
+            Op::Kernel(k) => {
+                self.total_kernels += 1;
+                self.kernel_ns += k.dur_iso as u128;
+                if k.is_large(dev) {
+                    self.large_kernels += 1;
+                }
+                if k.is_long_running() {
+                    self.long_running_kernels += 1;
+                    self.long_running_ns += k.dur_iso as u128;
+                }
+            }
+            Op::TransferH2D { bytes } | Op::TransferD2H { bytes } => {
+                self.transfers += 1;
+                self.transfer_bytes += bytes;
+            }
+            Op::CpuGap { ns } => self.cpu_gap_ns += *ns as u128,
+        }
+    }
+
+    pub fn of(ops: &[Op], dev: &DeviceConfig) -> TraceStats {
+        let mut s = TraceStats::default();
+        for op in ops {
+            s.accumulate(op, dev);
+        }
+        s
+    }
+
+    /// Table 1 column: % of kernel runtime spent in long-running kernels.
+    pub fn long_running_runtime_pct(&self) -> f64 {
+        if self.kernel_ns == 0 {
+            return 0.0;
+        }
+        self.long_running_ns as f64 / self.kernel_ns as f64 * 100.0
+    }
+
+    /// Table 1 column: % of kernels that are large.
+    pub fn large_kernel_pct(&self) -> f64 {
+        if self.total_kernels == 0 {
+            return 0.0;
+        }
+        self.large_kernels as f64 / self.total_kernels as f64 * 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::US;
+
+    fn dev() -> DeviceConfig {
+        DeviceConfig::rtx3090()
+    }
+
+    fn k(grid: u32, dur: SimTime) -> KernelSpec {
+        KernelSpec {
+            class: "test",
+            grid_blocks: grid,
+            res: KernelRes::new(256, 32, 0), // 492 device blocks
+            dur_iso: dur,
+        }
+    }
+
+    #[test]
+    fn long_running_threshold() {
+        assert!(!k(1, MS).is_long_running());
+        assert!(k(1, MS + 1).is_long_running());
+    }
+
+    #[test]
+    fn large_definition() {
+        assert!(!k(492, US).is_large(&dev()));
+        assert!(k(493, US).is_large(&dev()));
+    }
+
+    #[test]
+    fn block_dur_divides_by_waves() {
+        // 984 blocks = 2 waves, so each wave is half the isolated runtime.
+        let kk = k(984, 100 * US);
+        assert_eq!(kk.block_dur(&dev()), 50 * US);
+        // single-wave kernel: block dur == kernel dur
+        let kk = k(100, 100 * US);
+        assert_eq!(kk.block_dur(&dev()), 100 * US);
+    }
+
+    #[test]
+    fn block_dur_never_zero() {
+        let kk = k(493 * 100, 10); // absurdly many waves
+        assert!(kk.block_dur(&dev()) >= 1);
+    }
+
+    #[test]
+    fn trace_stats_match_table1_columns() {
+        let ops = vec![
+            Op::Kernel(k(1, 3 * MS)),     // long, small
+            Op::Kernel(k(1000, 500 * US)), // short, large
+            Op::Kernel(k(10, 500 * US)),  // short, small
+            Op::TransferH2D { bytes: 1024 },
+            Op::CpuGap { ns: 5 * US },
+        ];
+        let s = TraceStats::of(&ops, &dev());
+        assert_eq!(s.total_kernels, 3);
+        assert_eq!(s.large_kernels, 1);
+        assert_eq!(s.long_running_kernels, 1);
+        assert!((s.large_kernel_pct() - 100.0 / 3.0).abs() < 1e-9);
+        assert!((s.long_running_runtime_pct() - 75.0).abs() < 1e-9);
+        assert_eq!(s.transfers, 1);
+        assert_eq!(s.transfer_bytes, 1024);
+    }
+}

@@ -1,0 +1,15 @@
+//! Deep-learning workload model (§3): kernel and op definitions, the
+//! Table-1-calibrated per-model trace generators, arrival processes, and
+//! the op sources the engine polls.
+
+pub mod arrival;
+pub mod kernel;
+pub mod mix;
+pub mod models;
+pub mod source;
+
+pub use arrival::{ArrivalGen, ArrivalPattern};
+pub use kernel::{KernelSpec, Op, TraceStats};
+pub use mix::{KernelClass, KernelMix};
+pub use models::{DlModel, Role, TaskProfile};
+pub use source::{Source, SourceOut};

@@ -1,0 +1,395 @@
+//! The eight deep-learning workloads of Table 1, as calibrated trace
+//! generators.
+//!
+//! Per-model parameters come straight from the paper:
+//! * kernels per inference request = Table 1 total inference kernels ÷ the
+//!   5000 requests of the single-stream protocol;
+//! * the % of kernels that are *large* and the % of training runtime in
+//!   *long-running* kernels are Table 1 columns, fed to
+//!   [`KernelMix::calibrated`];
+//! * ResNet-34's outsized memory-transfer time (Fig 6 / O4) is modeled as
+//!   per-request intermediate H2D/D2H transfers;
+//! * batch sizes set the training step's input-transfer volume and DRAM
+//!   footprint (max-batch training nearly fills the 24 GB device — the O3
+//!   premise).
+
+use super::kernel::Op;
+use super::mix::KernelMix;
+use crate::gpu::DeviceConfig;
+use crate::sim::{SimTime, US};
+use crate::util::rng::Rng;
+
+/// The models studied by the paper (Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DlModel {
+    ResNet50,
+    ResNet152,
+    AlexNet,
+    Vgg19,
+    DenseNet201,
+    /// MLPerf TensorFlow, inference only.
+    ResNet34,
+    /// MLPerf TensorFlow, inference only.
+    Bert,
+    /// MLPerf TensorFlow, training only.
+    Rnnt,
+}
+
+impl DlModel {
+    pub const ALL: [DlModel; 8] = [
+        DlModel::ResNet50,
+        DlModel::ResNet152,
+        DlModel::AlexNet,
+        DlModel::Vgg19,
+        DlModel::DenseNet201,
+        DlModel::ResNet34,
+        DlModel::Bert,
+        DlModel::Rnnt,
+    ];
+
+    /// The five PyTorch models of Figs 1–2 (run as both train and infer).
+    pub const PYTORCH: [DlModel; 5] = [
+        DlModel::ResNet50,
+        DlModel::ResNet152,
+        DlModel::AlexNet,
+        DlModel::Vgg19,
+        DlModel::DenseNet201,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DlModel::ResNet50 => "resnet50",
+            DlModel::ResNet152 => "resnet152",
+            DlModel::AlexNet => "alexnet",
+            DlModel::Vgg19 => "vgg19",
+            DlModel::DenseNet201 => "densenet201",
+            DlModel::ResNet34 => "resnet34",
+            DlModel::Bert => "bert",
+            DlModel::Rnnt => "rnnt",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<DlModel> {
+        Self::ALL.iter().copied().find(|m| m.name() == s)
+    }
+
+    pub fn backend(&self) -> &'static str {
+        match self {
+            DlModel::ResNet34 | DlModel::Bert | DlModel::Rnnt => "tensorflow",
+            _ => "pytorch",
+        }
+    }
+}
+
+/// Role a task plays in the concurrent workload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Training,
+    Inference,
+}
+
+/// A calibrated per-task trace generator profile.
+#[derive(Clone, Debug)]
+pub struct TaskProfile {
+    pub model: DlModel,
+    pub role: Role,
+    /// Training batch size (Table 1) — 1 for inference tasks.
+    pub batch_size: u32,
+    /// Kernels per unit (per inference request / per training step).
+    pub kernels_per_unit: u32,
+    /// Calibrated kernel mixture.
+    pub mix: KernelMix,
+    /// Host→device bytes at unit start (input batch).
+    pub h2d_bytes: u64,
+    /// Device→host bytes at unit end (logits / metrics).
+    pub d2h_bytes: u64,
+    /// Intermediate transfers per unit: (count, bytes each). ResNet-34's
+    /// distinguishing trait (O4).
+    pub mid_transfers: (u32, u64),
+    /// Mean CPU-side launch gap between consecutive kernels.
+    pub launch_gap_mean_ns: f64,
+    /// Resident global-memory footprint of the task (weights + activations
+    /// + optimizer state at this batch size).
+    pub dram_footprint: u64,
+    /// Table 1 calibration targets, kept for bench_table1 reporting.
+    pub target_large_pct: f64,
+    pub target_long_running_pct: f64,
+    /// Table 1 total-kernel count (full-scale protocol; informational).
+    pub table1_total_kernels: u64,
+}
+
+impl TaskProfile {
+    /// Generate the op sequence for one unit (request or step).
+    pub fn gen_unit(&self, dev: &DeviceConfig, rng: &mut Rng) -> Vec<Op> {
+        let n = self.kernels_per_unit as usize;
+        let mut ops = Vec::with_capacity(n * 2 + 4);
+        if self.h2d_bytes > 0 {
+            ops.push(Op::TransferH2D {
+                bytes: self.h2d_bytes,
+            });
+        }
+        // Spread intermediate transfers evenly through the kernel sequence.
+        let (mid_n, mid_bytes) = self.mid_transfers;
+        let mid_every = if mid_n > 0 {
+            (n / (mid_n as usize + 1)).max(1)
+        } else {
+            usize::MAX
+        };
+        let mut placed_mid = 0;
+        for i in 0..n {
+            ops.push(Op::Kernel(self.mix.sample(dev, rng)));
+            if i + 1 < n {
+                let gap = rng.lognormal_mean(self.launch_gap_mean_ns, 0.5) as SimTime;
+                ops.push(Op::CpuGap { ns: gap.clamp(US, 200 * US) });
+            }
+            if mid_every != usize::MAX && (i + 1) % mid_every == 0 && placed_mid < mid_n {
+                let op = if placed_mid % 2 == 0 {
+                    Op::TransferH2D { bytes: mid_bytes }
+                } else {
+                    Op::TransferD2H { bytes: mid_bytes }
+                };
+                ops.push(op);
+                placed_mid += 1;
+            }
+        }
+        if self.d2h_bytes > 0 {
+            ops.push(Op::TransferD2H {
+                bytes: self.d2h_bytes,
+            });
+        }
+        ops
+    }
+}
+
+const GB: u64 = 1024 * 1024 * 1024;
+const MB: u64 = 1024 * 1024;
+const KB: u64 = 1024;
+
+/// ImageNet-ish single image (224×224×3 f32).
+const IMAGE_BYTES: u64 = 602 * KB;
+
+fn profile(
+    model: DlModel,
+    role: Role,
+    batch_size: u32,
+    kernels_per_unit: u32,
+    large_pct: f64,
+    long_running_pct: f64,
+    short_dur_mean_us: f64,
+    long_block_mean_us: f64,
+    h2d_bytes: u64,
+    d2h_bytes: u64,
+    mid_transfers: (u32, u64),
+    dram_footprint: u64,
+    table1_total_kernels: u64,
+) -> TaskProfile {
+    TaskProfile {
+        model,
+        role,
+        batch_size,
+        kernels_per_unit,
+        mix: KernelMix::calibrated(large_pct, long_running_pct, short_dur_mean_us, long_block_mean_us),
+        h2d_bytes,
+        d2h_bytes,
+        mid_transfers,
+        launch_gap_mean_ns: 8.0 * US as f64,
+        dram_footprint,
+        target_large_pct: large_pct,
+        target_long_running_pct: long_running_pct,
+        table1_total_kernels,
+    }
+}
+
+impl DlModel {
+    /// Inference task profile (Table 1 row, inference columns).
+    /// `None` for RNNT, which the paper only ran as a training task.
+    pub fn infer_profile(&self) -> Option<TaskProfile> {
+        // kernels/request = Table-1 total ÷ 5000 requests.
+        Some(match self {
+            DlModel::ResNet50 => profile(
+                *self, Role::Inference, 1, 202, 15.85, 0.0, 28.0, 250.0,
+                IMAGE_BYTES, 4 * KB, (0, 0), 2 * GB, 1_011_603,
+            ),
+            DlModel::ResNet152 => profile(
+                *self, Role::Inference, 1, 569, 7.75, 0.0, 26.0, 250.0,
+                IMAGE_BYTES, 4 * KB, (0, 0), 3 * GB, 2_843_433,
+            ),
+            DlModel::AlexNet => profile(
+                *self, Role::Inference, 1, 44, 2.28, 0.0, 24.0, 250.0,
+                IMAGE_BYTES, 4 * KB, (0, 0), 2 * GB, 220_303,
+            ),
+            DlModel::Vgg19 => profile(
+                *self, Role::Inference, 1, 93, 48.68, 0.0, 42.0, 250.0,
+                IMAGE_BYTES, 4 * KB, (0, 0), 3 * GB, 463_274,
+            ),
+            DlModel::DenseNet201 => profile(
+                *self, Role::Inference, 1, 725, 21.55, 0.0, 18.0, 250.0,
+                IMAGE_BYTES, 4 * KB, (0, 0), 3 * GB, 3_625_505,
+            ),
+            DlModel::ResNet34 => profile(
+                // O4/Fig 6: "orders of magnitude more time on memory
+                // transfers" — modeled as 24 intermediate 2 MB transfers
+                // per request.
+                *self, Role::Inference, 1, 370, 2.65, 0.0, 22.0, 250.0,
+                IMAGE_BYTES, 4 * KB, (24, 2 * MB), 3 * GB, 1_850_691,
+            ),
+            DlModel::Bert => profile(
+                *self, Role::Inference, 1, 129, 60.23, 0.0, 55.0, 250.0,
+                48 * KB, 8 * KB, (0, 0), 4 * GB, 645_000,
+            ),
+            DlModel::Rnnt => return None,
+        })
+    }
+
+    /// Training task profile (Table 1 row, training columns).
+    /// `None` for the MLPerf inference-only models.
+    pub fn train_profile(&self) -> Option<TaskProfile> {
+        Some(match self {
+            DlModel::ResNet50 => profile(
+                *self, Role::Training, 128, 280, 43.71, 56.63, 34.0, 320.0,
+                16 * MB, 64 * KB, (0, 0), 17 * GB, 212_999,
+            ),
+            DlModel::ResNet152 => profile(
+                *self, Role::Training, 64, 540, 41.63, 6.72, 30.0, 280.0,
+                8 * MB, 64 * KB, (0, 0), 18 * GB, 2_187_832,
+            ),
+            DlModel::AlexNet => profile(
+                *self, Role::Training, 256, 62, 57.85, 3.28, 30.0, 240.0,
+                24 * MB, 64 * KB, (0, 0), 12 * GB, 29_402,
+            ),
+            DlModel::Vgg19 => profile(
+                *self, Role::Training, 64, 290, 70.64, 41.60, 40.0, 360.0,
+                8 * MB, 64 * KB, (0, 0), 18 * GB, 370_612,
+            ),
+            DlModel::DenseNet201 => profile(
+                *self, Role::Training, 64, 334, 35.93, 6.76, 26.0, 260.0,
+                8 * MB, 64 * KB, (0, 0), 17 * GB, 3_336_809,
+            ),
+            DlModel::Rnnt => profile(
+                // Table 1: batch 1024, 0.80% large, 10.21% long-running.
+                *self, Role::Training, 1024, 941, 0.80, 10.21, 30.0, 280.0,
+                32 * MB, 128 * KB, (0, 0), 16 * GB, 9_409_063,
+            ),
+            DlModel::ResNet34 | DlModel::Bert => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::kernel::TraceStats;
+
+    fn dev() -> DeviceConfig {
+        DeviceConfig::rtx3090()
+    }
+
+    #[test]
+    fn all_models_roundtrip_names() {
+        for m in DlModel::ALL {
+            assert_eq!(DlModel::from_name(m.name()), Some(m));
+        }
+        assert_eq!(DlModel::from_name("nope"), None);
+    }
+
+    #[test]
+    fn role_availability_matches_table1() {
+        assert!(DlModel::Rnnt.infer_profile().is_none());
+        assert!(DlModel::Rnnt.train_profile().is_some());
+        assert!(DlModel::ResNet34.train_profile().is_none());
+        assert!(DlModel::Bert.train_profile().is_none());
+        for m in DlModel::PYTORCH {
+            assert!(m.infer_profile().is_some());
+            assert!(m.train_profile().is_some());
+        }
+    }
+
+    #[test]
+    fn generated_units_match_kernel_counts() {
+        let d = dev();
+        let mut rng = Rng::new(3);
+        for m in DlModel::ALL {
+            for p in [m.infer_profile(), m.train_profile()].into_iter().flatten() {
+                let ops = p.gen_unit(&d, &mut rng);
+                let stats = TraceStats::of(&ops, &d);
+                assert_eq!(stats.total_kernels, p.kernels_per_unit as u64, "{:?}", m);
+            }
+        }
+    }
+
+    #[test]
+    fn traces_hit_table1_large_pct() {
+        let d = dev();
+        for m in DlModel::ALL {
+            for p in [m.infer_profile(), m.train_profile()].into_iter().flatten() {
+                let mut rng = Rng::new(41);
+                let mut stats = TraceStats::default();
+                // enough units for ~10k kernels
+                let units = (10_000 / p.kernels_per_unit as usize).max(3);
+                for _ in 0..units {
+                    for op in p.gen_unit(&d, &mut rng) {
+                        stats.accumulate(&op, &d);
+                    }
+                }
+                let got = stats.large_kernel_pct();
+                let want = p.target_large_pct;
+                assert!(
+                    (got - want).abs() < 3.0,
+                    "{:?}/{:?}: large% got={got:.2} want={want:.2}",
+                    m,
+                    p.role
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn inference_tasks_have_no_long_running_kernels() {
+        // Table 1 omits long-running inference kernels as negligible.
+        let d = dev();
+        for m in DlModel::ALL {
+            if let Some(p) = m.infer_profile() {
+                let mut rng = Rng::new(43);
+                for _ in 0..5 {
+                    for op in p.gen_unit(&d, &mut rng) {
+                        if let Op::Kernel(k) = &op {
+                            assert!(!k.is_long_running(), "{:?}", m);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn resnet34_has_heavy_transfers() {
+        let d = dev();
+        let p34 = DlModel::ResNet34.infer_profile().unwrap();
+        let pdn = DlModel::DenseNet201.infer_profile().unwrap();
+        let mut rng = Rng::new(5);
+        let s34 = TraceStats::of(&p34.gen_unit(&d, &mut rng), &d);
+        let sdn = TraceStats::of(&pdn.gen_unit(&d, &mut rng), &d);
+        assert!(
+            s34.transfer_bytes > 10 * sdn.transfer_bytes,
+            "resnet34={} densenet={}",
+            s34.transfer_bytes,
+            sdn.transfer_bytes
+        );
+    }
+
+    #[test]
+    fn concurrent_pairs_fit_in_dram() {
+        // The Fig-1 protocol must not OOM: train + infer footprints < 24 GB.
+        let d = dev();
+        for m in DlModel::PYTORCH {
+            let t = m.train_profile().unwrap();
+            let i = m.infer_profile().unwrap();
+            assert!(t.dram_footprint + i.dram_footprint < d.dram_bytes, "{:?}", m);
+        }
+        let rnnt = DlModel::Rnnt.train_profile().unwrap();
+        for m in [DlModel::ResNet34, DlModel::Bert] {
+            let i = m.infer_profile().unwrap();
+            assert!(rnnt.dram_footprint + i.dram_footprint < d.dram_bytes);
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Golden-shape tests: the paper's qualitative findings must *emerge* from
+//! the simulator (the mechanism models are not fitted to the figures —
+//! DESIGN.md §5 calibration note). Each test pins one claim from §4/§5 at
+//! reduced scale with fixed seeds.
+
+use gpushare::exp::{paper_mechanisms, MechanismComparison, Protocol};
+use gpushare::sched::{Mechanism, PlacementPolicy, PreemptConfig, PreemptPolicy};
+use gpushare::workload::DlModel;
+use once_cell::sync::Lazy;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+fn proto() -> Protocol {
+    // scaled for the single-core CI box; the bench targets run the full
+    // protocol
+    Protocol {
+        requests: 20,
+        train_steps: 8,
+        seed: 42,
+        ..Protocol::default()
+    }
+}
+
+/// Comparisons are deterministic per model: compute once, share across the
+/// shape tests (they run in one process).
+static CMP_CACHE: Lazy<Mutex<BTreeMap<&'static str, MechanismComparison>>> =
+    Lazy::new(|| Mutex::new(BTreeMap::new()));
+
+fn cmp_for(model: DlModel) -> MechanismComparison {
+    let mut cache = CMP_CACHE.lock().unwrap();
+    cache
+        .entry(model.name())
+        .or_insert_with(|| {
+            let mut mechs = paper_mechanisms();
+            // the full §5 proposal: proactive hiding (O9) + hold-space +
+            // contention-aware placement (O7)
+            mechs.push(Mechanism::FineGrained(PreemptConfig {
+                policy: PreemptPolicy::Proactive { hold_space: true },
+                placement: PlacementPolicy::LeastContention,
+                ..Default::default()
+            }));
+            MechanismComparison::run(&proto(), model, model, &mechs)
+        })
+        .clone()
+}
+
+#[test]
+fn o1_compounded_delay_inflates_streams_turnaround() {
+    // §4.1: priority streams' turnaround inflates despite the priority —
+    // ≈2–4× for ResNet-50 in the paper; require >1.3× and <6× here.
+    let cmp = cmp_for(DlModel::ResNet50);
+    let r = cmp.turnaround_ratio("priority-streams").unwrap();
+    assert!(r > 1.3 && r < 6.0, "streams ratio {r}");
+}
+
+#[test]
+fn o1_streams_comparable_to_mps_despite_priorities() {
+    // §4.1: "priority streams' turnaround times were comparable to that of
+    // MPS in almost all cases, despite MPS having no notion of priorities".
+    let cmp = cmp_for(DlModel::ResNet50);
+    let streams = cmp.turnaround_ratio("priority-streams").unwrap();
+    let mps = cmp.turnaround_ratio("mps").unwrap();
+    let ratio = streams / mps;
+    assert!(
+        (0.4..=1.6).contains(&ratio),
+        "streams {streams:.2}x vs mps {mps:.2}x not comparable"
+    );
+}
+
+#[test]
+fn o2_time_slicing_most_predictable() {
+    // §4.2: time-slicing has the most predictable turnaround. Compare
+    // coefficients of variation.
+    let cmp = cmp_for(DlModel::ResNet50);
+    let cv = |mech: &str| {
+        cmp.per_mechanism
+            .iter()
+            .find(|(n, _)| n == mech)
+            .map(|(_, r)| r.turnaround_summary().cv())
+            .unwrap()
+    };
+    let ts = cv("time-slicing");
+    assert!(
+        ts < cv("priority-streams") && ts < cv("mps"),
+        "time-slicing cv {ts} not the lowest ({} streams, {} mps)",
+        cv("priority-streams"),
+        cv("mps")
+    );
+}
+
+#[test]
+fn o2_time_slicing_worst_training_time() {
+    // §4.2: "the trade-off inherent in using time-slicing is predictability
+    // at the cost of utilization, which was frequently the worst of the
+    // three" — training time proxy.
+    for model in [DlModel::ResNet50, DlModel::DenseNet201] {
+        let cmp = cmp_for(model);
+        let ts = cmp.train_time_s("time-slicing").unwrap();
+        let mps = cmp.train_time_s("mps").unwrap();
+        let streams = cmp.train_time_s("priority-streams").unwrap();
+        assert!(
+            ts > mps && ts > streams,
+            "{}: ts {ts} !> mps {mps} / streams {streams}",
+            model.name()
+        );
+    }
+}
+
+#[test]
+fn o4_transfer_contention_hits_resnet34_not_densenet() {
+    // §4.2/Figs 6–7: under time-slicing ResNet-34's transfer time inflates
+    // by an order of magnitude; DenseNet-201's does not.
+    let p = Protocol {
+        requests: 6,
+        train_steps: 6,
+        record_ops: true,
+        ..Protocol::default()
+    };
+    let infl = |model: DlModel| {
+        let base = p.baseline_infer(model).op_time_split_ms().1;
+        let ts = p
+            .pair(Mechanism::TimeSlicing, model, DlModel::Rnnt)
+            .op_time_split_ms()
+            .1;
+        ts / base
+    };
+    let r34 = infl(DlModel::ResNet34);
+    let dn = infl(DlModel::DenseNet201);
+    assert!(r34 > 1.8, "resnet34 transfer inflation only {r34:.2}x");
+    assert!(dn < 1.3, "densenet inflates too: {dn:.2}x");
+    assert!(dn < r34 / 1.5, "densenet {dn:.2}x vs resnet34 {r34:.2}x");
+    // cross-model claim: resnet34 spends orders of magnitude more absolute
+    // time on transfers than densenet
+    let r34_abs = p.baseline_infer(DlModel::ResNet34).op_time_split_ms().1;
+    let dn_abs = p.baseline_infer(DlModel::DenseNet201).op_time_split_ms().1;
+    assert!(r34_abs > 10.0 * dn_abs, "{r34_abs} vs {dn_abs}");
+}
+
+#[test]
+fn o5_mps_best_utilization_of_hardware_mechanisms() {
+    // §4.3: MPS's training time increases least among the three mechanisms.
+    let cmp = cmp_for(DlModel::ResNet50);
+    let mps = cmp.train_time_s("mps").unwrap();
+    for other in ["priority-streams", "time-slicing"] {
+        assert!(
+            mps <= cmp.train_time_s(other).unwrap() * 1.05,
+            "mps train {mps} worse than {other}"
+        );
+    }
+}
+
+#[test]
+fn o6_mps_degrades_inference_more_than_training() {
+    // §4.3: under MPS the inference task bears more of the degradation.
+    let cmp = cmp_for(DlModel::ResNet152);
+    let infer_ratio = cmp.turnaround_ratio("mps").unwrap();
+    let train_ratio = cmp.train_time_s("mps").unwrap() / cmp.baseline_train_s;
+    assert!(
+        infer_ratio > train_ratio,
+        "inference {infer_ratio:.2}x !> training {train_ratio:.2}x"
+    );
+}
+
+#[test]
+fn o7_fine_grained_beats_hardware_mechanisms_on_turnaround() {
+    // §5: preemption eliminates compounded delay — turnaround below
+    // streams and MPS, at training time no worse than time-slicing.
+    for model in [DlModel::ResNet50, DlModel::Vgg19] {
+        let cmp = cmp_for(model);
+        let fg = cmp.turnaround_ratio("fine-grained").unwrap();
+        let streams = cmp.turnaround_ratio("priority-streams").unwrap();
+        let mps = cmp.turnaround_ratio("mps").unwrap();
+        assert!(
+            fg < streams && fg < mps,
+            "{}: fg {fg:.2}x !< streams {streams:.2}x / mps {mps:.2}x",
+            model.name()
+        );
+        let fg_train = cmp.train_time_s("fine-grained").unwrap();
+        let ts_train = cmp.train_time_s("time-slicing").unwrap();
+        assert!(
+            fg_train < ts_train,
+            "{}: fg train {fg_train} !< time-slicing {ts_train}",
+            model.name()
+        );
+    }
+}
+
+#[test]
+fn o9_proactive_hides_save_cost() {
+    // §5/O9: the proactive policy hides a substantial share of the save
+    // latency behind gaps/transfers; reactive hides ~none.
+    let p = proto();
+    let reactive = p.pair(
+        Mechanism::FineGrained(PreemptConfig {
+            policy: PreemptPolicy::Reactive,
+            placement: PlacementPolicy::MostRoom,
+            ..Default::default()
+        }),
+        DlModel::Vgg19,
+        DlModel::Vgg19,
+    );
+    let proactive = p.pair(
+        Mechanism::FineGrained(PreemptConfig {
+            policy: PreemptPolicy::Proactive { hold_space: true },
+            placement: PlacementPolicy::MostRoom,
+            ..Default::default()
+        }),
+        DlModel::Vgg19,
+        DlModel::Vgg19,
+    );
+    assert!(proactive.preemptions > 0, "proactive never preempted");
+    assert!(
+        proactive.hidden_save_fraction() > reactive.hidden_save_fraction(),
+        "proactive hidden {} !> reactive {}",
+        proactive.hidden_save_fraction(),
+        reactive.hidden_save_fraction()
+    );
+    // VGG-19's inference kernels are ~half large (Table 1), so proactive
+    // clearing is often topped up reactively (hide=0) — require a solid
+    // but not majority hidden share here; the ResNet-50 study in
+    // bench_preempt_eval shows >50%.
+    assert!(
+        proactive.hidden_save_fraction() > 0.15,
+        "proactive hides only {}",
+        proactive.hidden_save_fraction()
+    );
+}
+
+#[test]
+fn densenet_least_affected_of_pytorch_models() {
+    // Fig 1a: DenseNet-201 shows the smallest streams/MPS inflation (1.75x
+    // in the paper vs 2-4x for the others).
+    let dn = cmp_for(DlModel::DenseNet201);
+    let rn = cmp_for(DlModel::ResNet50);
+    for mech in ["priority-streams", "mps"] {
+        assert!(
+            dn.turnaround_ratio(mech).unwrap() < rn.turnaround_ratio(mech).unwrap(),
+            "{mech}: densenet not least affected"
+        );
+    }
+}

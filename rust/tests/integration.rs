@@ -1,0 +1,325 @@
+//! Cross-module integration tests: engine + workload + metrics over the
+//! full mechanism set, and the coordinator stack (router → batcher →
+//! governor → mock executor) assembled the way the examples assemble it.
+
+use gpushare::coordinator::batcher::{BatchRunner, Batcher, BatcherConfig};
+use gpushare::coordinator::{serve, GovernorMode, ServeConfig, TrainStepFn};
+use gpushare::exp::{paper_mechanisms, MechanismComparison, Protocol};
+use gpushare::gpu::DeviceConfig;
+use gpushare::runtime::{MockExecutor, ModelExecutor};
+use gpushare::sched::{run, CtxDef, EngineConfig, Mechanism};
+use gpushare::util::rng::Rng;
+use gpushare::workload::{ArrivalPattern, DlModel, Source};
+use std::time::Duration;
+
+fn fast() -> Protocol {
+    Protocol {
+        requests: 10,
+        train_steps: 5,
+        ..Protocol::default()
+    }
+}
+
+#[test]
+fn every_mechanism_completes_every_pytorch_pair() {
+    let proto = Protocol {
+        requests: 4,
+        train_steps: 2,
+        ..Protocol::default()
+    };
+    let mut mechs = paper_mechanisms();
+    mechs.push(Mechanism::fine_grained_default());
+    for model in DlModel::PYTORCH {
+        for mech in &mechs {
+            let rep = proto.pair(mech.clone(), model, model);
+            assert!(rep.oom.is_none(), "{} {}: {:?}", model.name(), mech.name(), rep.oom);
+            assert_eq!(rep.requests.len(), 4, "{} {}", model.name(), mech.name());
+            assert!(rep.train_done.is_some(), "{} {}", model.name(), mech.name());
+            assert!(rep.events > 0);
+        }
+    }
+}
+
+#[test]
+fn mlperf_pairs_complete() {
+    let proto = fast();
+    for model in [DlModel::ResNet34, DlModel::Bert] {
+        for mech in [Mechanism::TimeSlicing, Mechanism::mps_default()] {
+            let rep = proto.pair(mech.clone(), model, DlModel::Rnnt);
+            assert!(rep.oom.is_none());
+            assert_eq!(rep.requests.len(), proto.requests as usize);
+        }
+    }
+}
+
+#[test]
+fn server_mode_queueing_turnaround_includes_wait() {
+    // With arrivals much faster than service, turnaround must grow along
+    // the queue (later requests wait longer).
+    let proto = Protocol {
+        requests: 12,
+        train_steps: 0,
+        ..Protocol::default()
+    }
+    .server(gpushare::sim::MS / 2); // 0.5 ms mean interarrival << service
+    let rep = proto.baseline_infer(DlModel::ResNet50);
+    let t = rep.turnarounds_ms();
+    assert_eq!(t.len(), 12);
+    let first3: f64 = t[..3].iter().sum::<f64>() / 3.0;
+    let last3: f64 = t[t.len() - 3..].iter().sum::<f64>() / 3.0;
+    assert!(last3 > first3 * 2.0, "queueing not visible: {first3} vs {last3}");
+}
+
+#[test]
+fn requests_complete_in_order_for_serial_service() {
+    let proto = fast();
+    let rep = proto.pair(Mechanism::mps_default(), DlModel::AlexNet, DlModel::AlexNet);
+    // the inference context is serial, so completions are ordered by id
+    for w in rep.requests.windows(2) {
+        assert!(w[0].id < w[1].id);
+        assert!(w[0].completed <= w[1].completed);
+    }
+}
+
+#[test]
+fn comparison_driver_produces_ratios() {
+    let cmp = MechanismComparison::run(
+        &fast(),
+        DlModel::AlexNet,
+        DlModel::AlexNet,
+        &paper_mechanisms(),
+    );
+    for mech in ["priority-streams", "time-slicing", "mps"] {
+        let r = cmp.turnaround_ratio(mech).unwrap();
+        assert!(r.is_finite() && r > 0.5, "{mech}: ratio {r}");
+        assert!(cmp.train_time_s(mech).unwrap() > 0.0);
+    }
+}
+
+#[test]
+fn engine_respects_max_sim_time() {
+    let dev = DeviceConfig::rtx3090();
+    let mut cfg = EngineConfig::new(dev.clone(), Mechanism::Baseline);
+    cfg.max_sim_ns = 1_000; // 1 µs: nothing can finish
+    let rep = run(
+        cfg,
+        vec![CtxDef {
+            name: "t".into(),
+            source: Source::training(
+                DlModel::AlexNet.train_profile().unwrap(),
+                dev,
+                5,
+                Rng::new(1),
+            ),
+            priority: 0,
+        }],
+    );
+    assert!(rep.oom.is_some(), "time-cap must be reported");
+}
+
+// ---------------- coordinator stack ----------------
+
+fn mock_factory(latency: Duration) -> impl FnOnce() -> BatchRunner + Send + 'static {
+    move || {
+        let mk = |b: usize| -> Box<dyn ModelExecutor> {
+            let mut m = MockExecutor::new(b, 32, 4);
+            m.latency = latency;
+            Box::new(m)
+        };
+        BatchRunner::new(vec![(1, mk(1)), (8, mk(8)), (32, mk(32))], vec![])
+    }
+}
+
+#[test]
+fn serve_completes_under_all_governor_modes() {
+    for mode in [
+        GovernorMode::Shared,
+        GovernorMode::Serialized {
+            slice: Duration::from_millis(2),
+        },
+        GovernorMode::InferencePriority,
+        GovernorMode::Preemptive,
+    ] {
+        let cfg = ServeConfig {
+            mode,
+            requests: 25,
+            train_steps: 5,
+            in_features: 32,
+            mean_interarrival: Some(Duration::from_micros(300)),
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(500),
+            },
+            ..Default::default()
+        };
+        let trainer: gpushare::coordinator::server::TrainerFactory =
+            Box::new(|| Ok(Box::new(|| Ok(1.0f32)) as TrainStepFn));
+        let rep = serve(cfg, mock_factory(Duration::from_micros(200)), Some(trainer));
+        assert_eq!(rep.completed, 25, "{}", rep.mode);
+        assert_eq!(rep.failed, 0, "{}", rep.mode);
+        assert_eq!(rep.train_steps_done, 5, "{}", rep.mode);
+    }
+}
+
+#[test]
+fn batcher_coalesces_under_burst() {
+    let cfg = ServeConfig {
+        mode: GovernorMode::Shared,
+        requests: 64,
+        train_steps: 0,
+        in_features: 32,
+        mean_interarrival: Some(Duration::from_micros(10)), // burst
+        batcher: BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(1),
+        },
+        ..Default::default()
+    };
+    let rep = serve(cfg, mock_factory(Duration::from_millis(1)), None);
+    assert_eq!(rep.completed, 64);
+    assert!(rep.mean_batch > 1.5, "no batching: mean {}", rep.mean_batch);
+}
+
+#[test]
+fn failing_executor_reports_failures_not_hangs() {
+    struct Broken(gpushare::runtime::EntrySpec);
+    impl ModelExecutor for Broken {
+        fn entry(&self) -> &gpushare::runtime::EntrySpec {
+            &self.0
+        }
+        fn execute(
+            &self,
+            _inputs: &[gpushare::runtime::Tensor],
+        ) -> anyhow::Result<Vec<gpushare::runtime::Tensor>> {
+            anyhow::bail!("injected failure")
+        }
+    }
+    let cfg = ServeConfig {
+        requests: 5,
+        train_steps: 0,
+        in_features: 8,
+        timeout: Duration::from_millis(200),
+        batcher: BatcherConfig {
+            max_batch: 1,
+            max_wait: Duration::from_micros(100),
+        },
+        ..Default::default()
+    };
+    let rep = serve(
+        cfg,
+        || {
+            let mock = MockExecutor::new(1, 8, 2);
+            let entry = mock.entry().clone();
+            BatchRunner::new(vec![(1, Box::new(Broken(entry)))], vec![])
+        },
+        None,
+    );
+    assert_eq!(rep.completed, 0);
+    assert_eq!(rep.failed, 5);
+}
+
+#[test]
+fn inference_source_closed_loop_vs_poisson_differ() {
+    let dev = DeviceConfig::rtx3090();
+    let p = DlModel::AlexNet.infer_profile().unwrap();
+    let mut closed = Source::inference(
+        p.clone(),
+        dev.clone(),
+        ArrivalPattern::ClosedLoop,
+        3,
+        Rng::new(5),
+    );
+    let mut poisson = Source::inference(
+        p,
+        dev,
+        ArrivalPattern::Poisson {
+            mean_interarrival: 100 * gpushare::sim::MS,
+        },
+        3,
+        Rng::new(5),
+    );
+    // closed loop starts immediately; poisson almost surely waits
+    assert!(matches!(closed.next(0), gpushare::workload::SourceOut::StartRequest { .. }));
+    assert!(matches!(poisson.next(0), gpushare::workload::SourceOut::WaitUntil(_)));
+}
+
+// ---------------- extension mechanisms ----------------
+
+#[test]
+fn partitioned_mechanism_isolates_and_completes() {
+    let proto = fast();
+    let rep = proto.pair(
+        Mechanism::Partitioned { ctx0_sms: 41 },
+        DlModel::AlexNet,
+        DlModel::AlexNet,
+    );
+    assert!(rep.oom.is_none());
+    assert_eq!(rep.requests.len(), proto.requests as usize);
+    assert!(rep.train_done.is_some());
+    // isolation: turnaround variance should be time-slicing-class low
+    let cv = rep.turnaround_summary().cv();
+    assert!(cv < 0.6, "partitioned cv {cv}");
+}
+
+#[test]
+fn partitioned_small_share_slows_inference() {
+    let proto = fast();
+    let wide = proto
+        .pair(Mechanism::Partitioned { ctx0_sms: 62 }, DlModel::ResNet50, DlModel::ResNet50)
+        .mean_turnaround_ms();
+    let narrow = proto
+        .pair(Mechanism::Partitioned { ctx0_sms: 10 }, DlModel::ResNet50, DlModel::ResNet50)
+        .mean_turnaround_ms();
+    assert!(
+        narrow > wide * 1.2,
+        "10-SM partition {narrow} not slower than 62-SM {wide}"
+    );
+}
+
+#[test]
+fn preempt_flavors_all_complete() {
+    use gpushare::sched::{PlacementPolicy, PreemptConfig, PreemptFlavor, PreemptPolicy};
+    let proto = fast();
+    for flavor in [
+        PreemptFlavor::ContextSave,
+        PreemptFlavor::SmDraining,
+        PreemptFlavor::SmFlushing,
+    ] {
+        let mech = Mechanism::FineGrained(PreemptConfig {
+            policy: PreemptPolicy::Reactive,
+            placement: PlacementPolicy::MostRoom,
+            flavor,
+            ..Default::default()
+        });
+        let rep = proto.pair(mech, DlModel::Vgg19, DlModel::Vgg19);
+        assert!(rep.oom.is_none(), "{flavor:?}: {:?}", rep.oom);
+        assert_eq!(rep.requests.len(), proto.requests as usize, "{flavor:?}");
+        assert!(rep.train_done.is_some(), "{flavor:?}");
+    }
+}
+
+#[test]
+fn sm_flushing_loses_training_work() {
+    use gpushare::sched::{PlacementPolicy, PreemptConfig, PreemptFlavor, PreemptPolicy};
+    let proto = fast();
+    let mk = |flavor| {
+        Mechanism::FineGrained(PreemptConfig {
+            policy: PreemptPolicy::Reactive,
+            placement: PlacementPolicy::MostRoom,
+            flavor,
+            ..Default::default()
+        })
+    };
+    let save = proto.pair(mk(PreemptFlavor::ContextSave), DlModel::Vgg19, DlModel::Vgg19);
+    let flush = proto.pair(mk(PreemptFlavor::SmFlushing), DlModel::Vgg19, DlModel::Vgg19);
+    // flushing restarts victims from scratch: with comparable preemption
+    // counts its training runs at least as long as context-save's
+    if flush.preemptions >= save.preemptions / 2 && save.preemptions > 50 {
+        assert!(
+            flush.train_time_s().unwrap() >= save.train_time_s().unwrap() * 0.95,
+            "flush {:?} vs save {:?}",
+            flush.train_time_s(),
+            save.train_time_s()
+        );
+    }
+}

@@ -1,0 +1,145 @@
+//! Runtime end-to-end tests over the real AOT artifacts + PJRT CPU client.
+//! Skipped (with a notice) when `artifacts/` has not been built — run
+//! `make artifacts` first; CI runs them via `make test`.
+
+use gpushare::coordinator::batcher::BatchRunner;
+use gpushare::coordinator::{serve, BatcherConfig, GovernorMode, ServeConfig};
+use gpushare::examples_support::{mlp_runner, mlp_trainer_factory, synthetic_batch, MLP_IN};
+use gpushare::runtime::{artifacts_dir, ModelExecutor, PjrtRuntime, Tensor};
+use gpushare::util::rng::Rng;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!(
+            "skipping runtime e2e: {} missing (run `make artifacts`)",
+            dir.join("manifest.json").display()
+        );
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_entries_complete() {
+    let Some(dir) = artifacts() else { return };
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    for name in [
+        "mlp_infer_b1",
+        "mlp_infer_b8",
+        "mlp_infer_b32",
+        "mlp_train_b32",
+        "cnn_infer_b1",
+        "cnn_infer_b8",
+    ] {
+        let e = rt.manifest.entry(name).unwrap();
+        assert!(e.param_inputs > 0, "{name}");
+    }
+    assert!(!rt.load_params("mlp_params").unwrap().is_empty());
+    assert!(!rt.load_params("cnn_params").unwrap().is_empty());
+}
+
+#[test]
+fn infer_executes_and_batch_variants_agree() {
+    let Some(dir) = artifacts() else { return };
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    let params = rt.load_params("mlp_params").unwrap();
+    let b1 = rt.compile("mlp_infer_b1").unwrap();
+    let b8 = rt.compile("mlp_infer_b8").unwrap();
+
+    let mut rng = Rng::new(3);
+    let row: Vec<f32> = (0..MLP_IN).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+
+    let mut in1 = params.clone();
+    in1.push(Tensor::f32(row.clone(), &[1, MLP_IN]));
+    let out1 = b1.execute(&in1).unwrap();
+    let logits1 = out1[0].as_f32().unwrap();
+    assert_eq!(logits1.len(), 10);
+    assert!(logits1.iter().all(|v| v.is_finite()));
+
+    // same row replicated through the b8 variant must give the same logits
+    let mut batch = Vec::with_capacity(8 * MLP_IN);
+    for _ in 0..8 {
+        batch.extend_from_slice(&row);
+    }
+    let mut in8 = params.clone();
+    in8.push(Tensor::f32(batch, &[8, MLP_IN]));
+    let out8 = b8.execute(&in8).unwrap();
+    let logits8 = out8[0].as_f32().unwrap();
+    for r in 0..8 {
+        for c in 0..10 {
+            let a = logits1[c];
+            let b = logits8[r * 10 + c];
+            assert!(
+                (a - b).abs() <= 1e-4 * (1.0 + a.abs()),
+                "row {r} class {c}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn train_step_reduces_loss_over_iterations() {
+    let Some(dir) = artifacts() else { return };
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    let model = rt.compile("mlp_train_b32").unwrap();
+    let mut params = rt.load_params("mlp_params").unwrap();
+    let mut rng = Rng::new(11);
+    let mut losses = Vec::new();
+    for _ in 0..6 {
+        let (xs, ys) = synthetic_batch(&mut rng, 32);
+        let mut inputs = params.clone();
+        inputs.push(Tensor::f32(xs, &[32, MLP_IN]));
+        inputs.push(Tensor::i32(ys, &[32]));
+        let mut out = model.execute(&inputs).unwrap();
+        let loss = out.pop().unwrap().as_f32().unwrap()[0];
+        assert!(loss.is_finite());
+        losses.push(loss);
+        params = out;
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not fall: {losses:?}"
+    );
+}
+
+#[test]
+fn cnn_infer_executes() {
+    let Some(dir) = artifacts() else { return };
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    let params = rt.load_params("cnn_params").unwrap();
+    let m = rt.compile("cnn_infer_b1").unwrap();
+    let mut inputs = params;
+    inputs.push(Tensor::f32(vec![0.5; 28 * 28], &[1, 28, 28, 1]));
+    let out = m.execute(&inputs).unwrap();
+    let logits = out[0].as_f32().unwrap();
+    assert_eq!(logits.len(), 10);
+    assert!(logits.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn serve_end_to_end_with_real_compute() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = ServeConfig {
+        mode: GovernorMode::Shared,
+        requests: 12,
+        train_steps: 3,
+        mean_interarrival: Some(Duration::from_millis(3)),
+        batcher: BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        },
+        in_features: MLP_IN,
+        ..Default::default()
+    };
+    let d = dir.clone();
+    let factory = move || -> BatchRunner { mlp_runner(&d).unwrap() };
+    let rep = serve(cfg, factory, Some(mlp_trainer_factory(dir)));
+    assert_eq!(rep.completed, 12, "failed={}", rep.failed);
+    assert_eq!(rep.train_steps_done, 3);
+    assert!(rep.losses.last().unwrap() <= rep.losses.first().unwrap());
+    assert!(rep.latency_ms.mean > 0.0);
+}
