@@ -7,7 +7,7 @@
 
 mod common;
 
-use gpushare::exp::{paper_mechanisms, MechanismComparison};
+use gpushare::exp::{paper_mechanisms, run_comparisons};
 use gpushare::util::table::{bench_out_dir, fmt_f, Table};
 use gpushare::workload::DlModel;
 
@@ -22,9 +22,17 @@ fn main() {
         "Fig 1b — training execution time (s, delta vs baseline)",
         &["model", "baseline", "streams", "time-slicing", "mps"],
     );
-    for model in DlModel::PYTORCH {
-        eprintln!("[fig1] {} ...", model.name());
-        let cmp = MechanismComparison::run(&proto, model, model, &mechanisms);
+    // One fan-out over the whole suite: every (model × mechanism) run plus
+    // the baselines is an independent simulation, one per core.
+    let pairs: Vec<(DlModel, DlModel)> = DlModel::PYTORCH.iter().map(|&m| (m, m)).collect();
+    eprintln!(
+        "[fig1] {} models x {} mechanisms (+baselines), fanned out ...",
+        pairs.len(),
+        mechanisms.len()
+    );
+    let cmps = run_comparisons(&proto, &pairs, &mechanisms);
+    for cmp in &cmps {
+        let model = cmp.model;
         let cell = |mech: &str| -> String {
             let ratio = cmp.turnaround_ratio(mech).unwrap_or(f64::NAN);
             let (_, rep) = cmp

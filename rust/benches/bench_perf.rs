@@ -5,14 +5,35 @@
 
 use gpushare::coordinator::batcher::{BatchRunner, Batcher, BatcherConfig};
 use gpushare::coordinator::{serve, GovernorMode, ServeConfig};
-use gpushare::exp::Protocol;
+use gpushare::exp::{run_parallel, Job, Protocol};
 use gpushare::runtime::{MockExecutor, ModelExecutor};
 use gpushare::sched::Mechanism;
 use gpushare::sim::EventQueue;
-use gpushare::util::bench::{black_box, Bencher};
+use gpushare::util::bench::{black_box, BenchConfig, Bencher};
 use gpushare::util::rng::Rng;
 use gpushare::workload::DlModel;
+use std::path::PathBuf;
 use std::time::Duration;
+
+/// The full-mechanism `Protocol::fast()` sweep (the perf acceptance
+/// workload): both baselines plus one ResNet-50 pair per mechanism, fanned
+/// out one run per core. Returns total simulated events processed.
+fn fast_sweep(proto: &Protocol, mechs: &[Mechanism]) -> u64 {
+    let model = DlModel::ResNet50;
+    let mut jobs: Vec<Job<'_, u64>> = Vec::with_capacity(2 + mechs.len());
+    jobs.push(Box::new(move || proto.baseline_infer(model).events));
+    jobs.push(Box::new(move || proto.baseline_train(model).events));
+    for m in mechs {
+        let m = m.clone();
+        jobs.push(Box::new(move || proto.pair(m, model, model).events));
+    }
+    let per_run: Vec<u64> = if proto.parallel {
+        run_parallel(jobs)
+    } else {
+        jobs.into_iter().map(|f| f()).collect()
+    };
+    per_run.into_iter().sum()
+}
 
 fn main() {
     let mut b = Bencher::new();
@@ -165,8 +186,51 @@ fn main() {
         }
     });
 
+    // --- the perf acceptance workload: Protocol::fast() across every
+    // mechanism, one independent simulation per core ---
+    let fast = Protocol::fast();
+    let mechs = vec![
+        Mechanism::PriorityStreams,
+        Mechanism::TimeSlicing,
+        Mechanism::mps_default(),
+        Mechanism::fine_grained_default(),
+        Mechanism::Partitioned { ctx0_sms: 41 },
+    ];
+    let sweep_events = fast_sweep(&fast, &mechs); // probe + warm the caches
+    let mut sweep_bench = Bencher::with_config(BenchConfig {
+        warmup: Duration::from_millis(1),
+        samples: 3,
+        sample_target: Duration::from_millis(1),
+    });
+    sweep_bench.bench_items(
+        &format!("sweep: Protocol::fast all mechanisms ({sweep_events} events)"),
+        Some(sweep_events),
+        |iters| {
+            for _ in 0..iters {
+                black_box(fast_sweep(&fast, &mechs));
+            }
+        },
+    );
+    let mut serial = fast.clone();
+    serial.parallel = false;
+    sweep_bench.bench_items(
+        &format!("sweep: same, serial fan-out ({sweep_events} events)"),
+        Some(sweep_events),
+        |iters| {
+            for _ in 0..iters {
+                black_box(fast_sweep(&serial, &mechs));
+            }
+        },
+    );
+    b.merge(sweep_bench);
+
     let out = gpushare::util::table::bench_out_dir();
     std::fs::create_dir_all(&out).ok();
     std::fs::write(out.join("bench_perf.csv"), b.to_csv()).ok();
     println!("\n[csv] {}", out.join("bench_perf.csv").display());
+    // BENCH_perf.json: the events/sec + wall-time trajectory CI tracks.
+    let json_path = std::env::var("GPUSHARE_BENCH_JSON")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("BENCH_perf.json"));
+    b.write_json(&json_path);
 }

@@ -49,10 +49,10 @@ impl Default for ServeConfig {
 /// One trainer step: returns the loss. The closure owns the parameters
 /// (feeding updated ones back each call). Created *on* the trainer thread
 /// by a [`TrainerFactory`] because PJRT handles are thread-affine.
-pub type TrainStepFn = Box<dyn FnMut() -> anyhow::Result<f32>>;
+pub type TrainStepFn = Box<dyn FnMut() -> crate::util::error::Result<f32>>;
 
 /// Builds the trainer step closure on the trainer thread.
-pub type TrainerFactory = Box<dyn FnOnce() -> anyhow::Result<TrainStepFn> + Send>;
+pub type TrainerFactory = Box<dyn FnOnce() -> crate::util::error::Result<TrainStepFn> + Send>;
 
 /// Outcome of a serving run.
 #[derive(Clone, Debug)]

@@ -7,7 +7,8 @@ use crate::coordinator::batcher::BatchRunner;
 use crate::coordinator::server::{TrainStepFn, TrainerFactory};
 use crate::runtime::{ModelExecutor, PjrtRuntime, Tensor};
 use crate::util::rng::Rng;
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 use std::path::PathBuf;
 
 /// MLP input width (matches python/compile/model.py MLP_DIMS[0]).

@@ -1,6 +1,14 @@
 //! Experiment drivers: the §3 measurement protocol as reusable functions.
 //! Each paper table/figure bench (rust/benches/) is a thin wrapper over
 //! these, so integration tests can assert the figures' *shapes* directly.
+//!
+//! Runs within a suite are mutually independent (each constructs its own
+//! sources from the protocol seed), so [`run_parallel`] fans them out one
+//! per core with scoped threads. Results are returned in job order and
+//! every job derives its RNG streams deterministically from the protocol
+//! seed, so fan-out never changes a single reported number — the
+//! determinism guard test asserts byte-identical `RunReport` JSON with
+//! parallelism on and off.
 
 use crate::gpu::DeviceConfig;
 use crate::metrics::RunReport;
@@ -8,6 +16,78 @@ use crate::sched::{run, CtxDef, EngineConfig, Mechanism};
 use crate::sim::{SimTime, MS};
 use crate::util::rng::Rng;
 use crate::workload::{ArrivalPattern, DlModel, Source};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A unit of experiment work for [`run_parallel`].
+pub type Job<'a, T> = Box<dyn FnOnce() -> T + Send + 'a>;
+
+thread_local! {
+    /// Set on fan-out worker threads so nested suites degrade to serial
+    /// execution instead of oversubscribing the machine.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Worker-thread budget: `GPUSHARE_JOBS` override, else the number of
+/// available cores (one independent simulation per core).
+fn fanout_workers() -> usize {
+    if let Ok(v) = std::env::var("GPUSHARE_JOBS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run independent jobs on scoped worker threads, returning results in job
+/// order (completion order never leaks into the output, so parallel and
+/// serial execution are observationally identical for independent jobs).
+/// Falls back to in-place serial execution when only one worker is
+/// available or when already running inside a fan-out worker.
+pub fn run_parallel<T: Send>(jobs: Vec<Job<'_, T>>) -> Vec<T> {
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = fanout_workers().min(n);
+    if workers <= 1 || IN_POOL.with(|c| c.get()) {
+        return jobs.into_iter().map(|f| f()).collect();
+    }
+    let next = AtomicUsize::new(0);
+    type Slot<'a, T> = Mutex<(Option<Job<'a, T>>, Option<T>)>;
+    let slots: Vec<Slot<'_, T>> = jobs
+        .into_iter()
+        .map(|j| Mutex::new((Some(j), None)))
+        .collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                IN_POOL.with(|c| c.set(true));
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let job = slots[i].lock().unwrap().0.take().expect("job taken twice");
+                    let out = job();
+                    slots[i].lock().unwrap().1 = Some(out);
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .1
+                .expect("fan-out job produced no result")
+        })
+        .collect()
+}
 
 /// The §3.1 protocol parameters, scaled (DESIGN.md §5 calibration note):
 /// the paper used 5000 single-stream / 500 server requests; we default to
@@ -24,6 +104,9 @@ pub struct Protocol {
     pub pattern: ArrivalPattern,
     pub record_ops: bool,
     pub occupancy_sample_ns: Option<SimTime>,
+    /// Fan suite runs out across cores ([`run_parallel`]). Per-run results
+    /// are seed-deterministic either way; this only affects wall time.
+    pub parallel: bool,
 }
 
 impl Default for Protocol {
@@ -36,6 +119,7 @@ impl Default for Protocol {
             pattern: ArrivalPattern::ClosedLoop,
             record_ops: false,
             occupancy_sample_ns: None,
+            parallel: true,
         }
     }
 }
@@ -162,29 +246,16 @@ pub struct MechanismComparison {
 
 impl MechanismComparison {
     /// Run the Fig-1 protocol for one (infer, train) model pair across the
-    /// given mechanisms.
+    /// given mechanisms (fanned out per [`Protocol::parallel`]).
     pub fn run(
         proto: &Protocol,
         infer_model: DlModel,
         train_model: DlModel,
         mechanisms: &[Mechanism],
     ) -> MechanismComparison {
-        let base_i = proto.baseline_infer(infer_model);
-        let base_t = proto.baseline_train(train_model);
-        let per_mechanism = mechanisms
-            .iter()
-            .map(|m| {
-                let rep = proto.pair(m.clone(), infer_model, train_model);
-                (m.name().to_string(), rep)
-            })
-            .collect();
-        MechanismComparison {
-            model: infer_model,
-            train_model,
-            baseline_turnaround_ms: base_i.mean_turnaround_ms(),
-            baseline_train_s: base_t.train_time_s().unwrap_or(f64::NAN),
-            per_mechanism,
-        }
+        run_comparisons(proto, &[(infer_model, train_model)], mechanisms)
+            .pop()
+            .expect("one pair in, one comparison out")
     }
 
     pub fn turnaround_ratio(&self, mech: &str) -> Option<f64> {
@@ -200,6 +271,54 @@ impl MechanismComparison {
             .find(|(n, _)| n == mech)
             .and_then(|(_, r)| r.train_time_s())
     }
+}
+
+/// Run the Fig-1 protocol for many (infer, train) model pairs at once,
+/// flattening every independent simulation — two baselines plus one run per
+/// mechanism, per pair — into a single fan-out so whole suites use one core
+/// per run. Output order matches `pairs`; every run is seed-deterministic,
+/// so the result is identical to the serial loop.
+pub fn run_comparisons(
+    proto: &Protocol,
+    pairs: &[(DlModel, DlModel)],
+    mechanisms: &[Mechanism],
+) -> Vec<MechanismComparison> {
+    let runs_per_pair = 2 + mechanisms.len();
+    let mut jobs: Vec<Job<'_, RunReport>> = Vec::with_capacity(pairs.len() * runs_per_pair);
+    for &(infer_model, train_model) in pairs {
+        jobs.push(Box::new(move || proto.baseline_infer(infer_model)));
+        jobs.push(Box::new(move || proto.baseline_train(train_model)));
+        for m in mechanisms {
+            let m = m.clone();
+            jobs.push(Box::new(move || proto.pair(m, infer_model, train_model)));
+        }
+    }
+    let mut reports = if proto.parallel {
+        run_parallel(jobs)
+    } else {
+        jobs.into_iter().map(|f| f()).collect()
+    };
+    let mut out = Vec::with_capacity(pairs.len());
+    for &(infer_model, train_model) in pairs.iter().rev() {
+        let chunk = reports.split_off(reports.len() - runs_per_pair);
+        let mut it = chunk.into_iter();
+        let base_i = it.next().expect("baseline infer report");
+        let base_t = it.next().expect("baseline train report");
+        let per_mechanism = mechanisms
+            .iter()
+            .zip(it)
+            .map(|(m, rep)| (m.name().to_string(), rep))
+            .collect();
+        out.push(MechanismComparison {
+            model: infer_model,
+            train_model,
+            baseline_turnaround_ms: base_i.mean_turnaround_ms(),
+            baseline_train_s: base_t.train_time_s().unwrap_or(f64::NAN),
+            per_mechanism,
+        });
+    }
+    out.reverse();
+    out
 }
 
 /// The three hardware mechanisms of Fig 1.
@@ -252,6 +371,49 @@ mod tests {
         assert!(cmp.baseline_turnaround_ms > 0.0);
         for m in ["priority-streams", "time-slicing", "mps"] {
             assert!(cmp.turnaround_ratio(m).unwrap() > 0.9, "{m}");
+        }
+    }
+
+    #[test]
+    fn run_parallel_preserves_job_order() {
+        let jobs: Vec<Job<'_, usize>> = (0..32)
+            .map(|i| {
+                let b: Job<'_, usize> = Box::new(move || i * i);
+                b
+            })
+            .collect();
+        let got = run_parallel(jobs);
+        assert_eq!(got, (0..32).map(|i| i * i).collect::<Vec<_>>());
+        assert!(run_parallel::<u32>(Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn fanout_matches_serial_exactly() {
+        let mk = |parallel| Protocol {
+            requests: 4,
+            train_steps: 2,
+            parallel,
+            ..Protocol::default()
+        };
+        let a = MechanismComparison::run(
+            &mk(true),
+            DlModel::AlexNet,
+            DlModel::AlexNet,
+            &paper_mechanisms(),
+        );
+        let b = MechanismComparison::run(
+            &mk(false),
+            DlModel::AlexNet,
+            DlModel::AlexNet,
+            &paper_mechanisms(),
+        );
+        assert_eq!(a.baseline_turnaround_ms, b.baseline_turnaround_ms);
+        assert_eq!(a.baseline_train_s, b.baseline_train_s);
+        for ((na, ra), (nb, rb)) in a.per_mechanism.iter().zip(&b.per_mechanism) {
+            assert_eq!(na, nb);
+            assert_eq!(ra.mean_turnaround_ms(), rb.mean_turnaround_ms());
+            assert_eq!(ra.events, rb.events);
+            assert_eq!(ra.train_done, rb.train_done);
         }
     }
 

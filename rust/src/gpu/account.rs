@@ -1,0 +1,279 @@
+//! Device-level incremental resource accounting (DESIGN.md §6a).
+//!
+//! The engine's placement loop used to answer "does anything fit anywhere?"
+//! by scanning every SM (O(SMs) per dispatch attempt, and `try_place` runs
+//! after every event). [`DeviceAccount`] mirrors the per-SM free vectors
+//! into (a) a device-wide aggregate free vector and (b) a per-dimension
+//! *max-free* multiset index, so the two dominant queries become:
+//!
+//! * [`DeviceAccount::max_fits_any`] — an O(1) upper bound on the blocks of
+//!   a footprint that fit on the *best single* SM. A result of 0 is exact
+//!   ("no SM can take even one block" — the common steady state while a
+//!   kernel is resource-blocked); a positive result is conservative and the
+//!   caller falls through to the precise per-SM scan.
+//! * [`DeviceAccount::upper_bound_total_fits`] — an O(1) upper bound on the
+//!   device-wide sum of fits (`Σ_s floor(free_s/fp) ≤ floor(Σ_s free_s/fp)`
+//!   component-wise), used to skip whole-device occupancy probes.
+//!
+//! The account also carries the aggregate `used` vector and the
+//! active-SM count, making occupancy sampling O(1) instead of O(SMs).
+//!
+//! Synchronisation contract: after *any* mutation of `sms[s]` the owner
+//! calls [`DeviceAccount::sync`]`(s, &sms[s])`. The differential property
+//! tests drive random place/freeze/preempt/complete sequences and assert
+//! the account equals [`DeviceAccount::new`] built from scratch.
+
+use super::config::ResourceVec;
+use super::sm::SmState;
+use std::collections::BTreeMap;
+
+/// Multiset of per-SM values for one resource dimension, keyed by value.
+type ValueCounts = BTreeMap<u64, u32>;
+
+fn ms_insert(map: &mut ValueCounts, v: u64) {
+    *map.entry(v).or_insert(0) += 1;
+}
+
+fn ms_remove(map: &mut ValueCounts, v: u64) {
+    match map.get_mut(&v) {
+        Some(c) if *c > 1 => *c -= 1,
+        Some(_) => {
+            map.remove(&v);
+        }
+        None => debug_assert!(false, "max-free index missing value {v}"),
+    }
+}
+
+fn ms_max(map: &ValueCounts) -> u64 {
+    map.last_key_value().map(|(&v, _)| v).unwrap_or(0)
+}
+
+/// Incrementally-maintained device aggregates over a `Vec<SmState>`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceAccount {
+    /// Per-SM hardware limits (uniform across the device).
+    limits: ResourceVec,
+    /// Cached per-SM free vectors (mirror of each `SmState`'s cache).
+    free: Vec<ResourceVec>,
+    /// Cached per-SM "has a Running cohort" flags.
+    running: Vec<bool>,
+    /// Per-dimension multisets of the per-SM free values.
+    free_threads: ValueCounts,
+    free_blocks: ValueCounts,
+    free_regs: ValueCounts,
+    free_smem: ValueCounts,
+    /// Component-wise sum of `free`.
+    agg_free: ResourceVec,
+    /// SMs with at least one Running cohort.
+    active_sms: u32,
+}
+
+impl DeviceAccount {
+    /// Build from scratch (also the differential-test oracle).
+    pub fn new(sms: &[SmState]) -> DeviceAccount {
+        let limits = sms.first().map(|s| s.limits).unwrap_or(ResourceVec::ZERO);
+        let mut acct = DeviceAccount {
+            limits,
+            free: Vec::with_capacity(sms.len()),
+            running: Vec::with_capacity(sms.len()),
+            free_threads: ValueCounts::new(),
+            free_blocks: ValueCounts::new(),
+            free_regs: ValueCounts::new(),
+            free_smem: ValueCounts::new(),
+            agg_free: ResourceVec::ZERO,
+            active_sms: 0,
+        };
+        for sm in sms {
+            debug_assert_eq!(sm.limits, limits, "non-uniform SM limits");
+            let f = sm.free();
+            ms_insert(&mut acct.free_threads, f.threads);
+            ms_insert(&mut acct.free_blocks, f.blocks);
+            ms_insert(&mut acct.free_regs, f.regs);
+            ms_insert(&mut acct.free_smem, f.smem);
+            acct.agg_free = acct.agg_free.plus(&f);
+            acct.free.push(f);
+            let r = sm.has_running();
+            acct.running.push(r);
+            if r {
+                acct.active_sms += 1;
+            }
+        }
+        acct
+    }
+
+    /// Re-mirror SM `s` after it changed. O(log SMs) when its free vector
+    /// moved, O(1) otherwise.
+    pub fn sync(&mut self, s: usize, sm: &SmState) {
+        let old = self.free[s];
+        let new = sm.free();
+        if old != new {
+            if old.threads != new.threads {
+                ms_remove(&mut self.free_threads, old.threads);
+                ms_insert(&mut self.free_threads, new.threads);
+            }
+            if old.blocks != new.blocks {
+                ms_remove(&mut self.free_blocks, old.blocks);
+                ms_insert(&mut self.free_blocks, new.blocks);
+            }
+            if old.regs != new.regs {
+                ms_remove(&mut self.free_regs, old.regs);
+                ms_insert(&mut self.free_regs, new.regs);
+            }
+            if old.smem != new.smem {
+                ms_remove(&mut self.free_smem, old.smem);
+                ms_insert(&mut self.free_smem, new.smem);
+            }
+            self.agg_free = self.agg_free.minus(&old).plus(&new);
+            self.free[s] = new;
+        }
+        let now_running = sm.has_running();
+        if now_running != self.running[s] {
+            self.running[s] = now_running;
+            if now_running {
+                self.active_sms += 1;
+            } else {
+                self.active_sms -= 1;
+            }
+        }
+    }
+
+    /// Component-wise maxima of the per-SM free vectors (O(log SMs)).
+    pub fn max_free(&self) -> ResourceVec {
+        ResourceVec {
+            threads: ms_max(&self.free_threads),
+            blocks: ms_max(&self.free_blocks),
+            regs: ms_max(&self.free_regs),
+            smem: ms_max(&self.free_smem),
+        }
+    }
+
+    /// Upper bound on blocks of `fp` that fit on the best single SM.
+    /// **0 is exact**: no SM can place even one block.
+    pub fn max_fits_any(&self, fp: &ResourceVec) -> u32 {
+        self.max_free().fits_count(fp)
+    }
+
+    /// Upper bound on the device-wide sum of per-SM fits for `fp`
+    /// (`Σ floor(x_s) ≤ floor(Σ x_s)` per dimension). **0 is exact.**
+    pub fn upper_bound_total_fits(&self, fp: &ResourceVec) -> u32 {
+        self.agg_free.fits_count(fp)
+    }
+
+    /// Aggregate free resources across the device.
+    pub fn agg_free(&self) -> ResourceVec {
+        self.agg_free
+    }
+
+    /// Aggregate used resources (= Σ per-SM `used`).
+    pub fn agg_used(&self) -> ResourceVec {
+        self.limits
+            .times(self.free.len() as u64)
+            .minus(&self.agg_free)
+    }
+
+    /// SMs with at least one Running cohort.
+    pub fn active_sms(&self) -> u32 {
+        self.active_sms
+    }
+
+    /// Differential check: the incremental state must equal a from-scratch
+    /// rebuild. Returns the first discrepancy.
+    pub fn check_against(&self, sms: &[SmState]) -> Result<(), String> {
+        let fresh = DeviceAccount::new(sms);
+        if *self != fresh {
+            return Err(format!(
+                "device account drifted from recompute:\n  incremental: {self:?}\n  fresh: {fresh:?}"
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::{BlockState, Cohort, CohortId, FreezeMode};
+
+    fn limits() -> ResourceVec {
+        ResourceVec::new(1536, 16, 65_536, 100 * 1024)
+    }
+
+    fn cohort(id: u64, ctx: usize, blocks: u32, per: ResourceVec) -> Cohort {
+        Cohort {
+            id: CohortId(id),
+            ctx,
+            kernel: 0,
+            blocks,
+            held: per.times(blocks as u64),
+            started: 0,
+            remaining: 100,
+            state: BlockState::Running,
+            freeze_mode: FreezeMode::KeepAll,
+        }
+    }
+
+    #[test]
+    fn tracks_place_remove_freeze_resume() {
+        let mut sms: Vec<SmState> = (0..4).map(|_| SmState::new(limits())).collect();
+        let mut acct = DeviceAccount::new(&sms);
+        assert_eq!(acct.active_sms(), 0);
+        assert_eq!(acct.agg_used(), ResourceVec::ZERO);
+
+        let per = ResourceVec::new(256, 1, 8192, 0);
+        sms[1].place(cohort(1, 0, 3, per));
+        acct.sync(1, &sms[1]);
+        acct.check_against(&sms).unwrap();
+        assert_eq!(acct.active_sms(), 1);
+        assert_eq!(acct.agg_used(), per.times(3));
+        // best single SM still fits 6 of these (an empty one)
+        assert_eq!(acct.max_fits_any(&per), 6);
+
+        sms[1].freeze_ctx(0, 10, FreezeMode::ReleaseAll);
+        acct.sync(1, &sms[1]);
+        acct.check_against(&sms).unwrap();
+        assert_eq!(acct.active_sms(), 0);
+        assert_eq!(acct.agg_used(), ResourceVec::ZERO);
+
+        sms[1].resume_ctx(0, 20);
+        acct.sync(1, &sms[1]);
+        acct.check_against(&sms).unwrap();
+        assert_eq!(acct.active_sms(), 1);
+
+        sms[1].remove(CohortId(1));
+        acct.sync(1, &sms[1]);
+        acct.check_against(&sms).unwrap();
+        assert_eq!(acct.agg_used(), ResourceVec::ZERO);
+    }
+
+    #[test]
+    fn zero_bounds_are_exact() {
+        let mut sms: Vec<SmState> = (0..2).map(|_| SmState::new(limits())).collect();
+        let mut acct = DeviceAccount::new(&sms);
+        // fill both SMs to the thread limit
+        let per = ResourceVec::new(1536, 1, 0, 0);
+        for (s, sm) in sms.iter_mut().enumerate() {
+            sm.place(cohort(s as u64, 0, 1, per));
+            acct.sync(s, sm);
+        }
+        let fp = ResourceVec::new(32, 1, 0, 0);
+        assert_eq!(acct.max_fits_any(&fp), 0);
+        assert_eq!(acct.upper_bound_total_fits(&fp), 0);
+        // but block slots remain: a zero-thread footprint still fits
+        assert!(acct.max_fits_any(&ResourceVec::new(0, 1, 0, 0)) > 0);
+        acct.check_against(&sms).unwrap();
+    }
+
+    #[test]
+    fn upper_bounds_dominate_exact_sums() {
+        let mut sms: Vec<SmState> = (0..3).map(|_| SmState::new(limits())).collect();
+        let mut acct = DeviceAccount::new(&sms);
+        let a = ResourceVec::new(512, 1, 0, 0);
+        sms[0].place(cohort(1, 0, 2, a)); // 1024 threads used on SM 0
+        acct.sync(0, &sms[0]);
+        let fp = ResourceVec::new(600, 1, 0, 0);
+        let exact: u32 = sms.iter().map(|s| s.fits_blocks(&fp)).sum();
+        assert!(acct.upper_bound_total_fits(&fp) >= exact);
+        assert!(acct.max_fits_any(&fp) >= sms.iter().map(|s| s.fits_blocks(&fp)).max().unwrap());
+        acct.check_against(&sms).unwrap();
+    }
+}

@@ -90,6 +90,30 @@ impl ResourceVec {
         *self == Self::ZERO
     }
 
+    /// How many blocks of per-block footprint `fp` fit in `self` (a *free*
+    /// vector): the component-wise `min(self / fp)`, with zero-demand
+    /// components imposing no limit. Shared by the occupancy calculator,
+    /// [`super::SmState::fits_blocks`] and the device-level accounting
+    /// (DESIGN.md §6a) so every fit query uses identical arithmetic.
+    pub fn fits_count(&self, fp: &ResourceVec) -> u32 {
+        let per = |cap: u64, need: u64| if need == 0 { u64::MAX } else { cap / need };
+        let n = per(self.threads, fp.threads)
+            .min(per(self.blocks, fp.blocks))
+            .min(per(self.regs, fp.regs))
+            .min(per(self.smem, fp.smem));
+        u32::try_from(n.min(u32::MAX as u64)).unwrap()
+    }
+
+    /// Component-wise maximum (used by the max-free-per-SM index).
+    pub fn max_with(&self, other: &ResourceVec) -> ResourceVec {
+        ResourceVec {
+            threads: self.threads.max(other.threads),
+            blocks: self.blocks.max(other.blocks),
+            regs: self.regs.max(other.regs),
+            smem: self.smem.max(other.smem),
+        }
+    }
+
     /// The maximum component-wise fraction of `limit` that `self` uses —
     /// 1.0 means some resource is exhausted. Used by most-room placement.
     pub fn max_fraction_of(&self, limit: &ResourceVec) -> f64 {
@@ -241,6 +265,25 @@ mod tests {
     #[should_panic(expected = "underflow")]
     fn minus_underflow_panics() {
         ResourceVec::new(1, 0, 0, 0).minus(&ResourceVec::new(2, 0, 0, 0));
+    }
+
+    #[test]
+    fn fits_count_component_wise_min() {
+        let free = ResourceVec::new(1536, 16, 65_536, 100 * 1024);
+        // thread-limited: 1536/256 = 6
+        assert_eq!(free.fits_count(&ResourceVec::new(256, 1, 8192, 0)), 6);
+        // zero-demand components impose no limit
+        assert_eq!(free.fits_count(&ResourceVec::new(0, 1, 0, 0)), 16);
+        // nothing fits when one component exceeds capacity
+        assert_eq!(free.fits_count(&ResourceVec::new(2048, 1, 0, 0)), 0);
+        assert_eq!(ResourceVec::ZERO.fits_count(&ResourceVec::new(1, 1, 1, 1)), 0);
+    }
+
+    #[test]
+    fn max_with_is_component_wise() {
+        let a = ResourceVec::new(1, 20, 3, 40);
+        let b = ResourceVec::new(10, 2, 30, 4);
+        assert_eq!(a.max_with(&b), ResourceVec::new(10, 20, 30, 40));
     }
 
     #[test]

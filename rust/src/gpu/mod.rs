@@ -3,10 +3,12 @@
 //! calculator (blocks-per-SM, limiting resource, large-kernel test), and
 //! the per-SM residency state the block scheduler mutates.
 
+pub mod account;
 pub mod config;
 pub mod occupancy;
 pub mod sm;
 
+pub use account::DeviceAccount;
 pub use config::{DeviceConfig, ResourceVec};
 pub use occupancy::{KernelRes, LimitingResource, Occupancy};
 pub use sm::{BlockState, Cohort, CohortId, FreezeMode, SmState};

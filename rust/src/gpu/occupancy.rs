@@ -78,7 +78,9 @@ impl Occupancy {
     }
 
     /// Compute against explicit per-SM limits (used for MPS thread-limited
-    /// views and for brute-force cross-checking in tests).
+    /// views and for brute-force cross-checking in tests). The block count
+    /// is [`ResourceVec::fits_count`] — the same arithmetic the SM state
+    /// and the device account use, so every fit query in the system agrees.
     pub fn compute_within(limits: &ResourceVec, num_sms: u32, res: &KernelRes) -> Occupancy {
         let fp = res.block_footprint();
         let per = |cap: u64, need: u64| -> u64 {
@@ -104,7 +106,8 @@ impl Occupancy {
         } else {
             LimitingResource::SharedMem
         };
-        let blocks_per_sm = u32::try_from(cap.min(u32::MAX as u64)).unwrap();
+        let blocks_per_sm = limits.fits_count(&fp);
+        debug_assert_eq!(blocks_per_sm as u64, cap.min(u32::MAX as u64));
         Occupancy {
             blocks_per_sm,
             device_blocks: blocks_per_sm.saturating_mul(num_sms),

@@ -4,6 +4,13 @@
 //! residency, completion, freezing (time-slice switch) and preemption
 //! (fine-grained mechanism), keeping event counts proportional to
 //! `waves × SMs` rather than to raw block counts (DESIGN.md §6).
+//!
+//! Accounting is fully incremental (DESIGN.md §6a): alongside `used` the SM
+//! caches its `free` vector, per-context resident thread counts, and the
+//! number of Running cohorts, all updated in O(1) on every state change so
+//! the engine's placement and contention hot paths never rescan the cohort
+//! list. `check_invariants` cross-checks every cache against a from-scratch
+//! recompute and is exercised by the differential property tests.
 
 use super::config::ResourceVec;
 use crate::sim::SimTime;
@@ -108,6 +115,15 @@ pub struct SmState {
     pub used: ResourceVec,
     /// Resident cohorts.
     pub cohorts: Vec<Cohort>,
+    /// Cached `limits - used`, maintained incrementally (DESIGN.md §6a).
+    free: ResourceVec,
+    /// Resident (`held`) threads per context, regardless of block state;
+    /// grown on demand. Keeps [`Self::threads_by_ctx`] O(1).
+    ctx_threads: Vec<u64>,
+    /// Sum of `ctx_threads`.
+    held_threads_total: u64,
+    /// Number of cohorts in the Running state.
+    running_cohorts: u32,
 }
 
 impl SmState {
@@ -116,29 +132,45 @@ impl SmState {
             limits,
             used: ResourceVec::ZERO,
             cohorts: Vec::new(),
+            free: limits,
+            ctx_threads: Vec::new(),
+            held_threads_total: 0,
+            running_cohorts: 0,
         }
     }
 
-    /// Free resources right now.
+    /// Free resources right now (cached; O(1)).
     pub fn free(&self) -> ResourceVec {
-        self.limits.minus(&self.used)
+        self.free
+    }
+
+    /// Does at least one Running cohort reside here?
+    pub fn has_running(&self) -> bool {
+        self.running_cohorts > 0
     }
 
     /// How many blocks with `footprint` fit in the current free space.
     pub fn fits_blocks(&self, footprint: &ResourceVec) -> u32 {
-        let free = self.free();
-        let per = |cap: u64, need: u64| if need == 0 { u64::MAX } else { cap / need };
-        let n = per(free.threads, footprint.threads)
-            .min(per(free.blocks, footprint.blocks))
-            .min(per(free.regs, footprint.regs))
-            .min(per(free.smem, footprint.smem));
-        u32::try_from(n.min(u32::MAX as u64)).unwrap()
+        self.free.fits_count(footprint)
+    }
+
+    /// Charge resources: `used` grows, the `free` cache shrinks.
+    fn charge(&mut self, add: &ResourceVec) {
+        self.used = self.used.plus(add);
+        self.free = self.free.minus(add);
+    }
+
+    /// Release resources: `used` shrinks, the `free` cache grows.
+    fn release_res(&mut self, sub: &ResourceVec) {
+        self.used = self.used.minus(sub);
+        self.free = self.free.plus(sub);
     }
 
     /// Place a cohort; panics if it does not fit (callers must check via
     /// [`Self::fits_blocks`] — placement is never speculative).
     pub fn place(&mut self, cohort: Cohort) {
-        let after = self.used.plus(&cohort.held);
+        let charged = Self::charged(&cohort);
+        let after = self.used.plus(&charged);
         assert!(
             after.fits_within(&self.limits),
             "cohort {:?} overflows SM: used={:?} held={:?} limits={:?}",
@@ -147,7 +179,15 @@ impl SmState {
             cohort.held,
             self.limits
         );
-        self.used = after;
+        self.charge(&charged);
+        if cohort.ctx >= self.ctx_threads.len() {
+            self.ctx_threads.resize(cohort.ctx + 1, 0);
+        }
+        self.ctx_threads[cohort.ctx] += cohort.held.threads;
+        self.held_threads_total += cohort.held.threads;
+        if cohort.state == BlockState::Running {
+            self.running_cohorts += 1;
+        }
         self.cohorts.push(cohort);
     }
 
@@ -172,7 +212,12 @@ impl SmState {
             .position(|c| c.id == id)
             .unwrap_or_else(|| panic!("cohort {id:?} not resident"));
         let cohort = self.cohorts.swap_remove(idx);
-        self.used = self.used.minus(&Self::charged(&cohort));
+        self.release_res(&Self::charged(&cohort));
+        self.ctx_threads[cohort.ctx] -= cohort.held.threads;
+        self.held_threads_total -= cohort.held.threads;
+        if cohort.state == BlockState::Running {
+            self.running_cohorts -= 1;
+        }
         cohort
     }
 
@@ -190,42 +235,47 @@ impl SmState {
     /// Returns the frozen cohort ids.
     pub fn freeze_ctx(&mut self, ctx: usize, now: SimTime, mode: FreezeMode) -> Vec<CohortId> {
         let mut frozen = Vec::new();
+        let mut released = ResourceVec::ZERO;
         for c in &mut self.cohorts {
             if c.ctx == ctx && c.state == BlockState::Running {
                 c.remaining = c.remaining_at(now);
                 c.state = BlockState::Frozen;
                 c.freeze_mode = mode;
                 match mode {
-                    FreezeMode::KeepMemOnly => {
-                        self.used = self.used.minus(&exec_part(&c.held));
-                    }
-                    FreezeMode::ReleaseAll => {
-                        self.used = self.used.minus(&c.held);
-                    }
+                    FreezeMode::KeepMemOnly => released = released.plus(&exec_part(&c.held)),
+                    FreezeMode::ReleaseAll => released = released.plus(&c.held),
                     FreezeMode::KeepAll => {}
                 }
+                self.running_cohorts -= 1;
                 frozen.push(c.id);
             }
+        }
+        if !released.is_zero() {
+            self.release_res(&released);
         }
         frozen
     }
 
     /// Freeze one specific cohort (fine-grained preemption victim).
     pub fn freeze_one(&mut self, id: CohortId, now: SimTime, mode: FreezeMode) {
-        let used = &mut self.used;
-        let c = self
+        let idx = self
             .cohorts
-            .iter_mut()
-            .find(|c| c.id == id)
+            .iter()
+            .position(|c| c.id == id)
             .unwrap_or_else(|| panic!("cohort {id:?} not resident"));
+        let c = &mut self.cohorts[idx];
         assert_eq!(c.state, BlockState::Running, "freezing non-running cohort");
         c.remaining = c.remaining_at(now);
         c.state = BlockState::Frozen;
         c.freeze_mode = mode;
-        match mode {
-            FreezeMode::KeepMemOnly => *used = used.minus(&exec_part(&c.held)),
-            FreezeMode::ReleaseAll => *used = used.minus(&c.held),
-            FreezeMode::KeepAll => {}
+        let released = match mode {
+            FreezeMode::KeepMemOnly => exec_part(&c.held),
+            FreezeMode::ReleaseAll => c.held,
+            FreezeMode::KeepAll => ResourceVec::ZERO,
+        };
+        self.running_cohorts -= 1;
+        if !released.is_zero() {
+            self.release_res(&released);
         }
     }
 
@@ -249,29 +299,23 @@ impl SmState {
                         "resume of cohort {:?} overflows SM resources",
                         self.cohorts[i].id
                     );
-                    self.used = after;
+                    self.charge(&add);
                 }
                 let c = &mut self.cohorts[i];
                 c.started = now;
                 c.state = BlockState::Running;
+                self.running_cohorts += 1;
                 resumed.push((c.id, c.finish_time()));
             }
         }
         resumed
     }
 
-    /// Threads resident for contention purposes, split (ctx, others).
+    /// Threads resident for contention purposes, split (ctx, others). O(1)
+    /// via the incremental per-context counters.
     pub fn threads_by_ctx(&self, ctx: usize) -> (u64, u64) {
-        let mut own = 0;
-        let mut other = 0;
-        for c in &self.cohorts {
-            if c.ctx == ctx {
-                own += c.held.threads;
-            } else {
-                other += c.held.threads;
-            }
-        }
-        (own, other)
+        let own = self.ctx_threads.get(ctx).copied().unwrap_or(0);
+        (own, self.held_threads_total - own)
     }
 
     /// Distinct contexts with resident blocks.
@@ -282,18 +326,57 @@ impl SmState {
         v
     }
 
-    /// Debug invariant: `used` equals the sum of cohort holdings and fits
-    /// the limits. Property tests call this after every simulated event.
+    /// Debug invariant: every incremental cache (`used`, `free`,
+    /// `ctx_threads`, `running_cohorts`) equals its from-scratch recompute
+    /// and fits the limits. Property tests call this after every simulated
+    /// event.
     pub fn check_invariants(&self) -> Result<(), String> {
         let mut sum = ResourceVec::ZERO;
+        let mut threads: Vec<u64> = vec![0; self.ctx_threads.len()];
+        let mut running = 0u32;
         for c in &self.cohorts {
             sum = sum.plus(&Self::charged(c));
+            if c.ctx >= threads.len() {
+                threads.resize(c.ctx + 1, 0);
+            }
+            threads[c.ctx] += c.held.threads;
+            if c.state == BlockState::Running {
+                running += 1;
+            }
         }
         if sum != self.used {
             return Err(format!("used {:?} != cohort sum {:?}", self.used, sum));
         }
         if !self.used.fits_within(&self.limits) {
             return Err(format!("used {:?} exceeds limits {:?}", self.used, self.limits));
+        }
+        if self.limits.minus(&self.used) != self.free {
+            return Err(format!(
+                "free cache {:?} != limits - used = {:?}",
+                self.free,
+                self.limits.minus(&self.used)
+            ));
+        }
+        let total: u64 = threads.iter().sum();
+        if total != self.held_threads_total {
+            return Err(format!(
+                "held_threads_total {} != recomputed {total}",
+                self.held_threads_total
+            ));
+        }
+        for (ctx, &t) in threads.iter().enumerate() {
+            if self.ctx_threads.get(ctx).copied().unwrap_or(0) != t {
+                return Err(format!(
+                    "ctx_threads[{ctx}] {} != recomputed {t}",
+                    self.ctx_threads.get(ctx).copied().unwrap_or(0)
+                ));
+            }
+        }
+        if running != self.running_cohorts {
+            return Err(format!(
+                "running_cohorts {} != recomputed {running}",
+                self.running_cohorts
+            ));
         }
         Ok(())
     }
@@ -328,9 +411,12 @@ mod tests {
         sm.place(cohort(1, 0, 3, per, 0, 100));
         assert_eq!(sm.used, per.times(3));
         assert_eq!(sm.fits_blocks(&per), 3); // 1536/256=6 total, 3 used
+        assert!(sm.has_running());
         let c = sm.remove(CohortId(1));
         assert_eq!(c.blocks, 3);
         assert!(sm.used.is_zero());
+        assert_eq!(sm.free(), limits());
+        assert!(!sm.has_running());
         sm.check_invariants().unwrap();
     }
 
@@ -369,9 +455,11 @@ mod tests {
         assert_eq!(c.state, BlockState::Frozen);
         assert_eq!(c.remaining, 300); // 500 - (1200-1000)
         assert_eq!(sm.used, per.times(2)); // still held
+        assert!(!sm.has_running());
         // resume at t=5000 -> finishes at 5300
         let resumed = sm.resume_ctx(0, 5000);
         assert_eq!(resumed, vec![(CohortId(1), 5300)]);
+        assert!(sm.has_running());
         sm.check_invariants().unwrap();
     }
 
@@ -416,6 +504,8 @@ mod tests {
         assert_eq!(sm.get(CohortId(1)).unwrap().state, BlockState::Frozen);
         assert_eq!(sm.get(CohortId(2)).unwrap().state, BlockState::Running);
         assert_eq!(sm.get(CohortId(1)).unwrap().remaining, 50);
+        assert!(sm.has_running());
+        sm.check_invariants().unwrap();
     }
 
     #[test]
@@ -437,7 +527,21 @@ mod tests {
         sm.place(cohort(2, 1, 3, per, 0, 100));
         assert_eq!(sm.threads_by_ctx(0), (256, 384));
         assert_eq!(sm.threads_by_ctx(1), (384, 256));
+        // an unknown ctx owns nothing and sees everything as "other"
+        assert_eq!(sm.threads_by_ctx(5), (0, 640));
         assert_eq!(sm.resident_ctxs(), vec![0, 1]);
+    }
+
+    #[test]
+    fn threads_by_ctx_counts_frozen_cohorts() {
+        // Frozen cohorts stay resident: the split must not change.
+        let mut sm = SmState::new(limits());
+        let per = ResourceVec::new(128, 1, 4096, 0);
+        sm.place(cohort(1, 0, 2, per, 0, 100));
+        sm.place(cohort(2, 1, 3, per, 0, 100));
+        sm.freeze_ctx(1, 10, FreezeMode::ReleaseAll);
+        assert_eq!(sm.threads_by_ctx(0), (256, 384));
+        sm.check_invariants().unwrap();
     }
 
     #[test]

@@ -135,6 +135,93 @@ impl RunReport {
         }
         self.hidden_save_ns as f64 / self.total_save_ns as f64
     }
+
+    /// Serialize the full report as JSON with a fixed field order, so two
+    /// identical runs produce byte-identical strings. This is the
+    /// determinism oracle: the guard test asserts the serialization is
+    /// unchanged by the parallel experiment fan-out.
+    pub fn to_json(&self) -> String {
+        use crate::util::json::escape as esc;
+        use std::fmt::Write as _;
+        let opt = |v: Option<SimTime>| -> String {
+            v.map(|t| t.to_string()).unwrap_or_else(|| "null".into())
+        };
+        // JSON has no NaN/inf; degenerate device configs (a zero resource
+        // dimension) can produce non-finite fractions — emit null instead.
+        let num = |x: f64| -> String {
+            if x.is_finite() {
+                format!("{x:?}")
+            } else {
+                "null".into()
+            }
+        };
+        let mut j = String::new();
+        let _ = write!(
+            j,
+            "{{\"mechanism\":\"{}\",\"workload\":\"{}\"",
+            esc(&self.mechanism),
+            esc(&self.workload)
+        );
+        let _ = write!(j, ",\"requests\":[");
+        for (i, r) in self.requests.iter().enumerate() {
+            let _ = write!(
+                j,
+                "{}{{\"id\":{},\"arrived\":{},\"completed\":{}}}",
+                if i > 0 { "," } else { "" },
+                r.id,
+                r.arrived,
+                r.completed
+            );
+        }
+        let _ = write!(
+            j,
+            "],\"train_done\":{},\"infer_done\":{}",
+            opt(self.train_done),
+            opt(self.infer_done)
+        );
+        let _ = write!(j, ",\"ops\":[");
+        for (i, o) in self.ops.iter().enumerate() {
+            let kind = match o.kind {
+                OpKind::Kernel => "kernel",
+                OpKind::TransferH2D => "h2d",
+                OpKind::TransferD2H => "d2h",
+            };
+            let _ = write!(
+                j,
+                "{}{{\"kind\":\"{kind}\",\"issued\":{},\"done\":{},\"reference\":{}}}",
+                if i > 0 { "," } else { "" },
+                o.issued,
+                o.done,
+                o.reference
+            );
+        }
+        let _ = write!(j, "],\"occupancy\":[");
+        for (i, s) in self.occupancy.iter().enumerate() {
+            let _ = write!(
+                j,
+                "{}{{\"t\":{},\"thread_frac\":{},\"reg_frac\":{},\"smem_frac\":{},\
+                 \"block_frac\":{},\"active_sms\":{}}}",
+                if i > 0 { "," } else { "" },
+                s.t,
+                num(s.thread_frac),
+                num(s.reg_frac),
+                num(s.smem_frac),
+                num(s.block_frac),
+                s.active_sms
+            );
+        }
+        let oom = match &self.oom {
+            Some(m) => format!("\"{}\"", esc(m)),
+            None => "null".into(),
+        };
+        let _ = write!(
+            j,
+            "],\"oom\":{oom},\"sim_end\":{},\"events\":{},\"preemptions\":{},\
+             \"hidden_save_ns\":{},\"total_save_ns\":{}}}",
+            self.sim_end, self.events, self.preemptions, self.hidden_save_ns, self.total_save_ns
+        );
+        j
+    }
 }
 
 #[cfg(test)]
@@ -193,5 +280,54 @@ mod tests {
     fn hidden_fraction_guards_zero() {
         let rep = RunReport::default();
         assert_eq!(rep.hidden_save_fraction(), 0.0);
+    }
+
+    #[test]
+    fn json_is_valid_and_stable() {
+        let mut rep = RunReport {
+            mechanism: "mps".into(),
+            workload: "quote\"and\\slash".into(),
+            sim_end: 123,
+            events: 7,
+            ..Default::default()
+        };
+        rep.requests.push(RequestRecord {
+            id: 1,
+            arrived: 10,
+            completed: 30,
+        });
+        rep.ops.push(OpRecord {
+            kind: OpKind::TransferH2D,
+            issued: 0,
+            done: 5,
+            reference: 4096,
+        });
+        rep.occupancy.push(OccupancySample {
+            t: 9,
+            thread_frac: 0.5,
+            reg_frac: 0.25,
+            smem_frac: 0.0,
+            block_frac: 1.0,
+            active_sms: 82,
+        });
+        let a = rep.to_json();
+        let b = rep.to_json();
+        assert_eq!(a, b, "serialization must be stable");
+        let parsed = crate::util::json::Json::parse(&a).unwrap();
+        assert_eq!(parsed.get("mechanism").unwrap().as_str(), Some("mps"));
+        assert_eq!(
+            parsed.get("workload").unwrap().as_str(),
+            Some("quote\"and\\slash")
+        );
+        assert_eq!(parsed.get("events").unwrap().as_f64(), Some(7.0));
+        assert_eq!(parsed.get("train_done"), Some(&crate::util::json::Json::Null));
+        let r = parsed.get("requests").unwrap().idx(0).unwrap();
+        assert_eq!(r.get("completed").unwrap().as_f64(), Some(30.0));
+        let s = parsed.get("occupancy").unwrap().idx(0).unwrap();
+        assert_eq!(s.get("thread_frac").unwrap().as_f64(), Some(0.5));
+        assert_eq!(
+            parsed.get("ops").unwrap().idx(0).unwrap().get("kind").unwrap().as_str(),
+            Some("h2d")
+        );
     }
 }

@@ -7,9 +7,16 @@
 //! The [`ModelExecutor`] trait abstracts the executor so the coordinator
 //! can be tested without artifacts ([`MockExecutor`]) and benchmarked
 //! against the real thing ([`PjrtModel`]).
+//!
+//! The real PJRT path needs the `xla` crate, which the offline build image
+//! does not vendor; it is gated behind the `pjrt` cargo feature. The
+//! default build substitutes stubs that still load manifests and parameter
+//! blobs (pure file I/O) but report an error on compile/execute, so every
+//! caller and test compiles unchanged (DESIGN.md §2 "Dependency reality").
 
 use super::manifest::{EntrySpec, Manifest, TensorSpec};
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{anyhow, bail};
 use std::path::Path;
 
 /// A host tensor fed to / returned from an executable.
@@ -51,13 +58,14 @@ impl Tensor {
         dtype_ok && self.shape() == spec.shape.as_slice()
     }
 
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
             Tensor::F32(d, _) => xla::Literal::vec1(d),
             Tensor::I32(d, _) => xla::Literal::vec1(d),
         };
-        Ok(lit.reshape(&dims)?)
+        lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
     }
 }
 
@@ -74,11 +82,13 @@ pub trait ModelExecutor {
 }
 
 /// The real PJRT-backed runtime holding the client and manifest.
+#[cfg(feature = "pjrt")]
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtRuntime {
     /// Create a CPU PJRT client and load the manifest from `dir`.
     pub fn load(dir: impl AsRef<Path>) -> Result<PjrtRuntime> {
@@ -107,22 +117,60 @@ impl PjrtRuntime {
 
     /// Load a parameter blob as tensors shaped per the manifest.
     pub fn load_params(&self, blob: &str) -> Result<Vec<Tensor>> {
-        let arrays = self.manifest.load_params(blob)?;
-        let specs = &self.manifest.param_blobs[blob].arrays;
-        Ok(arrays
-            .into_iter()
-            .zip(specs)
-            .map(|(data, spec)| Tensor::f32(data, &spec.shape))
-            .collect())
+        load_param_tensors(&self.manifest, blob)
     }
 }
 
+/// Manifest-only stand-in used when the `pjrt` feature is off: manifest and
+/// parameter-blob loading still work (pure file I/O), compilation reports
+/// an actionable error.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtRuntime {
+    pub manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtRuntime {
+    pub fn load(dir: impl AsRef<Path>) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(&dir)?;
+        Ok(PjrtRuntime { manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (built without the `pjrt` feature)".to_string()
+    }
+
+    pub fn compile(&self, name: &str) -> Result<PjrtModel> {
+        let _ = self.manifest.entry(name)?;
+        bail!(
+            "cannot compile '{name}': built without the `pjrt` feature \
+             (requires a vendored `xla` crate)"
+        )
+    }
+
+    pub fn load_params(&self, blob: &str) -> Result<Vec<Tensor>> {
+        load_param_tensors(&self.manifest, blob)
+    }
+}
+
+fn load_param_tensors(manifest: &Manifest, blob: &str) -> Result<Vec<Tensor>> {
+    let arrays = manifest.load_params(blob)?;
+    let specs = &manifest.param_blobs[blob].arrays;
+    Ok(arrays
+        .into_iter()
+        .zip(specs)
+        .map(|(data, spec)| Tensor::f32(data, &spec.shape))
+        .collect())
+}
+
 /// One compiled entry point.
+#[cfg(feature = "pjrt")]
 pub struct PjrtModel {
     exe: xla::PjRtLoadedExecutable,
     entry: EntrySpec,
 }
 
+#[cfg(feature = "pjrt")]
 impl ModelExecutor for PjrtModel {
     fn entry(&self) -> &EntrySpec {
         &self.entry
@@ -185,6 +233,27 @@ impl ModelExecutor for PjrtModel {
                 Ok(Tensor::f32(data, &spec.shape))
             })
             .collect()
+    }
+}
+
+/// Never constructible without the `pjrt` feature ([`PjrtRuntime::compile`]
+/// errors first); exists so signatures match across builds.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtModel {
+    entry: EntrySpec,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl ModelExecutor for PjrtModel {
+    fn entry(&self) -> &EntrySpec {
+        &self.entry
+    }
+
+    fn execute(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        bail!(
+            "cannot execute '{}': built without the `pjrt` feature",
+            self.entry.name
+        )
     }
 }
 

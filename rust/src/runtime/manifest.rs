@@ -1,8 +1,9 @@
 //! The AOT artifact manifest (`artifacts/manifest.json`) and parameter
 //! blobs produced by `python/compile/aot.py`.
 
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
+use crate::{anyhow, bail};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 

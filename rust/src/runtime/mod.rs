@@ -8,6 +8,12 @@ pub mod manifest;
 pub use executor::{MockExecutor, ModelExecutor, PjrtModel, PjrtRuntime, Tensor};
 pub use manifest::{EntrySpec, Manifest, ParamBlob, TensorSpec};
 
+/// Whether this build can actually compile/execute artifacts (the `pjrt`
+/// feature). The stub build still loads manifests and parameter blobs.
+pub fn pjrt_available() -> bool {
+    cfg!(feature = "pjrt")
+}
+
 /// Default artifacts directory (overridable via `GPUSHARE_ARTIFACTS`).
 pub fn artifacts_dir() -> std::path::PathBuf {
     std::env::var("GPUSHARE_ARTIFACTS")

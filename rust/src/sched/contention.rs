@@ -47,7 +47,11 @@ impl ContentionModel {
     }
 
     /// Slowdown factor for a cohort of context `ctx` about to be placed on
-    /// `sm`, with `other_ctx_running_anywhere` precomputed by the engine.
+    /// `sm`, with `other_ctx_running_anywhere` precomputed by the engine
+    /// (its per-context running-block counters). O(1): the per-SM thread
+    /// split comes from `SmState`'s incremental per-context counters, not a
+    /// cohort-list rescan (DESIGN.md §6a) — this runs once per cohort
+    /// placement, squarely on the dispatch hot path.
     pub fn factor(
         &self,
         dev: &DeviceConfig,

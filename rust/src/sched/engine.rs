@@ -15,7 +15,8 @@
 //! compounded delay (O1) are discussed in DESIGN.md §6.
 
 use crate::gpu::{
-    BlockState, Cohort, CohortId, DeviceConfig, FreezeMode, Occupancy, ResourceVec, SmState,
+    BlockState, Cohort, CohortId, DeviceAccount, DeviceConfig, FreezeMode, Occupancy, ResourceVec,
+    SmState,
 };
 use crate::metrics::{OccupancySample, OpKind, OpRecord, RequestRecord, RunReport};
 use crate::preempt::PreemptCostModel;
@@ -162,9 +163,22 @@ pub struct Engine {
     cfg: EngineConfig,
     ctxs: Vec<CtxRt>,
     sms: Vec<SmState>,
+    /// Incremental device aggregates + max-free index over `sms`
+    /// (DESIGN.md §6a). Must be `sync`ed after every SM mutation.
+    acct: DeviceAccount,
     kernels: Vec<KernelRt>,
     /// Dispatch queue: kernel ids in arrival order (leftover policy order).
+    /// Completed kernels are tombstoned (skipped via `KernelRt::done`) and
+    /// compacted amortizedly instead of O(n)-removed per completion.
     queue: Vec<usize>,
+    /// Tombstoned (completed) entries still present in `queue`.
+    queue_dead: usize,
+    /// Reusable scratch for the dispatch order / placement loops, so the
+    /// per-event hot path performs no allocation in steady state.
+    scratch_order: Vec<usize>,
+    scratch_fits: Vec<u32>,
+    scratch_assigned: Vec<u32>,
+    scratch_idx: Vec<usize>,
     events: EventQueue<Ev>,
     now: SimTime,
     next_cohort: u64,
@@ -200,9 +214,10 @@ impl Engine {
         if let Mechanism::Baseline = cfg.mechanism {
             assert_eq!(defs.len(), 1, "baseline runs a single task");
         }
-        let sms = (0..cfg.dev.num_sms)
+        let sms: Vec<SmState> = (0..cfg.dev.num_sms)
             .map(|_| SmState::new(cfg.dev.sm_limits))
             .collect();
+        let acct = DeviceAccount::new(&sms);
         let n = defs.len();
         let ctxs: Vec<CtxRt> = defs
             .into_iter()
@@ -234,8 +249,14 @@ impl Engine {
             cfg,
             ctxs,
             sms,
+            acct,
             kernels: Vec::new(),
             queue: Vec::new(),
+            queue_dead: 0,
+            scratch_order: Vec::new(),
+            scratch_fits: Vec::new(),
+            scratch_assigned: Vec::new(),
+            scratch_idx: Vec::new(),
             events: EventQueue::new(),
             now: 0,
             next_cohort: 0,
@@ -474,30 +495,28 @@ impl Engine {
     }
 
     /// The dispatch-queue order for this mechanism: indices into
-    /// `self.queue` of kernels with pending blocks, most-preferred first.
-    fn dispatch_order(&self) -> Vec<usize> {
-        let mut ids: Vec<usize> = self
-            .queue
-            .iter()
-            .copied()
-            .filter(|&k| {
-                let kr = &self.kernels[k];
-                kr.pending_blocks() > 0 && self.ctx_dispatchable(kr.ctx)
-            })
-            .collect();
+    /// `self.queue` of kernels with pending blocks, most-preferred first,
+    /// written into `out` (reused scratch — no steady-state allocation).
+    fn fill_dispatch_order(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(self.queue.iter().copied().filter(|&k| {
+            let kr = &self.kernels[k];
+            !kr.done && kr.pending_blocks() > 0 && self.ctx_dispatchable(kr.ctx)
+        }));
         if self.priority_ordered() {
             // Highest stream priority first; FIFO within a priority level
             // (stable sort preserves arrival order).
-            ids.sort_by_key(|&k| std::cmp::Reverse(self.ctxs[self.kernels[k].ctx].priority));
+            out.sort_by_key(|&k| std::cmp::Reverse(self.ctxs[self.kernels[k].ctx].priority));
         }
-        ids
     }
 
     /// Run the block scheduler until no further placement is possible.
     fn try_place(&mut self) {
+        let mut order = std::mem::take(&mut self.scratch_order);
         loop {
-            let order = self.dispatch_order();
+            self.fill_dispatch_order(&mut order);
             let mut placed_any = false;
+            let mut head_blocked = false;
             for &kid in &order {
                 let placed = self.place_kernel(kid);
                 if placed > 0 {
@@ -519,15 +538,17 @@ impl Engine {
                         if placed == 0 {
                             self.reactive_preempt(kid);
                         }
-                        return;
+                        head_blocked = true;
+                        break;
                     }
                     // else: fall through to the next kernel in the queue
                 }
             }
-            if !placed_any {
-                return;
+            if head_blocked || !placed_any {
+                break;
             }
         }
+        self.scratch_order = order;
     }
 
     /// Place as many of kernel `kid`'s pending blocks as fit. Returns the
@@ -549,19 +570,25 @@ impl Engine {
             && self.kernels[kid].inflight == 0
             && self.kernels[kid].finished == 0
         {
-            let any_fit = self.sms.iter().any(|sm| sm.fits_blocks(&fp) > 0);
-            let other_mem_held = self.sms.iter().any(|sm| {
-                sm.cohorts
-                    .iter()
-                    .any(|c| c.ctx != ctx && (c.held.regs > 0 || c.held.smem > 0))
-            });
-            if !any_fit && other_mem_held {
-                self.report.oom = Some(format!(
-                    "process '{}' cannot schedule any block: registers/shared memory \
-                     held resident by the other process across time slices (O3)",
-                    self.ctxs[ctx].name
-                ));
-                return 0;
+            // the O(1) zero bound is exact; only a positive bound needs the
+            // per-SM confirmation scan, and the cohort scan for foreign
+            // memory runs only once nothing fits (the OOM-candidate case)
+            let any_fit = self.acct.max_fits_any(&fp) > 0
+                && self.sms.iter().any(|sm| sm.fits_blocks(&fp) > 0);
+            if !any_fit {
+                let other_mem_held = self.sms.iter().any(|sm| {
+                    sm.cohorts
+                        .iter()
+                        .any(|c| c.ctx != ctx && (c.held.regs > 0 || c.held.smem > 0))
+                });
+                if other_mem_held {
+                    self.report.oom = Some(format!(
+                        "process '{}' cannot schedule any block: registers/shared memory \
+                         held resident by the other process across time slices (O3)",
+                        self.ctxs[ctx].name
+                    ));
+                    return 0;
+                }
             }
         }
 
@@ -622,31 +649,71 @@ impl Engine {
         is_resume: bool,
     ) -> u32 {
         let fp = self.kernels[kid].fp;
+        // O(1) fast exit off the max-free index: nothing fits on any SM —
+        // the common steady state while a kernel is resource-blocked. A
+        // zero bound is exact, so the per-SM scan below only runs when at
+        // least one SM *may* take a block (DESIGN.md §6a).
+        if self.acct.max_fits_any(&fp) == 0 {
+            return 0;
+        }
+        let mut fits = std::mem::take(&mut self.scratch_fits);
+        let mut assigned = std::mem::take(&mut self.scratch_assigned);
+        let mut idx = std::mem::take(&mut self.scratch_idx);
+        let placed = self.place_blocks_inner(
+            kid,
+            ctx,
+            want,
+            resume_remaining,
+            is_resume,
+            &mut fits,
+            &mut assigned,
+            &mut idx,
+        );
+        self.scratch_fits = fits;
+        self.scratch_assigned = assigned;
+        self.scratch_idx = idx;
+        placed
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn place_blocks_inner(
+        &mut self,
+        kid: usize,
+        ctx: usize,
+        want: u32,
+        resume_remaining: SimTime,
+        is_resume: bool,
+        fits: &mut Vec<u32>,
+        assigned: &mut Vec<u32>,
+        idx: &mut Vec<usize>,
+    ) -> u32 {
+        let fp = self.kernels[kid].fp;
         let placement = self
             .preempt_cfg()
             .map(|p| p.placement)
             .unwrap_or(PlacementPolicy::MostRoom);
         let nsms = self.sms.len();
         // Per-SM scratch: how many more blocks fit, and how many we assign.
-        let mut fits: Vec<u32> = (0..nsms)
-            .map(|i| {
-                if self.sm_allowed(ctx, i) {
-                    self.sms[i].fits_blocks(&fp)
-                } else {
-                    0
-                }
-            })
-            .collect();
-        // Fast exit: nothing fits anywhere (the common steady state while a
-        // kernel is resource-blocked) — skip sorting entirely.
+        fits.clear();
+        fits.extend((0..nsms).map(|i| {
+            if self.sm_allowed(ctx, i) {
+                self.sms[i].fits_blocks(&fp)
+            } else {
+                0
+            }
+        }));
+        // Under static partitioning the allowed subset can still be full
+        // even though the device-wide bound passed.
         if fits.iter().all(|&f| f == 0) {
             return 0;
         }
-        let mut assigned: Vec<u32> = vec![0; nsms];
+        assigned.clear();
+        assigned.resize(nsms, 0);
         // SMs with room, ordered by the policy's preference. Keys are
         // precomputed once (sorting with recomputed float keys dominated
         // the event loop before — see EXPERIMENTS.md §Perf).
-        let mut idx: Vec<usize> = (0..nsms).filter(|&i| fits[i] > 0).collect();
+        idx.clear();
+        idx.extend((0..nsms).filter(|&i| fits[i] > 0));
         match placement {
             PlacementPolicy::MostRoom => {
                 idx.sort_by_cached_key(|&a| {
@@ -725,6 +792,7 @@ impl Engine {
                 freeze_mode: FreezeMode::KeepAll,
             };
             self.sms[s].place(cohort);
+            self.acct.sync(s, &self.sms[s]);
             self.running_blocks[ctx] += assigned[s];
             self.events.push(self.now + dur, Ev::CohortDone { sm: s, id });
             placed += assigned[s];
@@ -743,6 +811,7 @@ impl Engine {
             return;
         }
         let cohort = self.sms[sm].remove(id);
+        self.acct.sync(sm, &self.sms[sm]);
         let kid = cohort.kernel as usize;
         let ctx = cohort.ctx;
         self.running_blocks[ctx] -= cohort.blocks;
@@ -758,7 +827,16 @@ impl Engine {
         };
         if kernel_done {
             self.kernels[kid].done = true;
-            self.queue.retain(|&q| q != kid);
+            // Tombstone instead of O(n) retain per completion: done kernels
+            // are skipped by the dispatch order; compact once they dominate
+            // (amortized O(1) per removal).
+            self.queue_dead += 1;
+            if self.queue_dead * 2 > self.queue.len() {
+                let mut q = std::mem::take(&mut self.queue);
+                q.retain(|&k| !self.kernels[k].done);
+                self.queue = q;
+                self.queue_dead = 0;
+            }
             if self.cfg.record_ops && self.ctxs[ctx].is_inference {
                 self.report.ops.push(OpRecord {
                     kind: OpKind::Kernel,
@@ -934,23 +1012,20 @@ impl Engine {
         };
         if outgoing != incoming {
             let mut frozen_blocks = 0u32;
+            // exec-state threads leave the device during the freeze; both
+            // tallies come straight from the cohorts frozen by this switch
+            // (no device-wide cohort rescan)
+            let mut threads_frozen = 0u64;
             for s in 0..self.sms.len() {
                 for id in self.sms[s].freeze_ctx(outgoing, self.now, mode) {
                     let c = self.sms[s].get(id).unwrap();
                     frozen_blocks += c.blocks;
+                    threads_frozen += c.held.threads;
                 }
+                self.acct.sync(s, &self.sms[s]);
             }
             if frozen_blocks > 0 {
                 self.running_blocks[outgoing] -= frozen_blocks;
-            }
-            // exec-state threads leave the device during the freeze
-            let mut threads_frozen = 0u64;
-            for s in 0..self.sms.len() {
-                for c in &self.sms[s].cohorts {
-                    if c.ctx == outgoing && c.state == BlockState::Frozen {
-                        threads_frozen += c.held.threads;
-                    }
-                }
             }
             self.ctxs[outgoing].threads_resident = self.ctxs[outgoing]
                 .threads_resident
@@ -1011,6 +1086,7 @@ impl Engine {
                 resumed_threads += c.held.threads;
                 self.events.push(finish, Ev::CohortDone { sm: s, id });
             }
+            self.acct.sync(s, &self.sms[s]);
         }
         self.running_blocks[ctx] += resumed_blocks;
         self.ctxs[ctx].threads_resident += resumed_threads;
@@ -1069,9 +1145,14 @@ impl Engine {
         };
         let occ = Occupancy::compute(&self.cfg.dev, &next.res);
         let first_wave = next.grid_blocks.min(occ.device_blocks);
-        // How many of those fit already?
+        // How many of those fit already? The O(1) aggregate bound skips the
+        // device scan in the common fully-packed state (zero is exact).
         let fp = next.res.block_footprint();
-        let fit_now: u32 = self.sms.iter().map(|s| s.fits_blocks(&fp)).sum();
+        let fit_now: u32 = if self.acct.upper_bound_total_fits(&fp) == 0 {
+            0
+        } else {
+            self.sms.iter().map(|s| s.fits_blocks(&fp)).sum()
+        };
         // Reservation window: the cover period (current kernel/transfer/gap)
         // plus slack for the launch gap that follows it.
         let hold_until = self.now + gap_ns.max(50 * US) + 20 * US;
@@ -1138,21 +1219,13 @@ impl Engine {
             let (_, other) = self.sms[s].threads_by_ctx(for_ctx);
             std::cmp::Reverse(other)
         });
-        let capacity = |free: &ResourceVec| -> u32 {
-            let per = |cap: u64, need: u64| if need == 0 { u64::MAX } else { cap / need };
-            per(free.threads, fp.threads)
-                .min(per(free.blocks, fp.blocks))
-                .min(per(free.regs, fp.regs))
-                .min(per(free.smem, fp.smem))
-                .min(u32::MAX as u64) as u32
-        };
         // Projected post-save capacity across the device: current fits plus
         // every frozen victim's contribution — so a campaign frees exactly
         // enough, not the whole device.
         let mut will_fit = 0u32;
         'outer: for s in order {
             let mut projected_free = self.sms[s].free();
-            let mut sm_cap = capacity(&projected_free);
+            let mut sm_cap = projected_free.fits_count(fp);
             will_fit += sm_cap;
             if will_fit >= needed {
                 break;
@@ -1176,6 +1249,7 @@ impl Engine {
                     (c.blocks, c.held, c.ctx)
                 };
                 self.sms[s].freeze_one(id, self.now, FreezeMode::KeepAll);
+                self.acct.sync(s, &self.sms[s]);
                 self.running_blocks[vctx] -= blocks;
                 self.ctxs[vctx].threads_resident = self.ctxs[vctx]
                     .threads_resident
@@ -1188,7 +1262,7 @@ impl Engine {
                 self.report.hidden_save_ns += save_ns.min(hide_ns) as u128;
                 // account this victim's projected contribution
                 projected_free = projected_free.plus(&held);
-                let new_cap = capacity(&projected_free);
+                let new_cap = projected_free.fits_count(fp);
                 will_fit += new_cap - sm_cap;
                 sm_cap = new_cap;
                 if will_fit >= needed {
@@ -1206,6 +1280,7 @@ impl Engine {
         let Some(pos) = pos else { return };
         self.saving.swap_remove(pos);
         let cohort = self.sms[sm].remove(id);
+        self.acct.sync(sm, &self.sms[sm]);
         debug_assert_eq!(cohort.state, BlockState::Frozen);
         let flavor = self
             .preempt_cfg()
@@ -1236,14 +1311,10 @@ impl Engine {
         }
         self.next_occ_sample = self.now + interval;
         let dev = &self.cfg.dev;
-        let mut used = ResourceVec::ZERO;
-        let mut active_sms = 0;
-        for sm in &self.sms {
-            used = used.plus(&sm.used);
-            if sm.cohorts.iter().any(|c| c.state == BlockState::Running) {
-                active_sms += 1;
-            }
-        }
+        // O(1): device aggregates and the active-SM count come from the
+        // incremental account instead of an all-SM scan per sample.
+        let used = self.acct.agg_used();
+        let active_sms = self.acct.active_sms();
         let total = dev.sm_limits.times(dev.num_sms as u64);
         self.report.occupancy.push(OccupancySample {
             t: self.now,
@@ -1255,13 +1326,17 @@ impl Engine {
         });
     }
 
-    /// Test hook: validate all SM invariants.
+    /// Test hook: validate all SM invariants plus the device account's
+    /// differential invariant (incremental state == from-scratch rebuild).
     #[cfg(test)]
     fn check_all_sms(&self) {
         for (i, sm) in self.sms.iter().enumerate() {
             if let Err(e) = sm.check_invariants() {
                 panic!("SM {i} invariant violation at t={}: {e}", self.now);
             }
+        }
+        if let Err(e) = self.acct.check_against(&self.sms) {
+            panic!("device-account invariant violation at t={}: {e}", self.now);
         }
     }
 }
@@ -1478,6 +1553,7 @@ mod tests {
                     eng.try_place();
                 }
             }
+            eng.check_all_sms();
             for c in &eng.ctxs {
                 assert!(
                     c.threads_resident <= cap,

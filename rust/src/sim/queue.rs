@@ -94,8 +94,14 @@ impl<E> EventQueue<E> {
         self.heap.is_empty()
     }
 
+    /// Reset to the freshly-constructed state: drops all pending events and
+    /// rewinds `seq` and `watermark`, so a cleared queue can be reused for a
+    /// new simulation without spuriously panicking on "scheduled in the
+    /// past" (the watermark of the previous run would otherwise leak in).
     pub fn clear(&mut self) {
         self.heap.clear();
+        self.seq = 0;
+        self.watermark = 0;
     }
 }
 
@@ -143,6 +149,25 @@ mod tests {
         assert_eq!(q.len(), 1);
         assert_eq!(q.pop(), Some((7, 1)));
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn clear_resets_watermark_and_seq_for_reuse() {
+        // Regression: clear() used to drop the heap but keep the watermark,
+        // so reusing the queue at earlier times panicked.
+        let mut q = EventQueue::new();
+        q.push(100, "a");
+        q.push(200, "b");
+        assert_eq!(q.pop(), Some((100, "a")));
+        q.clear();
+        assert!(q.is_empty());
+        // earlier than the old watermark: must be accepted again
+        q.push(5, "c");
+        q.push(5, "d");
+        // seq restarted: FIFO order among equal times starts fresh
+        assert_eq!(q.pop(), Some((5, "c")));
+        assert_eq!(q.pop(), Some((5, "d")));
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

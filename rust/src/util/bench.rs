@@ -171,6 +171,64 @@ impl Bencher {
         &self.results
     }
 
+    /// Fold another harness's results into this one, so entries measured
+    /// under a different [`BenchConfig`] (e.g. few-sample end-to-end
+    /// sweeps) land in the same CSV/JSON trajectory.
+    pub fn merge(&mut self, other: Bencher) {
+        self.results.extend(other.results);
+    }
+
+    /// Serialize results as the `BENCH_perf.json` trajectory: one entry per
+    /// benchmark with wall time per iteration and throughput (events/sec
+    /// for the simulator entries). CI appends one file per run so the
+    /// series tracks the engine's performance over time.
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut j = String::from("{\"schema\":\"gpushare-bench-v1\",\"benchmarks\":[");
+        for (i, r) in self.results.iter().enumerate() {
+            let name = crate::util::json::escape(&r.name);
+            let items = r
+                .items_per_iter
+                .map(|n| n.to_string())
+                .unwrap_or_else(|| "null".into());
+            // sub-ns medians truncate to 0 and yield an infinite rate;
+            // JSON has no inf, so emit null for anything non-finite
+            let tput = r
+                .throughput_per_sec()
+                .filter(|t| t.is_finite())
+                .map(|t| format!("{t:.1}"))
+                .unwrap_or_else(|| "null".into());
+            let _ = write!(
+                j,
+                "{}{{\"name\":\"{name}\",\"median_ns\":{},\"mad_ns\":{},\"min_ns\":{},\
+                 \"max_ns\":{},\"samples\":{},\"iters_per_sample\":{},\
+                 \"items_per_iter\":{items},\"throughput_per_s\":{tput}}}",
+                if i > 0 { "," } else { "" },
+                r.median.as_nanos(),
+                r.mad.as_nanos(),
+                r.min.as_nanos(),
+                r.max.as_nanos(),
+                r.samples,
+                r.iters_per_sample,
+            );
+        }
+        j.push_str("]}");
+        j
+    }
+
+    /// Write the JSON trajectory to `path` (logs the destination).
+    pub fn write_json(&self, path: &std::path::Path) {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).ok();
+            }
+        }
+        match std::fs::write(path, self.to_json()) {
+            Ok(()) => println!("[json] {}", path.display()),
+            Err(e) => eprintln!("warn: cannot write {}: {e}", path.display()),
+        }
+    }
+
     /// Write results as CSV for the §Perf before/after log.
     pub fn to_csv(&self) -> String {
         let mut out = String::from("name,median_ns,mad_ns,min_ns,max_ns,samples,iters,throughput_per_s\n");
@@ -243,5 +301,28 @@ mod tests {
         });
         let csv = b.to_csv();
         assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn json_trajectory_is_parseable() {
+        let mut b = Bencher::with_config(tiny_cfg());
+        b.bench_items("events", Some(500), |iters| {
+            for _ in 0..iters {
+                black_box((0..500u64).sum::<u64>());
+            }
+        });
+        b.bench("no-items", || {
+            black_box(1 + 1);
+        });
+        let parsed = crate::util::json::Json::parse(&b.to_json()).unwrap();
+        assert_eq!(
+            parsed.get("schema").unwrap().as_str(),
+            Some("gpushare-bench-v1")
+        );
+        let benches = parsed.get("benchmarks").unwrap().as_arr().unwrap();
+        assert_eq!(benches.len(), 2);
+        assert_eq!(benches[0].get("name").unwrap().as_str(), Some("events"));
+        assert!(benches[0].get("throughput_per_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(benches[1].get("items_per_iter"), Some(&crate::util::json::Json::Null));
     }
 }

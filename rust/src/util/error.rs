@@ -1,0 +1,125 @@
+//! Minimal error type replacing the `anyhow` facade (not vendored in this
+//! offline environment — DESIGN.md §2 "Dependency reality").
+//!
+//! Provides the subset the crate actually uses: a string-backed [`Error`],
+//! a [`Result`] alias, `anyhow!`/`bail!` macros with the same spelling, and
+//! a [`Context`] extension trait for `Result`/`Option`.
+
+use std::fmt;
+
+/// A string-backed error. Context added via [`Context`] is prepended,
+/// `anyhow`-style (`outer: inner`).
+#[derive(Clone, Debug)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error(m.to_string())
+    }
+
+    /// Prepend a context layer.
+    pub fn context(self, ctx: impl fmt::Display) -> Error {
+        Error(format!("{ctx}: {}", self.0))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error(s.to_string())
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error(e.to_string())
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (the `anyhow!` shape).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `anyhow::Context`-alike for `Result` and `Option`.
+pub trait Context<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 42)
+    }
+
+    #[test]
+    fn bail_and_context_compose() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner 42");
+        let e2 = fails().with_context(|| format!("layer {}", 1)).unwrap_err();
+        assert_eq!(e2.to_string(), "layer 1: inner 42");
+    }
+
+    #[test]
+    fn option_context() {
+        let x: Option<u32> = None;
+        assert_eq!(x.context("missing").unwrap_err().to_string(), "missing");
+        let y: Option<u32> = Some(3);
+        assert_eq!(y.context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let e = anyhow!("x={} y={}", 1, 2);
+        assert_eq!(e.to_string(), "x=1 y=2");
+    }
+}

@@ -70,6 +70,29 @@ impl Json {
     }
 }
 
+/// Escape a string for embedding inside a JSON string literal (the
+/// surrounding quotes are the caller's). Shared by every hand-rolled
+/// serializer in the crate (`RunReport::to_json`, `Bencher::to_json`) so
+/// they agree with this module's parser.
+pub fn escape(s: &str) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
@@ -314,5 +337,13 @@ mod tests {
     fn unicode_passthrough() {
         let j = Json::parse("\"héllo → ∞\"").unwrap();
         assert_eq!(j.as_str(), Some("héllo → ∞"));
+    }
+
+    #[test]
+    fn escape_roundtrips_through_parser() {
+        for s in ["plain", "quote\"and\\slash", "tabs\tnew\nlines", "ctl\u{1}", "uni → ∞"] {
+            let doc = format!("\"{}\"", escape(s));
+            assert_eq!(Json::parse(&doc).unwrap().as_str(), Some(s), "{s:?}");
+        }
     }
 }

@@ -1,0 +1,70 @@
+//! Determinism guard: identical seeds must yield byte-identical
+//! `RunReport` JSON whether the experiment fan-out runs one simulation per
+//! core or strictly serially — parallelism must never change results, only
+//! wall time (DESIGN.md §8a).
+
+use gpushare::exp::{paper_mechanisms, run_comparisons, Protocol};
+use gpushare::sched::Mechanism;
+use gpushare::sim::MS;
+use gpushare::workload::DlModel;
+
+fn proto(parallel: bool) -> Protocol {
+    Protocol {
+        requests: 8,
+        train_steps: 4,
+        record_ops: true,
+        occupancy_sample_ns: Some(MS),
+        parallel,
+        ..Protocol::default()
+    }
+}
+
+#[test]
+fn fanout_yields_byte_identical_reports() {
+    let mechs = {
+        let mut m = paper_mechanisms();
+        m.push(Mechanism::fine_grained_default());
+        m
+    };
+    let pairs = [
+        (DlModel::AlexNet, DlModel::AlexNet),
+        (DlModel::ResNet50, DlModel::ResNet50),
+    ];
+    let par = run_comparisons(&proto(true), &pairs, &mechs);
+    let ser = run_comparisons(&proto(false), &pairs, &mechs);
+    assert_eq!(par.len(), ser.len());
+    for (a, b) in par.iter().zip(&ser) {
+        assert_eq!(a.model.name(), b.model.name());
+        assert_eq!(a.baseline_turnaround_ms, b.baseline_turnaround_ms);
+        assert_eq!(a.baseline_train_s, b.baseline_train_s);
+        assert_eq!(a.per_mechanism.len(), b.per_mechanism.len());
+        for ((na, ra), (nb, rb)) in a.per_mechanism.iter().zip(&b.per_mechanism) {
+            assert_eq!(na, nb);
+            assert_eq!(
+                ra.to_json(),
+                rb.to_json(),
+                "{} under {na}: parallel and serial runs diverged",
+                a.model.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn repeated_runs_share_one_json_byte_for_byte() {
+    let p = proto(true);
+    let a = p
+        .pair(Mechanism::mps_default(), DlModel::AlexNet, DlModel::AlexNet)
+        .to_json();
+    let b = p
+        .pair(Mechanism::mps_default(), DlModel::AlexNet, DlModel::AlexNet)
+        .to_json();
+    assert_eq!(a, b);
+    // and a different seed actually changes the bytes (the guard is alive)
+    let mut p2 = proto(true);
+    p2.seed = 1234567;
+    let c = p2
+        .pair(Mechanism::mps_default(), DlModel::AlexNet, DlModel::AlexNet)
+        .to_json();
+    assert_ne!(a, c, "seed must influence the report");
+}

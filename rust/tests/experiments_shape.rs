@@ -6,9 +6,8 @@
 use gpushare::exp::{paper_mechanisms, MechanismComparison, Protocol};
 use gpushare::sched::{Mechanism, PlacementPolicy, PreemptConfig, PreemptPolicy};
 use gpushare::workload::DlModel;
-use once_cell::sync::Lazy;
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 
 fn proto() -> Protocol {
     // scaled for the single-core CI box; the bench targets run the full
@@ -23,11 +22,13 @@ fn proto() -> Protocol {
 
 /// Comparisons are deterministic per model: compute once, share across the
 /// shape tests (they run in one process).
-static CMP_CACHE: Lazy<Mutex<BTreeMap<&'static str, MechanismComparison>>> =
-    Lazy::new(|| Mutex::new(BTreeMap::new()));
+static CMP_CACHE: OnceLock<Mutex<BTreeMap<&'static str, MechanismComparison>>> = OnceLock::new();
 
 fn cmp_for(model: DlModel) -> MechanismComparison {
-    let mut cache = CMP_CACHE.lock().unwrap();
+    let mut cache = CMP_CACHE
+        .get_or_init(|| Mutex::new(BTreeMap::new()))
+        .lock()
+        .unwrap();
     cache
         .entry(model.name())
         .or_insert_with(|| {

@@ -190,8 +190,8 @@ fn failing_executor_reports_failures_not_hangs() {
         fn execute(
             &self,
             _inputs: &[gpushare::runtime::Tensor],
-        ) -> anyhow::Result<Vec<gpushare::runtime::Tensor>> {
-            anyhow::bail!("injected failure")
+        ) -> gpushare::util::error::Result<Vec<gpushare::runtime::Tensor>> {
+            Err(gpushare::anyhow!("injected failure"))
         }
     }
     let cfg = ServeConfig {

@@ -2,8 +2,8 @@
 //! coordinator, using the in-crate prop framework (util::prop).
 
 use gpushare::gpu::{
-    BlockState, Cohort, CohortId, DeviceConfig, FreezeMode, KernelRes, Occupancy, ResourceVec,
-    SmState,
+    BlockState, Cohort, CohortId, DeviceAccount, DeviceConfig, FreezeMode, KernelRes, Occupancy,
+    ResourceVec, SmState,
 };
 use gpushare::preempt::HidingAnalysis;
 use gpushare::sched::{run, CtxDef, EngineConfig, Mechanism};
@@ -138,6 +138,143 @@ fn prop_sm_invariants_under_random_operations() {
                 }
             }
             sm.check_invariants()?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_device_account_matches_recompute() {
+    // The incremental-accounting invariant (DESIGN.md §6a): after random
+    // place / freeze (time-slice + preempt flavors) / resume / complete
+    // sequences, every cached per-SM free vector, the per-context thread
+    // counters, the device aggregates and the max-free index must exactly
+    // equal a from-scratch recompute — and the O(1) fit bounds must
+    // dominate the exact per-SM scans.
+    run_prop("device-account-differential", cfgd(), |g| {
+        let limits = ResourceVec::new(1536, 16, 65_536, 100 * 1024);
+        let nsms = g.usize(1, 6);
+        let mut sms: Vec<SmState> = (0..nsms).map(|_| SmState::new(limits)).collect();
+        let mut acct = DeviceAccount::new(&sms);
+        let mut next_id = 0u64;
+        // (sm index, id) of cohorts currently resident
+        let mut resident: Vec<(usize, CohortId)> = Vec::new();
+        let steps = g.usize(1, 80);
+        for _ in 0..steps {
+            match g.u64(0, 4) {
+                0 | 1 => {
+                    // place a random cohort on a random SM if it fits
+                    let s = g.usize(0, nsms - 1);
+                    let res = KernelRes::new(
+                        *g.pick(&[32u32, 64, 128, 256]),
+                        g.u64(8, 64) as u32,
+                        *g.pick(&[0u32, 2048, 8192]),
+                    );
+                    let fp = res.block_footprint();
+                    let fits = sms[s].fits_blocks(&fp);
+                    if fits == 0 {
+                        continue;
+                    }
+                    let blocks = g.u64(1, fits as u64) as u32;
+                    let id = CohortId(next_id);
+                    next_id += 1;
+                    sms[s].place(Cohort {
+                        id,
+                        ctx: g.usize(0, 2),
+                        kernel: 0,
+                        blocks,
+                        held: fp.times(blocks as u64),
+                        started: 0,
+                        remaining: g.u64(1, 1000),
+                        state: BlockState::Running,
+                        freeze_mode: FreezeMode::KeepAll,
+                    });
+                    resident.push((s, id));
+                    acct.sync(s, &sms[s]);
+                }
+                2 => {
+                    // complete (or post-save removal): remove a random cohort
+                    if let Some(i) =
+                        (!resident.is_empty()).then(|| g.usize(0, resident.len() - 1))
+                    {
+                        let (s, id) = resident.swap_remove(i);
+                        sms[s].remove(id);
+                        acct.sync(s, &sms[s]);
+                    }
+                }
+                3 => {
+                    // freeze: whole-ctx (time-slice switch) or single cohort
+                    // (fine-grained preemption victim)
+                    let s = g.usize(0, nsms - 1);
+                    let mode = *g.pick(&[
+                        FreezeMode::KeepAll,
+                        FreezeMode::KeepMemOnly,
+                        FreezeMode::ReleaseAll,
+                    ]);
+                    if g.bool() {
+                        sms[s].freeze_ctx(g.usize(0, 2), g.u64(0, 100), mode);
+                    } else if let Some(&(cs, id)) = resident
+                        .iter()
+                        .find(|&&(cs, id)| {
+                            cs == s
+                                && sms[cs].get(id).is_some_and(|c| c.state == BlockState::Running)
+                        })
+                    {
+                        sms[cs].freeze_one(id, g.u64(0, 100), mode);
+                    }
+                    acct.sync(s, &sms[s]);
+                }
+                _ => {
+                    // resume a ctx on one SM when its exec space still fits
+                    let s = g.usize(0, nsms - 1);
+                    let ctx = g.usize(0, 2);
+                    let addable = sms[s]
+                        .cohorts
+                        .iter()
+                        .filter(|c| c.ctx == ctx && c.state == BlockState::Frozen)
+                        .fold(ResourceVec::ZERO, |acc, c| {
+                            let add = match c.freeze_mode {
+                                FreezeMode::KeepMemOnly => {
+                                    ResourceVec::new(c.held.threads, c.held.blocks, 0, 0)
+                                }
+                                FreezeMode::ReleaseAll => c.held,
+                                FreezeMode::KeepAll => ResourceVec::ZERO,
+                            };
+                            acc.plus(&add)
+                        });
+                    if sms[s].used.plus(&addable).fits_within(&sms[s].limits) {
+                        sms[s].resume_ctx(ctx, g.u64(100, 200));
+                    }
+                    acct.sync(s, &sms[s]);
+                }
+            }
+            // per-SM caches match their recomputes
+            for sm in &sms {
+                sm.check_invariants()?;
+            }
+            // device aggregates + max-free index match a fresh rebuild
+            acct.check_against(&sms)?;
+            // the O(1) bounds dominate (and zero bounds are exact) for a
+            // random probe footprint
+            let probe = KernelRes::new(
+                *g.pick(&[32u32, 64, 256, 1024]),
+                g.u64(1, 96) as u32,
+                *g.pick(&[0u32, 4096, 32 * 1024]),
+            )
+            .block_footprint();
+            let exact_max = sms.iter().map(|x| x.fits_blocks(&probe)).max().unwrap_or(0);
+            let exact_sum: u32 = sms.iter().map(|x| x.fits_blocks(&probe)).sum();
+            check_le(exact_max, acct.max_fits_any(&probe), "max-free bound dominates")?;
+            check_le(
+                exact_sum,
+                acct.upper_bound_total_fits(&probe),
+                "aggregate bound dominates",
+            )?;
+            // aggregate used equals the per-SM sum
+            let agg: ResourceVec = sms
+                .iter()
+                .fold(ResourceVec::ZERO, |acc, x| acc.plus(&x.used));
+            check_eq(agg, acct.agg_used(), "aggregate used")?;
         }
         Ok(())
     });

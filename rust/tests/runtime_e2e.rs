@@ -5,12 +5,16 @@
 use gpushare::coordinator::batcher::BatchRunner;
 use gpushare::coordinator::{serve, BatcherConfig, GovernorMode, ServeConfig};
 use gpushare::examples_support::{mlp_runner, mlp_trainer_factory, synthetic_batch, MLP_IN};
-use gpushare::runtime::{artifacts_dir, ModelExecutor, PjrtRuntime, Tensor};
+use gpushare::runtime::{artifacts_dir, pjrt_available, ModelExecutor, PjrtRuntime, Tensor};
 use gpushare::util::rng::Rng;
 use std::path::PathBuf;
 use std::time::Duration;
 
 fn artifacts() -> Option<PathBuf> {
+    if !pjrt_available() {
+        eprintln!("skipping runtime e2e: built without the `pjrt` feature");
+        return None;
+    }
     let dir = artifacts_dir();
     if dir.join("manifest.json").exists() {
         Some(dir)
