@@ -5,7 +5,8 @@
 
 use gpushare::coordinator::batcher::{BatchRunner, Batcher, BatcherConfig};
 use gpushare::coordinator::{serve, GovernorMode, ServeConfig};
-use gpushare::exp::{run_parallel, Job, Protocol};
+use gpushare::exp::{mig_mechanisms, run_parallel, Job, Protocol};
+use gpushare::gpu::DeviceConfig;
 use gpushare::runtime::{MockExecutor, ModelExecutor};
 use gpushare::sched::Mechanism;
 use gpushare::sim::EventQueue;
@@ -219,6 +220,21 @@ fn main() {
         |iters| {
             for _ in 0..iters {
                 black_box(fast_sweep(&serial, &mechs));
+            }
+        },
+    );
+
+    // --- the MIG scenario sweep: three instance splits on the A100-style
+    // device (per-instance accounts + dispatch are their own hot path) ---
+    let mig_fast = Protocol::fast().on_device(DeviceConfig::a100());
+    let mig_mechs = mig_mechanisms();
+    let mig_events = fast_sweep(&mig_fast, &mig_mechs);
+    sweep_bench.bench_items(
+        &format!("sweep: Protocol::fast a100 mig splits ({mig_events} events)"),
+        Some(mig_events),
+        |iters| {
+            for _ in 0..iters {
+                black_box(fast_sweep(&mig_fast, &mig_mechs));
             }
         },
     );

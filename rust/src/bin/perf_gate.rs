@@ -1,0 +1,216 @@
+//! CI perf-regression gate: compare a fresh `BENCH_perf.json` against the
+//! committed `BENCH_baseline.json` and fail (exit 1) when any simulator
+//! events/sec entry regressed by more than the tolerance (default 20%).
+//!
+//! Usage:
+//!   perf_gate <BENCH_baseline.json> <BENCH_perf.json> [--tolerance 0.20]
+//!             [--all] [--update]
+//!
+//! * Only entries whose names start with `sim:` or `sweep:` gate by
+//!   default (events/sec — the stable, machine-comparable series);
+//!   `--all` gates every entry carrying a throughput.
+//! * Entry names embed probe event counts ("... (123 events)"); matching
+//!   strips that suffix so a workload-size drift does not silently skip
+//!   the comparison.
+//! * `--update` rewrites the baseline after a passing run as the
+//!   per-entry max of baseline and fresh throughput — an upward-only
+//!   ratchet (commit the result to move the bar; the floor never drops).
+//!
+//! The committed baseline is deliberately conservative (a floor any CI
+//! runner clears), so the gate catches order-of-magnitude regressions —
+//! ratchet it upward once real runner numbers accumulate.
+
+use gpushare::util::json::Json;
+use std::process::ExitCode;
+
+struct Entry {
+    name: String,
+    throughput: f64,
+}
+
+/// Strip a trailing " (N events)" probe-count suffix for name matching.
+fn normalized(name: &str) -> String {
+    if name.ends_with("events)") {
+        if let Some(i) = name.rfind(" (") {
+            return name[..i].to_string();
+        }
+    }
+    name.to_string()
+}
+
+fn load(path: &str) -> Result<Vec<Entry>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    let json = Json::parse(&text).map_err(|e| format!("cannot parse {path}: {e}"))?;
+    let benches = json
+        .get("benchmarks")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{path}: no `benchmarks` array"))?;
+    let mut out = Vec::new();
+    for b in benches {
+        let name = b.get("name").and_then(Json::as_str).unwrap_or_default();
+        let Some(tput) = b.get("throughput_per_s").and_then(Json::as_f64) else {
+            continue; // null throughput: wall-time-only entry
+        };
+        if name.is_empty() || !tput.is_finite() || tput <= 0.0 {
+            continue;
+        }
+        out.push(Entry {
+            name: name.to_string(),
+            throughput: tput,
+        });
+    }
+    Ok(out)
+}
+
+fn run() -> Result<bool, String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut paths = Vec::new();
+    let mut tolerance = match std::env::var("PERF_GATE_TOLERANCE") {
+        Ok(v) => v.parse::<f64>().map_err(|e| format!("bad PERF_GATE_TOLERANCE: {e}"))?,
+        Err(_) => 0.20,
+    };
+    let mut all = false;
+    let mut update = false;
+    let mut it = args.into_iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--tolerance" => {
+                let v = it.next().ok_or("--tolerance needs a value")?;
+                tolerance = v.parse::<f64>().map_err(|e| format!("bad tolerance: {e}"))?;
+            }
+            "--all" => all = true,
+            "--update" => update = true,
+            _ => paths.push(a),
+        }
+    }
+    let [baseline_path, fresh_path] = paths.as_slice() else {
+        return Err(
+            "usage: perf_gate <BENCH_baseline.json> <BENCH_perf.json> \
+             [--tolerance 0.20] [--all] [--update]"
+                .to_string(),
+        );
+    };
+    if !(0.0..1.0).contains(&tolerance) {
+        return Err(format!("tolerance {tolerance} not in [0, 1)"));
+    }
+    let baseline = load(baseline_path)?;
+    let fresh = load(fresh_path)?;
+    let gated = |n: &str| all || n.starts_with("sim:") || n.starts_with("sweep:");
+
+    let mut compared = 0usize;
+    let mut regressed = 0usize;
+    let mut missing = 0usize;
+    println!(
+        "{:<44} {:>14} {:>14} {:>8}",
+        "benchmark", "baseline/s", "fresh/s", "delta"
+    );
+    for b in baseline.iter().filter(|b| gated(&b.name)) {
+        let key = normalized(&b.name);
+        let Some(f) = fresh.iter().find(|f| normalized(&f.name) == key) else {
+            // A gated baseline entry with no fresh counterpart is a
+            // failure, not a skip: a renamed or deleted benchmark must not
+            // silently drop its regression coverage (rename it in the
+            // baseline too, or remove the row deliberately).
+            println!("{:<44} {:>14.0} {:>14} {:>8}", key, b.throughput, "-", "MISSING");
+            missing += 1;
+            continue;
+        };
+        compared += 1;
+        let delta = f.throughput / b.throughput - 1.0;
+        let verdict = if f.throughput < b.throughput * (1.0 - tolerance) {
+            regressed += 1;
+            "FAIL"
+        } else {
+            "ok"
+        };
+        println!(
+            "{:<44} {:>14.0} {:>14.0} {:>+7.1}% {}",
+            key,
+            b.throughput,
+            f.throughput,
+            delta * 100.0,
+            verdict
+        );
+    }
+    if compared == 0 {
+        return Err("no comparable benchmarks between baseline and fresh run".to_string());
+    }
+    if missing > 0 {
+        println!(
+            "\n{missing} gated baseline entr{} missing from the fresh run — \
+             update {baseline_path} to match the renamed/removed benchmarks",
+            if missing == 1 { "y is" } else { "ies are" }
+        );
+        return Ok(false);
+    }
+    if regressed > 0 {
+        println!(
+            "\n{regressed}/{compared} gated benchmarks regressed > {:.0}% vs {baseline_path}",
+            tolerance * 100.0
+        );
+        return Ok(false);
+    }
+    println!(
+        "\nall {compared} gated benchmarks within {:.0}% of {baseline_path}",
+        tolerance * 100.0
+    );
+    if update {
+        // Upward ratchet only: per-entry max of the prior baseline and the
+        // fresh (passing) run, so repeated updates on slow runners can
+        // never walk the floor downward.
+        let merged = write_ratcheted(&baseline, &fresh);
+        std::fs::write(baseline_path, merged)
+            .map_err(|e| format!("cannot update {baseline_path}: {e}"))?;
+        println!("baseline ratcheted from {fresh_path} (per-entry max, never lowered)");
+    }
+    Ok(true)
+}
+
+/// Serialize the ratcheted baseline: every fresh entry at
+/// `max(baseline, fresh)` throughput, keeping baseline entries the fresh
+/// run no longer produces (a passing gate guarantees none are gated).
+fn write_ratcheted(baseline: &[Entry], fresh: &[Entry]) -> String {
+    use gpushare::util::json::escape;
+    use std::fmt::Write as _;
+    let mut out = String::from(
+        "{\"schema\":\"gpushare-bench-v1\",\"note\":\"perf-gate baseline, ratcheted: \
+         per-entry max of prior baseline and last passing run\",\"benchmarks\":[",
+    );
+    let mut first = true;
+    let mut push = |out: &mut String, name: &str, tput: f64| {
+        let _ = write!(
+            out,
+            "{}{{\"name\":\"{}\",\"throughput_per_s\":{:.1}}}",
+            if first { "" } else { "," },
+            escape(name),
+            tput
+        );
+        first = false;
+    };
+    for f in fresh {
+        let floor = baseline
+            .iter()
+            .find(|b| normalized(&b.name) == normalized(&f.name))
+            .map(|b| b.throughput)
+            .unwrap_or(0.0);
+        push(&mut out, &f.name, f.throughput.max(floor));
+    }
+    for b in baseline {
+        if !fresh.iter().any(|f| normalized(&f.name) == normalized(&b.name)) {
+            push(&mut out, &b.name, b.throughput);
+        }
+    }
+    out.push_str("]}");
+    out
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::from(1),
+        Err(e) => {
+            eprintln!("perf_gate: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -10,5 +10,8 @@ pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig, BatcherStats, InferResponse, WorkerHooks};
 pub use governor::{Governor, GovernorMode};
-pub use router::{Router, RouterStats, Ticket};
-pub use server::{serve, ServeConfig, ServeReport, TrainStepFn};
+pub use router::{InstanceRoutes, Router, RouterStats, Ticket};
+pub use server::{
+    serve, serve_slo_routed, InstanceLaneReport, ServeConfig, ServeReport, SloServeConfig,
+    SloServeReport, TrainStepFn,
+};

@@ -2,6 +2,13 @@
 //! requests by model name to the matching batcher, tracks conservation
 //! (every admitted request is answered or reported failed), and exposes the
 //! latency statistics the experiments report.
+//!
+//! Multi-instance serving (the coordinator analogue of `Mechanism::Mig`):
+//! a model may be backed by *two* batchers standing for two GPU instances
+//! — a latency instance (tight batch window, small slice) and a throughput
+//! instance (wide window, big slice). [`Router::route_slo`] picks the
+//! instance from the request's deadline, and [`Ticket::wait`] records SLO
+//! violations per route.
 
 use super::batcher::{Batcher, InferResponse};
 use crate::util::stats::Summary;
@@ -10,9 +17,22 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+/// Two GPU-instance lanes serving one model, split by SLO.
+#[derive(Clone)]
+pub struct InstanceRoutes {
+    /// The latency instance: requests with deadlines ≤ `cutoff`.
+    pub latency: Arc<Batcher>,
+    /// The throughput instance: everything else.
+    pub throughput: Arc<Batcher>,
+    /// Deadline at or under which a request is latency-critical.
+    pub cutoff: Duration,
+}
+
 /// Router over named models.
 pub struct Router {
     routes: BTreeMap<String, Arc<Batcher>>,
+    /// SLO-split multi-instance routes (may be empty).
+    slo_routes: BTreeMap<String, InstanceRoutes>,
     pub stats: Mutex<RouterStats>,
 }
 
@@ -22,6 +42,11 @@ pub struct RouterStats {
     pub completed: u64,
     pub failed: u64,
     pub rejected: u64,
+    /// Completed requests whose turnaround exceeded their deadline.
+    pub slo_violations: u64,
+    /// Requests sent to the latency / throughput instance lanes.
+    pub routed_latency: u64,
+    pub routed_throughput: u64,
     /// Turnarounds in ms for completed requests.
     pub turnaround_ms: Vec<f64>,
 }
@@ -35,22 +60,32 @@ impl RouterStats {
 /// A pending routed request.
 pub struct Ticket {
     pub id: u64,
+    /// The SLO deadline this request was admitted under, if any.
+    pub deadline: Option<Duration>,
     rx: mpsc::Receiver<InferResponse>,
     router: Arc<Router>,
 }
 
 impl Ticket {
-    /// Wait for the response (recording stats on the router).
+    /// Wait for the response (recording stats — including an SLO violation
+    /// when a deadline was attached and missed — on the router).
     pub fn wait(self, timeout: Duration) -> Option<InferResponse> {
         match self.rx.recv_timeout(timeout) {
             Ok(resp) => {
                 let mut st = self.router.stats.lock().unwrap();
                 st.completed += 1;
                 st.turnaround_ms.push(resp.turnaround.as_secs_f64() * 1e3);
+                if self.deadline.is_some_and(|d| resp.turnaround > d) {
+                    st.slo_violations += 1;
+                }
                 Some(resp)
             }
             Err(_) => {
-                self.router.stats.lock().unwrap().failed += 1;
+                let mut st = self.router.stats.lock().unwrap();
+                st.failed += 1;
+                if self.deadline.is_some() {
+                    st.slo_violations += 1;
+                }
                 None
             }
         }
@@ -59,8 +94,18 @@ impl Ticket {
 
 impl Router {
     pub fn new(routes: BTreeMap<String, Arc<Batcher>>) -> Arc<Router> {
+        Self::with_slo_routes(routes, BTreeMap::new())
+    }
+
+    /// A router with SLO-split multi-instance lanes in addition to (or
+    /// instead of) the plain per-model routes.
+    pub fn with_slo_routes(
+        routes: BTreeMap<String, Arc<Batcher>>,
+        slo_routes: BTreeMap<String, InstanceRoutes>,
+    ) -> Arc<Router> {
         Arc::new(Router {
             routes,
+            slo_routes,
             stats: Mutex::new(RouterStats::default()),
         })
     }
@@ -88,6 +133,45 @@ impl Router {
         self.stats.lock().unwrap().admitted += 1;
         Some(Ticket {
             id,
+            deadline: None,
+            rx,
+            router: self.clone(),
+        })
+    }
+
+    /// Route a deadline-carrying request to the model's SLO-appropriate
+    /// GPU-instance lane: `deadline ≤ cutoff` ⇒ the latency instance,
+    /// else the throughput instance. Returns None (a rejection) when the
+    /// model has no multi-instance route or the input is malformed.
+    pub fn route_slo(
+        self: &Arc<Self>,
+        model: &str,
+        input: Vec<f32>,
+        deadline: Duration,
+    ) -> Option<Ticket> {
+        let Some(ir) = self.slo_routes.get(model) else {
+            self.stats.lock().unwrap().rejected += 1;
+            return None;
+        };
+        let tight = deadline <= ir.cutoff;
+        let lane = if tight { &ir.latency } else { &ir.throughput };
+        if input.len() != lane.in_features() {
+            self.stats.lock().unwrap().rejected += 1;
+            return None;
+        }
+        let (id, rx) = lane.submit(input);
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.admitted += 1;
+            if tight {
+                st.routed_latency += 1;
+            } else {
+                st.routed_throughput += 1;
+            }
+        }
+        Some(Ticket {
+            id,
+            deadline: Some(deadline),
             rx,
             router: self.clone(),
         })
@@ -166,5 +250,89 @@ mod tests {
         let st = r.stats.lock().unwrap();
         assert_eq!(st.failed, 1);
         assert_eq!(st.admitted, 1);
+    }
+
+    fn slo_router(cutoff_ms: u64) -> (Arc<Router>, Arc<Batcher>, Arc<Batcher>) {
+        let lat = Batcher::new(
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+            },
+            4,
+        );
+        let thr = Batcher::new(
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+            4,
+        );
+        let mut slo = BTreeMap::new();
+        slo.insert(
+            "mlp".to_string(),
+            InstanceRoutes {
+                latency: lat.clone(),
+                throughput: thr.clone(),
+                cutoff: Duration::from_millis(cutoff_ms),
+            },
+        );
+        (Router::with_slo_routes(BTreeMap::new(), slo), lat, thr)
+    }
+
+    #[test]
+    fn slo_routing_picks_instance_by_deadline() {
+        let (r, lat, thr) = slo_router(10);
+        let workers = [lat.clone(), thr.clone()].map(|b| {
+            std::thread::spawn(move || b.run_worker(runner(), Default::default()))
+        });
+        // tight deadline -> latency instance; loose -> throughput instance
+        let t1 = r.route_slo("mlp", vec![1.0; 4], Duration::from_millis(5)).unwrap();
+        let t2 = r.route_slo("mlp", vec![1.0; 4], Duration::from_millis(100)).unwrap();
+        assert!(t1.wait(Duration::from_secs(5)).is_some());
+        assert!(t2.wait(Duration::from_secs(5)).is_some());
+        lat.close();
+        thr.close();
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert!(r.conserved());
+        let st = r.stats.lock().unwrap();
+        assert_eq!(st.routed_latency, 1);
+        assert_eq!(st.routed_throughput, 1);
+        assert_eq!(st.completed, 2);
+        // both lanes actually executed one request each
+        assert_eq!(lat.stats.lock().unwrap().requests, 1);
+        assert_eq!(thr.stats.lock().unwrap().requests, 1);
+    }
+
+    #[test]
+    fn slo_violation_counted_on_miss_and_timeout() {
+        let (r, lat, _thr) = slo_router(10);
+        // impossible deadline: completion always violates it
+        let worker = {
+            let b = lat.clone();
+            std::thread::spawn(move || b.run_worker(runner(), Default::default()))
+        };
+        let t = r.route_slo("mlp", vec![0.0; 4], Duration::from_nanos(1)).unwrap();
+        assert!(t.wait(Duration::from_secs(5)).is_some());
+        lat.close();
+        worker.join().unwrap();
+        assert_eq!(r.stats.lock().unwrap().slo_violations, 1);
+        // a timed-out deadline request is a violation too (throughput lane
+        // has no worker, so the response never arrives)
+        let t = r.route_slo("mlp", vec![0.0; 4], Duration::from_millis(100)).unwrap();
+        assert!(t.wait(Duration::from_millis(20)).is_none());
+        let st = r.stats.lock().unwrap();
+        assert_eq!(st.slo_violations, 2);
+        assert_eq!(st.failed, 1);
+    }
+
+    #[test]
+    fn slo_route_requires_multi_instance_entry() {
+        let (r, _b) = router(); // plain routes only
+        assert!(r
+            .route_slo("mlp", vec![0.0; 4], Duration::from_millis(1))
+            .is_none());
+        assert_eq!(r.stats.lock().unwrap().rejected, 1);
     }
 }

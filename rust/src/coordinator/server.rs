@@ -3,10 +3,16 @@
 //! workload (latency-sensitive inference + best-effort training) on *real*
 //! compute. Used by `examples/serve_inference.rs` (with PJRT executors) and
 //! by the coordinator tests/benches (with mocks).
+//!
+//! [`serve_slo_routed`] is the multi-instance variant: two batcher workers
+//! stand for two GPU instances (a latency instance with a tight batch
+//! window and a throughput instance with a wide one), and the router
+//! splits the request stream between them by deadline — the coordinator
+//! analogue of `Mechanism::Mig`'s per-instance SLO routing.
 
 use super::batcher::{BatchRunner, Batcher, BatcherConfig, WorkerHooks};
 use super::governor::{Governor, GovernorMode};
-use super::router::Router;
+use super::router::{InstanceRoutes, Router};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use std::collections::BTreeMap;
@@ -212,6 +218,181 @@ pub fn serve(
     }
 }
 
+/// Configuration of the two-instance SLO-routed serving scenario.
+#[derive(Clone, Debug)]
+pub struct SloServeConfig {
+    /// Total inference requests to issue.
+    pub requests: u32,
+    /// Probability a request carries the tight deadline.
+    pub tight_fraction: f64,
+    /// Deadline attached to latency-critical requests (≤ `cutoff`).
+    pub tight_deadline: Duration,
+    /// Deadline attached to best-effort requests.
+    pub loose_deadline: Duration,
+    /// Router cutoff separating the two lanes.
+    pub cutoff: Duration,
+    /// Batching policy of the latency instance (tight window).
+    pub latency_batcher: BatcherConfig,
+    /// Batching policy of the throughput instance (wide window).
+    pub throughput_batcher: BatcherConfig,
+    pub in_features: usize,
+    /// Mean inter-arrival (Poisson); `None` = closed loop.
+    pub mean_interarrival: Option<Duration>,
+    pub seed: u64,
+    pub timeout: Duration,
+}
+
+impl Default for SloServeConfig {
+    fn default() -> Self {
+        Self {
+            requests: 100,
+            tight_fraction: 0.3,
+            tight_deadline: Duration::from_millis(10),
+            loose_deadline: Duration::from_millis(200),
+            cutoff: Duration::from_millis(20),
+            latency_batcher: BatcherConfig {
+                max_batch: 2,
+                max_wait: Duration::from_micros(200),
+            },
+            throughput_batcher: BatcherConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(4),
+            },
+            in_features: 784,
+            mean_interarrival: None,
+            seed: 42,
+            timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Per-instance outcome of the SLO-routed run.
+#[derive(Clone, Debug)]
+pub struct InstanceLaneReport {
+    /// Requests the router sent to this instance.
+    pub routed: u64,
+    /// Requests the instance's batcher actually executed.
+    pub executed: u64,
+    pub mean_batch: f64,
+}
+
+/// Outcome of [`serve_slo_routed`].
+#[derive(Clone, Debug)]
+pub struct SloServeReport {
+    pub completed: u64,
+    pub failed: u64,
+    pub slo_violations: u64,
+    pub latency_ms: Summary,
+    pub wall: Duration,
+    pub latency_lane: InstanceLaneReport,
+    pub throughput_lane: InstanceLaneReport,
+}
+
+/// Serve one model across two GPU-instance lanes with deadline routing.
+/// `latency_runner` / `throughput_runner` build each instance's compiled
+/// variants on its own worker thread (each instance owns its executor, as
+/// each MIG instance owns its slice).
+pub fn serve_slo_routed(
+    cfg: SloServeConfig,
+    latency_runner: impl FnOnce() -> BatchRunner + Send + 'static,
+    throughput_runner: impl FnOnce() -> BatchRunner + Send + 'static,
+) -> SloServeReport {
+    let lat = Batcher::new(cfg.latency_batcher.clone(), cfg.in_features);
+    let thr = Batcher::new(cfg.throughput_batcher.clone(), cfg.in_features);
+    let mut slo = BTreeMap::new();
+    slo.insert(
+        "model".to_string(),
+        InstanceRoutes {
+            latency: lat.clone(),
+            throughput: thr.clone(),
+            cutoff: cfg.cutoff,
+        },
+    );
+    let router = Router::with_slo_routes(BTreeMap::new(), slo);
+
+    // One worker per instance; the ready channel keeps compilation time
+    // out of the latency figures.
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<()>();
+    let lat_worker = {
+        let b = lat.clone();
+        let tx = ready_tx.clone();
+        std::thread::spawn(move || {
+            let runner = latency_runner();
+            let _ = tx.send(());
+            b.run_worker(runner, WorkerHooks::default())
+        })
+    };
+    let thr_worker = {
+        let b = thr.clone();
+        std::thread::spawn(move || {
+            let runner = throughput_runner();
+            let _ = ready_tx.send(());
+            b.run_worker(runner, WorkerHooks::default())
+        })
+    };
+    for _ in 0..2 {
+        let _ = ready_rx.recv();
+    }
+    let start = Instant::now();
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut outstanding = Vec::new();
+    let issue_start = Instant::now();
+    let mut next_arrival = Duration::ZERO;
+    for _ in 0..cfg.requests {
+        if let Some(mean) = cfg.mean_interarrival {
+            next_arrival += Duration::from_nanos(rng.exponential(mean.as_nanos() as f64) as u64);
+            let now = issue_start.elapsed();
+            if next_arrival > now {
+                std::thread::sleep(next_arrival - now);
+            }
+        }
+        let input: Vec<f32> = (0..cfg.in_features)
+            .map(|_| rng.normal(0.0, 1.0) as f32)
+            .collect();
+        let deadline = if rng.f64() < cfg.tight_fraction {
+            cfg.tight_deadline
+        } else {
+            cfg.loose_deadline
+        };
+        if let Some(t) = router.route_slo("model", input, deadline) {
+            if cfg.mean_interarrival.is_none() {
+                let _ = t.wait(cfg.timeout);
+            } else {
+                outstanding.push(t);
+            }
+        }
+    }
+    for t in outstanding {
+        let _ = t.wait(cfg.timeout);
+    }
+
+    lat.close();
+    thr.close();
+    lat_worker.join().unwrap();
+    thr_worker.join().unwrap();
+
+    let wall = start.elapsed();
+    let rstats = router.stats.lock().unwrap().clone();
+    let lane = |b: &Arc<Batcher>, routed: u64| {
+        let st = b.stats.lock().unwrap();
+        InstanceLaneReport {
+            routed,
+            executed: st.requests,
+            mean_batch: st.mean_batch(),
+        }
+    };
+    SloServeReport {
+        completed: rstats.completed,
+        failed: rstats.failed,
+        slo_violations: rstats.slo_violations,
+        latency_ms: rstats.summary(),
+        wall,
+        latency_lane: lane(&lat, rstats.routed_latency),
+        throughput_lane: lane(&thr, rstats.routed_throughput),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -284,6 +465,56 @@ mod tests {
         assert_eq!(rep.completed, 40);
         // the trainer should have been gated at least once under load
         assert!(rep.trainer_waits > 0, "waits={}", rep.trainer_waits);
+    }
+
+    fn slo_cfg(requests: u32) -> SloServeConfig {
+        SloServeConfig {
+            requests,
+            tight_fraction: 0.4,
+            in_features: 16,
+            ..Default::default()
+        }
+    }
+
+    fn lane_factory(latency_ms: u64) -> impl FnOnce() -> BatchRunner + Send + 'static {
+        move || {
+            let mk = |b: usize| -> Box<dyn ModelExecutor> {
+                let mut m = MockExecutor::new(b, 16, 4);
+                m.latency = Duration::from_millis(latency_ms);
+                Box::new(m)
+            };
+            BatchRunner::new(vec![(1, mk(1)), (8, mk(8))], vec![])
+        }
+    }
+
+    #[test]
+    fn slo_routed_serves_all_on_two_instances() {
+        let rep = serve_slo_routed(slo_cfg(40), lane_factory(0), lane_factory(0));
+        assert_eq!(rep.completed, 40);
+        assert_eq!(rep.failed, 0);
+        // both instance lanes saw traffic and executed what they were sent
+        assert!(rep.latency_lane.routed > 0, "{rep:?}");
+        assert!(rep.throughput_lane.routed > 0, "{rep:?}");
+        assert_eq!(rep.latency_lane.executed, rep.latency_lane.routed);
+        assert_eq!(rep.throughput_lane.executed, rep.throughput_lane.routed);
+        assert_eq!(
+            rep.latency_lane.routed + rep.throughput_lane.routed,
+            40
+        );
+    }
+
+    #[test]
+    fn slo_isolation_shields_tight_lane_from_slow_neighbor() {
+        // The throughput instance is pathologically slow; latency-lane
+        // requests must still meet their deadline because they never queue
+        // behind it — the isolation MIG buys, at the coordinator layer.
+        let mut cfg = slo_cfg(30);
+        cfg.tight_fraction = 1.0; // every request is latency-critical
+        cfg.tight_deadline = Duration::from_millis(250);
+        let rep = serve_slo_routed(cfg, lane_factory(0), lane_factory(50));
+        assert_eq!(rep.completed, 30);
+        assert_eq!(rep.throughput_lane.routed, 0);
+        assert_eq!(rep.slo_violations, 0, "{rep:?}");
     }
 
     #[test]

@@ -1,0 +1,231 @@
+//! Multi-instance (MIG) serving scenarios: the spatial-isolation side of
+//! the paper's isolation/utilization tension, which the 3090 evaluation
+//! could not cover (§2.2 names MIG; the GeForce part lacks it).
+//!
+//! Two scenario families:
+//! * [`colocation_study`] — train-on-remainder + infer-on-`Ng` colocation
+//!   across instance splits, against the whole-device baseline. Isolation
+//!   shows up as low turnaround variance and zero cross-task contention;
+//!   its price shows up as the turnaround ratio (the inference task only
+//!   owns a slice of the SMs) and the stranded slice-remainder capacity.
+//! * [`reconfigure_between_phases`] — the operator story: a train-heavy
+//!   phase under one split, a drain + instance re-creation gap, then an
+//!   infer-heavy phase under another split. Real MIG requires instances to
+//!   be idle before they can be destroyed/re-created, so the gap models
+//!   drain + `CreateGpuInstance` latency.
+//!
+//! Run these on [`DeviceConfig::a100`] (`Protocol::on_device`): the 40 GB
+//! part admits a max-batch trainer inside a half-memory instance, which
+//! the 3090's 24 GB cannot (the engine's per-instance DRAM admission
+//! rejects it — itself a faithful MIG behavior).
+
+use super::{run_comparisons, Protocol};
+use crate::gpu::partition::MigProfile;
+use crate::gpu::DeviceConfig;
+use crate::metrics::RunReport;
+use crate::sched::Mechanism;
+use crate::sim::{SimTime, MS};
+use crate::workload::DlModel;
+
+/// One instance split's colocation outcome.
+#[derive(Clone, Debug)]
+pub struct MigColocationRow {
+    /// The inference task's instance profile (training takes the rest).
+    pub profile: MigProfile,
+    /// Mechanism row name ("mig-3g", ...).
+    pub mechanism: String,
+    pub turnaround_ms: f64,
+    /// vs the whole-device isolation baseline (> 1: the price of owning
+    /// only a slice).
+    pub turnaround_ratio: f64,
+    /// Coefficient of variation of turnaround — the predictability axis
+    /// where isolation pays off.
+    pub turnaround_cv: f64,
+    pub train_s: Option<f64>,
+    pub report: RunReport,
+}
+
+/// The colocation study across instance splits.
+#[derive(Clone, Debug)]
+pub struct MigColocationStudy {
+    pub infer_model: DlModel,
+    pub train_model: DlModel,
+    pub baseline_turnaround_ms: f64,
+    pub baseline_train_s: f64,
+    pub rows: Vec<MigColocationRow>,
+}
+
+/// Run train-on-remainder + infer-on-`Ng` colocation for each profile,
+/// through the standard comparison driver (so every run is fanned out and
+/// seed-deterministic like any other suite row).
+pub fn colocation_study(
+    proto: &Protocol,
+    infer_model: DlModel,
+    train_model: DlModel,
+    profiles: &[MigProfile],
+) -> MigColocationStudy {
+    let mechs: Vec<Mechanism> = profiles
+        .iter()
+        .map(|&profile| Mechanism::Mig { profile })
+        .collect();
+    let cmp = run_comparisons(proto, &[(infer_model, train_model)], &mechs)
+        .pop()
+        .expect("one pair in, one comparison out");
+    let rows = profiles
+        .iter()
+        .zip(cmp.per_mechanism)
+        .map(|(&profile, (mechanism, report))| {
+            let s = report.turnaround_summary();
+            MigColocationRow {
+                profile,
+                mechanism,
+                turnaround_ms: s.mean,
+                turnaround_ratio: s.mean / cmp.baseline_turnaround_ms,
+                turnaround_cv: s.cv(),
+                train_s: report.train_time_s(),
+                report,
+            }
+        })
+        .collect();
+    MigColocationStudy {
+        infer_model,
+        train_model,
+        baseline_turnaround_ms: cmp.baseline_turnaround_ms,
+        baseline_train_s: cmp.baseline_train_s,
+        rows,
+    }
+}
+
+/// Default drain + `CreateGpuInstance` gap for a reconfiguration
+/// (instances must be idle before re-slicing; creation itself is
+/// hundreds of milliseconds on real hardware).
+pub const DEFAULT_RECONFIG_GAP_NS: SimTime = 250 * MS;
+
+/// Outcome of a two-phase run with an instance reconfiguration between.
+#[derive(Clone, Debug)]
+pub struct ReconfigurationReport {
+    /// Train-heavy phase under the first split.
+    pub phase1: RunReport,
+    /// Infer-heavy phase under the second split.
+    pub phase2: RunReport,
+    pub phase1_profile: MigProfile,
+    pub phase2_profile: MigProfile,
+    pub reconfig_gap_ns: SimTime,
+    /// End-to-end span including the gap, seconds.
+    pub total_span_s: f64,
+}
+
+impl ReconfigurationReport {
+    /// Fraction of the end-to-end span lost to the reconfiguration itself
+    /// — the first input to the ROADMAP's reconfiguration cost model.
+    pub fn gap_fraction(&self) -> f64 {
+        self.reconfig_gap_ns as f64 / (self.total_span_s * 1e9)
+    }
+}
+
+/// Phase 1 runs a train-heavy mix (full training steps, a quarter of the
+/// requests) under `Mig { phase1 }`; after a drain + re-create gap,
+/// phase 2 runs an infer-heavy mix (full requests, a quarter of the
+/// steps) under `Mig { phase2 }`.
+pub fn reconfigure_between_phases(
+    proto: &Protocol,
+    infer_model: DlModel,
+    train_model: DlModel,
+    phase1: MigProfile,
+    phase2: MigProfile,
+    reconfig_gap_ns: SimTime,
+) -> ReconfigurationReport {
+    let p1 = Protocol {
+        requests: (proto.requests / 4).max(1),
+        ..proto.clone()
+    };
+    let rep1 = p1.pair(Mechanism::Mig { profile: phase1 }, infer_model, train_model);
+    let p2 = Protocol {
+        train_steps: (proto.train_steps / 4).max(1),
+        // decorrelate the second phase's arrivals/kernels from the first
+        seed: proto.seed ^ 0x9E3779B97F4A7C15,
+        ..proto.clone()
+    };
+    let rep2 = p2.pair(Mechanism::Mig { profile: phase2 }, infer_model, train_model);
+    let total_ns = rep1.sim_end as f64 + reconfig_gap_ns as f64 + rep2.sim_end as f64;
+    ReconfigurationReport {
+        phase1: rep1,
+        phase2: rep2,
+        phase1_profile: phase1,
+        phase2_profile: phase2,
+        reconfig_gap_ns,
+        total_span_s: total_ns / 1e9,
+    }
+}
+
+/// The standard scenario protocol: the fast protocol on the A100-style
+/// device where MIG exists.
+pub fn mig_protocol() -> Protocol {
+    Protocol::fast().on_device(DeviceConfig::a100())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn proto() -> Protocol {
+        Protocol {
+            requests: 5,
+            train_steps: 2,
+            ..Protocol::default()
+        }
+        .on_device(DeviceConfig::a100())
+    }
+
+    #[test]
+    fn colocation_rows_cover_all_profiles() {
+        let study = colocation_study(
+            &proto(),
+            DlModel::AlexNet,
+            DlModel::AlexNet,
+            &[MigProfile::G2, MigProfile::G3, MigProfile::G4],
+        );
+        assert_eq!(study.rows.len(), 3);
+        assert!(study.baseline_turnaround_ms > 0.0);
+        for row in &study.rows {
+            assert!(row.report.oom.is_none(), "{}: {:?}", row.mechanism, row.report.oom);
+            assert_eq!(row.report.requests.len(), 5, "{}", row.mechanism);
+            assert!(row.train_s.is_some(), "{}", row.mechanism);
+            // owning a slice is never faster than owning the whole device
+            assert!(
+                row.turnaround_ratio > 0.99,
+                "{}: ratio {}",
+                row.mechanism,
+                row.turnaround_ratio
+            );
+        }
+        // more compute slices for inference ⇒ no slower (weak monotonicity
+        // across 2g → 4g at identical seeds)
+        let r2 = study.rows[0].turnaround_ms;
+        let r4 = study.rows[2].turnaround_ms;
+        assert!(
+            r4 <= r2 * 1.25,
+            "4g ({r4} ms) should not be much slower than 2g ({r2} ms)"
+        );
+    }
+
+    #[test]
+    fn reconfiguration_spans_both_phases_plus_gap() {
+        let rep = reconfigure_between_phases(
+            &proto(),
+            DlModel::AlexNet,
+            DlModel::AlexNet,
+            MigProfile::G2,
+            MigProfile::G4,
+            DEFAULT_RECONFIG_GAP_NS,
+        );
+        assert!(rep.phase1.oom.is_none());
+        assert!(rep.phase2.oom.is_none());
+        assert!(rep.phase1.train_done.is_some());
+        assert_eq!(rep.phase2.requests.len(), 5);
+        let min_s =
+            (rep.phase1.sim_end + rep.phase2.sim_end + DEFAULT_RECONFIG_GAP_NS) as f64 / 1e9;
+        assert!((rep.total_span_s - min_s).abs() < 1e-9);
+        assert!(rep.gap_fraction() > 0.0 && rep.gap_fraction() < 1.0);
+    }
+}

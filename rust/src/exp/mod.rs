@@ -10,7 +10,7 @@
 //! determinism guard test asserts byte-identical `RunReport` JSON with
 //! parallelism on and off.
 
-use crate::gpu::DeviceConfig;
+use crate::gpu::{DeviceConfig, MigProfile};
 use crate::metrics::RunReport;
 use crate::sched::{run, CtxDef, EngineConfig, Mechanism};
 use crate::sim::{SimTime, MS};
@@ -19,6 +19,8 @@ use crate::workload::{ArrivalPattern, DlModel, Source};
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+pub mod mig;
 
 /// A unit of experiment work for [`run_parallel`].
 pub type Job<'a, T> = Box<dyn FnOnce() -> T + Send + 'a>;
@@ -132,6 +134,15 @@ impl Protocol {
             train_steps: 10,
             ..Default::default()
         }
+    }
+
+    /// The same protocol on a different device (e.g.
+    /// [`DeviceConfig::a100`] for the MIG scenarios — the Ampere part
+    /// that actually exposes the mechanism, and whose 40 GB admits a
+    /// max-batch trainer inside a half-memory instance).
+    pub fn on_device(mut self, dev: DeviceConfig) -> Self {
+        self.dev = dev;
+        self
     }
 
     /// Server-mode variant (Fig 3/5): Poisson arrivals. The paper used 500
@@ -328,6 +339,26 @@ pub fn paper_mechanisms() -> Vec<Mechanism> {
         Mechanism::TimeSlicing,
         Mechanism::mps_default(),
     ]
+}
+
+/// The MIG comparison rows: three instance splits for the inference task
+/// (2g, 3g, 4g), the training task taking the remainder each time. Run
+/// these on [`DeviceConfig::a100`] (`Protocol::on_device`) — the 3090's
+/// 24 GB cannot hold a max-batch trainer inside a half-memory share.
+pub fn mig_mechanisms() -> Vec<Mechanism> {
+    [MigProfile::G2, MigProfile::G3, MigProfile::G4]
+        .into_iter()
+        .map(|profile| Mechanism::Mig { profile })
+        .collect()
+}
+
+/// Every mechanism the comparison suites exercise: the paper's three, the
+/// §5 fine-grained proposal, and the three MIG splits.
+pub fn extended_mechanisms() -> Vec<Mechanism> {
+    let mut m = paper_mechanisms();
+    m.push(Mechanism::fine_grained_default());
+    m.extend(mig_mechanisms());
+    m
 }
 
 /// A sensible server-mode inter-arrival for a model: ~1.7× its baseline

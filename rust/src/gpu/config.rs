@@ -192,6 +192,36 @@ impl DeviceConfig {
         }
     }
 
+    /// An A100-SXM4-40GB-style device — the Ampere part that actually
+    /// exposes MIG (§2.2). Used by the multi-instance scenarios
+    /// (`exp::mig`): its 40 GB lets a max-batch trainer fit inside a
+    /// half-memory GPU instance, which the 3090's 24 GB cannot. Per-SM
+    /// limits follow GA100: 2048 threads, 32 blocks, 64K registers,
+    /// 164 KB schedulable shared memory (192 KB physical L1/shared).
+    pub fn a100() -> Self {
+        Self {
+            name: "NVIDIA A100-SXM4-40GB (Ampere GA100)".to_string(),
+            num_sms: 108,
+            sm_limits: ResourceVec {
+                threads: 2048,
+                blocks: 32,
+                regs: 65_536,
+                smem: 164 * 1024,
+            },
+            l1_smem_bytes_per_sm: 192 * 1024,
+            const_mem_bytes: 64 * 1024,
+            l2_bytes: 40 * 1024 * 1024,
+            dram_bytes: 40 * 1024 * 1024 * 1024,
+            dram_bw_bytes_per_s: 1_555_000_000_000,
+            pcie_bw_bytes_per_s: 25_000_000_000,
+            warp_size: 32,
+            warp_schedulers_per_sm: 4,
+            timeslice_ns: 2 * MS,
+            slice_switch_gap_ns: 145 * US,
+            launch_gap_ns: 8 * US,
+        }
+    }
+
     /// A miniature device for unit tests: small enough that saturation and
     /// large-kernel behaviour is exercised with single-digit block counts.
     pub fn tiny(num_sms: u32) -> Self {

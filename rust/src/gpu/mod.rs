@@ -6,9 +6,11 @@
 pub mod account;
 pub mod config;
 pub mod occupancy;
+pub mod partition;
 pub mod sm;
 
 pub use account::DeviceAccount;
 pub use config::{DeviceConfig, ResourceVec};
 pub use occupancy::{KernelRes, LimitingResource, Occupancy};
+pub use partition::{GpuInstance, MigProfile};
 pub use sm::{BlockState, Cohort, CohortId, FreezeMode, SmState};

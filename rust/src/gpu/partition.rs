@@ -1,0 +1,311 @@
+//! MIG-style device partitioning (§2.2): carve one physical device into
+//! isolated *GPU instances*, each owning an exclusive SM range and a share
+//! of the memory system (DRAM capacity, DRAM bandwidth, L2).
+//!
+//! The paper names Multi-Instance GPU as the third Ampere concurrency
+//! mechanism but could not evaluate it (the GeForce 3090 does not expose
+//! MIG); this module supplies the missing mechanism for the simulator,
+//! following NVIDIA's A100 profile table:
+//!
+//! | profile | compute slices (of 7) | memory slices (of 8) | A100 name |
+//! |---------|----------------------|----------------------|-----------|
+//! | 1g      | 1                    | 1                    | 1g.5gb    |
+//! | 2g      | 2                    | 2                    | 2g.10gb   |
+//! | 3g      | 3                    | 4                    | 3g.20gb   |
+//! | 4g      | 4                    | 4                    | 4g.20gb   |
+//! | 7g      | 7                    | 8                    | 7g.40gb   |
+//!
+//! A compute slice is `floor(num_sms / 7)` SMs (real MIG also leaves a few
+//! SMs unused: 98 of the A100's 108). A memory slice is 1/8 of DRAM
+//! capacity, DRAM bandwidth, and L2. Per-SM limits are untouched — an
+//! instance is a smaller device, not a weaker one.
+//!
+//! Isolation contract (enforced by `sched::engine` and the partition
+//! property tests): a context pinned to an instance never places a block
+//! outside the instance's SM range, each instance carries its own
+//! [`super::DeviceAccount`] so every O(1) fit bound stays exact
+//! per-instance, and cross-instance activity adds no SM or memory-path
+//! contention. Only the host link (PCIe) remains shared, as on real MIG.
+
+use super::config::DeviceConfig;
+use crate::bail;
+use crate::util::error::Result;
+
+/// Total compute slices a device exposes (NVIDIA fixes this at 7).
+pub const COMPUTE_SLICES: u32 = 7;
+/// Total memory slices a device exposes (NVIDIA fixes this at 8).
+pub const MEM_SLICES: u32 = 8;
+
+/// A MIG GPU-instance profile (the `Ng` in NVIDIA's `Ng.Mgb` names).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MigProfile {
+    G1,
+    G2,
+    G3,
+    G4,
+    G7,
+}
+
+impl MigProfile {
+    pub const ALL: [MigProfile; 5] = [
+        MigProfile::G1,
+        MigProfile::G2,
+        MigProfile::G3,
+        MigProfile::G4,
+        MigProfile::G7,
+    ];
+
+    /// Compute slices (out of [`COMPUTE_SLICES`]) this profile owns.
+    pub const fn compute_slices(self) -> u32 {
+        match self {
+            MigProfile::G1 => 1,
+            MigProfile::G2 => 2,
+            MigProfile::G3 => 3,
+            MigProfile::G4 => 4,
+            MigProfile::G7 => 7,
+        }
+    }
+
+    /// Memory slices (out of [`MEM_SLICES`]) this profile owns. Note the
+    /// table's asymmetry: 3g and 4g both take half the memory.
+    pub const fn mem_slices(self) -> u32 {
+        match self {
+            MigProfile::G1 => 1,
+            MigProfile::G2 => 2,
+            MigProfile::G3 => 4,
+            MigProfile::G4 => 4,
+            MigProfile::G7 => 8,
+        }
+    }
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            MigProfile::G1 => "1g",
+            MigProfile::G2 => "2g",
+            MigProfile::G3 => "3g",
+            MigProfile::G4 => "4g",
+            MigProfile::G7 => "7g",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MigProfile> {
+        MigProfile::ALL.iter().copied().find(|p| p.name() == s)
+    }
+}
+
+/// One isolated GPU instance: an exclusive SM range plus a memory share,
+/// presented as a self-contained [`DeviceConfig`] so every existing code
+/// path (occupancy, placement, admission) works unmodified inside it.
+#[derive(Clone, Debug)]
+pub struct GpuInstance {
+    /// Position in the partition layout (instance 0 first).
+    pub id: usize,
+    /// The standard profile this instance was created from, or `None` for
+    /// a remainder instance assembled from leftover slices.
+    pub profile: Option<MigProfile>,
+    pub compute_slices: u32,
+    pub mem_slices: u32,
+    /// First SM (index into the parent device's SM array).
+    pub sm_start: u32,
+    /// SMs owned: `sm_start .. sm_start + sm_count` exclusively.
+    pub sm_count: u32,
+    /// The instance as a device: `num_sms = sm_count`, memory scaled by
+    /// `mem_slices / 8`, per-SM limits identical to the parent.
+    pub dev: DeviceConfig,
+}
+
+/// SMs per compute slice on `dev` (`floor(num_sms / 7)`, as real MIG
+/// rounds down and strands the remainder).
+pub fn sms_per_slice(dev: &DeviceConfig) -> u32 {
+    dev.num_sms / COMPUTE_SLICES
+}
+
+/// The instance-local device view for a `(compute, mem)` slice pair.
+pub fn instance_device(dev: &DeviceConfig, compute_slices: u32, mem_slices: u32) -> DeviceConfig {
+    let mem = |whole: u64| whole / MEM_SLICES as u64 * mem_slices as u64;
+    DeviceConfig {
+        name: format!("{} [mig {}c/{}m]", dev.name, compute_slices, mem_slices),
+        num_sms: compute_slices * sms_per_slice(dev),
+        l2_bytes: mem(dev.l2_bytes),
+        dram_bytes: mem(dev.dram_bytes),
+        dram_bw_bytes_per_s: mem(dev.dram_bw_bytes_per_s),
+        ..dev.clone()
+    }
+}
+
+/// Partition `dev` into instances with the given slice shapes, packing SM
+/// ranges left to right. `shapes` are `(compute_slices, mem_slices)` pairs
+/// (use [`MigProfile::compute_slices`]/[`MigProfile::mem_slices`] for the
+/// standard profiles). Fails when the device is too small to slice or the
+/// shapes oversubscribe either slice budget.
+pub fn partition_shapes(
+    dev: &DeviceConfig,
+    shapes: &[(Option<MigProfile>, u32, u32)],
+) -> Result<Vec<GpuInstance>> {
+    if sms_per_slice(dev) == 0 {
+        bail!(
+            "device '{}' has {} SMs — fewer than the {} compute slices MIG requires",
+            dev.name,
+            dev.num_sms,
+            COMPUTE_SLICES
+        );
+    }
+    if shapes.is_empty() {
+        bail!("a partition needs at least one instance");
+    }
+    let compute: u32 = shapes.iter().map(|&(_, c, _)| c).sum();
+    let mem: u32 = shapes.iter().map(|&(_, _, m)| m).sum();
+    if compute > COMPUTE_SLICES {
+        bail!("{compute} compute slices requested > {COMPUTE_SLICES} available");
+    }
+    if mem > MEM_SLICES {
+        bail!("{mem} memory slices requested > {MEM_SLICES} available");
+    }
+    let per = sms_per_slice(dev);
+    let mut out = Vec::with_capacity(shapes.len());
+    let mut next_sm = 0u32;
+    for (id, &(profile, c, m)) in shapes.iter().enumerate() {
+        if c == 0 || m == 0 {
+            bail!("instance {id} has an empty compute or memory share");
+        }
+        let sm_count = c * per;
+        out.push(GpuInstance {
+            id,
+            profile,
+            compute_slices: c,
+            mem_slices: m,
+            sm_start: next_sm,
+            sm_count,
+            dev: instance_device(dev, c, m),
+        });
+        next_sm += sm_count;
+    }
+    debug_assert!(next_sm <= dev.num_sms);
+    Ok(out)
+}
+
+/// Partition `dev` with standard profiles only.
+pub fn partition(dev: &DeviceConfig, profiles: &[MigProfile]) -> Result<Vec<GpuInstance>> {
+    let shapes: Vec<(Option<MigProfile>, u32, u32)> = profiles
+        .iter()
+        .map(|&p| (Some(p), p.compute_slices(), p.mem_slices()))
+        .collect();
+    partition_shapes(dev, &shapes)
+}
+
+/// The engine's default layout for `Mechanism::Mig { profile }`: the
+/// latency-critical context owns a `profile` instance and every remaining
+/// compute/memory slice forms a second (remainder) instance for the
+/// best-effort contexts. `7g` consumes the whole device and yields a
+/// single shared instance.
+pub fn pair_layout(dev: &DeviceConfig, profile: MigProfile) -> Result<Vec<GpuInstance>> {
+    let c_rest = COMPUTE_SLICES - profile.compute_slices();
+    let m_rest = MEM_SLICES - profile.mem_slices();
+    let mut shapes = vec![(
+        Some(profile),
+        profile.compute_slices(),
+        profile.mem_slices(),
+    )];
+    if c_rest > 0 && m_rest > 0 {
+        // The remainder is a standard profile when its shape matches one
+        // (4g↔3g complements); otherwise a non-standard slice bundle.
+        let rest_profile = MigProfile::ALL
+            .iter()
+            .copied()
+            .find(|p| p.compute_slices() == c_rest && p.mem_slices() == m_rest);
+        shapes.push((rest_profile, c_rest, m_rest));
+    }
+    partition_shapes(dev, &shapes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_table_matches_nvidia() {
+        for (p, c, m) in [
+            (MigProfile::G1, 1, 1),
+            (MigProfile::G2, 2, 2),
+            (MigProfile::G3, 3, 4),
+            (MigProfile::G4, 4, 4),
+            (MigProfile::G7, 7, 8),
+        ] {
+            assert_eq!(p.compute_slices(), c);
+            assert_eq!(p.mem_slices(), m);
+        }
+        for p in MigProfile::ALL {
+            assert_eq!(MigProfile::parse(p.name()), Some(p));
+        }
+        assert_eq!(MigProfile::parse("5g"), None);
+    }
+
+    #[test]
+    fn a100_instances_match_profile_table() {
+        let dev = DeviceConfig::a100();
+        // 108 SMs / 7 = 15 SMs per slice (floor; real A100 uses 14).
+        assert_eq!(sms_per_slice(&dev), 15);
+        let insts = partition(&dev, &[MigProfile::G3, MigProfile::G4]).unwrap();
+        assert_eq!(insts.len(), 2);
+        assert_eq!(insts[0].sm_count, 45);
+        assert_eq!(insts[1].sm_count, 60);
+        // 3g.20gb / 4g.20gb: each gets half the 40 GB device.
+        assert_eq!(insts[0].dev.dram_bytes, dev.dram_bytes / 2);
+        assert_eq!(insts[1].dev.dram_bytes, dev.dram_bytes / 2);
+        assert_eq!(insts[0].dev.l2_bytes, dev.l2_bytes / 2);
+        // per-SM limits are untouched
+        assert_eq!(insts[0].dev.sm_limits, dev.sm_limits);
+        // SM ranges tile disjointly from zero
+        assert_eq!(insts[0].sm_start, 0);
+        assert_eq!(insts[1].sm_start, 45);
+        assert!(insts[1].sm_start + insts[1].sm_count <= dev.num_sms);
+    }
+
+    #[test]
+    fn pair_layout_complements() {
+        let dev = DeviceConfig::a100();
+        // 3g pairs with a standard 4g remainder (and vice versa).
+        let p = pair_layout(&dev, MigProfile::G3).unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[1].profile, Some(MigProfile::G4));
+        let p = pair_layout(&dev, MigProfile::G4).unwrap();
+        assert_eq!(p[1].profile, Some(MigProfile::G3));
+        // 2g leaves a non-standard 5-compute/6-memory remainder.
+        let p = pair_layout(&dev, MigProfile::G2).unwrap();
+        assert_eq!(p[1].profile, None);
+        assert_eq!(p[1].compute_slices, 5);
+        assert_eq!(p[1].mem_slices, 6);
+        // 7g consumes everything: a single shared instance.
+        let p = pair_layout(&dev, MigProfile::G7).unwrap();
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].sm_count, 105);
+    }
+
+    #[test]
+    fn oversubscription_rejected() {
+        let dev = DeviceConfig::a100();
+        assert!(partition(&dev, &[MigProfile::G4, MigProfile::G4]).is_err());
+        assert!(partition(&dev, &[MigProfile::G3, MigProfile::G3, MigProfile::G2]).is_err());
+        assert!(partition(&dev, &[]).is_err());
+        // 3g+3g fits compute (6 ≤ 7) and memory (8 ≤ 8)
+        assert!(partition(&dev, &[MigProfile::G3, MigProfile::G3]).is_ok());
+    }
+
+    #[test]
+    fn tiny_devices_cannot_be_sliced() {
+        let dev = DeviceConfig::tiny(4);
+        assert!(partition(&dev, &[MigProfile::G1]).is_err());
+    }
+
+    #[test]
+    fn rtx3090_slices_too() {
+        // The simulator can slice any ≥7-SM device, even ones real MIG
+        // does not support: 82 / 7 = 11 SMs per slice, 77 used.
+        let dev = DeviceConfig::rtx3090();
+        let insts = pair_layout(&dev, MigProfile::G3).unwrap();
+        assert_eq!(insts[0].sm_count, 33);
+        assert_eq!(insts[1].sm_count, 44);
+        let used: u32 = insts.iter().map(|i| i.sm_count).sum();
+        assert!(used <= dev.num_sms);
+    }
+}

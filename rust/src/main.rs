@@ -27,7 +27,11 @@ use std::time::Duration;
 fn main() {
     let args = Args::from_env()
         .describe("model", "workload model (resnet50, vgg19, ...)", Some("resnet50"))
-        .describe("mech", "mechanism: baseline|streams|timeslice|mps|preempt", Some("mps"))
+        .describe(
+            "mech",
+            "mechanism: baseline|streams|timeslice|mps|preempt|partitioned|mig[-Ng]",
+            Some("mps"),
+        )
         .describe("requests", "inference requests", Some("60"))
         .describe("steps", "training steps", Some("20"))
         .describe("seed", "RNG seed", Some("42"))
@@ -95,7 +99,12 @@ fn proto_from(args: &Args) -> Protocol {
 fn simulate(args: &Args) {
     let model = DlModel::from_name(&args.get_or("model", "resnet50")).expect("unknown model");
     let mech = Mechanism::from_name(&args.get_or("mech", "mps")).expect("unknown mechanism");
-    let proto = proto_from(args);
+    let mut proto = proto_from(args);
+    if matches!(mech, Mechanism::Mig { .. }) {
+        // MIG needs the A100-style device: the 3090 neither exposes the
+        // mechanism nor fits a max-batch trainer in a half-memory share.
+        proto = proto.on_device(DeviceConfig::a100());
+    }
     let train_model = if model.train_profile().is_some() {
         model
     } else {

@@ -13,7 +13,17 @@
 //!
 //! Event-count scaling, freeze semantics (O3), transfer contention (O4) and
 //! compounded delay (O1) are discussed in DESIGN.md §6.
+//!
+//! **Scheduling domains (DESIGN.md §6b).** The engine always runs one or
+//! more *instances* — isolated scheduling domains over disjoint SM ranges,
+//! each with its own [`DeviceAccount`] so placement, occupancy sampling and
+//! the O(1) "nothing fits" exit stay exact per-instance. The default is a
+//! single whole-device instance; `Partitioned` splits SMs (memory stays
+//! shared); `Mig` carves full GPU instances (SMs *and* DRAM/L2 shares, per
+//! `gpu::partition`), with per-instance dispatch and no cross-instance
+//! contention anywhere but the shared host link.
 
+use crate::gpu::partition;
 use crate::gpu::{
     BlockState, Cohort, CohortId, DeviceAccount, DeviceConfig, FreezeMode, Occupancy, ResourceVec,
     SmState,
@@ -157,15 +167,36 @@ enum Ev {
     HoldExpire { at: SimTime },
 }
 
+/// One isolated scheduling domain: the whole device by default, one side
+/// of a static SM partition, or a MIG GPU instance. Owns the SM range
+/// `base .. base + count` of the engine's global SM vector exclusively.
+struct InstanceRt {
+    /// Global index of the first owned SM.
+    base: usize,
+    /// Number of owned SMs.
+    count: usize,
+    /// Instance-local device view: `num_sms = count`; for MIG also the
+    /// carved DRAM/L2 shares. Equals the engine device when unpartitioned.
+    dev: DeviceConfig,
+    /// Incremental aggregates + max-free index over the owned SM slice
+    /// (DESIGN.md §6a). Must be `sync`ed after every owned-SM mutation.
+    acct: DeviceAccount,
+}
+
 /// The engine itself. Construct with [`Engine::new`], run with
 /// [`Engine::run`]; a fresh engine is needed per run.
 pub struct Engine {
     cfg: EngineConfig,
     ctxs: Vec<CtxRt>,
     sms: Vec<SmState>,
-    /// Incremental device aggregates + max-free index over `sms`
-    /// (DESIGN.md §6a). Must be `sync`ed after every SM mutation.
-    acct: DeviceAccount,
+    /// Isolated scheduling domains over `sms` (DESIGN.md §6b). Exactly one
+    /// unless the mechanism partitions the device.
+    instances: Vec<InstanceRt>,
+    /// SM → owning instance (`usize::MAX` for slice-remainder SMs MIG
+    /// strands, which no context may use).
+    sm_owner: Vec<usize>,
+    /// Context → instance it is pinned to.
+    ctx_inst: Vec<usize>,
     kernels: Vec<KernelRt>,
     /// Dispatch queue: kernel ids in arrival order (leftover policy order).
     /// Completed kernels are tombstoned (skipped via `KernelRt::done`) and
@@ -217,8 +248,8 @@ impl Engine {
         let sms: Vec<SmState> = (0..cfg.dev.num_sms)
             .map(|_| SmState::new(cfg.dev.sm_limits))
             .collect();
-        let acct = DeviceAccount::new(&sms);
         let n = defs.len();
+        let (instances, sm_owner, ctx_inst, infeasible) = Self::build_instances(&cfg, &sms, n);
         let ctxs: Vec<CtxRt> = defs
             .into_iter()
             .map(|d| CtxRt {
@@ -235,21 +266,44 @@ impl Engine {
             .collect();
         let mut report = RunReport {
             mechanism: cfg.mechanism.name().to_string(),
+            oom: infeasible,
             ..Default::default()
         };
         // DRAM admission (applies to every mechanism: one physical memory).
         let total_dram: u64 = ctxs.iter().map(|c| c.source.profile().dram_footprint).sum();
-        if total_dram > cfg.dev.dram_bytes {
+        if report.oom.is_none() && total_dram > cfg.dev.dram_bytes {
             report.oom = Some(format!(
                 "global memory over-subscribed: {} B requested > {} B device",
                 total_dram, cfg.dev.dram_bytes
             ));
         }
+        // MIG: each instance's carved DRAM share must also hold the
+        // contexts pinned to it (the isolation that protects a neighbor
+        // also caps what fits — the paper's isolation/utilization tension).
+        if matches!(cfg.mechanism, Mechanism::Mig { .. }) && report.oom.is_none() {
+            for (i, inst) in instances.iter().enumerate() {
+                let need: u64 = ctxs
+                    .iter()
+                    .enumerate()
+                    .filter(|&(c, _)| ctx_inst[c] == i)
+                    .map(|(_, c)| c.source.profile().dram_footprint)
+                    .sum();
+                if need > inst.dev.dram_bytes {
+                    report.oom = Some(format!(
+                        "GPU instance {i} over-subscribed: {} B requested > {} B instance share",
+                        need, inst.dev.dram_bytes
+                    ));
+                    break;
+                }
+            }
+        }
         Self {
             cfg,
             ctxs,
             sms,
-            acct,
+            instances,
+            sm_owner,
+            ctx_inst,
             kernels: Vec::new(),
             queue: Vec::new(),
             queue_dead: 0,
@@ -292,19 +346,90 @@ impl Engine {
         }
     }
 
-    /// Under static partitioning, may `ctx` place blocks on SM `sm`?
-    /// (ctx 0 owns the first `ctx0_sms`, every other ctx the rest.)
-    fn sm_allowed(&self, ctx: usize, sm: usize) -> bool {
-        match self.cfg.mechanism {
-            Mechanism::Partitioned { ctx0_sms } => {
-                if ctx == 0 {
-                    sm < ctx0_sms as usize
-                } else {
-                    sm >= ctx0_sms as usize
+    /// Build the scheduling domains for the configured mechanism: one
+    /// whole-device instance by default, an SM-only split for
+    /// `Partitioned`, full GPU instances (SMs + memory shares) for `Mig`.
+    /// Context pinning: the first (latency-critical) context owns
+    /// instance 0, every other context shares the last instance.
+    /// The last tuple element reports an infeasible partition (e.g. a
+    /// device too small to slice): the engine then degrades to a single
+    /// whole-device instance and `new` records the error as `report.oom`,
+    /// the same path every other infeasible configuration takes.
+    fn build_instances(
+        cfg: &EngineConfig,
+        sms: &[SmState],
+        nctx: usize,
+    ) -> (Vec<InstanceRt>, Vec<usize>, Vec<usize>, Option<String>) {
+        let nsms = sms.len();
+        let mut infeasible = None;
+        let ranges: Vec<(usize, usize, DeviceConfig)> = match &cfg.mechanism {
+            Mechanism::Mig { profile } => match partition::pair_layout(&cfg.dev, *profile) {
+                Ok(insts) => insts
+                    .into_iter()
+                    .map(|gi| (gi.sm_start as usize, gi.sm_count as usize, gi.dev))
+                    .collect(),
+                Err(e) => {
+                    infeasible =
+                        Some(format!("cannot MIG-partition '{}': {e}", cfg.dev.name));
+                    vec![(0, nsms, cfg.dev.clone())]
                 }
+            },
+            Mechanism::Partitioned { ctx0_sms } => {
+                // SM split only: DRAM and L2 stay whole-device and shared
+                // (what separates this from MIG).
+                let a = (*ctx0_sms as usize).min(nsms);
+                let mut d0 = cfg.dev.clone();
+                d0.num_sms = a as u32;
+                let mut d1 = cfg.dev.clone();
+                d1.num_sms = (nsms - a) as u32;
+                vec![(0, a, d0), (a, nsms - a, d1)]
             }
-            _ => true,
+            _ => vec![(0, nsms, cfg.dev.clone())],
+        };
+        let mut sm_owner = vec![usize::MAX; nsms];
+        let mut instances = Vec::with_capacity(ranges.len());
+        for (id, (base, count, dev)) in ranges.into_iter().enumerate() {
+            for owner in sm_owner.iter_mut().skip(base).take(count) {
+                *owner = id;
+            }
+            instances.push(InstanceRt {
+                base,
+                count,
+                dev,
+                acct: DeviceAccount::new(&sms[base..base + count]),
+            });
         }
+        let last = instances.len() - 1;
+        let ctx_inst = (0..nctx).map(|c| if c == 0 { 0 } else { last }).collect();
+        (instances, sm_owner, ctx_inst, infeasible)
+    }
+
+    /// The instance `ctx` is pinned to.
+    fn ctx_instance(&self, ctx: usize) -> &InstanceRt {
+        &self.instances[self.ctx_inst[ctx]]
+    }
+
+    /// Instance-local device view for `ctx` (the whole device when the
+    /// mechanism does not partition).
+    fn ctx_dev(&self, ctx: usize) -> &DeviceConfig {
+        &self.ctx_instance(ctx).dev
+    }
+
+    /// Re-mirror SM `s` into its owner instance's account after any
+    /// mutation (the §6a sync contract, per instance).
+    fn sync_sm(&mut self, s: usize) {
+        let owner = self.sm_owner[s];
+        if owner != usize::MAX {
+            let inst = &mut self.instances[owner];
+            inst.acct.sync(s - inst.base, &self.sms[s]);
+        }
+    }
+
+    /// May `ctx` place blocks on SM `sm`? Exactly when `sm` belongs to the
+    /// instance `ctx` is pinned to (always true unpartitioned; MIG's
+    /// stranded slice-remainder SMs belong to no one).
+    fn sm_allowed(&self, ctx: usize, sm: usize) -> bool {
+        self.sm_owner[sm] == self.ctx_inst[ctx]
     }
 
     /// Execute the simulation to completion and return the report.
@@ -412,7 +537,10 @@ impl Engine {
         self.ctxs[ctx].op_issued = self.now;
         match op {
             Op::Kernel(spec) => {
-                let occ = Occupancy::compute(&self.cfg.dev, &spec.res);
+                // Occupancy against the ctx's own instance: device_blocks
+                // (capacity, first-wave size) is instance-scoped; per-SM
+                // limits are identical across instances.
+                let occ = Occupancy::compute(self.ctx_dev(ctx), &spec.res);
                 if occ.device_blocks == 0 {
                     self.report.oom = Some(format!(
                         "kernel {} cannot fit a single block on any SM",
@@ -513,38 +641,45 @@ impl Engine {
     /// Run the block scheduler until no further placement is possible.
     fn try_place(&mut self) {
         let mut order = std::mem::take(&mut self.scratch_order);
+        // Per-instance head-of-line: the leftover policy dispatches all of
+        // a blocked kernel's blocks before any later kernel's (§4.3) — but
+        // only *within its scheduling domain*. Partitions and MIG
+        // instances have independent hardware queues, so a kernel blocked
+        // on one instance never stalls another's dispatch. A bit per
+        // instance (instance counts are 1–2 today). The mask persists for
+        // the whole call: nothing frees resources mid-`try_place`, so a
+        // blocked head stays blocked — in particular it is never retried
+        // into a second `reactive_preempt` after a partial placement
+        // (preserving the pre-instance-refactor single-domain semantics).
+        let mut blocked_insts: u64 = 0;
         loop {
             self.fill_dispatch_order(&mut order);
             let mut placed_any = false;
-            let mut head_blocked = false;
             for &kid in &order {
+                let inst = self.ctx_inst[self.kernels[kid].ctx].min(63);
+                if blocked_insts & (1 << inst) != 0 {
+                    continue;
+                }
                 let placed = self.place_kernel(kid);
                 if placed > 0 {
                     placed_any = true;
                 }
                 if self.kernels[kid].pending_blocks() > 0 {
-                    // Head-of-line: the leftover policy dispatches all of
-                    // this kernel's blocks before any later kernel's (§4.3).
-                    // Exceptions: an MPS client at its thread limit does not
-                    // block others, and static partitions dispatch
-                    // independently (separate hardware queues per instance).
+                    // An MPS client at its thread limit does not block
+                    // others — fall through to the next kernel.
                     let capped = self.thread_headroom(self.kernels[kid].ctx)
                         < self.kernels[kid].fp.threads;
-                    let independent =
-                        matches!(self.cfg.mechanism, Mechanism::Partitioned { .. });
-                    if !capped && !independent {
+                    if !capped {
                         // genuinely resource-blocked: reactive preemption
                         // may clear space (fine-grained mechanism only)
                         if placed == 0 {
                             self.reactive_preempt(kid);
                         }
-                        head_blocked = true;
-                        break;
+                        blocked_insts |= 1 << inst;
                     }
-                    // else: fall through to the next kernel in the queue
                 }
             }
-            if head_blocked || !placed_any {
+            if !placed_any {
                 break;
             }
         }
@@ -572,11 +707,15 @@ impl Engine {
         {
             // the O(1) zero bound is exact; only a positive bound needs the
             // per-SM confirmation scan, and the cohort scan for foreign
-            // memory runs only once nothing fits (the OOM-candidate case)
-            let any_fit = self.acct.max_fits_any(&fp) > 0
-                && self.sms.iter().any(|sm| sm.fits_blocks(&fp) > 0);
+            // memory runs only once nothing fits (the OOM-candidate case).
+            // Scoped to the ctx's instance (= the whole device under
+            // time-slicing, which never partitions).
+            let ir = self.ctx_instance(ctx);
+            let (base, end) = (ir.base, ir.base + ir.count);
+            let any_fit = ir.acct.max_fits_any(&fp) > 0
+                && self.sms[base..end].iter().any(|sm| sm.fits_blocks(&fp) > 0);
             if !any_fit {
-                let other_mem_held = self.sms.iter().any(|sm| {
+                let other_mem_held = self.sms[base..end].iter().any(|sm| {
                     sm.cohorts
                         .iter()
                         .any(|c| c.ctx != ctx && (c.held.regs > 0 || c.held.smem > 0))
@@ -649,11 +788,12 @@ impl Engine {
         is_resume: bool,
     ) -> u32 {
         let fp = self.kernels[kid].fp;
-        // O(1) fast exit off the max-free index: nothing fits on any SM —
-        // the common steady state while a kernel is resource-blocked. A
-        // zero bound is exact, so the per-SM scan below only runs when at
-        // least one SM *may* take a block (DESIGN.md §6a).
-        if self.acct.max_fits_any(&fp) == 0 {
+        // O(1) fast exit off the max-free index: nothing fits on any SM of
+        // the ctx's instance — the common steady state while a kernel is
+        // resource-blocked. A zero bound is exact, so the per-SM scan below
+        // only runs when at least one owned SM *may* take a block
+        // (DESIGN.md §6a; exact per-instance, §6b).
+        if self.ctx_instance(ctx).acct.max_fits_any(&fp) == 0 {
             return 0;
         }
         let mut fits = std::mem::take(&mut self.scratch_fits);
@@ -752,11 +892,15 @@ impl Engine {
             }
         }
         let mut placed = 0u32;
-        let other_running = self
-            .running_blocks
-            .iter()
-            .enumerate()
-            .any(|(c, &n)| c != ctx && n > 0);
+        // Memory-path contention (O4/O5): any other context running
+        // anywhere on the device — except under MIG, whose instances own
+        // disjoint DRAM/L2 shares, so only same-instance neighbors count
+        // (with the default two-instance layout that means none, which IS
+        // the mechanism's isolation guarantee).
+        let mig = matches!(self.cfg.mechanism, Mechanism::Mig { .. });
+        let other_running = self.running_blocks.iter().enumerate().any(|(c, &n)| {
+            c != ctx && n > 0 && (!mig || self.ctx_inst[c] == self.ctx_inst[ctx])
+        });
         for s in 0..nsms {
             if assigned[s] == 0 {
                 continue;
@@ -792,7 +936,7 @@ impl Engine {
                 freeze_mode: FreezeMode::KeepAll,
             };
             self.sms[s].place(cohort);
-            self.acct.sync(s, &self.sms[s]);
+            self.sync_sm(s);
             self.running_blocks[ctx] += assigned[s];
             self.events.push(self.now + dur, Ev::CohortDone { sm: s, id });
             placed += assigned[s];
@@ -811,7 +955,7 @@ impl Engine {
             return;
         }
         let cohort = self.sms[sm].remove(id);
-        self.acct.sync(sm, &self.sms[sm]);
+        self.sync_sm(sm);
         let kid = cohort.kernel as usize;
         let ctx = cohort.ctx;
         self.running_blocks[ctx] -= cohort.blocks;
@@ -1022,7 +1166,7 @@ impl Engine {
                     frozen_blocks += c.blocks;
                     threads_frozen += c.held.threads;
                 }
-                self.acct.sync(s, &self.sms[s]);
+                self.sync_sm(s);
             }
             if frozen_blocks > 0 {
                 self.running_blocks[outgoing] -= frozen_blocks;
@@ -1086,7 +1230,7 @@ impl Engine {
                 resumed_threads += c.held.threads;
                 self.events.push(finish, Ev::CohortDone { sm: s, id });
             }
-            self.acct.sync(s, &self.sms[s]);
+            self.sync_sm(s);
         }
         self.running_blocks[ctx] += resumed_blocks;
         self.ctxs[ctx].threads_resident += resumed_threads;
@@ -1143,15 +1287,19 @@ impl Engine {
         let Some(next) = self.ctxs[ctx].source.peek_kernel().cloned() else {
             return;
         };
-        let occ = Occupancy::compute(&self.cfg.dev, &next.res);
+        let occ = Occupancy::compute(self.ctx_dev(ctx), &next.res);
         let first_wave = next.grid_blocks.min(occ.device_blocks);
         // How many of those fit already? The O(1) aggregate bound skips the
-        // device scan in the common fully-packed state (zero is exact).
+        // instance scan in the common fully-packed state (zero is exact).
         let fp = next.res.block_footprint();
-        let fit_now: u32 = if self.acct.upper_bound_total_fits(&fp) == 0 {
+        let ir = self.ctx_instance(ctx);
+        let fit_now: u32 = if ir.acct.upper_bound_total_fits(&fp) == 0 {
             0
         } else {
-            self.sms.iter().map(|s| s.fits_blocks(&fp)).sum()
+            self.sms[ir.base..ir.base + ir.count]
+                .iter()
+                .map(|s| s.fits_blocks(&fp))
+                .sum()
         };
         // Reservation window: the cover period (current kernel/transfer/gap)
         // plus slack for the launch gap that follows it.
@@ -1249,7 +1397,7 @@ impl Engine {
                     (c.blocks, c.held, c.ctx)
                 };
                 self.sms[s].freeze_one(id, self.now, FreezeMode::KeepAll);
-                self.acct.sync(s, &self.sms[s]);
+                self.sync_sm(s);
                 self.running_blocks[vctx] -= blocks;
                 self.ctxs[vctx].threads_resident = self.ctxs[vctx]
                     .threads_resident
@@ -1280,7 +1428,7 @@ impl Engine {
         let Some(pos) = pos else { return };
         self.saving.swap_remove(pos);
         let cohort = self.sms[sm].remove(id);
-        self.acct.sync(sm, &self.sms[sm]);
+        self.sync_sm(sm);
         debug_assert_eq!(cohort.state, BlockState::Frozen);
         let flavor = self
             .preempt_cfg()
@@ -1311,10 +1459,17 @@ impl Engine {
         }
         self.next_occ_sample = self.now + interval;
         let dev = &self.cfg.dev;
-        // O(1): device aggregates and the active-SM count come from the
-        // incremental account instead of an all-SM scan per sample.
-        let used = self.acct.agg_used();
-        let active_sms = self.acct.active_sms();
+        // O(instances): aggregates and active-SM counts come from the
+        // per-instance incremental accounts (1–2 of them) instead of an
+        // all-SM scan per sample. Fractions stay whole-device so MIG's
+        // stranded capacity shows up as lost utilization — the trade-off
+        // the mechanism makes.
+        let mut used = ResourceVec::ZERO;
+        let mut active_sms = 0u32;
+        for inst in &self.instances {
+            used = used.plus(&inst.acct.agg_used());
+            active_sms += inst.acct.active_sms();
+        }
         let total = dev.sm_limits.times(dev.num_sms as u64);
         self.report.occupancy.push(OccupancySample {
             t: self.now,
@@ -1326,8 +1481,9 @@ impl Engine {
         });
     }
 
-    /// Test hook: validate all SM invariants plus the device account's
-    /// differential invariant (incremental state == from-scratch rebuild).
+    /// Test hook: validate all SM invariants plus every instance account's
+    /// differential invariant (incremental state == from-scratch rebuild of
+    /// its SM slice).
     #[cfg(test)]
     fn check_all_sms(&self) {
         for (i, sm) in self.sms.iter().enumerate() {
@@ -1335,8 +1491,13 @@ impl Engine {
                 panic!("SM {i} invariant violation at t={}: {e}", self.now);
             }
         }
-        if let Err(e) = self.acct.check_against(&self.sms) {
-            panic!("device-account invariant violation at t={}: {e}", self.now);
+        for (i, inst) in self.instances.iter().enumerate() {
+            if let Err(e) = inst
+                .acct
+                .check_against(&self.sms[inst.base..inst.base + inst.count])
+            {
+                panic!("instance {i} account invariant violation at t={}: {e}", self.now);
+            }
         }
     }
 }
@@ -1594,6 +1755,235 @@ mod tests {
             tf < ts,
             "fine-grained {tf:.3} ms !< streams {ts:.3} ms"
         );
+    }
+
+    fn a100_pair(mechanism: Mechanism, requests: u32, steps: u32) -> RunReport {
+        let dev = DeviceConfig::a100();
+        let cfg = EngineConfig::new(dev.clone(), mechanism);
+        run(
+            cfg,
+            vec![
+                CtxDef {
+                    name: "infer".into(),
+                    source: Source::inference(
+                        DlModel::AlexNet.infer_profile().unwrap(),
+                        dev.clone(),
+                        ArrivalPattern::ClosedLoop,
+                        requests,
+                        Rng::new(1),
+                    ),
+                    priority: 0,
+                },
+                CtxDef {
+                    name: "train".into(),
+                    source: Source::training(
+                        DlModel::AlexNet.train_profile().unwrap(),
+                        dev,
+                        steps,
+                        Rng::new(2),
+                    ),
+                    priority: -2,
+                },
+            ],
+        )
+    }
+
+    #[test]
+    fn mig_profiles_complete_the_pair() {
+        use crate::gpu::MigProfile;
+        for profile in [MigProfile::G2, MigProfile::G3, MigProfile::G4, MigProfile::G7] {
+            let rep = a100_pair(Mechanism::Mig { profile }, 6, 3);
+            assert!(rep.oom.is_none(), "{}: {:?}", profile.name(), rep.oom);
+            assert_eq!(rep.requests.len(), 6, "{}", profile.name());
+            assert!(rep.train_done.is_some(), "{}", profile.name());
+        }
+    }
+
+    #[test]
+    fn mig_blocks_never_cross_instance_boundaries() {
+        // Structural isolation: stepping the engine manually, every
+        // resident cohort's SM must belong to its context's instance, and
+        // every per-instance account must match a from-scratch rebuild.
+        use crate::gpu::MigProfile;
+        let dev = DeviceConfig::a100();
+        let cfg = EngineConfig::new(
+            dev.clone(),
+            Mechanism::Mig {
+                profile: MigProfile::G3,
+            },
+        );
+        let mut eng = Engine::new(
+            cfg,
+            vec![
+                CtxDef {
+                    name: "infer".into(),
+                    source: Source::inference(
+                        DlModel::AlexNet.infer_profile().unwrap(),
+                        dev.clone(),
+                        ArrivalPattern::ClosedLoop,
+                        4,
+                        Rng::new(7),
+                    ),
+                    priority: 0,
+                },
+                CtxDef {
+                    name: "train".into(),
+                    source: Source::training(
+                        DlModel::AlexNet.train_profile().unwrap(),
+                        dev,
+                        2,
+                        Rng::new(8),
+                    ),
+                    priority: -2,
+                },
+            ],
+        );
+        // 3g + 4g on a 108-SM device: 45 + 60 SMs, 3 stranded.
+        assert_eq!(eng.instances.len(), 2);
+        assert_eq!(eng.instances[0].count, 45);
+        assert_eq!(eng.instances[1].count, 60);
+        assert_eq!(eng.sm_owner[104], 1);
+        assert_eq!(eng.sm_owner[105], usize::MAX);
+        assert_eq!(eng.ctx_inst, vec![0, 1]);
+        for i in 0..eng.ctxs.len() {
+            eng.events.push(0, Ev::Poll { ctx: i });
+        }
+        let mut steps = 0u64;
+        while let Some((t, ev)) = eng.events.pop() {
+            eng.now = t;
+            match ev {
+                Ev::Poll { ctx } => eng.do_poll(ctx),
+                Ev::CohortDone { sm, id } => eng.on_cohort_done(sm, id),
+                Ev::TransferDone { chan } => eng.on_transfer_done(chan),
+                Ev::SliceExpire { epoch } => eng.on_slice_expire(epoch),
+                Ev::SliceStart { ctx, epoch } => eng.on_slice_start(ctx, epoch),
+                Ev::SaveDone { sm, id } => eng.on_save_done(sm, id),
+                Ev::HoldExpire { .. } => {
+                    eng.hold = None;
+                    eng.try_place();
+                }
+            }
+            eng.check_all_sms();
+            for (s, sm) in eng.sms.iter().enumerate() {
+                for c in &sm.cohorts {
+                    assert_eq!(
+                        eng.sm_owner[s], eng.ctx_inst[c.ctx],
+                        "ctx {} cohort on foreign SM {s} at t={t}",
+                        c.ctx
+                    );
+                }
+            }
+            steps += 1;
+            if eng.ctxs.iter().all(|c| c.state == CtxState::Done) {
+                break;
+            }
+            assert!(steps < 20_000_000, "runaway simulation");
+        }
+        assert!(eng.ctxs.iter().all(|c| c.state == CtxState::Done));
+        assert!(eng.report.oom.is_none(), "{:?}", eng.report.oom);
+    }
+
+    #[test]
+    fn mig_instance_dram_admission() {
+        // ResNet-50 max-batch training (17 GB) cannot fit the 3090's 12 GB
+        // 4g-remainder share — the isolation/utilization tension made
+        // concrete — while the whole 24 GB device holds both tasks fine
+        // under MPS, and the A100's 20 GB share admits it.
+        use crate::gpu::MigProfile;
+        let rep = pair(
+            Mechanism::Mig {
+                profile: MigProfile::G3,
+            },
+            DlModel::ResNet50,
+            2,
+            2,
+        );
+        assert!(rep.oom.is_some(), "expected instance-share OOM on the 3090");
+        assert!(rep.oom.unwrap().contains("instance"));
+
+        let dev = DeviceConfig::a100();
+        let cfg = EngineConfig::new(
+            dev.clone(),
+            Mechanism::Mig {
+                profile: MigProfile::G3,
+            },
+        );
+        let rep = run(
+            cfg,
+            vec![
+                CtxDef {
+                    name: "infer".into(),
+                    source: Source::inference(
+                        DlModel::ResNet50.infer_profile().unwrap(),
+                        dev.clone(),
+                        ArrivalPattern::ClosedLoop,
+                        2,
+                        Rng::new(3),
+                    ),
+                    priority: 0,
+                },
+                CtxDef {
+                    name: "train".into(),
+                    source: Source::training(
+                        DlModel::ResNet50.train_profile().unwrap(),
+                        dev,
+                        1,
+                        Rng::new(4),
+                    ),
+                    priority: -2,
+                },
+            ],
+        );
+        assert!(rep.oom.is_none(), "{:?}", rep.oom);
+    }
+
+    #[test]
+    fn mig_on_unsliceable_device_reports_oom_not_panic() {
+        // A device smaller than the 7 compute slices cannot be
+        // partitioned: the run must record the infeasibility like any
+        // other inadmissible configuration instead of panicking.
+        let dev = DeviceConfig::tiny(4);
+        let mut p = DlModel::AlexNet.infer_profile().unwrap();
+        p.dram_footprint = 1 << 20;
+        let cfg = EngineConfig::new(dev.clone(), Mechanism::mig_default());
+        let rep = run(
+            cfg,
+            vec![CtxDef {
+                name: "i".into(),
+                source: Source::inference(p, dev, ArrivalPattern::ClosedLoop, 1, Rng::new(1)),
+                priority: 0,
+            }],
+        );
+        let oom = rep.oom.expect("expected infeasible-partition report");
+        assert!(oom.contains("MIG-partition"), "{oom}");
+        assert!(rep.requests.is_empty());
+    }
+
+    #[test]
+    fn partitioned_still_isolates_sms_but_shares_memory() {
+        // The pre-MIG spatial mechanism still works on the instance layer:
+        // two SM domains, both seeing the whole-device DRAM.
+        let cfg = EngineConfig::new(dev(), Mechanism::Partitioned { ctx0_sms: 41 });
+        let eng = Engine::new(
+            cfg,
+            vec![
+                CtxDef {
+                    name: "a".into(),
+                    source: infer_src(DlModel::AlexNet, 2, 5),
+                    priority: 0,
+                },
+                CtxDef {
+                    name: "b".into(),
+                    source: train_src(DlModel::AlexNet, 2, 6),
+                    priority: 0,
+                },
+            ],
+        );
+        assert_eq!(eng.instances.len(), 2);
+        assert_eq!(eng.instances[0].count, 41);
+        assert_eq!(eng.instances[1].count, 41);
+        assert_eq!(eng.instances[0].dev.dram_bytes, eng.cfg.dev.dram_bytes);
+        assert_eq!(eng.instances[1].dev.dram_bytes, eng.cfg.dev.dram_bytes);
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! The concurrency mechanisms under study (§2.2, Table 2) plus the paper's
-//! proposed fine-grained preemption (§5), expressed as engine configuration.
+//! proposed fine-grained preemption (§5) and the MIG partitioning the
+//! paper's 3090 lacked, expressed as engine configuration.
 
+use crate::gpu::partition::MigProfile;
 use crate::sim::SimTime;
 
 /// Placement policy used by the hardware thread block scheduler.
@@ -61,15 +63,21 @@ pub struct PreemptConfig {
     pub fixed_restore_ns: Option<SimTime>,
 }
 
+impl PreemptConfig {
+    /// The default configuration as a `const` (usable in
+    /// [`Mechanism::ALL`]); [`Default`] delegates here.
+    pub const DEFAULT: PreemptConfig = PreemptConfig {
+        policy: PreemptPolicy::Reactive,
+        placement: PlacementPolicy::MostRoom,
+        flavor: PreemptFlavor::ContextSave,
+        fixed_save_ns: None,
+        fixed_restore_ns: None,
+    };
+}
+
 impl Default for PreemptConfig {
     fn default() -> Self {
-        Self {
-            policy: PreemptPolicy::Reactive,
-            placement: PlacementPolicy::MostRoom,
-            flavor: PreemptFlavor::ContextSave,
-            fixed_save_ns: None,
-            fixed_restore_ns: None,
-        }
+        Self::DEFAULT
     }
 }
 
@@ -91,20 +99,66 @@ pub enum Mechanism {
     /// layered on MPS-style spatial sharing with stream-style priorities.
     FineGrained(PreemptConfig),
     /// Static spatial partitioning (§6 related work: Adriaens et al.'s
-    /// GPGPU spatial multitasking; the MIG mechanism §2.2 notes is absent
-    /// on the 3090): the first context owns `ctx0_sms` SMs exclusively,
-    /// the second the remainder. No temporal interference, no sharing of
-    /// idle partitions.
+    /// GPGPU spatial multitasking): the first context owns `ctx0_sms` SMs
+    /// exclusively, the second the remainder. SM-level isolation only —
+    /// the memory system (DRAM, L2) stays shared and contended, which is
+    /// what separates this from [`Mechanism::Mig`]. No temporal
+    /// interference, no sharing of idle partitions.
     Partitioned { ctx0_sms: u32 },
+    /// Multi-Instance GPU (§2.2) — the Ampere mechanism the paper could
+    /// not evaluate on the 3090. The device is carved into isolated GPU
+    /// instances per `gpu::partition`'s profile table: the first
+    /// (latency-critical) context owns a `profile` instance; the leftover
+    /// compute/memory slices form a second instance for the best-effort
+    /// contexts (`7g` ⇒ one shared instance). Hard spatial isolation:
+    /// exclusive SM ranges *and* partitioned DRAM/L2, so cross-instance
+    /// work adds no contention anywhere but the shared host link.
+    Mig { profile: MigProfile },
 }
 
 impl Mechanism {
+    /// One canonical instance of every mechanism (Table 2 plus the §5
+    /// proposal and the partitioning family), with default parameters.
+    /// `from_name(m.name())` round-trips every entry; bench_table2
+    /// renders the capability matrix from this list.
+    pub const ALL: [Mechanism; 11] = [
+        Mechanism::Baseline,
+        Mechanism::PriorityStreams,
+        Mechanism::TimeSlicing,
+        Mechanism::Mps { thread_limit: 1.0 },
+        Mechanism::FineGrained(PreemptConfig::DEFAULT),
+        Mechanism::Partitioned { ctx0_sms: 41 },
+        Mechanism::Mig {
+            profile: MigProfile::G1,
+        },
+        Mechanism::Mig {
+            profile: MigProfile::G2,
+        },
+        Mechanism::Mig {
+            profile: MigProfile::G3,
+        },
+        Mechanism::Mig {
+            profile: MigProfile::G4,
+        },
+        Mechanism::Mig {
+            profile: MigProfile::G7,
+        },
+    ];
+
     pub fn mps_default() -> Mechanism {
         Mechanism::Mps { thread_limit: 1.0 }
     }
 
     pub fn fine_grained_default() -> Mechanism {
         Mechanism::FineGrained(PreemptConfig::default())
+    }
+
+    /// The balanced MIG split: inference on 3g, training on the 4g
+    /// remainder.
+    pub fn mig_default() -> Mechanism {
+        Mechanism::Mig {
+            profile: MigProfile::G3,
+        }
     }
 
     pub fn name(&self) -> &'static str {
@@ -115,17 +169,28 @@ impl Mechanism {
             Mechanism::Mps { .. } => "mps",
             Mechanism::FineGrained(_) => "fine-grained",
             Mechanism::Partitioned { .. } => "partitioned",
+            Mechanism::Mig { profile } => match profile {
+                MigProfile::G1 => "mig-1g",
+                MigProfile::G2 => "mig-2g",
+                MigProfile::G3 => "mig-3g",
+                MigProfile::G4 => "mig-4g",
+                MigProfile::G7 => "mig-7g",
+            },
         }
     }
 
     pub fn from_name(s: &str) -> Option<Mechanism> {
+        if let Some(p) = s.strip_prefix("mig-").and_then(MigProfile::parse) {
+            return Some(Mechanism::Mig { profile: p });
+        }
         match s {
             "baseline" => Some(Mechanism::Baseline),
             "priority-streams" | "streams" => Some(Mechanism::PriorityStreams),
             "time-slicing" | "timeslice" => Some(Mechanism::TimeSlicing),
             "mps" => Some(Mechanism::mps_default()),
             "fine-grained" | "preempt" => Some(Mechanism::fine_grained_default()),
-            "partitioned" | "mig" => Some(Mechanism::Partitioned { ctx0_sms: 41 }),
+            "partitioned" => Some(Mechanism::Partitioned { ctx0_sms: 41 }),
+            "mig" => Some(Mechanism::mig_default()),
             _ => None,
         }
     }
@@ -141,6 +206,7 @@ impl Mechanism {
             Mechanism::Mps { .. } => true, // separate CUDA contexts via MPS server
             Mechanism::FineGrained(_) => true,
             Mechanism::Partitioned { .. } => true,
+            Mechanism::Mig { .. } => true, // instances are separate devices
         }
     }
 
@@ -153,6 +219,9 @@ impl Mechanism {
             Mechanism::Mps { .. } => true,
             Mechanism::FineGrained(_) => true,
             Mechanism::Partitioned { .. } => false, // exclusive SM subsets
+            // exclusive GPU instances — except 7g, which consumes every
+            // slice: one shared instance, MPS-style colocation inside it
+            Mechanism::Mig { profile } => *profile == MigProfile::G7,
         }
     }
 
@@ -167,6 +236,8 @@ impl Mechanism {
             // partition sizes are a static priority of sorts, but no
             // runtime prioritization exists
             Mechanism::Partitioned { .. } => false,
+            // instance sizes likewise; reconfiguration requires a drain
+            Mechanism::Mig { .. } => false,
         }
     }
 
@@ -179,6 +250,25 @@ impl Mechanism {
             Mechanism::Mps { .. } => "no (leftover policy, FCFS)",
             Mechanism::FineGrained(_) => "yes (arbitrary block subsets)",
             Mechanism::Partitioned { .. } => "n/a (no sharing to preempt)",
+            Mechanism::Mig { profile } => match profile {
+                // one shared instance: MPS-style leftover dispatch inside
+                MigProfile::G7 => "no (shared instance, leftover FCFS)",
+                _ => "n/a (hard instance isolation)",
+            },
+        }
+    }
+
+    /// Does the mechanism spatially isolate memory (DRAM/L2) as well as
+    /// SMs? Only multi-instance MIG does among the sharing mechanisms —
+    /// the axis Table 2 gains with this variant. `7g` collapses to one
+    /// shared instance (nothing is isolated), and the single-task
+    /// baseline is trivially isolated: there is no neighbor to share
+    /// with.
+    pub fn memory_isolation(&self) -> bool {
+        match self {
+            Mechanism::Baseline => true,
+            Mechanism::Mig { profile } => *profile != MigProfile::G7,
+            _ => false,
         }
     }
 }
@@ -216,16 +306,75 @@ mod tests {
     }
 
     #[test]
-    fn name_roundtrip() {
-        for m in [
-            Mechanism::Baseline,
-            Mechanism::PriorityStreams,
-            Mechanism::TimeSlicing,
-            Mechanism::mps_default(),
-            Mechanism::fine_grained_default(),
-        ] {
-            assert_eq!(Mechanism::from_name(m.name()).unwrap().name(), m.name());
+    fn name_roundtrip_over_all() {
+        // parse(name()) == Some(self) for every canonical mechanism —
+        // including every MIG profile variant.
+        for m in Mechanism::ALL {
+            assert_eq!(Mechanism::from_name(m.name()), Some(m.clone()), "{}", m.name());
         }
         assert!(Mechanism::from_name("bogus").is_none());
+        assert!(Mechanism::from_name("mig-5g").is_none());
+        assert!(Mechanism::from_name("mig-").is_none());
+    }
+
+    #[test]
+    fn all_covers_every_variant_shape() {
+        // A new Mechanism variant must be added to ALL: count the distinct
+        // names and check the family representatives are present.
+        let names: Vec<&str> = Mechanism::ALL.iter().map(|m| m.name()).collect();
+        for want in [
+            "baseline",
+            "priority-streams",
+            "time-slicing",
+            "mps",
+            "fine-grained",
+            "partitioned",
+            "mig-1g",
+            "mig-2g",
+            "mig-3g",
+            "mig-4g",
+            "mig-7g",
+        ] {
+            assert!(names.contains(&want), "ALL is missing {want}");
+        }
+        assert_eq!(names.len(), Mechanism::ALL.len());
+    }
+
+    #[test]
+    fn mig_shortcuts_parse() {
+        assert_eq!(Mechanism::from_name("mig"), Some(Mechanism::mig_default()));
+        assert_eq!(
+            Mechanism::from_name("mig-4g"),
+            Some(Mechanism::Mig {
+                profile: MigProfile::G4
+            })
+        );
+    }
+
+    #[test]
+    fn mig_table2_row() {
+        let mig = Mechanism::mig_default();
+        assert!(mig.separate_processes());
+        assert!(!mig.colocation());
+        assert!(!mig.priorities());
+        assert!(mig.preempts_blocks().starts_with("n/a"));
+        // the new Table-2 axis: only MIG (and trivially the baseline)
+        // isolates the memory system
+        assert!(mig.memory_isolation());
+        assert!(!Mechanism::Partitioned { ctx0_sms: 41 }.memory_isolation());
+        assert!(!Mechanism::mps_default().memory_isolation());
+    }
+
+    #[test]
+    fn mig_7g_degenerates_to_one_shared_instance() {
+        // 7g consumes every slice: the engine runs a single shared
+        // instance, so the capability row must read like sharing, not
+        // isolation.
+        let g7 = Mechanism::Mig {
+            profile: MigProfile::G7,
+        };
+        assert!(g7.colocation());
+        assert!(!g7.memory_isolation());
+        assert!(g7.preempts_blocks().starts_with("no"));
     }
 }

@@ -3,7 +3,8 @@
 //! core or strictly serially — parallelism must never change results, only
 //! wall time (DESIGN.md §8a).
 
-use gpushare::exp::{paper_mechanisms, run_comparisons, Protocol};
+use gpushare::exp::{extended_mechanisms, paper_mechanisms, run_comparisons, Protocol};
+use gpushare::gpu::DeviceConfig;
 use gpushare::sched::Mechanism;
 use gpushare::sim::MS;
 use gpushare::workload::DlModel;
@@ -40,6 +41,43 @@ fn fanout_yields_byte_identical_reports() {
         assert_eq!(a.per_mechanism.len(), b.per_mechanism.len());
         for ((na, ra), (nb, rb)) in a.per_mechanism.iter().zip(&b.per_mechanism) {
             assert_eq!(na, nb);
+            assert_eq!(
+                ra.to_json(),
+                rb.to_json(),
+                "{} under {na}: parallel and serial runs diverged",
+                a.model.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn mig_rows_fanout_byte_identical() {
+    // The guard with the MIG rows included: the full extended mechanism
+    // list (paper's three + fine-grained + three MIG splits) on the
+    // A100-style device, parallel vs serial, byte-for-byte.
+    let mechs = extended_mechanisms();
+    assert!(
+        mechs.iter().filter(|m| m.name().starts_with("mig-")).count() >= 3,
+        "extended list must carry at least three MIG profiles"
+    );
+    let pairs = [
+        (DlModel::AlexNet, DlModel::AlexNet),
+        (DlModel::ResNet50, DlModel::ResNet50),
+    ];
+    let mk = |parallel| proto(parallel).on_device(DeviceConfig::a100());
+    let par = run_comparisons(&mk(true), &pairs, &mechs);
+    let ser = run_comparisons(&mk(false), &pairs, &mechs);
+    assert_eq!(par.len(), ser.len());
+    for (a, b) in par.iter().zip(&ser) {
+        for ((na, ra), (nb, rb)) in a.per_mechanism.iter().zip(&b.per_mechanism) {
+            assert_eq!(na, nb);
+            assert!(
+                ra.oom.is_none(),
+                "{} under {na} unexpectedly OOMed: {:?}",
+                a.model.name(),
+                ra.oom
+            );
             assert_eq!(
                 ra.to_json(),
                 rb.to_json(),

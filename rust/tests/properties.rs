@@ -1,6 +1,7 @@
 //! Property-based tests (DESIGN.md §9) over the scheduler, GPU model, and
 //! coordinator, using the in-crate prop framework (util::prop).
 
+use gpushare::gpu::partition::{self, MigProfile, COMPUTE_SLICES, MEM_SLICES};
 use gpushare::gpu::{
     BlockState, Cohort, CohortId, DeviceAccount, DeviceConfig, FreezeMode, KernelRes, Occupancy,
     ResourceVec, SmState,
@@ -280,6 +281,153 @@ fn prop_device_account_matches_recompute() {
     });
 }
 
+/// A random standard-profile layout that fits the 7/8 slice budgets.
+fn random_layout(g: &mut Gen) -> Vec<MigProfile> {
+    let mut profiles = Vec::new();
+    let (mut c, mut m) = (0u32, 0u32);
+    for _ in 0..g.usize(1, 4) {
+        let p = *g.pick(&MigProfile::ALL);
+        if c + p.compute_slices() <= COMPUTE_SLICES && m + p.mem_slices() <= MEM_SLICES {
+            c += p.compute_slices();
+            m += p.mem_slices();
+            profiles.push(p);
+        }
+    }
+    if profiles.is_empty() {
+        profiles.push(MigProfile::G1);
+    }
+    profiles
+}
+
+#[test]
+fn prop_partition_tiles_device_disjointly() {
+    // Any admissible layout tiles the device with disjoint SM ranges, and
+    // the instances' memory shares never exceed the parent's.
+    run_prop("partition-tiling", cfgd(), |g| {
+        let dev = if g.bool() {
+            DeviceConfig::a100()
+        } else {
+            DeviceConfig::rtx3090()
+        };
+        let profiles = random_layout(g);
+        let insts = partition::partition(&dev, &profiles).map_err(|e| e.to_string())?;
+        check_eq(insts.len(), profiles.len(), "instance per profile")?;
+        let mut claimed = vec![false; dev.num_sms as usize];
+        let mut dram_total = 0u64;
+        for inst in &insts {
+            check(inst.sm_count > 0, "non-empty instance")?;
+            check_le(
+                (inst.sm_start + inst.sm_count) as u64,
+                dev.num_sms as u64,
+                "instance within device",
+            )?;
+            let lo = inst.sm_start as usize;
+            let hi = lo + inst.sm_count as usize;
+            for (off, slot) in claimed[lo..hi].iter_mut().enumerate() {
+                check(!*slot, format!("SM {} claimed twice", lo + off))?;
+                *slot = true;
+            }
+            check_eq(inst.dev.num_sms, inst.sm_count, "instance dev SM count")?;
+            check_eq(inst.dev.sm_limits, dev.sm_limits, "per-SM limits preserved")?;
+            dram_total += inst.dev.dram_bytes;
+        }
+        check_le(dram_total, dev.dram_bytes, "DRAM shares within device")
+    });
+}
+
+#[test]
+fn prop_partition_instance_accounts_sum_to_device() {
+    // The §6b invariant: per-instance DeviceAccounts over disjoint SM
+    // slices must (a) each equal a from-scratch rebuild of their slice,
+    // (b) sum to the whole-device account, and (c) never contain a cohort
+    // on an SM outside its owner's range (ctx ≡ instance id here).
+    run_prop("partition-accounts-differential", cfgd(), |g| {
+        let dev = DeviceConfig::a100();
+        let profiles = random_layout(g);
+        let insts = partition::partition(&dev, &profiles).map_err(|e| e.to_string())?;
+        let mut sms: Vec<SmState> = (0..dev.num_sms)
+            .map(|_| SmState::new(dev.sm_limits))
+            .collect();
+        let mut accts: Vec<DeviceAccount> = insts
+            .iter()
+            .map(|i| {
+                DeviceAccount::new(&sms[i.sm_start as usize..(i.sm_start + i.sm_count) as usize])
+            })
+            .collect();
+        let mut next_id = 0u64;
+        let mut resident: Vec<(usize, usize, CohortId)> = Vec::new(); // (inst, sm, id)
+        let steps = g.usize(1, 60);
+        for _ in 0..steps {
+            if resident.is_empty() || g.chance(0.65) {
+                // place a random cohort on a random SM of a random instance
+                let i = g.usize(0, insts.len() - 1);
+                let inst = &insts[i];
+                let s = inst.sm_start as usize + g.usize(0, inst.sm_count as usize - 1);
+                let res = KernelRes::new(
+                    *g.pick(&[64u32, 128, 256]),
+                    g.u64(8, 64) as u32,
+                    *g.pick(&[0u32, 2048, 8192]),
+                );
+                let fp = res.block_footprint();
+                let fits = sms[s].fits_blocks(&fp);
+                if fits == 0 {
+                    continue;
+                }
+                let blocks = g.u64(1, fits as u64) as u32;
+                let id = CohortId(next_id);
+                next_id += 1;
+                sms[s].place(Cohort {
+                    id,
+                    ctx: i, // ctx doubles as the owning instance id
+                    kernel: 0,
+                    blocks,
+                    held: fp.times(blocks as u64),
+                    started: 0,
+                    remaining: g.u64(1, 1000),
+                    state: BlockState::Running,
+                    freeze_mode: FreezeMode::KeepAll,
+                });
+                accts[i].sync(s - inst.sm_start as usize, &sms[s]);
+                resident.push((i, s, id));
+            } else {
+                let r = g.usize(0, resident.len() - 1);
+                let (i, s, id) = resident.swap_remove(r);
+                sms[s].remove(id);
+                accts[i].sync(s - insts[i].sm_start as usize, &sms[s]);
+            }
+            // (a) each instance account equals its slice rebuilt from scratch
+            for (i, inst) in insts.iter().enumerate() {
+                accts[i]
+                    .check_against(
+                        &sms[inst.sm_start as usize..(inst.sm_start + inst.sm_count) as usize],
+                    )
+                    .map_err(|e| format!("instance {i}: {e}"))?;
+            }
+            // (b) instance aggregates sum to the whole-device account
+            let whole = DeviceAccount::new(&sms);
+            let sum = accts
+                .iter()
+                .fold(ResourceVec::ZERO, |acc, a| acc.plus(&a.agg_used()));
+            check_eq(sum, whole.agg_used(), "Σ instance used == device used")?;
+            let active: u32 = accts.iter().map(|a| a.active_sms()).sum();
+            check_eq(active, whole.active_sms(), "Σ instance active == device active")?;
+            // (c) no cohort sits outside its owner instance's range
+            for (s, sm) in sms.iter().enumerate() {
+                for c in &sm.cohorts {
+                    let inst = &insts[c.ctx];
+                    let lo = inst.sm_start as usize;
+                    let hi = lo + inst.sm_count as usize;
+                    check(
+                        (lo..hi).contains(&s),
+                        format!("instance {} cohort resident on foreign SM {s}", c.ctx),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_event_queue_total_order() {
     run_prop("event-queue-order", cfgd(), |g| {
@@ -347,6 +495,7 @@ fn prop_engine_conservation_across_mechanisms() {
                 Mechanism::mps_default(),
                 Mechanism::fine_grained_default(),
                 Mechanism::Mps { thread_limit: 0.5 },
+                Mechanism::mig_default(),
             ])
             .clone();
         let requests = g.u64(1, 8) as u32;
