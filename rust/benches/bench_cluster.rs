@@ -1,0 +1,123 @@
+//! §Perf — the cluster-of-devices layer: fleet scenario throughput
+//! (events/s across every device lane) and placement/routing overhead.
+//!
+//! The `sweep: cluster …` entry is shared verbatim with `bench_perf`, so
+//! the committed `BENCH_baseline.json` floor gates it in CI through the
+//! regular perf-smoke job; the `cluster: …` entries are finer-grained
+//! local diagnostics (placement is pure routing work, no simulation).
+
+use gpushare::cluster::{place, ClusterJob, ClusterSpec, PlacePolicy};
+use gpushare::exp::cluster::{
+    cluster_sweep_events, drain_rebalance, heterogeneous_slo, scale_out_homogeneous,
+};
+use gpushare::exp::Protocol;
+use gpushare::util::bench::{black_box, BenchConfig, Bencher};
+use gpushare::workload::DlModel;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn main() {
+    // Same sampling config as bench_perf's sweep bencher, so the shared
+    // gated entry is measured identically in both targets.
+    let mut b = Bencher::with_config(BenchConfig {
+        warmup: Duration::from_millis(1),
+        samples: 3,
+        sample_target: Duration::from_millis(1),
+    });
+    let proto = Protocol::fast();
+
+    // --- the gated fleet sweep (same entry name as bench_perf) ---
+    let cluster_events = cluster_sweep_events(&proto, DlModel::ResNet50);
+    b.bench_items(
+        &format!("sweep: cluster scale-out + hetero mig ({cluster_events} events)"),
+        Some(cluster_events),
+        |iters| {
+            for _ in 0..iters {
+                black_box(cluster_sweep_events(&proto, DlModel::ResNet50));
+            }
+        },
+    );
+
+    // --- per-scenario diagnostics ---
+    let scale = scale_out_homogeneous(&proto, 2, DlModel::ResNet50);
+    let scale_events: u64 = scale.lanes.iter().map(|l| l.report.events).sum();
+    b.bench_items(
+        &format!("cluster: 2x3090 scale-out ({scale_events} events)"),
+        Some(scale_events),
+        |iters| {
+            for _ in 0..iters {
+                black_box(scale_out_homogeneous(&proto, 2, DlModel::ResNet50));
+            }
+        },
+    );
+    let hetero = heterogeneous_slo(&proto, DlModel::ResNet50, DlModel::ResNet50);
+    let hetero_events: u64 = hetero.lanes.iter().map(|l| l.report.events).sum();
+    b.bench_items(
+        &format!("cluster: 3090+a100 mig slo-aware ({hetero_events} events)"),
+        Some(hetero_events),
+        |iters| {
+            for _ in 0..iters {
+                black_box(heterogeneous_slo(&proto, DlModel::ResNet50, DlModel::ResNet50));
+            }
+        },
+    );
+    let drain = drain_rebalance(&proto, DlModel::ResNet50);
+    let drain_events: u64 = drain
+        .phase1
+        .lanes
+        .iter()
+        .chain(drain.phase2.lanes.iter())
+        .map(|l| l.report.events)
+        .sum();
+    b.bench_items(
+        &format!("cluster: drain + rebalance ({drain_events} events)"),
+        Some(drain_events),
+        |iters| {
+            for _ in 0..iters {
+                black_box(drain_rebalance(&proto, DlModel::ResNet50));
+            }
+        },
+    );
+    println!(
+        "\ndrain/rebalance gap: {:.1} ms drain + {:.1} ms create = {:.2}% of span",
+        drain.cost.drain_ns as f64 / 1e6,
+        drain.cost.create_ns as f64 / 1e6,
+        drain.gap_fraction() * 100.0
+    );
+
+    // --- placement/routing overhead: pure coordinator work, no sims ---
+    let spec = ClusterSpec::parse("2x3090:mps,a100:mig-3g").unwrap();
+    let jobs: Vec<ClusterJob> = (0..64)
+        .map(|i| {
+            if i % 2 == 0 {
+                ClusterJob::inference(&format!("i{i}"), DlModel::AlexNet, 1, Some(5))
+            } else {
+                ClusterJob::training(&format!("t{i}"), DlModel::AlexNet, 1)
+            }
+        })
+        .collect();
+    for policy in [
+        PlacePolicy::RoundRobin,
+        PlacePolicy::LeastLoaded,
+        PlacePolicy::SloAware { cutoff_ms: 10 },
+    ] {
+        b.bench_items(
+            &format!("cluster: place 64 jobs, {}", policy.name()),
+            Some(64),
+            |iters| {
+                for _ in 0..iters {
+                    black_box(place(&spec, &jobs, policy));
+                }
+            },
+        );
+    }
+
+    let out = gpushare::util::table::bench_out_dir();
+    std::fs::create_dir_all(&out).ok();
+    std::fs::write(out.join("bench_cluster.csv"), b.to_csv()).ok();
+    println!("\n[csv] {}", out.join("bench_cluster.csv").display());
+    let json_path = std::env::var("GPUSHARE_BENCH_JSON")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("BENCH_cluster.json"));
+    b.write_json(&json_path);
+}

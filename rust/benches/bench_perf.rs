@@ -5,6 +5,7 @@
 
 use gpushare::coordinator::batcher::{BatchRunner, Batcher, BatcherConfig};
 use gpushare::coordinator::{serve, GovernorMode, ServeConfig};
+use gpushare::exp::cluster::cluster_sweep_events;
 use gpushare::exp::{mig_mechanisms, run_parallel, Job, Protocol};
 use gpushare::gpu::DeviceConfig;
 use gpushare::runtime::{MockExecutor, ModelExecutor};
@@ -235,6 +236,21 @@ fn main() {
         |iters| {
             for _ in 0..iters {
                 black_box(fast_sweep(&mig_fast, &mig_mechs));
+            }
+        },
+    );
+
+    // --- the cluster sweep: both steady-state fleet scenarios (2x3090
+    // scale-out + 3090+a100 MIG heterogeneous), one DeviceRt per thread —
+    // shared with bench_cluster so the perf gate covers the fleet path ---
+    let cluster_proto = Protocol::fast();
+    let cluster_events = cluster_sweep_events(&cluster_proto, DlModel::ResNet50);
+    sweep_bench.bench_items(
+        &format!("sweep: cluster scale-out + hetero mig ({cluster_events} events)"),
+        Some(cluster_events),
+        |iters| {
+            for _ in 0..iters {
+                black_box(cluster_sweep_events(&cluster_proto, DlModel::ResNet50));
             }
         },
     );

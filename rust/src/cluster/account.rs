@@ -1,0 +1,433 @@
+//! Cluster-level incremental placement accounting (DESIGN.md §7a): the
+//! per-*instance* [`crate::gpu::DeviceAccount`] generalized one layer up to
+//! per-*device* accounting under one coordinator.
+//!
+//! The coordinator's placement loop answers "does any device fit this
+//! job?" before every routing decision. [`ClusterAccount`] mirrors the
+//! per-device free vectors into (a) a cluster-wide aggregate free vector
+//! and (b) a per-dimension *max-free* multiset index, so:
+//!
+//! * [`ClusterAccount::any_fits`] — an O(1) upper-bound test against the
+//!   component-wise envelope of per-device free vectors. A `false` result
+//!   is **exact** ("no device can take this job" — the coordinator's early
+//!   rejection exit); `true` is conservative and the caller falls through
+//!   to the per-device scan ([`ClusterAccount::least_loaded`]).
+//! * [`ClusterAccount::agg_free`]/[`ClusterAccount::agg_used`] — O(1)
+//!   cluster occupancy for reports and load-balancing heuristics.
+//!
+//! Synchronisation contract (the §6a contract, one layer up): the account
+//! changes only through [`ClusterAccount::commit`]/[`ClusterAccount::release`],
+//! and the differential property tests drive random commit/release
+//! sequences asserting the incremental state equals a from-scratch
+//! recompute from the placement list ([`ClusterAccount::check_against`]).
+
+use std::collections::BTreeMap;
+
+/// A vector of the cluster-schedulable per-device resources. As a *limit*
+/// it is a device's capacity, as a *demand* it is what one job (or one
+/// in-flight request, at the serving layer) consumes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClusterVec {
+    /// Resident DRAM bytes — the admission-dominant dimension (a model
+    /// that does not fit in device memory fits nowhere on the device).
+    pub dram: u64,
+    /// Job slots: contexts a device hosts (simulation layer) or in-flight
+    /// requests a lane absorbs (serving layer).
+    pub slots: u64,
+    /// Thread capacity (total device thread slots). Carried for fleet
+    /// capacity reporting (`agg_free`/`agg_used`); current job demands
+    /// leave it 0, so it does not constrain placement — per-SM thread
+    /// accounting is the engine's job, not the coordinator's.
+    pub threads: u64,
+}
+
+impl ClusterVec {
+    pub const ZERO: ClusterVec = ClusterVec {
+        dram: 0,
+        slots: 0,
+        threads: 0,
+    };
+
+    pub fn new(dram: u64, slots: u64, threads: u64) -> Self {
+        Self {
+            dram,
+            slots,
+            threads,
+        }
+    }
+
+    /// Component-wise `self + other`.
+    pub fn plus(&self, other: &ClusterVec) -> ClusterVec {
+        ClusterVec {
+            dram: self.dram + other.dram,
+            slots: self.slots + other.slots,
+            threads: self.threads + other.threads,
+        }
+    }
+
+    /// Component-wise `self - other`; panics on underflow (a coordinator
+    /// accounting bug, the same contract as `ResourceVec::minus`).
+    pub fn minus(&self, other: &ClusterVec) -> ClusterVec {
+        ClusterVec {
+            dram: self.dram.checked_sub(other.dram).expect("dram underflow"),
+            slots: self.slots.checked_sub(other.slots).expect("slots underflow"),
+            threads: self
+                .threads
+                .checked_sub(other.threads)
+                .expect("threads underflow"),
+        }
+    }
+
+    /// Does `self` (a demand) fit within `limit` (a free vector)?
+    pub fn fits_within(&self, limit: &ClusterVec) -> bool {
+        self.dram <= limit.dram && self.slots <= limit.slots && self.threads <= limit.threads
+    }
+
+    /// The maximum component-wise fraction of `limit` that `self` uses
+    /// (zero-capacity dimensions impose no load) — 1.0 means some
+    /// dimension is exhausted.
+    pub fn max_fraction_of(&self, limit: &ClusterVec) -> f64 {
+        let frac = |u: u64, l: u64| if l == 0 { 0.0 } else { u as f64 / l as f64 };
+        frac(self.dram, limit.dram)
+            .max(frac(self.slots, limit.slots))
+            .max(frac(self.threads, limit.threads))
+    }
+}
+
+/// Multiset of per-device values for one dimension, keyed by value.
+type ValueCounts = BTreeMap<u64, u32>;
+
+fn ms_insert(map: &mut ValueCounts, v: u64) {
+    *map.entry(v).or_insert(0) += 1;
+}
+
+fn ms_remove(map: &mut ValueCounts, v: u64) {
+    match map.get_mut(&v) {
+        Some(c) if *c > 1 => *c -= 1,
+        Some(_) => {
+            map.remove(&v);
+        }
+        None => debug_assert!(false, "cluster max-free index missing value {v}"),
+    }
+}
+
+fn ms_max(map: &ValueCounts) -> u64 {
+    map.last_key_value().map(|(&v, _)| v).unwrap_or(0)
+}
+
+/// Incrementally-maintained aggregates over the per-device free vectors of
+/// a cluster.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterAccount {
+    /// Per-device capacities (fixed at construction).
+    caps: Vec<ClusterVec>,
+    /// Per-device free vectors.
+    free: Vec<ClusterVec>,
+    /// Per-dimension multisets of the per-device free values (the
+    /// max-free index behind the O(1) "no device fits" exit).
+    free_dram: ValueCounts,
+    free_slots: ValueCounts,
+    free_threads: ValueCounts,
+    /// Component-wise sum of `free`.
+    agg_free: ClusterVec,
+    /// Component-wise sum of `caps`.
+    agg_cap: ClusterVec,
+}
+
+impl ClusterAccount {
+    /// A fresh account: every device entirely free.
+    pub fn new(caps: &[ClusterVec]) -> ClusterAccount {
+        let mut acct = ClusterAccount {
+            caps: caps.to_vec(),
+            free: caps.to_vec(),
+            free_dram: ValueCounts::new(),
+            free_slots: ValueCounts::new(),
+            free_threads: ValueCounts::new(),
+            agg_free: ClusterVec::ZERO,
+            agg_cap: ClusterVec::ZERO,
+        };
+        for c in caps {
+            ms_insert(&mut acct.free_dram, c.dram);
+            ms_insert(&mut acct.free_slots, c.slots);
+            ms_insert(&mut acct.free_threads, c.threads);
+            acct.agg_free = acct.agg_free.plus(c);
+            acct.agg_cap = acct.agg_cap.plus(c);
+        }
+        acct
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.caps.len()
+    }
+
+    /// Free vector of device `d`.
+    pub fn free(&self, d: usize) -> ClusterVec {
+        self.free[d]
+    }
+
+    /// Used vector of device `d` (= cap − free).
+    pub fn used(&self, d: usize) -> ClusterVec {
+        self.caps[d].minus(&self.free[d])
+    }
+
+    /// Capacity vector of device `d`.
+    pub fn cap(&self, d: usize) -> ClusterVec {
+        self.caps[d]
+    }
+
+    /// Aggregate free resources across the cluster (= Σ per-device free).
+    pub fn agg_free(&self) -> ClusterVec {
+        self.agg_free
+    }
+
+    /// Aggregate used resources (= Σ per-device used).
+    pub fn agg_used(&self) -> ClusterVec {
+        self.agg_cap.minus(&self.agg_free)
+    }
+
+    /// Component-wise maxima of the per-device free vectors (O(log N)).
+    pub fn max_free(&self) -> ClusterVec {
+        ClusterVec {
+            dram: ms_max(&self.free_dram),
+            slots: ms_max(&self.free_slots),
+            threads: ms_max(&self.free_threads),
+        }
+    }
+
+    /// O(1) "no device fits" exit: `false` is **exact** (the demand exceeds
+    /// the per-dimension envelope of every device's free vector, so it fits
+    /// nowhere); `true` is a conservative upper bound and the caller falls
+    /// through to the per-device scan.
+    pub fn any_fits(&self, demand: &ClusterVec) -> bool {
+        demand.fits_within(&self.max_free())
+    }
+
+    /// Does `demand` fit on device `d` right now?
+    pub fn fits(&self, d: usize, demand: &ClusterVec) -> bool {
+        demand.fits_within(&self.free[d])
+    }
+
+    /// The least-loaded device that fits `demand`: the device minimizing
+    /// its post-commit max-fraction load, lowest index on ties (so the
+    /// choice — and every cluster run built on it — is deterministic).
+    pub fn least_loaded(&self, demand: &ClusterVec) -> Option<usize> {
+        self.least_loaded_among(demand, |_| true)
+    }
+
+    /// Round-robin pick: the first fitting device cycling from
+    /// `*rr_next`, advancing the pointer past the chosen device. The
+    /// shared policy primitive behind both the simulation placer and the
+    /// serving router (so a fix to the scan applies to both layers).
+    pub fn round_robin(&self, demand: &ClusterVec, rr_next: &mut usize) -> Option<usize> {
+        let n = self.caps.len();
+        if n == 0 || !self.any_fits(demand) {
+            return None; // O(1) exact exit
+        }
+        for off in 0..n {
+            let d = (*rr_next + off) % n;
+            if self.fits(d, demand) {
+                *rr_next = (d + 1) % n;
+                return Some(d);
+            }
+        }
+        None
+    }
+
+    /// SLO-aware pick: least-loaded among the devices where `preferred`
+    /// holds, falling back to least-loaded over the whole fleet when the
+    /// preferred class has no room. Shared by both routing layers.
+    pub fn least_loaded_preferring(
+        &self,
+        demand: &ClusterVec,
+        preferred: impl Fn(usize) -> bool,
+    ) -> Option<usize> {
+        self.least_loaded_among(demand, &preferred)
+            .or_else(|| self.least_loaded(demand))
+    }
+
+    /// [`ClusterAccount::least_loaded`] restricted to devices passing
+    /// `filter` (e.g. "memory-isolated devices only" under SLO-aware
+    /// routing).
+    pub fn least_loaded_among(
+        &self,
+        demand: &ClusterVec,
+        filter: impl Fn(usize) -> bool,
+    ) -> Option<usize> {
+        if !self.any_fits(demand) {
+            return None; // O(1) exact exit
+        }
+        let mut best: Option<(f64, usize)> = None;
+        for d in 0..self.caps.len() {
+            if !filter(d) || !self.fits(d, demand) {
+                continue;
+            }
+            let score = self.used(d).plus(demand).max_fraction_of(&self.caps[d]);
+            if best.map_or(true, |(s, _)| score < s) {
+                best = Some((score, d));
+            }
+        }
+        best.map(|(_, d)| d)
+    }
+
+    fn set_free(&mut self, d: usize, new: ClusterVec) {
+        let old = self.free[d];
+        if old == new {
+            return;
+        }
+        if old.dram != new.dram {
+            ms_remove(&mut self.free_dram, old.dram);
+            ms_insert(&mut self.free_dram, new.dram);
+        }
+        if old.slots != new.slots {
+            ms_remove(&mut self.free_slots, old.slots);
+            ms_insert(&mut self.free_slots, new.slots);
+        }
+        if old.threads != new.threads {
+            ms_remove(&mut self.free_threads, old.threads);
+            ms_insert(&mut self.free_threads, new.threads);
+        }
+        self.agg_free = self.agg_free.minus(&old).plus(&new);
+        self.free[d] = new;
+    }
+
+    /// Commit `demand` onto device `d`. Returns `false` (and changes
+    /// nothing) when it does not fit.
+    pub fn commit(&mut self, d: usize, demand: &ClusterVec) -> bool {
+        if !self.fits(d, demand) {
+            return false;
+        }
+        self.set_free(d, self.free[d].minus(demand));
+        true
+    }
+
+    /// Release a previously-committed `demand` from device `d`. Panics if
+    /// the release would push free above capacity (an accounting bug).
+    pub fn release(&mut self, d: usize, demand: &ClusterVec) {
+        let new = self.free[d].plus(demand);
+        assert!(
+            new.fits_within(&self.caps[d]),
+            "release overflows device {d}: free {new:?} > cap {:?}",
+            self.caps[d]
+        );
+        self.set_free(d, new);
+    }
+
+    /// Differential check: the incremental state must equal a from-scratch
+    /// recompute from the capacities and the outstanding placement list
+    /// `(device, demand)`. Returns the first discrepancy.
+    pub fn check_against(&self, placements: &[(usize, ClusterVec)]) -> Result<(), String> {
+        let mut fresh = ClusterAccount::new(&self.caps);
+        for &(d, demand) in placements {
+            if !fresh.commit(d, &demand) {
+                return Err(format!(
+                    "placement list infeasible from scratch: {demand:?} on device {d}"
+                ));
+            }
+        }
+        if *self != fresh {
+            return Err(format!(
+                "cluster account drifted from recompute:\n  incremental: {self:?}\n  fresh: {fresh:?}"
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn caps() -> Vec<ClusterVec> {
+        vec![
+            ClusterVec::new(24 << 30, 8, 125_952), // 3090-shaped
+            ClusterVec::new(40 << 30, 8, 221_184), // a100-shaped
+        ]
+    }
+
+    #[test]
+    fn commit_release_tracks_and_sums() {
+        let mut a = ClusterAccount::new(&caps());
+        assert_eq!(a.agg_used(), ClusterVec::ZERO);
+        let d = ClusterVec::new(10 << 30, 1, 0);
+        assert!(a.commit(0, &d));
+        assert!(a.commit(1, &d));
+        a.check_against(&[(0, d), (1, d)]).unwrap();
+        // per-device sums equal the global account
+        assert_eq!(a.free(0).plus(&a.free(1)), a.agg_free());
+        assert_eq!(a.used(0).plus(&a.used(1)), a.agg_used());
+        a.release(0, &d);
+        a.check_against(&[(1, d)]).unwrap();
+        assert_eq!(a.used(0), ClusterVec::ZERO);
+    }
+
+    #[test]
+    fn no_fit_exit_is_exact() {
+        let mut a = ClusterAccount::new(&caps());
+        // fill both devices' DRAM
+        assert!(a.commit(0, &ClusterVec::new(24 << 30, 0, 0)));
+        assert!(a.commit(1, &ClusterVec::new(40 << 30, 0, 0)));
+        assert!(!a.any_fits(&ClusterVec::new(1, 0, 0)));
+        assert_eq!(a.least_loaded(&ClusterVec::new(1, 0, 0)), None);
+        // slots remain: a zero-DRAM demand still fits somewhere
+        assert!(a.any_fits(&ClusterVec::new(0, 1, 0)));
+    }
+
+    #[test]
+    fn least_loaded_prefers_emptier_device_and_is_deterministic() {
+        let mut a = ClusterAccount::new(&caps());
+        let d = ClusterVec::new(8 << 30, 1, 0);
+        // device 0 carries load; the next job goes to device 1
+        assert!(a.commit(0, &ClusterVec::new(20 << 30, 4, 0)));
+        assert_eq!(a.least_loaded(&d), Some(1));
+        // a demand only device 1 fits must land there
+        assert_eq!(a.least_loaded(&ClusterVec::new(30 << 30, 1, 0)), Some(1));
+        // equal load ties break to the lowest index
+        let b = ClusterAccount::new(&[ClusterVec::new(1 << 30, 4, 0); 3]);
+        assert_eq!(b.least_loaded(&ClusterVec::new(1 << 20, 1, 0)), Some(0));
+    }
+
+    #[test]
+    fn round_robin_cycles_and_skips_full_devices() {
+        let mut a = ClusterAccount::new(&caps());
+        let d = ClusterVec::new(1 << 30, 1, 0);
+        let mut rr = 0usize;
+        assert_eq!(a.round_robin(&d, &mut rr), Some(0));
+        assert_eq!(rr, 1);
+        assert_eq!(a.round_robin(&d, &mut rr), Some(1));
+        assert_eq!(rr, 0);
+        // device 0 out of slots → the scan skips it
+        assert!(a.commit(0, &ClusterVec::new(0, 8, 0)));
+        assert_eq!(a.round_robin(&d, &mut rr), Some(1));
+        // nothing fits anywhere → None, pointer untouched
+        assert!(a.commit(1, &ClusterVec::new(0, 8, 0)));
+        let before = rr;
+        assert_eq!(a.round_robin(&d, &mut rr), None);
+        assert_eq!(rr, before);
+    }
+
+    #[test]
+    fn least_loaded_preferring_falls_back() {
+        let mut a = ClusterAccount::new(&caps());
+        let d = ClusterVec::new(1 << 30, 1, 0);
+        // preferred class = device 0 only
+        assert_eq!(a.least_loaded_preferring(&d, |i| i == 0), Some(0));
+        // preferred class full → falls back to the other device
+        assert!(a.commit(0, &ClusterVec::new(0, 8, 0)));
+        assert_eq!(a.least_loaded_preferring(&d, |i| i == 0), Some(1));
+    }
+
+    #[test]
+    fn commit_rejects_oversubscription_unchanged() {
+        let mut a = ClusterAccount::new(&caps());
+        let before = a.clone();
+        assert!(!a.commit(0, &ClusterVec::new(25 << 30, 0, 0)));
+        assert_eq!(a, before);
+    }
+
+    #[test]
+    #[should_panic(expected = "release overflows")]
+    fn release_overflow_panics() {
+        let mut a = ClusterAccount::new(&caps());
+        a.release(0, &ClusterVec::new(1, 0, 0));
+    }
+}

@@ -1,0 +1,768 @@
+//! The cluster-of-devices layer (DESIGN.md §7a): one coordinator over N
+//! heterogeneous simulated GPUs.
+//!
+//! A single GPU's concurrency mechanisms cannot deliver both high
+//! utilization and predictable turnaround (the paper's central tension);
+//! real deployments answer this by scheduling *across* devices. This
+//! module turns "one engine on one device" into "a fleet of per-device
+//! engines under one coordinator":
+//!
+//! * [`ClusterSpec`] — the fleet shape, parseable from compact specs like
+//!   `"2x3090:mps,a100:mig-3g"` (mixed device models, mixed mechanisms,
+//!   including MIG layouts), round-tripping through [`ClusterSpec::name`].
+//! * [`place`] — cross-device routing of [`ClusterJob`]s under a
+//!   [`PlacePolicy`] (`round-robin`, `least-loaded` via
+//!   [`account::ClusterAccount`], `slo-aware` steering tight-deadline
+//!   inference to memory-isolated MIG devices), with conservation-checked
+//!   [`PlacementStats`].
+//! * [`Cluster::run`] — one [`DeviceRt`] per device, fanned out one device
+//!   per thread through [`crate::exp::run_parallel`]. Placement is a pure
+//!   function of (spec, jobs, policy) and every device runtime is
+//!   seed-deterministic, so the fleet's [`ClusterRunReport::to_json`] is
+//!   byte-identical with fan-out on and off — the determinism guard
+//!   asserts exactly that.
+
+pub mod account;
+
+use crate::bail;
+use crate::exp::{run_parallel, Job};
+use crate::gpu::{partition, DeviceConfig};
+use crate::metrics::RunReport;
+use crate::sched::{CtxDef, DeviceRt, EngineConfig, Mechanism};
+use crate::sim::SimTime;
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+use crate::workload::{ArrivalPattern, DlModel, Source};
+use account::{ClusterAccount, ClusterVec};
+
+/// The GPU models a cluster spec can name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GpuModel {
+    Rtx3090,
+    A100,
+}
+
+impl GpuModel {
+    pub const ALL: [GpuModel; 2] = [GpuModel::Rtx3090, GpuModel::A100];
+
+    pub fn config(&self) -> DeviceConfig {
+        match self {
+            GpuModel::Rtx3090 => DeviceConfig::rtx3090(),
+            GpuModel::A100 => DeviceConfig::a100(),
+        }
+    }
+
+    /// Canonical short name used by [`ClusterSpec::name`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            GpuModel::Rtx3090 => "3090",
+            GpuModel::A100 => "a100",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<GpuModel> {
+        match s {
+            "3090" | "rtx3090" => Some(GpuModel::Rtx3090),
+            "a100" => Some(GpuModel::A100),
+            _ => None,
+        }
+    }
+}
+
+/// One device in the fleet: a GPU model running one concurrency mechanism.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceSpec {
+    pub model: GpuModel,
+    pub mechanism: Mechanism,
+}
+
+impl DeviceSpec {
+    /// Canonical `model:mechanism` form (`"a100:mig-3g"`).
+    pub fn name(&self) -> String {
+        format!("{}:{}", self.model.name(), self.mechanism.name())
+    }
+
+    /// Job-slot capacity this device advertises to the placement account.
+    /// `Baseline` runs a single task by engine contract; every sharing
+    /// mechanism hosts a small bounded set of contexts.
+    pub fn slots(&self) -> u64 {
+        match self.mechanism {
+            Mechanism::Baseline => 1,
+            _ => 8,
+        }
+    }
+
+    /// The device's capacity vector at the cluster layer. A MIG device
+    /// advertises its *smallest* instance's DRAM share, not the whole
+    /// device: the engine admits each context against the share of the
+    /// instance it is pinned to, so advertising 40 GB for an `a100:mig-1g`
+    /// would let the coordinator "place" jobs the engine then OOMs.
+    /// Deliberately conservative — a job bigger than the smallest share
+    /// may still have fit the remainder instance — matching the account's
+    /// contract that a negative answer is safe and a positive one is
+    /// checked downstream (here: by the engine's per-instance admission).
+    pub fn capacity(&self) -> ClusterVec {
+        let dev = self.model.config();
+        let dram = match &self.mechanism {
+            Mechanism::Mig { profile } => partition::pair_layout(&dev, *profile)
+                .map(|insts| {
+                    insts
+                        .iter()
+                        .map(|gi| gi.dev.dram_bytes)
+                        .min()
+                        .unwrap_or(dev.dram_bytes)
+                })
+                .unwrap_or(dev.dram_bytes),
+            _ => dev.dram_bytes,
+        };
+        ClusterVec::new(dram, self.slots(), dev.total_threads())
+    }
+}
+
+/// The fleet shape: an ordered list of device specs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterSpec {
+    pub devices: Vec<DeviceSpec>,
+}
+
+impl ClusterSpec {
+    pub fn new(devices: Vec<DeviceSpec>) -> Self {
+        Self { devices }
+    }
+
+    /// Parse a compact cluster spec: comma-separated entries of
+    /// `[<count>x]<model>:<mechanism>`, e.g. `"2x3090:mps,a100:mig-3g"`.
+    /// Models are [`GpuModel::parse`] names; mechanisms are every
+    /// [`Mechanism::from_name`] spelling (the completeness test covers all
+    /// of [`Mechanism::ALL`]).
+    pub fn parse(s: &str) -> Result<ClusterSpec> {
+        let mut devices = Vec::new();
+        for entry in s.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                bail!("empty device entry in cluster spec '{s}'");
+            }
+            let (count, rest) = match entry.split_once('x') {
+                Some((n, rest)) if n.chars().all(|c| c.is_ascii_digit()) && !n.is_empty() => {
+                    (n.parse::<usize>().unwrap_or(0), rest)
+                }
+                _ => (1, entry),
+            };
+            if count == 0 {
+                bail!("device count must be ≥ 1 in '{entry}'");
+            }
+            let Some((model_s, mech_s)) = rest.split_once(':') else {
+                bail!("expected '<model>:<mechanism>' in '{entry}'");
+            };
+            let Some(model) = GpuModel::parse(model_s) else {
+                bail!("unknown GPU model '{model_s}' in '{entry}' (use 3090 or a100)");
+            };
+            let Some(mechanism) = Mechanism::from_name(mech_s) else {
+                bail!("unknown mechanism '{mech_s}' in '{entry}'");
+            };
+            for _ in 0..count {
+                devices.push(DeviceSpec { model, mechanism: mechanism.clone() });
+            }
+        }
+        if devices.is_empty() {
+            bail!("cluster spec '{s}' names no devices");
+        }
+        Ok(ClusterSpec { devices })
+    }
+
+    /// Canonical spec string: consecutive identical devices grouped as
+    /// `Nx<model>:<mechanism>`. `parse(name())` round-trips every spec.
+    pub fn name(&self) -> String {
+        let mut out = String::new();
+        let mut i = 0;
+        while i < self.devices.len() {
+            let mut j = i + 1;
+            while j < self.devices.len() && self.devices[j] == self.devices[i] {
+                j += 1;
+            }
+            if !out.is_empty() {
+                out.push(',');
+            }
+            let run = j - i;
+            if run > 1 {
+                out.push_str(&run.to_string());
+                out.push('x');
+            }
+            out.push_str(&self.devices[i].name());
+            i = j;
+        }
+        out
+    }
+}
+
+/// What a cluster job runs once placed on a device.
+#[derive(Clone, Debug)]
+pub enum JobKind {
+    Inference { model: DlModel, requests: u32 },
+    Training { model: DlModel, steps: u32 },
+}
+
+/// A unit of work the coordinator routes to one device.
+#[derive(Clone, Debug)]
+pub struct ClusterJob {
+    pub name: String,
+    pub kind: JobKind,
+    /// Stream priority once on the device (inference above training, as in
+    /// the paper's protocol).
+    pub priority: i8,
+    /// SLO deadline in milliseconds; tight deadlines steer to
+    /// memory-isolated (MIG) devices under [`PlacePolicy::SloAware`].
+    pub deadline_ms: Option<u64>,
+}
+
+impl ClusterJob {
+    pub fn inference(name: &str, model: DlModel, requests: u32, deadline_ms: Option<u64>) -> Self {
+        Self {
+            name: name.to_string(),
+            kind: JobKind::Inference { model, requests },
+            priority: 0,
+            deadline_ms,
+        }
+    }
+
+    pub fn training(name: &str, model: DlModel, steps: u32) -> Self {
+        Self {
+            name: name.to_string(),
+            kind: JobKind::Training { model, steps },
+            priority: -2,
+            deadline_ms: None,
+        }
+    }
+
+    fn profile_dram(&self) -> u64 {
+        match &self.kind {
+            JobKind::Inference { model, .. } => model
+                .infer_profile()
+                .map(|p| p.dram_footprint)
+                .unwrap_or(0),
+            JobKind::Training { model, .. } => model
+                .train_profile()
+                .map(|p| p.dram_footprint)
+                .unwrap_or(0),
+        }
+    }
+
+    pub fn is_inference(&self) -> bool {
+        matches!(self.kind, JobKind::Inference { .. })
+    }
+
+    /// The job's demand vector against a device's [`DeviceSpec::capacity`].
+    /// DRAM is the job's resident footprint; one job takes one slot; the
+    /// thread dimension carries no demand at this layer (per-SM placement
+    /// is the engine's problem, not the coordinator's).
+    pub fn demand(&self) -> ClusterVec {
+        ClusterVec::new(self.profile_dram(), 1, 0)
+    }
+}
+
+/// Cross-device routing policies (the per-instance `Router` lanes
+/// generalized to a fleet).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacePolicy {
+    /// Cycle devices in spec order, skipping devices the job does not fit.
+    RoundRobin,
+    /// The device minimizing post-placement load ([`ClusterAccount`]'s
+    /// max-fraction score), with the account's O(1) no-fit exit.
+    LeastLoaded,
+    /// Deadline-aware (reusing the `route_slo` deadline contract):
+    /// inference with `deadline_ms ≤ cutoff_ms` prefers memory-isolated
+    /// devices (MIG), everything else prefers shared devices; both fall
+    /// back to least-loaded over the whole fleet when the preferred class
+    /// has no room.
+    SloAware { cutoff_ms: u64 },
+}
+
+impl PlacePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacePolicy::RoundRobin => "round-robin",
+            PlacePolicy::LeastLoaded => "least-loaded",
+            PlacePolicy::SloAware { .. } => "slo-aware",
+        }
+    }
+}
+
+/// Conservation-checked routing statistics (`RouterStats::conserved`
+/// generalized to the cluster).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PlacementStats {
+    pub admitted: u64,
+    pub placed: u64,
+    pub rejected: u64,
+    /// Jobs placed per device (spec order).
+    pub per_device: Vec<u64>,
+}
+
+impl PlacementStats {
+    /// Every admitted job is either placed on exactly one device or
+    /// rejected — and the per-device tallies sum to the placements.
+    pub fn conserved(&self) -> bool {
+        self.admitted == self.placed + self.rejected
+            && self.per_device.iter().sum::<u64>() == self.placed
+    }
+}
+
+/// Outcome of routing a job list over a fleet.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    /// Job index → device index (`None` = rejected: no device fits).
+    pub assignment: Vec<Option<usize>>,
+    pub stats: PlacementStats,
+    /// The account after all commits (the coordinator's live view).
+    pub account: ClusterAccount,
+}
+
+/// Route `jobs` over `spec`'s devices under `policy`. Pure and
+/// deterministic: identical inputs produce identical placements, which is
+/// what lets cluster runs fan out without changing a byte of output.
+pub fn place(spec: &ClusterSpec, jobs: &[ClusterJob], policy: PlacePolicy) -> Placement {
+    let caps: Vec<ClusterVec> = spec.devices.iter().map(|d| d.capacity()).collect();
+    let mut account = ClusterAccount::new(&caps);
+    let mut stats = PlacementStats {
+        per_device: vec![0; spec.devices.len()],
+        ..Default::default()
+    };
+    let mut assignment = Vec::with_capacity(jobs.len());
+    let mut rr_next = 0usize;
+    for job in jobs {
+        stats.admitted += 1;
+        let demand = job.demand();
+        // Every pick goes through the ClusterAccount policy primitives
+        // (shared with the serving router), each carrying the O(1) exact
+        // "no device fits" exit.
+        let choice = match policy {
+            PlacePolicy::RoundRobin => account.round_robin(&demand, &mut rr_next),
+            PlacePolicy::LeastLoaded => account.least_loaded(&demand),
+            PlacePolicy::SloAware { cutoff_ms } => {
+                let tight =
+                    job.is_inference() && job.deadline_ms.is_some_and(|d| d <= cutoff_ms);
+                account.least_loaded_preferring(&demand, |d| {
+                    spec.devices[d].mechanism.memory_isolation() == tight
+                })
+            }
+        };
+        match choice {
+            Some(d) => {
+                let ok = account.commit(d, &demand);
+                debug_assert!(ok, "policy chose a device the demand does not fit");
+                stats.placed += 1;
+                stats.per_device[d] += 1;
+                assignment.push(Some(d));
+            }
+            None => {
+                stats.rejected += 1;
+                assignment.push(None);
+            }
+        }
+    }
+    debug_assert!(stats.conserved());
+    Placement {
+        assignment,
+        stats,
+        account,
+    }
+}
+
+/// Per-run knobs shared by every device in the fleet.
+#[derive(Clone, Debug)]
+pub struct ClusterRunConfig {
+    pub seed: u64,
+    pub pattern: ArrivalPattern,
+    pub record_ops: bool,
+    pub occupancy_sample_ns: Option<SimTime>,
+    /// Fan the fleet out one device per thread ([`run_parallel`]); results
+    /// are byte-identical either way, this only affects wall time.
+    pub parallel: bool,
+}
+
+impl Default for ClusterRunConfig {
+    fn default() -> Self {
+        Self {
+            seed: 42,
+            pattern: ArrivalPattern::ClosedLoop,
+            record_ops: false,
+            occupancy_sample_ns: None,
+            parallel: true,
+        }
+    }
+}
+
+/// One device's lane in a cluster run: what was routed to it and what its
+/// engine reported (the `serve_slo_routed` per-instance lane report, one
+/// layer up).
+#[derive(Clone, Debug)]
+pub struct ClusterLane {
+    /// Canonical device name with its fleet position, e.g. `"a100:mig-3g"`.
+    pub device: String,
+    pub mechanism: String,
+    /// Names of the jobs routed to this device, in placement order.
+    pub jobs: Vec<String>,
+    pub report: RunReport,
+}
+
+/// Everything a cluster run produces.
+#[derive(Clone, Debug)]
+pub struct ClusterRunReport {
+    pub spec: String,
+    pub policy: String,
+    pub lanes: Vec<ClusterLane>,
+    pub stats: PlacementStats,
+}
+
+impl ClusterRunReport {
+    /// Completed inference requests across every lane.
+    pub fn total_requests(&self) -> usize {
+        self.lanes.iter().map(|l| l.report.requests.len()).sum()
+    }
+
+    /// The longest per-device span — the fleet's makespan in seconds.
+    pub fn makespan_s(&self) -> f64 {
+        self.lanes
+            .iter()
+            .map(|l| l.report.sim_end as f64 / 1e9)
+            .fold(0.0, f64::max)
+    }
+
+    /// Lane index a named job was routed to.
+    pub fn lane_of(&self, job: &str) -> Option<usize> {
+        self.lanes
+            .iter()
+            .position(|l| l.jobs.iter().any(|j| j == job))
+    }
+
+    /// Fixed-field-order JSON embedding each lane's `RunReport::to_json`,
+    /// lanes in device order — the cluster determinism oracle: the guard
+    /// test asserts these bytes are unchanged by the device fan-out.
+    pub fn to_json(&self) -> String {
+        use crate::util::json::escape as esc;
+        use std::fmt::Write as _;
+        let mut j = String::new();
+        let _ = write!(
+            j,
+            "{{\"spec\":\"{}\",\"policy\":\"{}\",\"lanes\":[",
+            esc(&self.spec),
+            esc(&self.policy)
+        );
+        for (i, lane) in self.lanes.iter().enumerate() {
+            let _ = write!(
+                j,
+                "{}{{\"device\":\"{}\",\"mechanism\":\"{}\",\"jobs\":[",
+                if i > 0 { "," } else { "" },
+                esc(&lane.device),
+                esc(&lane.mechanism)
+            );
+            for (k, name) in lane.jobs.iter().enumerate() {
+                let _ = write!(j, "{}\"{}\"", if k > 0 { "," } else { "" }, esc(name));
+            }
+            let _ = write!(j, "],\"report\":{}}}", lane.report.to_json());
+        }
+        let _ = write!(
+            j,
+            "],\"placement\":{{\"admitted\":{},\"placed\":{},\"rejected\":{},\"per_device\":[",
+            self.stats.admitted, self.stats.placed, self.stats.rejected
+        );
+        for (i, n) in self.stats.per_device.iter().enumerate() {
+            let _ = write!(j, "{}{}", if i > 0 { "," } else { "" }, n);
+        }
+        j.push_str("]}}");
+        j
+    }
+}
+
+/// A fleet of simulated devices under one coordinator.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub spec: ClusterSpec,
+}
+
+impl Cluster {
+    pub fn new(spec: ClusterSpec) -> Self {
+        Self { spec }
+    }
+
+    /// Per-job deterministic RNG root: a pure function of the run seed and
+    /// the job's index, so neither placement order nor fan-out scheduling
+    /// can perturb any device's workload stream.
+    fn job_rng(cfg: &ClusterRunConfig, job_idx: usize) -> Rng {
+        let mut root = Rng::new(
+            cfg.seed ^ (job_idx as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        root.substream()
+    }
+
+    /// Route `jobs` under `policy`, then run one [`DeviceRt`] per device —
+    /// one device per worker thread when `cfg.parallel` — and roll the
+    /// per-device lane reports into one [`ClusterRunReport`].
+    pub fn run(
+        &self,
+        jobs: &[ClusterJob],
+        policy: PlacePolicy,
+        cfg: &ClusterRunConfig,
+    ) -> ClusterRunReport {
+        let placement = place(&self.spec, jobs, policy);
+        // Per-device context definitions, in job order within each device
+        // (the engine pins ctx 0 to the latency instance under MIG, so the
+        // scenarios list inference jobs first).
+        let n = self.spec.devices.len();
+        let mut defs: Vec<Vec<CtxDef>> = (0..n).map(|_| Vec::new()).collect();
+        let mut lane_jobs: Vec<Vec<String>> = (0..n).map(|_| Vec::new()).collect();
+        for (ji, job) in jobs.iter().enumerate() {
+            let Some(d) = placement.assignment[ji] else {
+                continue;
+            };
+            let dev = self.spec.devices[d].model.config();
+            let source = match &job.kind {
+                JobKind::Inference { model, requests } => Source::inference(
+                    model.infer_profile().expect("inference profile"),
+                    dev,
+                    cfg.pattern,
+                    *requests,
+                    Self::job_rng(cfg, ji),
+                ),
+                JobKind::Training { model, steps } => Source::training(
+                    model.train_profile().expect("training profile"),
+                    dev,
+                    *steps,
+                    Self::job_rng(cfg, ji),
+                ),
+            };
+            defs[d].push(CtxDef {
+                name: job.name.clone(),
+                source,
+                priority: job.priority,
+            });
+            lane_jobs[d].push(job.name.clone());
+        }
+        let mut runs: Vec<Job<'_, RunReport>> = Vec::with_capacity(n);
+        for (d, device_defs) in defs.into_iter().enumerate() {
+            let spec = self.spec.devices[d].clone();
+            let record_ops = cfg.record_ops;
+            let occupancy_sample_ns = cfg.occupancy_sample_ns;
+            runs.push(Box::new(move || {
+                if device_defs.is_empty() {
+                    // An idle device contributes an empty lane report.
+                    return RunReport {
+                        mechanism: spec.mechanism.name().to_string(),
+                        workload: "idle".to_string(),
+                        ..Default::default()
+                    };
+                }
+                let mut ecfg = EngineConfig::new(spec.model.config(), spec.mechanism.clone());
+                ecfg.record_ops = record_ops;
+                ecfg.occupancy_sample_ns = occupancy_sample_ns;
+                DeviceRt::new(ecfg, device_defs).run()
+            }));
+        }
+        let reports = if cfg.parallel {
+            run_parallel(runs)
+        } else {
+            runs.into_iter().map(|f| f()).collect()
+        };
+        let lanes = reports
+            .into_iter()
+            .enumerate()
+            .map(|(d, report)| ClusterLane {
+                device: self.spec.devices[d].name(),
+                mechanism: self.spec.devices[d].mechanism.name().to_string(),
+                jobs: std::mem::take(&mut lane_jobs[d]),
+                report,
+            })
+            .collect();
+        ClusterRunReport {
+            spec: self.spec.name(),
+            policy: policy.name().to_string(),
+            lanes,
+            stats: placement.stats,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parse_counts_and_mechanisms() {
+        let spec = ClusterSpec::parse("2x3090:mps,a100:mig-3g").unwrap();
+        assert_eq!(spec.devices.len(), 3);
+        assert_eq!(spec.devices[0].model, GpuModel::Rtx3090);
+        assert_eq!(spec.devices[1], spec.devices[0]);
+        assert_eq!(spec.devices[2].model, GpuModel::A100);
+        assert_eq!(spec.devices[2].mechanism.name(), "mig-3g");
+        assert_eq!(spec.name(), "2x3090:mps,a100:mig-3g");
+        // spelling variants normalize to the canonical form
+        let v = ClusterSpec::parse("rtx3090:timeslice").unwrap();
+        assert_eq!(v.name(), "3090:time-slicing");
+    }
+
+    #[test]
+    fn spec_name_roundtrips_every_mechanism() {
+        // Completeness over Mechanism::ALL: every canonical mechanism name
+        // parses inside a cluster spec and round-trips through name().
+        for m in Mechanism::ALL {
+            let s = format!("a100:{}", m.name());
+            let spec = ClusterSpec::parse(&s)
+                .unwrap_or_else(|e| panic!("'{s}' failed to parse: {e}"));
+            assert_eq!(spec.devices[0].mechanism, m, "{s}");
+            assert_eq!(spec.name(), s);
+            assert_eq!(ClusterSpec::parse(&spec.name()).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn gpu_model_roundtrips() {
+        for m in GpuModel::ALL {
+            assert_eq!(GpuModel::parse(m.name()), Some(m));
+            assert!(m.config().num_sms > 0);
+        }
+        assert_eq!(GpuModel::parse("rtx3090"), Some(GpuModel::Rtx3090));
+        assert_eq!(GpuModel::parse("titan"), None);
+    }
+
+    #[test]
+    fn spec_parse_rejects_malformed() {
+        for bad in [
+            "",
+            "3090",
+            "3090:bogus",
+            "titan:mps",
+            "0x3090:mps",
+            "3090:mps,,a100:mig",
+        ] {
+            assert!(ClusterSpec::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+    }
+
+    fn jobs_pair() -> Vec<ClusterJob> {
+        vec![
+            ClusterJob::inference("i0", DlModel::AlexNet, 4, Some(5)),
+            ClusterJob::training("t0", DlModel::AlexNet, 2),
+        ]
+    }
+
+    #[test]
+    fn round_robin_spreads_jobs() {
+        let spec = ClusterSpec::parse("2x3090:mps").unwrap();
+        let p = place(&spec, &jobs_pair(), PlacePolicy::RoundRobin);
+        assert!(p.stats.conserved());
+        assert_eq!(p.assignment, vec![Some(0), Some(1)]);
+        assert_eq!(p.stats.per_device, vec![1, 1]);
+    }
+
+    #[test]
+    fn least_loaded_balances_by_footprint() {
+        let spec = ClusterSpec::parse("3090:mps,a100:mps").unwrap();
+        // The big trainer lands on the roomier A100; the next job then
+        // prefers the now-emptier 3090.
+        let jobs = vec![
+            ClusterJob::training("big", DlModel::ResNet152, 2),
+            ClusterJob::inference("i0", DlModel::AlexNet, 2, None),
+        ];
+        let p = place(&spec, &jobs, PlacePolicy::LeastLoaded);
+        assert!(p.stats.conserved());
+        assert_eq!(p.assignment[0], Some(1));
+        assert_eq!(p.assignment[1], Some(0));
+        p.account
+            .check_against(&[(1, jobs[0].demand()), (0, jobs[1].demand())])
+            .unwrap();
+    }
+
+    #[test]
+    fn slo_aware_steers_tight_inference_to_mig() {
+        let spec = ClusterSpec::parse("3090:mps,a100:mig-3g").unwrap();
+        let p = place(
+            &spec,
+            &jobs_pair(),
+            PlacePolicy::SloAware { cutoff_ms: 10 },
+        );
+        assert!(p.stats.conserved());
+        // tight-deadline inference → the memory-isolated MIG device;
+        // training → the shared 3090
+        assert_eq!(p.assignment, vec![Some(1), Some(0)]);
+    }
+
+    #[test]
+    fn mig_capacity_reflects_instance_shares() {
+        let dev = DeviceConfig::a100();
+        // A 1g split's smallest instance owns 1/8 of DRAM; the account
+        // must not admit what the engine's per-instance admission rejects.
+        let spec = ClusterSpec::parse("a100:mig-1g").unwrap();
+        assert_eq!(spec.devices[0].capacity().dram, dev.dram_bytes / 8);
+        let jobs = vec![ClusterJob::training("big", DlModel::ResNet50, 1)];
+        let p = place(&spec, &jobs, PlacePolicy::LeastLoaded);
+        assert_eq!(p.assignment[0], None);
+        assert_eq!(p.stats.rejected, 1);
+        // The balanced 3g split advertises its half-memory share and
+        // admits the same trainer.
+        let spec = ClusterSpec::parse("a100:mig-3g").unwrap();
+        assert_eq!(spec.devices[0].capacity().dram, dev.dram_bytes / 2);
+        let p = place(&spec, &jobs, PlacePolicy::LeastLoaded);
+        assert_eq!(p.assignment[0], Some(0));
+        // non-MIG devices still advertise the whole device
+        let spec = ClusterSpec::parse("a100:mps").unwrap();
+        assert_eq!(spec.devices[0].capacity().dram, dev.dram_bytes);
+    }
+
+    #[test]
+    fn rejection_when_nothing_fits_conserves() {
+        // Two max-batch trainers oversubscribe a single 3090's DRAM: the
+        // second is rejected, not silently dropped.
+        let spec = ClusterSpec::parse("3090:mps").unwrap();
+        let jobs = vec![
+            ClusterJob::training("t0", DlModel::ResNet50, 1),
+            ClusterJob::training("t1", DlModel::ResNet152, 1),
+        ];
+        let p = place(&spec, &jobs, PlacePolicy::LeastLoaded);
+        assert!(p.stats.conserved());
+        assert_eq!(p.stats.placed, 1);
+        assert_eq!(p.stats.rejected, 1);
+        assert_eq!(p.assignment[1], None);
+    }
+
+    #[test]
+    fn cluster_run_produces_per_device_lanes() {
+        let cluster = Cluster::new(ClusterSpec::parse("3090:mps,a100:mig-3g").unwrap());
+        let cfg = ClusterRunConfig::default();
+        let rep = cluster.run(
+            &jobs_pair(),
+            PlacePolicy::SloAware { cutoff_ms: 10 },
+            &cfg,
+        );
+        assert_eq!(rep.lanes.len(), 2);
+        assert!(rep.stats.conserved());
+        assert_eq!(rep.lane_of("i0"), Some(1), "inference on the MIG a100");
+        assert_eq!(rep.lane_of("t0"), Some(0), "training on the 3090");
+        assert_eq!(rep.total_requests(), 4);
+        assert!(rep.lanes[1].report.oom.is_none(), "{:?}", rep.lanes[1].report.oom);
+        assert!(rep.lanes[0].report.train_done.is_some());
+        assert!(rep.makespan_s() > 0.0);
+        let parsed = crate::util::json::Json::parse(&rep.to_json()).unwrap();
+        assert_eq!(
+            parsed.get("spec").unwrap().as_str(),
+            Some("3090:mps,a100:mig-3g")
+        );
+    }
+
+    #[test]
+    fn cluster_run_fanout_is_byte_identical() {
+        let cluster = Cluster::new(ClusterSpec::parse("2x3090:mps").unwrap());
+        let jobs = vec![
+            ClusterJob::inference("i0", DlModel::AlexNet, 3, None),
+            ClusterJob::inference("i1", DlModel::AlexNet, 3, None),
+            ClusterJob::training("t0", DlModel::AlexNet, 2),
+            ClusterJob::training("t1", DlModel::AlexNet, 2),
+        ];
+        let mk = |parallel| ClusterRunConfig {
+            parallel,
+            ..Default::default()
+        };
+        let a = cluster.run(&jobs, PlacePolicy::RoundRobin, &mk(true));
+        let b = cluster.run(&jobs, PlacePolicy::RoundRobin, &mk(false));
+        assert_eq!(a.to_json(), b.to_json());
+    }
+}

@@ -1,0 +1,665 @@
+//! Cross-device request routing: [`super::router::Router`]'s two
+//! per-instance SLO lanes generalized to N *device* lanes under one
+//! coordinator — the serving-side counterpart of `cluster::Cluster`.
+//!
+//! Each [`ClusterLaneSpec`] stands for one device (or MIG slice) with its
+//! own batcher worker, as each lane of [`super::server::serve_slo_routed`]
+//! stood for one GPU instance. [`ClusterRouter`] picks the lane per
+//! request under a [`ClusterRoutePolicy`]:
+//!
+//! * `round-robin` — cycle lanes in order;
+//! * `least-loaded` — the lane minimizing in-flight load, tracked through
+//!   the same [`ClusterAccount`] the simulation coordinator uses (one
+//!   slot per in-flight request, released on completion), including its
+//!   O(1) "no lane fits" rejection exit;
+//! * `slo-aware` — `route_slo`'s deadline contract across devices: tight
+//!   deadlines prefer latency-class lanes (the MIG slices), loose ones
+//!   the throughput lanes, falling back to least-loaded when the
+//!   preferred class is full.
+//!
+//! [`ClusterRouterStats::conserved`] generalizes `RouterStats::conserved`:
+//! every admitted request is completed or failed, and the per-lane routed
+//! tallies sum to the admissions.
+
+use super::batcher::{BatchRunner, Batcher, BatcherConfig, InferResponse, WorkerHooks};
+use crate::cluster::account::{ClusterAccount, ClusterVec};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One device lane of the cluster router.
+#[derive(Clone, Debug)]
+pub struct ClusterLaneSpec {
+    /// Display name, e.g. `"a100:mig-3g"`.
+    pub name: String,
+    /// Latency-class lanes are preferred for tight deadlines under
+    /// `slo-aware` routing (the MIG-slice analogue).
+    pub latency_class: bool,
+    /// In-flight request slots this lane absorbs before it stops being a
+    /// routing candidate (the `ClusterAccount` slot capacity).
+    pub slots: u64,
+    /// Batching policy of the lane's worker.
+    pub batcher: BatcherConfig,
+}
+
+/// Cross-device routing policies at the serving layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClusterRoutePolicy {
+    RoundRobin,
+    LeastLoaded,
+    SloAware { cutoff: Duration },
+}
+
+impl ClusterRoutePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClusterRoutePolicy::RoundRobin => "round-robin",
+            ClusterRoutePolicy::LeastLoaded => "least-loaded",
+            ClusterRoutePolicy::SloAware { .. } => "slo-aware",
+        }
+    }
+}
+
+struct LaneRt {
+    name: String,
+    latency_class: bool,
+    batcher: Arc<Batcher>,
+}
+
+/// Mutable routing state: the round-robin pointer and the in-flight
+/// account (one slot per outstanding request per lane).
+struct RouteState {
+    rr_next: usize,
+    account: ClusterAccount,
+}
+
+/// Conservation-checked router statistics across every lane.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterRouterStats {
+    pub admitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub rejected: u64,
+    pub slo_violations: u64,
+    /// Requests routed per lane (spec order).
+    pub routed: Vec<u64>,
+    /// Turnarounds in ms for completed requests.
+    pub turnaround_ms: Vec<f64>,
+}
+
+impl ClusterRouterStats {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.turnaround_ms)
+    }
+
+    /// `RouterStats::conserved` generalized to the cluster: admissions
+    /// split exactly into completions and failures, and the per-lane
+    /// routed tallies account for every admission.
+    pub fn conserved(&self) -> bool {
+        self.admitted == self.completed + self.failed
+            && self.routed.iter().sum::<u64>() == self.admitted
+    }
+}
+
+/// A pending cluster-routed request. Every ticket settles exactly once —
+/// through [`ClusterTicket::wait`], [`ClusterTicket::try_wait`], or (for
+/// an abandoned ticket) its `Drop` impl — recording the outcome and
+/// releasing the lane's in-flight slot, so the account can never leak
+/// slots and `conserved()` holds at quiescence regardless of caller
+/// discipline.
+pub struct ClusterTicket {
+    pub id: u64,
+    /// Lane the request was routed to.
+    pub lane: usize,
+    /// The SLO deadline the request was admitted under, if any.
+    pub deadline: Option<Duration>,
+    rx: mpsc::Receiver<InferResponse>,
+    router: Arc<ClusterRouter>,
+    settled: bool,
+}
+
+impl ClusterTicket {
+    /// Record the outcome and free the lane slot. `abandoned` marks a
+    /// dropped-without-waiting ticket: it counts as failed (preserving
+    /// conservation) but not as an SLO violation (the caller walked away,
+    /// the lane did not miss).
+    fn settle(&mut self, out: &Option<InferResponse>, abandoned: bool) {
+        debug_assert!(!self.settled, "ticket settled twice");
+        self.settled = true;
+        {
+            let mut st = self.router.stats.lock().unwrap();
+            match out {
+                Some(resp) => {
+                    st.completed += 1;
+                    st.turnaround_ms.push(resp.turnaround.as_secs_f64() * 1e3);
+                    if self.deadline.is_some_and(|d| resp.turnaround > d) {
+                        st.slo_violations += 1;
+                    }
+                }
+                None => {
+                    st.failed += 1;
+                    if !abandoned && self.deadline.is_some() {
+                        st.slo_violations += 1;
+                    }
+                }
+            }
+        }
+        let mut rs = self.router.route.lock().unwrap();
+        rs.account.release(self.lane, &ClusterVec::new(0, 1, 0));
+    }
+
+    /// Wait for the response, recording stats and releasing the lane's
+    /// in-flight slot (so least-loaded routing sees live load).
+    pub fn wait(mut self, timeout: Duration) -> Option<InferResponse> {
+        let out = self.rx.recv_timeout(timeout).ok();
+        self.settle(&out, false);
+        out
+    }
+
+    /// Non-blocking wait: `Ok` when the ticket settled now (a response
+    /// arrived, or the lane disconnected → failure), `Err(self)` handing
+    /// the still-in-flight ticket back. Open-loop drivers drain finished
+    /// tickets with this between issues so lane slots free as responses
+    /// arrive, not at end of run.
+    pub fn try_wait(self) -> Result<Option<InferResponse>, ClusterTicket> {
+        match self.rx.try_recv() {
+            Ok(resp) => {
+                let mut t = self;
+                let out = Some(resp);
+                t.settle(&out, false);
+                Ok(out)
+            }
+            Err(mpsc::TryRecvError::Empty) => Err(self),
+            Err(mpsc::TryRecvError::Disconnected) => {
+                let mut t = self;
+                t.settle(&None, false);
+                Ok(None)
+            }
+        }
+    }
+}
+
+impl Drop for ClusterTicket {
+    fn drop(&mut self) {
+        if !self.settled {
+            self.settle(&None, true);
+        }
+    }
+}
+
+/// Router over N device lanes.
+pub struct ClusterRouter {
+    lanes: Vec<LaneRt>,
+    policy: ClusterRoutePolicy,
+    route: Mutex<RouteState>,
+    pub stats: Mutex<ClusterRouterStats>,
+}
+
+impl ClusterRouter {
+    /// Build a router over already-constructed lane batchers. Lane order
+    /// is routing order (round-robin starts at lane 0).
+    pub fn new(
+        lanes: Vec<(ClusterLaneSpec, Arc<Batcher>)>,
+        policy: ClusterRoutePolicy,
+    ) -> Arc<ClusterRouter> {
+        assert!(!lanes.is_empty(), "a cluster router needs at least one lane");
+        let caps: Vec<ClusterVec> = lanes
+            .iter()
+            .map(|(spec, _)| ClusterVec::new(0, spec.slots, 0))
+            .collect();
+        let n = lanes.len();
+        Arc::new(ClusterRouter {
+            lanes: lanes
+                .into_iter()
+                .map(|(spec, batcher)| LaneRt {
+                    name: spec.name,
+                    latency_class: spec.latency_class,
+                    batcher,
+                })
+                .collect(),
+            policy,
+            route: Mutex::new(RouteState {
+                rr_next: 0,
+                account: ClusterAccount::new(&caps),
+            }),
+            stats: Mutex::new(ClusterRouterStats {
+                routed: vec![0; n],
+                ..Default::default()
+            }),
+        })
+    }
+
+    pub fn lane_name(&self, lane: usize) -> &str {
+        &self.lanes[lane].name
+    }
+
+    pub fn lane_batcher(&self, lane: usize) -> &Arc<Batcher> {
+        &self.lanes[lane].batcher
+    }
+
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Route a request to a device lane under the configured policy.
+    /// Returns `None` (and counts a rejection) when no lane has a free
+    /// slot — the account's exact O(1) exit — or the input is malformed.
+    pub fn route(
+        self: &Arc<Self>,
+        input: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Option<ClusterTicket> {
+        let unit = ClusterVec::new(0, 1, 0);
+        let lane = {
+            let mut rs = self.route.lock().unwrap();
+            let state = &mut *rs;
+            // Same ClusterAccount policy primitives as the simulation
+            // placer (cluster::place), O(1) no-fit exit included.
+            let pick = match self.policy {
+                ClusterRoutePolicy::RoundRobin => {
+                    state.account.round_robin(&unit, &mut state.rr_next)
+                }
+                ClusterRoutePolicy::LeastLoaded => state.account.least_loaded(&unit),
+                ClusterRoutePolicy::SloAware { cutoff } => {
+                    let tight = deadline.is_some_and(|d| d <= cutoff);
+                    let lanes = &self.lanes;
+                    state
+                        .account
+                        .least_loaded_preferring(&unit, |d| lanes[d].latency_class == tight)
+                }
+            };
+            if let Some(d) = pick {
+                let ok = state.account.commit(d, &unit);
+                debug_assert!(ok, "policy chose a full lane");
+            }
+            pick
+        };
+        let Some(lane) = lane else {
+            self.stats.lock().unwrap().rejected += 1;
+            return None;
+        };
+        if input.len() != self.lanes[lane].batcher.in_features() {
+            self.route.lock().unwrap().account.release(lane, &unit);
+            self.stats.lock().unwrap().rejected += 1;
+            return None;
+        }
+        let (id, rx) = self.lanes[lane].batcher.submit(input);
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.admitted += 1;
+            st.routed[lane] += 1;
+        }
+        Some(ClusterTicket {
+            id,
+            lane,
+            deadline,
+            rx,
+            router: self.clone(),
+            settled: false,
+        })
+    }
+
+    pub fn conserved(&self) -> bool {
+        self.stats.lock().unwrap().conserved()
+    }
+}
+
+/// Configuration of the cluster-routed serving scenario.
+#[derive(Clone, Debug)]
+pub struct ClusterServeConfig {
+    /// Total inference requests to issue.
+    pub requests: u32,
+    /// Probability a request carries the tight deadline.
+    pub tight_fraction: f64,
+    pub tight_deadline: Duration,
+    pub loose_deadline: Duration,
+    pub policy: ClusterRoutePolicy,
+    pub in_features: usize,
+    /// Mean inter-arrival (Poisson); `None` = closed loop.
+    pub mean_interarrival: Option<Duration>,
+    pub seed: u64,
+    pub timeout: Duration,
+}
+
+impl Default for ClusterServeConfig {
+    fn default() -> Self {
+        Self {
+            requests: 100,
+            tight_fraction: 0.3,
+            tight_deadline: Duration::from_millis(10),
+            loose_deadline: Duration::from_millis(200),
+            policy: ClusterRoutePolicy::SloAware {
+                cutoff: Duration::from_millis(20),
+            },
+            in_features: 784,
+            mean_interarrival: None,
+            seed: 42,
+            timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Per-device lane outcome of a cluster-routed run.
+#[derive(Clone, Debug)]
+pub struct DeviceLaneReport {
+    pub name: String,
+    /// Requests the router sent to this device.
+    pub routed: u64,
+    /// Requests the device's batcher actually executed.
+    pub executed: u64,
+    pub mean_batch: f64,
+}
+
+/// Outcome of [`serve_cluster_routed`]: per-device lane reports rolled
+/// into one cluster view.
+#[derive(Clone, Debug)]
+pub struct ClusterServeReport {
+    pub policy: &'static str,
+    pub completed: u64,
+    pub failed: u64,
+    pub rejected: u64,
+    pub slo_violations: u64,
+    pub latency_ms: Summary,
+    pub wall: Duration,
+    pub lanes: Vec<DeviceLaneReport>,
+    /// The router's conservation check at quiescence.
+    pub conserved: bool,
+}
+
+/// Builds one lane's compiled batch variants on that lane's worker thread.
+pub type LaneRunnerFactory = Box<dyn FnOnce() -> BatchRunner + Send + 'static>;
+
+/// Serve one model across N device lanes with policy-driven cross-device
+/// routing — [`super::server::serve_slo_routed`] generalized from two GPU
+/// instances to a fleet. Each lane owns its batcher and worker thread, as
+/// each device owns its executor.
+pub fn serve_cluster_routed(
+    cfg: ClusterServeConfig,
+    lanes: Vec<(ClusterLaneSpec, LaneRunnerFactory)>,
+) -> ClusterServeReport {
+    let mut workers = Vec::with_capacity(lanes.len());
+    let (ready_tx, ready_rx) = mpsc::channel::<()>();
+    let mut routed_lanes = Vec::with_capacity(lanes.len());
+    for (spec, factory) in lanes {
+        let batcher = Batcher::new(spec.batcher.clone(), cfg.in_features);
+        let worker = {
+            let b = batcher.clone();
+            let tx = ready_tx.clone();
+            std::thread::spawn(move || {
+                let runner = factory();
+                let _ = tx.send(());
+                b.run_worker(runner, WorkerHooks::default())
+            })
+        };
+        workers.push(worker);
+        routed_lanes.push((spec, batcher));
+    }
+    for _ in 0..workers.len() {
+        let _ = ready_rx.recv();
+    }
+    let router = ClusterRouter::new(routed_lanes, cfg.policy);
+    let start = Instant::now();
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut outstanding = Vec::new();
+    let issue_start = Instant::now();
+    let mut next_arrival = Duration::ZERO;
+    for _ in 0..cfg.requests {
+        if let Some(mean) = cfg.mean_interarrival {
+            next_arrival += Duration::from_nanos(rng.exponential(mean.as_nanos() as f64) as u64);
+            let now = issue_start.elapsed();
+            if next_arrival > now {
+                std::thread::sleep(next_arrival - now);
+            }
+        }
+        let input: Vec<f32> = (0..cfg.in_features)
+            .map(|_| rng.normal(0.0, 1.0) as f32)
+            .collect();
+        let deadline = if rng.f64() < cfg.tight_fraction {
+            cfg.tight_deadline
+        } else {
+            cfg.loose_deadline
+        };
+        if let Some(t) = router.route(input, Some(deadline)) {
+            if cfg.mean_interarrival.is_none() {
+                let _ = t.wait(cfg.timeout);
+            } else {
+                outstanding.push(t);
+            }
+        }
+        // Open loop: settle whatever already finished so lane slots free
+        // as responses arrive — otherwise the account would see phantom
+        // load and start rejecting once total slot capacity is reached,
+        // even with idle lanes.
+        if cfg.mean_interarrival.is_some() {
+            let mut still = Vec::with_capacity(outstanding.len());
+            for t in outstanding {
+                if let Err(t) = t.try_wait() {
+                    still.push(t);
+                }
+            }
+            outstanding = still;
+        }
+    }
+    for t in outstanding {
+        let _ = t.wait(cfg.timeout);
+    }
+
+    for i in 0..router.lane_count() {
+        router.lane_batcher(i).close();
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    let wall = start.elapsed();
+    let stats = router.stats.lock().unwrap().clone();
+    let lanes = (0..router.lane_count())
+        .map(|i| {
+            let st = router.lane_batcher(i).stats.lock().unwrap();
+            DeviceLaneReport {
+                name: router.lane_name(i).to_string(),
+                routed: stats.routed[i],
+                executed: st.requests,
+                mean_batch: st.mean_batch(),
+            }
+        })
+        .collect();
+    ClusterServeReport {
+        policy: cfg.policy.name(),
+        completed: stats.completed,
+        failed: stats.failed,
+        rejected: stats.rejected,
+        slo_violations: stats.slo_violations,
+        latency_ms: stats.summary(),
+        wall,
+        lanes,
+        conserved: stats.conserved(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{MockExecutor, ModelExecutor};
+
+    fn lane(name: &str, latency_class: bool, slots: u64) -> ClusterLaneSpec {
+        ClusterLaneSpec {
+            name: name.to_string(),
+            latency_class,
+            slots,
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+        }
+    }
+
+    fn factory(latency_ms: u64) -> LaneRunnerFactory {
+        Box::new(move || {
+            let mk = |b: usize| -> Box<dyn ModelExecutor> {
+                let mut m = MockExecutor::new(b, 16, 4);
+                m.latency = Duration::from_millis(latency_ms);
+                Box::new(m)
+            };
+            BatchRunner::new(vec![(1, mk(1)), (4, mk(4))], vec![])
+        })
+    }
+
+    fn cfg(requests: u32, policy: ClusterRoutePolicy) -> ClusterServeConfig {
+        ClusterServeConfig {
+            requests,
+            policy,
+            in_features: 16,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_across_three_lanes() {
+        let rep = serve_cluster_routed(
+            cfg(30, ClusterRoutePolicy::RoundRobin),
+            vec![
+                (lane("d0", false, 64), factory(0)),
+                (lane("d1", false, 64), factory(0)),
+                (lane("d2", false, 64), factory(0)),
+            ],
+        );
+        assert_eq!(rep.completed, 30);
+        assert_eq!(rep.failed, 0);
+        assert!(rep.conserved, "{rep:?}");
+        for l in &rep.lanes {
+            assert_eq!(l.routed, 10, "{rep:?}");
+            assert_eq!(l.executed, l.routed);
+        }
+    }
+
+    #[test]
+    fn slo_aware_steers_by_deadline_class() {
+        let mut c = cfg(40, ClusterRoutePolicy::SloAware {
+            cutoff: Duration::from_millis(20),
+        });
+        c.tight_fraction = 0.5;
+        let rep = serve_cluster_routed(
+            c,
+            vec![
+                (lane("mig-slice", true, 64), factory(0)),
+                (lane("shared", false, 64), factory(0)),
+            ],
+        );
+        assert_eq!(rep.completed, 40);
+        assert!(rep.conserved);
+        // both classes saw traffic and stayed in their lanes
+        assert!(rep.lanes[0].routed > 0, "{rep:?}");
+        assert!(rep.lanes[1].routed > 0, "{rep:?}");
+        assert_eq!(rep.lanes[0].routed + rep.lanes[1].routed, 40);
+    }
+
+    #[test]
+    fn least_loaded_avoids_tiny_lane_in_closed_loop() {
+        // Lane 0 advertises one slot, lane 1 plenty: the post-commit load
+        // score always prefers lane 1, so the tiny lane stays idle.
+        let rep = serve_cluster_routed(
+            cfg(10, ClusterRoutePolicy::LeastLoaded),
+            vec![
+                (lane("tiny", false, 1), factory(0)),
+                (lane("big", false, 64), factory(0)),
+            ],
+        );
+        assert_eq!(rep.completed, 10);
+        assert!(rep.conserved);
+        assert_eq!(rep.lanes[0].routed, 0, "{rep:?}");
+        assert_eq!(rep.lanes[1].routed, 10);
+    }
+
+    #[test]
+    fn saturation_rejects_and_timeout_fails_but_conserves() {
+        // A single one-slot lane with no worker: the first request is
+        // admitted and times out (failed), and while it is in flight a
+        // second route() is rejected by the account's no-fit exit.
+        let b = Batcher::new(
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+            },
+            4,
+        );
+        let router = ClusterRouter::new(
+            vec![(lane("only", false, 1), b.clone())],
+            ClusterRoutePolicy::LeastLoaded,
+        );
+        let t = router.route(vec![0.0; 4], None).unwrap();
+        assert!(router.route(vec![0.0; 4], None).is_none());
+        assert!(t.wait(Duration::from_millis(20)).is_none());
+        // the slot freed on failure: routing works again
+        let t3 = router.route(vec![0.0; 4], None);
+        assert!(t3.is_some());
+        let st = router.stats.lock().unwrap().clone();
+        assert_eq!(st.rejected, 1);
+        assert_eq!(st.failed, 1);
+        assert_eq!(st.admitted, 2);
+        drop(st);
+        drop(t3);
+        b.close();
+    }
+
+    #[test]
+    fn open_loop_frees_slots_as_responses_arrive() {
+        // Regression: with slots released only at end-of-run, a 2-slot
+        // lane would cap an open-loop run at 2 completions and reject the
+        // rest. Draining finished tickets between issues keeps the lane
+        // live; the generous threshold absorbs scheduler jitter.
+        let mut c = cfg(20, ClusterRoutePolicy::LeastLoaded);
+        c.mean_interarrival = Some(Duration::from_millis(2));
+        let rep = serve_cluster_routed(c, vec![(lane("only", false, 2), factory(0))]);
+        assert!(rep.conserved, "{rep:?}");
+        assert!(
+            rep.completed > 5,
+            "open loop starved on a 2-slot lane: {rep:?}"
+        );
+    }
+
+    #[test]
+    fn dropped_ticket_releases_slot_and_conserves() {
+        // An abandoned ticket must not leak its lane slot: Drop settles it
+        // as failed, so routing keeps working and conservation holds.
+        let b = Batcher::new(
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+            },
+            4,
+        );
+        let router = ClusterRouter::new(
+            vec![(lane("only", false, 1), b.clone())],
+            ClusterRoutePolicy::RoundRobin,
+        );
+        for _ in 0..3 {
+            let t = router.route(vec![0.0; 4], None).unwrap();
+            drop(t); // fire-and-forget
+        }
+        let st = router.stats.lock().unwrap().clone();
+        assert_eq!(st.admitted, 3);
+        assert_eq!(st.failed, 3);
+        assert_eq!(st.rejected, 0, "dropped tickets must free their slots");
+        assert!(st.conserved(), "{st:?}");
+        assert_eq!(st.slo_violations, 0, "abandonment is not an SLO miss");
+        b.close();
+    }
+
+    #[test]
+    fn malformed_input_releases_slot_and_rejects() {
+        let b = Batcher::new(BatcherConfig::default(), 4);
+        let router = ClusterRouter::new(
+            vec![(lane("only", false, 1), b.clone())],
+            ClusterRoutePolicy::RoundRobin,
+        );
+        assert!(router.route(vec![0.0; 3], None).is_none());
+        assert_eq!(router.stats.lock().unwrap().rejected, 1);
+        // the slot was released: a well-formed request still routes
+        assert!(router.route(vec![0.0; 4], None).is_some());
+        b.close();
+    }
+}

@@ -1,14 +1,21 @@
 //! L3 serving coordinator (DESIGN.md §7): request router, dynamic batcher,
 //! mechanism-semantics governor, and the serving loop that pairs a
 //! latency-sensitive inference service with a best-effort trainer on real
-//! PJRT compute.
+//! PJRT compute. The [`cluster`] submodule generalizes the router's
+//! per-instance lanes to N device lanes under cross-device routing
+//! policies (DESIGN.md §7a).
 
 pub mod batcher;
+pub mod cluster;
 pub mod governor;
 pub mod router;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig, BatcherStats, InferResponse, WorkerHooks};
+pub use cluster::{
+    serve_cluster_routed, ClusterLaneSpec, ClusterRoutePolicy, ClusterRouter, ClusterRouterStats,
+    ClusterServeConfig, ClusterServeReport, ClusterTicket, DeviceLaneReport, LaneRunnerFactory,
+};
 pub use governor::{Governor, GovernorMode};
 pub use router::{InstanceRoutes, Router, RouterStats, Ticket};
 pub use server::{

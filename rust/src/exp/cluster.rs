@@ -1,0 +1,225 @@
+//! Cluster scenarios (DESIGN.md §7a): the fleet-level experiments the
+//! single-device protocol cannot express, driven through
+//! [`crate::exp::run_parallel`] one device per thread.
+//!
+//! Three scenario families:
+//! * [`scale_out_homogeneous`] — N identical 3090s, one inference+training
+//!   pair per device via round-robin: the baseline answer to "a single
+//!   GPU's mechanisms cannot deliver both utilization and predictability"
+//!   is simply more GPUs.
+//! * [`heterogeneous_slo`] — a shared-3090 + MIG-A100 fleet with SLO-aware
+//!   routing: tight-deadline inference is steered to the memory-isolated
+//!   MIG slice, best-effort training to the 3090 — the cross-device
+//!   version of `serve_slo_routed`'s per-instance lanes.
+//! * [`drain_rebalance`] — a device failure: the failed device's in-flight
+//!   work drains (cost measured from its own phase-1 lane via
+//!   [`ReconfigCost`]), a spare A100 is MIG-sliced (per-profile creation
+//!   latency, same model), and the displaced jobs re-place onto the
+//!   survivor fleet.
+
+use super::mig::ReconfigCost;
+use super::Protocol;
+use crate::cluster::{
+    Cluster, ClusterJob, ClusterRunConfig, ClusterRunReport, ClusterSpec, PlacePolicy,
+};
+use crate::gpu::MigProfile;
+use crate::workload::DlModel;
+
+/// Carry a [`Protocol`]'s knobs over to a cluster run.
+pub fn run_cfg(proto: &Protocol) -> ClusterRunConfig {
+    ClusterRunConfig {
+        seed: proto.seed,
+        pattern: proto.pattern,
+        record_ops: proto.record_ops,
+        occupancy_sample_ns: proto.occupancy_sample_ns,
+        parallel: proto.parallel,
+    }
+}
+
+/// Homogeneous scale-out: `devices` identical MPS-shared 3090s, one
+/// inference + training pair per device. Jobs are listed inference-first
+/// so round-robin deals one pair to each device (and the latency context
+/// lands first on every device).
+pub fn scale_out_homogeneous(
+    proto: &Protocol,
+    devices: usize,
+    model: DlModel,
+) -> ClusterRunReport {
+    let spec = ClusterSpec::parse(&format!("{devices}x3090:mps")).expect("valid spec");
+    let mut jobs = Vec::with_capacity(devices * 2);
+    for d in 0..devices {
+        jobs.push(ClusterJob::inference(
+            &format!("infer{d}"),
+            model,
+            proto.requests,
+            None,
+        ));
+    }
+    for d in 0..devices {
+        jobs.push(ClusterJob::training(
+            &format!("train{d}"),
+            model,
+            proto.train_steps,
+        ));
+    }
+    Cluster::new(spec).run(&jobs, PlacePolicy::RoundRobin, &run_cfg(proto))
+}
+
+/// Heterogeneous SLO serving: a 3090 sharing via MPS plus an A100 carved
+/// into MIG, under one coordinator. SLO-aware routing steers the
+/// tight-deadline inference service to the isolated MIG slice and the
+/// best-effort trainer to the shared 3090.
+pub fn heterogeneous_slo(
+    proto: &Protocol,
+    infer_model: DlModel,
+    train_model: DlModel,
+) -> ClusterRunReport {
+    let spec = ClusterSpec::parse("3090:mps,a100:mig-3g").expect("valid spec");
+    let jobs = vec![
+        ClusterJob::inference("slo-infer", infer_model, proto.requests, Some(5)),
+        ClusterJob::training("train", train_model, proto.train_steps),
+    ];
+    Cluster::new(spec).run(&jobs, PlacePolicy::SloAware { cutoff_ms: 10 }, &run_cfg(proto))
+}
+
+/// Outcome of the device-failure/drain rebalance scenario.
+#[derive(Clone, Debug)]
+pub struct DrainRebalanceReport {
+    /// Phase 1: the healthy 2×3090 fleet, one pair per device.
+    pub phase1: ClusterRunReport,
+    /// The rebalance cost: drain of the failed device's in-flight work
+    /// (measured from its phase-1 lane) + MIG bring-up of the spare A100.
+    pub cost: ReconfigCost,
+    /// Phase 2: the displaced jobs on the survivor + freshly-sliced A100.
+    pub phase2: ClusterRunReport,
+    /// End-to-end makespan including the rebalance gap, seconds.
+    pub total_span_s: f64,
+}
+
+impl DrainRebalanceReport {
+    /// Fraction of the end-to-end span lost to the rebalance itself.
+    pub fn gap_fraction(&self) -> f64 {
+        (self.cost.total_ns() as f64 / 1e9) / self.total_span_s
+    }
+}
+
+/// Device failure and rebalance: phase 1 runs one inference+training pair
+/// on each of two MPS-shared 3090s; device 0 then fails. Its in-flight
+/// work must drain (drain time measured from that device's own phase-1
+/// lane, [`ReconfigCost::drain_ns_from`]) while a spare A100 is sliced
+/// into the 3g+4g MIG layout (per-profile creation latency, same model —
+/// the ROADMAP reconfiguration cost reused at the cluster layer). Phase 2
+/// re-places the displaced pair SLO-aware onto the survivor fleet: the
+/// inference job onto the fresh MIG slice, the trainer beside the
+/// survivor's 3090.
+pub fn drain_rebalance(proto: &Protocol, model: DlModel) -> DrainRebalanceReport {
+    let phase1 = scale_out_homogeneous(proto, 2, model);
+    // Drain + MIG bring-up, both from the measured cost model.
+    let cost = ReconfigCost::measure(
+        &phase1.lanes[0].report,
+        &[MigProfile::G3, MigProfile::G4],
+    );
+    // Phase 2: the failed device's jobs, decorrelated from phase 1, on the
+    // survivor + the freshly-sliced spare.
+    let spec = ClusterSpec::parse("3090:mps,a100:mig-3g").expect("valid spec");
+    let jobs = vec![
+        ClusterJob::inference("infer0b", model, proto.requests, Some(5)),
+        ClusterJob::training("train0b", model, proto.train_steps),
+    ];
+    let mut cfg = run_cfg(proto);
+    cfg.seed = proto.seed ^ 0x9E3779B97F4A7C15;
+    let phase2 = Cluster::new(spec).run(&jobs, PlacePolicy::SloAware { cutoff_ms: 10 }, &cfg);
+    let total_span_s =
+        phase1.makespan_s() + cost.total_ns() as f64 / 1e9 + phase2.makespan_s();
+    DrainRebalanceReport {
+        phase1,
+        cost,
+        phase2,
+        total_span_s,
+    }
+}
+
+/// The cluster perf workload (`bench_cluster`, and the gated `sweep:`
+/// entry `bench_perf` shares with it): both steady-state scenario families
+/// once, returning total simulated events across every device lane.
+pub fn cluster_sweep_events(proto: &Protocol, model: DlModel) -> u64 {
+    let a = scale_out_homogeneous(proto, 2, model);
+    let b = heterogeneous_slo(proto, model, model);
+    a.lanes
+        .iter()
+        .chain(b.lanes.iter())
+        .map(|l| l.report.events)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn proto() -> Protocol {
+        Protocol {
+            requests: 4,
+            train_steps: 2,
+            ..Protocol::default()
+        }
+    }
+
+    #[test]
+    fn scale_out_runs_one_pair_per_device() {
+        let rep = scale_out_homogeneous(&proto(), 2, DlModel::AlexNet);
+        assert_eq!(rep.lanes.len(), 2);
+        assert!(rep.stats.conserved());
+        assert_eq!(rep.stats.per_device, vec![2, 2]);
+        for lane in &rep.lanes {
+            assert!(lane.report.oom.is_none(), "{:?}", lane.report.oom);
+            assert_eq!(lane.report.requests.len(), 4, "{}", lane.device);
+            assert!(lane.report.train_done.is_some(), "{}", lane.device);
+        }
+        assert_eq!(rep.total_requests(), 8);
+    }
+
+    #[test]
+    fn heterogeneous_lanes_steer_by_slo() {
+        // The acceptance scenario: 3090 + A100(mig) under one coordinator,
+        // per-device lanes in the report, inference on the MIG slice,
+        // training on the shared 3090.
+        let rep = heterogeneous_slo(&proto(), DlModel::AlexNet, DlModel::AlexNet);
+        assert_eq!(rep.lanes.len(), 2);
+        assert!(rep.stats.conserved());
+        assert_eq!(rep.lanes[0].device, "3090:mps");
+        assert_eq!(rep.lanes[1].device, "a100:mig-3g");
+        assert_eq!(rep.lane_of("slo-infer"), Some(1));
+        assert_eq!(rep.lane_of("train"), Some(0));
+        assert_eq!(rep.lanes[1].report.requests.len(), 4);
+        assert!(rep.lanes[1].report.oom.is_none(), "{:?}", rep.lanes[1].report.oom);
+        assert!(rep.lanes[0].report.train_done.is_some());
+    }
+
+    #[test]
+    fn drain_rebalance_reuses_measured_cost() {
+        let rep = drain_rebalance(&proto(), DlModel::AlexNet);
+        // drain comes from the failed device's own lane …
+        assert_eq!(
+            rep.cost.drain_ns,
+            ReconfigCost::drain_ns_from(&rep.phase1.lanes[0].report)
+        );
+        assert!(rep.cost.drain_ns > 0);
+        // … and creation from the spare's 3g+4g bring-up
+        assert_eq!(
+            rep.cost.create_ns,
+            ReconfigCost::creation_latency_ns(MigProfile::G3)
+                + ReconfigCost::creation_latency_ns(MigProfile::G4)
+        );
+        assert!(rep.gap_fraction() > 0.0 && rep.gap_fraction() < 1.0);
+        // the displaced pair completed on the survivor fleet, SLO-steered
+        assert_eq!(rep.phase2.lane_of("infer0b"), Some(1));
+        assert_eq!(rep.phase2.lane_of("train0b"), Some(0));
+        assert_eq!(rep.phase2.total_requests(), 4);
+    }
+
+    #[test]
+    fn sweep_counts_events_across_all_lanes() {
+        let n = cluster_sweep_events(&proto(), DlModel::AlexNet);
+        assert!(n > 0);
+    }
+}

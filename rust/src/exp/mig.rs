@@ -20,7 +20,7 @@
 //! rejects it — itself a faithful MIG behavior).
 
 use super::{run_comparisons, Protocol};
-use crate::gpu::partition::MigProfile;
+use crate::gpu::partition::{self, MigProfile};
 use crate::gpu::DeviceConfig;
 use crate::metrics::RunReport;
 use crate::sched::Mechanism;
@@ -98,8 +98,82 @@ pub fn colocation_study(
 
 /// Default drain + `CreateGpuInstance` gap for a reconfiguration
 /// (instances must be idle before re-slicing; creation itself is
-/// hundreds of milliseconds on real hardware).
+/// hundreds of milliseconds on real hardware). Kept as the flat-gap
+/// override; the default path now *measures* the gap via
+/// [`ReconfigCost`].
 pub const DEFAULT_RECONFIG_GAP_NS: SimTime = 250 * MS;
+
+/// Measured reconfiguration cost (ROADMAP "instance reconfiguration cost
+/// model"): the flat drain + `CreateGpuInstance` gap replaced by a model
+/// derived from the engine's own run — drain time as a function of the
+/// work in flight when the drain begins, plus a per-profile instance
+/// creation latency. The cluster drain/rebalance scenario
+/// (`exp::cluster::drain_rebalance`) reuses the same model for a failed
+/// device's drain and the spare device's MIG bring-up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReconfigCost {
+    /// Expected time for in-flight work to drain before the instances can
+    /// be destroyed.
+    pub drain_ns: SimTime,
+    /// Σ per-instance `CreateGpuInstance` latency for the new layout.
+    pub create_ns: SimTime,
+}
+
+impl ReconfigCost {
+    /// Drain estimate when a phase completed no requests (nothing to
+    /// measure residual work from).
+    pub const FALLBACK_DRAIN_NS: SimTime = 50 * MS;
+
+    /// The full gap the reconfiguration charges.
+    pub fn total_ns(&self) -> SimTime {
+        self.drain_ns + self.create_ns
+    }
+
+    /// `CreateGpuInstance` latency for an instance of `compute_slices`
+    /// slices: a fixed setup cost plus a per-slice term (creation is
+    /// hundreds of milliseconds on real hardware and grows with the
+    /// instance's share of the device).
+    pub fn creation_latency_ns_slices(compute_slices: u32) -> SimTime {
+        80 * MS + 24 * MS * compute_slices as SimTime
+    }
+
+    /// Per-profile `CreateGpuInstance` latency.
+    pub fn creation_latency_ns(profile: MigProfile) -> SimTime {
+        Self::creation_latency_ns_slices(profile.compute_slices())
+    }
+
+    /// Drain time measured from the draining phase's own behaviour: the
+    /// expected residual life of the unit in flight at an arbitrary drain
+    /// point, `E[R] = E[X²] / 2·E[X]` over the phase's completed request
+    /// spans (the inspection paradox — a drain disproportionately catches
+    /// long units mid-flight, so this exceeds half the mean span whenever
+    /// spans vary).
+    pub fn drain_ns_from(phase: &RunReport) -> SimTime {
+        let mut sum = 0.0f64;
+        let mut sum_sq = 0.0f64;
+        for r in &phase.requests {
+            let x = r.turnaround_ns() as f64;
+            sum += x;
+            sum_sq += x * x;
+        }
+        if sum <= 0.0 {
+            return Self::FALLBACK_DRAIN_NS;
+        }
+        (sum_sq / (2.0 * sum)).ceil() as SimTime
+    }
+
+    /// The measured cost of draining `phase` and creating the instances of
+    /// `next_layout`.
+    pub fn measure(phase: &RunReport, next_layout: &[MigProfile]) -> ReconfigCost {
+        ReconfigCost {
+            drain_ns: Self::drain_ns_from(phase),
+            create_ns: next_layout
+                .iter()
+                .map(|&p| Self::creation_latency_ns(p))
+                .sum(),
+        }
+    }
+}
 
 /// Outcome of a two-phase run with an instance reconfiguration between.
 #[derive(Clone, Debug)]
@@ -110,6 +184,10 @@ pub struct ReconfigurationReport {
     pub phase2: RunReport,
     pub phase1_profile: MigProfile,
     pub phase2_profile: MigProfile,
+    /// The cost model behind the gap: drain measured from phase 1's
+    /// in-flight work, creation summed over phase 2's instance layout.
+    pub cost: ReconfigCost,
+    /// The gap actually charged (= `cost.total_ns()` unless overridden).
     pub reconfig_gap_ns: SimTime,
     /// End-to-end span including the gap, seconds.
     pub total_span_s: f64,
@@ -124,22 +202,41 @@ impl ReconfigurationReport {
 }
 
 /// Phase 1 runs a train-heavy mix (full training steps, a quarter of the
-/// requests) under `Mig { phase1 }`; after a drain + re-create gap,
+/// requests) under `Mig { phase1 }`; after the reconfiguration gap,
 /// phase 2 runs an infer-heavy mix (full requests, a quarter of the
 /// steps) under `Mig { phase2 }`.
+///
+/// The gap defaults to the *measured* [`ReconfigCost`]: drain time from
+/// phase 1's own request spans and `CreateGpuInstance` latency summed over
+/// phase 2's actual instance layout. Pass `gap_override_ns` to force a
+/// flat gap (e.g. [`DEFAULT_RECONFIG_GAP_NS`]) instead.
 pub fn reconfigure_between_phases(
     proto: &Protocol,
     infer_model: DlModel,
     train_model: DlModel,
     phase1: MigProfile,
     phase2: MigProfile,
-    reconfig_gap_ns: SimTime,
+    gap_override_ns: Option<SimTime>,
 ) -> ReconfigurationReport {
     let p1 = Protocol {
         requests: (proto.requests / 4).max(1),
         ..proto.clone()
     };
     let rep1 = p1.pair(Mechanism::Mig { profile: phase1 }, infer_model, train_model);
+    // Creation is charged per instance of the layout actually built for
+    // phase 2 (profile + remainder), not just the named profile.
+    let create_ns: SimTime = match partition::pair_layout(&proto.dev, phase2) {
+        Ok(insts) => insts
+            .iter()
+            .map(|gi| ReconfigCost::creation_latency_ns_slices(gi.compute_slices))
+            .sum(),
+        Err(_) => ReconfigCost::creation_latency_ns(phase2),
+    };
+    let cost = ReconfigCost {
+        drain_ns: ReconfigCost::drain_ns_from(&rep1),
+        create_ns,
+    };
+    let reconfig_gap_ns = gap_override_ns.unwrap_or_else(|| cost.total_ns());
     let p2 = Protocol {
         train_steps: (proto.train_steps / 4).max(1),
         // decorrelate the second phase's arrivals/kernels from the first
@@ -153,6 +250,7 @@ pub fn reconfigure_between_phases(
         phase2: rep2,
         phase1_profile: phase1,
         phase2_profile: phase2,
+        cost,
         reconfig_gap_ns,
         total_span_s: total_ns / 1e9,
     }
@@ -217,7 +315,7 @@ mod tests {
             DlModel::AlexNet,
             MigProfile::G2,
             MigProfile::G4,
-            DEFAULT_RECONFIG_GAP_NS,
+            Some(DEFAULT_RECONFIG_GAP_NS),
         );
         assert!(rep.phase1.oom.is_none());
         assert!(rep.phase2.oom.is_none());
@@ -227,5 +325,72 @@ mod tests {
             (rep.phase1.sim_end + rep.phase2.sim_end + DEFAULT_RECONFIG_GAP_NS) as f64 / 1e9;
         assert!((rep.total_span_s - min_s).abs() < 1e-9);
         assert!(rep.gap_fraction() > 0.0 && rep.gap_fraction() < 1.0);
+    }
+
+    #[test]
+    fn measured_gap_combines_drain_and_layout_creation() {
+        // The default (no override) gap is the measured model: drain from
+        // phase 1's request spans, creation summed over phase 2's actual
+        // 4g+3g instance layout.
+        let rep = reconfigure_between_phases(
+            &proto(),
+            DlModel::AlexNet,
+            DlModel::AlexNet,
+            MigProfile::G2,
+            MigProfile::G4,
+            None,
+        );
+        assert_eq!(rep.reconfig_gap_ns, rep.cost.total_ns());
+        assert!(rep.cost.drain_ns > 0);
+        assert_eq!(
+            rep.cost.create_ns,
+            ReconfigCost::creation_latency_ns(MigProfile::G4)
+                + ReconfigCost::creation_latency_ns(MigProfile::G3)
+        );
+        // drain reflects the phase's own work: it is bounded by the longest
+        // completed request span (residual life ≤ max span)
+        let max_span = rep
+            .phase1
+            .requests
+            .iter()
+            .map(|r| r.turnaround_ns())
+            .max()
+            .unwrap();
+        assert!(rep.cost.drain_ns <= max_span, "{} > {max_span}", rep.cost.drain_ns);
+    }
+
+    #[test]
+    fn reconfig_cost_model_shapes() {
+        // Creation latency is monotone in instance size.
+        assert!(
+            ReconfigCost::creation_latency_ns(MigProfile::G7)
+                > ReconfigCost::creation_latency_ns(MigProfile::G1)
+        );
+        // Residual-life drain: uniform spans drain in half a span …
+        let mut rep = RunReport::default();
+        for i in 0..4u64 {
+            rep.requests.push(crate::metrics::RequestRecord {
+                id: i,
+                arrived: 0,
+                completed: 10 * MS,
+            });
+        }
+        assert_eq!(ReconfigCost::drain_ns_from(&rep), 5 * MS);
+        // … and variable spans drain in more than half the mean span (the
+        // inspection paradox the flat gap ignored).
+        rep.requests.push(crate::metrics::RequestRecord {
+            id: 4,
+            arrived: 0,
+            completed: 90 * MS,
+        });
+        let mean = (4 * 10 + 90) as f64 / 5.0 * 1e6; // ns
+        assert!(ReconfigCost::drain_ns_from(&rep) as f64 > mean / 2.0);
+        // no requests → fallback
+        assert_eq!(
+            ReconfigCost::drain_ns_from(&RunReport::default()),
+            ReconfigCost::FALLBACK_DRAIN_NS
+        );
+        let c = ReconfigCost::measure(&rep, &[MigProfile::G3, MigProfile::G4]);
+        assert_eq!(c.total_ns(), c.drain_ns + c.create_ns);
     }
 }

@@ -20,6 +20,7 @@ use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+pub mod cluster;
 pub mod mig;
 
 /// A unit of experiment work for [`run_parallel`].

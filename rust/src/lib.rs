@@ -20,10 +20,14 @@
 //! * [`workload`] — Table-1-calibrated DL trace generators and arrivals;
 //! * [`metrics`] — turnaround/variance/utilization-proxy reporting;
 //! * [`exp`] — experiment drivers, one per paper table/figure;
+//! * [`cluster`] — the cluster-of-devices layer: one coordinator over N
+//!   heterogeneous simulated GPUs (`DeviceRt` fleet, `ClusterAccount`,
+//!   cross-device routing policies);
 //! * [`coordinator`] — the serving coordinator (router/batcher/governor);
 //! * [`runtime`] — PJRT runtime loading AOT-compiled JAX/Pallas artifacts;
 //! * [`util`] — PRNG, stats, CLI, tables, property-testing, bench harness.
 
+pub mod cluster;
 pub mod coordinator;
 pub mod examples_support;
 pub mod exp;

@@ -152,6 +152,9 @@ struct QueuedTransfer {
 struct Channel {
     active: Option<ActiveTransfer>,
     queue: VecDeque<QueuedTransfer>,
+    /// Host-link QoS round-robin pointer: the scheduling domain whose
+    /// queued transfer is served next on this channel.
+    next_inst: usize,
 }
 
 #[derive(Clone, Debug)]
@@ -183,9 +186,15 @@ struct InstanceRt {
     acct: DeviceAccount,
 }
 
-/// The engine itself. Construct with [`Engine::new`], run with
-/// [`Engine::run`]; a fresh engine is needed per run.
-pub struct Engine {
+/// The per-device simulation runtime: every piece of state one physical
+/// device owns — its SMs, scheduling-domain instances with their
+/// [`DeviceAccount`]s, dispatch queues, host-link DMA channels, contexts
+/// pinned to it, and its own event clock. [`Engine`] is the thin
+/// single-device wrapper the existing experiments construct;
+/// `cluster::Cluster` owns a `Vec<DeviceRt>` and runs one per device
+/// (DESIGN.md §7a). Construct with [`DeviceRt::new`], run with
+/// [`DeviceRt::run`]; a fresh runtime is needed per run.
+pub struct DeviceRt {
     cfg: EngineConfig,
     ctxs: Vec<CtxRt>,
     sms: Vec<SmState>,
@@ -239,7 +248,7 @@ pub struct Engine {
 const H2D: usize = 0;
 const D2H: usize = 1;
 
-impl Engine {
+impl DeviceRt {
     pub fn new(cfg: EngineConfig, defs: Vec<CtxDef>) -> Self {
         assert!(!defs.is_empty());
         if let Mechanism::Baseline = cfg.mechanism {
@@ -1022,16 +1031,38 @@ impl Engine {
     }
 
     /// Start the next eligible queued transfer if the channel is free.
+    ///
+    /// Arbitration is per-instance round-robin (host-link QoS): the shared
+    /// PCIe link cycles across scheduling domains, FIFO within a domain, so
+    /// a transfer-heavy neighbor in another MIG instance cannot starve this
+    /// instance's H2D queue — its next transfer waits for at most one
+    /// foreign transfer per round instead of the whole foreign backlog.
+    /// With a single whole-device instance this is exactly global FIFO.
     fn pump_channel(&mut self, chan: usize) {
         if self.channels[chan].active.is_some() {
             return;
         }
-        let pos = self.channels[chan]
-            .queue
-            .iter()
-            .position(|t| self.transfer_eligible(t.ctx));
-        let Some(pos) = pos else { return };
+        let ninst = self.instances.len();
+        let start = self.channels[chan].next_inst % ninst;
+        // (rotation distance from the RR pointer, queue position): smaller
+        // distance wins, queue order breaks ties — FIFO within an instance.
+        let mut best: Option<(usize, usize)> = None;
+        for (pos, t) in self.channels[chan].queue.iter().enumerate() {
+            if !self.transfer_eligible(t.ctx) {
+                continue;
+            }
+            let inst = self.ctx_inst[t.ctx].min(ninst - 1);
+            let dist = (inst + ninst - start) % ninst;
+            if best.map_or(true, |(bd, _)| dist < bd) {
+                best = Some((dist, pos));
+                if dist == 0 {
+                    break;
+                }
+            }
+        }
+        let Some((_, pos)) = best else { return };
         let t = self.channels[chan].queue.remove(pos).unwrap();
+        self.channels[chan].next_inst = (self.ctx_inst[t.ctx].min(ninst - 1) + 1) % ninst;
         let dur = self.transfer_ns(t.bytes);
         self.channels[chan].active = Some(ActiveTransfer {
             ctx: t.ctx,
@@ -1502,6 +1533,26 @@ impl Engine {
     }
 }
 
+/// The single-device engine: a thin wrapper over one [`DeviceRt`], kept as
+/// the stable entry point for every per-device experiment. The cluster
+/// layer bypasses it and owns its `DeviceRt`s directly.
+pub struct Engine {
+    rt: DeviceRt,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig, defs: Vec<CtxDef>) -> Self {
+        Self {
+            rt: DeviceRt::new(cfg, defs),
+        }
+    }
+
+    /// Execute the simulation to completion and return the report.
+    pub fn run(self) -> RunReport {
+        self.rt.run()
+    }
+}
+
 /// Convenience: build and run in one call.
 pub fn run(cfg: EngineConfig, defs: Vec<CtxDef>) -> RunReport {
     Engine::new(cfg, defs).run()
@@ -1628,7 +1679,7 @@ mod tests {
         // device never belong to two contexts at once. We verify via the
         // engine by stepping manually.
         let cfg = EngineConfig::new(dev(), Mechanism::TimeSlicing);
-        let mut eng = Engine::new(
+        let mut eng = DeviceRt::new(
             cfg,
             vec![
                 CtxDef {
@@ -1681,7 +1732,7 @@ mod tests {
     #[test]
     fn mps_thread_limit_enforced() {
         let cfg = EngineConfig::new(dev(), Mechanism::Mps { thread_limit: 0.25 });
-        let mut eng = Engine::new(
+        let mut eng = DeviceRt::new(
             cfg,
             vec![
                 CtxDef {
@@ -1812,7 +1863,7 @@ mod tests {
                 profile: MigProfile::G3,
             },
         );
-        let mut eng = Engine::new(
+        let mut eng = DeviceRt::new(
             cfg,
             vec![
                 CtxDef {
@@ -1881,6 +1932,86 @@ mod tests {
         }
         assert!(eng.ctxs.iter().all(|c| c.state == CtxState::Done));
         assert!(eng.report.oom.is_none(), "{:?}", eng.report.oom);
+    }
+
+    #[test]
+    fn host_link_round_robin_bounds_cross_instance_h2d_wait() {
+        // Host-link QoS regression (ROADMAP "per-instance host-link QoS"):
+        // under MIG the shared PCIe channel arbitrates round-robin across
+        // instances, so a transfer-heavy neighbor on the other instance
+        // delays this instance's H2D transfer by at most one in-flight
+        // transfer — not its whole backlog (the old globally-FIFO channel
+        // made the victim wait behind all nine here).
+        use crate::gpu::MigProfile;
+        let dev = DeviceConfig::a100();
+        let cfg = EngineConfig::new(
+            dev.clone(),
+            Mechanism::Mig {
+                profile: MigProfile::G3,
+            },
+        );
+        let mk_src = |seed| {
+            Source::inference(
+                DlModel::AlexNet.infer_profile().unwrap(),
+                dev.clone(),
+                ArrivalPattern::ClosedLoop,
+                1,
+                Rng::new(seed),
+            )
+        };
+        let mut eng = DeviceRt::new(
+            cfg,
+            vec![
+                CtxDef {
+                    name: "victim".into(),
+                    source: mk_src(1),
+                    priority: 0,
+                },
+                CtxDef {
+                    name: "hog".into(),
+                    source: mk_src(2),
+                    priority: -2,
+                },
+            ],
+        );
+        assert_eq!(eng.ctx_inst, vec![0, 1]);
+        let bytes = 100_000_000u64; // ~4 ms per transfer on the 25 GB/s link
+        let dur = eng.transfer_ns(bytes);
+        // The hog floods the H2D queue first; the victim enqueues one
+        // transfer behind the backlog.
+        for _ in 0..8 {
+            eng.enqueue_transfer(H2D, 1, bytes);
+        }
+        eng.enqueue_transfer(H2D, 0, bytes);
+        let mut victim_done: Option<(SimTime, usize)> = None;
+        let mut completions = 0u32;
+        while let Some((t, ev)) = eng.events.pop() {
+            eng.now = t;
+            if let Ev::TransferDone { chan } = ev {
+                let done_ctx = eng.channels[chan]
+                    .active
+                    .as_ref()
+                    .filter(|a| a.expected_done == t)
+                    .map(|a| a.ctx);
+                eng.on_transfer_done(chan);
+                if let Some(c) = done_ctx {
+                    completions += 1;
+                    if c == 0 {
+                        victim_done = Some((t, eng.channels[H2D].queue.len()));
+                    }
+                }
+            }
+        }
+        let (t_victim, hog_backlog) = victim_done.expect("victim transfer completed");
+        assert!(
+            t_victim <= dur * 5 / 2,
+            "victim H2D waited {t_victim} ns — more than 2.5 transfer times ({dur} ns each)"
+        );
+        assert!(
+            hog_backlog >= 5,
+            "victim must complete while the hog backlog is still deep ({hog_backlog} left)"
+        );
+        assert_eq!(completions, 9, "every queued transfer completes");
     }
 
     #[test]
@@ -1964,7 +2095,7 @@ mod tests {
         // The pre-MIG spatial mechanism still works on the instance layer:
         // two SM domains, both seeing the whole-device DRAM.
         let cfg = EngineConfig::new(dev(), Mechanism::Partitioned { ctx0_sms: 41 });
-        let eng = Engine::new(
+        let eng = DeviceRt::new(
             cfg,
             vec![
                 CtxDef {

@@ -7,5 +7,5 @@ pub mod engine;
 pub mod mechanism;
 
 pub use contention::ContentionModel;
-pub use engine::{run, CtxDef, Engine, EngineConfig};
+pub use engine::{run, CtxDef, DeviceRt, Engine, EngineConfig};
 pub use mechanism::{Mechanism, PlacementPolicy, PreemptConfig, PreemptFlavor, PreemptPolicy};

@@ -89,6 +89,38 @@ fn mig_rows_fanout_byte_identical() {
 }
 
 #[test]
+fn cluster_scenarios_fanout_byte_identical() {
+    // The guard extended to the cluster layer: a fleet run fans out one
+    // device per thread, and the rolled-up ClusterRunReport JSON —
+    // placement, per-device lanes, every embedded RunReport — must be
+    // byte-identical with the fan-out on and off.
+    use gpushare::exp::cluster::{heterogeneous_slo, scale_out_homogeneous};
+    let a = scale_out_homogeneous(&proto(true), 2, DlModel::AlexNet);
+    let b = scale_out_homogeneous(&proto(false), 2, DlModel::AlexNet);
+    assert_eq!(
+        a.to_json(),
+        b.to_json(),
+        "2x3090 scale-out: parallel and serial fleet runs diverged"
+    );
+    let a = heterogeneous_slo(&proto(true), DlModel::AlexNet, DlModel::AlexNet);
+    let b = heterogeneous_slo(&proto(false), DlModel::AlexNet, DlModel::AlexNet);
+    assert_eq!(
+        a.to_json(),
+        b.to_json(),
+        "3090+a100(mig) heterogeneous: parallel and serial fleet runs diverged"
+    );
+    // the acceptance shape: both device lanes present, inference on MIG
+    assert_eq!(a.lanes.len(), 2);
+    assert_eq!(a.lanes[1].device, "a100:mig-3g");
+    assert_eq!(a.lane_of("slo-infer"), Some(1));
+    // and the guard is alive: a different seed changes the bytes
+    let mut p = proto(true);
+    p.seed = 777;
+    let c = heterogeneous_slo(&p, DlModel::AlexNet, DlModel::AlexNet);
+    assert_ne!(a.to_json(), c.to_json(), "seed must influence the report");
+}
+
+#[test]
 fn repeated_runs_share_one_json_byte_for_byte() {
     let p = proto(true);
     let a = p

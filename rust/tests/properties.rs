@@ -721,3 +721,167 @@ fn prop_percentiles_ordered() {
         check((p0 - s.min).abs() < 1e-9, "p0=min")
     });
 }
+
+// ---------------------------------------------------------------------
+// Cluster layer (DESIGN.md §7a)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_cluster_account_sums_and_differential() {
+    // Random commit/release sequences over a random fleet: the per-device
+    // free/used vectors must always sum to the global aggregates, the
+    // incremental state must equal a from-scratch recompute from the
+    // outstanding placement list, and the O(1) no-fit exit must be exact
+    // in the negative direction.
+    use gpushare::cluster::account::{ClusterAccount, ClusterVec};
+    run_prop("cluster-account=recompute", cfgd(), |g| {
+        let n = g.usize(1, 6);
+        let caps: Vec<ClusterVec> = (0..n)
+            .map(|_| {
+                ClusterVec::new(
+                    g.u64(1 << 28, 40 << 30),
+                    g.u64(1, 16),
+                    g.u64(0, 1 << 20),
+                )
+            })
+            .collect();
+        let mut acct = ClusterAccount::new(&caps);
+        let mut outstanding: Vec<(usize, ClusterVec)> = Vec::new();
+        for _ in 0..g.usize(1, 60) {
+            if !outstanding.is_empty() && g.chance(0.4) {
+                let i = g.usize(0, outstanding.len() - 1);
+                let (d, demand) = outstanding.swap_remove(i);
+                acct.release(d, &demand);
+            } else {
+                let d = g.usize(0, n - 1);
+                let demand = ClusterVec::new(
+                    g.u64(0, 20 << 30),
+                    g.u64(0, 4),
+                    g.u64(0, 1 << 18),
+                );
+                let fits_before = acct.fits(d, &demand);
+                if acct.commit(d, &demand) {
+                    check(fits_before, "commit implies fits")?;
+                    outstanding.push((d, demand));
+                } else {
+                    check(!fits_before, "failed commit implies no fit")?;
+                }
+            }
+            // per-device sums equal the global account
+            let mut sum_free = ClusterVec::ZERO;
+            let mut sum_used = ClusterVec::ZERO;
+            for d in 0..n {
+                sum_free = sum_free.plus(&acct.free(d));
+                sum_used = sum_used.plus(&acct.used(d));
+            }
+            check_eq(sum_free, acct.agg_free(), "sum(free) == agg_free")?;
+            check_eq(sum_used, acct.agg_used(), "sum(used) == agg_used")?;
+            // the no-fit exit is exact: any_fits == false ⇒ no device fits
+            let probe = ClusterVec::new(
+                g.u64(0, 40 << 30),
+                g.u64(0, 16),
+                g.u64(0, 1 << 20),
+            );
+            let scan = (0..n).any(|d| acct.fits(d, &probe));
+            if !acct.any_fits(&probe) {
+                check(!scan, "any_fits=false must be exact")?;
+            }
+            if scan {
+                check(acct.any_fits(&probe), "any device fitting implies any_fits")?;
+            }
+            // differential: incremental == from-scratch recompute
+            if let Err(e) = acct.check_against(&outstanding) {
+                return check(false, e);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cluster_routing_conserves_jobs() {
+    // Every admitted job is placed on exactly one device or rejected,
+    // per-device tallies sum to the placements (RouterStats::conserved
+    // generalized to the cluster), placed jobs actually fit, and a
+    // rejection implies no device could have taken the job.
+    use gpushare::cluster::{place, ClusterJob, ClusterSpec, PlacePolicy};
+    run_prop("cluster-routing-conserves", cfgd(), |g| {
+        let spec_s = *g.pick(&[
+            "3090:mps",
+            "2x3090:mps",
+            "2x3090:mps,a100:mig-3g",
+            "3090:time-slicing,a100:mig-3g",
+            "a100:mig-2g,a100:mps",
+        ]);
+        let spec = ClusterSpec::parse(spec_s).unwrap();
+        let policy = *g.pick(&[
+            PlacePolicy::RoundRobin,
+            PlacePolicy::LeastLoaded,
+            PlacePolicy::SloAware { cutoff_ms: 10 },
+        ]);
+        let models = [DlModel::AlexNet, DlModel::ResNet50, DlModel::Vgg19];
+        let jobs: Vec<ClusterJob> = (0..g.usize(1, 12))
+            .map(|i| {
+                let model = *g.pick(&models);
+                if g.chance(0.5) {
+                    let deadline = if g.chance(0.5) { Some(g.u64(1, 50)) } else { None };
+                    ClusterJob::inference(&format!("i{i}"), model, 1, deadline)
+                } else {
+                    ClusterJob::training(&format!("t{i}"), model, 1)
+                }
+            })
+            .collect();
+        let p = place(&spec, &jobs, policy);
+        check(p.stats.conserved(), format!("not conserved: {:?}", p.stats))?;
+        check_eq(p.assignment.len(), jobs.len(), "one verdict per job")?;
+        check_eq(
+            p.stats.admitted,
+            jobs.len() as u64,
+            "every job admitted",
+        )?;
+        let placed = p.assignment.iter().filter(|a| a.is_some()).count() as u64;
+        check_eq(placed, p.stats.placed, "assignment matches placed count")?;
+        for (ji, a) in p.assignment.iter().enumerate() {
+            if let Some(d) = a {
+                check(
+                    *d < spec.devices.len(),
+                    format!("job {ji} on nonexistent device {d}"),
+                )?;
+            }
+        }
+        // a rejection must mean no device could take the job *at that
+        // point in the sequence* (every policy falls back to a full-fleet
+        // scan): replay the placement and probe at each rejection
+        let caps: Vec<gpushare::cluster::account::ClusterVec> =
+            spec.devices.iter().map(|d| d.capacity()).collect();
+        let mut replay = gpushare::cluster::account::ClusterAccount::new(&caps);
+        for (ji, a) in p.assignment.iter().enumerate() {
+            let demand = jobs[ji].demand();
+            match a {
+                Some(d) => check(
+                    replay.commit(*d, &demand),
+                    format!("job {ji} placed on device {d} it does not fit"),
+                )?,
+                None => {
+                    let fits_somewhere =
+                        (0..spec.devices.len()).any(|d| replay.fits(d, &demand));
+                    check(
+                        !fits_somewhere,
+                        format!("job {ji} rejected though a device had room"),
+                    )?;
+                }
+            }
+        }
+        // the final account equals a recompute from the placement list
+        let outstanding: Vec<(usize, gpushare::cluster::account::ClusterVec)> = p
+            .assignment
+            .iter()
+            .enumerate()
+            .filter_map(|(ji, a)| a.map(|d| (d, jobs[ji].demand())))
+            .collect();
+        if let Err(e) = p.account.check_against(&outstanding) {
+            return check(false, e);
+        }
+        Ok(())
+    });
+}
