@@ -1,0 +1,122 @@
+//! §Perf — the closed-loop control plane: governed-vs-static scenario
+//! outcomes (the acceptance table: does closing the loop beat the static
+//! fleet on a headline metric?) plus the gated `sweep: control …` entry
+//! shared verbatim with `bench_perf`, so the committed
+//! `BENCH_baseline.json` floor gates the control path in CI through the
+//! regular perf-smoke job.
+
+use gpushare::exp::control::{
+    bursty_reslice, control_sweep_events, diurnal_autoscale, failure_migrate,
+};
+use gpushare::exp::Protocol;
+use gpushare::util::bench::{black_box, BenchConfig, Bencher};
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn control_proto() -> Protocol {
+    // Smaller than Protocol::fast(): the bursty scenario multiplies its
+    // burst phases by 4× and runs governed + static + calibration.
+    Protocol {
+        requests: 8,
+        train_steps: 4,
+        ..Protocol::default()
+    }
+}
+
+fn main() {
+    // Same sampling config as bench_perf's sweep bencher, so the shared
+    // gated entry is measured identically in both targets.
+    let mut b = Bencher::with_config(BenchConfig {
+        warmup: Duration::from_millis(1),
+        samples: 3,
+        sample_target: Duration::from_millis(1),
+    });
+    let proto = control_proto();
+
+    // --- the gated control sweep (same entry name as bench_perf) ---
+    let events = control_sweep_events(&proto);
+    b.bench_items(
+        &format!("sweep: control governed vs static ({events} events)"),
+        Some(events),
+        |iters| {
+            for _ in 0..iters {
+                black_box(control_sweep_events(&proto));
+            }
+        },
+    );
+
+    // --- the acceptance table: one row per governed scenario ---
+    println!("\ngoverned vs static (headline metrics):");
+    println!(
+        "{:<20} {:>14} {:>14} {:>10} {:>10} {:>9}",
+        "scenario", "governed", "static", "gov span", "sta span", "actions"
+    );
+    let bursty = bursty_reslice(&proto);
+    println!(
+        "{:<20} {:>11.2} ms {:>11.2} ms {:>8.2} s {:>8.2} s {:>9}",
+        "bursty p99",
+        bursty.governed_p99_ms(),
+        bursty.baseline_p99_ms(),
+        bursty.governed.total_span_s(),
+        bursty.baseline.total_span_s(),
+        bursty.governed.actions_applied(),
+    );
+    let diurnal = diurnal_autoscale(&proto);
+    println!(
+        "{:<20} {:>11} rej {:>11} rej {:>8.2} s {:>8.2} s {:>9}",
+        "diurnal rejected",
+        diurnal.governed.total_rejected(),
+        diurnal.baseline.total_rejected(),
+        diurnal.governed.total_span_s(),
+        diurnal.baseline.total_span_s(),
+        diurnal.governed.actions_applied(),
+    );
+    let failure = failure_migrate(&proto);
+    println!(
+        "{:<20} {:>12.2} s {:>12.2} s {:>8.2} s {:>8.2} s {:>9}",
+        "failure makespan",
+        failure.governed.total_span_s(),
+        failure.baseline.total_span_s(),
+        failure.governed.total_span_s(),
+        failure.baseline.total_span_s(),
+        failure.governed.actions_applied(),
+    );
+
+    // --- per-scenario wall-clock diagnostics ---
+    b.bench_items(
+        &format!("control: bursty reslice ({} events)", bursty.total_events()),
+        Some(bursty.total_events()),
+        |iters| {
+            for _ in 0..iters {
+                black_box(bursty_reslice(&proto));
+            }
+        },
+    );
+    b.bench_items(
+        &format!("control: diurnal autoscale ({} events)", diurnal.total_events()),
+        Some(diurnal.total_events()),
+        |iters| {
+            for _ in 0..iters {
+                black_box(diurnal_autoscale(&proto));
+            }
+        },
+    );
+    b.bench_items(
+        &format!("control: failure migrate ({} events)", failure.total_events()),
+        Some(failure.total_events()),
+        |iters| {
+            for _ in 0..iters {
+                black_box(failure_migrate(&proto));
+            }
+        },
+    );
+
+    let out = gpushare::util::table::bench_out_dir();
+    std::fs::create_dir_all(&out).ok();
+    std::fs::write(out.join("bench_control.csv"), b.to_csv()).ok();
+    println!("\n[csv] {}", out.join("bench_control.csv").display());
+    let json_path = std::env::var("GPUSHARE_BENCH_JSON")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("BENCH_control.json"));
+    b.write_json(&json_path);
+}

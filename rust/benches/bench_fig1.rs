@@ -7,7 +7,7 @@
 
 mod common;
 
-use gpushare::exp::mig::colocation_study;
+use gpushare::exp::mig::{colocation_study, mig_mps_colocation};
 use gpushare::exp::{paper_mechanisms, run_comparisons};
 use gpushare::gpu::{DeviceConfig, MigProfile};
 use gpushare::util::table::{bench_out_dir, fmt_f, Table};
@@ -101,6 +101,24 @@ fn main() {
         ]);
     }
     fig1c.emit(&out);
+
+    // --- MPS nested inside MIG instances (ROADMAP "MPS inside an
+    // instance"): two best-effort contexts share the 4g remainder, once
+    // unbounded (plain mig-3g) and once as 50%-thread-capped MPS clients
+    // of the remainder instance's own server ---
+    let mut mps_in_mig = Table::new(
+        "MIG + in-instance MPS — remainder-instance colocation (AlexNet x3)",
+        &["mechanism", "turnaround ms", "cv", "train s"],
+    );
+    for row in mig_mps_colocation(&mig_proto, MigProfile::G3, 0.5) {
+        mps_in_mig.row(&[
+            row.mechanism.clone(),
+            fmt_f(row.turnaround_ms, 2),
+            fmt_f(row.turnaround_cv, 2),
+            row.train_s.map(|s| fmt_f(s, 2)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    mps_in_mig.emit(&out);
     println!(
         "\nshape checks: streams/mps turnaround ratios should sit in the ~1.5-4x band for\n\
          resnet50/152 + vgg19, lower for alexnet/densenet; time-slicing training time should\n\

@@ -6,6 +6,7 @@
 use gpushare::coordinator::batcher::{BatchRunner, Batcher, BatcherConfig};
 use gpushare::coordinator::{serve, GovernorMode, ServeConfig};
 use gpushare::exp::cluster::cluster_sweep_events;
+use gpushare::exp::control::control_sweep_events;
 use gpushare::exp::{mig_mechanisms, run_parallel, Job, Protocol};
 use gpushare::gpu::DeviceConfig;
 use gpushare::runtime::{MockExecutor, ModelExecutor};
@@ -251,6 +252,26 @@ fn main() {
         |iters| {
             for _ in 0..iters {
                 black_box(cluster_sweep_events(&cluster_proto, DlModel::ResNet50));
+            }
+        },
+    );
+
+    // --- the control-plane sweep: the bursty governed-vs-static scenario
+    // (calibration + four governed + four static phases through the
+    // closed loop) — shared with bench_control so the perf gate covers
+    // the signal/policy/actuation path ---
+    let control_proto = Protocol {
+        requests: 8,
+        train_steps: 4,
+        ..Protocol::default()
+    };
+    let control_events = control_sweep_events(&control_proto);
+    sweep_bench.bench_items(
+        &format!("sweep: control governed vs static ({control_events} events)"),
+        Some(control_events),
+        |iters| {
+            for _ in 0..iters {
+                black_box(control_sweep_events(&control_proto));
             }
         },
     );

@@ -300,6 +300,24 @@ impl ClusterAccount {
         true
     }
 
+    /// Change device `d`'s capacity in place — the control-plane actuator's
+    /// primitive behind `Reslice` (a MIG swap changes the advertised DRAM
+    /// share) and `Scale` (powering a device down parks its capacity at
+    /// zero; powering it up restores it). Outstanding commitments are
+    /// preserved: free becomes `new_cap − used`, so the caller must ensure
+    /// the current usage fits the new capacity (panics otherwise — an
+    /// actuator that shrinks below its own commitments has a bug).
+    pub fn set_cap(&mut self, d: usize, new_cap: ClusterVec) {
+        let used = self.used(d);
+        assert!(
+            used.fits_within(&new_cap),
+            "set_cap shrinks device {d} below its commitments: used {used:?} > cap {new_cap:?}"
+        );
+        self.agg_cap = self.agg_cap.minus(&self.caps[d]).plus(&new_cap);
+        self.caps[d] = new_cap;
+        self.set_free(d, new_cap.minus(&used));
+    }
+
     /// Release a previously-committed `demand` from device `d`. Panics if
     /// the release would push free above capacity (an accounting bug).
     pub fn release(&mut self, d: usize, demand: &ClusterVec) {
@@ -414,6 +432,39 @@ mod tests {
         // preferred class full → falls back to the other device
         assert!(a.commit(0, &ClusterVec::new(0, 8, 0)));
         assert_eq!(a.least_loaded_preferring(&d, |i| i == 0), Some(1));
+    }
+
+    #[test]
+    fn set_cap_preserves_commitments_and_indexes() {
+        let mut a = ClusterAccount::new(&caps());
+        let d = ClusterVec::new(10 << 30, 2, 0);
+        assert!(a.commit(0, &d));
+        // power-down semantics on the empty device 1: capacity parks at
+        // zero, so the envelope below tracks device 0 alone
+        a.set_cap(1, ClusterVec::ZERO);
+        // grow device 0: used unchanged, free gains the delta
+        a.set_cap(0, ClusterVec::new(48 << 30, 16, 125_952));
+        assert_eq!(a.used(0), d);
+        assert_eq!(a.free(0), ClusterVec::new(38 << 30, 14, 125_952));
+        a.check_against(&[(0, d)]).unwrap();
+        // the max-free index follows: the envelope reflects the grown
+        // device, and any_fits stays exact in the negative direction
+        assert!(a.any_fits(&ClusterVec::new(38 << 30, 1, 0)));
+        assert!(!a.any_fits(&ClusterVec::new(39 << 30, 1, 0)));
+        // shrink to exactly the commitments: a full device
+        a.set_cap(0, d);
+        assert_eq!(a.free(0), ClusterVec::ZERO);
+        a.check_against(&[(0, d)]).unwrap();
+        assert!(!a.any_fits(&ClusterVec::new(1, 1, 0)));
+        assert_eq!(a.least_loaded(&ClusterVec::new(0, 1, 0)), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "below its commitments")]
+    fn set_cap_below_usage_panics() {
+        let mut a = ClusterAccount::new(&caps());
+        assert!(a.commit(0, &ClusterVec::new(10 << 30, 2, 0)));
+        a.set_cap(0, ClusterVec::new(1 << 30, 8, 0));
     }
 
     #[test]

@@ -104,7 +104,8 @@ impl DeviceSpec {
     pub fn capacity(&self) -> ClusterVec {
         let dev = self.model.config();
         let dram = match &self.mechanism {
-            Mechanism::Mig { profile } => partition::pair_layout(&dev, *profile)
+            Mechanism::Mig { profile } | Mechanism::MigMps { profile, .. } => {
+                partition::pair_layout(&dev, *profile)
                 .map(|insts| {
                     insts
                         .iter()
@@ -112,7 +113,8 @@ impl DeviceSpec {
                         .min()
                         .unwrap_or(dev.dram_bytes)
                 })
-                .unwrap_or(dev.dram_bytes),
+                .unwrap_or(dev.dram_bytes)
+            }
             _ => dev.dram_bytes,
         };
         ClusterVec::new(dram, self.slots(), dev.total_threads())
@@ -200,6 +202,16 @@ impl ClusterSpec {
 pub enum JobKind {
     Inference { model: DlModel, requests: u32 },
     Training { model: DlModel, steps: u32 },
+    /// A training job resumed from a checkpoint (the control plane's
+    /// migrate/restore path): of `total_steps`, `completed` already ran
+    /// before the checkpoint; the device runs the remainder, with the
+    /// kernel stream continuing the original sequence
+    /// ([`Source::training_resumed`]).
+    TrainingResumed {
+        model: DlModel,
+        total_steps: u32,
+        completed: u32,
+    },
 }
 
 /// A unit of work the coordinator routes to one device.
@@ -234,13 +246,33 @@ impl ClusterJob {
         }
     }
 
+    /// A checkpointed training job resuming on whichever device it is
+    /// placed (or pinned) to.
+    pub fn training_resumed(
+        name: &str,
+        model: DlModel,
+        total_steps: u32,
+        completed: u32,
+    ) -> Self {
+        Self {
+            name: name.to_string(),
+            kind: JobKind::TrainingResumed {
+                model,
+                total_steps,
+                completed,
+            },
+            priority: -2,
+            deadline_ms: None,
+        }
+    }
+
     fn profile_dram(&self) -> u64 {
         match &self.kind {
             JobKind::Inference { model, .. } => model
                 .infer_profile()
                 .map(|p| p.dram_footprint)
                 .unwrap_or(0),
-            JobKind::Training { model, .. } => model
+            JobKind::Training { model, .. } | JobKind::TrainingResumed { model, .. } => model
                 .train_profile()
                 .map(|p| p.dram_footprint)
                 .unwrap_or(0),
@@ -321,29 +353,82 @@ pub struct Placement {
 /// deterministic: identical inputs produce identical placements, which is
 /// what lets cluster runs fan out without changing a byte of output.
 pub fn place(spec: &ClusterSpec, jobs: &[ClusterJob], policy: PlacePolicy) -> Placement {
-    let caps: Vec<ClusterVec> = spec.devices.iter().map(|d| d.capacity()).collect();
+    let available = vec![true; spec.devices.len()];
+    let pinned = vec![None; jobs.len()];
+    place_pinned(spec, jobs, policy, &available, &pinned, &[])
+}
+
+/// [`place`] generalized for the control plane: `available` masks devices
+/// out of contention (powered-down or draining devices advertise zero
+/// capacity, so the O(1) no-fit exit accounts for them exactly),
+/// `pinned[i] = Some(d)` forces job `i` onto device `d` (a pin that no
+/// longer fits — or points at an unavailable device — is a rejection, not
+/// a silent re-route: the policy must migrate it explicitly), and
+/// `reserved` pre-commits `(device, demand)` pairs for long-running work
+/// resident on a device but *not* in this phase's job list (a pinned job
+/// between its phases), so placement cannot oversubscribe capacity that
+/// is already spoken for. Reservations on masked devices are moot (zero
+/// capacity admits nothing anyway) and are skipped. Equally pure and
+/// deterministic.
+pub fn place_pinned(
+    spec: &ClusterSpec,
+    jobs: &[ClusterJob],
+    policy: PlacePolicy,
+    available: &[bool],
+    pinned: &[Option<usize>],
+    reserved: &[(usize, ClusterVec)],
+) -> Placement {
+    assert_eq!(available.len(), spec.devices.len());
+    assert_eq!(pinned.len(), jobs.len());
+    let caps: Vec<ClusterVec> = spec
+        .devices
+        .iter()
+        .enumerate()
+        .map(|(d, s)| if available[d] { s.capacity() } else { ClusterVec::ZERO })
+        .collect();
     let mut account = ClusterAccount::new(&caps);
+    for &(d, demand) in reserved {
+        // A reservation on a masked device cannot commit (its capacity is
+        // zero) and does not need to — nothing else can be placed there
+        // either. On an *available* device the commit must succeed: the
+        // caller (FleetState) only records pins its own account admitted,
+        // so a failure here means the reservation list and the device
+        // capacities disagree — an actuator bug, not a placement outcome.
+        let ok = account.commit(d, &demand);
+        debug_assert!(
+            ok || !available[d],
+            "reservation {demand:?} does not fit available device {d}"
+        );
+    }
     let mut stats = PlacementStats {
         per_device: vec![0; spec.devices.len()],
         ..Default::default()
     };
     let mut assignment = Vec::with_capacity(jobs.len());
     let mut rr_next = 0usize;
-    for job in jobs {
+    for (ji, job) in jobs.iter().enumerate() {
         stats.admitted += 1;
         let demand = job.demand();
         // Every pick goes through the ClusterAccount policy primitives
         // (shared with the serving router), each carrying the O(1) exact
         // "no device fits" exit.
-        let choice = match policy {
-            PlacePolicy::RoundRobin => account.round_robin(&demand, &mut rr_next),
-            PlacePolicy::LeastLoaded => account.least_loaded(&demand),
-            PlacePolicy::SloAware { cutoff_ms } => {
-                let tight =
-                    job.is_inference() && job.deadline_ms.is_some_and(|d| d <= cutoff_ms);
-                account.least_loaded_preferring(&demand, |d| {
-                    spec.devices[d].mechanism.memory_isolation() == tight
-                })
+        let choice = if let Some(d) = pinned[ji] {
+            if account.fits(d, &demand) {
+                Some(d)
+            } else {
+                None
+            }
+        } else {
+            match policy {
+                PlacePolicy::RoundRobin => account.round_robin(&demand, &mut rr_next),
+                PlacePolicy::LeastLoaded => account.least_loaded(&demand),
+                PlacePolicy::SloAware { cutoff_ms } => {
+                    let tight =
+                        job.is_inference() && job.deadline_ms.is_some_and(|d| d <= cutoff_ms);
+                    account.least_loaded_preferring(&demand, |d| {
+                        spec.devices[d].mechanism.memory_isolation() == tight
+                    })
+                }
             }
         };
         match choice {
@@ -505,6 +590,24 @@ impl Cluster {
         cfg: &ClusterRunConfig,
     ) -> ClusterRunReport {
         let placement = place(&self.spec, jobs, policy);
+        self.run_placement(jobs, &placement.assignment, placement.stats, policy.name(), cfg)
+    }
+
+    /// Run an already-decided placement — the entry point the control loop
+    /// uses after [`place_pinned`] (and after phase-boundary actions have
+    /// moved pins or re-sliced devices). `assignment[i] = None` means job
+    /// `i` was rejected and does not run. Determinism is inherited: the
+    /// assignment is data, every device runtime is seed-deterministic, and
+    /// fan-out cannot reorder the lane reports.
+    pub fn run_placement(
+        &self,
+        jobs: &[ClusterJob],
+        assignment: &[Option<usize>],
+        stats: PlacementStats,
+        policy_name: &str,
+        cfg: &ClusterRunConfig,
+    ) -> ClusterRunReport {
+        assert_eq!(assignment.len(), jobs.len());
         // Per-device context definitions, in job order within each device
         // (the engine pins ctx 0 to the latency instance under MIG, so the
         // scenarios list inference jobs first).
@@ -512,7 +615,7 @@ impl Cluster {
         let mut defs: Vec<Vec<CtxDef>> = (0..n).map(|_| Vec::new()).collect();
         let mut lane_jobs: Vec<Vec<String>> = (0..n).map(|_| Vec::new()).collect();
         for (ji, job) in jobs.iter().enumerate() {
-            let Some(d) = placement.assignment[ji] else {
+            let Some(d) = assignment[ji] else {
                 continue;
             };
             let dev = self.spec.devices[d].model.config();
@@ -528,6 +631,17 @@ impl Cluster {
                     model.train_profile().expect("training profile"),
                     dev,
                     *steps,
+                    Self::job_rng(cfg, ji),
+                ),
+                JobKind::TrainingResumed {
+                    model,
+                    total_steps,
+                    completed,
+                } => Source::training_resumed(
+                    model.train_profile().expect("training profile"),
+                    dev,
+                    *total_steps,
+                    *completed,
                     Self::job_rng(cfg, ji),
                 ),
             };
@@ -575,9 +689,9 @@ impl Cluster {
             .collect();
         ClusterRunReport {
             spec: self.spec.name(),
-            policy: policy.name().to_string(),
+            policy: policy_name.to_string(),
             lanes,
-            stats: placement.stats,
+            stats,
         }
     }
 }
@@ -706,6 +820,120 @@ mod tests {
         // non-MIG devices still advertise the whole device
         let spec = ClusterSpec::parse("a100:mps").unwrap();
         assert_eq!(spec.devices[0].capacity().dram, dev.dram_bytes);
+    }
+
+    #[test]
+    fn masked_and_pinned_placement() {
+        let spec = ClusterSpec::parse("2x3090:mps").unwrap();
+        let jobs = jobs_pair();
+        // device 0 unavailable: everything lands on device 1
+        let p = place_pinned(
+            &spec,
+            &jobs,
+            PlacePolicy::LeastLoaded,
+            &[false, true],
+            &[None, None],
+            &[],
+        );
+        assert!(p.stats.conserved());
+        assert_eq!(p.assignment, vec![Some(1), Some(1)]);
+        // a pin overrides the policy…
+        let p = place_pinned(
+            &spec,
+            &jobs,
+            PlacePolicy::LeastLoaded,
+            &[true, true],
+            &[Some(0), None],
+            &[],
+        );
+        assert_eq!(p.assignment[0], Some(0));
+        // …and a pin onto an unavailable device is a rejection, not a
+        // silent re-route
+        let p = place_pinned(
+            &spec,
+            &jobs,
+            PlacePolicy::LeastLoaded,
+            &[false, true],
+            &[Some(0), None],
+            &[],
+        );
+        assert!(p.stats.conserved());
+        assert_eq!(p.assignment[0], None);
+        assert_eq!(p.stats.rejected, 1);
+    }
+
+    #[test]
+    fn reservations_block_capacity_for_absent_pinned_jobs() {
+        // A 17 GB trainer pinned to device 0 but absent from this phase's
+        // job list still occupies its DRAM: a second 17 GB trainer must
+        // land on device 1, and a third is rejected — without the
+        // reservation the fresh account would oversubscribe device 0.
+        let spec = ClusterSpec::parse("2x3090:mps").unwrap();
+        let jobs = vec![
+            ClusterJob::training("t1", DlModel::ResNet50, 1),
+            ClusterJob::training("t2", DlModel::ResNet50, 1),
+        ];
+        let resident = ClusterJob::training("pinned", DlModel::ResNet50, 1).demand();
+        let p = place_pinned(
+            &spec,
+            &jobs,
+            PlacePolicy::LeastLoaded,
+            &[true, true],
+            &[None, None],
+            &[(0, resident)],
+        );
+        assert!(p.stats.conserved());
+        assert_eq!(p.assignment, vec![Some(1), None]);
+        assert_eq!(p.stats.rejected, 1);
+        // a reservation on a masked device is moot: zero capacity admits
+        // nothing there anyway, and the commit is skipped without panicking
+        let p = place_pinned(
+            &spec,
+            &jobs,
+            PlacePolicy::LeastLoaded,
+            &[false, true],
+            &[None, None],
+            &[(0, resident)],
+        );
+        assert_eq!(p.assignment, vec![Some(1), None]);
+    }
+
+    #[test]
+    fn run_placement_executes_resumed_jobs() {
+        // The resumed-training kind runs its remaining steps through a
+        // normal lane, and an explicit assignment bypasses the policy.
+        let cluster = Cluster::new(ClusterSpec::parse("2x3090:mps").unwrap());
+        let jobs = vec![ClusterJob::training_resumed("t0", DlModel::AlexNet, 3, 1)];
+        let stats = PlacementStats {
+            admitted: 1,
+            placed: 1,
+            rejected: 0,
+            per_device: vec![0, 1],
+        };
+        let rep = cluster.run_placement(
+            &jobs,
+            &[Some(1)],
+            stats,
+            "pinned",
+            &ClusterRunConfig::default(),
+        );
+        assert_eq!(rep.policy, "pinned");
+        assert_eq!(rep.lane_of("t0"), Some(1));
+        assert!(rep.lanes[1].report.train_done.is_some());
+        assert!(rep.lanes[0].report.train_done.is_none());
+    }
+
+    #[test]
+    fn mig_mps_capacity_matches_mig() {
+        // The nested mechanism advertises the same conservative
+        // smallest-share DRAM as its plain-MIG layout.
+        let a = ClusterSpec::parse("a100:mig-3g").unwrap();
+        let b = ClusterSpec::parse("a100:mig-3g+mps").unwrap();
+        assert_eq!(
+            a.devices[0].capacity().dram,
+            b.devices[0].capacity().dram
+        );
+        assert_eq!(b.name(), "a100:mig-3g+mps");
     }
 
     #[test]

@@ -1,0 +1,499 @@
+//! Actuation: the fleet state a governed run mutates, and the application
+//! of typed [`Action`]s at phase boundaries with honest costs.
+//!
+//! [`FleetState`] owns the pieces an action can touch — the device specs
+//! (a `Reslice` swaps a MIG profile in place), the powered mask (`Scale`
+//! parks capacity at zero / restores it), the pinned long-running jobs
+//! (`Migrate` moves a pin), and a persistent [`ClusterAccount`] mirroring
+//! the pins so every mutation is conservation-checked: after any action,
+//! `check()` recomputes the account from scratch and the property tests
+//! assert equality (the §6a differential contract, at the fleet layer).
+//!
+//! Costs are charged from the same models the rest of the crate uses: a
+//! re-slice pays the lane's measured drain residual plus per-instance
+//! `CreateGpuInstance` latency (`ReconfigCost` pricing via
+//! `gpu::partition`); a migration pays drain plus the checkpoint transfer
+//! over both devices' host links; a power-up pays a flat provision
+//! latency. Actions at one boundary overlap (the fleet reconfigures in
+//! parallel), so the boundary's gap is the *max* of the applied costs, not
+//! the sum — `control::run_governed` accounts it that way.
+
+use super::policy::{Action, ScaleChange};
+use crate::cluster::account::{ClusterAccount, ClusterVec};
+use crate::cluster::{ClusterRunReport, ClusterSpec};
+use crate::gpu::partition;
+use crate::sched::{DeviceRt, Mechanism};
+use crate::sim::{SimTime, MS, US};
+use crate::util::json::escape as esc;
+
+/// Flat provision latency a `PowerUp` charges (instance bring-up, driver
+/// and runtime start — hundreds of milliseconds, like MIG creation).
+pub const PROVISION_NS: SimTime = 500 * MS;
+
+/// Per-leg host-link latency of a checkpoint transfer (matches the
+/// engine's default `transfer_latency_ns`).
+pub const CHECKPOINT_LATENCY_NS: SimTime = 10 * US;
+
+/// Checkpoint bytes for a job holding `dram_bytes` resident: weights +
+/// optimizer state travel; activations and workspace (which dominate the
+/// resident footprint at training batch sizes) are recomputed, not moved.
+pub fn checkpoint_bytes(dram_bytes: u64) -> u64 {
+    dram_bytes / 16
+}
+
+/// A long-running job pinned to a device across phases (the unit a
+/// `Migrate` moves). Its demand stays committed in the fleet account.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Pin {
+    pub job: String,
+    pub device: usize,
+    pub demand: ClusterVec,
+}
+
+/// Everything a phase-boundary action can mutate. `PartialEq` backs the
+/// property-test contract that a *rejected* action changes nothing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetState {
+    pub spec: ClusterSpec,
+    /// Powered devices advertise capacity; dark ones park at zero.
+    pub powered: Vec<bool>,
+    /// Draining devices (failure warning / maintenance): still powered,
+    /// but masked from placement — the migration policy's trigger.
+    pub draining: Vec<bool>,
+    /// Jobs pinned across phases, demands committed in `account`.
+    pub pins: Vec<Pin>,
+    /// The persistent fleet account (pins only; per-phase jobs use the
+    /// fresh per-placement account).
+    pub account: ClusterAccount,
+}
+
+/// The outcome of applying one action.
+#[derive(Clone, Debug)]
+pub struct ActionRecord {
+    pub action: Action,
+    /// False when the actuator rejected the action (with the reason in
+    /// `note`) — a rejected action changes nothing and charges nothing.
+    pub applied: bool,
+    pub cost_ns: SimTime,
+    pub note: String,
+}
+
+impl ActionRecord {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"action\":\"{}\",\"applied\":{},\"cost_ns\":{},\"note\":\"{}\"}}",
+            esc(&self.action.describe()),
+            self.applied,
+            self.cost_ns,
+            esc(&self.note)
+        )
+    }
+}
+
+impl FleetState {
+    /// A fully-powered fleet.
+    pub fn new(spec: ClusterSpec) -> FleetState {
+        let n = spec.devices.len();
+        Self::with_powered(spec, vec![true; n])
+    }
+
+    /// A fleet with some devices declared but dark (the autoscaler's
+    /// headroom).
+    pub fn with_powered(spec: ClusterSpec, powered: Vec<bool>) -> FleetState {
+        assert_eq!(powered.len(), spec.devices.len());
+        let caps: Vec<ClusterVec> = spec
+            .devices
+            .iter()
+            .zip(&powered)
+            .map(|(d, &p)| if p { d.capacity() } else { ClusterVec::ZERO })
+            .collect();
+        let n = spec.devices.len();
+        FleetState {
+            spec,
+            powered,
+            draining: vec![false; n],
+            pins: Vec::new(),
+            account: ClusterAccount::new(&caps),
+        }
+    }
+
+    /// Placement mask for the next phase: powered and not draining.
+    pub fn available(&self) -> Vec<bool> {
+        self.powered
+            .iter()
+            .zip(&self.draining)
+            .map(|(&p, &d)| p && !d)
+            .collect()
+    }
+
+    /// Per-job pin lookup for `cluster::place_pinned`.
+    pub fn pins_for(&self, jobs: &[crate::cluster::ClusterJob]) -> Vec<Option<usize>> {
+        jobs.iter()
+            .map(|j| self.pins.iter().find(|p| p.job == j.name).map(|p| p.device))
+            .collect()
+    }
+
+    /// Reservations for pinned jobs *not* in this phase's job list: their
+    /// demand stays resident on their device between phases, so placement
+    /// must not hand that capacity to anyone else
+    /// (`cluster::place_pinned`'s `reserved` input).
+    pub fn carried_reservations(
+        &self,
+        jobs: &[crate::cluster::ClusterJob],
+    ) -> Vec<(usize, ClusterVec)> {
+        self.pins
+            .iter()
+            .filter(|p| !jobs.iter().any(|j| j.name == p.job))
+            .map(|p| (p.device, p.demand))
+            .collect()
+    }
+
+    /// Pin a job to a device, committing its demand in the fleet account.
+    pub fn pin(&mut self, job: &str, device: usize, demand: ClusterVec) {
+        assert!(
+            self.account.commit(device, &demand),
+            "pin '{job}' does not fit device {device}"
+        );
+        self.pins.push(Pin {
+            job: job.to_string(),
+            device,
+            demand,
+        });
+    }
+
+    /// Differential check: the fleet account must equal a from-scratch
+    /// recompute from the pin list (the property tests drive this after
+    /// every random action).
+    pub fn check(&self) -> Result<(), String> {
+        let placements: Vec<(usize, ClusterVec)> =
+            self.pins.iter().map(|p| (p.device, p.demand)).collect();
+        self.account.check_against(&placements)
+    }
+
+    /// Total jobs pinned (conservation oracle: actions never create or
+    /// destroy pinned jobs).
+    pub fn pinned_jobs(&self) -> usize {
+        self.pins.len()
+    }
+
+    fn reject(action: &Action, note: String) -> ActionRecord {
+        ActionRecord {
+            action: action.clone(),
+            applied: false,
+            cost_ns: 0,
+            note,
+        }
+    }
+
+    /// Apply one action, mutating the fleet and returning its record.
+    /// `last` is the report of the phase just completed (drain costs are
+    /// measured from the acting device's own lane). Rejected actions leave
+    /// the fleet byte-identical.
+    pub fn apply(&mut self, action: &Action, last: Option<&ClusterRunReport>) -> ActionRecord {
+        match action {
+            Action::Reslice { device, from, to } => self.apply_reslice(action, *device, *from, *to, last),
+            Action::Scale { change } => self.apply_scale(action, *change),
+            Action::Migrate { job, src, dst } => self.apply_migrate(action, job, *src, *dst, last),
+        }
+    }
+
+    fn lane_residual_ns(last: Option<&ClusterRunReport>, device: usize) -> SimTime {
+        last.and_then(|r| r.lanes.get(device))
+            .map(|l| DeviceRt::drain_ns(&l.report))
+            .unwrap_or(crate::metrics::RunReport::FALLBACK_RESIDUAL_NS)
+    }
+
+    fn apply_reslice(
+        &mut self,
+        action: &Action,
+        device: usize,
+        from: partition::MigProfile,
+        to: partition::MigProfile,
+        last: Option<&ClusterRunReport>,
+    ) -> ActionRecord {
+        if device >= self.spec.devices.len() || !self.powered[device] {
+            return Self::reject(action, format!("device {device} not powered"));
+        }
+        let dev_cfg = self.spec.devices[device].model.config();
+        let new_mech = match &self.spec.devices[device].mechanism {
+            Mechanism::Mig { profile } if *profile == from => Mechanism::Mig { profile: to },
+            Mechanism::MigMps { profile, thread_limit } if *profile == from => {
+                Mechanism::MigMps {
+                    profile: to,
+                    thread_limit: *thread_limit,
+                }
+            }
+            other => {
+                return Self::reject(
+                    action,
+                    format!("device runs {}, not {}", other.name(), from.name()),
+                );
+            }
+        };
+        let plan = match partition::reslice_plan(&dev_cfg, from, to) {
+            Ok(p) => p,
+            Err(e) => return Self::reject(action, e.to_string()),
+        };
+        let mut next_spec = self.spec.devices[device].clone();
+        next_spec.mechanism = new_mech;
+        let new_cap = next_spec.capacity();
+        if !self.account.used(device).fits_within(&new_cap) {
+            return Self::reject(
+                action,
+                format!("pinned jobs exceed the {}-layout capacity", to.name()),
+            );
+        }
+        let drain_ns = Self::lane_residual_ns(last, device);
+        let cost_ns = drain_ns.saturating_add(plan.create_ns());
+        self.spec.devices[device] = next_spec;
+        self.account.set_cap(device, new_cap);
+        ActionRecord {
+            action: action.clone(),
+            applied: true,
+            cost_ns,
+            note: format!(
+                "drain {:.1} ms + create {:.1} ms",
+                drain_ns as f64 / 1e6,
+                plan.create_ns() as f64 / 1e6
+            ),
+        }
+    }
+
+    fn apply_scale(&mut self, action: &Action, change: ScaleChange) -> ActionRecord {
+        match change {
+            ScaleChange::PowerUp { device } => {
+                if device >= self.spec.devices.len() {
+                    return Self::reject(action, format!("no device {device}"));
+                }
+                if self.powered[device] {
+                    return Self::reject(action, "already powered".to_string());
+                }
+                self.powered[device] = true;
+                self.account
+                    .set_cap(device, self.spec.devices[device].capacity());
+                ActionRecord {
+                    action: action.clone(),
+                    applied: true,
+                    cost_ns: PROVISION_NS,
+                    note: "provisioned".to_string(),
+                }
+            }
+            ScaleChange::PowerDown { device } => {
+                if device >= self.spec.devices.len() || !self.powered[device] {
+                    return Self::reject(action, format!("device {device} not powered"));
+                }
+                if self.pins.iter().any(|p| p.device == device) {
+                    return Self::reject(action, "pinned jobs still resident".to_string());
+                }
+                self.powered[device] = false;
+                self.account.set_cap(device, ClusterVec::ZERO);
+                ActionRecord {
+                    action: action.clone(),
+                    applied: true,
+                    cost_ns: 0,
+                    note: "decommissioned".to_string(),
+                }
+            }
+        }
+    }
+
+    fn apply_migrate(
+        &mut self,
+        action: &Action,
+        job: &str,
+        src: usize,
+        dst: usize,
+        last: Option<&ClusterRunReport>,
+    ) -> ActionRecord {
+        let Some(pi) = self.pins.iter().position(|p| p.job == job && p.device == src) else {
+            return Self::reject(action, format!("'{job}' is not pinned to device {src}"));
+        };
+        if dst == src {
+            return Self::reject(action, "migration to the same device is a no-op".to_string());
+        }
+        if dst >= self.spec.devices.len() || !self.powered[dst] || self.draining[dst] {
+            return Self::reject(action, format!("device {dst} cannot receive"));
+        }
+        let demand = self.pins[pi].demand;
+        if !self.account.fits(dst, &demand) {
+            return Self::reject(action, format!("'{job}' does not fit device {dst}"));
+        }
+        // Checkpoint off the draining device's link, restore over the
+        // destination's: two legs at each device's PCIe bandwidth.
+        let bytes = checkpoint_bytes(demand.dram);
+        let leg = |d: usize| -> SimTime {
+            let bw = self.spec.devices[d].model.config().pcie_bw_bytes_per_s;
+            CHECKPOINT_LATENCY_NS + (bytes as f64 / bw as f64 * 1e9).ceil() as SimTime
+        };
+        let drain_ns = Self::lane_residual_ns(last, src);
+        let transfer_ns = leg(src) + leg(dst);
+        self.account.release(src, &demand);
+        let ok = self.account.commit(dst, &demand);
+        debug_assert!(ok, "fits() checked above");
+        self.pins[pi].device = dst;
+        ActionRecord {
+            action: action.clone(),
+            applied: true,
+            cost_ns: drain_ns.saturating_add(transfer_ns),
+            note: format!(
+                "drain {:.1} ms + {} MB checkpoint {:.1} ms",
+                drain_ns as f64 / 1e6,
+                bytes >> 20,
+                transfer_ns as f64 / 1e6
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::partition::MigProfile;
+
+    fn fleet(spec: &str) -> FleetState {
+        FleetState::new(ClusterSpec::parse(spec).unwrap())
+    }
+
+    #[test]
+    fn reslice_swaps_profile_and_capacity() {
+        let mut f = fleet("a100:mig-3g");
+        let before_cap = f.account.cap(0);
+        let rec = f.apply(
+            &Action::Reslice {
+                device: 0,
+                from: MigProfile::G3,
+                to: MigProfile::G4,
+            },
+            None,
+        );
+        assert!(rec.applied, "{rec:?}");
+        assert_eq!(f.spec.devices[0].mechanism.name(), "mig-4g");
+        // 3g and 4g splits both advertise the half-memory smallest share
+        assert_eq!(f.account.cap(0), before_cap);
+        // cost: fallback drain (no report) + 4g+3g creation
+        assert_eq!(
+            rec.cost_ns,
+            crate::metrics::RunReport::FALLBACK_RESIDUAL_NS
+                + partition::creation_latency_ns(4)
+                + partition::creation_latency_ns(3)
+        );
+        f.check().unwrap();
+        // a stale action (wrong `from`) is rejected unchanged
+        let rec = f.apply(
+            &Action::Reslice {
+                device: 0,
+                from: MigProfile::G3,
+                to: MigProfile::G2,
+            },
+            None,
+        );
+        assert!(!rec.applied);
+        assert_eq!(f.spec.devices[0].mechanism.name(), "mig-4g");
+        f.check().unwrap();
+    }
+
+    #[test]
+    fn power_cycle_tracks_account_capacity() {
+        let mut f = FleetState::with_powered(
+            ClusterSpec::parse("2x3090:mps").unwrap(),
+            vec![true, false],
+        );
+        assert_eq!(f.available(), vec![true, false]);
+        assert_eq!(f.account.cap(1), ClusterVec::ZERO);
+        let up = f.apply(
+            &Action::Scale {
+                change: ScaleChange::PowerUp { device: 1 },
+            },
+            None,
+        );
+        assert!(up.applied);
+        assert_eq!(up.cost_ns, PROVISION_NS);
+        assert_eq!(f.account.cap(1), f.spec.devices[1].capacity());
+        f.check().unwrap();
+        // powering up twice is rejected
+        assert!(
+            !f.apply(
+                &Action::Scale {
+                    change: ScaleChange::PowerUp { device: 1 }
+                },
+                None
+            )
+            .applied
+        );
+        let down = f.apply(
+            &Action::Scale {
+                change: ScaleChange::PowerDown { device: 1 },
+            },
+            None,
+        );
+        assert!(down.applied);
+        assert_eq!(down.cost_ns, 0);
+        assert_eq!(f.available(), vec![true, false]);
+        f.check().unwrap();
+    }
+
+    #[test]
+    fn migrate_moves_pin_and_charges_transfer() {
+        let mut f = fleet("2xa100:mps");
+        let demand = ClusterVec::new(16 << 30, 1, 0);
+        f.pin("train0", 0, demand);
+        f.check().unwrap();
+        f.draining[0] = true;
+        let rec = f.apply(
+            &Action::Migrate {
+                job: "train0".into(),
+                src: 0,
+                dst: 1,
+            },
+            None,
+        );
+        assert!(rec.applied, "{rec:?}");
+        assert_eq!(f.pins[0].device, 1);
+        assert_eq!(f.account.used(0), ClusterVec::ZERO);
+        assert_eq!(f.account.used(1), demand);
+        f.check().unwrap();
+        assert_eq!(f.pinned_jobs(), 1);
+        // cost: fallback drain + two transfer legs of the 1 GB checkpoint
+        let bytes = checkpoint_bytes(16 << 30);
+        assert_eq!(bytes, 1 << 30);
+        let leg = CHECKPOINT_LATENCY_NS
+            + (bytes as f64 / 25_000_000_000.0 * 1e9).ceil() as SimTime;
+        assert_eq!(
+            rec.cost_ns,
+            crate::metrics::RunReport::FALLBACK_RESIDUAL_NS + 2 * leg
+        );
+        // a second migrate of the same pin from the old device is stale
+        assert!(
+            !f.apply(
+                &Action::Migrate {
+                    job: "train0".into(),
+                    src: 0,
+                    dst: 1
+                },
+                None
+            )
+            .applied
+        );
+        // powering down the now-empty source works; the destination with a
+        // pin refuses
+        assert!(
+            f.apply(
+                &Action::Scale {
+                    change: ScaleChange::PowerDown { device: 0 }
+                },
+                None
+            )
+            .applied
+        );
+        assert!(
+            !f.apply(
+                &Action::Scale {
+                    change: ScaleChange::PowerDown { device: 1 }
+                },
+                None
+            )
+            .applied
+        );
+        f.check().unwrap();
+    }
+}

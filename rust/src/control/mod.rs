@@ -1,0 +1,348 @@
+//! The closed-loop control plane (DESIGN.md §7b): unified telemetry
+//! signals + a policy engine driving MIG re-slicing, cluster autoscaling,
+//! and mid-run migration — the feedback loop the paper's static mechanisms
+//! lack (its central finding) and that Tally (arXiv 2410.07381) and the
+//! GPU-datacenter scheduling survey (arXiv 2205.11913) argue for.
+//!
+//! Layer map:
+//! * [`signal`] — the [`signal::SignalFrame`] telemetry catalog, extracted
+//!   from `metrics`/`cluster`/`coordinator` reports;
+//! * [`policy`] — typed [`policy::Action`]s and the [`policy::Policy`]
+//!   trait with built-in governors (gain-gated re-slice, rejection
+//!   autoscale, drain-migrate) plus the narrower [`policy::GapPolicy`]
+//!   that `exp::mig` consults;
+//! * [`actuate`] — [`actuate::FleetState`] and honest-cost action
+//!   application, conservation-checked against a persistent
+//!   `ClusterAccount`;
+//! * [`run_governed`] (here) — the loop: run a phase, read its frame,
+//!   decide, act, charge the boundary gap, repeat.
+//!
+//! **Determinism contract.** Every step is a pure function of
+//! (fleet spec, phases, seed): phases run through `Cluster::run_placement`
+//! (itself byte-identical under the experiment fan-out), frames are pure
+//! functions of reports, policies observe only frames + fleet snapshots,
+//! and actions mutate the fleet deterministically. The determinism guard
+//! asserts governed `ControlReport::to_json` bytes are unchanged by
+//! `exp::run_parallel` fan-out on/off — PR 3's guard, extended through the
+//! whole loop.
+
+pub mod actuate;
+pub mod policy;
+pub mod signal;
+
+pub use actuate::{ActionRecord, FleetState};
+pub use policy::{Action, GapDecision, GapPolicy, Policy, PolicyCtx};
+pub use signal::{LaneSignal, SignalFrame};
+
+use crate::cluster::{place_pinned, Cluster, ClusterJob, ClusterRunConfig, PlacePolicy};
+use crate::sim::{ns_to_ms, SimTime};
+use crate::util::stats::Summary;
+use crate::workload::ArrivalPattern;
+
+/// A platform event delivered at a phase boundary (after the phase's
+/// report, before the policy decides) — the operator/failure-detector
+/// inputs a policy reacts to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FleetEvent {
+    /// A failure warning: the device must quiesce — masked from placement
+    /// from the next phase on, pinned work should migrate off.
+    DrainDevice(usize),
+}
+
+/// One phase of a governed scenario: a job list, an optional arrival-
+/// pattern override (bursty phases flip to Poisson), and the platform
+/// events arriving at this phase's end.
+#[derive(Clone, Debug)]
+pub struct PhaseSpec {
+    pub label: String,
+    pub jobs: Vec<ClusterJob>,
+    /// `None` inherits the run config's pattern.
+    pub pattern: Option<ArrivalPattern>,
+    pub end_events: Vec<FleetEvent>,
+}
+
+impl PhaseSpec {
+    pub fn new(label: &str, jobs: Vec<ClusterJob>) -> PhaseSpec {
+        PhaseSpec {
+            label: label.to_string(),
+            jobs,
+            pattern: None,
+            end_events: Vec::new(),
+        }
+    }
+
+    pub fn with_pattern(mut self, pattern: ArrivalPattern) -> PhaseSpec {
+        self.pattern = Some(pattern);
+        self
+    }
+
+    pub fn with_end_events(mut self, events: Vec<FleetEvent>) -> PhaseSpec {
+        self.end_events = events;
+        self
+    }
+}
+
+/// Knobs of a governed run.
+#[derive(Clone, Debug)]
+pub struct ControlConfig {
+    pub run: ClusterRunConfig,
+    pub place: PlacePolicy,
+}
+
+/// One phase's outcome in a governed run.
+#[derive(Clone, Debug)]
+pub struct PhaseOutcome {
+    pub label: String,
+    pub report: crate::cluster::ClusterRunReport,
+    pub frame: SignalFrame,
+    pub actions: Vec<ActionRecord>,
+    /// The boundary gap charged after this phase (max of applied action
+    /// costs; actions at one boundary overlap).
+    pub gap_ns: SimTime,
+}
+
+/// Everything a governed run produces.
+#[derive(Clone, Debug)]
+pub struct ControlReport {
+    pub policy: String,
+    pub phases: Vec<PhaseOutcome>,
+    /// Σ phase makespans + Σ boundary gaps.
+    pub total_span_ns: SimTime,
+}
+
+impl ControlReport {
+    pub fn total_span_s(&self) -> f64 {
+        self.total_span_ns as f64 / 1e9
+    }
+
+    /// Turnaround summary pooled over every phase's completed requests.
+    pub fn turnaround_summary(&self) -> Summary {
+        let ms: Vec<f64> = self
+            .phases
+            .iter()
+            .flat_map(|p| p.report.lanes.iter())
+            .flat_map(|l| l.report.requests.iter())
+            .map(|r| ns_to_ms(r.turnaround_ns()))
+            .collect();
+        Summary::of(&ms)
+    }
+
+    /// Placement rejections summed over every phase — the utilization /
+    /// service-completeness headline the autoscaler moves.
+    pub fn total_rejected(&self) -> u64 {
+        self.phases.iter().map(|p| p.frame.rejected).sum()
+    }
+
+    /// Actions the actuator applied across the run.
+    pub fn actions_applied(&self) -> usize {
+        self.phases
+            .iter()
+            .flat_map(|p| p.actions.iter())
+            .filter(|a| a.applied)
+            .count()
+    }
+
+    /// Simulated events across every phase and lane (perf accounting).
+    pub fn total_events(&self) -> u64 {
+        self.phases
+            .iter()
+            .flat_map(|p| p.report.lanes.iter())
+            .map(|l| l.report.events)
+            .sum()
+    }
+
+    /// Fixed-field-order JSON over the whole loop — phases, embedded
+    /// cluster reports, frames, and action records — the governed
+    /// determinism oracle.
+    pub fn to_json(&self) -> String {
+        use crate::util::json::escape as esc;
+        use std::fmt::Write as _;
+        let mut j = String::new();
+        let _ = write!(
+            j,
+            "{{\"policy\":\"{}\",\"total_span_ns\":{},\"phases\":[",
+            esc(&self.policy),
+            self.total_span_ns
+        );
+        for (i, p) in self.phases.iter().enumerate() {
+            let _ = write!(
+                j,
+                "{}{{\"label\":\"{}\",\"gap_ns\":{},\"report\":{},\"frame\":{},\"actions\":[",
+                if i > 0 { "," } else { "" },
+                esc(&p.label),
+                p.gap_ns,
+                p.report.to_json(),
+                p.frame.to_json()
+            );
+            for (k, a) in p.actions.iter().enumerate() {
+                if k > 0 {
+                    j.push(',');
+                }
+                j.push_str(&a.to_json());
+            }
+            j.push_str("]}");
+        }
+        j.push_str("]}");
+        j
+    }
+}
+
+/// Per-phase seed derivation: decorrelate phases from each other while
+/// staying a pure function of (base seed, phase index).
+fn phase_seed(base: u64, phase: usize) -> u64 {
+    base ^ (phase as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Run a phased scenario under a control policy: each phase is placed over
+/// the currently-available fleet (honoring pins), simulated to completion,
+/// summarized into a [`SignalFrame`], and the policy's actions are applied
+/// at the boundary — charging the gap before the next phase starts. The
+/// same driver with [`policy::StaticPolicy`] is the ungoverned baseline,
+/// so governed-vs-static comparisons differ *only* in the loop being
+/// closed.
+pub fn run_governed(
+    fleet: &mut FleetState,
+    phases: &[PhaseSpec],
+    policy: &mut dyn Policy,
+    cfg: &ControlConfig,
+) -> ControlReport {
+    let mut outcomes: Vec<PhaseOutcome> = Vec::with_capacity(phases.len());
+    let mut total_span_ns: SimTime = 0;
+    for (i, phase) in phases.iter().enumerate() {
+        let available = fleet.available();
+        let pins = fleet.pins_for(&phase.jobs);
+        let carried = fleet.carried_reservations(&phase.jobs);
+        let placement =
+            place_pinned(&fleet.spec, &phase.jobs, cfg.place, &available, &pins, &carried);
+        let mut run_cfg = cfg.run.clone();
+        run_cfg.seed = phase_seed(cfg.run.seed, i);
+        if let Some(pattern) = phase.pattern {
+            run_cfg.pattern = pattern;
+        }
+        let report = Cluster::new(fleet.spec.clone()).run_placement(
+            &phase.jobs,
+            &placement.assignment,
+            placement.stats,
+            cfg.place.name(),
+            &run_cfg,
+        );
+        for ev in &phase.end_events {
+            match *ev {
+                FleetEvent::DrainDevice(d) => fleet.draining[d] = true,
+            }
+        }
+        let deadlines = SignalFrame::lane_deadlines(&report, &phase.jobs);
+        let frame = SignalFrame::from_cluster(i as u64, &report, &deadlines);
+        let actions = {
+            let ctx = PolicyCtx {
+                fleet,
+                phase: i,
+                phases_total: phases.len(),
+            };
+            policy.decide(&frame, &ctx)
+        };
+        let records: Vec<ActionRecord> = actions
+            .iter()
+            .map(|a| fleet.apply(a, Some(&report)))
+            .collect();
+        debug_assert!(fleet.check().is_ok());
+        // Actions at one boundary overlap; no boundary after the last phase.
+        let gap_ns = if i + 1 < phases.len() {
+            records
+                .iter()
+                .filter(|r| r.applied)
+                .map(|r| r.cost_ns)
+                .max()
+                .unwrap_or(0)
+        } else {
+            0
+        };
+        total_span_ns = total_span_ns
+            .saturating_add(frame.makespan_ns)
+            .saturating_add(gap_ns);
+        outcomes.push(PhaseOutcome {
+            label: phase.label.clone(),
+            report,
+            frame,
+            actions: records,
+            gap_ns,
+        });
+    }
+    ControlReport {
+        policy: policy.name().to_string(),
+        phases: outcomes,
+        total_span_ns,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::policy::StaticPolicy;
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::workload::DlModel;
+
+    #[test]
+    fn static_loop_runs_phases_and_sums_spans() {
+        let mut fleet = FleetState::new(ClusterSpec::parse("2x3090:mps").unwrap());
+        let phases = vec![
+            PhaseSpec::new(
+                "p0",
+                vec![
+                    ClusterJob::inference("i0", DlModel::AlexNet, 3, Some(5)),
+                    ClusterJob::training("t0", DlModel::AlexNet, 2),
+                ],
+            ),
+            PhaseSpec::new(
+                "p1",
+                vec![ClusterJob::inference("i1", DlModel::AlexNet, 2, None)],
+            ),
+        ];
+        let cfg = ControlConfig {
+            run: ClusterRunConfig::default(),
+            place: PlacePolicy::LeastLoaded,
+        };
+        let rep = run_governed(&mut fleet, &phases, &mut StaticPolicy, &cfg);
+        assert_eq!(rep.policy, "static");
+        assert_eq!(rep.phases.len(), 2);
+        assert_eq!(rep.actions_applied(), 0);
+        assert_eq!(rep.total_rejected(), 0);
+        // no actions → no gaps → span is the sum of phase makespans
+        let makespans: u64 = rep.phases.iter().map(|p| p.frame.makespan_ns).sum();
+        assert_eq!(rep.total_span_ns, makespans);
+        assert!(rep.total_span_s() > 0.0);
+        let s = rep.turnaround_summary();
+        assert_eq!(s.count, 5);
+        // the frame carries the deadline only where jobs declared one
+        assert_eq!(rep.phases[0].frame.lanes.len(), 2);
+        assert!(rep.total_events() > 0);
+        // JSON parses and is reproducible
+        let j = rep.to_json();
+        assert_eq!(j, rep.to_json());
+        crate::util::json::Json::parse(&j).unwrap();
+    }
+
+    #[test]
+    fn end_events_mask_devices_for_later_phases() {
+        let mut fleet = FleetState::new(ClusterSpec::parse("2x3090:mps").unwrap());
+        let phases = vec![
+            PhaseSpec::new(
+                "p0",
+                vec![ClusterJob::training("t0", DlModel::AlexNet, 1)],
+            )
+            .with_end_events(vec![FleetEvent::DrainDevice(0)]),
+            PhaseSpec::new(
+                "p1",
+                vec![ClusterJob::training("t1", DlModel::AlexNet, 1)],
+            ),
+        ];
+        let cfg = ControlConfig {
+            run: ClusterRunConfig::default(),
+            place: PlacePolicy::LeastLoaded,
+        };
+        let rep = run_governed(&mut fleet, &phases, &mut StaticPolicy, &cfg);
+        assert!(fleet.draining[0]);
+        // phase 1 could only use device 1
+        assert_eq!(rep.phases[1].report.lane_of("t1"), Some(1));
+    }
+}

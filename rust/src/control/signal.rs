@@ -1,0 +1,297 @@
+//! The unified telemetry layer (DESIGN.md §7b): one signal catalog that
+//! every control policy reads, extracted from the quantities the routing
+//! and metrics layers already produce instead of ad-hoc per-report fields.
+//!
+//! A [`SignalFrame`] is the fleet's state at one phase boundary:
+//!
+//! * per-lane serving signals — completed requests, SLO violation count
+//!   and rate, total deadline overshoot, mean/p99 turnaround, the Little's
+//!   -law queue-depth proxy ([`crate::metrics::RunReport::avg_inflight`]),
+//!   and the residual-life drain estimate every action cost reuses;
+//! * fleet routing pressure — `PlacementStats`' admitted/placed/rejected
+//!   counts (the autoscaler's grow signal);
+//! * the phase boundary itself — index and makespan.
+//!
+//! Frames are pure functions of reports, so a governed run's decisions are
+//! as deterministic as the runs they observe — the fan-out guard covers
+//! the whole loop. The serving coordinator produces the same shape from
+//! its live routers (`coordinator::cluster::ClusterRouter::signal_frame`),
+//! so simulation-tuned policies read production telemetry unchanged.
+
+use crate::cluster::{ClusterJob, ClusterRunReport};
+use crate::metrics::RunReport;
+use crate::sim::{ns_to_ms, SimTime, MS};
+use crate::util::json::escape as esc;
+
+/// Render an f64 for the deterministic JSON (NaN/inf → null, like
+/// `RunReport::to_json`).
+fn num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:?}")
+    } else {
+        "null".into()
+    }
+}
+
+/// One lane's (device's or serving lane's) signals at a phase boundary.
+#[derive(Clone, Debug)]
+pub struct LaneSignal {
+    /// Lane name, e.g. `"a100:mig-3g"`.
+    pub device: String,
+    pub mechanism: String,
+    /// Jobs (simulation) or routed requests (serving) on this lane.
+    pub jobs: u64,
+    /// Completed inference requests.
+    pub completed: u64,
+    /// Completed requests that missed the lane's deadline.
+    pub violations: u64,
+    /// Mean turnaround in ms (NaN when no requests completed).
+    pub mean_turnaround_ms: f64,
+    /// p99 turnaround in ms (NaN when unavailable).
+    pub p99_turnaround_ms: f64,
+    /// Σ turnaround over every completed request, ms (policy gain math).
+    pub total_turnaround_ms: f64,
+    /// Σ max(0, turnaround − deadline) in ms.
+    pub overshoot_ms: f64,
+    /// Little's-law time-averaged in-flight requests (queue depth proxy).
+    pub inflight_avg: f64,
+    /// Lane busy span (sim_end for simulation lanes, wall ns for serving).
+    pub busy_ns: SimTime,
+    /// Residual-life drain estimate for this lane's in-flight work.
+    pub residual_ns: SimTime,
+    /// The deadline the violation signals were computed against, if any.
+    pub deadline_ms: Option<f64>,
+}
+
+impl LaneSignal {
+    /// Violations per completed request (0 when nothing completed).
+    pub fn violation_rate(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.violations as f64 / self.completed as f64
+        }
+    }
+
+    /// Build a lane signal from a device's run report.
+    pub fn from_report(
+        device: &str,
+        mechanism: &str,
+        jobs: u64,
+        report: &RunReport,
+        deadline_ms: Option<f64>,
+    ) -> LaneSignal {
+        let s = report.turnaround_summary();
+        let deadline_ns = deadline_ms.map(|d| (d * MS as f64) as SimTime);
+        LaneSignal {
+            device: device.to_string(),
+            mechanism: mechanism.to_string(),
+            jobs,
+            completed: report.requests.len() as u64,
+            violations: deadline_ns.map_or(0, |d| report.slo_violations(d)),
+            mean_turnaround_ms: s.mean,
+            p99_turnaround_ms: s.p99,
+            total_turnaround_ms: report
+                .requests
+                .iter()
+                .map(|r| ns_to_ms(r.turnaround_ns()))
+                .sum(),
+            overshoot_ms: deadline_ns.map_or(0.0, |d| report.slo_overshoot_ms(d)),
+            inflight_avg: report.avg_inflight(),
+            busy_ns: report.sim_end,
+            residual_ns: report.residual_life_ns(),
+            deadline_ms,
+        }
+    }
+
+    fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut j = String::new();
+        let _ = write!(
+            j,
+            "{{\"device\":\"{}\",\"mechanism\":\"{}\",\"jobs\":{},\"completed\":{},\
+             \"violations\":{},\"mean_ms\":{},\"p99_ms\":{},\"overshoot_ms\":{},\
+             \"inflight_avg\":{},\"busy_ns\":{},\"residual_ns\":{},\"deadline_ms\":{}}}",
+            esc(&self.device),
+            esc(&self.mechanism),
+            self.jobs,
+            self.completed,
+            self.violations,
+            num(self.mean_turnaround_ms),
+            num(self.p99_turnaround_ms),
+            num(self.overshoot_ms),
+            num(self.inflight_avg),
+            self.busy_ns,
+            self.residual_ns,
+            self.deadline_ms.map(num).unwrap_or_else(|| "null".into()),
+        );
+        j
+    }
+}
+
+/// The fleet's telemetry at one phase boundary — everything a
+/// `control::policy::Policy` is allowed to observe.
+#[derive(Clone, Debug)]
+pub struct SignalFrame {
+    /// Phase index this frame closes.
+    pub phase: u64,
+    pub lanes: Vec<LaneSignal>,
+    /// Routing pressure from the phase's placement.
+    pub admitted: u64,
+    pub placed: u64,
+    pub rejected: u64,
+    /// The phase's makespan (max lane span).
+    pub makespan_ns: SimTime,
+}
+
+impl SignalFrame {
+    /// Per-lane deadlines for [`SignalFrame::from_cluster`]: the tightest
+    /// deadline among the jobs routed to each lane (a lane serving several
+    /// SLO classes is judged by its strictest).
+    pub fn lane_deadlines(rep: &ClusterRunReport, jobs: &[ClusterJob]) -> Vec<Option<f64>> {
+        rep.lanes
+            .iter()
+            .map(|lane| {
+                lane.jobs
+                    .iter()
+                    .filter_map(|name| {
+                        jobs.iter()
+                            .find(|j| &j.name == name)
+                            .and_then(|j| j.deadline_ms)
+                    })
+                    .min()
+                    .map(|d| d as f64)
+            })
+            .collect()
+    }
+
+    /// Build the frame for a completed cluster phase. `deadlines` is one
+    /// entry per lane (see [`SignalFrame::lane_deadlines`]).
+    pub fn from_cluster(
+        phase: u64,
+        rep: &ClusterRunReport,
+        deadlines: &[Option<f64>],
+    ) -> SignalFrame {
+        assert_eq!(deadlines.len(), rep.lanes.len());
+        let lanes = rep
+            .lanes
+            .iter()
+            .zip(deadlines)
+            .map(|(lane, &deadline_ms)| {
+                LaneSignal::from_report(
+                    &lane.device,
+                    &lane.mechanism,
+                    lane.jobs.len() as u64,
+                    &lane.report,
+                    deadline_ms,
+                )
+            })
+            .collect();
+        SignalFrame {
+            phase,
+            lanes,
+            admitted: rep.stats.admitted,
+            placed: rep.stats.placed,
+            rejected: rep.stats.rejected,
+            makespan_ns: rep.lanes.iter().map(|l| l.report.sim_end).max().unwrap_or(0),
+        }
+    }
+
+    /// A single-device run as a one-lane frame (the `exp::mig`
+    /// reconfiguration path).
+    pub fn from_run(phase: u64, rep: &RunReport, deadline_ms: Option<f64>) -> SignalFrame {
+        let lane = LaneSignal::from_report(&rep.workload, &rep.mechanism, 1, rep, deadline_ms);
+        SignalFrame {
+            phase,
+            makespan_ns: rep.sim_end,
+            lanes: vec![lane],
+            admitted: 1,
+            placed: 1,
+            rejected: 0,
+        }
+    }
+
+    /// Rejected fraction of admissions — the autoscaler's grow pressure.
+    pub fn rejection_pressure(&self) -> f64 {
+        if self.admitted == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / self.admitted as f64
+        }
+    }
+
+    /// Fixed-field-order JSON (the determinism oracle includes frames).
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut j = String::new();
+        let _ = write!(j, "{{\"phase\":{},\"lanes\":[", self.phase);
+        for (i, lane) in self.lanes.iter().enumerate() {
+            if i > 0 {
+                j.push(',');
+            }
+            j.push_str(&lane.to_json());
+        }
+        let _ = write!(
+            j,
+            "],\"admitted\":{},\"placed\":{},\"rejected\":{},\"makespan_ns\":{}}}",
+            self.admitted, self.placed, self.rejected, self.makespan_ns
+        );
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RequestRecord;
+
+    fn report_with(spans_ms: &[u64]) -> RunReport {
+        let mut rep = RunReport {
+            mechanism: "mps".into(),
+            workload: "w".into(),
+            ..Default::default()
+        };
+        for (i, &ms) in spans_ms.iter().enumerate() {
+            rep.requests.push(RequestRecord {
+                id: i as u64,
+                arrived: 0,
+                completed: ms * MS,
+            });
+        }
+        rep.sim_end = spans_ms.iter().max().copied().unwrap_or(0) * MS;
+        rep
+    }
+
+    #[test]
+    fn lane_signal_math() {
+        let rep = report_with(&[10, 10, 30]);
+        let sig = LaneSignal::from_report("d", "mps", 2, &rep, Some(15.0));
+        assert_eq!(sig.completed, 3);
+        assert_eq!(sig.violations, 1);
+        assert!((sig.violation_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert!((sig.overshoot_ms - 15.0).abs() < 1e-9);
+        assert!((sig.total_turnaround_ms - 50.0).abs() < 1e-9);
+        assert!((sig.mean_turnaround_ms - 50.0 / 3.0).abs() < 1e-9);
+        // Little's law over the 30 ms span: 50/30 in flight on average
+        assert!((sig.inflight_avg - 50.0 / 30.0).abs() < 1e-9);
+        assert_eq!(sig.residual_ns, rep.residual_life_ns());
+        // no deadline → no violation signals
+        let clean = LaneSignal::from_report("d", "mps", 1, &rep, None);
+        assert_eq!(clean.violations, 0);
+        assert_eq!(clean.overshoot_ms, 0.0);
+    }
+
+    #[test]
+    fn frame_json_stable_and_nan_safe() {
+        let empty = RunReport::default();
+        let frame = SignalFrame::from_run(3, &empty, Some(5.0));
+        let a = frame.to_json();
+        assert_eq!(a, frame.to_json());
+        // NaN means serialize as null, and the JSON parses
+        let parsed = crate::util::json::Json::parse(&a).unwrap();
+        assert_eq!(parsed.get("phase").unwrap().as_f64(), Some(3.0));
+        let lane = parsed.get("lanes").unwrap().idx(0).unwrap();
+        assert_eq!(lane.get("mean_ms"), Some(&crate::util::json::Json::Null));
+        assert_eq!(frame.rejection_pressure(), 0.0);
+    }
+}

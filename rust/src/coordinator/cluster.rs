@@ -23,8 +23,9 @@
 
 use super::batcher::{BatchRunner, Batcher, BatcherConfig, InferResponse, WorkerHooks};
 use crate::cluster::account::{ClusterAccount, ClusterVec};
+use crate::control::signal::{LaneSignal, SignalFrame};
 use crate::util::rng::Rng;
-use crate::util::stats::Summary;
+use crate::util::stats::{Summary, Welford};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -85,6 +86,17 @@ pub struct ClusterRouterStats {
     pub slo_violations: u64,
     /// Requests routed per lane (spec order).
     pub routed: Vec<u64>,
+    /// Completions per lane (spec order) — the per-lane side of the
+    /// control-plane signal catalog.
+    pub lane_completed: Vec<u64>,
+    /// SLO violations per lane (spec order).
+    pub lane_violations: Vec<u64>,
+    /// Σ max(0, turnaround − deadline) per lane, ms (the violation
+    /// magnitude behind the counts — policy gain math).
+    pub lane_overshoot_ms: Vec<f64>,
+    /// Per-lane turnaround accumulators (streaming mean, same idiom as the
+    /// metrics layer) feeding [`ClusterRouter::signal_frame`].
+    pub lane_turnaround_ms: Vec<Welford>,
     /// Turnarounds in ms for completed requests.
     pub turnaround_ms: Vec<f64>,
 }
@@ -95,11 +107,13 @@ impl ClusterRouterStats {
     }
 
     /// `RouterStats::conserved` generalized to the cluster: admissions
-    /// split exactly into completions and failures, and the per-lane
-    /// routed tallies account for every admission.
+    /// split exactly into completions and failures, the per-lane routed
+    /// tallies account for every admission, and the per-lane completion
+    /// tallies account for every completion.
     pub fn conserved(&self) -> bool {
         self.admitted == self.completed + self.failed
             && self.routed.iter().sum::<u64>() == self.admitted
+            && self.lane_completed.iter().sum::<u64>() == self.completed
     }
 }
 
@@ -133,15 +147,24 @@ impl ClusterTicket {
             match out {
                 Some(resp) => {
                     st.completed += 1;
-                    st.turnaround_ms.push(resp.turnaround.as_secs_f64() * 1e3);
-                    if self.deadline.is_some_and(|d| resp.turnaround > d) {
-                        st.slo_violations += 1;
+                    st.lane_completed[self.lane] += 1;
+                    let ms = resp.turnaround.as_secs_f64() * 1e3;
+                    st.turnaround_ms.push(ms);
+                    st.lane_turnaround_ms[self.lane].push(ms);
+                    if let Some(d) = self.deadline {
+                        if resp.turnaround > d {
+                            st.slo_violations += 1;
+                            st.lane_violations[self.lane] += 1;
+                            st.lane_overshoot_ms[self.lane] +=
+                                (resp.turnaround - d).as_secs_f64() * 1e3;
+                        }
                     }
                 }
                 None => {
                     st.failed += 1;
                     if !abandoned && self.deadline.is_some() {
                         st.slo_violations += 1;
+                        st.lane_violations[self.lane] += 1;
                     }
                 }
             }
@@ -226,6 +249,10 @@ impl ClusterRouter {
             }),
             stats: Mutex::new(ClusterRouterStats {
                 routed: vec![0; n],
+                lane_completed: vec![0; n],
+                lane_violations: vec![0; n],
+                lane_overshoot_ms: vec![0.0; n],
+                lane_turnaround_ms: vec![Welford::new(); n],
                 ..Default::default()
             }),
         })
@@ -304,6 +331,69 @@ impl ClusterRouter {
     pub fn conserved(&self) -> bool {
         self.stats.lock().unwrap().conserved()
     }
+
+    /// The live router's telemetry as a control-plane [`SignalFrame`] —
+    /// the same catalog the simulation control loop consumes, so policies
+    /// tuned against simulated fleets read production serving signals
+    /// unchanged. `wall_ns` is the observation window (the serving
+    /// analogue of a phase makespan). The frame obeys the simulation-side
+    /// invariant `admitted == placed + rejected` (router admissions are
+    /// the *placed* side; admission rejections are folded back in). The
+    /// residual-life drain estimate comes from the streaming moments
+    /// (`E[X²]/2E[X] = (σ² + μ²)/2μ`); only p99 is unavailable from the
+    /// accumulator and reads NaN.
+    pub fn signal_frame(&self, phase: u64, wall_ns: u64) -> SignalFrame {
+        let st = self.stats.lock().unwrap();
+        let lanes = self
+            .lanes
+            .iter()
+            .enumerate()
+            .map(|(i, lane)| {
+                let w = &st.lane_turnaround_ms[i];
+                let completed = st.lane_completed[i];
+                let mean = w.mean();
+                let total = if w.count() == 0 { 0.0 } else { mean * w.count() as f64 };
+                // inspection-paradox residual life from streaming moments
+                let residual_ns = if w.count() == 0 || mean <= 0.0 {
+                    crate::metrics::RunReport::FALLBACK_RESIDUAL_NS
+                } else {
+                    (((w.variance() + mean * mean) / (2.0 * mean)) * 1e6).ceil() as u64
+                };
+                LaneSignal {
+                    device: lane.name.clone(),
+                    mechanism: if lane.latency_class {
+                        "latency-lane".to_string()
+                    } else {
+                        "throughput-lane".to_string()
+                    },
+                    jobs: st.routed[i],
+                    completed,
+                    violations: st.lane_violations[i],
+                    mean_turnaround_ms: mean,
+                    // the streaming accumulator keeps no order statistics
+                    p99_turnaround_ms: f64::NAN,
+                    total_turnaround_ms: total,
+                    overshoot_ms: st.lane_overshoot_ms[i],
+                    inflight_avg: if wall_ns == 0 {
+                        0.0
+                    } else {
+                        total * 1e6 / wall_ns as f64
+                    },
+                    busy_ns: wall_ns,
+                    residual_ns,
+                    deadline_ms: None,
+                }
+            })
+            .collect();
+        SignalFrame {
+            phase,
+            lanes,
+            admitted: st.admitted + st.rejected,
+            placed: st.admitted,
+            rejected: st.rejected,
+            makespan_ns: wall_ns,
+        }
+    }
 }
 
 /// Configuration of the cluster-routed serving scenario.
@@ -364,6 +454,9 @@ pub struct ClusterServeReport {
     pub latency_ms: Summary,
     pub wall: Duration,
     pub lanes: Vec<DeviceLaneReport>,
+    /// The run's telemetry as a control-plane signal frame (per-lane
+    /// violation counts/rates, routed totals, rejection pressure).
+    pub signals: SignalFrame,
     /// The router's conservation check at quiescence.
     pub conserved: bool,
 }
@@ -467,6 +560,7 @@ pub fn serve_cluster_routed(
             }
         })
         .collect();
+    let signals = router.signal_frame(0, wall.as_nanos() as u64);
     ClusterServeReport {
         policy: cfg.policy.name(),
         completed: stats.completed,
@@ -476,6 +570,7 @@ pub fn serve_cluster_routed(
         latency_ms: stats.summary(),
         wall,
         lanes,
+        signals,
         conserved: stats.conserved(),
     }
 }
@@ -555,6 +650,20 @@ mod tests {
         assert!(rep.lanes[0].routed > 0, "{rep:?}");
         assert!(rep.lanes[1].routed > 0, "{rep:?}");
         assert_eq!(rep.lanes[0].routed + rep.lanes[1].routed, 40);
+        // the serving run populates the control-plane signal frame: one
+        // lane signal per device, completions matching the lane tallies
+        assert_eq!(rep.signals.lanes.len(), 2);
+        assert_eq!(rep.signals.admitted, 40);
+        let done: u64 = rep.signals.lanes.iter().map(|l| l.completed).sum();
+        assert_eq!(done, 40);
+        assert_eq!(rep.signals.lanes[0].mechanism, "latency-lane");
+        assert_eq!(rep.signals.lanes[1].mechanism, "throughput-lane");
+        for l in &rep.signals.lanes {
+            if l.completed > 0 {
+                assert!(l.mean_turnaround_ms.is_finite());
+                assert!(l.violation_rate() <= 1.0);
+            }
+        }
     }
 
     #[test]

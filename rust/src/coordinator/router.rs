@@ -47,6 +47,12 @@ pub struct RouterStats {
     /// Requests sent to the latency / throughput instance lanes.
     pub routed_latency: u64,
     pub routed_throughput: u64,
+    /// SLO violations split by instance lane — the per-lane violation
+    /// signal the control plane's re-slicing policies read (a device whose
+    /// latency lane violates is a re-slice candidate; an aggregate count
+    /// cannot say which lane drowned).
+    pub violations_latency: u64,
+    pub violations_throughput: u64,
     /// Turnarounds in ms for completed requests.
     pub turnaround_ms: Vec<f64>,
 }
@@ -55,6 +61,16 @@ impl RouterStats {
     pub fn summary(&self) -> Summary {
         Summary::of(&self.turnaround_ms)
     }
+
+    /// Per-lane violation rates `(latency, throughput)` over the routed
+    /// counts — the signal-catalog view of this router.
+    pub fn lane_violation_rates(&self) -> (f64, f64) {
+        let rate = |v: u64, n: u64| if n == 0 { 0.0 } else { v as f64 / n as f64 };
+        (
+            rate(self.violations_latency, self.routed_latency),
+            rate(self.violations_throughput, self.routed_throughput),
+        )
+    }
 }
 
 /// A pending routed request.
@@ -62,11 +78,23 @@ pub struct Ticket {
     pub id: u64,
     /// The SLO deadline this request was admitted under, if any.
     pub deadline: Option<Duration>,
+    /// Which SLO instance lane served it (`Some(true)` = latency lane);
+    /// `None` for plain per-model routes.
+    lane_latency: Option<bool>,
     rx: mpsc::Receiver<InferResponse>,
     router: Arc<Router>,
 }
 
 impl Ticket {
+    fn count_violation(st: &mut RouterStats, lane_latency: Option<bool>) {
+        st.slo_violations += 1;
+        match lane_latency {
+            Some(true) => st.violations_latency += 1,
+            Some(false) => st.violations_throughput += 1,
+            None => {}
+        }
+    }
+
     /// Wait for the response (recording stats — including an SLO violation
     /// when a deadline was attached and missed — on the router).
     pub fn wait(self, timeout: Duration) -> Option<InferResponse> {
@@ -76,7 +104,7 @@ impl Ticket {
                 st.completed += 1;
                 st.turnaround_ms.push(resp.turnaround.as_secs_f64() * 1e3);
                 if self.deadline.is_some_and(|d| resp.turnaround > d) {
-                    st.slo_violations += 1;
+                    Self::count_violation(&mut st, self.lane_latency);
                 }
                 Some(resp)
             }
@@ -84,7 +112,7 @@ impl Ticket {
                 let mut st = self.router.stats.lock().unwrap();
                 st.failed += 1;
                 if self.deadline.is_some() {
-                    st.slo_violations += 1;
+                    Self::count_violation(&mut st, self.lane_latency);
                 }
                 None
             }
@@ -134,6 +162,7 @@ impl Router {
         Some(Ticket {
             id,
             deadline: None,
+            lane_latency: None,
             rx,
             router: self.clone(),
         })
@@ -172,6 +201,7 @@ impl Router {
         Some(Ticket {
             id,
             deadline: Some(deadline),
+            lane_latency: Some(tight),
             rx,
             router: self.clone(),
         })
@@ -325,6 +355,13 @@ mod tests {
         let st = r.stats.lock().unwrap();
         assert_eq!(st.slo_violations, 2);
         assert_eq!(st.failed, 1);
+        // the violations are attributed to their lanes: the impossible
+        // deadline hit the latency lane, the timeout the throughput lane
+        assert_eq!(st.violations_latency, 1);
+        assert_eq!(st.violations_throughput, 1);
+        let (lat_rate, thr_rate) = st.lane_violation_rates();
+        assert_eq!(lat_rate, 1.0);
+        assert_eq!(thr_rate, 1.0);
     }
 
     #[test]

@@ -1,0 +1,400 @@
+//! Governed-vs-static scenarios (DESIGN.md §7b): the same phased workload
+//! run twice through `control::run_governed` — once under a live policy,
+//! once under `StaticPolicy` — so the two runs differ *only* in the loop
+//! being closed. Three scenario families, one per ROADMAP loop:
+//!
+//! * [`bursty_reslice`] — a bursty serving mix on a MIG device: calm
+//!   closed-loop phases around an overloaded Poisson burst. The governor
+//!   learns a turnaround target from the first phase, and when the burst
+//!   drowns the 3g latency slice it swaps to 4g — gated on observed
+//!   overshoot vs `ReconfigCost::total_ns` — then hands the slices back
+//!   when calm returns. Headline: burst-phase p99 turnaround.
+//! * [`diurnal_autoscale`] — a day/night load cycle over a fleet with dark
+//!   headroom devices: the peak's DRAM pressure rejects trainers on the
+//!   powered pair, the autoscaler powers headroom up from the rejection
+//!   signal (and back down at night). Headline: rejected jobs (service
+//!   completeness — the utilization proxy).
+//! * [`failure_migrate`] — a long training job pinned to a device that
+//!   receives a failure warning mid-run: the governor checkpoints it off
+//!   the draining device (charging drain + checkpoint transfer over the
+//!   host links) and resumes the *continuation* elsewhere; the static
+//!   world has no checkpoint and restarts the job from scratch. Headline:
+//!   end-to-end makespan.
+//!
+//! Every scenario is a pure function of its `Protocol`, runs through the
+//! cluster fan-out, and serializes via `GovernedComparison::to_json` — the
+//! determinism guard covers governed runs byte-for-byte.
+
+use super::Protocol;
+use crate::cluster::{ClusterJob, ClusterRunConfig, ClusterSpec, PlacePolicy};
+use crate::control::policy::{DrainMigrate, GainGatedReslice, RejectionAutoscale, StaticPolicy};
+use crate::control::{run_governed, ControlConfig, ControlReport, FleetEvent, FleetState, PhaseSpec};
+use crate::gpu::MigProfile;
+use crate::sim::{SimTime, MS};
+use crate::workload::{ArrivalPattern, DlModel};
+
+/// One scenario's governed and static runs, plus the headline metrics.
+#[derive(Clone, Debug)]
+pub struct GovernedComparison {
+    pub scenario: &'static str,
+    pub governed: ControlReport,
+    pub baseline: ControlReport,
+}
+
+impl GovernedComparison {
+    pub fn governed_p99_ms(&self) -> f64 {
+        self.governed.turnaround_summary().p99
+    }
+
+    pub fn baseline_p99_ms(&self) -> f64 {
+        self.baseline.turnaround_summary().p99
+    }
+
+    /// Both runs' JSON side by side — the governed determinism oracle.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"scenario\":\"{}\",\"governed\":{},\"static\":{}}}",
+            self.scenario,
+            self.governed.to_json(),
+            self.baseline.to_json()
+        )
+    }
+
+    /// Simulated events across both runs (perf accounting).
+    pub fn total_events(&self) -> u64 {
+        self.governed.total_events() + self.baseline.total_events()
+    }
+}
+
+fn control_cfg(proto: &Protocol, place: PlacePolicy) -> ControlConfig {
+    ControlConfig {
+        run: ClusterRunConfig {
+            seed: proto.seed,
+            pattern: proto.pattern,
+            record_ops: proto.record_ops,
+            occupancy_sample_ns: proto.occupancy_sample_ns,
+            parallel: proto.parallel,
+        },
+        place,
+    }
+}
+
+/// Bursty serving with gain-gated re-slicing on an `a100:mig-3g` device.
+///
+/// A calibration run (closed loop on the 3g split) measures the latency
+/// lane's service time `s`; the burst phases then arrive Poisson at
+/// `0.5·s` (overload — the queue grows for the whole burst on 3g, and
+/// half as fast on 4g, whose service is faster). Phases: calm, burst,
+/// burst, calm; the inference job carries a deadline of `2·s` so
+/// violation signals flow.
+pub fn bursty_reslice(proto: &Protocol) -> GovernedComparison {
+    let spec = ClusterSpec::parse("a100:mig-3g").expect("valid spec");
+    let train_steps = (proto.train_steps / 2).max(1);
+    let jobs = |requests: u32, deadline_ms: Option<u64>| {
+        vec![
+            ClusterJob::inference("serve", DlModel::ResNet50, requests, deadline_ms),
+            ClusterJob::training("train", DlModel::ResNet50, train_steps),
+        ]
+    };
+    // Calibration: one calm closed-loop phase on the 3g split.
+    let calib = crate::cluster::Cluster::new(spec.clone()).run(
+        &jobs(proto.requests, None),
+        PlacePolicy::LeastLoaded,
+        &control_cfg(proto, PlacePolicy::LeastLoaded).run,
+    );
+    let svc_ms = calib.lanes[0].report.mean_turnaround_ms();
+    assert!(svc_ms.is_finite() && svc_ms > 0.0, "calibration produced no requests");
+    let burst_interarrival: SimTime = ((svc_ms * 0.5) * MS as f64) as SimTime;
+    let deadline_ms = (svc_ms * 2.0).ceil() as u64;
+    let burst_requests = proto.requests * 4;
+    let phases = vec![
+        PhaseSpec::new("calm-0", jobs(proto.requests, Some(deadline_ms))),
+        PhaseSpec::new("burst-1", jobs(burst_requests, Some(deadline_ms))).with_pattern(
+            ArrivalPattern::Poisson {
+                mean_interarrival: burst_interarrival.max(1),
+            },
+        ),
+        PhaseSpec::new("burst-2", jobs(burst_requests, Some(deadline_ms))).with_pattern(
+            ArrivalPattern::Poisson {
+                mean_interarrival: burst_interarrival.max(1),
+            },
+        ),
+        PhaseSpec::new("calm-3", jobs(proto.requests, Some(deadline_ms))),
+    ];
+    let cfg = control_cfg(proto, PlacePolicy::LeastLoaded);
+    let mut governed_fleet = FleetState::new(spec.clone());
+    let mut policy = GainGatedReslice::new(0, MigProfile::G3, MigProfile::G4, 1.3);
+    let governed = run_governed(&mut governed_fleet, &phases, &mut policy, &cfg);
+    let mut static_fleet = FleetState::new(spec);
+    let baseline = run_governed(&mut static_fleet, &phases, &mut StaticPolicy, &cfg);
+    GovernedComparison {
+        scenario: "bursty-reslice",
+        governed,
+        baseline,
+    }
+}
+
+/// Diurnal load with rejection-pressure autoscaling over `4x3090:mps`,
+/// two devices powered at dawn. The peak phases carry four ResNet-50
+/// trainers (17 GB each): two per 24 GB device cannot fit, so the static
+/// fleet rejects two trainers *every* peak phase, while the governor
+/// powers the dark pair up after the first rejection signal — and back
+/// down when the night phase leaves them idle.
+pub fn diurnal_autoscale(proto: &Protocol) -> GovernedComparison {
+    let spec = ClusterSpec::parse("4x3090:mps").expect("valid spec");
+    let steps = (proto.train_steps / 2).max(1);
+    let low = |tag: &str| {
+        vec![
+            ClusterJob::inference(&format!("i{tag}0"), DlModel::AlexNet, proto.requests, Some(5)),
+            ClusterJob::training(&format!("t{tag}0"), DlModel::ResNet50, steps),
+            ClusterJob::inference(&format!("i{tag}1"), DlModel::AlexNet, proto.requests, Some(5)),
+            ClusterJob::training(&format!("t{tag}1"), DlModel::ResNet50, steps),
+        ]
+    };
+    let peak = |tag: &str| {
+        let mut jobs = Vec::new();
+        for k in 0..4 {
+            jobs.push(ClusterJob::inference(
+                &format!("i{tag}{k}"),
+                DlModel::AlexNet,
+                proto.requests,
+                Some(5),
+            ));
+        }
+        for k in 0..4 {
+            jobs.push(ClusterJob::training(
+                &format!("t{tag}{k}"),
+                DlModel::ResNet50,
+                steps,
+            ));
+        }
+        jobs
+    };
+    let phases = vec![
+        PhaseSpec::new("dawn", low("a")),
+        PhaseSpec::new("peak-1", peak("b")),
+        PhaseSpec::new("peak-2", peak("c")),
+        PhaseSpec::new("night", low("d")),
+    ];
+    let cfg = control_cfg(proto, PlacePolicy::LeastLoaded);
+    let powered = vec![true, true, false, false];
+    let mut governed_fleet = FleetState::with_powered(spec.clone(), powered.clone());
+    let mut policy = RejectionAutoscale { min_powered: 2 };
+    let governed = run_governed(&mut governed_fleet, &phases, &mut policy, &cfg);
+    let mut static_fleet = FleetState::with_powered(spec, powered);
+    let baseline = run_governed(&mut static_fleet, &phases, &mut StaticPolicy, &cfg);
+    GovernedComparison {
+        scenario: "diurnal-autoscale",
+        governed,
+        baseline,
+    }
+}
+
+/// Device failure with live migration on `2xa100:mps`. A ResNet-50
+/// training job is pinned to device 0 and runs `steps` per phase for four
+/// phases; after phase 1 a failure warning drains device 0. The governor
+/// migrates the pin (drain + checkpoint transfer; the resumed phases
+/// *continue* the kernel stream via the checkpoint-faithful resume path);
+/// the static world restarts the job from step zero on the survivor. A
+/// companion trainer lives on device 1 throughout.
+pub fn failure_migrate(proto: &Protocol) -> GovernedComparison {
+    let spec = ClusterSpec::parse("2xa100:mps").expect("valid spec");
+    let steps = proto.train_steps.max(6);
+    let companion = |i: usize| ClusterJob::training(&format!("other{i}"), DlModel::ResNet50, steps);
+    // Governed: the pinned job advances `steps` per phase, resuming from
+    // its running checkpoint after the migration.
+    let governed_phases: Vec<PhaseSpec> = (0..4)
+        .map(|i| {
+            let pinned = if i == 0 {
+                ClusterJob::training("train0", DlModel::ResNet50, steps)
+            } else {
+                ClusterJob::training_resumed(
+                    "train0",
+                    DlModel::ResNet50,
+                    (i as u32 + 1) * steps,
+                    i as u32 * steps,
+                )
+            };
+            let phase = PhaseSpec::new(&format!("phase-{i}"), vec![pinned, companion(i)]);
+            if i == 1 {
+                phase.with_end_events(vec![FleetEvent::DrainDevice(0)])
+            } else {
+                phase
+            }
+        })
+        .collect();
+    // Static: identical through the failure; afterwards the two phases of
+    // lost-and-remaining work (2·steps done, 4·steps total → re-run all 4
+    // from scratch) spread over the remaining two phases.
+    let static_phases: Vec<PhaseSpec> = (0..4)
+        .map(|i| {
+            let jobs = match i {
+                0 => vec![
+                    ClusterJob::training("train0", DlModel::ResNet50, steps),
+                    companion(i),
+                ],
+                1 => vec![
+                    ClusterJob::training_resumed("train0", DlModel::ResNet50, 2 * steps, steps),
+                    companion(i),
+                ],
+                _ => vec![
+                    ClusterJob::training(&format!("train0-restart{i}"), DlModel::ResNet50, 2 * steps),
+                    companion(i),
+                ],
+            };
+            let phase = PhaseSpec::new(&format!("phase-{i}"), jobs);
+            if i == 1 {
+                phase.with_end_events(vec![FleetEvent::DrainDevice(0)])
+            } else {
+                phase
+            }
+        })
+        .collect();
+    let cfg = control_cfg(proto, PlacePolicy::LeastLoaded);
+    let pin_demand = ClusterJob::training("train0", DlModel::ResNet50, steps).demand();
+    let mut governed_fleet = FleetState::new(spec.clone());
+    governed_fleet.pin("train0", 0, pin_demand);
+    let mut policy = DrainMigrate;
+    let governed = run_governed(&mut governed_fleet, &governed_phases, &mut policy, &cfg);
+    // The static fleet pins too (same placement through the failure) but
+    // its "train0" jobs after the failure are fresh restarts with new
+    // names, so the dead pin never matches and nothing migrates.
+    let mut static_fleet = FleetState::new(spec);
+    static_fleet.pin("train0", 0, pin_demand);
+    let baseline = run_governed(&mut static_fleet, &static_phases, &mut StaticPolicy, &cfg);
+    GovernedComparison {
+        scenario: "failure-migrate",
+        governed,
+        baseline,
+    }
+}
+
+/// The control-plane perf workload (`bench_control`, shared with
+/// `bench_perf`'s gated sweep): the bursty re-slice scenario — calibration,
+/// four governed phases, four static phases — returning total simulated
+/// events across every run.
+pub fn control_sweep_events(proto: &Protocol) -> u64 {
+    let cmp = bursty_reslice(proto);
+    cmp.total_events()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::policy::Action;
+
+    fn proto() -> Protocol {
+        Protocol {
+            requests: 6,
+            train_steps: 2,
+            ..Protocol::default()
+        }
+    }
+
+    #[test]
+    fn bursty_reslice_governor_beats_static_on_the_burst() {
+        let cmp = bursty_reslice(&proto());
+        // identical until the first action: calm-0 and burst-1 match
+        // byte-for-byte (the loop, not the workload, is the difference)
+        for i in 0..2 {
+            assert_eq!(
+                cmp.governed.phases[i].report.to_json(),
+                cmp.baseline.phases[i].report.to_json(),
+                "phase {i} diverged before any action"
+            );
+        }
+        // the governor swapped 3g→4g after the first burst…
+        let first_actions = &cmp.governed.phases[1].actions;
+        assert!(
+            first_actions.iter().any(|r| r.applied
+                && matches!(
+                    r.action,
+                    Action::Reslice {
+                        to: MigProfile::G4,
+                        ..
+                    }
+                )),
+            "expected an applied 3g→4g reslice after burst-1: {first_actions:?}"
+        );
+        assert!(cmp.governed.actions_applied() >= 1);
+        assert_eq!(cmp.baseline.actions_applied(), 0);
+        // …so the second burst runs with the 4g latency slice: overloaded
+        // queueing collapses, and the burst-2 turnaround beats static
+        let gov = cmp.governed.phases[2].frame.lanes[0].clone();
+        let sta = cmp.baseline.phases[2].frame.lanes[0].clone();
+        assert!(gov.completed > 0 && sta.completed > 0);
+        assert!(
+            gov.mean_turnaround_ms < sta.mean_turnaround_ms,
+            "governed burst mean {:.2} ms !< static {:.2} ms",
+            gov.mean_turnaround_ms,
+            sta.mean_turnaround_ms
+        );
+        assert!(
+            gov.p99_turnaround_ms < sta.p99_turnaround_ms,
+            "governed burst p99 {:.2} ms !< static {:.2} ms",
+            gov.p99_turnaround_ms,
+            sta.p99_turnaround_ms
+        );
+        // the governed run paid for its swap: a non-zero boundary gap
+        assert!(cmp.governed.phases[1].gap_ns > 0);
+        assert_eq!(cmp.baseline.phases[1].gap_ns, 0);
+    }
+
+    #[test]
+    fn diurnal_autoscale_serves_what_static_rejects() {
+        let cmp = diurnal_autoscale(&proto());
+        // static: 2 trainers rejected at each of the two peaks (DRAM
+        // arithmetic: 2×17 GB > 24 GB per device)
+        assert_eq!(cmp.baseline.total_rejected(), 4);
+        // governed: only the first peak rejects before the scale-up lands
+        assert_eq!(cmp.governed.total_rejected(), 2);
+        // the scale-up actually happened (two power-ups after peak-1)…
+        let ups = cmp.governed.phases[1]
+            .actions
+            .iter()
+            .filter(|r| r.applied && r.action.describe().starts_with("power-up"))
+            .count();
+        assert_eq!(ups, 2, "{:?}", cmp.governed.phases[1].actions);
+        // …and the night phase powers the idle pair back down
+        let downs: usize = cmp
+            .governed
+            .phases
+            .iter()
+            .flat_map(|p| p.actions.iter())
+            .filter(|r| r.applied && r.action.describe().starts_with("power-down"))
+            .count();
+        assert_eq!(downs, 2);
+        // peak-2 under the grown fleet places every trainer
+        assert_eq!(cmp.governed.phases[2].frame.rejected, 0);
+        assert_eq!(cmp.baseline.phases[2].frame.rejected, 2);
+    }
+
+    #[test]
+    fn failure_migrate_preserves_progress() {
+        let cmp = failure_migrate(&proto());
+        // the governor migrated the pinned trainer off the draining device
+        let migrated = cmp.governed.phases[1]
+            .actions
+            .iter()
+            .any(|r| r.applied && matches!(r.action, Action::Migrate { .. }));
+        assert!(migrated, "{:?}", cmp.governed.phases[1].actions);
+        // after migration every train0 phase runs on device 1
+        assert_eq!(cmp.governed.phases[2].report.lane_of("train0"), Some(1));
+        assert_eq!(cmp.governed.phases[3].report.lane_of("train0"), Some(1));
+        // the static restart re-runs lost work: strictly longer end-to-end
+        assert!(
+            cmp.governed.total_span_s() < cmp.baseline.total_span_s(),
+            "governed {:.3} s !< static {:.3} s",
+            cmp.governed.total_span_s(),
+            cmp.baseline.total_span_s()
+        );
+        // and the migration gap was charged (drain + checkpoint transfer)
+        assert!(cmp.governed.phases[1].gap_ns > 0);
+    }
+
+    #[test]
+    fn sweep_counts_events() {
+        let n = control_sweep_events(&proto());
+        assert!(n > 0);
+    }
+}

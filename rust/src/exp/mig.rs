@@ -20,12 +20,15 @@
 //! rejects it — itself a faithful MIG behavior).
 
 use super::{run_comparisons, Protocol};
+use crate::control::policy::{FlatGap, GapDecision, GapPolicy, MeasuredGap};
+use crate::control::signal::SignalFrame;
 use crate::gpu::partition::{self, MigProfile};
 use crate::gpu::DeviceConfig;
 use crate::metrics::RunReport;
-use crate::sched::Mechanism;
+use crate::sched::{CtxDef, EngineConfig, Mechanism};
 use crate::sim::{SimTime, MS};
-use crate::workload::DlModel;
+use crate::util::rng::Rng;
+use crate::workload::{DlModel, Source};
 
 /// One instance split's colocation outcome.
 #[derive(Clone, Debug)]
@@ -121,8 +124,9 @@ pub struct ReconfigCost {
 
 impl ReconfigCost {
     /// Drain estimate when a phase completed no requests (nothing to
-    /// measure residual work from).
-    pub const FALLBACK_DRAIN_NS: SimTime = 50 * MS;
+    /// measure residual work from). Alias of the shared estimator's
+    /// fallback ([`RunReport::FALLBACK_RESIDUAL_NS`]).
+    pub const FALLBACK_DRAIN_NS: SimTime = RunReport::FALLBACK_RESIDUAL_NS;
 
     /// The full gap the reconfiguration charges.
     pub fn total_ns(&self) -> SimTime {
@@ -130,11 +134,11 @@ impl ReconfigCost {
     }
 
     /// `CreateGpuInstance` latency for an instance of `compute_slices`
-    /// slices: a fixed setup cost plus a per-slice term (creation is
-    /// hundreds of milliseconds on real hardware and grows with the
-    /// instance's share of the device).
+    /// slices — the partition layer's number
+    /// ([`partition::creation_latency_ns`]), so the cost model and the
+    /// control-plane actuator price the same operation identically.
     pub fn creation_latency_ns_slices(compute_slices: u32) -> SimTime {
-        80 * MS + 24 * MS * compute_slices as SimTime
+        partition::creation_latency_ns(compute_slices)
     }
 
     /// Per-profile `CreateGpuInstance` latency.
@@ -142,24 +146,13 @@ impl ReconfigCost {
         Self::creation_latency_ns_slices(profile.compute_slices())
     }
 
-    /// Drain time measured from the draining phase's own behaviour: the
-    /// expected residual life of the unit in flight at an arbitrary drain
-    /// point, `E[R] = E[X²] / 2·E[X]` over the phase's completed request
-    /// spans (the inspection paradox — a drain disproportionately catches
-    /// long units mid-flight, so this exceeds half the mean span whenever
-    /// spans vary).
+    /// Drain time measured from the draining phase's own behaviour — the
+    /// shared residual-life estimator
+    /// ([`RunReport::residual_life_ns`]): a drain disproportionately
+    /// catches long units mid-flight (the inspection paradox), so this
+    /// exceeds half the mean span whenever spans vary.
     pub fn drain_ns_from(phase: &RunReport) -> SimTime {
-        let mut sum = 0.0f64;
-        let mut sum_sq = 0.0f64;
-        for r in &phase.requests {
-            let x = r.turnaround_ns() as f64;
-            sum += x;
-            sum_sq += x * x;
-        }
-        if sum <= 0.0 {
-            return Self::FALLBACK_DRAIN_NS;
-        }
-        (sum_sq / (2.0 * sum)).ceil() as SimTime
+        phase.residual_life_ns()
     }
 
     /// The measured cost of draining `phase` and creating the instances of
@@ -180,14 +173,20 @@ impl ReconfigCost {
 pub struct ReconfigurationReport {
     /// Train-heavy phase under the first split.
     pub phase1: RunReport,
-    /// Infer-heavy phase under the second split.
+    /// Infer-heavy phase — under the second split when the gap policy
+    /// reconfigured, under the first when it kept the layout.
     pub phase2: RunReport,
     pub phase1_profile: MigProfile,
+    /// The *planned* second split (what the policy was asked about).
     pub phase2_profile: MigProfile,
+    /// Whether the gap policy actually reconfigured.
+    pub reconfigured: bool,
+    /// The consulted gap policy's name.
+    pub gap_policy: String,
     /// The cost model behind the gap: drain measured from phase 1's
     /// in-flight work, creation summed over phase 2's instance layout.
     pub cost: ReconfigCost,
-    /// The gap actually charged (= `cost.total_ns()` unless overridden).
+    /// The gap actually charged (0 when the policy skipped).
     pub reconfig_gap_ns: SimTime,
     /// End-to-end span including the gap, seconds.
     pub total_span_s: f64,
@@ -202,21 +201,24 @@ impl ReconfigurationReport {
 }
 
 /// Phase 1 runs a train-heavy mix (full training steps, a quarter of the
-/// requests) under `Mig { phase1 }`; after the reconfiguration gap,
-/// phase 2 runs an infer-heavy mix (full requests, a quarter of the
-/// steps) under `Mig { phase2 }`.
+/// requests) under `Mig { phase1 }`; phase 2 runs an infer-heavy mix
+/// (full requests, a quarter of the steps).
 ///
-/// The gap defaults to the *measured* [`ReconfigCost`]: drain time from
-/// phase 1's own request spans and `CreateGpuInstance` latency summed over
-/// phase 2's actual instance layout. Pass `gap_override_ns` to force a
-/// flat gap (e.g. [`DEFAULT_RECONFIG_GAP_NS`]) instead.
-pub fn reconfigure_between_phases(
+/// Whether the split actually changes — and what gap is charged — is the
+/// consulted [`GapPolicy`]'s call, fed the phase-1 [`SignalFrame`] and the
+/// measured [`ReconfigCost`] (drain from phase 1's own request spans,
+/// `CreateGpuInstance` latency summed over phase 2's actual instance
+/// layout). [`MeasuredGap`]/[`FlatGap`] always reconfigure (the historical
+/// behaviours); `GainGatedGap` reconfigures only when the observed
+/// turnaround mass beyond its target outweighs `ReconfigCost::total_ns` —
+/// closing the ROADMAP "reconfiguration policy" loop.
+pub fn reconfigure_with_policy(
     proto: &Protocol,
     infer_model: DlModel,
     train_model: DlModel,
     phase1: MigProfile,
     phase2: MigProfile,
-    gap_override_ns: Option<SimTime>,
+    policy: &dyn GapPolicy,
 ) -> ReconfigurationReport {
     let p1 = Protocol {
         requests: (proto.requests / 4).max(1),
@@ -236,24 +238,146 @@ pub fn reconfigure_between_phases(
         drain_ns: ReconfigCost::drain_ns_from(&rep1),
         create_ns,
     };
-    let reconfig_gap_ns = gap_override_ns.unwrap_or_else(|| cost.total_ns());
+    let frame = SignalFrame::from_run(0, &rep1, None);
+    let decision = policy.decide(&frame, cost.total_ns());
+    let (reconfigured, reconfig_gap_ns, run_profile) = match decision {
+        GapDecision::Reconfigure { gap_ns } => (true, gap_ns, phase2),
+        GapDecision::Skip => (false, 0, phase1),
+    };
     let p2 = Protocol {
         train_steps: (proto.train_steps / 4).max(1),
         // decorrelate the second phase's arrivals/kernels from the first
         seed: proto.seed ^ 0x9E3779B97F4A7C15,
         ..proto.clone()
     };
-    let rep2 = p2.pair(Mechanism::Mig { profile: phase2 }, infer_model, train_model);
+    let rep2 = p2.pair(
+        Mechanism::Mig {
+            profile: run_profile,
+        },
+        infer_model,
+        train_model,
+    );
     let total_ns = rep1.sim_end as f64 + reconfig_gap_ns as f64 + rep2.sim_end as f64;
     ReconfigurationReport {
         phase1: rep1,
         phase2: rep2,
         phase1_profile: phase1,
         phase2_profile: phase2,
+        reconfigured,
+        gap_policy: policy.name().to_string(),
         cost,
         reconfig_gap_ns,
         total_span_s: total_ns / 1e9,
     }
+}
+
+/// The historical entry point, now a thin wrapper: `None` consults the
+/// always-reconfigure [`MeasuredGap`] policy, `Some(gap)` the [`FlatGap`]
+/// override (e.g. [`DEFAULT_RECONFIG_GAP_NS`]) — both preserved as policy
+/// implementations.
+pub fn reconfigure_between_phases(
+    proto: &Protocol,
+    infer_model: DlModel,
+    train_model: DlModel,
+    phase1: MigProfile,
+    phase2: MigProfile,
+    gap_override_ns: Option<SimTime>,
+) -> ReconfigurationReport {
+    match gap_override_ns {
+        Some(gap) => {
+            reconfigure_with_policy(proto, infer_model, train_model, phase1, phase2, &FlatGap(gap))
+        }
+        None => {
+            reconfigure_with_policy(proto, infer_model, train_model, phase1, phase2, &MeasuredGap)
+        }
+    }
+}
+
+/// One row of the MPS-inside-MIG colocation scenario: the named mechanism
+/// with an AlexNet inference context on the latency instance and *two*
+/// best-effort contexts (an AlexNet trainer + a second AlexNet inference
+/// service) sharing the remainder instance.
+#[derive(Clone, Debug)]
+pub struct MigMpsRow {
+    pub mechanism: String,
+    pub turnaround_ms: f64,
+    pub turnaround_cv: f64,
+    pub train_s: Option<f64>,
+    pub report: RunReport,
+}
+
+/// MPS inside an instance (ROADMAP): colocate two best-effort contexts on
+/// the remainder instance of a `profile` split — once under plain
+/// [`Mechanism::Mig`] (unbounded intra-instance contention) and once under
+/// [`Mechanism::MigMps`] with `thread_limit` capping each client at a
+/// fraction of *the instance's* threads. The latency instance is untouched
+/// either way (that is MIG's isolation); the rows differ in how the
+/// remainder's neighbors interfere.
+pub fn mig_mps_colocation(
+    proto: &Protocol,
+    profile: MigProfile,
+    thread_limit: f64,
+) -> Vec<MigMpsRow> {
+    let mechanisms = [
+        Mechanism::Mig { profile },
+        Mechanism::MigMps {
+            profile,
+            thread_limit,
+        },
+    ];
+    mechanisms
+        .into_iter()
+        .map(|mechanism| {
+            let name = mechanism.name().to_string();
+            let mut cfg = EngineConfig::new(proto.dev.clone(), mechanism);
+            cfg.record_ops = proto.record_ops;
+            let mut root = Rng::new(proto.seed);
+            let defs = vec![
+                CtxDef {
+                    name: "latency-infer".into(),
+                    source: Source::inference(
+                        DlModel::AlexNet.infer_profile().expect("profile"),
+                        proto.dev.clone(),
+                        proto.pattern,
+                        proto.requests,
+                        root.substream(),
+                    ),
+                    priority: 0,
+                },
+                CtxDef {
+                    name: "train".into(),
+                    source: Source::training(
+                        DlModel::AlexNet.train_profile().expect("profile"),
+                        proto.dev.clone(),
+                        proto.train_steps,
+                        root.substream(),
+                    ),
+                    priority: -2,
+                },
+                CtxDef {
+                    name: "batch-infer".into(),
+                    source: Source::inference(
+                        DlModel::AlexNet.infer_profile().expect("profile"),
+                        proto.dev.clone(),
+                        proto.pattern,
+                        proto.requests,
+                        root.substream(),
+                    ),
+                    priority: -2,
+                },
+            ];
+            let mut report = crate::sched::run(cfg, defs);
+            report.workload = format!("mig-mps-colocation/{name}");
+            let s = report.turnaround_summary();
+            MigMpsRow {
+                mechanism: name,
+                turnaround_ms: s.mean,
+                turnaround_cv: s.cv(),
+                train_s: report.train_time_s(),
+                report,
+            }
+        })
+        .collect()
 }
 
 /// The standard scenario protocol: the fast protocol on the A100-style
@@ -357,6 +481,60 @@ mod tests {
             .max()
             .unwrap();
         assert!(rep.cost.drain_ns <= max_span, "{} > {max_span}", rep.cost.drain_ns);
+    }
+
+    #[test]
+    fn gap_policy_gates_the_reconfiguration() {
+        use crate::control::policy::GainGatedGap;
+        // An unreachable target: every request overshoots massively, so
+        // the gain gate reconfigures and charges the measured cost.
+        let go = reconfigure_with_policy(
+            &proto(),
+            DlModel::AlexNet,
+            DlModel::AlexNet,
+            MigProfile::G2,
+            MigProfile::G4,
+            &GainGatedGap {
+                target_turnaround_ms: 0.0,
+            },
+        );
+        assert!(go.reconfigured);
+        assert_eq!(go.gap_policy, "gain-gated");
+        assert_eq!(go.reconfig_gap_ns, go.cost.total_ns());
+        // A sky-high target: nothing overshoots, the policy keeps the
+        // first layout and charges no gap — phase 2 runs under phase 1's
+        // split.
+        let keep = reconfigure_with_policy(
+            &proto(),
+            DlModel::AlexNet,
+            DlModel::AlexNet,
+            MigProfile::G2,
+            MigProfile::G4,
+            &GainGatedGap {
+                target_turnaround_ms: 1e12,
+            },
+        );
+        assert!(!keep.reconfigured);
+        assert_eq!(keep.reconfig_gap_ns, 0);
+        assert_eq!(keep.phase2.mechanism, "mig-2g");
+        assert_eq!(go.phase2.mechanism, "mig-4g");
+        // both phase-1 runs are identical: the policy only shapes phase 2
+        assert_eq!(go.phase1.to_json(), keep.phase1.to_json());
+    }
+
+    #[test]
+    fn mig_mps_colocation_rows_complete() {
+        let rows = mig_mps_colocation(&proto(), MigProfile::G3, 0.5);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].mechanism, "mig-3g");
+        assert_eq!(rows[1].mechanism, "mig-3g+mps");
+        for row in &rows {
+            assert!(row.report.oom.is_none(), "{}: {:?}", row.mechanism, row.report.oom);
+            // both inference contexts' requests complete
+            assert_eq!(row.report.requests.len(), 10, "{}", row.mechanism);
+            assert!(row.train_s.is_some(), "{}", row.mechanism);
+            assert!(row.turnaround_ms > 0.0);
+        }
     }
 
     #[test]

@@ -21,6 +21,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 pub mod cluster;
+pub mod control;
 pub mod mig;
 
 /// A unit of experiment work for [`run_parallel`].

@@ -29,6 +29,7 @@
 
 use super::config::DeviceConfig;
 use crate::bail;
+use crate::sim::{SimTime, MS};
 use crate::util::error::Result;
 
 /// Total compute slices a device exposes (NVIDIA fixes this at 7).
@@ -218,6 +219,57 @@ pub fn pair_layout(dev: &DeviceConfig, profile: MigProfile) -> Result<Vec<GpuIns
     partition_shapes(dev, &shapes)
 }
 
+/// `CreateGpuInstance` latency for an instance of `compute_slices` slices:
+/// a fixed setup cost plus a per-slice term (creation is hundreds of
+/// milliseconds on real hardware and grows with the instance's share of
+/// the device). The partition layer owns this number so the cost model
+/// (`exp::mig::ReconfigCost`) and the control-plane actuator price the
+/// same operation identically.
+pub fn creation_latency_ns(compute_slices: u32) -> SimTime {
+    80 * MS + 24 * MS * compute_slices as SimTime
+}
+
+/// A validated phase-boundary re-slice — the control plane's *apply* entry
+/// point on the partition layer. Both the outgoing and incoming layouts are
+/// materialized up front, so an infeasible target profile is an error at
+/// decision time rather than a mid-phase OOM, and the creation cost is
+/// priced from the instances actually built (profile + remainder), not just
+/// the named profile.
+#[derive(Clone, Debug)]
+pub struct ReslicePlan {
+    pub from: MigProfile,
+    pub to: MigProfile,
+    /// The layout being destroyed (must drain first).
+    pub from_layout: Vec<GpuInstance>,
+    /// The layout being created.
+    pub to_layout: Vec<GpuInstance>,
+}
+
+impl ReslicePlan {
+    /// Σ per-instance `CreateGpuInstance` latency for the incoming layout.
+    pub fn create_ns(&self) -> SimTime {
+        self.to_layout
+            .iter()
+            .map(|gi| creation_latency_ns(gi.compute_slices))
+            .sum()
+    }
+}
+
+/// Validate a `from → to` pair-layout re-slice on `dev`. Fails when the
+/// profiles are identical (a no-op is a policy bug, not an action) or when
+/// either layout cannot be built on the device.
+pub fn reslice_plan(dev: &DeviceConfig, from: MigProfile, to: MigProfile) -> Result<ReslicePlan> {
+    if from == to {
+        bail!("re-slice {} -> {} is a no-op", from.name(), to.name());
+    }
+    Ok(ReslicePlan {
+        from,
+        to,
+        from_layout: pair_layout(dev, from)?,
+        to_layout: pair_layout(dev, to)?,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -295,6 +347,28 @@ mod tests {
     fn tiny_devices_cannot_be_sliced() {
         let dev = DeviceConfig::tiny(4);
         assert!(partition(&dev, &[MigProfile::G1]).is_err());
+    }
+
+    #[test]
+    fn reslice_plan_validates_and_prices_both_layouts() {
+        let dev = DeviceConfig::a100();
+        let plan = reslice_plan(&dev, MigProfile::G3, MigProfile::G4).unwrap();
+        // 3g+4g out, 4g+3g in — same slices, swapped ownership.
+        assert_eq!(plan.from_layout.len(), 2);
+        assert_eq!(plan.to_layout.len(), 2);
+        assert_eq!(plan.to_layout[0].profile, Some(MigProfile::G4));
+        assert_eq!(plan.to_layout[1].profile, Some(MigProfile::G3));
+        // creation is charged per instance actually built
+        assert_eq!(
+            plan.create_ns(),
+            creation_latency_ns(4) + creation_latency_ns(3)
+        );
+        // latency is monotone in instance size
+        assert!(creation_latency_ns(7) > creation_latency_ns(1));
+        // a no-op swap is rejected
+        assert!(reslice_plan(&dev, MigProfile::G3, MigProfile::G3).is_err());
+        // an unsliceable device is rejected
+        assert!(reslice_plan(&DeviceConfig::tiny(4), MigProfile::G3, MigProfile::G4).is_err());
     }
 
     #[test]

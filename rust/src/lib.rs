@@ -23,11 +23,15 @@
 //! * [`cluster`] — the cluster-of-devices layer: one coordinator over N
 //!   heterogeneous simulated GPUs (`DeviceRt` fleet, `ClusterAccount`,
 //!   cross-device routing policies);
+//! * [`control`] — the closed-loop control plane: unified telemetry
+//!   signals + a policy engine driving MIG re-slicing, cluster
+//!   autoscaling, and mid-run migration at phase boundaries;
 //! * [`coordinator`] — the serving coordinator (router/batcher/governor);
 //! * [`runtime`] — PJRT runtime loading AOT-compiled JAX/Pallas artifacts;
 //! * [`util`] — PRNG, stats, CLI, tables, property-testing, bench harness.
 
 pub mod cluster;
+pub mod control;
 pub mod coordinator;
 pub mod examples_support;
 pub mod exp;

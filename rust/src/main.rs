@@ -29,7 +29,7 @@ fn main() {
         .describe("model", "workload model (resnet50, vgg19, ...)", Some("resnet50"))
         .describe(
             "mech",
-            "mechanism: baseline|streams|timeslice|mps|preempt|partitioned|mig[-Ng]",
+            "mechanism: baseline|streams|timeslice|mps|preempt|partitioned|mig[-Ng][+mps]",
             Some("mps"),
         )
         .describe("requests", "inference requests", Some("60"))
@@ -100,7 +100,7 @@ fn simulate(args: &Args) {
     let model = DlModel::from_name(&args.get_or("model", "resnet50")).expect("unknown model");
     let mech = Mechanism::from_name(&args.get_or("mech", "mps")).expect("unknown mechanism");
     let mut proto = proto_from(args);
-    if matches!(mech, Mechanism::Mig { .. }) {
+    if matches!(mech, Mechanism::Mig { .. } | Mechanism::MigMps { .. }) {
         // MIG needs the A100-style device: the 3090 neither exposes the
         // mechanism nor fits a max-batch trainer in a half-memory share.
         proto = proto.on_device(DeviceConfig::a100());

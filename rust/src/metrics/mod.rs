@@ -2,7 +2,7 @@
 //! training-task execution time used as the utilization proxy (O10), plus
 //! per-op timelines (for Figs 6–7) and occupancy sampling (for O10/E12).
 
-use crate::sim::{ns_to_ms, ns_to_s, SimTime};
+use crate::sim::{ns_to_ms, ns_to_s, SimTime, MS};
 use crate::util::stats::Summary;
 
 /// A completed inference request.
@@ -126,6 +126,67 @@ impl RunReport {
             }
         }
         (k as f64 / 1e6, t as f64 / 1e6)
+    }
+
+    // ------------------------------------------------------------------
+    // Control-plane signals (DESIGN.md §7b): the per-report quantities the
+    // telemetry layer (`control::signal`) reads. They live here — on the
+    // report — so every consumer (reconfiguration cost model, policies,
+    // serving router) derives the same number from the same definition
+    // instead of re-implementing ad-hoc per-report arithmetic.
+    // ------------------------------------------------------------------
+
+    /// Residual-life estimate when no requests completed (nothing to
+    /// measure from).
+    pub const FALLBACK_RESIDUAL_NS: SimTime = 50 * MS;
+
+    /// Expected residual life of the unit in flight at an arbitrary drain
+    /// point, `E[R] = E[X²] / 2·E[X]` over the completed request spans (the
+    /// inspection paradox: a drain disproportionately catches long units
+    /// mid-flight, so this exceeds half the mean span whenever spans vary).
+    /// The drain term of every phase-boundary action cost.
+    pub fn residual_life_ns(&self) -> SimTime {
+        let mut sum = 0.0f64;
+        let mut sum_sq = 0.0f64;
+        for r in &self.requests {
+            let x = r.turnaround_ns() as f64;
+            sum += x;
+            sum_sq += x * x;
+        }
+        if sum <= 0.0 {
+            return Self::FALLBACK_RESIDUAL_NS;
+        }
+        (sum_sq / (2.0 * sum)).ceil() as SimTime
+    }
+
+    /// Completed requests whose turnaround exceeded `deadline_ns` — the
+    /// per-lane SLO violation count.
+    pub fn slo_violations(&self, deadline_ns: SimTime) -> u64 {
+        self.requests
+            .iter()
+            .filter(|r| r.turnaround_ns() > deadline_ns)
+            .count() as u64
+    }
+
+    /// Total milliseconds of turnaround beyond `deadline_ns`, summed over
+    /// every completed request — the magnitude behind the violation count
+    /// (a policy's projected-gain numerator).
+    pub fn slo_overshoot_ms(&self, deadline_ns: SimTime) -> f64 {
+        self.requests
+            .iter()
+            .map(|r| ns_to_ms(r.turnaround_ns().saturating_sub(deadline_ns)))
+            .sum()
+    }
+
+    /// Time-averaged in-flight request count over the run (Little's law:
+    /// Σ turnaround / span) — the queue-depth signal. Zero for runs with no
+    /// requests or zero span.
+    pub fn avg_inflight(&self) -> f64 {
+        if self.sim_end == 0 {
+            return 0.0;
+        }
+        let total: u128 = self.requests.iter().map(|r| r.turnaround_ns() as u128).sum();
+        total as f64 / self.sim_end as f64
     }
 
     /// Fraction of preemption save time hidden off the critical path (O9).
@@ -280,6 +341,33 @@ mod tests {
     fn hidden_fraction_guards_zero() {
         let rep = RunReport::default();
         assert_eq!(rep.hidden_save_fraction(), 0.0);
+    }
+
+    #[test]
+    fn signal_methods_from_requests() {
+        let mut rep = RunReport::default();
+        for i in 0..4u64 {
+            rep.requests.push(RequestRecord {
+                id: i,
+                arrived: i * 10 * MS,
+                completed: i * 10 * MS + 10 * MS,
+            });
+        }
+        rep.sim_end = 40 * MS;
+        // uniform 10 ms spans: residual life is half a span
+        assert_eq!(rep.residual_life_ns(), 5 * MS);
+        // deadline 8 ms: every request violates by 2 ms
+        assert_eq!(rep.slo_violations(8 * MS), 4);
+        assert!((rep.slo_overshoot_ms(8 * MS) - 8.0).abs() < 1e-9);
+        // deadline above every span: clean
+        assert_eq!(rep.slo_violations(20 * MS), 0);
+        assert_eq!(rep.slo_overshoot_ms(20 * MS), 0.0);
+        // Little's law: 40 ms of busy turnaround over a 40 ms span = 1.0
+        assert!((rep.avg_inflight() - 1.0).abs() < 1e-9);
+        // empty report: fallback residual, zero in-flight
+        let empty = RunReport::default();
+        assert_eq!(empty.residual_life_ns(), RunReport::FALLBACK_RESIDUAL_NS);
+        assert_eq!(empty.avg_inflight(), 0.0);
     }
 
     #[test]

@@ -23,11 +23,13 @@
 //! `gpu::partition`), with per-instance dispatch and no cross-instance
 //! contention anywhere but the shared host link.
 
-use crate::gpu::partition;
+use crate::bail;
+use crate::gpu::partition::{self, MigProfile};
 use crate::gpu::{
     BlockState, Cohort, CohortId, DeviceAccount, DeviceConfig, FreezeMode, Occupancy, ResourceVec,
     SmState,
 };
+use crate::util::error::Result;
 use crate::metrics::{OccupancySample, OpKind, OpRecord, RequestRecord, RunReport};
 use crate::preempt::PreemptCostModel;
 use crate::sched::contention::ContentionModel;
@@ -289,7 +291,11 @@ impl DeviceRt {
         // MIG: each instance's carved DRAM share must also hold the
         // contexts pinned to it (the isolation that protects a neighbor
         // also caps what fits — the paper's isolation/utilization tension).
-        if matches!(cfg.mechanism, Mechanism::Mig { .. }) && report.oom.is_none() {
+        if matches!(
+            cfg.mechanism,
+            Mechanism::Mig { .. } | Mechanism::MigMps { .. }
+        ) && report.oom.is_none()
+        {
             for (i, inst) in instances.iter().enumerate() {
                 let need: u64 = ctxs
                     .iter()
@@ -372,17 +378,19 @@ impl DeviceRt {
         let nsms = sms.len();
         let mut infeasible = None;
         let ranges: Vec<(usize, usize, DeviceConfig)> = match &cfg.mechanism {
-            Mechanism::Mig { profile } => match partition::pair_layout(&cfg.dev, *profile) {
-                Ok(insts) => insts
-                    .into_iter()
-                    .map(|gi| (gi.sm_start as usize, gi.sm_count as usize, gi.dev))
-                    .collect(),
-                Err(e) => {
-                    infeasible =
-                        Some(format!("cannot MIG-partition '{}': {e}", cfg.dev.name));
-                    vec![(0, nsms, cfg.dev.clone())]
+            Mechanism::Mig { profile } | Mechanism::MigMps { profile, .. } => {
+                match partition::pair_layout(&cfg.dev, *profile) {
+                    Ok(insts) => insts
+                        .into_iter()
+                        .map(|gi| (gi.sm_start as usize, gi.sm_count as usize, gi.dev))
+                        .collect(),
+                    Err(e) => {
+                        infeasible =
+                            Some(format!("cannot MIG-partition '{}': {e}", cfg.dev.name));
+                        vec![(0, nsms, cfg.dev.clone())]
+                    }
                 }
-            },
+            }
             Mechanism::Partitioned { ctx0_sms } => {
                 // SM split only: DRAM and L2 stay whole-device and shared
                 // (what separates this from MIG).
@@ -621,10 +629,19 @@ impl DeviceRt {
     }
 
     /// MPS: additional thread headroom for `ctx` (u64::MAX when unlimited).
+    /// Plain MPS caps against the whole device; MPS nested inside MIG caps
+    /// against the *instance* the context is pinned to — each instance runs
+    /// its own MPS server, so a client's share is a fraction of its
+    /// instance's threads, invisible to the neighbor instances.
     fn thread_headroom(&self, ctx: usize) -> u64 {
         match self.cfg.mechanism {
             Mechanism::Mps { thread_limit } => {
                 let cap = (thread_limit * self.cfg.dev.total_threads() as f64) as u64;
+                cap.saturating_sub(self.ctxs[ctx].threads_resident)
+            }
+            Mechanism::MigMps { thread_limit, .. } => {
+                let cap =
+                    (thread_limit * self.ctx_dev(ctx).total_threads() as f64) as u64;
                 cap.saturating_sub(self.ctxs[ctx].threads_resident)
             }
             _ => u64::MAX,
@@ -906,7 +923,10 @@ impl DeviceRt {
         // disjoint DRAM/L2 shares, so only same-instance neighbors count
         // (with the default two-instance layout that means none, which IS
         // the mechanism's isolation guarantee).
-        let mig = matches!(self.cfg.mechanism, Mechanism::Mig { .. });
+        let mig = matches!(
+            self.cfg.mechanism,
+            Mechanism::Mig { .. } | Mechanism::MigMps { .. }
+        );
         let other_running = self.running_blocks.iter().enumerate().any(|(c, &n)| {
             c != ctx && n > 0 && (!mig || self.ctx_inst[c] == self.ctx_inst[ctx])
         });
@@ -1512,6 +1532,64 @@ impl DeviceRt {
         });
     }
 
+    // ------------------------------------------------------------------
+    // Control-plane entry points (DESIGN.md §7b). Phase-boundary actions
+    // execute *between* event-clock runs: a phase runs to quiescence, the
+    // control plane reads its report, and the next phase's runtime is
+    // built through these entry points. All three are pure functions of
+    // their inputs, so governed runs stay byte-identical under the
+    // experiment fan-out — the same determinism contract as PR 3's guard.
+    // ------------------------------------------------------------------
+
+    /// *Drain* entry point: expected time for this device's in-flight work
+    /// to quiesce at a phase boundary, measured from the completed phase's
+    /// own report (the residual-life estimator every action cost shares).
+    pub fn drain_ns(report: &RunReport) -> SimTime {
+        report.residual_life_ns()
+    }
+
+    /// *Apply* entry point for a `Reslice` action: the engine configuration
+    /// for the phase that follows — same device and knobs, new instance
+    /// layout — validated against the partition table *before* the phase
+    /// starts, so an infeasible target is rejected at decision time rather
+    /// than surfacing as a mid-phase OOM. MPS-inside-MIG keeps its
+    /// per-instance thread limit across the swap.
+    pub fn apply_reslice(cfg: &EngineConfig, to: MigProfile) -> Result<EngineConfig> {
+        let mechanism = match cfg.mechanism {
+            Mechanism::Mig { profile } => {
+                partition::reslice_plan(&cfg.dev, profile, to)?;
+                Mechanism::Mig { profile: to }
+            }
+            Mechanism::MigMps { profile, thread_limit } => {
+                partition::reslice_plan(&cfg.dev, profile, to)?;
+                Mechanism::MigMps {
+                    profile: to,
+                    thread_limit,
+                }
+            }
+            _ => bail!(
+                "cannot re-slice mechanism '{}': only MIG layouts reconfigure",
+                cfg.mechanism.name()
+            ),
+        };
+        let mut out = cfg.clone();
+        out.mechanism = mechanism;
+        Ok(out)
+    }
+
+    /// *Restore* entry point: build the runtime for a post-action phase
+    /// (e.g. a migrated job resuming from its checkpoint on a new device),
+    /// failing fast with the admission error the run would otherwise report
+    /// — so the actuator can reject an infeasible action instead of
+    /// charging a doomed phase.
+    pub fn restore(cfg: EngineConfig, defs: Vec<CtxDef>) -> Result<DeviceRt> {
+        let rt = DeviceRt::new(cfg, defs);
+        if let Some(oom) = &rt.report.oom {
+            bail!("restored configuration is infeasible: {oom}");
+        }
+        Ok(rt)
+    }
+
     /// Test hook: validate all SM invariants plus every instance account's
     /// differential invariant (incremental state == from-scratch rebuild of
     /// its SM slice).
@@ -2066,6 +2144,173 @@ mod tests {
             ],
         );
         assert!(rep.oom.is_none(), "{:?}", rep.oom);
+    }
+
+    #[test]
+    fn mig_mps_scopes_thread_limit_to_the_instance() {
+        // MPS nested inside MIG (ROADMAP "MPS inside an instance"): two
+        // best-effort contexts share the 4g remainder instance as MPS
+        // clients of *that instance's* server — each capped at a fraction
+        // of the instance's threads (not the device's) — while the
+        // latency context owns the 3g instance untouched.
+        use crate::gpu::MigProfile;
+        let dev = DeviceConfig::a100();
+        let limit = 0.5;
+        let cfg = EngineConfig::new(
+            dev.clone(),
+            Mechanism::MigMps {
+                profile: MigProfile::G3,
+                thread_limit: limit,
+            },
+        );
+        let mut eng = DeviceRt::new(
+            cfg,
+            vec![
+                CtxDef {
+                    name: "infer".into(),
+                    source: Source::inference(
+                        DlModel::AlexNet.infer_profile().unwrap(),
+                        dev.clone(),
+                        ArrivalPattern::ClosedLoop,
+                        3,
+                        Rng::new(11),
+                    ),
+                    priority: 0,
+                },
+                CtxDef {
+                    name: "train-a".into(),
+                    source: Source::training(
+                        DlModel::AlexNet.train_profile().unwrap(),
+                        dev.clone(),
+                        2,
+                        Rng::new(12),
+                    ),
+                    priority: -2,
+                },
+                CtxDef {
+                    name: "infer-b".into(),
+                    source: Source::inference(
+                        DlModel::AlexNet.infer_profile().unwrap(),
+                        dev,
+                        ArrivalPattern::ClosedLoop,
+                        2,
+                        Rng::new(13),
+                    ),
+                    priority: -2,
+                },
+            ],
+        );
+        // same pair layout as plain mig-3g: 45 + 60 SMs, ctx0 alone on the
+        // 3g instance, the two best-effort ctxs sharing the remainder
+        assert_eq!(eng.instances.len(), 2);
+        assert_eq!(eng.ctx_inst, vec![0, 1, 1]);
+        let caps: Vec<u64> = (0..3)
+            .map(|c| {
+                (limit * eng.instances[eng.ctx_inst[c]].dev.total_threads() as f64) as u64
+            })
+            .collect();
+        // the remainder cap is instance-scoped: strictly below the device's
+        assert!(caps[1] < (limit * eng.cfg.dev.total_threads() as f64) as u64);
+        for i in 0..eng.ctxs.len() {
+            eng.events.push(0, Ev::Poll { ctx: i });
+        }
+        while let Some((t, ev)) = eng.events.pop() {
+            eng.now = t;
+            match ev {
+                Ev::Poll { ctx } => eng.do_poll(ctx),
+                Ev::CohortDone { sm, id } => eng.on_cohort_done(sm, id),
+                Ev::TransferDone { chan } => eng.on_transfer_done(chan),
+                Ev::SliceExpire { epoch } => eng.on_slice_expire(epoch),
+                Ev::SliceStart { ctx, epoch } => eng.on_slice_start(ctx, epoch),
+                Ev::SaveDone { sm, id } => eng.on_save_done(sm, id),
+                Ev::HoldExpire { .. } => {
+                    eng.hold = None;
+                    eng.try_place();
+                }
+            }
+            eng.check_all_sms();
+            for (c, ctx) in eng.ctxs.iter().enumerate() {
+                assert!(
+                    ctx.threads_resident <= caps[c],
+                    "ctx '{}' resident {} > instance cap {}",
+                    ctx.name,
+                    ctx.threads_resident,
+                    caps[c]
+                );
+            }
+            // cross-instance isolation still holds
+            for (s, sm) in eng.sms.iter().enumerate() {
+                for c in &sm.cohorts {
+                    assert_eq!(eng.sm_owner[s], eng.ctx_inst[c.ctx]);
+                }
+            }
+            if eng.ctxs.iter().all(|c| c.state == CtxState::Done) {
+                break;
+            }
+        }
+        assert!(eng.ctxs.iter().all(|c| c.state == CtxState::Done));
+        assert!(eng.report.oom.is_none(), "{:?}", eng.report.oom);
+        assert_eq!(eng.report.requests.len(), 5);
+    }
+
+    #[test]
+    fn control_entry_points_validate_and_price() {
+        use crate::gpu::MigProfile;
+        let dev = DeviceConfig::a100();
+        // apply: a 3g→4g swap keeps every other knob and the MPS nesting
+        let cfg = EngineConfig::new(
+            dev.clone(),
+            Mechanism::MigMps {
+                profile: MigProfile::G3,
+                thread_limit: 0.5,
+            },
+        );
+        let next = DeviceRt::apply_reslice(&cfg, MigProfile::G4).unwrap();
+        assert_eq!(
+            next.mechanism,
+            Mechanism::MigMps {
+                profile: MigProfile::G4,
+                thread_limit: 0.5,
+            }
+        );
+        assert_eq!(next.max_sim_ns, cfg.max_sim_ns);
+        // a no-op swap and a non-MIG mechanism are decision-time errors
+        assert!(DeviceRt::apply_reslice(&cfg, MigProfile::G3).is_err());
+        let mps = EngineConfig::new(dev.clone(), Mechanism::mps_default());
+        assert!(DeviceRt::apply_reslice(&mps, MigProfile::G4).is_err());
+        // drain: delegates to the shared residual-life estimator
+        let rep = RunReport::default();
+        assert_eq!(DeviceRt::drain_ns(&rep), rep.residual_life_ns());
+        // restore: an infeasible configuration fails fast instead of
+        // charging a doomed phase…
+        let over = DeviceRt::restore(
+            EngineConfig::new(DeviceConfig::rtx3090(), Mechanism::TimeSlicing),
+            vec![
+                CtxDef {
+                    name: "t1".into(),
+                    source: train_src(DlModel::ResNet50, 1, 1),
+                    priority: 0,
+                },
+                CtxDef {
+                    name: "t2".into(),
+                    source: train_src(DlModel::ResNet152, 1, 2),
+                    priority: 0,
+                },
+            ],
+        );
+        assert!(over.is_err());
+        // …while a feasible one runs like any fresh runtime
+        let ok = DeviceRt::restore(
+            EngineConfig::new(DeviceConfig::rtx3090(), Mechanism::Baseline),
+            vec![CtxDef {
+                name: "t".into(),
+                source: train_src(DlModel::AlexNet, 1, 3),
+                priority: 0,
+            }],
+        )
+        .unwrap();
+        let rep = ok.run();
+        assert!(rep.train_done.is_some());
     }
 
     #[test]

@@ -114,6 +114,15 @@ pub enum Mechanism {
     /// exclusive SM ranges *and* partitioned DRAM/L2, so cross-instance
     /// work adds no contention anywhere but the shared host link.
     Mig { profile: MigProfile },
+    /// MPS nested inside MIG instances, as real Ampere deployments run it:
+    /// the same `profile` + remainder instance layout as [`Mechanism::Mig`],
+    /// but contexts sharing an instance are MPS clients of *that instance's*
+    /// MPS server — `thread_limit` caps each context at a fraction of its
+    /// own instance's thread capacity, not the whole device's. The engine's
+    /// shared-`7g` path is the degenerate case (one instance = whole-device
+    /// MPS); this variant makes per-instance thread limits expressible
+    /// (ROADMAP "MPS inside an instance").
+    MigMps { profile: MigProfile, thread_limit: f64 },
 }
 
 impl Mechanism {
@@ -121,7 +130,7 @@ impl Mechanism {
     /// proposal and the partitioning family), with default parameters.
     /// `from_name(m.name())` round-trips every entry; bench_table2
     /// renders the capability matrix from this list.
-    pub const ALL: [Mechanism; 11] = [
+    pub const ALL: [Mechanism; 12] = [
         Mechanism::Baseline,
         Mechanism::PriorityStreams,
         Mechanism::TimeSlicing,
@@ -143,6 +152,10 @@ impl Mechanism {
         Mechanism::Mig {
             profile: MigProfile::G7,
         },
+        Mechanism::MigMps {
+            profile: MigProfile::G3,
+            thread_limit: 1.0,
+        },
     ];
 
     pub fn mps_default() -> Mechanism {
@@ -161,6 +174,15 @@ impl Mechanism {
         }
     }
 
+    /// The balanced MIG split with MPS nested inside each instance
+    /// (unlimited thread share by default, as the paper ran plain MPS).
+    pub fn mig_mps_default() -> Mechanism {
+        Mechanism::MigMps {
+            profile: MigProfile::G3,
+            thread_limit: 1.0,
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             Mechanism::Baseline => "baseline",
@@ -176,10 +198,30 @@ impl Mechanism {
                 MigProfile::G4 => "mig-4g",
                 MigProfile::G7 => "mig-7g",
             },
+            Mechanism::MigMps { profile, .. } => match profile {
+                MigProfile::G1 => "mig-1g+mps",
+                MigProfile::G2 => "mig-2g+mps",
+                MigProfile::G3 => "mig-3g+mps",
+                MigProfile::G4 => "mig-4g+mps",
+                MigProfile::G7 => "mig-7g+mps",
+            },
         }
     }
 
+    /// Names denote *canonical* (default-parameter) mechanisms: `"mps"`
+    /// parses to the 100% thread limit, `"partitioned"` to the even split,
+    /// and `"mig-Ng+mps"` likewise to an unlimited in-instance share —
+    /// non-default parameters (e.g. `mig_mps_colocation`'s 0.5 cap) are
+    /// programmatic configuration, not spellable in specs or report
+    /// `mechanism` strings.
     pub fn from_name(s: &str) -> Option<Mechanism> {
+        if let Some(base) = s.strip_suffix("+mps") {
+            let p = base.strip_prefix("mig-").and_then(MigProfile::parse)?;
+            return Some(Mechanism::MigMps {
+                profile: p,
+                thread_limit: 1.0,
+            });
+        }
         if let Some(p) = s.strip_prefix("mig-").and_then(MigProfile::parse) {
             return Some(Mechanism::Mig { profile: p });
         }
@@ -207,6 +249,7 @@ impl Mechanism {
             Mechanism::FineGrained(_) => true,
             Mechanism::Partitioned { .. } => true,
             Mechanism::Mig { .. } => true, // instances are separate devices
+            Mechanism::MigMps { .. } => true, // per-instance MPS servers
         }
     }
 
@@ -222,6 +265,9 @@ impl Mechanism {
             // exclusive GPU instances — except 7g, which consumes every
             // slice: one shared instance, MPS-style colocation inside it
             Mechanism::Mig { profile } => *profile == MigProfile::G7,
+            // MPS inside each instance: contexts sharing an instance
+            // colocate on its SMs (cross-instance tasks still cannot)
+            Mechanism::MigMps { .. } => true,
         }
     }
 
@@ -238,6 +284,8 @@ impl Mechanism {
             Mechanism::Partitioned { .. } => false,
             // instance sizes likewise; reconfiguration requires a drain
             Mechanism::Mig { .. } => false,
+            // MPS thread limits shape shares, they do not prioritize
+            Mechanism::MigMps { .. } => false,
         }
     }
 
@@ -255,6 +303,7 @@ impl Mechanism {
                 MigProfile::G7 => "no (shared instance, leftover FCFS)",
                 _ => "n/a (hard instance isolation)",
             },
+            Mechanism::MigMps { .. } => "no (MPS inside instances, leftover FCFS)",
         }
     }
 
@@ -267,7 +316,9 @@ impl Mechanism {
     pub fn memory_isolation(&self) -> bool {
         match self {
             Mechanism::Baseline => true,
-            Mechanism::Mig { profile } => *profile != MigProfile::G7,
+            Mechanism::Mig { profile } | Mechanism::MigMps { profile, .. } => {
+                *profile != MigProfile::G7
+            }
             _ => false,
         }
     }
@@ -334,6 +385,7 @@ mod tests {
             "mig-3g",
             "mig-4g",
             "mig-7g",
+            "mig-3g+mps",
         ] {
             assert!(names.contains(&want), "ALL is missing {want}");
         }
@@ -363,6 +415,28 @@ mod tests {
         assert!(mig.memory_isolation());
         assert!(!Mechanism::Partitioned { ctx0_sms: 41 }.memory_isolation());
         assert!(!Mechanism::mps_default().memory_isolation());
+    }
+
+    #[test]
+    fn mig_mps_name_roundtrip_and_capabilities() {
+        // The nested mechanism round-trips through every profile spelling…
+        for p in MigProfile::ALL {
+            let m = Mechanism::MigMps {
+                profile: p,
+                thread_limit: 1.0,
+            };
+            assert_eq!(Mechanism::from_name(m.name()), Some(m.clone()), "{}", m.name());
+        }
+        assert!(Mechanism::from_name("mig-5g+mps").is_none());
+        assert!(Mechanism::from_name("bogus+mps").is_none());
+        // …and reads as MIG isolation across instances with MPS-style
+        // colocation inside one.
+        let m = Mechanism::mig_mps_default();
+        assert!(m.separate_processes());
+        assert!(m.colocation());
+        assert!(!m.priorities());
+        assert!(m.memory_isolation());
+        assert!(m.preempts_blocks().starts_with("no"));
     }
 
     #[test]

@@ -72,6 +72,28 @@ impl Source {
         }
     }
 
+    /// A training task resumed from a checkpoint (the control plane's
+    /// *restore* path, DESIGN.md §7b): of `total_steps`, `completed_steps`
+    /// already ran before the checkpoint — the resumed source emits only
+    /// the remainder, but *fast-forwards the RNG through the completed
+    /// steps' draws first*, so the resumed kernel stream continues the
+    /// original sequence exactly where it left off instead of replaying it
+    /// (checkpoint fidelity: migration moves the job, it does not rewind
+    /// it).
+    pub fn training_resumed(
+        profile: TaskProfile,
+        dev: DeviceConfig,
+        total_steps: u32,
+        completed_steps: u32,
+        mut rng: Rng,
+    ) -> Self {
+        let completed = completed_steps.min(total_steps);
+        for _ in 0..completed {
+            let _ = profile.gen_unit(&dev, &mut rng);
+        }
+        Self::training(profile, dev, total_steps - completed, rng)
+    }
+
     pub fn inference(
         profile: TaskProfile,
         dev: DeviceConfig,
@@ -297,6 +319,33 @@ mod tests {
             }
         }
         assert!(saw_started_in_past);
+    }
+
+    #[test]
+    fn resumed_training_continues_the_original_stream() {
+        // Running 1 step then resuming for the rest must reproduce the
+        // op stream of an uninterrupted 3-step run, op for op.
+        let p = DlModel::AlexNet.train_profile().unwrap();
+        let drain = |mut s: Source| {
+            let mut ops = Vec::new();
+            loop {
+                match s.next(0) {
+                    SourceOut::Op(op) => ops.push(op),
+                    SourceOut::Done => break,
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            ops
+        };
+        let whole = drain(Source::training(p.clone(), dev(), 3, Rng::new(9)));
+        let head = drain(Source::training(p.clone(), dev(), 1, Rng::new(9)));
+        let tail = drain(Source::training_resumed(p.clone(), dev(), 3, 1, Rng::new(9)));
+        let mut glued = head;
+        glued.extend(tail);
+        assert_eq!(glued, whole, "resume must continue, not replay");
+        // resuming past the end yields an immediately-done source
+        let mut done = Source::training_resumed(p, dev(), 2, 5, Rng::new(9));
+        assert_eq!(done.next(0), SourceOut::Done);
     }
 
     #[test]

@@ -121,6 +121,45 @@ fn cluster_scenarios_fanout_byte_identical() {
 }
 
 #[test]
+fn governed_scenarios_fanout_byte_identical() {
+    // The guard extended through the whole control loop (DESIGN.md §7b):
+    // a governed run — phases, signal frames, policy decisions, applied
+    // actions, charged gaps — must serialize byte-identically with the
+    // device fan-out on and off. Signals are pure functions of reports and
+    // policies are pure functions of signals, so any divergence means
+    // parallelism leaked into a decision.
+    use gpushare::exp::control::{bursty_reslice, failure_migrate};
+    let mk = |parallel| Protocol {
+        requests: 6,
+        train_steps: 2,
+        parallel,
+        ..Protocol::default()
+    };
+    let a = bursty_reslice(&mk(true));
+    let b = bursty_reslice(&mk(false));
+    assert_eq!(
+        a.to_json(),
+        b.to_json(),
+        "bursty re-slice: parallel and serial governed runs diverged"
+    );
+    // the governed loop is alive in this workload: actions were applied
+    assert!(a.governed.actions_applied() >= 1);
+    let a = failure_migrate(&mk(true));
+    let b = failure_migrate(&mk(false));
+    assert_eq!(
+        a.to_json(),
+        b.to_json(),
+        "failure migrate: parallel and serial governed runs diverged"
+    );
+    assert!(a.governed.actions_applied() >= 1);
+    // and the guard bites: a different seed changes the bytes
+    let mut p = mk(true);
+    p.seed = 20260729;
+    let c = failure_migrate(&p);
+    assert_ne!(a.to_json(), c.to_json(), "seed must influence governed runs");
+}
+
+#[test]
 fn repeated_runs_share_one_json_byte_for_byte() {
     let p = proto(true);
     let a = p

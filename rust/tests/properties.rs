@@ -885,3 +885,210 @@ fn prop_cluster_routing_conserves_jobs() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------
+// Control plane (DESIGN.md §7b)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_control_actions_conserve_jobs_and_account() {
+    // Random action streams over a random fleet: every applied action
+    // keeps the pinned-job multiset intact (migration moves jobs, it never
+    // creates or destroys them), keeps the persistent ClusterAccount equal
+    // to a from-scratch recompute from the pin list (the differential
+    // contract after re-slice, migrate, and scale), and every *rejected*
+    // action leaves the fleet byte-identical.
+    use gpushare::cluster::account::ClusterVec;
+    use gpushare::cluster::ClusterSpec;
+    use gpushare::control::policy::{Action, ScaleChange};
+    use gpushare::control::FleetState;
+    use gpushare::sched::Mechanism;
+
+    run_prop("control-actions=conserve", cfgd(), |g| {
+        let entries = ["3090:mps", "a100:mps", "a100:mig-3g", "a100:mig-4g+mps"];
+        let n = g.usize(2, 5);
+        let spec_s = (0..n)
+            .map(|_| *g.pick(&entries))
+            .collect::<Vec<_>>()
+            .join(",");
+        let spec = ClusterSpec::parse(&spec_s).unwrap();
+        let powered: Vec<bool> = (0..n).map(|_| g.chance(0.8)).collect();
+        let mut fleet = FleetState::with_powered(spec, powered);
+        // Pin a few jobs onto devices that fit them.
+        for j in 0..g.usize(0, 3) {
+            let demand = ClusterVec::new(g.u64(1 << 28, 12 << 30), 1, 0);
+            if let Some(d) = fleet.account.least_loaded(&demand) {
+                fleet.pin(&format!("job{j}"), d, demand);
+            }
+        }
+        let pinned_before = fleet.pinned_jobs();
+        if let Err(e) = fleet.check() {
+            return check(false, e);
+        }
+        for _ in 0..g.usize(1, 25) {
+            let action = match g.usize(0, 3) {
+                0 => {
+                    let device = g.usize(0, n - 1);
+                    let profiles = [MigProfile::G2, MigProfile::G3, MigProfile::G4];
+                    // mostly honest `from` (the device's real profile),
+                    // sometimes stale to exercise rejection
+                    let from = match &fleet.spec.devices[device].mechanism {
+                        Mechanism::Mig { profile }
+                        | Mechanism::MigMps { profile, .. }
+                            if g.chance(0.8) =>
+                        {
+                            *profile
+                        }
+                        _ => *g.pick(&profiles),
+                    };
+                    Action::Reslice {
+                        device,
+                        from,
+                        to: *g.pick(&profiles),
+                    }
+                }
+                1 => Action::Scale {
+                    change: ScaleChange::PowerUp {
+                        device: g.usize(0, n - 1),
+                    },
+                },
+                2 => Action::Scale {
+                    change: ScaleChange::PowerDown {
+                        device: g.usize(0, n - 1),
+                    },
+                },
+                _ => {
+                    // mostly real pins, sometimes a bogus job
+                    if !fleet.pins.is_empty() && g.chance(0.8) {
+                        let p = g.usize(0, fleet.pins.len() - 1);
+                        let src = if g.chance(0.8) {
+                            fleet.pins[p].device
+                        } else {
+                            g.usize(0, n - 1)
+                        };
+                        Action::Migrate {
+                            job: fleet.pins[p].job.clone(),
+                            src,
+                            dst: g.usize(0, n - 1),
+                        }
+                    } else {
+                        Action::Migrate {
+                            job: "ghost".into(),
+                            src: g.usize(0, n - 1),
+                            dst: g.usize(0, n - 1),
+                        }
+                    }
+                }
+            };
+            let before = fleet.clone();
+            let rec = fleet.apply(&action, None);
+            if rec.applied {
+                // applied actions charge honestly: scale-down is free,
+                // everything else pays a positive cost
+                match &action {
+                    Action::Scale {
+                        change: ScaleChange::PowerDown { .. },
+                    } => check_eq(rec.cost_ns, 0, "power-down is free")?,
+                    _ => check(rec.cost_ns > 0, "applied action has zero cost")?,
+                }
+            } else {
+                check(
+                    fleet == before,
+                    format!("rejected action mutated the fleet: {rec:?}"),
+                )?;
+            }
+            // conservation: the pinned-job multiset never changes size,
+            // and every pin sits on a powered device with its demand
+            // committed
+            check_eq(fleet.pinned_jobs(), pinned_before, "pinned jobs conserved")?;
+            for pin in &fleet.pins {
+                check(
+                    fleet.powered[pin.device],
+                    format!("pin '{}' on dark device {}", pin.job, pin.device),
+                )?;
+            }
+            // differential: the account equals a recompute from the pins
+            if let Err(e) = fleet.check() {
+                return check(false, e);
+            }
+            // aggregates stay exact sums
+            let mut sum_used = ClusterVec::ZERO;
+            for d in 0..n {
+                sum_used = sum_used.plus(&fleet.account.used(d));
+            }
+            check_eq(sum_used, fleet.account.agg_used(), "sum(used) == agg_used")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_governed_runs_conserve_and_reproduce() {
+    // Random small phased workloads under the autoscale policy: placement
+    // stays conserved every phase, the end-of-run fleet account matches
+    // its recompute, and re-running the identical scenario reproduces the
+    // report byte-for-byte (policies observe only signals).
+    use gpushare::cluster::{ClusterJob, ClusterRunConfig, ClusterSpec, PlacePolicy};
+    use gpushare::control::policy::RejectionAutoscale;
+    use gpushare::control::{run_governed, ControlConfig, FleetState, PhaseSpec};
+
+    let cfg_small = PropConfig {
+        cases: 6,
+        ..PropConfig::default()
+    };
+    run_prop("governed=conserved+reproducible", cfg_small, |g| {
+        let seed = g.u64(1, 1 << 40);
+        let n_phases = g.usize(1, 3);
+        let phases: Vec<PhaseSpec> = (0..n_phases)
+            .map(|i| {
+                let mut jobs = Vec::new();
+                for k in 0..g.usize(1, 3) {
+                    if g.bool() {
+                        jobs.push(ClusterJob::inference(
+                            &format!("i{i}{k}"),
+                            DlModel::AlexNet,
+                            g.u64(1, 3) as u32,
+                            Some(5),
+                        ));
+                    } else {
+                        jobs.push(ClusterJob::training(
+                            &format!("t{i}{k}"),
+                            DlModel::ResNet50,
+                            g.u64(1, 2) as u32,
+                        ));
+                    }
+                }
+                PhaseSpec::new(&format!("p{i}"), jobs)
+            })
+            .collect();
+        let spec = ClusterSpec::parse("3x3090:mps").unwrap();
+        let cfg = ControlConfig {
+            run: ClusterRunConfig {
+                seed,
+                parallel: false,
+                ..ClusterRunConfig::default()
+            },
+            place: PlacePolicy::LeastLoaded,
+        };
+        let run_once = || {
+            let mut fleet =
+                FleetState::with_powered(spec.clone(), vec![true, true, false]);
+            let mut policy = RejectionAutoscale { min_powered: 1 };
+            let rep = run_governed(&mut fleet, &phases, &mut policy, &cfg);
+            (rep, fleet)
+        };
+        let (rep_a, fleet_a) = run_once();
+        for phase in &rep_a.phases {
+            check(
+                phase.report.stats.conserved(),
+                format!("phase '{}' placement not conserved", phase.label),
+            )?;
+        }
+        if let Err(e) = fleet_a.check() {
+            return check(false, e);
+        }
+        let (rep_b, _) = run_once();
+        check_eq(rep_a.to_json(), rep_b.to_json(), "governed run reproducible")?;
+        Ok(())
+    });
+}
