@@ -6,7 +6,8 @@
 //! regular perf-smoke job.
 
 use gpushare::exp::control::{
-    bursty_reslice, control_sweep_events, diurnal_autoscale, failure_migrate,
+    bursty_reslice, bursty_reslice_inline, control_inline_sweep_events, control_sweep_events,
+    diurnal_autoscale, failure_migrate, failure_migrate_inline,
 };
 use gpushare::exp::Protocol;
 use gpushare::util::bench::{black_box, BenchConfig, Bencher};
@@ -33,7 +34,7 @@ fn main() {
     });
     let proto = control_proto();
 
-    // --- the gated control sweep (same entry name as bench_perf) ---
+    // --- the gated control sweeps (same entry names as bench_perf) ---
     let events = control_sweep_events(&proto);
     b.bench_items(
         &format!("sweep: control governed vs static ({events} events)"),
@@ -41,6 +42,16 @@ fn main() {
         |iters| {
             for _ in 0..iters {
                 black_box(control_sweep_events(&proto));
+            }
+        },
+    );
+    let inline_events = control_inline_sweep_events(&proto);
+    b.bench_items(
+        &format!("sweep: control in-clock vs boundary ({inline_events} events)"),
+        Some(inline_events),
+        |iters| {
+            for _ in 0..iters {
+                black_box(control_inline_sweep_events(&proto));
             }
         },
     );
@@ -80,6 +91,40 @@ fn main() {
         failure.governed.total_span_s(),
         failure.baseline.total_span_s(),
         failure.governed.actions_applied(),
+    );
+
+    // --- the in-clock governor (§7c): reacting mid-phase vs the boundary
+    // governor, plus the mid-phase failure-migration story ---
+    println!("\nin-clock vs boundary governor (both governed; §7c):");
+    let bursty_in = bursty_reslice_inline(&proto);
+    let burst = ["burst-1"];
+    println!(
+        "{:<24} in-clock p99 {:>9.2} ms | boundary p99 {:>9.2} ms | mid-phase actions {}",
+        "bursty burst p99",
+        bursty_in.governed.turnaround_summary_for(&burst).p99,
+        bursty_in.baseline.turnaround_summary_for(&burst).p99,
+        bursty_in.governed.inline_actions_applied(),
+    );
+    if let Some(first) = bursty_in.governed.phases[1]
+        .inline_actions
+        .iter()
+        .find(|r| r.record.applied)
+    {
+        println!(
+            "{:<24} decided {:.1} ms, landed {:.1} ms into a {:.1} ms burst phase",
+            "  first reaction",
+            first.decided_ns as f64 / 1e6,
+            first.applied_ns as f64 / 1e6,
+            bursty_in.governed.phases[1].frame.makespan_ns as f64 / 1e6,
+        );
+    }
+    let failure_in = failure_migrate_inline(&proto);
+    println!(
+        "{:<24} in-clock span {:>8.2} s | restart span {:>8.2} s | mid-phase actions {}",
+        "failure (mid-phase)",
+        failure_in.governed.total_span_s(),
+        failure_in.baseline.total_span_s(),
+        failure_in.governed.inline_actions_applied(),
     );
 
     // --- per-scenario wall-clock diagnostics ---

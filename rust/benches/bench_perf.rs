@@ -6,7 +6,7 @@
 use gpushare::coordinator::batcher::{BatchRunner, Batcher, BatcherConfig};
 use gpushare::coordinator::{serve, GovernorMode, ServeConfig};
 use gpushare::exp::cluster::cluster_sweep_events;
-use gpushare::exp::control::control_sweep_events;
+use gpushare::exp::control::{control_inline_sweep_events, control_sweep_events};
 use gpushare::exp::{mig_mechanisms, run_parallel, Job, Protocol};
 use gpushare::gpu::DeviceConfig;
 use gpushare::runtime::{MockExecutor, ModelExecutor};
@@ -272,6 +272,21 @@ fn main() {
         |iters| {
             for _ in 0..iters {
                 black_box(control_sweep_events(&control_proto));
+            }
+        },
+    );
+
+    // --- the in-clock governor sweep (§7c): the same bursty scenario with
+    // the policy running *inside* the event clock (lockstep stepping,
+    // per-wake window frames, masked-dispatch drains, mid-phase re-slice)
+    // against the boundary governor — gates the GovernorRt path ---
+    let inline_events = control_inline_sweep_events(&control_proto);
+    sweep_bench.bench_items(
+        &format!("sweep: control in-clock vs boundary ({inline_events} events)"),
+        Some(inline_events),
+        |iters| {
+            for _ in 0..iters {
+                black_box(control_inline_sweep_events(&control_proto));
             }
         },
     );

@@ -283,6 +283,23 @@ impl ClusterJob {
         matches!(self.kind, JobKind::Inference { .. })
     }
 
+    /// The model this job runs.
+    pub fn model(&self) -> DlModel {
+        match &self.kind {
+            JobKind::Inference { model, .. }
+            | JobKind::Training { model, .. }
+            | JobKind::TrainingResumed { model, .. } => *model,
+        }
+    }
+
+    /// Bytes a migration moves for this job: the model's weights +
+    /// optimizer state from its parameter count
+    /// ([`DlModel::checkpoint_bytes`]) — first-principles, not a fraction
+    /// of the resident footprint.
+    pub fn checkpoint_bytes(&self) -> u64 {
+        self.model().checkpoint_bytes()
+    }
+
     /// The job's demand vector against a device's [`DeviceSpec::capacity`].
     /// DRAM is the job's resident footprint; one job takes one slot; the
     /// thread dimension carries no demand at this layer (per-SM placement
@@ -593,6 +610,127 @@ impl Cluster {
         self.run_placement(jobs, &placement.assignment, placement.stats, policy.name(), cfg)
     }
 
+    /// Source construction for one placed job. The RNG is rooted at the
+    /// job's *index* in the phase job list, so neither placement nor
+    /// fan-out can perturb any stream — and a mid-phase resume built with
+    /// the same index continues the original kernel stream exactly
+    /// (`Source::training_resumed` fast-forwards through the completed
+    /// steps).
+    pub fn job_source(
+        device: &DeviceSpec,
+        job: &ClusterJob,
+        cfg: &ClusterRunConfig,
+        ji: usize,
+    ) -> Source {
+        let dev = device.model.config();
+        match &job.kind {
+            JobKind::Inference { model, requests } => Source::inference(
+                model.infer_profile().expect("inference profile"),
+                dev,
+                cfg.pattern,
+                *requests,
+                Self::job_rng(cfg, ji),
+            ),
+            JobKind::Training { model, steps } => Source::training(
+                model.train_profile().expect("training profile"),
+                dev,
+                *steps,
+                Self::job_rng(cfg, ji),
+            ),
+            JobKind::TrainingResumed {
+                model,
+                total_steps,
+                completed,
+            } => Source::training_resumed(
+                model.train_profile().expect("training profile"),
+                dev,
+                *total_steps,
+                *completed,
+                Self::job_rng(cfg, ji),
+            ),
+        }
+    }
+
+    /// Build one live [`DeviceRt`] per device for an already-decided
+    /// placement (`None` slots are idle devices), plus the per-lane
+    /// job-name lists — the construction half of
+    /// [`Cluster::run_placement`], split out so the in-clock governor
+    /// (`sched::GovernorRt`) can own and step the very runtimes the
+    /// boundary path runs to completion. Pure: identical inputs build
+    /// identical runtimes. Context order within a device follows job order
+    /// (the engine pins ctx 0 to the latency instance under MIG, so the
+    /// scenarios list inference jobs first).
+    pub fn build_runtimes(
+        &self,
+        jobs: &[ClusterJob],
+        assignment: &[Option<usize>],
+        cfg: &ClusterRunConfig,
+    ) -> (Vec<Option<DeviceRt>>, Vec<Vec<String>>) {
+        assert_eq!(assignment.len(), jobs.len());
+        let n = self.spec.devices.len();
+        let mut defs: Vec<Vec<CtxDef>> = (0..n).map(|_| Vec::new()).collect();
+        let mut lane_jobs: Vec<Vec<String>> = (0..n).map(|_| Vec::new()).collect();
+        for (ji, job) in jobs.iter().enumerate() {
+            let Some(d) = assignment[ji] else {
+                continue;
+            };
+            defs[d].push(CtxDef {
+                name: job.name.clone(),
+                source: Self::job_source(&self.spec.devices[d], job, cfg, ji),
+                priority: job.priority,
+            });
+            lane_jobs[d].push(job.name.clone());
+        }
+        let rts = defs
+            .into_iter()
+            .enumerate()
+            .map(|(d, device_defs)| {
+                if device_defs.is_empty() {
+                    return None;
+                }
+                let spec = &self.spec.devices[d];
+                let mut ecfg = EngineConfig::new(spec.model.config(), spec.mechanism.clone());
+                ecfg.record_ops = cfg.record_ops;
+                ecfg.occupancy_sample_ns = cfg.occupancy_sample_ns;
+                Some(DeviceRt::new(ecfg, device_defs))
+            })
+            .collect();
+        (rts, lane_jobs)
+    }
+
+    /// Roll per-device reports into the cluster view (`None` reports
+    /// become idle lanes) — the assembly half of
+    /// [`Cluster::run_placement`], shared with the in-clock governor.
+    pub fn assemble_report(
+        &self,
+        reports: Vec<Option<RunReport>>,
+        mut lane_jobs: Vec<Vec<String>>,
+        stats: PlacementStats,
+        policy_name: &str,
+    ) -> ClusterRunReport {
+        let lanes = reports
+            .into_iter()
+            .enumerate()
+            .map(|(d, report)| ClusterLane {
+                device: self.spec.devices[d].name(),
+                mechanism: self.spec.devices[d].mechanism.name().to_string(),
+                jobs: std::mem::take(&mut lane_jobs[d]),
+                report: report.unwrap_or_else(|| RunReport {
+                    // An idle device contributes an empty lane report.
+                    mechanism: self.spec.devices[d].mechanism.name().to_string(),
+                    workload: "idle".to_string(),
+                    ..Default::default()
+                }),
+            })
+            .collect();
+        ClusterRunReport {
+            spec: self.spec.name(),
+            policy: policy_name.to_string(),
+            lanes,
+            stats,
+        }
+    }
+
     /// Run an already-decided placement — the entry point the control loop
     /// uses after [`place_pinned`] (and after phase-boundary actions have
     /// moved pins or re-sliced devices). `assignment[i] = None` means job
@@ -607,92 +745,20 @@ impl Cluster {
         policy_name: &str,
         cfg: &ClusterRunConfig,
     ) -> ClusterRunReport {
-        assert_eq!(assignment.len(), jobs.len());
-        // Per-device context definitions, in job order within each device
-        // (the engine pins ctx 0 to the latency instance under MIG, so the
-        // scenarios list inference jobs first).
-        let n = self.spec.devices.len();
-        let mut defs: Vec<Vec<CtxDef>> = (0..n).map(|_| Vec::new()).collect();
-        let mut lane_jobs: Vec<Vec<String>> = (0..n).map(|_| Vec::new()).collect();
-        for (ji, job) in jobs.iter().enumerate() {
-            let Some(d) = assignment[ji] else {
-                continue;
-            };
-            let dev = self.spec.devices[d].model.config();
-            let source = match &job.kind {
-                JobKind::Inference { model, requests } => Source::inference(
-                    model.infer_profile().expect("inference profile"),
-                    dev,
-                    cfg.pattern,
-                    *requests,
-                    Self::job_rng(cfg, ji),
-                ),
-                JobKind::Training { model, steps } => Source::training(
-                    model.train_profile().expect("training profile"),
-                    dev,
-                    *steps,
-                    Self::job_rng(cfg, ji),
-                ),
-                JobKind::TrainingResumed {
-                    model,
-                    total_steps,
-                    completed,
-                } => Source::training_resumed(
-                    model.train_profile().expect("training profile"),
-                    dev,
-                    *total_steps,
-                    *completed,
-                    Self::job_rng(cfg, ji),
-                ),
-            };
-            defs[d].push(CtxDef {
-                name: job.name.clone(),
-                source,
-                priority: job.priority,
-            });
-            lane_jobs[d].push(job.name.clone());
-        }
-        let mut runs: Vec<Job<'_, RunReport>> = Vec::with_capacity(n);
-        for (d, device_defs) in defs.into_iter().enumerate() {
-            let spec = self.spec.devices[d].clone();
-            let record_ops = cfg.record_ops;
-            let occupancy_sample_ns = cfg.occupancy_sample_ns;
-            runs.push(Box::new(move || {
-                if device_defs.is_empty() {
-                    // An idle device contributes an empty lane report.
-                    return RunReport {
-                        mechanism: spec.mechanism.name().to_string(),
-                        workload: "idle".to_string(),
-                        ..Default::default()
-                    };
-                }
-                let mut ecfg = EngineConfig::new(spec.model.config(), spec.mechanism.clone());
-                ecfg.record_ops = record_ops;
-                ecfg.occupancy_sample_ns = occupancy_sample_ns;
-                DeviceRt::new(ecfg, device_defs).run()
-            }));
-        }
+        let (rts, lane_jobs) = self.build_runtimes(jobs, assignment, cfg);
+        let runs: Vec<Job<'_, Option<RunReport>>> = rts
+            .into_iter()
+            .map(|rt| {
+                let job: Job<'_, Option<RunReport>> = Box::new(move || rt.map(DeviceRt::run));
+                job
+            })
+            .collect();
         let reports = if cfg.parallel {
             run_parallel(runs)
         } else {
             runs.into_iter().map(|f| f()).collect()
         };
-        let lanes = reports
-            .into_iter()
-            .enumerate()
-            .map(|(d, report)| ClusterLane {
-                device: self.spec.devices[d].name(),
-                mechanism: self.spec.devices[d].mechanism.name().to_string(),
-                jobs: std::mem::take(&mut lane_jobs[d]),
-                report,
-            })
-            .collect();
-        ClusterRunReport {
-            spec: self.spec.name(),
-            policy: policy_name.to_string(),
-            lanes,
-            stats,
-        }
+        self.assemble_report(reports, lane_jobs, stats, policy_name)
     }
 }
 

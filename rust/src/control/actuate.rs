@@ -34,13 +34,6 @@ pub const PROVISION_NS: SimTime = 500 * MS;
 /// engine's default `transfer_latency_ns`).
 pub const CHECKPOINT_LATENCY_NS: SimTime = 10 * US;
 
-/// Checkpoint bytes for a job holding `dram_bytes` resident: weights +
-/// optimizer state travel; activations and workspace (which dominate the
-/// resident footprint at training batch sizes) are recomputed, not moved.
-pub fn checkpoint_bytes(dram_bytes: u64) -> u64 {
-    dram_bytes / 16
-}
-
 /// A long-running job pinned to a device across phases (the unit a
 /// `Migrate` moves). Its demand stays committed in the fleet account.
 #[derive(Clone, Debug, PartialEq)]
@@ -48,6 +41,12 @@ pub struct Pin {
     pub job: String,
     pub device: usize,
     pub demand: ClusterVec,
+    /// Bytes a `Migrate` moves for this job: weights + optimizer state
+    /// from the model's parameter count
+    /// ([`crate::workload::DlModel::checkpoint_bytes`] via
+    /// [`crate::cluster::ClusterJob::checkpoint_bytes`]) — activations and
+    /// workspace are recomputed on resume, not moved.
+    pub ckpt_bytes: u64,
 }
 
 /// Everything a phase-boundary action can mutate. `PartialEq` backs the
@@ -149,7 +148,9 @@ impl FleetState {
     }
 
     /// Pin a job to a device, committing its demand in the fleet account.
-    pub fn pin(&mut self, job: &str, device: usize, demand: ClusterVec) {
+    /// `ckpt_bytes` is what a migration moves for this job (weights +
+    /// optimizer state; see [`crate::cluster::ClusterJob::checkpoint_bytes`]).
+    pub fn pin(&mut self, job: &str, device: usize, demand: ClusterVec, ckpt_bytes: u64) {
         assert!(
             self.account.commit(device, &demand),
             "pin '{job}' does not fit device {device}"
@@ -158,6 +159,7 @@ impl FleetState {
             job: job.to_string(),
             device,
             demand,
+            ckpt_bytes,
         });
     }
 
@@ -195,6 +197,19 @@ impl FleetState {
             Action::Scale { change } => self.apply_scale(action, *change),
             Action::Migrate { job, src, dst } => self.apply_migrate(action, job, *src, *dst, last),
         }
+    }
+
+    /// Checkpoint transfer span for `bytes` moving `src → dst`: one leg
+    /// off the source's host link, one onto the destination's, each at
+    /// that device's PCIe bandwidth plus the fixed per-transfer latency.
+    /// Shared by the boundary actuator and the in-clock governor so both
+    /// worlds price the same movement identically.
+    pub fn migrate_transfer_ns(&self, src: usize, dst: usize, bytes: u64) -> SimTime {
+        let leg = |d: usize| -> SimTime {
+            let bw = self.spec.devices[d].model.config().pcie_bw_bytes_per_s;
+            CHECKPOINT_LATENCY_NS + (bytes as f64 / bw as f64 * 1e9).ceil() as SimTime
+        };
+        leg(src) + leg(dst)
     }
 
     fn lane_residual_ns(last: Option<&ClusterRunReport>, device: usize) -> SimTime {
@@ -315,18 +330,12 @@ impl FleetState {
             return Self::reject(action, format!("device {dst} cannot receive"));
         }
         let demand = self.pins[pi].demand;
+        let bytes = self.pins[pi].ckpt_bytes;
         if !self.account.fits(dst, &demand) {
             return Self::reject(action, format!("'{job}' does not fit device {dst}"));
         }
-        // Checkpoint off the draining device's link, restore over the
-        // destination's: two legs at each device's PCIe bandwidth.
-        let bytes = checkpoint_bytes(demand.dram);
-        let leg = |d: usize| -> SimTime {
-            let bw = self.spec.devices[d].model.config().pcie_bw_bytes_per_s;
-            CHECKPOINT_LATENCY_NS + (bytes as f64 / bw as f64 * 1e9).ceil() as SimTime
-        };
         let drain_ns = Self::lane_residual_ns(last, src);
-        let transfer_ns = leg(src) + leg(dst);
+        let transfer_ns = self.migrate_transfer_ns(src, dst, bytes);
         self.account.release(src, &demand);
         let ok = self.account.commit(dst, &demand);
         debug_assert!(ok, "fits() checked above");
@@ -436,7 +445,10 @@ mod tests {
     fn migrate_moves_pin_and_charges_transfer() {
         let mut f = fleet("2xa100:mps");
         let demand = ClusterVec::new(16 << 30, 1, 0);
-        f.pin("train0", 0, demand);
+        // first-principles checkpoint: 1 GiB of weights + optimizer state
+        // (far below the 16 GiB resident footprint)
+        let bytes: u64 = 1 << 30;
+        f.pin("train0", 0, demand, bytes);
         f.check().unwrap();
         f.draining[0] = true;
         let rec = f.apply(
@@ -453,15 +465,14 @@ mod tests {
         assert_eq!(f.account.used(1), demand);
         f.check().unwrap();
         assert_eq!(f.pinned_jobs(), 1);
-        // cost: fallback drain + two transfer legs of the 1 GB checkpoint
-        let bytes = checkpoint_bytes(16 << 30);
-        assert_eq!(bytes, 1 << 30);
+        // cost: fallback drain + two transfer legs of the 1 GiB checkpoint
         let leg = CHECKPOINT_LATENCY_NS
             + (bytes as f64 / 25_000_000_000.0 * 1e9).ceil() as SimTime;
         assert_eq!(
             rec.cost_ns,
             crate::metrics::RunReport::FALLBACK_RESIDUAL_NS + 2 * leg
         );
+        assert_eq!(f.migrate_transfer_ns(0, 1, bytes), 2 * leg);
         // a second migrate of the same pin from the old device is stale
         assert!(
             !f.apply(

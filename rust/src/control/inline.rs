@@ -1,0 +1,891 @@
+//! The in-clock control loop (DESIGN.md §7c): the `Policy` engine running
+//! *inside* one event clock, with governor wake-ups as simulation events
+//! interleaved with kernel dispatch and completion.
+//!
+//! The boundary loop (`control::run_governed`, §7b) reproduces exactly the
+//! paper's limitation: coarse mechanisms can only react *between* runs, so
+//! a burst is over before the fleet reshapes. Here the governor owns the
+//! live device runtimes through `sched::GovernorRt` and:
+//!
+//! * wakes every `cadence_ns` of simulated time, snapshots a
+//!   [`SignalFrame`] from the **live in-flight state** (windowed since the
+//!   previous wake — completions, violations, arrival rate λ, queue
+//!   depth), and lets the policy decide mid-phase;
+//! * models drain honestly as *masked dispatch*: the acted-on device stops
+//!   admitting new blocks while resident work completes, with
+//!   partially-drained state carried forward — no charged gap, the queue
+//!   that builds during the drain is simulated;
+//! * books each action's effect at its **true completion event**: a
+//!   re-slice lands at `drain_end + Σ CreateGpuInstance`, a migration
+//!   retires the job at `drain_end + checkpoint transfer` on the source
+//!   clock and resumes its continuation on the destination clock at that
+//!   same instant, a power-up lands after its provision latency;
+//! * kills drained work nobody migrated once everything else finished —
+//!   the failure world's honest outcome (lost steps, no completion
+//!   record).
+//!
+//! **Cadence = ∞ is the boundary loop.** [`run_governed_inline`] with
+//! [`GovernorConfig::boundary`] takes the §7b code path verbatim —
+//! placement, `Cluster::run_placement`, end-of-phase frame, boundary
+//! actuation, charged gap — so `control::run_governed` is now a one-line
+//! delegation and both worlds share one actuation path
+//! (`FleetState::apply` does the bookkeeping in both; only *when effects
+//! land* differs). The equivalence test asserts byte-identical
+//! `ControlReport` JSON.
+//!
+//! **Determinism.** Governor events are pure functions of (spec, phases,
+//! seed, cadence); devices are independent between governor events, so the
+//! lockstep advance fans out one device per worker thread with
+//! byte-identical results (§8a) — the determinism guard covers the
+//! in-clock scenarios too.
+
+use super::actuate::{ActionRecord, FleetState, PROVISION_NS};
+use super::policy::{Action, Policy, PolicyCtx, ScaleChange};
+use super::signal::{LaneSignal, SignalFrame};
+use super::{apply_fleet_event, phase_seed, ControlConfig, ControlReport, PhaseOutcome, PhaseSpec};
+use crate::cluster::{
+    place_pinned, Cluster, ClusterJob, ClusterRunConfig, ClusterRunReport, JobKind, Placement,
+    PlacementStats,
+};
+use crate::gpu::partition;
+use crate::metrics::RunReport;
+use crate::sched::{CtxDef, EngineConfig, GovernorRt};
+use crate::sim::{SimTime, SEC};
+
+/// Knobs of the in-clock governor.
+#[derive(Clone, Copy, Debug)]
+pub struct GovernorConfig {
+    /// Simulated time between governor wake-ups. `None` = ∞: the governor
+    /// observes only completed phases — exactly the boundary loop.
+    pub cadence_ns: Option<SimTime>,
+}
+
+impl GovernorConfig {
+    /// The degenerate cadence=∞ governor: the §7b boundary loop.
+    pub fn boundary() -> GovernorConfig {
+        GovernorConfig { cadence_ns: None }
+    }
+
+    /// Wake every `ns` of simulated time.
+    pub fn cadence(ns: SimTime) -> GovernorConfig {
+        assert!(ns > 0, "cadence must be positive (use boundary() for ∞)");
+        GovernorConfig {
+            cadence_ns: Some(ns),
+        }
+    }
+}
+
+/// One in-clock action: when the policy decided it and when its effect
+/// completed, both on the phase's simulation clock.
+#[derive(Clone, Debug)]
+pub struct InlineActionRecord {
+    pub decided_ns: SimTime,
+    pub applied_ns: SimTime,
+    pub record: ActionRecord,
+}
+
+impl InlineActionRecord {
+    /// Reaction-to-effect span of this action.
+    pub fn span_ns(&self) -> SimTime {
+        self.applied_ns.saturating_sub(self.decided_ns)
+    }
+
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"decided_ns\":{},\"applied_ns\":{},\"record\":{}}}",
+            self.decided_ns,
+            self.applied_ns,
+            self.record.to_json()
+        )
+    }
+}
+
+/// A staged action waiting for its true completion event.
+struct PendingAction {
+    action: Action,
+    decided_ns: SimTime,
+    apply_at: SimTime,
+    /// Index of the migrating job in the phase job list (`None` when the
+    /// job is not live this phase — the migration is fleet-bookkeeping
+    /// only).
+    migrate_ji: Option<usize>,
+}
+
+/// The devices an action touches — the busy-guard's unit (one mapping,
+/// used for both the staged and the incoming side).
+fn action_devices(action: &Action) -> Vec<usize> {
+    match action {
+        Action::Reslice { device, .. } => vec![*device],
+        Action::Scale {
+            change: ScaleChange::PowerUp { device },
+        }
+        | Action::Scale {
+            change: ScaleChange::PowerDown { device },
+        } => vec![*device],
+        Action::Migrate { src, dst, .. } => vec![*src, *dst],
+    }
+}
+
+fn busy(pending: &[PendingAction], action: &Action) -> bool {
+    let devices = action_devices(action);
+    pending.iter().any(|p| {
+        action_devices(&p.action)
+            .iter()
+            .any(|d| devices.contains(d))
+    })
+}
+
+/// Feasibility of resuming the *live* job `job` on `dst` — shared by
+/// `stage_action` (run before the source is masked, so a doomed
+/// migration rejects instead of draining and losing work) and the
+/// land-time backstop in `apply_pending`. Returns the job's index in the
+/// phase list and its resident training footprint. An idle destination
+/// (no runtime this phase) is feasible: a fresh runtime is built at land
+/// time ([`GovernorRt::ensure_runtime`]), so it is checked against the
+/// device's conservative capacity instead of live residents.
+fn validate_migrate(
+    fleet: &FleetState,
+    gov: &GovernorRt,
+    phase_jobs: &[ClusterJob],
+    job: &str,
+    dst: usize,
+) -> std::result::Result<(usize, u64), String> {
+    let Some(ji) = phase_jobs.iter().position(|j| j.name == job) else {
+        return Err(format!("'{job}' is live but not in this phase's job list"));
+    };
+    let footprint = match &phase_jobs[ji].kind {
+        JobKind::Training { model, .. } | JobKind::TrainingResumed { model, .. } => model
+            .train_profile()
+            .map(|p| p.dram_footprint)
+            .unwrap_or(0),
+        JobKind::Inference { .. } => {
+            return Err("only training jobs migrate in-clock".to_string());
+        }
+    };
+    match gov.device(dst) {
+        Some(rt) => rt.can_admit(job, footprint).map_err(|e| e.to_string())?,
+        None => {
+            let cap = fleet.spec.devices[dst].capacity().dram;
+            if footprint > cap {
+                return Err(format!(
+                    "'{job}' ({footprint} B) exceeds idle device {dst}'s share ({cap} B)"
+                ));
+            }
+        }
+    }
+    Ok((ji, footprint))
+}
+
+/// Build a windowed frame: one lane signal per device over
+/// `(since, until]`, plus the phase's (constant) routing pressure.
+/// `lane_reports[d]` is the device's report at snapshot time — the live
+/// mid-run report at a wake, the assembled lane report at the phase end
+/// (`None` for idle devices) — so the per-wake and end-of-phase frames
+/// share one assembly. `prev_arrivals` carries the cumulative arrival
+/// counters between windows.
+#[allow(clippy::too_many_arguments)]
+fn window_frame(
+    fleet: &FleetState,
+    lane_reports: &[Option<&RunReport>],
+    lane_jobs: &[Vec<String>],
+    phase_jobs: &[ClusterJob],
+    stats: &PlacementStats,
+    phase_idx: usize,
+    since: SimTime,
+    until: SimTime,
+    makespan_ns: SimTime,
+    prev_arrivals: &mut [u64],
+) -> SignalFrame {
+    let deadlines = SignalFrame::lane_deadlines_for(lane_jobs, phase_jobs);
+    let empty = RunReport::default();
+    let lanes = (0..fleet.spec.devices.len())
+        .map(|d| {
+            let device = fleet.spec.devices[d].name();
+            let mechanism = fleet.spec.devices[d].mechanism.name();
+            let (rep, jobs) = match lane_reports[d] {
+                Some(rep) => (rep, lane_jobs[d].len() as u64),
+                None => (&empty, 0),
+            };
+            let arrivals = rep.arrivals.saturating_sub(prev_arrivals[d]);
+            prev_arrivals[d] = rep.arrivals;
+            LaneSignal::from_window(
+                &device,
+                mechanism,
+                jobs,
+                rep,
+                deadlines[d],
+                since,
+                until,
+                arrivals,
+            )
+        })
+        .collect();
+    SignalFrame {
+        phase: phase_idx as u64,
+        lanes,
+        admitted: stats.admitted,
+        placed: stats.placed,
+        rejected: stats.rejected,
+        makespan_ns,
+    }
+}
+
+/// Validate-and-stage one policy action at wake time `t`: a rejected
+/// action records immediately; a valid one masks what must drain and
+/// books its completion event.
+fn stage_action(
+    fleet: &FleetState,
+    gov: &mut GovernorRt,
+    phase_jobs: &[ClusterJob],
+    action: Action,
+    t: SimTime,
+    pending: &mut Vec<PendingAction>,
+    records: &mut Vec<InlineActionRecord>,
+) {
+    if busy(pending, &action) {
+        // An action is already in flight on these devices; the policy will
+        // re-observe once it lands. Not recorded: per-wake duplicates of
+        // one decision are noise, not actions.
+        return;
+    }
+    // Dry-run against the fleet bookkeeping: stale/infeasible actions are
+    // rejected at decision time, mutating nothing.
+    let mut probe = fleet.clone();
+    let probe_rec = probe.apply(&action, None);
+    if !probe_rec.applied {
+        records.push(InlineActionRecord {
+            decided_ns: t,
+            applied_ns: t,
+            record: probe_rec,
+        });
+        return;
+    }
+    match &action {
+        Action::Reslice { device, from, to } => {
+            let d = *device;
+            let dev_cfg = fleet.spec.devices[d].model.config();
+            let create_ns = partition::reslice_plan(&dev_cfg, *from, *to)
+                .map(|p| p.create_ns())
+                .unwrap_or(0);
+            let _ = gov.mask_device(d);
+            let apply_at = gov.drain_end(d).saturating_add(create_ns);
+            pending.push(PendingAction {
+                action,
+                decided_ns: t,
+                apply_at,
+                migrate_ji: None,
+            });
+        }
+        Action::Migrate { job, src, dst } => {
+            let (d_src, d_dst) = (*src, *dst);
+            let bytes = fleet
+                .pins
+                .iter()
+                .find(|p| p.job == *job)
+                .map(|p| p.ckpt_bytes)
+                .unwrap_or(0);
+            let transfer_ns = fleet.migrate_transfer_ns(d_src, d_dst, bytes);
+            let live = gov
+                .device(d_src)
+                .is_some_and(|rt| rt.live_ctx_names().iter().any(|n| n == job));
+            let migrate_ji = if live {
+                // A live job's continuation must be resumable: validate the
+                // job kind and the destination *before* masking the source
+                // — a doomed migration must reject here, not after an
+                // irreversible drain.
+                match validate_migrate(fleet, gov, phase_jobs, job, d_dst) {
+                    Ok((ji, _footprint)) => Some(ji),
+                    Err(note) => {
+                        records.push(InlineActionRecord {
+                            decided_ns: t,
+                            applied_ns: t,
+                            record: ActionRecord {
+                                action,
+                                applied: false,
+                                cost_ns: 0,
+                                note,
+                            },
+                        });
+                        return;
+                    }
+                }
+            } else {
+                None
+            };
+            let apply_at = if live {
+                let _ = gov.mask_device(d_src);
+                gov.drain_end(d_src).saturating_add(transfer_ns)
+            } else {
+                t.saturating_add(transfer_ns)
+            };
+            pending.push(PendingAction {
+                action,
+                decided_ns: t,
+                apply_at,
+                migrate_ji,
+            });
+        }
+        Action::Scale { change } => {
+            let apply_at = match change {
+                ScaleChange::PowerUp { .. } => t.saturating_add(PROVISION_NS),
+                ScaleChange::PowerDown { .. } => t,
+            };
+            pending.push(PendingAction {
+                action,
+                decided_ns: t,
+                apply_at,
+                migrate_ji: None,
+            });
+        }
+    }
+}
+
+/// Land a staged action at its completion event: mutate the live runtimes
+/// (re-slice the drained device / retire + resume the migrating job) and
+/// run the *same* fleet bookkeeping the boundary actuator runs
+/// (`FleetState::apply`) — one actuation path, two effect timings.
+fn apply_pending(
+    fleet: &mut FleetState,
+    gov: &mut GovernorRt,
+    phase_jobs: &[ClusterJob],
+    run_cfg: &ClusterRunConfig,
+    lane_jobs: &mut [Vec<String>],
+    p: &PendingAction,
+) -> ActionRecord {
+    let reject = |note: String| ActionRecord {
+        action: p.action.clone(),
+        applied: false,
+        cost_ns: 0,
+        note,
+    };
+    // Re-probe: other actions may have landed since staging.
+    let mut probe = fleet.clone();
+    let probe_rec = probe.apply(&p.action, None);
+    let span = p.apply_at.saturating_sub(p.decided_ns);
+    match &p.action {
+        Action::Reslice { device, .. } => {
+            let d = *device;
+            let unmask = |gov: &mut GovernorRt, fleet: &FleetState| {
+                if !fleet.draining[d] {
+                    let _ = gov.unmask_device(d);
+                }
+            };
+            if !probe_rec.applied {
+                unmask(gov, fleet);
+                return probe_rec;
+            }
+            let to = match &p.action {
+                Action::Reslice { to, .. } => *to,
+                _ => unreachable!(),
+            };
+            if gov.device(d).is_none() {
+                // Idle this phase: nothing live to re-slice — the fleet
+                // bookkeeping alone applies (the boundary semantics; the
+                // drain was trivially free).
+                let mut rec = fleet.apply(&p.action, None);
+                rec.cost_ns = span;
+                rec.note = format!("in-clock idle re-slice {:.1} ms", span as f64 / 1e6);
+                return rec;
+            }
+            match gov.reslice(d, to) {
+                Ok(()) => {
+                    let mut rec = fleet.apply(&p.action, None);
+                    rec.cost_ns = span;
+                    rec.note = format!("in-clock drain+create {:.1} ms", span as f64 / 1e6);
+                    unmask(gov, fleet);
+                    rec
+                }
+                Err(e) => {
+                    unmask(gov, fleet);
+                    reject(e.to_string())
+                }
+            }
+        }
+        Action::Migrate { job, src, dst } => {
+            let (d_src, d_dst) = (*src, *dst);
+            let unmask = |gov: &mut GovernorRt, fleet: &FleetState| {
+                if !fleet.draining[d_src] {
+                    let _ = gov.unmask_device(d_src);
+                }
+            };
+            if !probe_rec.applied {
+                unmask(gov, fleet);
+                return probe_rec;
+            }
+            if let Some(ji) = p.migrate_ji {
+                // Land-time backstop of the stage-time check (other
+                // actions may have landed since), run BEFORE the
+                // irrevocable retire so the source stays intact on
+                // rejection.
+                if let Err(note) = validate_migrate(fleet, gov, phase_jobs, job, d_dst) {
+                    unmask(gov, fleet);
+                    return reject(note);
+                }
+                let (model, total, base) = match &phase_jobs[ji].kind {
+                    JobKind::Training { model, steps } => (*model, *steps, 0u32),
+                    JobKind::TrainingResumed {
+                        model,
+                        total_steps,
+                        completed,
+                    } => (*model, *total_steps, *completed),
+                    JobKind::Inference { .. } => unreachable!("validated above"),
+                };
+                // An idle destination gets a fresh (empty) runtime to
+                // resume onto — built like build_runtimes would have.
+                let dspec = &fleet.spec.devices[d_dst];
+                let mut ecfg = EngineConfig::new(dspec.model.config(), dspec.mechanism.clone());
+                ecfg.record_ops = run_cfg.record_ops;
+                ecfg.occupancy_sample_ns = run_cfg.occupancy_sample_ns;
+                if let Err(e) = gov.ensure_runtime(d_dst, ecfg) {
+                    unmask(gov, fleet);
+                    return reject(e.to_string());
+                }
+                let done = match gov.retire_job(d_src, job) {
+                    Ok(done) => done,
+                    Err(e) => {
+                        unmask(gov, fleet);
+                        return reject(e.to_string());
+                    }
+                };
+                // Resume the continuation on the destination clock at the
+                // transfer-complete instant; the same job index keeps the
+                // RNG stream continuing the original kernel sequence.
+                let resumed = ClusterJob::training_resumed(job, model, total, base + done);
+                let def = CtxDef {
+                    name: job.clone(),
+                    source: Cluster::job_source(&fleet.spec.devices[d_dst], &resumed, run_cfg, ji),
+                    priority: phase_jobs[ji].priority,
+                };
+                if let Err(e) = gov.admit_job(d_dst, def, p.apply_at) {
+                    unmask(gov, fleet);
+                    return reject(format!("resume on device {d_dst} failed: {e}"));
+                }
+                lane_jobs[d_dst].push(job.clone());
+            }
+            let mut rec = fleet.apply(&p.action, None);
+            rec.cost_ns = span;
+            rec.note = format!("in-clock drain+checkpoint {:.1} ms", span as f64 / 1e6);
+            unmask(gov, fleet);
+            rec
+        }
+        Action::Scale { .. } => {
+            if !probe_rec.applied {
+                return probe_rec;
+            }
+            let mut rec = fleet.apply(&p.action, None);
+            rec.cost_ns = span;
+            rec
+        }
+    }
+}
+
+/// The placement preamble shared verbatim by both modes — availability
+/// mask, pins, carried reservations, `place_pinned`, and the
+/// phase-seeded run config (pattern override included). One copy, so the
+/// cadence=∞ equivalence can never drift out from under the acceptance
+/// test.
+fn place_phase(
+    fleet: &FleetState,
+    phase: &PhaseSpec,
+    cfg: &ControlConfig,
+    phase_idx: usize,
+) -> (Placement, ClusterRunConfig) {
+    let available = fleet.available();
+    let pins = fleet.pins_for(&phase.jobs);
+    let carried = fleet.carried_reservations(&phase.jobs);
+    let placement = place_pinned(
+        &fleet.spec,
+        &phase.jobs,
+        cfg.place,
+        &available,
+        &pins,
+        &carried,
+    );
+    let mut run_cfg = cfg.run.clone();
+    run_cfg.seed = phase_seed(cfg.run.seed, phase_idx);
+    if let Some(pattern) = phase.pattern {
+        run_cfg.pattern = pattern;
+    }
+    (placement, run_cfg)
+}
+
+/// Run one phase with the governor *inside* the clock. Returns the
+/// assembled cluster report, the in-clock action records, and the final
+/// frame (the last window, carrying the phase makespan) for the boundary
+/// decision that follows.
+fn run_phase_inclock(
+    fleet: &mut FleetState,
+    phase: &PhaseSpec,
+    cfg: &ControlConfig,
+    cadence: SimTime,
+    policy: &mut dyn Policy,
+    phase_idx: usize,
+    phases_total: usize,
+) -> (ClusterRunReport, Vec<InlineActionRecord>, SignalFrame) {
+    let (placement, run_cfg) = place_phase(fleet, phase, cfg, phase_idx);
+    let cluster = Cluster::new(fleet.spec.clone());
+    let (rts, mut lane_jobs) = cluster.build_runtimes(&phase.jobs, &placement.assignment, &run_cfg);
+    let ndev = fleet.spec.devices.len();
+    let mut gov = GovernorRt::new(rts, run_cfg.parallel);
+    // Devices already draining (a failure carried in from a prior phase)
+    // start masked — placement gave them nothing, but the mask keeps the
+    // semantics uniform.
+    for d in 0..ndev {
+        if fleet.draining[d] && gov.device(d).is_some() {
+            let _ = gov.mask_device(d);
+        }
+    }
+    let mut records: Vec<InlineActionRecord> = Vec::new();
+    let mut pending: Vec<PendingAction> = Vec::new();
+    let mut timed: Vec<(SimTime, super::FleetEvent)> = phase.timed_events.clone();
+    timed.sort_by_key(|&(t, _)| t);
+    let mut timed_next = 0usize;
+    let mut last_wake: SimTime = 0;
+    let mut prev_arrivals: Vec<u64> = vec![0; ndev];
+    let mut wake_no: u64 = 0;
+    let mut stalled_wakes: u32 = 0;
+    loop {
+        if pending.is_empty() && gov.all_done() && timed_next >= timed.len() {
+            break;
+        }
+        let next_wake = cadence.saturating_mul(wake_no + 1);
+        let mut t = next_wake;
+        for p in &pending {
+            t = t.min(p.apply_at);
+        }
+        if timed_next < timed.len() {
+            t = t.min(timed[timed_next].0);
+        }
+        let t = t.max(gov.now());
+        assert!(
+            t <= 3_600 * SEC,
+            "in-clock governor runaway in phase '{}'",
+            phase.label
+        );
+        gov.advance_to(t);
+
+        // Timed platform events (the failure detector's input): mask the
+        // device now — the honest in-clock drain — and flag it for the
+        // fleet so the policy sees it at its next wake.
+        while timed_next < timed.len() && timed[timed_next].0 <= t {
+            let ev = timed[timed_next].1;
+            apply_fleet_event(fleet, &ev);
+            let super::FleetEvent::DrainDevice(d) = ev;
+            if gov.device(d).is_some() {
+                let _ = gov.mask_device(d);
+            }
+            timed_next += 1;
+        }
+
+        // Staged-action completions due now.
+        let due: Vec<PendingAction> = {
+            let mut still = Vec::with_capacity(pending.len());
+            let mut due = Vec::new();
+            for p in pending {
+                if p.apply_at <= t {
+                    due.push(p);
+                } else {
+                    still.push(p);
+                }
+            }
+            pending = still;
+            due
+        };
+        for p in &due {
+            let rec = apply_pending(fleet, &mut gov, &phase.jobs, &run_cfg, &mut lane_jobs, p);
+            records.push(InlineActionRecord {
+                decided_ns: p.decided_ns,
+                applied_ns: t,
+                record: rec,
+            });
+        }
+
+        // Cadence wake: observe the window, let the policy decide, stage.
+        if t >= next_wake {
+            wake_no += 1;
+            let lane_reports: Vec<Option<&RunReport>> = (0..ndev)
+                .map(|d| gov.device(d).map(|rt| rt.live_report()))
+                .collect();
+            let frame = window_frame(
+                fleet,
+                &lane_reports,
+                &lane_jobs,
+                &phase.jobs,
+                &placement.stats,
+                phase_idx,
+                last_wake,
+                t,
+                t,
+                &mut prev_arrivals,
+            );
+            drop(lane_reports);
+            last_wake = t;
+            let actions = {
+                let ctx = PolicyCtx {
+                    fleet,
+                    phase: phase_idx,
+                    phases_total,
+                };
+                policy.decide(&frame, &ctx)
+            };
+            for action in actions {
+                stage_action(
+                    fleet,
+                    &mut gov,
+                    &phase.jobs,
+                    action,
+                    t,
+                    &mut pending,
+                    &mut records,
+                );
+            }
+        }
+
+        // Kill-on-stall: everything is either done or drained-and-stuck,
+        // nothing is staged, no failure events remain, and the policy has
+        // had a full wake to react — the stalled work is lost (the honest
+        // failure outcome: no completion records).
+        if pending.is_empty()
+            && timed_next >= timed.len()
+            && !gov.all_done()
+            && gov.all_done_or_stalled()
+        {
+            stalled_wakes += 1;
+            if stalled_wakes >= 2 {
+                let _ = gov.kill_stalled();
+                stalled_wakes = 0;
+            }
+        } else {
+            stalled_wakes = 0;
+        }
+    }
+
+    let reports = gov.into_reports();
+    let makespan_ns = reports
+        .iter()
+        .flatten()
+        .map(|r| r.sim_end)
+        .max()
+        .unwrap_or(0);
+    let report = cluster.assemble_report(
+        reports,
+        lane_jobs.clone(),
+        placement.stats.clone(),
+        cfg.place.name(),
+    );
+    // Final frame: the last window — closed at the phase's end, so the
+    // window span stays a real duration — carrying the *phase* makespan
+    // (the boundary decision and the total-span accounting read it).
+    let phase_end = makespan_ns.max(last_wake.saturating_add(1));
+    let lane_reports: Vec<Option<&RunReport>> = report
+        .lanes
+        .iter()
+        .map(|lane| Some(&lane.report))
+        .collect();
+    let frame = window_frame(
+        fleet,
+        &lane_reports,
+        &lane_jobs,
+        &phase.jobs,
+        &report.stats,
+        phase_idx,
+        last_wake,
+        phase_end,
+        makespan_ns,
+        &mut prev_arrivals,
+    );
+    drop(lane_reports);
+    (report, records, frame)
+}
+
+/// Run a phased scenario under a control policy, with the governor either
+/// *inside* the clock (finite cadence: wake-ups interleave with dispatch,
+/// actions land mid-phase at their true completion events) or at the
+/// boundary (`cadence_ns = None` — byte-for-byte the historical
+/// `control::run_governed`, which now delegates here). Both modes share
+/// the placement path, the signal shapes, the `FleetState` actuation
+/// bookkeeping, and the end-of-phase decide/apply/gap step.
+pub fn run_governed_inline(
+    fleet: &mut FleetState,
+    phases: &[PhaseSpec],
+    policy: &mut dyn Policy,
+    cfg: &ControlConfig,
+    gov_cfg: &GovernorConfig,
+) -> ControlReport {
+    let mut outcomes: Vec<PhaseOutcome> = Vec::with_capacity(phases.len());
+    let mut total_span_ns: SimTime = 0;
+    for (i, phase) in phases.iter().enumerate() {
+        let (report, inline_actions, frame) = match gov_cfg.cadence_ns {
+            None => {
+                // Boundary mode (cadence = ∞): the §7b loop verbatim.
+                let (placement, run_cfg) = place_phase(fleet, phase, cfg, i);
+                let report = Cluster::new(fleet.spec.clone()).run_placement(
+                    &phase.jobs,
+                    &placement.assignment,
+                    placement.stats,
+                    cfg.place.name(),
+                    &run_cfg,
+                );
+                for ev in &phase.end_events {
+                    apply_fleet_event(fleet, ev);
+                }
+                // With no in-clock governor, timed events degrade to the
+                // phase boundary (delivered after the phase, like
+                // end_events — the coarse world reacting late is the
+                // point).
+                for &(_, ev) in &phase.timed_events {
+                    apply_fleet_event(fleet, &ev);
+                }
+                let deadlines = SignalFrame::lane_deadlines(&report, &phase.jobs);
+                let frame = SignalFrame::from_cluster(i as u64, &report, &deadlines);
+                (report, Vec::new(), frame)
+            }
+            Some(cadence) => {
+                let (report, recs, frame) =
+                    run_phase_inclock(fleet, phase, cfg, cadence, policy, i, phases.len());
+                for ev in &phase.end_events {
+                    apply_fleet_event(fleet, ev);
+                }
+                (report, recs, frame)
+            }
+        };
+        let actions = {
+            let ctx = PolicyCtx {
+                fleet,
+                phase: i,
+                phases_total: phases.len(),
+            };
+            policy.decide(&frame, &ctx)
+        };
+        let records: Vec<ActionRecord> = actions
+            .iter()
+            .map(|a| fleet.apply(a, Some(&report)))
+            .collect();
+        debug_assert!(fleet.check().is_ok());
+        // Actions at one boundary overlap; no boundary after the last phase.
+        let gap_ns = if i + 1 < phases.len() {
+            records
+                .iter()
+                .filter(|r| r.applied)
+                .map(|r| r.cost_ns)
+                .max()
+                .unwrap_or(0)
+        } else {
+            0
+        };
+        total_span_ns = total_span_ns
+            .saturating_add(frame.makespan_ns)
+            .saturating_add(gap_ns);
+        outcomes.push(PhaseOutcome {
+            label: phase.label.clone(),
+            report,
+            frame,
+            actions: records,
+            inline_actions,
+            gap_ns,
+        });
+    }
+    ControlReport {
+        policy: policy.name().to_string(),
+        phases: outcomes,
+        total_span_ns,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::control::policy::StaticPolicy;
+    use crate::control::run_governed;
+    use crate::sim::MS;
+    use crate::workload::DlModel;
+
+    fn cfg() -> ControlConfig {
+        ControlConfig {
+            run: ClusterRunConfig::default(),
+            place: crate::cluster::PlacePolicy::LeastLoaded,
+        }
+    }
+
+    fn phases() -> Vec<PhaseSpec> {
+        vec![
+            PhaseSpec::new(
+                "p0",
+                vec![
+                    ClusterJob::inference("i0", DlModel::AlexNet, 3, Some(5)),
+                    ClusterJob::training("t0", DlModel::AlexNet, 2),
+                ],
+            ),
+            PhaseSpec::new(
+                "p1",
+                vec![ClusterJob::inference("i1", DlModel::AlexNet, 2, None)],
+            ),
+        ]
+    }
+
+    #[test]
+    fn boundary_cadence_is_run_governed_byte_for_byte() {
+        // The acceptance contract: cadence=∞ reproduces the boundary loop
+        // exactly — same placement, reports, frames, gaps, JSON bytes.
+        let spec = ClusterSpec::parse("2x3090:mps").unwrap();
+        let mut fleet_a = FleetState::new(spec.clone());
+        let a = run_governed(&mut fleet_a, &phases(), &mut StaticPolicy, &cfg());
+        let mut fleet_b = FleetState::new(spec);
+        let b = run_governed_inline(
+            &mut fleet_b,
+            &phases(),
+            &mut StaticPolicy,
+            &cfg(),
+            &GovernorConfig::boundary(),
+        );
+        assert_eq!(a.to_json(), b.to_json());
+        assert_eq!(fleet_a, fleet_b);
+    }
+
+    #[test]
+    fn static_inclock_run_matches_boundary_outcomes() {
+        // With a do-nothing policy the in-clock governor only *observes*:
+        // every lane report must be byte-identical to the boundary run
+        // (wake-ups are pure reads; stepping cannot perturb a simulation).
+        let spec = ClusterSpec::parse("2x3090:mps").unwrap();
+        let mut fleet_a = FleetState::new(spec.clone());
+        let a = run_governed(&mut fleet_a, &phases(), &mut StaticPolicy, &cfg());
+        let mut fleet_b = FleetState::new(spec);
+        let b = run_governed_inline(
+            &mut fleet_b,
+            &phases(),
+            &mut StaticPolicy,
+            &cfg(),
+            &GovernorConfig::cadence(5 * MS),
+        );
+        assert_eq!(a.phases.len(), b.phases.len());
+        for (pa, pb) in a.phases.iter().zip(&b.phases) {
+            assert_eq!(
+                pa.report.to_json(),
+                pb.report.to_json(),
+                "phase '{}' diverged under a read-only in-clock governor",
+                pa.label
+            );
+        }
+        assert_eq!(a.total_span_ns, b.total_span_ns);
+        assert!(b.phases.iter().all(|p| p.inline_actions.is_empty()));
+    }
+
+    #[test]
+    fn inclock_runs_are_reproducible() {
+        let spec = ClusterSpec::parse("2x3090:mps").unwrap();
+        let run_once = || {
+            let mut fleet = FleetState::new(spec.clone());
+            run_governed_inline(
+                &mut fleet,
+                &phases(),
+                &mut StaticPolicy,
+                &cfg(),
+                &GovernorConfig::cadence(3 * MS),
+            )
+            .to_json()
+        };
+        assert_eq!(run_once(), run_once());
+    }
+}

@@ -27,14 +27,16 @@
 //! whole loop.
 
 pub mod actuate;
+pub mod inline;
 pub mod policy;
 pub mod signal;
 
 pub use actuate::{ActionRecord, FleetState};
+pub use inline::{run_governed_inline, GovernorConfig, InlineActionRecord};
 pub use policy::{Action, GapDecision, GapPolicy, Policy, PolicyCtx};
 pub use signal::{LaneSignal, SignalFrame};
 
-use crate::cluster::{place_pinned, Cluster, ClusterJob, ClusterRunConfig, PlacePolicy};
+use crate::cluster::{ClusterJob, ClusterRunConfig, PlacePolicy};
 use crate::sim::{ns_to_ms, SimTime};
 use crate::util::stats::Summary;
 use crate::workload::ArrivalPattern;
@@ -50,8 +52,9 @@ pub enum FleetEvent {
 }
 
 /// One phase of a governed scenario: a job list, an optional arrival-
-/// pattern override (bursty phases flip to Poisson), and the platform
-/// events arriving at this phase's end.
+/// pattern override (bursty phases flip to Poisson), the platform events
+/// arriving at this phase's end, and (for the in-clock governor, §7c)
+/// events arriving at a simulation *time* inside the phase.
 #[derive(Clone, Debug)]
 pub struct PhaseSpec {
     pub label: String,
@@ -59,6 +62,12 @@ pub struct PhaseSpec {
     /// `None` inherits the run config's pattern.
     pub pattern: Option<ArrivalPattern>,
     pub end_events: Vec<FleetEvent>,
+    /// Platform events delivered mid-phase at the given phase-clock time —
+    /// the failure detector firing *during* execution. The in-clock
+    /// governor masks the device at that instant; the boundary loop
+    /// (cadence = ∞) can only deliver them at the phase end, which is
+    /// exactly the too-late reaction the paper observes.
+    pub timed_events: Vec<(SimTime, FleetEvent)>,
 }
 
 impl PhaseSpec {
@@ -68,6 +77,7 @@ impl PhaseSpec {
             jobs,
             pattern: None,
             end_events: Vec::new(),
+            timed_events: Vec::new(),
         }
     }
 
@@ -79,6 +89,19 @@ impl PhaseSpec {
     pub fn with_end_events(mut self, events: Vec<FleetEvent>) -> PhaseSpec {
         self.end_events = events;
         self
+    }
+
+    pub fn with_timed_event(mut self, at_ns: SimTime, event: FleetEvent) -> PhaseSpec {
+        self.timed_events.push((at_ns, event));
+        self
+    }
+}
+
+/// Apply a platform event to the fleet bookkeeping (shared by the
+/// boundary and in-clock loops).
+pub(crate) fn apply_fleet_event(fleet: &mut FleetState, ev: &FleetEvent) {
+    match *ev {
+        FleetEvent::DrainDevice(d) => fleet.draining[d] = true,
     }
 }
 
@@ -96,8 +119,13 @@ pub struct PhaseOutcome {
     pub report: crate::cluster::ClusterRunReport,
     pub frame: SignalFrame,
     pub actions: Vec<ActionRecord>,
+    /// Actions the in-clock governor decided and applied *during* this
+    /// phase, with their decision and true-completion times on the phase
+    /// clock (empty in boundary mode — §7c).
+    pub inline_actions: Vec<InlineActionRecord>,
     /// The boundary gap charged after this phase (max of applied action
-    /// costs; actions at one boundary overlap).
+    /// costs; actions at one boundary overlap). In-clock action costs are
+    /// *not* here — they are real spans inside the phase makespan.
     pub gap_ns: SimTime,
 }
 
@@ -127,18 +155,42 @@ impl ControlReport {
         Summary::of(&ms)
     }
 
+    /// Turnaround summary pooled over the phases whose labels appear in
+    /// `labels` (e.g. just the burst phases of a scenario).
+    pub fn turnaround_summary_for(&self, labels: &[&str]) -> Summary {
+        let ms: Vec<f64> = self
+            .phases
+            .iter()
+            .filter(|p| labels.contains(&p.label.as_str()))
+            .flat_map(|p| p.report.lanes.iter())
+            .flat_map(|l| l.report.requests.iter())
+            .map(|r| ns_to_ms(r.turnaround_ns()))
+            .collect();
+        Summary::of(&ms)
+    }
+
     /// Placement rejections summed over every phase — the utilization /
     /// service-completeness headline the autoscaler moves.
     pub fn total_rejected(&self) -> u64 {
         self.phases.iter().map(|p| p.frame.rejected).sum()
     }
 
-    /// Actions the actuator applied across the run.
+    /// Actions the boundary actuator applied across the run.
     pub fn actions_applied(&self) -> usize {
         self.phases
             .iter()
             .flat_map(|p| p.actions.iter())
             .filter(|a| a.applied)
+            .count()
+    }
+
+    /// Actions the in-clock governor applied mid-phase across the run
+    /// (always 0 in boundary mode).
+    pub fn inline_actions_applied(&self) -> usize {
+        self.phases
+            .iter()
+            .flat_map(|p| p.inline_actions.iter())
+            .filter(|a| a.record.applied)
             .count()
     }
 
@@ -180,6 +232,13 @@ impl ControlReport {
                 }
                 j.push_str(&a.to_json());
             }
+            j.push_str("],\"inline\":[");
+            for (k, a) in p.inline_actions.iter().enumerate() {
+                if k > 0 {
+                    j.push(',');
+                }
+                j.push_str(&a.to_json());
+            }
             j.push_str("]}");
         }
         j.push_str("]}");
@@ -189,7 +248,7 @@ impl ControlReport {
 
 /// Per-phase seed derivation: decorrelate phases from each other while
 /// staying a pure function of (base seed, phase index).
-fn phase_seed(base: u64, phase: usize) -> u64 {
+pub(crate) fn phase_seed(base: u64, phase: usize) -> u64 {
     base ^ (phase as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
@@ -200,79 +259,18 @@ fn phase_seed(base: u64, phase: usize) -> u64 {
 /// same driver with [`policy::StaticPolicy`] is the ungoverned baseline,
 /// so governed-vs-static comparisons differ *only* in the loop being
 /// closed.
+///
+/// Since §7c this is the degenerate cadence=∞ case of the in-clock
+/// governor: [`inline::run_governed_inline`] with
+/// [`GovernorConfig::boundary`] — one loop, one actuation path, two
+/// effect timings.
 pub fn run_governed(
     fleet: &mut FleetState,
     phases: &[PhaseSpec],
     policy: &mut dyn Policy,
     cfg: &ControlConfig,
 ) -> ControlReport {
-    let mut outcomes: Vec<PhaseOutcome> = Vec::with_capacity(phases.len());
-    let mut total_span_ns: SimTime = 0;
-    for (i, phase) in phases.iter().enumerate() {
-        let available = fleet.available();
-        let pins = fleet.pins_for(&phase.jobs);
-        let carried = fleet.carried_reservations(&phase.jobs);
-        let placement =
-            place_pinned(&fleet.spec, &phase.jobs, cfg.place, &available, &pins, &carried);
-        let mut run_cfg = cfg.run.clone();
-        run_cfg.seed = phase_seed(cfg.run.seed, i);
-        if let Some(pattern) = phase.pattern {
-            run_cfg.pattern = pattern;
-        }
-        let report = Cluster::new(fleet.spec.clone()).run_placement(
-            &phase.jobs,
-            &placement.assignment,
-            placement.stats,
-            cfg.place.name(),
-            &run_cfg,
-        );
-        for ev in &phase.end_events {
-            match *ev {
-                FleetEvent::DrainDevice(d) => fleet.draining[d] = true,
-            }
-        }
-        let deadlines = SignalFrame::lane_deadlines(&report, &phase.jobs);
-        let frame = SignalFrame::from_cluster(i as u64, &report, &deadlines);
-        let actions = {
-            let ctx = PolicyCtx {
-                fleet,
-                phase: i,
-                phases_total: phases.len(),
-            };
-            policy.decide(&frame, &ctx)
-        };
-        let records: Vec<ActionRecord> = actions
-            .iter()
-            .map(|a| fleet.apply(a, Some(&report)))
-            .collect();
-        debug_assert!(fleet.check().is_ok());
-        // Actions at one boundary overlap; no boundary after the last phase.
-        let gap_ns = if i + 1 < phases.len() {
-            records
-                .iter()
-                .filter(|r| r.applied)
-                .map(|r| r.cost_ns)
-                .max()
-                .unwrap_or(0)
-        } else {
-            0
-        };
-        total_span_ns = total_span_ns
-            .saturating_add(frame.makespan_ns)
-            .saturating_add(gap_ns);
-        outcomes.push(PhaseOutcome {
-            label: phase.label.clone(),
-            report,
-            frame,
-            actions: records,
-            gap_ns,
-        });
-    }
-    ControlReport {
-        policy: policy.name().to_string(),
-        phases: outcomes,
-        total_span_ns,
-    }
+    inline::run_governed_inline(fleet, phases, policy, cfg, &GovernorConfig::boundary())
 }
 
 #[cfg(test)]

@@ -111,20 +111,43 @@ fn mig_profile(m: &Mechanism) -> Option<MigProfile> {
 }
 
 /// Dynamic re-slicing policy (ROADMAP "dynamic re-slicing" +
-/// "reconfiguration policy"): watch one MIG device's latency lane and
-/// propose `light ↔ heavy` profile swaps, applying a swap **only when the
-/// projected gain exceeds the reconfiguration cost**
+/// "queueing-aware gain projection"): watch one MIG device's latency lane
+/// and propose `light ↔ heavy` profile swaps, applying a swap **only when
+/// the projected gain exceeds the reconfiguration cost**
 /// (`drain + Σ CreateGpuInstance`, the `ReconfigCost::total_ns` pricing).
 ///
-/// The turnaround target is *learned* from the first observed phase
-/// (`target = mean × margin`), so the policy self-calibrates to whatever
-/// device and model the scenario runs:
-/// * lane mean above target on the `light` profile → propose `Reslice` to
-///   `heavy`, gated on projected gain = observed turnaround beyond target
-///   (the persistence assumption: next phase looks like this one);
-/// * lane mean back under target on `heavy` → propose the reverse swap,
-///   gated on the projected trainer gain = the returned compute slices'
-///   share of the phase makespan.
+/// The projection is an **arrival-rate vs per-profile service-rate
+/// model**, replacing the old persistence-only assumption ("next phase's
+/// overshoot looks like this one's") so swaps are priced correctly when
+/// bursts grow or fade:
+///
+/// * the light-profile service time `s` is *learned* from the first
+///   observed frame (scaled by the profile it was measured on — service
+///   scales inversely with a profile's compute slices, which is exactly
+///   what a re-slice changes);
+/// * each frame supplies the window's arrival rate λ
+///   ([`SignalFrame`] lane `arrivals` / `busy_ns`), the live backlog
+///   `queue_now` (arrived − completed), the queue-depth proxy `q₀`
+///   (`inflight_avg`), and the measured residual life `r`
+///   ([`crate::metrics::RunReport::residual_life_ns`]) that prices the
+///   drain every swap must pay;
+/// * **grow** (`light → heavy`), gated on queue evidence (`q₀ > 3` or
+///   mean above `s × margin` — a calm closed loop trips neither), priced
+///   as the *max* of two projections so both observation regimes work:
+///   - *live backlog* (in-clock windows, where Little's-law `q₀` **is**
+///     the standing queue): the overloaded-M/G/1 regime — a queue of `q`
+///     plus the `λ·q·s_light` arrivals expected while it clears each save
+///     `≈ q/2·(s_light − s_heavy)`; the swap cost (drain residual +
+///     Σ CreateGpuInstance) is paid by the in-clock world as a *real
+///     stall*, so undersized bursts rightly never trigger;
+///   - *boundary persistence* (completed-phase view — the queue already
+///     drained, only turnarounds remain): the observed wait mass above
+///     the target `s × margin`, assumed to persist one more phase — the
+///     §7b projection, priced against the learned service model;
+/// * **shrink** (`heavy → light`) when the queue is gone (`q₀ ≤ 1.5` and
+///   `queue_now ≤ 1`) and the compute returned to the best-effort side
+///   over the window beats the swap cost *plus* the latency penalty
+///   `(q₀ + λ·h)·(s_light − s_heavy)` the served side will pay.
 #[derive(Clone, Debug)]
 pub struct GainGatedReslice {
     /// Fleet index of the governed MIG device.
@@ -133,10 +156,12 @@ pub struct GainGatedReslice {
     pub light: MigProfile,
     /// The burst-phase profile (latency lane large).
     pub heavy: MigProfile,
-    /// Learned-target multiplier over the first phase's mean.
+    /// Queue-evidence multiplier: grow needs `mean > s × margin` (or an
+    /// outright queue) before the projection runs.
     pub margin: f64,
-    /// Learned on the first frame with completed requests.
-    pub target_ms: Option<f64>,
+    /// Learned light-profile service time (ms), from the first observed
+    /// frame with completions.
+    pub svc_ms: Option<f64>,
 }
 
 impl GainGatedReslice {
@@ -152,7 +177,7 @@ impl GainGatedReslice {
             light,
             heavy,
             margin,
-            target_ms: None,
+            svc_ms: None,
         }
     }
 
@@ -182,44 +207,69 @@ impl Policy for GainGatedReslice {
             return Vec::new();
         }
         let mean = sig.mean_turnaround_ms;
-        let Some(target) = self.target_ms else {
-            // First observation: learn the target, act from the next frame.
-            self.target_ms = Some(mean * self.margin);
-            return Vec::new();
-        };
         let Some(cur) = mig_profile(&ctx.fleet.spec.devices[self.device].mechanism) else {
             return Vec::new();
         };
-        if mean > target && cur == self.light {
-            // Projected gain: the observed turnaround mass beyond target,
-            // assumed to persist one more phase.
-            let gain_ms = sig.total_turnaround_ms - target * sig.completed as f64;
-            let cost_ms = self.swap_cost_ms(ctx, sig.residual_ns, self.heavy);
-            if gain_ms > cost_ms {
-                return vec![Action::Reslice {
-                    device: self.device,
-                    from: self.light,
-                    to: self.heavy,
-                }];
+        let Some(s_light) = self.svc_ms else {
+            // First observation: learn the light-profile service time from
+            // whatever profile the frame was measured on; act from the
+            // next frame.
+            self.svc_ms =
+                Some(mean * cur.compute_slices() as f64 / self.light.compute_slices() as f64);
+            return Vec::new();
+        };
+        // Per-profile service time: scales inversely with compute slices.
+        let s = |p: MigProfile| -> f64 {
+            s_light * self.light.compute_slices() as f64 / p.compute_slices() as f64
+        };
+        let horizon_ms = ns_to_ms(sig.busy_ns).max(1e-6);
+        let lambda = sig.arrivals as f64 / horizon_ms; // req/ms
+        let q0 = sig.inflight_avg;
+        let delta_s = (s(self.light) - s(self.heavy)).max(0.0);
+        let target = s(cur) * self.margin;
+        if cur == self.light {
+            // Queue evidence gate: a calm closed loop (≤1 in flight, mean
+            // ≈ service) trips neither condition.
+            if q0 > 3.0 || mean > target {
+                // Live-backlog clearing estimate (in-clock windows:
+                // Little's-law q₀ IS the standing queue — the simulated
+                // serving source queues arrivals internally, so sojourns
+                // carry the backlog even though one request is in flight).
+                let live_gain_ms =
+                    (q0 + lambda * q0 * s(self.light)) * (q0 / 2.0) * delta_s;
+                // Boundary persistence estimate (completed-phase view):
+                // the wait mass above target persists one more phase.
+                let persist_gain_ms =
+                    (sig.total_turnaround_ms - target * sig.completed as f64).max(0.0);
+                let gain_ms = live_gain_ms.max(persist_gain_ms);
+                let cost_ms = self.swap_cost_ms(ctx, sig.residual_ns, self.heavy);
+                if gain_ms > cost_ms {
+                    return vec![Action::Reslice {
+                        device: self.device,
+                        from: self.light,
+                        to: self.heavy,
+                    }];
+                }
             }
-        } else if mean <= target && cur == self.heavy {
-            // Calm again: give the slices back to the best-effort side when
-            // the returned compute share of a phase outweighs the swap.
-            // (`new` asserts heavy > light; saturate anyway so a hand-built
-            // struct cannot underflow into an always-pay gain.)
-            let returned = self
-                .heavy
-                .compute_slices()
-                .saturating_sub(self.light.compute_slices());
-            let gain_ms =
-                returned as f64 / partition::COMPUTE_SLICES as f64 * ns_to_ms(frame.makespan_ns);
-            let cost_ms = self.swap_cost_ms(ctx, sig.residual_ns, self.light);
-            if gain_ms > cost_ms {
-                return vec![Action::Reslice {
-                    device: self.device,
-                    from: self.heavy,
-                    to: self.light,
-                }];
+        } else if cur == self.heavy {
+            // Shrink only once the queue is gone: the burst faded and the
+            // measured λ no longer needs the heavy slice.
+            if q0 <= 1.5 && sig.queue_now <= 1 {
+                let returned = self
+                    .heavy
+                    .compute_slices()
+                    .saturating_sub(self.light.compute_slices());
+                let trainer_gain_ms =
+                    returned as f64 / partition::COMPUTE_SLICES as f64 * horizon_ms;
+                let latency_penalty_ms = (q0 + lambda * horizon_ms) * delta_s;
+                let cost_ms = self.swap_cost_ms(ctx, sig.residual_ns, self.light);
+                if trainer_gain_ms > cost_ms + latency_penalty_ms {
+                    return vec![Action::Reslice {
+                        device: self.device,
+                        from: self.heavy,
+                        to: self.light,
+                    }];
+                }
             }
         }
         Vec::new()
@@ -468,6 +518,110 @@ mod tests {
         assert_eq!(gated.decide(&f, 20 * MS), GapDecision::Skip);
         // nothing completed → nothing to gain → skip
         assert_eq!(gated.decide(&frame(&[]), 1), GapDecision::Skip);
+    }
+
+    #[test]
+    fn queueing_gain_gate_swaps_on_overload_not_on_calm() {
+        use super::super::signal::LaneSignal;
+        use crate::cluster::ClusterSpec;
+        use crate::control::FleetState;
+
+        fn frame_of(
+            mean_ms: f64,
+            completed: u64,
+            arrivals: u64,
+            inflight: f64,
+            busy_ms: u64,
+            queue_now: u64,
+        ) -> SignalFrame {
+            let lane = LaneSignal {
+                device: "a100".into(),
+                mechanism: "mig".into(),
+                jobs: 2,
+                completed,
+                violations: 0,
+                mean_turnaround_ms: mean_ms,
+                p99_turnaround_ms: mean_ms,
+                total_turnaround_ms: mean_ms * completed as f64,
+                overshoot_ms: 0.0,
+                inflight_avg: inflight,
+                busy_ns: busy_ms * MS,
+                residual_ns: (mean_ms / 2.0 * MS as f64) as u64,
+                deadline_ms: Some(200.0),
+                arrivals,
+                queue_now,
+            };
+            SignalFrame {
+                phase: 0,
+                lanes: vec![lane],
+                admitted: arrivals,
+                placed: arrivals,
+                rejected: 0,
+                makespan_ns: busy_ms * MS,
+            }
+        }
+
+        let light_fleet = FleetState::new(ClusterSpec::parse("a100:mig-3g").unwrap());
+        let ctx = PolicyCtx {
+            fleet: &light_fleet,
+            phase: 0,
+            phases_total: 4,
+        };
+        let mut p = GainGatedReslice::new(0, MigProfile::G3, MigProfile::G4, 1.3);
+        // first frame: closed-loop calm, 100 ms service — learns, no action
+        let calm = frame_of(100.0, 10, 10, 1.0, 1000, 0);
+        assert!(p.decide(&calm, &ctx).is_empty());
+        assert_eq!(p.svc_ms, Some(100.0));
+        // calm again: mean ≈ service, no queue — the gates must hold
+        assert!(p.decide(&calm, &ctx).is_empty());
+        // live overload (in-clock window view): λ = 2/s with a backlog of
+        // 5 — the clearing estimate prices the heavy slice far above cost
+        let burst = frame_of(300.0, 15, 20, 5.0, 1000, 5);
+        let acts = p.decide(&burst, &ctx);
+        assert_eq!(
+            acts,
+            vec![Action::Reslice {
+                device: 0,
+                from: MigProfile::G3,
+                to: MigProfile::G4,
+            }]
+        );
+        // boundary view of the same burst (queue already drained): the
+        // persistence projection prices the wait mass above target
+        let mut pb = GainGatedReslice::new(0, MigProfile::G3, MigProfile::G4, 1.3);
+        pb.svc_ms = Some(100.0);
+        let boundary_burst = frame_of(300.0, 24, 24, 5.0, 1000, 0);
+        assert_eq!(
+            pb.decide(&boundary_burst, &ctx),
+            vec![Action::Reslice {
+                device: 0,
+                from: MigProfile::G3,
+                to: MigProfile::G4,
+            }]
+        );
+        // shrink: on the heavy profile with the queue gone, the returned
+        // slice's compute over the window beats cost + latency penalty
+        let heavy_fleet = FleetState::new(ClusterSpec::parse("a100:mig-4g").unwrap());
+        let hctx = PolicyCtx {
+            fleet: &heavy_fleet,
+            phase: 3,
+            phases_total: 4,
+        };
+        let mut ph = GainGatedReslice::new(0, MigProfile::G3, MigProfile::G4, 1.3);
+        ph.svc_ms = Some(100.0);
+        let faded = frame_of(75.0, 6, 6, 1.0, 5000, 0);
+        let acts = ph.decide(&faded, &hctx);
+        assert_eq!(
+            acts,
+            vec![Action::Reslice {
+                device: 0,
+                from: MigProfile::G4,
+                to: MigProfile::G3,
+            }]
+        );
+        // but a still-busy heavy lane (queue present) keeps its slices
+        let busy = frame_of(150.0, 20, 30, 4.0, 1000, 4);
+        assert!(ph.decide(&busy, &hctx).is_empty());
     }
 
     #[test]

@@ -22,6 +22,7 @@ use crate::cluster::{ClusterJob, ClusterRunReport};
 use crate::metrics::RunReport;
 use crate::sim::{ns_to_ms, SimTime, MS};
 use crate::util::json::escape as esc;
+use crate::util::stats::Summary;
 
 /// Render an f64 for the deterministic JSON (NaN/inf → null, like
 /// `RunReport::to_json`).
@@ -55,12 +56,22 @@ pub struct LaneSignal {
     pub overshoot_ms: f64,
     /// Little's-law time-averaged in-flight requests (queue depth proxy).
     pub inflight_avg: f64,
-    /// Lane busy span (sim_end for simulation lanes, wall ns for serving).
+    /// Lane busy span (sim_end for simulation lanes, wall ns for serving;
+    /// the *window* span for in-clock governor frames).
     pub busy_ns: SimTime,
     /// Residual-life drain estimate for this lane's in-flight work.
     pub residual_ns: SimTime,
     /// The deadline the violation signals were computed against, if any.
     pub deadline_ms: Option<f64>,
+    /// Requests that *arrived* in the observation window (in-flight ones
+    /// included) — with `busy_ns` this is the arrival rate λ the
+    /// queueing-aware policies price re-slices with.
+    pub arrivals: u64,
+    /// Requests in the system *right now* (arrived, not yet completed) —
+    /// the live backlog. Zero on boundary frames (a completed phase has
+    /// drained its queue); the in-clock governor's windows see it grow
+    /// mid-burst, which is exactly the signal the boundary world lacks.
+    pub queue_now: u64,
 }
 
 impl LaneSignal {
@@ -101,6 +112,69 @@ impl LaneSignal {
             busy_ns: report.sim_end,
             residual_ns: report.residual_life_ns(),
             deadline_ms,
+            arrivals: report.arrivals,
+            queue_now: report.arrivals.saturating_sub(report.requests.len() as u64),
+        }
+    }
+
+    /// A lane signal over the window `(since, until]` of a *live*
+    /// (possibly unfinished) run — the in-clock governor's per-wake view
+    /// (DESIGN.md §7c). `arrivals` is the window's arrival count
+    /// (cumulative-counter diff, in-flight requests included). All stats
+    /// are computed from the requests that completed inside the window;
+    /// `inflight_avg` is Little's law over the window span.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_window(
+        device: &str,
+        mechanism: &str,
+        jobs: u64,
+        report: &RunReport,
+        deadline_ms: Option<f64>,
+        since: SimTime,
+        until: SimTime,
+        arrivals: u64,
+    ) -> LaneSignal {
+        let window = report.window_requests(since, until);
+        let spans_ms: Vec<f64> = window.iter().map(|r| ns_to_ms(r.turnaround_ns())).collect();
+        let s = Summary::of(&spans_ms);
+        let deadline_ns = deadline_ms.map(|d| (d * MS as f64) as SimTime);
+        let violations = deadline_ns.map_or(0, |d| {
+            window.iter().filter(|r| r.turnaround_ns() > d).count() as u64
+        });
+        let overshoot_ms = deadline_ns.map_or(0.0, |d| {
+            window
+                .iter()
+                .map(|r| ns_to_ms(r.turnaround_ns().saturating_sub(d)))
+                .sum()
+        });
+        let span = until.saturating_sub(since).max(1);
+        let (mut sum, mut sum_sq) = (0.0f64, 0.0f64);
+        for r in window {
+            let x = r.turnaround_ns() as f64;
+            sum += x;
+            sum_sq += x * x;
+        }
+        let residual_ns = if sum <= 0.0 {
+            RunReport::FALLBACK_RESIDUAL_NS
+        } else {
+            (sum_sq / (2.0 * sum)).ceil() as SimTime
+        };
+        LaneSignal {
+            device: device.to_string(),
+            mechanism: mechanism.to_string(),
+            jobs,
+            completed: window.len() as u64,
+            violations,
+            mean_turnaround_ms: s.mean,
+            p99_turnaround_ms: s.p99,
+            total_turnaround_ms: spans_ms.iter().sum(),
+            overshoot_ms,
+            inflight_avg: sum / span as f64,
+            busy_ns: span,
+            residual_ns,
+            deadline_ms,
+            arrivals,
+            queue_now: report.arrivals.saturating_sub(report.requests.len() as u64),
         }
     }
 
@@ -111,7 +185,8 @@ impl LaneSignal {
             j,
             "{{\"device\":\"{}\",\"mechanism\":\"{}\",\"jobs\":{},\"completed\":{},\
              \"violations\":{},\"mean_ms\":{},\"p99_ms\":{},\"overshoot_ms\":{},\
-             \"inflight_avg\":{},\"busy_ns\":{},\"residual_ns\":{},\"deadline_ms\":{}}}",
+             \"inflight_avg\":{},\"busy_ns\":{},\"residual_ns\":{},\"deadline_ms\":{},\
+             \"arrivals\":{},\"queue_now\":{}}}",
             esc(&self.device),
             esc(&self.mechanism),
             self.jobs,
@@ -124,6 +199,8 @@ impl LaneSignal {
             self.busy_ns,
             self.residual_ns,
             self.deadline_ms.map(num).unwrap_or_else(|| "null".into()),
+            self.arrivals,
+            self.queue_now,
         );
         j
     }
@@ -149,10 +226,22 @@ impl SignalFrame {
     /// deadline among the jobs routed to each lane (a lane serving several
     /// SLO classes is judged by its strictest).
     pub fn lane_deadlines(rep: &ClusterRunReport, jobs: &[ClusterJob]) -> Vec<Option<f64>> {
-        rep.lanes
+        Self::lane_deadlines_for(
+            &rep.lanes
+                .iter()
+                .map(|lane| lane.jobs.clone())
+                .collect::<Vec<_>>(),
+            jobs,
+        )
+    }
+
+    /// [`SignalFrame::lane_deadlines`] from bare lane job-name lists — the
+    /// in-clock governor's variant, usable before any report exists.
+    pub fn lane_deadlines_for(lane_jobs: &[Vec<String>], jobs: &[ClusterJob]) -> Vec<Option<f64>> {
+        lane_jobs
             .iter()
-            .map(|lane| {
-                lane.jobs
+            .map(|names| {
+                names
                     .iter()
                     .filter_map(|name| {
                         jobs.iter()

@@ -100,9 +100,11 @@ struct Queue {
 }
 
 /// The shared batching front: submit requests from any thread; one worker
-/// thread drains them through a [`BatchRunner`].
+/// thread drains them through a [`BatchRunner`]. The policy is behind a
+/// mutex so a serving governor can *retune* it live
+/// ([`Batcher::retune`]) — the worker re-reads it every batch decision.
 pub struct Batcher {
-    cfg: BatcherConfig,
+    cfg: Mutex<BatcherConfig>,
     q: Mutex<Queue>,
     cv: Condvar,
     in_features: usize,
@@ -133,7 +135,7 @@ impl Batcher {
     pub fn new(cfg: BatcherConfig, in_features: usize) -> Arc<Batcher> {
         assert!(cfg.max_batch >= 1);
         Arc::new(Batcher {
-            cfg,
+            cfg: Mutex::new(cfg),
             q: Mutex::new(Queue::default()),
             cv: Condvar::new(),
             in_features,
@@ -144,6 +146,21 @@ impl Batcher {
 
     pub fn in_features(&self) -> usize {
         self.in_features
+    }
+
+    /// The current batching policy.
+    pub fn config(&self) -> BatcherConfig {
+        self.cfg.lock().unwrap().clone()
+    }
+
+    /// Replace the batching policy live — the serving governor's knob
+    /// (e.g. shrink `max_wait` on an SLO-violating latency lane). The
+    /// worker picks it up at its next batch decision; the waiting worker
+    /// is woken so a tighter `max_wait` applies immediately.
+    pub fn retune(&self, cfg: BatcherConfig) {
+        assert!(cfg.max_batch >= 1);
+        *self.cfg.lock().unwrap() = cfg;
+        self.cv.notify_all();
     }
 
     /// Submit a request; the response arrives on the returned receiver.
@@ -176,13 +193,15 @@ impl Batcher {
     }
 
     /// Worker loop: call from the (single) thread that owns `runner`.
-    /// Returns when closed and drained.
+    /// Returns when closed and drained. The policy is re-read every batch
+    /// decision so a live [`Batcher::retune`] takes effect immediately.
     pub fn run_worker(&self, runner: BatchRunner, hooks: WorkerHooks) {
-        let max_batch = self.cfg.max_batch.min(runner.max_variant());
         loop {
             let batch = {
                 let mut q = self.q.lock().unwrap();
                 loop {
+                    let cfg = self.cfg.lock().unwrap().clone();
+                    let max_batch = cfg.max_batch.min(runner.max_variant());
                     if q.items.is_empty() {
                         if q.closed {
                             return;
@@ -191,11 +210,11 @@ impl Batcher {
                         continue;
                     }
                     let head_age = q.items[0].enqueued.elapsed();
-                    if q.items.len() >= max_batch || head_age >= self.cfg.max_wait || q.closed {
+                    if q.items.len() >= max_batch || head_age >= cfg.max_wait || q.closed {
                         let n = q.items.len().min(max_batch);
                         break q.items.drain(..n).collect::<Vec<_>>();
                     }
-                    let remaining = self.cfg.max_wait - head_age;
+                    let remaining = cfg.max_wait - head_age;
                     let (guard, _) = self
                         .cv
                         .wait_timeout(q, remaining)

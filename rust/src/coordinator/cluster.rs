@@ -332,6 +332,42 @@ impl ClusterRouter {
         self.stats.lock().unwrap().conserved()
     }
 
+    /// Current per-lane slot capacities (the governed router's weights).
+    pub fn lane_slots(&self) -> Vec<u64> {
+        let rs = self.route.lock().unwrap();
+        (0..self.lanes.len()).map(|d| rs.account.cap(d).slots).collect()
+    }
+
+    /// Re-weight a lane: set its in-flight slot capacity (clamped so the
+    /// lane's current in-flight load stays admissible — the account never
+    /// shrinks below its commitments). Returns the capacity actually set.
+    pub fn set_lane_slots(&self, lane: usize, slots: u64) -> u64 {
+        let mut rs = self.route.lock().unwrap();
+        let used = rs.account.used(lane).slots;
+        let s = slots.max(used).max(1);
+        rs.account.set_cap(lane, ClusterVec::new(0, s, 0));
+        s
+    }
+
+    /// Apply one serving-governor action; returns a human-readable record.
+    pub fn apply_lane_action(&self, a: &LaneAction) -> String {
+        match a {
+            LaneAction::Reweight { lane, slots } => {
+                let got = self.set_lane_slots(*lane, *slots);
+                format!("reweight {} -> {got} slots", self.lane_name(*lane))
+            }
+            LaneAction::Retune { lane, cfg } => {
+                self.lane_batcher(*lane).retune(cfg.clone());
+                format!(
+                    "retune {} max_batch={} max_wait={:?}",
+                    self.lane_name(*lane),
+                    cfg.max_batch,
+                    cfg.max_wait
+                )
+            }
+        }
+    }
+
     /// The live router's telemetry as a control-plane [`SignalFrame`] —
     /// the same catalog the simulation control loop consumes, so policies
     /// tuned against simulated fleets read production serving signals
@@ -382,6 +418,8 @@ impl ClusterRouter {
                     busy_ns: wall_ns,
                     residual_ns,
                     deadline_ms: None,
+                    arrivals: st.routed[i],
+                    queue_now: st.routed[i].saturating_sub(st.lane_completed[i]),
                 }
             })
             .collect();
@@ -394,6 +432,143 @@ impl ClusterRouter {
             makespan_ns: wall_ns,
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Serving-layer governor (ROADMAP "serving-layer governed router"): a
+// Policy wired to ClusterRouter::signal_frame on a periodic tick, so the
+// thread-based coordinator is governed like the simulated fleet —
+// re-weighting lanes and retuning batchers from live telemetry.
+// ---------------------------------------------------------------------
+
+/// A serving-layer control action: the thread-world analogue of
+/// `control::policy::Action` (a router has no MIG layout to re-slice;
+/// its knobs are lane weights and batching policy).
+#[derive(Clone, Debug)]
+pub enum LaneAction {
+    /// Set a lane's in-flight slot capacity (the router's steering
+    /// weight: a zero-headroom lane stops attracting traffic).
+    Reweight { lane: usize, slots: u64 },
+    /// Replace a lane's batching policy (e.g. stop batching on an
+    /// SLO-violating latency lane).
+    Retune { lane: usize, cfg: BatcherConfig },
+}
+
+/// A control policy over live serving telemetry: reads the same
+/// [`SignalFrame`] catalog the simulation policies read
+/// ([`ClusterRouter::signal_frame`]), emits [`LaneAction`]s.
+pub trait ServingPolicy: Send {
+    fn name(&self) -> &'static str;
+    /// `slots` and `batchers` are the router's current per-lane capacity
+    /// and batching-policy vectors (so a policy can restore what it
+    /// previously retuned).
+    fn decide(
+        &mut self,
+        frame: &SignalFrame,
+        slots: &[u64],
+        batchers: &[BatcherConfig],
+    ) -> Vec<LaneAction>;
+}
+
+/// Built-in serving governor: when a lane's **per-tick windowed** SLO
+/// violation rate crosses the threshold, collapse its routing weight to
+/// `min_slots` (traffic steers to the healthy lanes) and stop batching
+/// on it (`max_batch` 1, `tight_wait`); restore the original weight
+/// *and* the original batching policy once a window with served traffic
+/// clears to half the threshold. Windowing (diffing the router's
+/// cumulative counters per tick, like the simulation governor's wake
+/// windows) is what makes restore reachable — a lifetime-cumulative rate
+/// would ratchet one way forever. A demoted lane still needs *some*
+/// clean served traffic to earn its weight back; actively probing it is
+/// a ROADMAP item.
+pub struct ViolationReweight {
+    pub min_slots: u64,
+    pub violation_rate_threshold: f64,
+    pub tight_wait: Duration,
+    /// Original weights + batching policies, learned from the first tick.
+    baseline: Option<(Vec<u64>, Vec<BatcherConfig>)>,
+    /// Cumulative (completed, violations) per lane at the previous tick —
+    /// the window differencing state.
+    prev: Vec<(u64, u64)>,
+}
+
+impl ViolationReweight {
+    pub fn new(min_slots: u64, violation_rate_threshold: f64, tight_wait: Duration) -> Self {
+        Self {
+            min_slots,
+            violation_rate_threshold,
+            tight_wait,
+            baseline: None,
+            prev: Vec::new(),
+        }
+    }
+}
+
+impl ServingPolicy for ViolationReweight {
+    fn name(&self) -> &'static str {
+        "violation-reweight"
+    }
+
+    fn decide(
+        &mut self,
+        frame: &SignalFrame,
+        slots: &[u64],
+        batchers: &[BatcherConfig],
+    ) -> Vec<LaneAction> {
+        let (base_slots, base_batchers) = self
+            .baseline
+            .get_or_insert_with(|| (slots.to_vec(), batchers.to_vec()))
+            .clone();
+        if self.prev.len() != frame.lanes.len() {
+            self.prev = vec![(0, 0); frame.lanes.len()];
+        }
+        let mut out = Vec::new();
+        for (i, lane) in frame.lanes.iter().enumerate() {
+            // This tick's window: diff the cumulative counters.
+            let dc = lane.completed.saturating_sub(self.prev[i].0);
+            let dv = lane.violations.saturating_sub(self.prev[i].1);
+            self.prev[i] = (lane.completed, lane.violations);
+            if dc == 0 {
+                continue; // no served traffic this window: no evidence
+            }
+            let rate = dv as f64 / dc as f64;
+            if rate > self.violation_rate_threshold && slots[i] > self.min_slots {
+                out.push(LaneAction::Reweight {
+                    lane: i,
+                    slots: self.min_slots,
+                });
+                out.push(LaneAction::Retune {
+                    lane: i,
+                    cfg: BatcherConfig {
+                        max_batch: 1,
+                        max_wait: self.tight_wait,
+                    },
+                });
+            } else if rate <= self.violation_rate_threshold / 2.0 && slots[i] < base_slots[i] {
+                out.push(LaneAction::Reweight {
+                    lane: i,
+                    slots: base_slots[i],
+                });
+                out.push(LaneAction::Retune {
+                    lane: i,
+                    cfg: base_batchers[i].clone(),
+                });
+            }
+        }
+        out
+    }
+}
+
+/// Outcome of a governed serving run: the base report plus the governor's
+/// tick count, applied actions (in tick order), and the final lane
+/// weights.
+#[derive(Clone, Debug)]
+pub struct GovernedServeReport {
+    pub base: ClusterServeReport,
+    pub governor: &'static str,
+    pub ticks: u64,
+    pub actions: Vec<String>,
+    pub final_slots: Vec<u64>,
 }
 
 /// Configuration of the cluster-routed serving scenario.
@@ -472,6 +647,39 @@ pub fn serve_cluster_routed(
     cfg: ClusterServeConfig,
     lanes: Vec<(ClusterLaneSpec, LaneRunnerFactory)>,
 ) -> ClusterServeReport {
+    serve_cluster_inner(cfg, lanes, None).0
+}
+
+/// [`serve_cluster_routed`] with a live governor: every `tick` of wall
+/// time a scoped ticker thread snapshots [`ClusterRouter::signal_frame`]
+/// and applies the policy's [`LaneAction`]s — the serving-layer
+/// counterpart of the simulated fleet's control loop (the router is
+/// governed *while serving*, not between runs).
+pub fn serve_cluster_governed(
+    cfg: ClusterServeConfig,
+    lanes: Vec<(ClusterLaneSpec, LaneRunnerFactory)>,
+    policy: &mut dyn ServingPolicy,
+    tick: Duration,
+) -> GovernedServeReport {
+    let name = policy.name();
+    let (base, ticks, actions, final_slots) =
+        serve_cluster_inner(cfg, lanes, Some((policy, tick)));
+    GovernedServeReport {
+        base,
+        governor: name,
+        ticks,
+        actions,
+        final_slots,
+    }
+}
+
+fn serve_cluster_inner(
+    cfg: ClusterServeConfig,
+    lanes: Vec<(ClusterLaneSpec, LaneRunnerFactory)>,
+    governor: Option<(&mut dyn ServingPolicy, Duration)>,
+) -> (ClusterServeReport, u64, Vec<String>, Vec<u64>) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
     let mut workers = Vec::with_capacity(lanes.len());
     let (ready_tx, ready_rx) = mpsc::channel::<()>();
     let mut routed_lanes = Vec::with_capacity(lanes.len());
@@ -495,51 +703,88 @@ pub fn serve_cluster_routed(
     let router = ClusterRouter::new(routed_lanes, cfg.policy);
     let start = Instant::now();
 
-    let mut rng = Rng::new(cfg.seed);
-    let mut outstanding = Vec::new();
-    let issue_start = Instant::now();
-    let mut next_arrival = Duration::ZERO;
-    for _ in 0..cfg.requests {
-        if let Some(mean) = cfg.mean_interarrival {
-            next_arrival += Duration::from_nanos(rng.exponential(mean.as_nanos() as f64) as u64);
-            let now = issue_start.elapsed();
-            if next_arrival > now {
-                std::thread::sleep(next_arrival - now);
-            }
-        }
-        let input: Vec<f32> = (0..cfg.in_features)
-            .map(|_| rng.normal(0.0, 1.0) as f32)
-            .collect();
-        let deadline = if rng.f64() < cfg.tight_fraction {
-            cfg.tight_deadline
-        } else {
-            cfg.loose_deadline
-        };
-        if let Some(t) = router.route(input, Some(deadline)) {
-            if cfg.mean_interarrival.is_none() {
-                let _ = t.wait(cfg.timeout);
-            } else {
-                outstanding.push(t);
-            }
-        }
-        // Open loop: settle whatever already finished so lane slots free
-        // as responses arrive — otherwise the account would see phantom
-        // load and start rejecting once total slot capacity is reached,
-        // even with idle lanes.
-        if cfg.mean_interarrival.is_some() {
-            let mut still = Vec::with_capacity(outstanding.len());
-            for t in outstanding {
-                if let Err(t) = t.try_wait() {
-                    still.push(t);
+    let stop = AtomicBool::new(false);
+    let mut ticks = 0u64;
+    let mut action_log: Vec<String> = Vec::new();
+    std::thread::scope(|s| {
+        let ticker = governor.map(|(policy, tick)| {
+            let router = router.clone();
+            let stop = &stop;
+            let ticks = &mut ticks;
+            let log = &mut action_log;
+            s.spawn(move || {
+                let mut n = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(tick);
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    n += 1;
+                    let frame = router.signal_frame(n, start.elapsed().as_nanos() as u64);
+                    let slots = router.lane_slots();
+                    let batchers: Vec<BatcherConfig> = (0..router.lane_count())
+                        .map(|i| router.lane_batcher(i).config())
+                        .collect();
+                    for a in policy.decide(&frame, &slots, &batchers) {
+                        log.push(router.apply_lane_action(&a));
+                    }
+                }
+                *ticks = n;
+            })
+        });
+
+        let mut rng = Rng::new(cfg.seed);
+        let mut outstanding = Vec::new();
+        let issue_start = Instant::now();
+        let mut next_arrival = Duration::ZERO;
+        for _ in 0..cfg.requests {
+            if let Some(mean) = cfg.mean_interarrival {
+                next_arrival +=
+                    Duration::from_nanos(rng.exponential(mean.as_nanos() as f64) as u64);
+                let now = issue_start.elapsed();
+                if next_arrival > now {
+                    std::thread::sleep(next_arrival - now);
                 }
             }
-            outstanding = still;
+            let input: Vec<f32> = (0..cfg.in_features)
+                .map(|_| rng.normal(0.0, 1.0) as f32)
+                .collect();
+            let deadline = if rng.f64() < cfg.tight_fraction {
+                cfg.tight_deadline
+            } else {
+                cfg.loose_deadline
+            };
+            if let Some(t) = router.route(input, Some(deadline)) {
+                if cfg.mean_interarrival.is_none() {
+                    let _ = t.wait(cfg.timeout);
+                } else {
+                    outstanding.push(t);
+                }
+            }
+            // Open loop: settle whatever already finished so lane slots
+            // free as responses arrive — otherwise the account would see
+            // phantom load and start rejecting once total slot capacity is
+            // reached, even with idle lanes.
+            if cfg.mean_interarrival.is_some() {
+                let mut still = Vec::with_capacity(outstanding.len());
+                for t in outstanding {
+                    if let Err(t) = t.try_wait() {
+                        still.push(t);
+                    }
+                }
+                outstanding = still;
+            }
         }
-    }
-    for t in outstanding {
-        let _ = t.wait(cfg.timeout);
-    }
+        for t in outstanding {
+            let _ = t.wait(cfg.timeout);
+        }
+        stop.store(true, Ordering::Relaxed);
+        if let Some(h) = ticker {
+            h.join().unwrap();
+        }
+    });
 
+    let final_slots = router.lane_slots();
     for i in 0..router.lane_count() {
         router.lane_batcher(i).close();
     }
@@ -561,7 +806,7 @@ pub fn serve_cluster_routed(
         })
         .collect();
     let signals = router.signal_frame(0, wall.as_nanos() as u64);
-    ClusterServeReport {
+    let report = ClusterServeReport {
         policy: cfg.policy.name(),
         completed: stats.completed,
         failed: stats.failed,
@@ -572,7 +817,8 @@ pub fn serve_cluster_routed(
         lanes,
         signals,
         conserved: stats.conserved(),
-    }
+    };
+    (report, ticks, action_log, final_slots)
 }
 
 #[cfg(test)]
@@ -756,6 +1002,47 @@ mod tests {
         assert!(st.conserved(), "{st:?}");
         assert_eq!(st.slo_violations, 0, "abandonment is not an SLO miss");
         b.close();
+    }
+
+    #[test]
+    fn governed_router_reweights_violating_lane() {
+        // The serving-layer control loop (ROADMAP "serving-layer governed
+        // router"): all requests are tight-deadline and steer to the slow
+        // latency lane, whose 20 ms executor violates the 5 ms SLO on
+        // every completion. The periodic governor reads the live signal
+        // frame, collapses that lane's routing weight and stops batching
+        // on it; later traffic overflows to the healthy lane.
+        let mut c = cfg(
+            60,
+            ClusterRoutePolicy::SloAware {
+                cutoff: Duration::from_millis(20),
+            },
+        );
+        c.tight_fraction = 1.0;
+        c.tight_deadline = Duration::from_millis(5);
+        c.mean_interarrival = Some(Duration::from_millis(2));
+        let mut policy = ViolationReweight::new(1, 0.5, Duration::from_micros(100));
+        let rep = serve_cluster_governed(
+            c,
+            vec![
+                (lane("slow-latency", true, 64), factory(20)),
+                (lane("fast-shared", false, 64), factory(0)),
+            ],
+            &mut policy,
+            Duration::from_millis(10),
+        );
+        assert_eq!(rep.governor, "violation-reweight");
+        assert!(rep.base.conserved, "{rep:?}");
+        assert!(rep.ticks >= 1, "governor never ticked");
+        assert!(!rep.actions.is_empty(), "governor never acted: {rep:?}");
+        assert!(
+            rep.final_slots[0] < 64,
+            "violating lane kept its weight: {rep:?}"
+        );
+        assert!(
+            rep.base.lanes[1].routed > 0,
+            "traffic never shifted off the violating lane: {rep:?}"
+        );
     }
 
     #[test]

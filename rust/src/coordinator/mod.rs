@@ -13,8 +13,10 @@ pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig, BatcherStats, InferResponse, WorkerHooks};
 pub use cluster::{
-    serve_cluster_routed, ClusterLaneSpec, ClusterRoutePolicy, ClusterRouter, ClusterRouterStats,
-    ClusterServeConfig, ClusterServeReport, ClusterTicket, DeviceLaneReport, LaneRunnerFactory,
+    serve_cluster_governed, serve_cluster_routed, ClusterLaneSpec, ClusterRoutePolicy,
+    ClusterRouter, ClusterRouterStats, ClusterServeConfig, ClusterServeReport, ClusterTicket,
+    DeviceLaneReport, GovernedServeReport, LaneAction, LaneRunnerFactory, ServingPolicy,
+    ViolationReweight,
 };
 pub use governor::{Governor, GovernorMode};
 pub use router::{InstanceRoutes, Router, RouterStats, Ticket};

@@ -28,7 +28,10 @@
 use super::Protocol;
 use crate::cluster::{ClusterJob, ClusterRunConfig, ClusterSpec, PlacePolicy};
 use crate::control::policy::{DrainMigrate, GainGatedReslice, RejectionAutoscale, StaticPolicy};
-use crate::control::{run_governed, ControlConfig, ControlReport, FleetEvent, FleetState, PhaseSpec};
+use crate::control::{
+    run_governed, run_governed_inline, ControlConfig, ControlReport, FleetEvent, FleetState,
+    GovernorConfig, PhaseSpec,
+};
 use crate::gpu::MigProfile;
 use crate::sim::{SimTime, MS};
 use crate::workload::{ArrivalPattern, DlModel};
@@ -79,48 +82,87 @@ fn control_cfg(proto: &Protocol, place: PlacePolicy) -> ControlConfig {
     }
 }
 
-/// Bursty serving with gain-gated re-slicing on an `a100:mig-3g` device.
-///
-/// A calibration run (closed loop on the 3g split) measures the latency
-/// lane's service time `s`; the burst phases then arrive Poisson at
-/// `0.5·s` (overload — the queue grows for the whole burst on 3g, and
-/// half as fast on 4g, whose service is faster). Phases: calm, burst,
-/// burst, calm; the inference job carries a deadline of `2·s` so
-/// violation signals flow.
-pub fn bursty_reslice(proto: &Protocol) -> GovernedComparison {
-    let spec = ClusterSpec::parse("a100:mig-3g").expect("valid spec");
-    let train_steps = (proto.train_steps / 2).max(1);
-    let jobs = |requests: u32, deadline_ms: Option<u64>| {
+/// Shared calibration of the bursty re-slice scenarios: the
+/// `a100:mig-3g` spec and the quantities a calm closed-loop run on the
+/// 3g split measures — the latency lane's service time `s`, the
+/// overloaded burst inter-arrival `0.5·s` (the queue grows for the whole
+/// burst on 3g, and half as fast on 4g, whose service is faster), and
+/// the `2·s` deadline that makes violation signals flow. Both the
+/// boundary and the in-clock scenario build their phase lists from this
+/// one calibration, so the comparison stays apples-to-apples.
+struct BurstyCalib {
+    spec: ClusterSpec,
+    train_steps: u32,
+    svc_ms: f64,
+    burst_interarrival: SimTime,
+    deadline_ms: u64,
+}
+
+impl BurstyCalib {
+    fn new(proto: &Protocol) -> BurstyCalib {
+        let spec = ClusterSpec::parse("a100:mig-3g").expect("valid spec");
+        let train_steps = (proto.train_steps / 2).max(1);
+        let calib = crate::cluster::Cluster::new(spec.clone()).run(
+            &Self::jobs_of(train_steps, proto.requests, None),
+            PlacePolicy::LeastLoaded,
+            &control_cfg(proto, PlacePolicy::LeastLoaded).run,
+        );
+        let svc_ms = calib.lanes[0].report.mean_turnaround_ms();
+        assert!(
+            svc_ms.is_finite() && svc_ms > 0.0,
+            "calibration produced no requests"
+        );
+        BurstyCalib {
+            spec,
+            train_steps,
+            svc_ms,
+            burst_interarrival: (((svc_ms * 0.5) * MS as f64) as SimTime).max(1),
+            deadline_ms: (svc_ms * 2.0).ceil() as u64,
+        }
+    }
+
+    fn jobs_of(train_steps: u32, requests: u32, deadline_ms: Option<u64>) -> Vec<ClusterJob> {
         vec![
             ClusterJob::inference("serve", DlModel::ResNet50, requests, deadline_ms),
             ClusterJob::training("train", DlModel::ResNet50, train_steps),
         ]
-    };
-    // Calibration: one calm closed-loop phase on the 3g split.
-    let calib = crate::cluster::Cluster::new(spec.clone()).run(
-        &jobs(proto.requests, None),
-        PlacePolicy::LeastLoaded,
-        &control_cfg(proto, PlacePolicy::LeastLoaded).run,
-    );
-    let svc_ms = calib.lanes[0].report.mean_turnaround_ms();
-    assert!(svc_ms.is_finite() && svc_ms > 0.0, "calibration produced no requests");
-    let burst_interarrival: SimTime = ((svc_ms * 0.5) * MS as f64) as SimTime;
-    let deadline_ms = (svc_ms * 2.0).ceil() as u64;
+    }
+
+    fn calm_phase(&self, label: &str, requests: u32) -> PhaseSpec {
+        PhaseSpec::new(
+            label,
+            Self::jobs_of(self.train_steps, requests, Some(self.deadline_ms)),
+        )
+    }
+
+    fn burst_phase(&self, label: &str, requests: u32) -> PhaseSpec {
+        PhaseSpec::new(
+            label,
+            Self::jobs_of(self.train_steps, requests, Some(self.deadline_ms)),
+        )
+        .with_pattern(ArrivalPattern::Poisson {
+            mean_interarrival: self.burst_interarrival,
+        })
+    }
+}
+
+/// The boundary scenarios' calm/burst/burst/calm phase list.
+fn bursty_setup(proto: &Protocol) -> (ClusterSpec, Vec<PhaseSpec>, f64) {
+    let calib = BurstyCalib::new(proto);
     let burst_requests = proto.requests * 4;
     let phases = vec![
-        PhaseSpec::new("calm-0", jobs(proto.requests, Some(deadline_ms))),
-        PhaseSpec::new("burst-1", jobs(burst_requests, Some(deadline_ms))).with_pattern(
-            ArrivalPattern::Poisson {
-                mean_interarrival: burst_interarrival.max(1),
-            },
-        ),
-        PhaseSpec::new("burst-2", jobs(burst_requests, Some(deadline_ms))).with_pattern(
-            ArrivalPattern::Poisson {
-                mean_interarrival: burst_interarrival.max(1),
-            },
-        ),
-        PhaseSpec::new("calm-3", jobs(proto.requests, Some(deadline_ms))),
+        calib.calm_phase("calm-0", proto.requests),
+        calib.burst_phase("burst-1", burst_requests),
+        calib.burst_phase("burst-2", burst_requests),
+        calib.calm_phase("calm-3", proto.requests),
     ];
+    (calib.spec, phases, calib.svc_ms)
+}
+
+/// Bursty serving with gain-gated re-slicing on an `a100:mig-3g` device,
+/// governed at phase boundaries (the §7b loop) vs static.
+pub fn bursty_reslice(proto: &Protocol) -> GovernedComparison {
+    let (spec, phases, _svc_ms) = bursty_setup(proto);
     let cfg = control_cfg(proto, PlacePolicy::LeastLoaded);
     let mut governed_fleet = FleetState::new(spec.clone());
     let mut policy = GainGatedReslice::new(0, MigProfile::G3, MigProfile::G4, 1.3);
@@ -129,6 +171,56 @@ pub fn bursty_reslice(proto: &Protocol) -> GovernedComparison {
     let baseline = run_governed(&mut static_fleet, &phases, &mut StaticPolicy, &cfg);
     GovernedComparison {
         scenario: "bursty-reslice",
+        governed,
+        baseline,
+    }
+}
+
+/// The §7c headline: a single *long* burst with the governor *inside*
+/// the clock (wakes every ~2 service times), compared against the
+/// *boundary* governor — both run `GainGatedReslice`, so the only
+/// difference is *when* the loop can close. The in-clock governor sees
+/// the live backlog a few dozen service times into the burst, drains via
+/// masked dispatch, and lands the 3g→4g swap mid-burst at its true
+/// completion event — paying the MIG creation latency as a *real stall*
+/// under continuing arrivals; the boundary governor can only swap at the
+/// burst's end, which never helps the burst itself. The burst length is
+/// calibrated so the 4g slice's faster service amortizes the honest
+/// stall (~1.2 s of overloaded arrivals): undersized bursts would
+/// rightly favor riding it out, which is exactly what the queueing-aware
+/// gain gate prices.
+pub fn bursty_reslice_inline(proto: &Protocol) -> GovernedComparison {
+    let calib = BurstyCalib::new(proto);
+    let spec = calib.spec.clone();
+    // ~1.2 s of 2×-overloaded arrivals: enough that serving the tail on
+    // 4g saves more than the in-clock reconfiguration stall costs. The
+    // 600-request cap always wins (it bounds simulation cost for huge
+    // protocols); `clamp` would panic when requests×8 exceeds it.
+    let burst_requests = ((2_400.0 / calib.svc_ms).ceil() as u32)
+        .max(proto.requests.saturating_mul(8))
+        .max(1)
+        .min(600);
+    let phases = vec![
+        calib.calm_phase("calm-0", proto.requests),
+        calib.burst_phase("burst-1", burst_requests),
+        calib.calm_phase("calm-2", proto.requests),
+    ];
+    let cadence: SimTime = ((calib.svc_ms * 2.0) * MS as f64).max(1.0) as SimTime;
+    let cfg = control_cfg(proto, PlacePolicy::LeastLoaded);
+    let mut inline_fleet = FleetState::new(spec.clone());
+    let mut inline_policy = GainGatedReslice::new(0, MigProfile::G3, MigProfile::G4, 1.3);
+    let governed = run_governed_inline(
+        &mut inline_fleet,
+        &phases,
+        &mut inline_policy,
+        &cfg,
+        &GovernorConfig::cadence(cadence),
+    );
+    let mut boundary_fleet = FleetState::new(spec);
+    let mut boundary_policy = GainGatedReslice::new(0, MigProfile::G3, MigProfile::G4, 1.3);
+    let baseline = run_governed(&mut boundary_fleet, &phases, &mut boundary_policy, &cfg);
+    GovernedComparison {
+        scenario: "bursty-reslice-inline",
         governed,
         baseline,
     }
@@ -251,19 +343,100 @@ pub fn failure_migrate(proto: &Protocol) -> GovernedComparison {
         })
         .collect();
     let cfg = control_cfg(proto, PlacePolicy::LeastLoaded);
-    let pin_demand = ClusterJob::training("train0", DlModel::ResNet50, steps).demand();
+    let pin_job = ClusterJob::training("train0", DlModel::ResNet50, steps);
+    let (pin_demand, pin_ckpt) = (pin_job.demand(), pin_job.checkpoint_bytes());
     let mut governed_fleet = FleetState::new(spec.clone());
-    governed_fleet.pin("train0", 0, pin_demand);
+    governed_fleet.pin("train0", 0, pin_demand, pin_ckpt);
     let mut policy = DrainMigrate;
     let governed = run_governed(&mut governed_fleet, &governed_phases, &mut policy, &cfg);
     // The static fleet pins too (same placement through the failure) but
     // its "train0" jobs after the failure are fresh restarts with new
     // names, so the dead pin never matches and nothing migrates.
     let mut static_fleet = FleetState::new(spec);
-    static_fleet.pin("train0", 0, pin_demand);
+    static_fleet.pin("train0", 0, pin_demand, pin_ckpt);
     let baseline = run_governed(&mut static_fleet, &static_phases, &mut StaticPolicy, &cfg);
     GovernedComparison {
         scenario: "failure-migrate",
+        governed,
+        baseline,
+    }
+}
+
+/// The in-clock failure story (§7c): one phase, a failure warning firing
+/// *mid-phase* (`timed_events`), the pinned trainer drained via masked
+/// dispatch and checkpoint-resumed on the survivor **within the same
+/// phase** at the transfer-complete event — reaction latency ≪ phase
+/// length. The static world under the identical failure loses the
+/// drained trainer (killed, no completion record) and must restart it
+/// from scratch in the next phase. Both runs use the same in-clock
+/// driver and cadence; only the policy differs.
+pub fn failure_migrate_inline(proto: &Protocol) -> GovernedComparison {
+    let spec = ClusterSpec::parse("2xa100:mps").expect("valid spec");
+    let steps = proto.train_steps.max(6);
+    let total = steps * 2;
+    let companion = |i: usize| ClusterJob::training(&format!("other{i}"), DlModel::ResNet50, steps);
+    let cfg = control_cfg(proto, PlacePolicy::LeastLoaded);
+    let pin_job = ClusterJob::training("train0", DlModel::ResNet50, steps);
+    let (pin_demand, pin_ckpt) = (pin_job.demand(), pin_job.checkpoint_bytes());
+    let phase0_jobs = vec![
+        ClusterJob::training("train0", DlModel::ResNet50, steps),
+        companion(0),
+    ];
+    // Probe: phase-0's undisturbed makespan calibrates the failure time
+    // (a third in) and the governor cadence (a twentieth).
+    let probe_phases = vec![PhaseSpec::new("probe", phase0_jobs.clone())];
+    let mut probe_fleet = FleetState::new(spec.clone());
+    probe_fleet.pin("train0", 0, pin_demand, pin_ckpt);
+    let probe = run_governed(&mut probe_fleet, &probe_phases, &mut StaticPolicy, &cfg);
+    let span = probe.phases[0].frame.makespan_ns.max(20);
+    let t_fail = span / 3;
+    let cadence = (span / 20).max(1);
+
+    let governed_phases = vec![
+        PhaseSpec::new("phase-0", phase0_jobs.clone())
+            .with_timed_event(t_fail, FleetEvent::DrainDevice(0)),
+        PhaseSpec::new(
+            "phase-1",
+            vec![
+                ClusterJob::training_resumed("train0", DlModel::ResNet50, total, steps),
+                companion(1),
+            ],
+        ),
+    ];
+    let mut governed_fleet = FleetState::new(spec.clone());
+    governed_fleet.pin("train0", 0, pin_demand, pin_ckpt);
+    let mut policy = DrainMigrate;
+    let governed = run_governed_inline(
+        &mut governed_fleet,
+        &governed_phases,
+        &mut policy,
+        &cfg,
+        &GovernorConfig::cadence(cadence),
+    );
+
+    let static_phases = vec![
+        PhaseSpec::new("phase-0", phase0_jobs)
+            .with_timed_event(t_fail, FleetEvent::DrainDevice(0)),
+        PhaseSpec::new(
+            "phase-1",
+            vec![
+                // restart from scratch: the drained phase-0 work was lost
+                ClusterJob::training("train0-restart", DlModel::ResNet50, total),
+                companion(1),
+            ],
+        ),
+    ];
+    let mut static_fleet = FleetState::new(spec);
+    static_fleet.pin("train0", 0, pin_demand, pin_ckpt);
+    let baseline = run_governed_inline(
+        &mut static_fleet,
+        &static_phases,
+        &mut StaticPolicy,
+        &cfg,
+        &GovernorConfig::cadence(cadence),
+    );
+    GovernedComparison {
+        scenario: "failure-migrate-inline",
         governed,
         baseline,
     }
@@ -275,6 +448,15 @@ pub fn failure_migrate(proto: &Protocol) -> GovernedComparison {
 /// events across every run.
 pub fn control_sweep_events(proto: &Protocol) -> u64 {
     let cmp = bursty_reslice(proto);
+    cmp.total_events()
+}
+
+/// The in-clock control perf workload (`bench_control`, shared with
+/// `bench_perf`'s gated `sweep: control in-clock …` entry): calibration,
+/// the in-clock governed run (lockstep stepping + per-wake frames +
+/// mid-phase actuation), and the boundary-governed baseline.
+pub fn control_inline_sweep_events(proto: &Protocol) -> u64 {
+    let cmp = bursty_reslice_inline(proto);
     cmp.total_events()
 }
 
@@ -396,5 +578,131 @@ mod tests {
     fn sweep_counts_events() {
         let n = control_sweep_events(&proto());
         assert!(n > 0);
+        assert!(control_inline_sweep_events(&proto()) > 0);
+    }
+
+    #[test]
+    fn cadence_infinity_reproduces_boundary_bytes() {
+        // Acceptance: run_governed_inline with cadence = ∞ is the boundary
+        // loop byte-for-byte, on the real scenario with the real policy.
+        use crate::control::GovernorConfig;
+        let (spec, phases, _svc) = bursty_setup(&proto());
+        let cfg = control_cfg(&proto(), PlacePolicy::LeastLoaded);
+        let a = {
+            let mut fleet = FleetState::new(spec.clone());
+            let mut p = GainGatedReslice::new(0, MigProfile::G3, MigProfile::G4, 1.3);
+            run_governed(&mut fleet, &phases, &mut p, &cfg).to_json()
+        };
+        let b = {
+            let mut fleet = FleetState::new(spec);
+            let mut p = GainGatedReslice::new(0, MigProfile::G3, MigProfile::G4, 1.3);
+            run_governed_inline(&mut fleet, &phases, &mut p, &cfg, &GovernorConfig::boundary())
+                .to_json()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn inline_bursty_reacts_mid_phase_and_beats_boundary_on_burst_p99() {
+        let cmp = bursty_reslice_inline(&proto());
+        // the in-clock governor applied its 3g→4g swap *inside* burst-1…
+        let swaps: Vec<_> = cmp.governed.phases[1]
+            .inline_actions
+            .iter()
+            .filter(|r| {
+                r.record.applied
+                    && matches!(
+                        r.record.action,
+                        Action::Reslice {
+                            to: MigProfile::G4,
+                            ..
+                        }
+                    )
+            })
+            .collect();
+        assert!(
+            !swaps.is_empty(),
+            "no in-clock swap inside burst-1: {:?}",
+            cmp.governed.phases[1].inline_actions
+        );
+        // …before the burst's phase boundary, reacting well inside it
+        let makespan = cmp.governed.phases[1].frame.makespan_ns;
+        assert!(
+            swaps[0].applied_ns < makespan,
+            "swap landed at {} ≥ phase end {makespan}",
+            swaps[0].applied_ns
+        );
+        assert!(
+            swaps[0].decided_ns < makespan / 2,
+            "reaction at {} of {makespan} is not mid-burst",
+            swaps[0].decided_ns
+        );
+        // the boundary governor swapped too — but only at the burst's end
+        // (its swap never helps the burst itself)
+        assert!(cmp.baseline.actions_applied() >= 1);
+        assert!(cmp
+            .baseline
+            .phases
+            .iter()
+            .all(|p| p.inline_actions.is_empty()));
+        // burst p99: in-clock ≤ boundary — the mid-burst swap (stall
+        // included) clears the tail faster than riding the light slice
+        let burst = ["burst-1"];
+        let gov = cmp.governed.turnaround_summary_for(&burst).p99;
+        let sta = cmp.baseline.turnaround_summary_for(&burst).p99;
+        assert!(
+            gov <= sta,
+            "in-clock burst p99 {gov:.2} ms !<= boundary-governed {sta:.2} ms"
+        );
+    }
+
+    #[test]
+    fn inline_failure_migrates_mid_phase_and_beats_restart() {
+        let cmp = failure_migrate_inline(&proto());
+        // the governor checkpoint-resumed the pinned trainer inside phase-0
+        let migs: Vec<_> = cmp.governed.phases[0]
+            .inline_actions
+            .iter()
+            .filter(|r| r.record.applied && matches!(r.record.action, Action::Migrate { .. }))
+            .collect();
+        assert_eq!(
+            migs.len(),
+            1,
+            "{:?}",
+            cmp.governed.phases[0].inline_actions
+        );
+        let makespan = cmp.governed.phases[0].frame.makespan_ns;
+        assert!(migs[0].applied_ns < makespan, "migration not mid-phase");
+        assert!(
+            migs[0].decided_ns < makespan / 2,
+            "reaction at {} of {makespan} is not ≪ phase length",
+            migs[0].decided_ns
+        );
+        // the continuation ran on the survivor within the same phase…
+        assert!(cmp.governed.phases[0].report.lanes[1]
+            .jobs
+            .iter()
+            .any(|j| j == "train0"));
+        assert!(cmp.governed.phases[0].report.lanes[1]
+            .report
+            .train_done
+            .is_some());
+        // …while the failed device records no completion for it
+        assert!(cmp.governed.phases[0].report.lanes[0]
+            .report
+            .train_done
+            .is_none());
+        // static world: the drained trainer was killed (no completion) and
+        // the restart re-runs lost work — strictly longer end-to-end
+        assert!(cmp.baseline.phases[0].report.lanes[0]
+            .report
+            .train_done
+            .is_none());
+        assert!(
+            cmp.governed.total_span_s() < cmp.baseline.total_span_s(),
+            "governed {:.3} s !< static-restart {:.3} s",
+            cmp.governed.total_span_s(),
+            cmp.baseline.total_span_s()
+        );
     }
 }

@@ -74,6 +74,11 @@ pub struct RunReport {
     pub occupancy: Vec<OccupancySample>,
     /// Set when the run aborted with an out-of-memory condition (O3).
     pub oom: Option<String>,
+    /// Inference requests that *arrived* (StartRequest emitted), including
+    /// any still in flight — with `requests.len()` this gives the live
+    /// queue depth, and windowed diffs give the arrival rate λ the
+    /// queueing-aware policies price re-slices with (DESIGN.md §7c).
+    pub arrivals: u64,
     /// Total simulated time at run end.
     pub sim_end: SimTime,
     /// Number of events processed (perf accounting).
@@ -178,6 +183,15 @@ impl RunReport {
             .sum()
     }
 
+    /// Completed requests whose completion time falls in `(since, until]` —
+    /// the in-clock governor's per-wake telemetry window (requests are
+    /// recorded in completion order, so this is two binary searches).
+    pub fn window_requests(&self, since: SimTime, until: SimTime) -> &[RequestRecord] {
+        let lo = self.requests.partition_point(|r| r.completed <= since);
+        let hi = self.requests.partition_point(|r| r.completed <= until);
+        &self.requests[lo..hi]
+    }
+
     /// Time-averaged in-flight request count over the run (Little's law:
     /// Σ turnaround / span) — the queue-depth signal. Zero for runs with no
     /// requests or zero span.
@@ -277,9 +291,14 @@ impl RunReport {
         };
         let _ = write!(
             j,
-            "],\"oom\":{oom},\"sim_end\":{},\"events\":{},\"preemptions\":{},\
+            "],\"oom\":{oom},\"arrivals\":{},\"sim_end\":{},\"events\":{},\"preemptions\":{},\
              \"hidden_save_ns\":{},\"total_save_ns\":{}}}",
-            self.sim_end, self.events, self.preemptions, self.hidden_save_ns, self.total_save_ns
+            self.arrivals,
+            self.sim_end,
+            self.events,
+            self.preemptions,
+            self.hidden_save_ns,
+            self.total_save_ns
         );
         j
     }

@@ -26,8 +26,8 @@
 use crate::bail;
 use crate::gpu::partition::{self, MigProfile};
 use crate::gpu::{
-    BlockState, Cohort, CohortId, DeviceAccount, DeviceConfig, FreezeMode, Occupancy, ResourceVec,
-    SmState,
+    BlockState, Cohort, CohortId, DeviceAccount, DeviceConfig, FreezeMode, KernelRes, Occupancy,
+    ResourceVec, SmState,
 };
 use crate::util::error::Result;
 use crate::metrics::{OccupancySample, OpKind, OpRecord, RequestRecord, RunReport};
@@ -117,6 +117,9 @@ struct KernelRt {
     ctx: usize,
     grid: u32,
     fp: ResourceVec,
+    /// Per-block resource request, kept so a live re-slice can recompute
+    /// `occ` against the kernel's new (resized) instance.
+    res: KernelRes,
     occ: Occupancy,
     base_block_dur: SimTime,
     dur_iso: SimTime,
@@ -245,17 +248,42 @@ pub struct DeviceRt {
     // --- metrics ---
     report: RunReport,
     next_occ_sample: SimTime,
+    // --- in-clock governor state (DESIGN.md §7c) ---
+    /// Initial Poll events pushed (idempotent guard for [`DeviceRt::start`]).
+    started: bool,
+    /// Every context reached `Done` (or the run aborted): no further events
+    /// will be processed.
+    finished: bool,
+    /// Per-instance masked-dispatch flags: a masked instance admits no new
+    /// blocks (resident work completes normally) — the honest drain model.
+    inst_masked: Vec<bool>,
+    /// Blocks currently resident on SMs across every kernel (running,
+    /// frozen, or saving) — the drain-quiescence counter.
+    inflight_total: u32,
 }
 
 const H2D: usize = 0;
 const D2H: usize = 1;
 
 impl DeviceRt {
+    /// A runtime with no contexts yet — the in-clock governor's
+    /// migrate-to-idle-device path: the device existed but had nothing
+    /// placed this phase, and a checkpointed job is about to resume on it
+    /// via [`DeviceRt::admit_ctx`]. Immediately `finished()` until a
+    /// context is admitted.
+    pub fn new_idle(cfg: EngineConfig) -> Self {
+        Self::build(cfg, Vec::new())
+    }
+
     pub fn new(cfg: EngineConfig, defs: Vec<CtxDef>) -> Self {
         assert!(!defs.is_empty());
         if let Mechanism::Baseline = cfg.mechanism {
             assert_eq!(defs.len(), 1, "baseline runs a single task");
         }
+        Self::build(cfg, defs)
+    }
+
+    fn build(cfg: EngineConfig, defs: Vec<CtxDef>) -> Self {
         let sms: Vec<SmState> = (0..cfg.dev.num_sms)
             .map(|_| SmState::new(cfg.dev.sm_limits))
             .collect();
@@ -312,6 +340,7 @@ impl DeviceRt {
                 }
             }
         }
+        let n_inst = instances.len();
         Self {
             cfg,
             ctxs,
@@ -340,6 +369,10 @@ impl DeviceRt {
             channels: [Channel::default(), Channel::default()],
             report,
             next_occ_sample: 0,
+            started: false,
+            finished: false,
+            inst_masked: vec![false; n_inst],
+            inflight_total: 0,
         }
     }
 
@@ -449,21 +482,70 @@ impl DeviceRt {
         self.sm_owner[sm] == self.ctx_inst[ctx]
     }
 
-    /// Execute the simulation to completion and return the report.
-    pub fn run(mut self) -> RunReport {
-        if self.report.oom.is_some() {
-            return self.report;
+    /// Push the initial Poll events (idempotent; a run that was infeasible
+    /// at construction finishes immediately with its recorded OOM).
+    fn start(&mut self) {
+        if self.started {
+            return;
+        }
+        self.started = true;
+        if self.report.oom.is_some() || self.ctxs.is_empty() {
+            self.finished = true;
+            return;
         }
         for i in 0..self.ctxs.len() {
             self.events.push(0, Ev::Poll { ctx: i });
         }
-        while let Some((t, ev)) = self.events.pop() {
+    }
+
+    /// Has the run completed (every context `Done`, or the run aborted)?
+    pub fn finished(&self) -> bool {
+        self.finished
+    }
+
+    /// Current simulation time of this device's clock.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// The accumulating report, readable mid-run — the in-clock governor's
+    /// live-telemetry window source (completed requests so far, arrivals,
+    /// event counts). Complete only once [`DeviceRt::finished`].
+    pub fn live_report(&self) -> &RunReport {
+        &self.report
+    }
+
+    /// True when the device can make no further progress on its own:
+    /// started, not finished, and no pending events — the state a
+    /// masked-dispatch drain leaves a device in once resident work
+    /// completed but queued kernels cannot dispatch. Only the governor
+    /// (unmask / retire / admit) can move a stalled device.
+    pub fn stalled(&self) -> bool {
+        self.started && !self.finished && self.events.is_empty()
+    }
+
+    /// Process every event with timestamp ≤ `until`, then (for finite
+    /// horizons) advance the clock to `until` so state injected by an
+    /// in-clock governor (masks, admitted contexts, live re-slices) is
+    /// causally ordered after everything that already happened. Returns
+    /// `true` once the run has completed. Between two governor event times
+    /// devices are independent, so stepping them in any order — or on
+    /// worker threads — is observationally identical (§8a).
+    pub fn step_until(&mut self, until: SimTime) -> bool {
+        self.start();
+        if self.finished {
+            return true;
+        }
+        while self.events.peek_time().is_some_and(|t| t <= until) {
+            let (t, ev) = self.events.pop().expect("peeked event vanished");
             self.now = t;
             if t > self.cfg.max_sim_ns {
                 self.report.oom.get_or_insert(format!(
                     "simulation exceeded max_sim_ns at {t} — likely starvation/deadlock"
                 ));
-                break;
+                self.report.sim_end = self.now;
+                self.finished = true;
+                return true;
             }
             self.report.events += 1;
             self.maybe_sample_occupancy();
@@ -475,22 +557,39 @@ impl DeviceRt {
                 Ev::SliceStart { ctx, epoch } => self.on_slice_start(ctx, epoch),
                 Ev::SaveDone { sm, id } => self.on_save_done(sm, id),
                 Ev::HoldExpire { at } => {
-                    if let Some((_, until)) = self.hold {
-                        if until <= at {
+                    if let Some((_, hold_until)) = self.hold {
+                        if hold_until <= at {
                             self.hold = None;
                             self.try_place();
                         }
                     }
                 }
             }
+            self.report.sim_end = self.now;
             if self.ctxs.iter().all(|c| c.state == CtxState::Done) {
-                break;
+                self.finished = true;
+                return true;
             }
             if self.report.oom.is_some() {
-                break;
+                self.finished = true;
+                return true;
             }
         }
-        self.report.sim_end = self.now;
+        if until < SimTime::MAX && self.now < until {
+            self.now = until;
+        }
+        false
+    }
+
+    /// Execute the simulation to completion and return the report.
+    pub fn run(mut self) -> RunReport {
+        self.step_until(SimTime::MAX);
+        self.report
+    }
+
+    /// Consume the runtime, returning its report (the governor's
+    /// end-of-phase path; [`DeviceRt::run`] is `step_until(∞)` + this).
+    pub fn into_report(self) -> RunReport {
         self.report
     }
 
@@ -511,6 +610,7 @@ impl DeviceRt {
                 }
                 SourceOut::StartRequest { id, arrived } => {
                     self.ctxs[ctx].req = Some((id, arrived));
+                    self.report.arrivals += 1;
                     // a newly-arrived request may wake slicing
                     self.reeval_slicing();
                 }
@@ -570,6 +670,7 @@ impl DeviceRt {
                     ctx,
                     grid: spec.grid_blocks,
                     fp: spec.res.block_footprint(),
+                    res: spec.res,
                     occ,
                     base_block_dur: spec.block_dur(&self.cfg.dev),
                     dur_iso: spec.dur_iso,
@@ -616,6 +717,11 @@ impl DeviceRt {
 
     /// Is `ctx` allowed to dispatch blocks right now?
     fn ctx_dispatchable(&self, ctx: usize) -> bool {
+        // Masked dispatch (DESIGN.md §7c): a draining instance admits no
+        // new blocks; resident work completes normally.
+        if self.inst_masked[self.ctx_inst[ctx]] {
+            return false;
+        }
         if self.is_timeslicing() {
             !self.in_switch_gap && ctx == self.active_ctx
         } else if let Some((holder, until)) = self.hold {
@@ -799,6 +905,7 @@ impl DeviceRt {
         }
         if total_placed > 0 {
             self.ctxs[ctx].threads_resident += fp.threads * total_placed as u64;
+            self.inflight_total += total_placed;
         }
         total_placed
     }
@@ -988,6 +1095,7 @@ impl DeviceRt {
         let kid = cohort.kernel as usize;
         let ctx = cohort.ctx;
         self.running_blocks[ctx] -= cohort.blocks;
+        self.inflight_total -= cohort.blocks;
         self.ctxs[ctx].threads_resident = self.ctxs[ctx]
             .threads_resident
             .saturating_sub(cohort.held.threads);
@@ -1486,6 +1594,7 @@ impl DeviceRt {
             .map(|p| p.flavor)
             .unwrap_or(PreemptFlavor::ContextSave);
         let kid = cohort.kernel as usize;
+        self.inflight_total -= cohort.blocks;
         let k = &mut self.kernels[kid];
         k.inflight -= cohort.blocks;
         let remaining = match flavor {
@@ -1590,23 +1699,277 @@ impl DeviceRt {
         Ok(rt)
     }
 
-    /// Test hook: validate all SM invariants plus every instance account's
-    /// differential invariant (incremental state == from-scratch rebuild of
-    /// its SM slice).
-    #[cfg(test)]
-    fn check_all_sms(&self) {
-        for (i, sm) in self.sms.iter().enumerate() {
-            if let Err(e) = sm.check_invariants() {
-                panic!("SM {i} invariant violation at t={}: {e}", self.now);
+    // ------------------------------------------------------------------
+    // In-clock governor entry points (DESIGN.md §7c). Unlike the §7b
+    // boundary entry points, these mutate a *live* runtime between two
+    // governor event times: drain is modeled honestly as masked dispatch
+    // (stop admitting blocks, let resident work complete), and re-slice /
+    // migrate effects land at their true completion times mid-phase.
+    // ------------------------------------------------------------------
+
+    /// Mask or unmask dispatch on every instance of this device. While
+    /// masked, no context places new blocks (resident cohorts run to
+    /// completion and transfers keep flowing — PCIe is not reconfigured);
+    /// unmasking re-runs placement immediately at the current clock.
+    pub fn set_dispatch_mask(&mut self, masked: bool) {
+        for m in &mut self.inst_masked {
+            *m = masked;
+        }
+        if !masked {
+            self.try_place();
+            for chan in 0..2 {
+                self.pump_channel(chan);
             }
         }
-        for (i, inst) in self.instances.iter().enumerate() {
-            if let Err(e) = inst
-                .acct
-                .check_against(&self.sms[inst.base..inst.base + inst.count])
-            {
-                panic!("instance {i} account invariant violation at t={}: {e}", self.now);
+    }
+
+    /// Is any instance's dispatch currently masked?
+    pub fn dispatch_masked(&self) -> bool {
+        self.inst_masked.iter().any(|&m| m)
+    }
+
+    /// Blocks currently resident on the device's SMs.
+    pub fn resident_blocks(&self) -> u32 {
+        self.inflight_total
+    }
+
+    /// The exact time the device's resident blocks will have quiesced
+    /// under a dispatch mask: masking admits nothing new, so the drain
+    /// completes at the max finish time of the Running cohorts (whose
+    /// completion events are already scheduled) — `now` when already
+    /// quiescent. Frozen/saving cohorts (time-slicing, fine-grained
+    /// preemption) have no bounded finish time; the masked-drain tool is
+    /// for the MIG/MPS world, where neither state exists.
+    pub fn drain_end(&self) -> SimTime {
+        let mut end = self.now;
+        for sm in &self.sms {
+            for c in &sm.cohorts {
+                if c.state == BlockState::Running {
+                    end = end.max(c.finish_time());
+                }
             }
+        }
+        end
+    }
+
+    /// Re-slice the live runtime `from → to` mid-run: requires a drained
+    /// device (no resident blocks, no saves in flight). Rebuilds the
+    /// instance layout, accounts, and context pinning in place; queued
+    /// kernels keep their position and re-enter dispatch against the new
+    /// (resized) instances with freshly-computed occupancy. Every
+    /// feasibility check (partition table, per-instance DRAM admission at
+    /// the new shares, single-block fit) runs *before* any mutation, so a
+    /// failed re-slice leaves the runtime untouched.
+    pub fn reslice_live(&mut self, to: MigProfile) -> Result<()> {
+        let new_cfg = Self::apply_reslice(&self.cfg, to)?;
+        if self.inflight_total != 0 {
+            bail!(
+                "cannot re-slice with {} blocks resident — drain first",
+                self.inflight_total
+            );
+        }
+        if !self.saving.is_empty() {
+            bail!("cannot re-slice with context saves in flight");
+        }
+        let (instances, sm_owner, ctx_inst, infeasible) =
+            Self::build_instances(&new_cfg, &self.sms, self.ctxs.len());
+        if let Some(e) = infeasible {
+            bail!("live re-slice failed: {e}");
+        }
+        // Per-instance DRAM admission over the contexts still running, at
+        // the new shares (same arithmetic as construction).
+        for (i, inst) in instances.iter().enumerate() {
+            let need: u64 = self
+                .ctxs
+                .iter()
+                .enumerate()
+                .filter(|&(c, cx)| ctx_inst[c] == i && cx.state != CtxState::Done)
+                .map(|(_, cx)| cx.source.profile().dram_footprint)
+                .sum();
+            if need > inst.dev.dram_bytes {
+                bail!(
+                    "live re-slice to {} would over-subscribe instance {i}: \
+                     {need} B > {} B share",
+                    to.name(),
+                    inst.dev.dram_bytes
+                );
+            }
+        }
+        // Kernels with pending blocks must still fit a block somewhere in
+        // their new instance — checked before committing anything.
+        let mut new_occ: Vec<(usize, Occupancy)> = Vec::new();
+        for (kid, k) in self.kernels.iter().enumerate() {
+            if k.done || (k.pending_blocks() == 0 && k.inflight == 0) {
+                continue;
+            }
+            let occ = Occupancy::compute(&instances[ctx_inst[k.ctx]].dev, &k.res);
+            if occ.device_blocks == 0 {
+                bail!(
+                    "a queued kernel cannot fit a single block after re-slice to {}",
+                    to.name()
+                );
+            }
+            new_occ.push((kid, occ));
+        }
+        let masked = self.dispatch_masked();
+        let n_inst = instances.len();
+        self.cfg = new_cfg;
+        self.instances = instances;
+        self.sm_owner = sm_owner;
+        self.ctx_inst = ctx_inst;
+        self.inst_masked = vec![masked; n_inst];
+        for (kid, occ) in new_occ {
+            self.kernels[kid].occ = occ;
+        }
+        Ok(())
+    }
+
+    /// Names of the contexts that have not completed (the kill-on-stall
+    /// and migration bookkeeping input).
+    pub fn live_ctx_names(&self) -> Vec<String> {
+        self.ctxs
+            .iter()
+            .filter(|c| c.state != CtxState::Done)
+            .map(|c| c.name.clone())
+            .collect()
+    }
+
+    /// Retire a context mid-run without a completion record — the
+    /// migrate-out (or kill-on-failure) path. Its resident blocks must
+    /// have drained; queued kernels are tombstoned and queued transfers
+    /// dropped. Returns the number of *fully completed* source units
+    /// (training steps past this source's own start point): the in-flight
+    /// unit is lost, exactly what a checkpoint restore loses.
+    pub fn retire_ctx(&mut self, name: &str) -> Result<u32> {
+        let Some(ctx) = self.ctxs.iter().position(|c| c.name == name) else {
+            bail!("no context named '{name}'");
+        };
+        if self.ctxs[ctx].state == CtxState::Done {
+            bail!("context '{name}' already completed");
+        }
+        if self.running_blocks[ctx] > 0 {
+            bail!(
+                "context '{name}' still has {} blocks resident — drain first",
+                self.running_blocks[ctx]
+            );
+        }
+        let emitted = self.ctxs[ctx].source.units_emitted();
+        let mid_unit = self.ctxs[ctx].source.unit_in_progress()
+            || matches!(
+                self.ctxs[ctx].state,
+                CtxState::RunningKernel | CtxState::Transferring | CtxState::InGap
+            );
+        let completed = emitted.saturating_sub(mid_unit as u32);
+        for qi in 0..self.queue.len() {
+            let kid = self.queue[qi];
+            if self.kernels[kid].ctx == ctx && !self.kernels[kid].done {
+                self.kernels[kid].done = true;
+                self.queue_dead += 1;
+            }
+        }
+        for chan in &mut self.channels {
+            chan.queue.retain(|t| t.ctx != ctx);
+        }
+        self.ctxs[ctx].state = CtxState::Done;
+        if self.ctxs.iter().all(|c| c.state == CtxState::Done) {
+            self.finished = true;
+            self.report.sim_end = self.report.sim_end.max(self.now);
+        }
+        Ok(completed)
+    }
+
+    /// Would [`DeviceRt::admit_ctx`] accept a context holding
+    /// `dram_footprint` bytes right now? The migrate-in feasibility probe
+    /// — run *before* the source context is irrevocably retired, so a
+    /// doomed migration rejects instead of losing the job.
+    pub fn can_admit(&self, name: &str, dram_footprint: u64) -> Result<()> {
+        let idx = self.ctxs.len();
+        let inst = if idx == 0 { 0 } else { self.instances.len() - 1 };
+        let live: u64 = self
+            .ctxs
+            .iter()
+            .filter(|c| c.state != CtxState::Done)
+            .map(|c| c.source.profile().dram_footprint)
+            .sum();
+        if live + dram_footprint > self.cfg.dev.dram_bytes {
+            bail!(
+                "admitting '{name}' would over-subscribe global memory: {} B > {} B",
+                live + dram_footprint,
+                self.cfg.dev.dram_bytes
+            );
+        }
+        if matches!(
+            self.cfg.mechanism,
+            Mechanism::Mig { .. } | Mechanism::MigMps { .. }
+        ) {
+            let inst_live: u64 = self
+                .ctxs
+                .iter()
+                .enumerate()
+                .filter(|&(c, cx)| self.ctx_inst[c] == inst && cx.state != CtxState::Done)
+                .map(|(_, cx)| cx.source.profile().dram_footprint)
+                .sum();
+            if inst_live + dram_footprint > self.instances[inst].dev.dram_bytes {
+                bail!(
+                    "admitting '{name}' would over-subscribe its GPU instance share"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Admit a new context mid-run — the migrate-in path: a checkpointed
+    /// job resuming on this device. Pinned like construction-time contexts
+    /// (context 0 owns instance 0, later ones share the last instance);
+    /// DRAM admission re-runs against the live residents
+    /// ([`DeviceRt::can_admit`]). The context's first poll fires at `at`
+    /// (clamped to the device clock).
+    pub fn admit_ctx(&mut self, def: CtxDef, at: SimTime) -> Result<usize> {
+        self.start(); // order initial polls before the admitted context's
+        self.can_admit(&def.name, def.source.profile().dram_footprint)?;
+        let idx = self.ctxs.len();
+        let inst = if idx == 0 { 0 } else { self.instances.len() - 1 };
+        self.ctxs.push(CtxRt {
+            name: def.name,
+            is_inference: def.source.is_inference(),
+            source: def.source,
+            priority: def.priority,
+            state: CtxState::Idle,
+            req: None,
+            threads_resident: 0,
+            done_at: None,
+            op_issued: 0,
+        });
+        self.running_blocks.push(0);
+        self.ctx_inst.push(inst);
+        self.finished = false;
+        self.events.push(at.max(self.now), Ev::Poll { ctx: idx });
+        Ok(idx)
+    }
+
+    /// Validate every SM invariant plus every instance account's
+    /// differential invariant (incremental state ≡ a from-scratch rebuild
+    /// of its SM slice) — the §6a/§6b contract, exposed so the
+    /// masked-drain / live-reslice property tests can assert a
+    /// drained-then-resliced device equals a from-scratch recompute.
+    pub fn check_accounts(&self) -> std::result::Result<(), String> {
+        for (i, sm) in self.sms.iter().enumerate() {
+            sm.check_invariants()
+                .map_err(|e| format!("SM {i} at t={}: {e}", self.now))?;
+        }
+        for (i, inst) in self.instances.iter().enumerate() {
+            inst.acct
+                .check_against(&self.sms[inst.base..inst.base + inst.count])
+                .map_err(|e| format!("instance {i} account at t={}: {e}", self.now))?;
+        }
+        Ok(())
+    }
+
+    /// Test hook: panic on any invariant violation.
+    #[cfg(test)]
+    fn check_all_sms(&self) {
+        if let Err(e) = self.check_accounts() {
+            panic!("invariant violation: {e}");
         }
     }
 }

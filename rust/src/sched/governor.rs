@@ -1,0 +1,318 @@
+//! The in-clock governor runtime (DESIGN.md §7c): one multiplexer over N
+//! per-device event clocks, advanced in lockstep between *governor events*
+//! (cadence wake-ups, action completions, platform failures) so a control
+//! policy can observe and act **during** execution instead of only between
+//! event-clock runs — the capability the paper's coarse-grained mechanisms
+//! lack, and that Tally (arXiv 2410.07381) and DARIS (arXiv 2504.08795)
+//! show real isolation and real-time scheduling require.
+//!
+//! The contract with [`DeviceRt`] is narrow and deterministic:
+//!
+//! * [`GovernorRt::advance_to`] steps every device to the next governor
+//!   event time. Devices are mutually independent between governor events
+//!   (they share nothing but the governor itself), so stepping them
+//!   serially or one-per-worker-thread is observationally identical — the
+//!   §8a fan-out rule extends through the in-clock loop, and the
+//!   determinism guard asserts it byte-for-byte.
+//! * Drain is *masked dispatch*: [`GovernorRt::mask_device`] stops new
+//!   block admission; resident cohorts run to completion, and their max
+//!   finish time ([`GovernorRt::drain_end`]) is exact because masking
+//!   schedules nothing new — so a re-slice or migration can be booked at
+//!   its true completion event, not a charged gap.
+//! * Mid-phase effects land through [`GovernorRt::reslice`] (live layout
+//!   swap on the drained device), [`GovernorRt::retire_job`] /
+//!   [`GovernorRt::admit_job`] (checkpoint a job off one clock and resume
+//!   its continuation on another at the transfer-complete time), and
+//!   [`GovernorRt::kill_stalled`] (the failure path: drained work nobody
+//!   migrated is lost, honestly).
+//!
+//! The policy loop that drives this lives in `control::inline`; this
+//! module stays control-agnostic so the engine layer never depends on the
+//! policy layer.
+
+use super::engine::{CtxDef, DeviceRt};
+use crate::bail;
+use crate::exp::{run_parallel, Job};
+use crate::gpu::partition::MigProfile;
+use crate::metrics::RunReport;
+use crate::sim::SimTime;
+use crate::util::error::Result;
+
+/// A fleet of live device runtimes stepped in lockstep between governor
+/// events. `None` slots are idle devices (nothing was placed on them).
+pub struct GovernorRt {
+    rts: Vec<Option<DeviceRt>>,
+    parallel: bool,
+    now: SimTime,
+}
+
+impl GovernorRt {
+    pub fn new(rts: Vec<Option<DeviceRt>>, parallel: bool) -> GovernorRt {
+        GovernorRt {
+            rts,
+            parallel,
+            now: 0,
+        }
+    }
+
+    /// The governor's clock: the last time every device was stepped to.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.rts.len()
+    }
+
+    /// Live view of one device runtime (`None` for idle devices).
+    pub fn device(&self, d: usize) -> Option<&DeviceRt> {
+        self.rts.get(d).and_then(|r| r.as_ref())
+    }
+
+    fn device_mut(&mut self, d: usize) -> Result<&mut DeviceRt> {
+        match self.rts.get_mut(d) {
+            Some(Some(rt)) => Ok(rt),
+            _ => bail!("no live runtime on device {d}"),
+        }
+    }
+
+    /// Step every device to `t` — one device per worker thread when
+    /// `parallel` (results byte-identical either way; devices only
+    /// interact through the governor, which is quiescent during a step).
+    pub fn advance_to(&mut self, t: SimTime) {
+        assert!(t >= self.now, "governor clock may not rewind");
+        self.now = t;
+        let live = self.rts.iter().filter(|r| r.is_some()).count();
+        if self.parallel && live > 1 {
+            let rts = std::mem::take(&mut self.rts);
+            let jobs: Vec<Job<'static, Option<DeviceRt>>> = rts
+                .into_iter()
+                .map(|mut slot| {
+                    let job: Job<'static, Option<DeviceRt>> = Box::new(move || {
+                        if let Some(rt) = slot.as_mut() {
+                            rt.step_until(t);
+                        }
+                        slot
+                    });
+                    job
+                })
+                .collect();
+            self.rts = run_parallel(jobs);
+        } else {
+            for slot in self.rts.iter_mut() {
+                if let Some(rt) = slot.as_mut() {
+                    rt.step_until(t);
+                }
+            }
+        }
+    }
+
+    /// Every device completed its work (idle devices count as done).
+    pub fn all_done(&self) -> bool {
+        self.rts
+            .iter()
+            .all(|r| r.as_ref().map_or(true, DeviceRt::finished))
+    }
+
+    /// Every device is either done or *stalled* (masked with no
+    /// schedulable events): the phase cannot progress without governor
+    /// intervention — migrate the stalled work or kill it.
+    pub fn all_done_or_stalled(&self) -> bool {
+        self.rts
+            .iter()
+            .all(|r| r.as_ref().map_or(true, |rt| rt.finished() || rt.stalled()))
+    }
+
+    /// Stop admitting new blocks on device `d` (the honest drain model:
+    /// resident work completes, nothing new dispatches).
+    pub fn mask_device(&mut self, d: usize) -> Result<()> {
+        self.device_mut(d)?.set_dispatch_mask(true);
+        Ok(())
+    }
+
+    /// Re-open dispatch on device `d`; placement re-runs immediately at
+    /// the device's current clock.
+    pub fn unmask_device(&mut self, d: usize) -> Result<()> {
+        self.device_mut(d)?.set_dispatch_mask(false);
+        Ok(())
+    }
+
+    /// Exact quiescence time of device `d`'s resident blocks under a mask
+    /// (see [`DeviceRt::drain_end`]); `now` for idle devices.
+    pub fn drain_end(&self, d: usize) -> SimTime {
+        self.device(d).map_or(self.now, DeviceRt::drain_end)
+    }
+
+    /// Live re-slice of a drained device (see [`DeviceRt::reslice_live`]).
+    pub fn reslice(&mut self, d: usize, to: MigProfile) -> Result<()> {
+        self.device_mut(d)?.reslice_live(to)
+    }
+
+    /// Checkpoint a job off device `d`: retire its context (resident
+    /// blocks must have drained) and return its completed units.
+    pub fn retire_job(&mut self, d: usize, job: &str) -> Result<u32> {
+        self.device_mut(d)?.retire_ctx(job)
+    }
+
+    /// Make sure device `d` has a live runtime, building an empty one
+    /// from `cfg` if it was idle this phase — the migrate-to-idle-spare
+    /// path ([`DeviceRt::new_idle`]); an existing runtime is untouched.
+    pub fn ensure_runtime(&mut self, d: usize, cfg: crate::sched::EngineConfig) -> Result<()> {
+        match self.rts.get_mut(d) {
+            Some(slot) => {
+                if slot.is_none() {
+                    *slot = Some(DeviceRt::new_idle(cfg));
+                }
+                Ok(())
+            }
+            None => bail!("no device {d}"),
+        }
+    }
+
+    /// Resume a checkpointed job on device `d` at time `at`.
+    pub fn admit_job(&mut self, d: usize, def: CtxDef, at: SimTime) -> Result<usize> {
+        self.device_mut(d)?.admit_ctx(def, at)
+    }
+
+    /// Force-retire every context on stalled masked devices — the failure
+    /// path: a drained device whose work nobody migrated loses it (killed
+    /// jobs leave no completion record). Returns `(device, job)` pairs in
+    /// deterministic (device, context) order.
+    pub fn kill_stalled(&mut self) -> Vec<(usize, String)> {
+        let mut killed = Vec::new();
+        for (d, slot) in self.rts.iter_mut().enumerate() {
+            let Some(rt) = slot.as_mut() else { continue };
+            if rt.finished() || !rt.stalled() {
+                continue;
+            }
+            for name in rt.live_ctx_names() {
+                if rt.retire_ctx(&name).is_ok() {
+                    killed.push((d, name));
+                }
+            }
+        }
+        killed
+    }
+
+    /// Tear down the fleet, yielding each device's report (`None` for
+    /// idle devices). Call once the phase completed.
+    pub fn into_reports(self) -> Vec<Option<RunReport>> {
+        self.rts
+            .into_iter()
+            .map(|r| r.map(DeviceRt::into_report))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::DeviceConfig;
+    use crate::sched::{EngineConfig, Mechanism};
+    use crate::sim::MS;
+    use crate::util::rng::Rng;
+    use crate::workload::{ArrivalPattern, DlModel, Source};
+
+    fn train_rt(steps: u32, seed: u64) -> DeviceRt {
+        let dev = DeviceConfig::a100();
+        DeviceRt::new(
+            EngineConfig::new(dev.clone(), Mechanism::mps_default()),
+            vec![CtxDef {
+                name: "t".into(),
+                source: Source::training(
+                    DlModel::AlexNet.train_profile().unwrap(),
+                    dev,
+                    steps,
+                    Rng::new(seed),
+                ),
+                priority: 0,
+            }],
+        )
+    }
+
+    #[test]
+    fn lockstep_stepping_matches_free_run() {
+        // Stepping a device in governor-sized increments must produce the
+        // same report as running it to completion in one call.
+        let whole = train_rt(3, 7).run();
+        let mut gov = GovernorRt::new(vec![Some(train_rt(3, 7))], false);
+        let mut t = 0;
+        while !gov.all_done() {
+            t += 5 * MS;
+            gov.advance_to(t);
+            assert!(t < 600_000 * MS, "runaway lockstep");
+        }
+        let stepped = gov.into_reports().pop().unwrap().unwrap();
+        assert_eq!(whole.to_json(), stepped.to_json());
+    }
+
+    #[test]
+    fn parallel_and_serial_lockstep_agree() {
+        let run = |parallel| {
+            let rts = vec![Some(train_rt(2, 1)), None, Some(train_rt(2, 2))];
+            let mut gov = GovernorRt::new(rts, parallel);
+            let mut t = 0;
+            while !gov.all_done() {
+                t += 10 * MS;
+                gov.advance_to(t);
+            }
+            gov.into_reports()
+                .into_iter()
+                .map(|r| r.map(|r| r.to_json()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn masked_drain_stalls_then_unmask_resumes() {
+        let mut gov = GovernorRt::new(vec![Some(train_rt(2, 9))], false);
+        gov.advance_to(2 * MS); // some work resident
+        gov.mask_device(0).unwrap();
+        let drain = gov.drain_end(0);
+        assert!(drain >= gov.now());
+        // past the drain point no blocks are resident; the context keeps
+        // processing non-block ops (gaps, transfers) until it hits the
+        // masked kernel and stalls
+        gov.advance_to(drain + MS);
+        assert_eq!(gov.device(0).unwrap().resident_blocks(), 0);
+        let mut t = gov.now();
+        while !gov.all_done_or_stalled() {
+            t += MS;
+            gov.advance_to(t);
+            assert!(t < 600_000 * MS, "masked device never stalled");
+        }
+        assert_eq!(gov.device(0).unwrap().resident_blocks(), 0);
+        // unmasking lets it run to completion
+        gov.unmask_device(0).unwrap();
+        let mut t = gov.now();
+        while !gov.all_done() {
+            t += 10 * MS;
+            gov.advance_to(t);
+            assert!(t < 600_000 * MS, "device never finished after unmask");
+        }
+        let rep = gov.into_reports().pop().unwrap().unwrap();
+        assert!(rep.train_done.is_some());
+        assert!(rep.oom.is_none(), "{:?}", rep.oom);
+    }
+
+    #[test]
+    fn kill_stalled_loses_undrained_work() {
+        let mut gov = GovernorRt::new(vec![Some(train_rt(4, 3))], false);
+        gov.advance_to(MS);
+        gov.mask_device(0).unwrap();
+        let drain = gov.drain_end(0);
+        gov.advance_to(drain + MS);
+        let mut t = gov.now();
+        while !gov.all_done_or_stalled() {
+            t += MS;
+            gov.advance_to(t);
+            assert!(t < 600_000 * MS, "masked device never stalled");
+        }
+        let killed = gov.kill_stalled();
+        assert_eq!(killed, vec![(0, "t".to_string())]);
+        assert!(gov.all_done());
+        let rep = gov.into_reports().pop().unwrap().unwrap();
+        assert!(rep.train_done.is_none(), "killed job must not complete");
+    }
+}

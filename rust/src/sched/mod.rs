@@ -4,8 +4,10 @@
 
 pub mod contention;
 pub mod engine;
+pub mod governor;
 pub mod mechanism;
 
 pub use contention::ContentionModel;
 pub use engine::{run, CtxDef, DeviceRt, Engine, EngineConfig};
+pub use governor::GovernorRt;
 pub use mechanism::{Mechanism, PlacementPolicy, PreemptConfig, PreemptFlavor, PreemptPolicy};

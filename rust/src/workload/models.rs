@@ -79,6 +79,33 @@ impl DlModel {
             _ => "pytorch",
         }
     }
+
+    /// Trainable parameter count (the published figures for these
+    /// architectures, rounded to 0.1 M). This is what a checkpoint
+    /// actually serializes — activations and workspace, which dominate the
+    /// *resident* footprint at training batch sizes, are recomputed on
+    /// resume, not moved.
+    pub fn param_count(&self) -> u64 {
+        match self {
+            DlModel::ResNet50 => 25_600_000,
+            DlModel::ResNet152 => 60_200_000,
+            DlModel::AlexNet => 61_100_000,
+            DlModel::Vgg19 => 143_700_000,
+            DlModel::DenseNet201 => 20_000_000,
+            DlModel::ResNet34 => 21_800_000,
+            DlModel::Bert => 110_000_000,
+            DlModel::Rnnt => 120_000_000,
+        }
+    }
+
+    /// First-principles checkpoint size: fp32 weights (4 B/param) plus
+    /// SGD-momentum optimizer state (another 4 B/param — the optimizer
+    /// these CNN/RNN training recipes use). What a `Migrate` action moves
+    /// over the host links (DESIGN.md §7b/§7c), replacing the former
+    /// footprint/16 approximation.
+    pub fn checkpoint_bytes(&self) -> u64 {
+        self.param_count() * (4 + 4)
+    }
 }
 
 /// Role a task plays in the concurrent workload.
@@ -290,6 +317,26 @@ mod tests {
             assert_eq!(DlModel::from_name(m.name()), Some(m));
         }
         assert_eq!(DlModel::from_name("nope"), None);
+    }
+
+    #[test]
+    fn checkpoint_bytes_are_first_principles() {
+        // weights + optimizer state at 8 B/param, and always far below the
+        // resident training footprint (activations are recomputed).
+        for m in DlModel::ALL {
+            assert_eq!(m.checkpoint_bytes(), m.param_count() * 8);
+            if let Some(p) = m.train_profile() {
+                assert!(
+                    m.checkpoint_bytes() < p.dram_footprint,
+                    "{:?}: checkpoint {} !< resident {}",
+                    m,
+                    m.checkpoint_bytes(),
+                    p.dram_footprint
+                );
+            }
+        }
+        // ResNet-50: 25.6 M params → ~205 MB checkpoint
+        assert_eq!(DlModel::ResNet50.checkpoint_bytes(), 204_800_000);
     }
 
     #[test]

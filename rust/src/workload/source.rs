@@ -45,6 +45,9 @@ pub struct Source {
 enum Kind {
     Train {
         steps_remaining: u32,
+        /// Steps whose op streams this source has emitted (the last one may
+        /// still be executing) — the in-clock checkpoint progress counter.
+        steps_emitted: u32,
     },
     Infer {
         arrivals: ArrivalGen,
@@ -68,6 +71,7 @@ impl Source {
             buffer: VecDeque::new(),
             kind: Kind::Train {
                 steps_remaining: steps,
+                steps_emitted: 0,
             },
         }
     }
@@ -131,6 +135,26 @@ impl Source {
         self.buffer.iter().find_map(|op| op.kernel())
     }
 
+    /// Units (training steps) whose op streams this source has emitted so
+    /// far — for a resumed source, counted from the resume point, not the
+    /// original step zero. The last emitted unit may still be executing
+    /// ([`Source::unit_in_progress`]); a checkpoint resumes from the last
+    /// *completed* unit, so a mid-run migration (DESIGN.md §7c) uses
+    /// `units_emitted − (unit_in_progress as u32)`. Zero for inference
+    /// sources (requests are not checkpointable units).
+    pub fn units_emitted(&self) -> u32 {
+        match &self.kind {
+            Kind::Train { steps_emitted, .. } => *steps_emitted,
+            Kind::Infer { .. } => 0,
+        }
+    }
+
+    /// Is an emitted unit's op stream still partially buffered? (Its
+    /// in-flight work is lost on checkpoint, like a half-finished step.)
+    pub fn unit_in_progress(&self) -> bool {
+        !self.buffer.is_empty()
+    }
+
     /// Poll the source at simulation time `now`. The engine calls this only
     /// when the context is idle (its previous op fully completed) or when a
     /// `WaitUntil` deadline fires.
@@ -155,11 +179,15 @@ impl Source {
             return SourceOut::Op(op);
         }
         match &mut self.kind {
-            Kind::Train { steps_remaining } => {
+            Kind::Train {
+                steps_remaining,
+                steps_emitted,
+            } => {
                 if *steps_remaining == 0 {
                     return SourceOut::Done;
                 }
                 *steps_remaining -= 1;
+                *steps_emitted += 1;
                 self.buffer
                     .extend(self.profile.gen_unit(&self.dev, &mut self.rng));
                 SourceOut::Op(self.buffer.pop_front().expect("unit is never empty"))
@@ -346,6 +374,37 @@ mod tests {
         // resuming past the end yields an immediately-done source
         let mut done = Source::training_resumed(p, dev(), 2, 5, Rng::new(9));
         assert_eq!(done.next(0), SourceOut::Done);
+    }
+
+    #[test]
+    fn units_emitted_track_checkpoint_progress() {
+        let p = DlModel::AlexNet.train_profile().unwrap();
+        let mut s = Source::training(p.clone(), dev(), 2, Rng::new(11));
+        assert_eq!(s.units_emitted(), 0);
+        assert!(!s.unit_in_progress());
+        // first poll buffers step 1: emitted, mid-unit
+        assert!(matches!(s.next(0), SourceOut::Op(_)));
+        assert_eq!(s.units_emitted(), 1);
+        assert!(s.unit_in_progress());
+        // drain step 1's ops: emitted stays 1, buffer empties
+        while s.unit_in_progress() {
+            assert!(matches!(s.next(0), SourceOut::Op(_)));
+        }
+        assert_eq!(s.units_emitted(), 1);
+        // a resumed source counts from its own start point
+        let mut r = Source::training_resumed(p, dev(), 5, 3, Rng::new(11));
+        assert_eq!(r.units_emitted(), 0);
+        assert!(matches!(r.next(0), SourceOut::Op(_)));
+        assert_eq!(r.units_emitted(), 1);
+        // inference sources are not checkpointable units
+        let i = Source::inference(
+            DlModel::AlexNet.infer_profile().unwrap(),
+            dev(),
+            ArrivalPattern::ClosedLoop,
+            1,
+            Rng::new(12),
+        );
+        assert_eq!(i.units_emitted(), 0);
     }
 
     #[test]

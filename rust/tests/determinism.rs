@@ -160,6 +160,45 @@ fn governed_scenarios_fanout_byte_identical() {
 }
 
 #[test]
+fn inclock_governed_scenarios_fanout_byte_identical() {
+    // The guard extended through the in-clock governor (DESIGN.md §7c):
+    // devices are stepped in lockstep between governor events — one per
+    // worker thread when the fan-out is on — and wake frames, staged
+    // actions, masked drains, live re-slices, and mid-phase migrations
+    // must all serialize byte-identically either way. Any divergence means
+    // thread scheduling leaked into an in-clock decision.
+    use gpushare::exp::control::{bursty_reslice_inline, failure_migrate_inline};
+    let mk = |parallel| Protocol {
+        requests: 6,
+        train_steps: 2,
+        parallel,
+        ..Protocol::default()
+    };
+    let a = bursty_reslice_inline(&mk(true));
+    let b = bursty_reslice_inline(&mk(false));
+    assert_eq!(
+        a.to_json(),
+        b.to_json(),
+        "in-clock bursty re-slice: parallel and serial runs diverged"
+    );
+    // the in-clock loop is alive: the governor acted mid-phase
+    assert!(a.governed.inline_actions_applied() >= 1);
+    let a = failure_migrate_inline(&mk(true));
+    let b = failure_migrate_inline(&mk(false));
+    assert_eq!(
+        a.to_json(),
+        b.to_json(),
+        "in-clock failure migrate: parallel and serial runs diverged"
+    );
+    assert!(a.governed.inline_actions_applied() >= 1);
+    // and the guard bites: a different seed changes the bytes
+    let mut p = mk(true);
+    p.seed = 424242;
+    let c = failure_migrate_inline(&p);
+    assert_ne!(a.to_json(), c.to_json(), "seed must influence in-clock runs");
+}
+
+#[test]
 fn repeated_runs_share_one_json_byte_for_byte() {
     let p = proto(true);
     let a = p

@@ -917,8 +917,10 @@ fn prop_control_actions_conserve_jobs_and_account() {
         // Pin a few jobs onto devices that fit them.
         for j in 0..g.usize(0, 3) {
             let demand = ClusterVec::new(g.u64(1 << 28, 12 << 30), 1, 0);
+            // first-principles checkpoint: well below the resident demand
+            let ckpt = g.u64(1 << 20, 1 << 28);
             if let Some(d) = fleet.account.least_loaded(&demand) {
-                fleet.pin(&format!("job{j}"), d, demand);
+                fleet.pin(&format!("job{j}"), d, demand, ckpt);
             }
         }
         let pinned_before = fleet.pinned_jobs();
@@ -1090,5 +1092,234 @@ fn prop_governed_runs_conserve_and_reproduce() {
         let (rep_b, _) = run_once();
         check_eq(rep_a.to_json(), rep_b.to_json(), "governed run reproducible")?;
         Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// In-clock governor (DESIGN.md §7c)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_masked_drain_then_reslice_matches_recompute() {
+    // Random mid-run masked-dispatch drains: mask at a random time, wait
+    // out the (exact) drain end, live-reslice the drained device, unmask,
+    // and run to completion. Throughout: resident blocks hit zero by the
+    // predicted drain end, the per-instance accounts equal a from-scratch
+    // rebuild after the re-slice (the §6a/§6b differential through a
+    // layout change), and every request/step still completes exactly once.
+    use gpushare::sched::{DeviceRt, GovernorRt};
+
+    let cfg_small = PropConfig {
+        cases: 8,
+        ..PropConfig::default()
+    };
+    run_prop("inclock=drain+reslice-differential", cfg_small, |g| {
+        let dev = DeviceConfig::a100();
+        let (from, to) = if g.bool() {
+            (MigProfile::G3, MigProfile::G4)
+        } else {
+            (MigProfile::G4, MigProfile::G3)
+        };
+        let requests = g.u64(2, 5) as u32;
+        let steps = g.u64(1, 2) as u32;
+        let seed = g.u64(1, 1 << 40);
+        let rt = DeviceRt::new(
+            EngineConfig::new(dev.clone(), Mechanism::Mig { profile: from }),
+            vec![
+                CtxDef {
+                    name: "serve".into(),
+                    source: Source::inference(
+                        DlModel::AlexNet.infer_profile().unwrap(),
+                        dev.clone(),
+                        ArrivalPattern::ClosedLoop,
+                        requests,
+                        Rng::new(seed),
+                    ),
+                    priority: 0,
+                },
+                CtxDef {
+                    name: "train".into(),
+                    source: Source::training(
+                        DlModel::AlexNet.train_profile().unwrap(),
+                        dev.clone(),
+                        steps,
+                        Rng::new(seed ^ 0xABCD),
+                    ),
+                    priority: -2,
+                },
+            ],
+        );
+        let mut gov = GovernorRt::new(vec![Some(rt)], false);
+        let mask_at = g.u64(1, 40) * MS;
+        gov.advance_to(mask_at);
+        gov.mask_device(0).unwrap();
+        let drain = gov.drain_end(0);
+        check(drain >= gov.now(), "drain end must not precede the mask")?;
+        gov.advance_to(drain);
+        let rt_ref = gov.device(0).unwrap();
+        check_eq(rt_ref.resident_blocks(), 0, "drained at the predicted end")?;
+        if let Err(e) = rt_ref.check_accounts() {
+            return check(false, format!("pre-reslice accounts: {e}"));
+        }
+        if !rt_ref.finished() {
+            // the §6b differential through a live layout change
+            if let Err(e) = gov.reslice(0, to) {
+                return check(false, format!("live re-slice failed: {e}"));
+            }
+            if let Err(e) = gov.device(0).unwrap().check_accounts() {
+                return check(false, format!("post-reslice accounts: {e}"));
+            }
+            gov.unmask_device(0).unwrap();
+        }
+        let mut t = gov.now();
+        while !gov.all_done() {
+            t += 20 * MS;
+            gov.advance_to(t);
+            check(t < 600_000 * MS, "device never finished after unmask")?;
+        }
+        let rep = gov.into_reports().pop().unwrap().unwrap();
+        check(rep.oom.is_none(), format!("{:?}", rep.oom))?;
+        check_eq(rep.requests.len(), requests as usize, "requests conserved")?;
+        check(rep.train_done.is_some(), "training completed")?;
+        // completions are unique (each request completes exactly once)
+        let mut ids: Vec<u64> = rep.requests.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        check_eq(ids.len(), requests as usize, "no duplicate completions")
+    });
+}
+
+#[test]
+fn prop_inclock_action_streams_conserve_jobs() {
+    // A chaos policy fires random (honest and stale) actions from inside
+    // the clock at random cadences: the pinned-job multiset never changes
+    // size, the fleet account always equals a recompute from the pin
+    // list, every phase's placement stays conserved, and identical
+    // scenarios serialize byte-identically (in-clock actuation is as
+    // deterministic as the boundary path).
+    use gpushare::cluster::{ClusterJob, ClusterRunConfig, ClusterSpec, PlacePolicy};
+    use gpushare::control::policy::{Action, Policy, PolicyCtx, ScaleChange};
+    use gpushare::control::signal::SignalFrame;
+    use gpushare::control::{
+        run_governed_inline, ControlConfig, FleetState, GovernorConfig, PhaseSpec,
+    };
+
+    struct ChaosPolicy {
+        rng: Rng,
+    }
+
+    impl Policy for ChaosPolicy {
+        fn name(&self) -> &'static str {
+            "chaos"
+        }
+
+        fn decide(&mut self, _frame: &SignalFrame, ctx: &PolicyCtx<'_>) -> Vec<Action> {
+            let n = ctx.fleet.spec.devices.len() as u64;
+            let mut out = Vec::new();
+            match self.rng.range_u64(0, 5) {
+                0 => {
+                    let profiles = [MigProfile::G2, MigProfile::G3, MigProfile::G4];
+                    out.push(Action::Reslice {
+                        device: self.rng.range_u64(0, n - 1) as usize,
+                        from: profiles[self.rng.range_u64(0, 2) as usize],
+                        to: profiles[self.rng.range_u64(0, 2) as usize],
+                    });
+                }
+                1 => {
+                    out.push(Action::Scale {
+                        change: ScaleChange::PowerUp {
+                            device: self.rng.range_u64(0, n - 1) as usize,
+                        },
+                    });
+                }
+                2 => {
+                    if !ctx.fleet.pins.is_empty() {
+                        let p = self.rng.range_u64(0, ctx.fleet.pins.len() as u64 - 1) as usize;
+                        out.push(Action::Migrate {
+                            job: ctx.fleet.pins[p].job.clone(),
+                            src: ctx.fleet.pins[p].device,
+                            dst: self.rng.range_u64(0, n - 1) as usize,
+                        });
+                    }
+                }
+                _ => {}
+            }
+            out
+        }
+    }
+
+    let cfg_small = PropConfig {
+        cases: 5,
+        ..PropConfig::default()
+    };
+    run_prop("inclock=chaos-conserves", cfg_small, |g| {
+        let seed = g.u64(1, 1 << 40);
+        let cadence = g.u64(2, 30) * MS;
+        let spec = ClusterSpec::parse("a100:mig-3g,2xa100:mps").unwrap();
+        let phases = vec![
+            PhaseSpec::new(
+                "p0",
+                vec![
+                    ClusterJob::inference("i0", DlModel::AlexNet, g.u64(1, 3) as u32, Some(50)),
+                    ClusterJob::training("pinned", DlModel::AlexNet, g.u64(1, 2) as u32),
+                ],
+            ),
+            PhaseSpec::new(
+                "p1",
+                vec![ClusterJob::inference("i1", DlModel::AlexNet, 2, None)],
+            ),
+        ];
+        let cfg = ControlConfig {
+            run: ClusterRunConfig {
+                seed,
+                parallel: false,
+                ..ClusterRunConfig::default()
+            },
+            place: PlacePolicy::LeastLoaded,
+        };
+        let pin_job = ClusterJob::training("pinned", DlModel::AlexNet, 1);
+        let run_once = || {
+            let mut fleet = FleetState::with_powered(spec.clone(), vec![true, true, false]);
+            fleet.pin("pinned", 1, pin_job.demand(), pin_job.checkpoint_bytes());
+            let pinned_before = fleet.pinned_jobs();
+            let mut policy = ChaosPolicy {
+                rng: Rng::new(seed ^ 0x5ca1ab1e),
+            };
+            let rep = run_governed_inline(
+                &mut fleet,
+                &phases,
+                &mut policy,
+                &cfg,
+                &GovernorConfig::cadence(cadence),
+            );
+            (rep, fleet, pinned_before)
+        };
+        let (rep_a, fleet_a, pinned_before) = run_once();
+        for phase in &rep_a.phases {
+            check(
+                phase.report.stats.conserved(),
+                format!("phase '{}' placement not conserved", phase.label),
+            )?;
+        }
+        check_eq(
+            fleet_a.pinned_jobs(),
+            pinned_before,
+            "pinned-job multiset conserved through in-clock actions",
+        )?;
+        for pin in &fleet_a.pins {
+            check(
+                fleet_a.powered[pin.device],
+                format!("pin '{}' on dark device {}", pin.job, pin.device),
+            )?;
+        }
+        if let Err(e) = fleet_a.check() {
+            return check(false, format!("fleet account != recompute: {e}"));
+        }
+        let (rep_b, _, _) = run_once();
+        check_eq(
+            rep_a.to_json(),
+            rep_b.to_json(),
+            "in-clock chaos run reproducible",
+        )
     });
 }
