@@ -6,7 +6,7 @@
 use gpushare::coordinator::batcher::{BatchRunner, Batcher, BatcherConfig};
 use gpushare::coordinator::{serve, GovernorMode, ServeConfig};
 use gpushare::exp::cluster::cluster_sweep_events;
-use gpushare::exp::control::{control_inline_sweep_events, control_sweep_events};
+use gpushare::exp::control::{chaos_sweep_events, control_inline_sweep_events, control_sweep_events};
 use gpushare::exp::{mig_mechanisms, run_parallel, Job, Protocol};
 use gpushare::gpu::DeviceConfig;
 use gpushare::runtime::{MockExecutor, ModelExecutor};
@@ -287,6 +287,21 @@ fn main() {
         |iters| {
             for _ in 0..iters {
                 black_box(control_inline_sweep_events(&control_proto));
+            }
+        },
+    );
+
+    // --- the fault-plane sweep (§7d): the chaos storm under governed
+    // recovery (heartbeat detection, periodic checkpoints, backoff-retried
+    // restore over a downed link) vs the static restart world — gates the
+    // injection + recovery hot path ---
+    let chaos_events = chaos_sweep_events(&control_proto);
+    sweep_bench.bench_items(
+        &format!("sweep: chaos recovery ({chaos_events} events)"),
+        Some(chaos_events),
+        |iters| {
+            for _ in 0..iters {
+                black_box(chaos_sweep_events(&control_proto));
             }
         },
     );

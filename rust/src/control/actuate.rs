@@ -47,6 +47,11 @@ pub struct Pin {
     /// [`crate::cluster::ClusterJob::checkpoint_bytes`]) — activations and
     /// workspace are recomputed on resume, not moved.
     pub ckpt_bytes: u64,
+    /// Training units captured by the last periodic checkpoint (§7d) — a
+    /// restore after `FailDevice` resumes from here; work completed since
+    /// is the abrupt failure's lost-work bill. Zero until a checkpoint is
+    /// taken.
+    pub ckpt_units: u32,
 }
 
 /// Everything a phase-boundary action can mutate. `PartialEq` backs the
@@ -64,6 +69,16 @@ pub struct FleetState {
     /// The persistent fleet account (pins only; per-phase jobs use the
     /// fresh per-placement account).
     pub account: ClusterAccount,
+    /// Thermal-throttle factor per device (§7d): kernel service times run
+    /// at this percentage of nominal (100 = healthy, 150 = 50% slower).
+    /// Fleet-side mirror of the engine's `service_scale_pct`.
+    pub degraded_pct: Vec<u32>,
+    /// Host-link bandwidth per device as a percentage of nominal (100 =
+    /// healthy). Scales both legs of [`FleetState::migrate_transfer_ns`].
+    pub link_bw_pct: Vec<u32>,
+    /// Host-link liveness per device. A down link fails transfers in
+    /// flight — the staging pipeline retries with exponential backoff.
+    pub link_up: Vec<bool>,
 }
 
 /// The outcome of applying one action.
@@ -113,6 +128,9 @@ impl FleetState {
             draining: vec![false; n],
             pins: Vec::new(),
             account: ClusterAccount::new(&caps),
+            degraded_pct: vec![100; n],
+            link_bw_pct: vec![100; n],
+            link_up: vec![true; n],
         }
     }
 
@@ -160,6 +178,7 @@ impl FleetState {
             device,
             demand,
             ckpt_bytes,
+            ckpt_units: 0,
         });
     }
 
@@ -204,10 +223,14 @@ impl FleetState {
     /// that device's PCIe bandwidth plus the fixed per-transfer latency.
     /// Shared by the boundary actuator and the in-clock governor so both
     /// worlds price the same movement identically.
+    /// A degraded host link (§7d, `DegradeLink`) stretches its leg by
+    /// `100/link_bw_pct` — at the healthy 100% the cost is bit-identical
+    /// to the pre-fault-plane pricing.
     pub fn migrate_transfer_ns(&self, src: usize, dst: usize, bytes: u64) -> SimTime {
         let leg = |d: usize| -> SimTime {
             let bw = self.spec.devices[d].model.config().pcie_bw_bytes_per_s;
-            CHECKPOINT_LATENCY_NS + (bytes as f64 / bw as f64 * 1e9).ceil() as SimTime
+            let base = CHECKPOINT_LATENCY_NS + (bytes as f64 / bw as f64 * 1e9).ceil() as SimTime;
+            base.saturating_mul(100) / self.link_bw_pct[d].max(1) as SimTime
         };
         leg(src) + leg(dst)
     }

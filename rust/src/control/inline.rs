@@ -39,10 +39,13 @@
 //! byte-identical results (§8a) — the determinism guard covers the
 //! in-clock scenarios too.
 
-use super::actuate::{ActionRecord, FleetState, PROVISION_NS};
+use super::actuate::{ActionRecord, FleetState, CHECKPOINT_LATENCY_NS, PROVISION_NS};
 use super::policy::{Action, Policy, PolicyCtx, ScaleChange};
 use super::signal::{LaneSignal, SignalFrame};
-use super::{apply_fleet_event, phase_seed, ControlConfig, ControlReport, PhaseOutcome, PhaseSpec};
+use super::{
+    apply_fleet_event, phase_seed, ControlConfig, ControlReport, FaultStats, FleetEvent,
+    PhaseOutcome, PhaseSpec,
+};
 use crate::cluster::{
     place_pinned, Cluster, ClusterJob, ClusterRunConfig, ClusterRunReport, JobKind, Placement,
     PlacementStats,
@@ -50,7 +53,17 @@ use crate::cluster::{
 use crate::gpu::partition;
 use crate::metrics::RunReport;
 use crate::sched::{CtxDef, EngineConfig, GovernorRt};
-use crate::sim::{SimTime, SEC};
+use crate::sim::{SimTime, MS, SEC};
+
+/// Exponential-backoff base for transfers that land on a down host link
+/// (§7d): retry `k` waits `BACKOFF_BASE_NS << k` before re-arming. Six
+/// doubling retries cover ~126 ms of outage — several checkpoint-transfer
+/// legs — before a transfer is abandoned (and, for a restore, re-staged
+/// at a later heartbeat).
+pub const BACKOFF_BASE_NS: SimTime = MS;
+
+/// Backoff attempts before a transfer is abandoned.
+const MAX_TRANSFER_RETRIES: u32 = 6;
 
 /// Knobs of the in-clock governor.
 #[derive(Clone, Copy, Debug)]
@@ -58,12 +71,22 @@ pub struct GovernorConfig {
     /// Simulated time between governor wake-ups. `None` = ∞: the governor
     /// observes only completed phases — exactly the boundary loop.
     pub cadence_ns: Option<SimTime>,
+    /// Periodic-checkpoint cadence for pinned trainers (§7d): every `ns`
+    /// of simulated time the in-clock governor stop-the-world drains each
+    /// pinned trainer's device and copies its checkpoint over the host
+    /// link (one D2H leg), snapshotting `Pin::ckpt_units`. `None` = never.
+    /// The Young/Daly knob: short cadences pay steady-state drain+copy
+    /// overhead, long ones lose more work to an abrupt failure.
+    pub ckpt_every_ns: Option<SimTime>,
 }
 
 impl GovernorConfig {
     /// The degenerate cadence=∞ governor: the §7b boundary loop.
     pub fn boundary() -> GovernorConfig {
-        GovernorConfig { cadence_ns: None }
+        GovernorConfig {
+            cadence_ns: None,
+            ckpt_every_ns: None,
+        }
     }
 
     /// Wake every `ns` of simulated time.
@@ -71,7 +94,16 @@ impl GovernorConfig {
         assert!(ns > 0, "cadence must be positive (use boundary() for ∞)");
         GovernorConfig {
             cadence_ns: Some(ns),
+            ckpt_every_ns: None,
         }
+    }
+
+    /// Checkpoint pinned trainers every `ns` of simulated time (effective
+    /// in in-clock mode only — the boundary loop has no mid-phase clock).
+    pub fn with_checkpoint(mut self, ns: SimTime) -> GovernorConfig {
+        assert!(ns > 0, "checkpoint cadence must be positive");
+        self.ckpt_every_ns = Some(ns);
+        self
     }
 }
 
@@ -109,6 +141,24 @@ struct PendingAction {
     /// job is not live this phase — the migration is fleet-bookkeeping
     /// only).
     migrate_ji: Option<usize>,
+    /// Restore mode (§7d): the migration's source failed abruptly — there
+    /// is nothing to drain or retire; the destination resumes the job from
+    /// its last periodic checkpoint (`Pin::ckpt_units`).
+    restore: bool,
+    /// Backoff retries so far (a down host link at land time fails the
+    /// transfer in flight).
+    attempt: u32,
+    /// The physical fault instant a restore recovers from (MTTR).
+    fault_at: Option<SimTime>,
+}
+
+/// A stop-the-world periodic checkpoint in flight (§7d): the device is
+/// masked, resident work drains, and the D2H copy lands at `apply_at`.
+struct PendingCkpt {
+    job: String,
+    device: usize,
+    apply_at: SimTime,
+    attempt: u32,
 }
 
 /// The devices an action touches — the busy-guard's unit (one mapping,
@@ -176,6 +226,29 @@ fn validate_migrate(
     Ok((ji, footprint))
 }
 
+/// Units the job had completed before this phase began (`TrainingResumed`
+/// carries them) — checkpoint snapshots and lost-work bills are absolute,
+/// so resumed continuations and fresh jobs account identically.
+fn base_units(phase_jobs: &[ClusterJob], job: &str) -> u32 {
+    phase_jobs
+        .iter()
+        .find(|j| j.name == job)
+        .map(|j| match &j.kind {
+            JobKind::TrainingResumed { completed, .. } => *completed,
+            _ => 0,
+        })
+        .unwrap_or(0)
+}
+
+/// One host-link leg (the D2H copy) of a periodic checkpoint, at the
+/// device's *physical* link bandwidth — the copy runs on the wire, not on
+/// the governor's possibly-stale belief.
+fn ckpt_leg_ns(fleet: &FleetState, d: usize, bytes: u64, link_pct: u32) -> SimTime {
+    let bw = fleet.spec.devices[d].model.config().pcie_bw_bytes_per_s;
+    let base = CHECKPOINT_LATENCY_NS + (bytes as f64 / bw as f64 * 1e9).ceil() as SimTime;
+    base.saturating_mul(100) / link_pct.max(1) as SimTime
+}
+
 /// Build a windowed frame: one lane signal per device over
 /// `(since, until]`, plus the phase's (constant) routing pressure.
 /// `lane_reports[d]` is the device's report at snapshot time — the live
@@ -233,12 +306,14 @@ fn window_frame(
 /// Validate-and-stage one policy action at wake time `t`: a rejected
 /// action records immediately; a valid one masks what must drain and
 /// books its completion event.
+#[allow(clippy::too_many_arguments)]
 fn stage_action(
     fleet: &FleetState,
     gov: &mut GovernorRt,
     phase_jobs: &[ClusterJob],
     action: Action,
     t: SimTime,
+    fail_time: &[Option<SimTime>],
     pending: &mut Vec<PendingAction>,
     records: &mut Vec<InlineActionRecord>,
 ) {
@@ -274,6 +349,9 @@ fn stage_action(
                 decided_ns: t,
                 apply_at,
                 migrate_ji: None,
+                restore: false,
+                attempt: 0,
+                fault_at: None,
             });
         }
         Action::Migrate { job, src, dst } => {
@@ -288,10 +366,17 @@ fn stage_action(
             let live = gov
                 .device(d_src)
                 .is_some_and(|rt| rt.live_ctx_names().iter().any(|n| n == job));
-            let migrate_ji = if live {
-                // A live job's continuation must be resumable: validate the
-                // job kind and the destination *before* masking the source
-                // — a doomed migration must reject here, not after an
+            // Restore mode (§7d): a detected abrupt failure left the pin
+            // stranded on an unpowered device. Nothing is live to drain or
+            // retire — the job resumes on the destination from its last
+            // periodic checkpoint, paying only the transfer.
+            let restore = !live
+                && !fleet.powered[d_src]
+                && fleet.pins.iter().any(|p| p.job == *job && p.device == d_src);
+            let migrate_ji = if live || restore {
+                // The continuation must be resumable: validate the job
+                // kind and the destination *before* masking the source —
+                // a doomed migration must reject here, not after an
                 // irreversible drain.
                 match validate_migrate(fleet, gov, phase_jobs, job, d_dst) {
                     Ok((ji, _footprint)) => Some(ji),
@@ -323,6 +408,9 @@ fn stage_action(
                 decided_ns: t,
                 apply_at,
                 migrate_ji,
+                restore,
+                attempt: 0,
+                fault_at: if restore { fail_time[d_src] } else { None },
             });
         }
         Action::Scale { change } => {
@@ -335,6 +423,9 @@ fn stage_action(
                 decided_ns: t,
                 apply_at,
                 migrate_ji: None,
+                restore: false,
+                attempt: 0,
+                fault_at: None,
             });
         }
     }
@@ -403,8 +494,9 @@ fn apply_pending(
         }
         Action::Migrate { job, src, dst } => {
             let (d_src, d_dst) = (*src, *dst);
+            // A restore never masked its (dead) source — nothing to undo.
             let unmask = |gov: &mut GovernorRt, fleet: &FleetState| {
-                if !fleet.draining[d_src] {
+                if !p.restore && !fleet.draining[d_src] {
                     let _ = gov.unmask_device(d_src);
                 }
             };
@@ -440,11 +532,23 @@ fn apply_pending(
                     unmask(gov, fleet);
                     return reject(e.to_string());
                 }
-                let done = match gov.retire_job(d_src, job) {
-                    Ok(done) => done,
-                    Err(e) => {
-                        unmask(gov, fleet);
-                        return reject(e.to_string());
+                let done = if p.restore {
+                    // The source died abruptly: everything since the last
+                    // periodic checkpoint is gone — resume from it.
+                    fleet
+                        .pins
+                        .iter()
+                        .find(|pn| pn.job == *job)
+                        .map(|pn| pn.ckpt_units)
+                        .unwrap_or(0)
+                        .saturating_sub(base)
+                } else {
+                    match gov.retire_job(d_src, job) {
+                        Ok(done) => done,
+                        Err(e) => {
+                            unmask(gov, fleet);
+                            return reject(e.to_string());
+                        }
                     }
                 };
                 // Resume the continuation on the destination clock at the
@@ -464,7 +568,11 @@ fn apply_pending(
             }
             let mut rec = fleet.apply(&p.action, None);
             rec.cost_ns = span;
-            rec.note = format!("in-clock drain+checkpoint {:.1} ms", span as f64 / 1e6);
+            rec.note = if p.restore {
+                format!("in-clock restore-from-checkpoint {:.1} ms", span as f64 / 1e6)
+            } else {
+                format!("in-clock drain+checkpoint {:.1} ms", span as f64 / 1e6)
+            };
             unmask(gov, fleet);
             rec
         }
@@ -513,14 +621,17 @@ fn place_phase(
 /// assembled cluster report, the in-clock action records, and the final
 /// frame (the last window, carrying the phase makespan) for the boundary
 /// decision that follows.
+#[allow(clippy::too_many_arguments)]
 fn run_phase_inclock(
     fleet: &mut FleetState,
     phase: &PhaseSpec,
     cfg: &ControlConfig,
     cadence: SimTime,
+    ckpt_every: Option<SimTime>,
     policy: &mut dyn Policy,
     phase_idx: usize,
     phases_total: usize,
+    fault: &mut FaultStats,
 ) -> (ClusterRunReport, Vec<InlineActionRecord>, SignalFrame) {
     let (placement, run_cfg) = place_phase(fleet, phase, cfg, phase_idx);
     let cluster = Cluster::new(fleet.spec.clone());
@@ -534,24 +645,57 @@ fn run_phase_inclock(
         if fleet.draining[d] && gov.device(d).is_some() {
             let _ = gov.mask_device(d);
         }
+        // A thermal throttle detected in an earlier phase persists until a
+        // RecoverDevice clears it — fresh runtimes start throttled.
+        if fleet.degraded_pct[d] != 100 {
+            gov.set_service_scale(d, fleet.degraded_pct[d]);
+        }
     }
     let mut records: Vec<InlineActionRecord> = Vec::new();
     let mut pending: Vec<PendingAction> = Vec::new();
-    let mut timed: Vec<(SimTime, super::FleetEvent)> = phase.timed_events.clone();
+    let mut timed: Vec<(SimTime, FleetEvent)> = phase.timed_events.clone();
     timed.sort_by_key(|&(t, _)| t);
     let mut timed_next = 0usize;
     let mut last_wake: SimTime = 0;
     let mut prev_arrivals: Vec<u64> = vec![0; ndev];
     let mut wake_no: u64 = 0;
     let mut stalled_wakes: u32 = 0;
+    // Fault-plane state (§7d). Faults take *physical* effect at their
+    // instant (the simulation doesn't wait to be observed); the fleet
+    // bookkeeping — the governor's belief — lands only at the next
+    // heartbeat wake, via `pending_detect`. Link state is therefore
+    // tracked twice: physically here, and in the fleet after detection.
+    let mut pending_detect: Vec<(SimTime, FleetEvent)> = Vec::new();
+    let mut pending_ckpt: Vec<PendingCkpt> = Vec::new();
+    let mut ckpt_no: u64 = 0;
+    let mut fail_time: Vec<Option<SimTime>> = vec![None; ndev];
+    let mut phys_link_pct: Vec<u32> = fleet.link_bw_pct.clone();
+    let mut phys_link_down: Vec<bool> = fleet.link_up.iter().map(|&u| !u).collect();
     loop {
-        if pending.is_empty() && gov.all_done() && timed_next >= timed.len() {
+        if pending.is_empty()
+            && pending_ckpt.is_empty()
+            && pending_detect.is_empty()
+            && gov.all_done()
+            && timed_next >= timed.len()
+        {
             break;
         }
         let next_wake = cadence.saturating_mul(wake_no + 1);
         let mut t = next_wake;
         for p in &pending {
             t = t.min(p.apply_at);
+        }
+        for c in &pending_ckpt {
+            t = t.min(c.apply_at);
+        }
+        if let Some(every) = ckpt_every {
+            let live_pinned = fleet.pins.iter().any(|p| {
+                gov.device(p.device)
+                    .is_some_and(|rt| rt.live_ctx_names().iter().any(|n| *n == p.job))
+            });
+            if live_pinned {
+                t = t.min(every.saturating_mul(ckpt_no + 1));
+            }
         }
         if timed_next < timed.len() {
             t = t.min(timed[timed_next].0);
@@ -564,17 +708,107 @@ fn run_phase_inclock(
         );
         gov.advance_to(t);
 
-        // Timed platform events (the failure detector's input): mask the
-        // device now — the honest in-clock drain — and flag it for the
-        // fleet so the policy sees it at its next wake.
+        // Timed platform events. A `DrainDevice` is an *operator warning*
+        // — known instantly, bookkeeping and mask land now. Every other
+        // variant is a *fault* (§7d): it takes physical effect at its
+        // instant, but the governor's fleet bookkeeping is deferred to the
+        // next heartbeat wake via `pending_detect` — detection latency is
+        // a real, measured cost.
         while timed_next < timed.len() && timed[timed_next].0 <= t {
-            let ev = timed[timed_next].1;
-            apply_fleet_event(fleet, &ev);
-            let super::FleetEvent::DrainDevice(d) = ev;
-            if gov.device(d).is_some() {
-                let _ = gov.mask_device(d);
-            }
+            let (t_ev, ev) = timed[timed_next];
             timed_next += 1;
+            match ev {
+                FleetEvent::DrainDevice(d) => {
+                    apply_fleet_event(fleet, &ev);
+                    if gov.device(d).is_some() {
+                        let _ = gov.mask_device(d);
+                    }
+                    continue;
+                }
+                FleetEvent::FailDevice(d) => {
+                    if let Ok((lost, survivors)) = gov.fail_device(d) {
+                        fault.lost_blocks += lost as u64;
+                        for (name, done) in survivors {
+                            let abs = base_units(&phase.jobs, &name) + done;
+                            let ckpt = fleet
+                                .pins
+                                .iter()
+                                .find(|p| p.job == name)
+                                .map(|p| p.ckpt_units)
+                                .unwrap_or(0);
+                            fault.lost_units += abs.saturating_sub(ckpt) as u64;
+                        }
+                    }
+                    fail_time[d] = Some(t_ev);
+                }
+                FleetEvent::DegradeDevice { device, factor_pct } => {
+                    gov.set_service_scale(device, factor_pct.max(1));
+                }
+                FleetEvent::RecoverDevice(d) => gov.set_service_scale(d, 100),
+                FleetEvent::DegradeLink { device, bw_pct } => {
+                    phys_link_pct[device] = bw_pct.clamp(1, 100);
+                }
+                FleetEvent::LinkDown(d) => phys_link_down[d] = true,
+                FleetEvent::LinkUp(d) => phys_link_down[d] = false,
+                FleetEvent::StragglerKernel {
+                    device,
+                    prob_pct,
+                    factor_pct,
+                } => {
+                    gov.set_straggler(
+                        device,
+                        prob_pct,
+                        factor_pct,
+                        run_cfg.seed ^ t_ev.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ device as u64,
+                    );
+                }
+            }
+            fault.injected += 1;
+            pending_detect.push((t_ev, ev));
+        }
+
+        // Checkpoint copies landing now (§7d): snapshot the pin at the
+        // drain point and resume dispatch — unless the link is down, in
+        // which case the copy failed in flight and backs off.
+        let due_ckpt: Vec<PendingCkpt> = {
+            let mut still = Vec::with_capacity(pending_ckpt.len());
+            let mut due = Vec::new();
+            for c in pending_ckpt {
+                if c.apply_at <= t {
+                    due.push(c);
+                } else {
+                    still.push(c);
+                }
+            }
+            pending_ckpt = still;
+            due
+        };
+        for c in due_ckpt {
+            if phys_link_down[c.device] {
+                if c.attempt < MAX_TRANSFER_RETRIES {
+                    fault.retries += 1;
+                    let attempt = c.attempt + 1;
+                    pending_ckpt.push(PendingCkpt {
+                        apply_at: t.saturating_add(BACKOFF_BASE_NS << attempt),
+                        attempt,
+                        ..c
+                    });
+                } else if !fleet.draining[c.device] {
+                    // abandoned: the old snapshot stands; dispatch resumes
+                    let _ = gov.unmask_device(c.device);
+                }
+                continue;
+            }
+            let base0 = base_units(&phase.jobs, &c.job);
+            if let Some(done) = gov.job_completed_units(c.device, &c.job) {
+                if let Some(pin) = fleet.pins.iter_mut().find(|p| p.job == c.job) {
+                    pin.ckpt_units = base0 + done;
+                    fault.checkpoints += 1;
+                }
+            }
+            if !fleet.draining[c.device] {
+                let _ = gov.unmask_device(c.device);
+            }
         }
 
         // Staged-action completions due now.
@@ -591,8 +825,42 @@ fn run_phase_inclock(
             pending = still;
             due
         };
-        for p in &due {
-            let rec = apply_pending(fleet, &mut gov, &phase.jobs, &run_cfg, &mut lane_jobs, p);
+        for p in due {
+            // A transfer landing on a down host link failed in flight:
+            // back off exponentially, then give up (unmasking what the
+            // stage masked) once retries are exhausted (§7d).
+            if let Action::Migrate { src, dst, .. } = &p.action {
+                let (s, d) = (*src, *dst);
+                if phys_link_down[s] || phys_link_down[d] {
+                    if p.attempt < MAX_TRANSFER_RETRIES {
+                        fault.retries += 1;
+                        let mut p = p;
+                        p.attempt += 1;
+                        p.apply_at = t.saturating_add(BACKOFF_BASE_NS << p.attempt);
+                        pending.push(p);
+                    } else {
+                        if !p.restore && !fleet.draining[s] && gov.device(s).is_some() {
+                            let _ = gov.unmask_device(s);
+                        }
+                        records.push(InlineActionRecord {
+                            decided_ns: p.decided_ns,
+                            applied_ns: t,
+                            record: ActionRecord {
+                                action: p.action.clone(),
+                                applied: false,
+                                cost_ns: 0,
+                                note: "host link down; transfer retries exhausted".to_string(),
+                            },
+                        });
+                    }
+                    continue;
+                }
+            }
+            let rec = apply_pending(fleet, &mut gov, &phase.jobs, &run_cfg, &mut lane_jobs, &p);
+            if p.restore && rec.applied {
+                fault.recoveries += 1;
+                fault.mttr_ns += t.saturating_sub(p.fault_at.unwrap_or(t));
+            }
             records.push(InlineActionRecord {
                 decided_ns: p.decided_ns,
                 applied_ns: t,
@@ -600,9 +868,53 @@ fn run_phase_inclock(
             });
         }
 
+        // Periodic checkpoints due (§7d): stop-the-world — mask each
+        // pinned trainer's device, let residents drain, land the D2H copy
+        // one link leg after the drain. A device already under a staged
+        // action or an in-flight checkpoint, or with a down link, waits
+        // for the next cycle.
+        if let Some(every) = ckpt_every {
+            let next_ckpt = every.saturating_mul(ckpt_no + 1);
+            if t >= next_ckpt {
+                ckpt_no = t / every;
+                let mut staged: Vec<PendingCkpt> = Vec::new();
+                for pin in &fleet.pins {
+                    let d = pin.device;
+                    let live = gov
+                        .device(d)
+                        .is_some_and(|rt| rt.live_ctx_names().iter().any(|n| *n == pin.job));
+                    if !live
+                        || phys_link_down[d]
+                        || pending_ckpt.iter().any(|c| c.device == d)
+                        || staged.iter().any(|c| c.device == d)
+                        || pending.iter().any(|pa| action_devices(&pa.action).contains(&d))
+                    {
+                        continue;
+                    }
+                    let _ = gov.mask_device(d);
+                    let leg = ckpt_leg_ns(fleet, d, pin.ckpt_bytes, phys_link_pct[d]);
+                    staged.push(PendingCkpt {
+                        job: pin.job.clone(),
+                        device: d,
+                        apply_at: gov.drain_end(d).saturating_add(leg),
+                        attempt: 0,
+                    });
+                }
+                pending_ckpt.extend(staged);
+            }
+        }
+
         // Cadence wake: observe the window, let the policy decide, stage.
         if t >= next_wake {
             wake_no += 1;
+            // Heartbeat detection (§7d): faults took physical effect at
+            // their instants; the governor only *learns* of them now —
+            // the fleet bookkeeping lands here, latency billed.
+            for (t_ev, ev) in pending_detect.drain(..) {
+                apply_fleet_event(fleet, &ev);
+                fault.detected += 1;
+                fault.detect_latency_ns += t.saturating_sub(t_ev);
+            }
             let lane_reports: Vec<Option<&RunReport>> = (0..ndev)
                 .map(|d| gov.device(d).map(|rt| rt.live_report()))
                 .collect();
@@ -635,6 +947,7 @@ fn run_phase_inclock(
                     &phase.jobs,
                     action,
                     t,
+                    &fail_time,
                     &mut pending,
                     &mut records,
                 );
@@ -642,17 +955,21 @@ fn run_phase_inclock(
         }
 
         // Kill-on-stall: everything is either done or drained-and-stuck,
-        // nothing is staged, no failure events remain, and the policy has
-        // had a full wake to react — the stalled work is lost (the honest
+        // nothing is staged (actions, checkpoints, undelivered
+        // detections), no failure events remain, and the policy has had a
+        // full wake to react — the stalled work is lost (the honest
         // failure outcome: no completion records).
         if pending.is_empty()
+            && pending_ckpt.is_empty()
+            && pending_detect.is_empty()
             && timed_next >= timed.len()
             && !gov.all_done()
             && gov.all_done_or_stalled()
         {
             stalled_wakes += 1;
             if stalled_wakes >= 2 {
-                let _ = gov.kill_stalled();
+                let killed = gov.kill_stalled();
+                fault.kills += killed.len() as u64;
                 stalled_wakes = 0;
             }
         } else {
@@ -714,6 +1031,12 @@ pub fn run_governed_inline(
 ) -> ControlReport {
     let mut outcomes: Vec<PhaseOutcome> = Vec::with_capacity(phases.len());
     let mut total_span_ns: SimTime = 0;
+    let mut fault = FaultStats::default();
+    let count_injected = |fault: &mut FaultStats, ev: &FleetEvent| {
+        if !matches!(ev, FleetEvent::DrainDevice(_)) {
+            fault.injected += 1;
+        }
+    };
     for (i, phase) in phases.iter().enumerate() {
         let (report, inline_actions, frame) = match gov_cfg.cadence_ns {
             None => {
@@ -728,23 +1051,37 @@ pub fn run_governed_inline(
                 );
                 for ev in &phase.end_events {
                     apply_fleet_event(fleet, ev);
+                    count_injected(&mut fault, ev);
                 }
                 // With no in-clock governor, timed events degrade to the
                 // phase boundary (delivered after the phase, like
                 // end_events — the coarse world reacting late is the
-                // point).
+                // point). Faults have no physical effect here at all:
+                // the boundary world cannot even represent mid-phase
+                // loss, only the bookkeeping consequences.
                 for &(_, ev) in &phase.timed_events {
                     apply_fleet_event(fleet, &ev);
+                    count_injected(&mut fault, &ev);
                 }
                 let deadlines = SignalFrame::lane_deadlines(&report, &phase.jobs);
                 let frame = SignalFrame::from_cluster(i as u64, &report, &deadlines);
                 (report, Vec::new(), frame)
             }
             Some(cadence) => {
-                let (report, recs, frame) =
-                    run_phase_inclock(fleet, phase, cfg, cadence, policy, i, phases.len());
+                let (report, recs, frame) = run_phase_inclock(
+                    fleet,
+                    phase,
+                    cfg,
+                    cadence,
+                    gov_cfg.ckpt_every_ns,
+                    policy,
+                    i,
+                    phases.len(),
+                    &mut fault,
+                );
                 for ev in &phase.end_events {
                     apply_fleet_event(fleet, ev);
+                    count_injected(&mut fault, ev);
                 }
                 (report, recs, frame)
             }
@@ -789,6 +1126,7 @@ pub fn run_governed_inline(
         policy: policy.name().to_string(),
         phases: outcomes,
         total_span_ns,
+        fault,
     }
 }
 

@@ -33,7 +33,7 @@ pub mod signal;
 
 pub use actuate::{ActionRecord, FleetState};
 pub use inline::{run_governed_inline, GovernorConfig, InlineActionRecord};
-pub use policy::{Action, GapDecision, GapPolicy, Policy, PolicyCtx};
+pub use policy::{Action, FailRecover, GapDecision, GapPolicy, Policy, PolicyCtx};
 pub use signal::{LaneSignal, SignalFrame};
 
 use crate::cluster::{ClusterJob, ClusterRunConfig, PlacePolicy};
@@ -43,12 +43,61 @@ use crate::workload::ArrivalPattern;
 
 /// A platform event delivered at a phase boundary (after the phase's
 /// report, before the policy decides) — the operator/failure-detector
-/// inputs a policy reacts to.
+/// inputs a policy reacts to. Since §7d the catalog covers the adversity
+/// real fleets face, not just the polite failure *warning* of
+/// [`FleetEvent::DrainDevice`]: abrupt loss, thermal throttling, host-link
+/// degradation and outages, and straggler kernels.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FleetEvent {
     /// A failure warning: the device must quiesce — masked from placement
-    /// from the next phase on, pinned work should migrate off.
+    /// from the next phase on, pinned work should migrate off. Resident
+    /// work *drains* (completes) — nothing is lost.
     DrainDevice(usize),
+    /// Abrupt device failure: the resident cohort is **lost**, not
+    /// drained; live jobs end without completion records; the device
+    /// powers off. Detection is not instantaneous — the in-clock governor
+    /// learns of it at its next heartbeat window (§7d).
+    FailDevice(usize),
+    /// Thermal throttle: kernel service times on the device scale to
+    /// `factor_pct`% of nominal (e.g. 150 = 50% slower) until
+    /// [`FleetEvent::RecoverDevice`].
+    DegradeDevice { device: usize, factor_pct: u32 },
+    /// Clear a [`FleetEvent::DegradeDevice`] throttle (back to 100%).
+    RecoverDevice(usize),
+    /// Host-link bandwidth drop on the device's PCIe links: checkpoint /
+    /// migration transfers take `100/bw_pct×` longer until restored by a
+    /// later `DegradeLink { bw_pct: 100 }`.
+    DegradeLink { device: usize, bw_pct: u32 },
+    /// Host-link outage: transfers touching the device fail outright and
+    /// must be retried (the staging pipeline backs off exponentially).
+    /// A link *flap* is a scheduled `LinkDown`/`LinkUp` pair.
+    LinkDown(usize),
+    /// End of a [`FleetEvent::LinkDown`] outage.
+    LinkUp(usize),
+    /// Arm the seeded straggler injector on the device: each issued kernel
+    /// inflates its block duration by `factor_pct`/100× with probability
+    /// `prob_pct`/100. Engine-side only — no fleet bookkeeping changes.
+    StragglerKernel {
+        device: usize,
+        prob_pct: u32,
+        factor_pct: u32,
+    },
+}
+
+impl FleetEvent {
+    /// The device index the event targets.
+    pub fn device(&self) -> usize {
+        match *self {
+            FleetEvent::DrainDevice(d)
+            | FleetEvent::FailDevice(d)
+            | FleetEvent::RecoverDevice(d)
+            | FleetEvent::LinkDown(d)
+            | FleetEvent::LinkUp(d) => d,
+            FleetEvent::DegradeDevice { device, .. }
+            | FleetEvent::DegradeLink { device, .. }
+            | FleetEvent::StragglerKernel { device, .. } => device,
+        }
+    }
 }
 
 /// One phase of a governed scenario: a job list, an optional arrival-
@@ -98,10 +147,84 @@ impl PhaseSpec {
 }
 
 /// Apply a platform event to the fleet bookkeeping (shared by the
-/// boundary and in-clock loops).
+/// boundary and in-clock loops). Exhaustive by construction — a new
+/// [`FleetEvent`] variant fails to compile until its bookkeeping is
+/// decided here (the §7d future-proofing fix).
+///
+/// [`FleetEvent::FailDevice`] deliberately keeps the pin and its account
+/// charge: an orphaned pin on an unpowered device is exactly what the
+/// recovery policy scans for, and the account is released only when the
+/// restore migration lands (or the job is declared lost).
 pub(crate) fn apply_fleet_event(fleet: &mut FleetState, ev: &FleetEvent) {
     match *ev {
         FleetEvent::DrainDevice(d) => fleet.draining[d] = true,
+        FleetEvent::FailDevice(d) => fleet.powered[d] = false,
+        FleetEvent::DegradeDevice { device, factor_pct } => {
+            fleet.degraded_pct[device] = factor_pct.max(1);
+        }
+        FleetEvent::RecoverDevice(d) => fleet.degraded_pct[d] = 100,
+        FleetEvent::DegradeLink { device, bw_pct } => {
+            fleet.link_bw_pct[device] = bw_pct.clamp(1, 100);
+        }
+        FleetEvent::LinkDown(d) => fleet.link_up[d] = false,
+        FleetEvent::LinkUp(d) => fleet.link_up[d] = true,
+        // engine-side injection only; no fleet bookkeeping to change
+        FleetEvent::StragglerKernel { .. } => {}
+    }
+}
+
+/// Fault-plane accounting of one governed run (DESIGN.md §7d): what was
+/// injected, how long detection took (heartbeat windows, not instants),
+/// what was lost outright, and what recovery cost. All counters are sums
+/// over the run; divide the `_ns` sums by their counts for means.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Fault events injected (timed or end-of-phase), `DrainDevice`
+    /// excluded — a drain is a warning, not a fault.
+    pub injected: u64,
+    /// Faults the in-clock governor observed at a heartbeat window.
+    pub detected: u64,
+    /// Σ (heartbeat wake − fault instant) over detected faults — the
+    /// honest-detection latency the boundary loop cannot even measure.
+    pub detect_latency_ns: u64,
+    /// Thread-blocks resident at `FailDevice` instants: work lost
+    /// outright, never drained.
+    pub lost_blocks: u64,
+    /// Completed-but-uncheckpointed training units lost to `FailDevice`
+    /// (units done since the last periodic checkpoint snapshot).
+    pub lost_units: u64,
+    /// Staged actions re-staged with exponential backoff after a down
+    /// host link failed their transfer in flight.
+    pub retries: u64,
+    /// Jobs killed by the stall escalation (`kill_stalled`).
+    pub kills: u64,
+    /// Periodic checkpoints taken (stop-the-world drain + D2H copy).
+    pub checkpoints: u64,
+    /// Failed jobs successfully restored from their last checkpoint.
+    pub recoveries: u64,
+    /// Σ (restore landed − fault instant) over recoveries; mean time to
+    /// recovery is `mttr_ns / recoveries`.
+    pub mttr_ns: u64,
+}
+
+impl FaultStats {
+    /// Fixed-field-order JSON (determinism oracle input).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"injected\":{},\"detected\":{},\"detect_latency_ns\":{},\
+             \"lost_blocks\":{},\"lost_units\":{},\"retries\":{},\"kills\":{},\
+             \"checkpoints\":{},\"recoveries\":{},\"mttr_ns\":{}}}",
+            self.injected,
+            self.detected,
+            self.detect_latency_ns,
+            self.lost_blocks,
+            self.lost_units,
+            self.retries,
+            self.kills,
+            self.checkpoints,
+            self.recoveries,
+            self.mttr_ns
+        )
     }
 }
 
@@ -136,6 +259,9 @@ pub struct ControlReport {
     pub phases: Vec<PhaseOutcome>,
     /// Σ phase makespans + Σ boundary gaps.
     pub total_span_ns: SimTime,
+    /// Fault-plane accounting over the whole run (§7d) — all zeros when
+    /// no faults were injected.
+    pub fault: FaultStats,
 }
 
 impl ControlReport {
@@ -212,9 +338,10 @@ impl ControlReport {
         let mut j = String::new();
         let _ = write!(
             j,
-            "{{\"policy\":\"{}\",\"total_span_ns\":{},\"phases\":[",
+            "{{\"policy\":\"{}\",\"total_span_ns\":{},\"fault\":{},\"phases\":[",
             esc(&self.policy),
-            self.total_span_ns
+            self.total_span_ns,
+            self.fault.to_json()
         );
         for (i, p) in self.phases.iter().enumerate() {
             let _ = write!(

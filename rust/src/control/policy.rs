@@ -382,6 +382,47 @@ impl Policy for DrainMigrate {
     }
 }
 
+/// Failure-recovery policy (§7d): when a pinned job is stranded on a
+/// device that abruptly failed (`FleetEvent::FailDevice` left the pin on
+/// an unpowered device — the orphan is the detection artifact) or is
+/// draining, restore/migrate it to the least-loaded live device. For a
+/// failed source there is nothing left to drain or checkpoint: the staging
+/// pipeline recognizes the unpowered source and resumes the job from its
+/// last periodic checkpoint (`Pin::ckpt_units`), paying only the transfer
+/// — everything since that checkpoint is lost work, billed to
+/// `FaultStats`. Subsumes [`DrainMigrate`] so one policy governs both the
+/// polite and the abrupt failure paths in chaos scenarios.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FailRecover;
+
+impl Policy for FailRecover {
+    fn name(&self) -> &'static str {
+        "fail-recover"
+    }
+
+    fn decide(&mut self, _frame: &SignalFrame, ctx: &PolicyCtx<'_>) -> Vec<Action> {
+        let fleet = ctx.fleet;
+        let mut actions = Vec::new();
+        for pin in &fleet.pins {
+            if fleet.powered[pin.device] && !fleet.draining[pin.device] {
+                continue;
+            }
+            let src = pin.device;
+            let dst = fleet.account.least_loaded_among(&pin.demand, |d| {
+                d != src && fleet.powered[d] && !fleet.draining[d]
+            });
+            if let Some(dst) = dst {
+                actions.push(Action::Migrate {
+                    job: pin.job.clone(),
+                    src,
+                    dst,
+                });
+            }
+        }
+        actions
+    }
+}
+
 // ---------------------------------------------------------------------
 // Reconfiguration-gap policies (the exp::mig satellite)
 // ---------------------------------------------------------------------

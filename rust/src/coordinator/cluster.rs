@@ -365,7 +365,52 @@ impl ClusterRouter {
                     cfg.max_wait
                 )
             }
+            // Descriptive only: the ticket is issued by the caller that
+            // owns the Arc (see the ticker in `serve_cluster_inner` and
+            // `ClusterRouter::canary`).
+            LaneAction::Canary { lane, .. } => {
+                format!("canary {}", self.lane_name(*lane))
+            }
         }
+    }
+
+    /// Probe a specific lane with one synthetic request, bypassing the
+    /// routing policy. This is the governor's canary for demoted lanes: a
+    /// windowed restore needs *served* evidence, which a lane with no
+    /// steered traffic cannot produce on its own. Admission still
+    /// respects the lane's slot account — a saturated lane rejects the
+    /// probe like any other request.
+    pub fn canary(
+        self: &Arc<Self>,
+        lane: usize,
+        deadline: Option<Duration>,
+    ) -> Option<ClusterTicket> {
+        let unit = ClusterVec::new(0, 1, 0);
+        {
+            let mut rs = self.route.lock().unwrap();
+            if !rs.account.fits(lane, &unit) {
+                drop(rs);
+                self.stats.lock().unwrap().rejected += 1;
+                return None;
+            }
+            let ok = rs.account.commit(lane, &unit);
+            debug_assert!(ok, "fits() admitted a full lane");
+        }
+        let input = vec![0.0; self.lanes[lane].batcher.in_features()];
+        let (id, rx) = self.lanes[lane].batcher.submit(input);
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.admitted += 1;
+            st.routed[lane] += 1;
+        }
+        Some(ClusterTicket {
+            id,
+            lane,
+            deadline,
+            rx,
+            router: self.clone(),
+            settled: false,
+        })
     }
 
     /// The live router's telemetry as a control-plane [`SignalFrame`] —
@@ -452,6 +497,16 @@ pub enum LaneAction {
     /// Replace a lane's batching policy (e.g. stop batching on an
     /// SLO-violating latency lane).
     Retune { lane: usize, cfg: BatcherConfig },
+    /// Probe a lane with one synthetic request (the governor's canary): a
+    /// demoted lane that attracts no steered traffic can never produce
+    /// the served evidence a windowed restore needs — the probe
+    /// manufactures it. The governed serving loop issues the ticket
+    /// itself (creation needs the `Arc`-owning caller;
+    /// [`ClusterRouter::apply_lane_action`] only describes the action).
+    Canary {
+        lane: usize,
+        deadline: Option<Duration>,
+    },
 }
 
 /// A control policy over live serving telemetry: reads the same
@@ -479,12 +534,18 @@ pub trait ServingPolicy: Send {
 /// cumulative counters per tick, like the simulation governor's wake
 /// windows) is what makes restore reachable — a lifetime-cumulative rate
 /// would ratchet one way forever. A demoted lane still needs *some*
-/// clean served traffic to earn its weight back; actively probing it is
-/// a ROADMAP item.
+/// clean served traffic to earn its weight back; with
+/// [`ViolationReweight::with_canary`] the governor manufactures that
+/// evidence itself, emitting one [`LaneAction::Canary`] probe per tick
+/// at demoted lanes that saw no steered traffic — a probe that returns
+/// inside its deadline re-opens the lane, one that violates keeps it
+/// demoted. Without the canary a starved lane stays demoted forever.
 pub struct ViolationReweight {
     pub min_slots: u64,
     pub violation_rate_threshold: f64,
     pub tight_wait: Duration,
+    /// Deadline attached to canary probes; `None` disables probing.
+    canary: Option<Duration>,
     /// Original weights + batching policies, learned from the first tick.
     baseline: Option<(Vec<u64>, Vec<BatcherConfig>)>,
     /// Cumulative (completed, violations) per lane at the previous tick —
@@ -498,9 +559,17 @@ impl ViolationReweight {
             min_slots,
             violation_rate_threshold,
             tight_wait,
+            canary: None,
             baseline: None,
             prev: Vec::new(),
         }
+    }
+
+    /// Enable active probing of demoted, traffic-starved lanes: one
+    /// canary request per tick, judged against `deadline`.
+    pub fn with_canary(mut self, deadline: Duration) -> Self {
+        self.canary = Some(deadline);
+        self
     }
 }
 
@@ -529,7 +598,18 @@ impl ServingPolicy for ViolationReweight {
             let dv = lane.violations.saturating_sub(self.prev[i].1);
             self.prev[i] = (lane.completed, lane.violations);
             if dc == 0 {
-                continue; // no served traffic this window: no evidence
+                // No served traffic this window means no evidence — and a
+                // demoted lane attracts none, so left alone it could never
+                // earn its weight back. Probe it.
+                if let Some(deadline) = self.canary {
+                    if slots[i] < base_slots[i] {
+                        out.push(LaneAction::Canary {
+                            lane: i,
+                            deadline: Some(deadline),
+                        });
+                    }
+                }
+                continue;
             }
             let rate = dv as f64 / dc as f64;
             if rate > self.violation_rate_threshold && slots[i] > self.min_slots {
@@ -553,6 +633,94 @@ impl ServingPolicy for ViolationReweight {
                     lane: i,
                     cfg: base_batchers[i].clone(),
                 });
+            }
+        }
+        out
+    }
+}
+
+/// Graceful degradation (DESIGN.md §7d): when the **latency-class**
+/// lanes' windowed SLO violation rate crosses the threshold, shed the
+/// best-effort side — collapse every throughput lane's routing weight to
+/// `min_slots`, so total in-flight load drops and excess arrivals are
+/// rejected at admission instead of queueing against the SLO lanes;
+/// restore the baseline weights once the latency lanes clear to half the
+/// threshold. Rejecting best-effort work to keep latency work inside its
+/// deadline is the serving-side analogue of the fleet governor shedding
+/// best-effort devices to protect pinned trainers.
+pub struct ShedBestEffort {
+    pub violation_rate_threshold: f64,
+    pub min_slots: u64,
+    /// Original weights, learned from the first tick.
+    baseline: Option<Vec<u64>>,
+    /// Windowing state, as in [`ViolationReweight`].
+    prev: Vec<(u64, u64)>,
+    shedding: bool,
+}
+
+impl ShedBestEffort {
+    pub fn new(violation_rate_threshold: f64, min_slots: u64) -> Self {
+        Self {
+            violation_rate_threshold,
+            min_slots,
+            baseline: None,
+            prev: Vec::new(),
+            shedding: false,
+        }
+    }
+}
+
+impl ServingPolicy for ShedBestEffort {
+    fn name(&self) -> &'static str {
+        "shed-best-effort"
+    }
+
+    fn decide(
+        &mut self,
+        frame: &SignalFrame,
+        slots: &[u64],
+        _batchers: &[BatcherConfig],
+    ) -> Vec<LaneAction> {
+        let base = self.baseline.get_or_insert_with(|| slots.to_vec()).clone();
+        if self.prev.len() != frame.lanes.len() {
+            self.prev = vec![(0, 0); frame.lanes.len()];
+        }
+        // This tick's fleet-wide window over the SLO (latency) lanes only:
+        // pressure there is what justifies shedding elsewhere.
+        let (mut dc, mut dv) = (0u64, 0u64);
+        for (i, lane) in frame.lanes.iter().enumerate() {
+            let c = lane.completed.saturating_sub(self.prev[i].0);
+            let v = lane.violations.saturating_sub(self.prev[i].1);
+            self.prev[i] = (lane.completed, lane.violations);
+            if lane.mechanism == "latency-lane" {
+                dc += c;
+                dv += v;
+            }
+        }
+        if dc == 0 {
+            return Vec::new(); // no SLO evidence this window
+        }
+        let rate = dv as f64 / dc as f64;
+        let mut out = Vec::new();
+        if !self.shedding && rate > self.violation_rate_threshold {
+            self.shedding = true;
+            for (i, lane) in frame.lanes.iter().enumerate() {
+                if lane.mechanism != "latency-lane" && slots[i] > self.min_slots {
+                    out.push(LaneAction::Reweight {
+                        lane: i,
+                        slots: self.min_slots,
+                    });
+                }
+            }
+        } else if self.shedding && rate <= self.violation_rate_threshold / 2.0 {
+            self.shedding = false;
+            for (i, lane) in frame.lanes.iter().enumerate() {
+                if lane.mechanism != "latency-lane" && slots[i] < base[i] {
+                    out.push(LaneAction::Reweight {
+                        lane: i,
+                        slots: base[i],
+                    });
+                }
             }
         }
         out
@@ -714,21 +882,41 @@ fn serve_cluster_inner(
             let log = &mut action_log;
             s.spawn(move || {
                 let mut n = 0u64;
+                let mut canaries: Vec<ClusterTicket> = Vec::new();
                 while !stop.load(Ordering::Relaxed) {
                     std::thread::sleep(tick);
                     if stop.load(Ordering::Relaxed) {
                         break;
                     }
                     n += 1;
+                    // Settle probes that came back before reading the
+                    // frame, so this tick's window sees their evidence
+                    // (and their lane slots free).
+                    let mut still = Vec::with_capacity(canaries.len());
+                    for t in canaries {
+                        if let Err(t) = t.try_wait() {
+                            still.push(t);
+                        }
+                    }
+                    canaries = still;
                     let frame = router.signal_frame(n, start.elapsed().as_nanos() as u64);
                     let slots = router.lane_slots();
                     let batchers: Vec<BatcherConfig> = (0..router.lane_count())
                         .map(|i| router.lane_batcher(i).config())
                         .collect();
                     for a in policy.decide(&frame, &slots, &batchers) {
+                        // Canary tickets need the Arc-owning caller — the
+                        // ticker issues them; apply_lane_action describes.
+                        if let LaneAction::Canary { lane, deadline } = &a {
+                            if let Some(t) = router.canary(*lane, *deadline) {
+                                canaries.push(t);
+                            }
+                        }
                         log.push(router.apply_lane_action(&a));
                     }
                 }
+                // Unanswered probes at shutdown settle as abandoned.
+                drop(canaries);
                 *ticks = n;
             })
         });
@@ -1057,5 +1245,149 @@ mod tests {
         // the slot was released: a well-formed request still routes
         assert!(router.route(vec![0.0; 4], None).is_some());
         b.close();
+    }
+
+    /// A synthetic lane signal carrying just the counters the serving
+    /// policies read (the rest neutral).
+    fn sig(mechanism: &str, completed: u64, violations: u64) -> LaneSignal {
+        LaneSignal {
+            device: mechanism.to_string(),
+            mechanism: mechanism.to_string(),
+            jobs: completed,
+            completed,
+            violations,
+            mean_turnaround_ms: 1.0,
+            p99_turnaround_ms: f64::NAN,
+            total_turnaround_ms: completed as f64,
+            overshoot_ms: 0.0,
+            inflight_avg: 0.0,
+            busy_ns: 1,
+            residual_ns: 1,
+            deadline_ms: None,
+            arrivals: completed,
+            queue_now: 0,
+        }
+    }
+
+    fn frame_of(lanes: Vec<LaneSignal>) -> SignalFrame {
+        SignalFrame {
+            phase: 0,
+            lanes,
+            admitted: 0,
+            placed: 0,
+            rejected: 0,
+            makespan_ns: 1,
+        }
+    }
+
+    #[test]
+    fn canary_respects_lane_account_and_settles() {
+        let b = Batcher::new(
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+            },
+            4,
+        );
+        let router = ClusterRouter::new(
+            vec![(lane("only", false, 1), b.clone())],
+            ClusterRoutePolicy::RoundRobin,
+        );
+        let t = router.canary(0, None).unwrap();
+        // the lane is full: the probe is rejected like any request
+        assert!(router.canary(0, None).is_none());
+        assert_eq!(router.stats.lock().unwrap().rejected, 1);
+        drop(t); // an abandoned probe frees its slot
+        let t2 = router.canary(0, None).unwrap();
+        drop(t2);
+        let st = router.stats.lock().unwrap().clone();
+        assert_eq!(st.admitted, 2);
+        assert_eq!(st.routed[0], 2);
+        assert_eq!(st.failed, 2);
+        assert!(st.conserved(), "{st:?}");
+        b.close();
+    }
+
+    #[test]
+    fn violation_reweight_emits_canary_for_demoted_idle_lane() {
+        let mut p = ViolationReweight::new(1, 0.5, Duration::from_micros(100))
+            .with_canary(Duration::from_millis(100));
+        let slots = vec![64, 64];
+        let batchers = vec![BatcherConfig::default(), BatcherConfig::default()];
+        // tick 1: lane 0 violating on served traffic -> demote (no probe)
+        let f1 = frame_of(vec![sig("latency-lane", 10, 8), sig("throughput-lane", 5, 0)]);
+        let a1 = p.decide(&f1, &slots, &batchers);
+        assert!(a1.iter().any(|a| matches!(a, LaneAction::Reweight { lane: 0, slots: 1 })));
+        assert!(!a1.iter().any(|a| matches!(a, LaneAction::Canary { .. })));
+        // tick 2: the demoted lane is starved (no new completions) ->
+        // canary probe; the healthy idle lane draws none
+        let demoted = vec![1, 64];
+        let f2 = frame_of(vec![sig("latency-lane", 10, 8), sig("throughput-lane", 9, 0)]);
+        let a2 = p.decide(&f2, &demoted, &batchers);
+        assert!(a2.iter().any(|a| matches!(a, LaneAction::Canary { lane: 0, .. })), "{a2:?}");
+        assert!(!a2.iter().any(|a| matches!(a, LaneAction::Canary { lane: 1, .. })));
+        // tick 3: the probe came back clean -> restore
+        let f3 = frame_of(vec![sig("latency-lane", 11, 8), sig("throughput-lane", 9, 0)]);
+        let a3 = p.decide(&f3, &demoted, &batchers);
+        assert!(
+            a3.iter().any(|a| matches!(a, LaneAction::Reweight { lane: 0, slots: 64 })),
+            "{a3:?}"
+        );
+    }
+
+    #[test]
+    fn shed_best_effort_sheds_and_restores_on_synthetic_frames() {
+        let mut p = ShedBestEffort::new(0.5, 1);
+        let slots = vec![64, 64];
+        let batchers = vec![BatcherConfig::default(), BatcherConfig::default()];
+        // tick 1: the latency lane is violating hard -> shed best-effort
+        let f1 = frame_of(vec![sig("latency-lane", 10, 8), sig("throughput-lane", 10, 0)]);
+        let a1 = p.decide(&f1, &slots, &batchers);
+        assert!(matches!(a1[..], [LaneAction::Reweight { lane: 1, slots: 1 }]), "{a1:?}");
+        // tick 2 (already shedding, still violating): no repeated actions
+        let shed = vec![64, 1];
+        let f2 = frame_of(vec![sig("latency-lane", 20, 16), sig("throughput-lane", 12, 0)]);
+        assert!(p.decide(&f2, &shed, &batchers).is_empty());
+        // tick 3: the latency lane cleared -> restore the baseline weight
+        let f3 = frame_of(vec![sig("latency-lane", 30, 16), sig("throughput-lane", 12, 0)]);
+        let a3 = p.decide(&f3, &shed, &batchers);
+        assert!(matches!(a3[..], [LaneAction::Reweight { lane: 1, slots: 64 }]), "{a3:?}");
+    }
+
+    #[test]
+    fn canary_probe_restores_starved_lane() {
+        // Once demoted to one slot, the slow lane's post-commit relative
+        // load always loses least-loaded routing (see
+        // least_loaded_avoids_tiny_lane_in_closed_loop): zero steered
+        // traffic, so no served evidence and — without probing — no way
+        // back. The governor's canary is the only evidence source; the
+        // probe's generous 200 ms deadline means it returns clean and the
+        // lane earns its weight back.
+        let mut c = cfg(90, ClusterRoutePolicy::LeastLoaded);
+        c.tight_fraction = 1.0;
+        c.tight_deadline = Duration::from_millis(5);
+        c.mean_interarrival = Some(Duration::from_millis(2));
+        let mut policy = ViolationReweight::new(1, 0.5, Duration::from_micros(100))
+            .with_canary(Duration::from_millis(200));
+        let rep = serve_cluster_governed(
+            c,
+            vec![
+                (lane("slow-latency", true, 64), factory(20)),
+                (lane("fast-shared", false, 64), factory(0)),
+            ],
+            &mut policy,
+            Duration::from_millis(10),
+        );
+        assert!(rep.base.conserved, "{rep:?}");
+        assert!(
+            rep.actions.iter().any(|a| a == "canary slow-latency"),
+            "no canary issued: {rep:?}"
+        );
+        assert!(
+            rep.actions
+                .iter()
+                .any(|a| a == "reweight slow-latency -> 64 slots"),
+            "canary evidence never restored the lane: {rep:?}"
+        );
     }
 }

@@ -20,6 +20,18 @@
 //!   host links) and resumes the *continuation* elsewhere; the static
 //!   world has no checkpoint and restarts the job from scratch. Headline:
 //!   end-to-end makespan.
+//! * [`chaos_recovery`] — the §7d fault plane end to end: a scripted
+//!   fault storm (straggler and thermal-throttle windows, a host-link
+//!   bandwidth drop, a link outage, and an abrupt mid-phase `FailDevice`
+//!   on the pinned trainer's device) delivered identically to both
+//!   worlds through the in-clock driver. The governed world
+//!   periodic-checkpoints the pinned trainers, heartbeat-detects the
+//!   failure, and restores the trainer from its last checkpoint onto the
+//!   spare device over the degraded link — backing off while the link is
+//!   down; the static world loses the whole trainer and re-runs it from
+//!   scratch. Headlines: makespan *and* lost work, under identical fault
+//!   seeds. [`checkpoint_cadence_sweep`] sweeps the Young/Daly cadence
+//!   knob over the same storm.
 //!
 //! Every scenario is a pure function of its `Protocol`, runs through the
 //! cluster fan-out, and serializes via `GovernedComparison::to_json` — the
@@ -27,11 +39,14 @@
 
 use super::Protocol;
 use crate::cluster::{ClusterJob, ClusterRunConfig, ClusterSpec, PlacePolicy};
-use crate::control::policy::{DrainMigrate, GainGatedReslice, RejectionAutoscale, StaticPolicy};
-use crate::control::{
-    run_governed, run_governed_inline, ControlConfig, ControlReport, FleetEvent, FleetState,
-    GovernorConfig, PhaseSpec,
+use crate::control::policy::{
+    DrainMigrate, FailRecover, GainGatedReslice, RejectionAutoscale, StaticPolicy,
 };
+use crate::control::{
+    run_governed, run_governed_inline, ControlConfig, ControlReport, FaultStats, FleetEvent,
+    FleetState, GovernorConfig, PhaseSpec,
+};
+use crate::fault::FaultPlan;
 use crate::gpu::MigProfile;
 use crate::sim::{SimTime, MS};
 use crate::workload::{ArrivalPattern, DlModel};
@@ -442,6 +457,265 @@ pub fn failure_migrate_inline(proto: &Protocol) -> GovernedComparison {
     }
 }
 
+/// Shared scaffolding of the §7d chaos scenarios: a pinned ResNet-50
+/// trainer on device 0 of a `3xa100:mps` fleet, a pinned companion
+/// trainer on device 1, a spare on device 2, and a scripted fault storm
+/// folded into the phase's `timed_events` — identical, seed for seed, in
+/// the governed and static worlds:
+///
+/// * a straggler-injection window and a thermal-throttle window on the
+///   companion's device (recovering at the failure instant);
+/// * a bandwidth drop to 50% on the *spare's* host link — the restore
+///   destination pays a degraded-link transfer;
+/// * an outage on that same link opening at the failure instant and
+///   sized from the transfer span itself, so the restore's first landing
+///   attempt always fails in flight and exponential backoff always
+///   bridges the remainder;
+/// * the abrupt `FailDevice` on the trainer's device, placed *off* the
+///   heartbeat grid so detection costs real latency.
+///
+/// The trainers are scaled until the undisturbed phase spans ≥ 300 ms of
+/// simulated time: recovery's fixed costs (checkpoint copies ≈ 8 ms per
+/// PCIe leg, the restore transfer ≈ 25 ms on the half-bandwidth link)
+/// must stay small against the phase, or the comparison measures the
+/// transfer instead of the policy.
+struct ChaosCalib {
+    spec: ClusterSpec,
+    cfg: ControlConfig,
+    steps: u32,
+    train: ClusterJob,
+    companion: ClusterJob,
+    phase0: PhaseSpec,
+    span: SimTime,
+    cadence: SimTime,
+}
+
+impl ChaosCalib {
+    fn new(proto: &Protocol) -> ChaosCalib {
+        let spec = ClusterSpec::parse("3xa100:mps").expect("valid spec");
+        let cfg = control_cfg(proto, PlacePolicy::LeastLoaded);
+        let steps0 = proto.train_steps.max(6) * 2;
+        let span0 = Self::probe_span(&spec, &cfg, steps0);
+        let scale = (((300 * MS) as f64 / span0 as f64).ceil().max(1.0) as u32).min(512);
+        let steps = steps0.saturating_mul(scale);
+        let span = if scale > 1 {
+            Self::probe_span(&spec, &cfg, steps)
+        } else {
+            span0
+        };
+        let cadence = (span / 16).max(1);
+        // Off the heartbeat grid: the fault must wait to be observed.
+        let t_fail = span / 2 + cadence / 3 + 1;
+        let train = ClusterJob::training("train0", DlModel::ResNet50, steps);
+        let companion = ClusterJob::training("other0", DlModel::ResNet50, steps);
+        // Price the restore transfer exactly as the governor will (both
+        // legs, destination at half bandwidth): the restore is staged at
+        // the first heartbeat after `t_fail` and lands one transfer
+        // later, so a link that stays down 10 ms past the latest
+        // possible landing guarantees the backoff path runs — and the
+        // retry ladder (~126 ms of doubling waits) always outlives it.
+        let mut link_fleet = Self::fleet_of(&spec, &train, &companion);
+        link_fleet.link_bw_pct[2] = 50;
+        let transfer = link_fleet.migrate_transfer_ns(0, 2, train.checkpoint_bytes());
+        let t_link_up = t_fail + cadence + transfer + 10 * MS;
+        let plan = FaultPlan::scripted(vec![
+            (
+                span / 10,
+                FleetEvent::StragglerKernel {
+                    device: 1,
+                    prob_pct: 10,
+                    factor_pct: 200,
+                },
+            ),
+            (
+                span / 5,
+                FleetEvent::DegradeDevice {
+                    device: 1,
+                    factor_pct: 130,
+                },
+            ),
+            (
+                t_fail / 2,
+                FleetEvent::DegradeLink {
+                    device: 2,
+                    bw_pct: 50,
+                },
+            ),
+            (t_fail, FleetEvent::LinkDown(2)),
+            (t_fail, FleetEvent::FailDevice(0)),
+            (t_fail, FleetEvent::RecoverDevice(1)),
+            (t_link_up, FleetEvent::LinkUp(2)),
+        ]);
+        let phase0 = plan.apply_to(PhaseSpec::new(
+            "chaos",
+            vec![train.clone(), companion.clone()],
+        ));
+        ChaosCalib {
+            spec,
+            cfg,
+            steps,
+            train,
+            companion,
+            phase0,
+            span,
+            cadence,
+        }
+    }
+
+    /// Undisturbed phase-0 makespan for `steps`-step trainers (boundary
+    /// run, no faults, no checkpoints) — the clock every fault instant
+    /// and cadence is derived from.
+    fn probe_span(spec: &ClusterSpec, cfg: &ControlConfig, steps: u32) -> SimTime {
+        let train = ClusterJob::training("train0", DlModel::ResNet50, steps);
+        let companion = ClusterJob::training("other0", DlModel::ResNet50, steps);
+        let mut fleet = Self::fleet_of(spec, &train, &companion);
+        let probe = run_governed(
+            &mut fleet,
+            &[PhaseSpec::new("probe", vec![train, companion])],
+            &mut StaticPolicy,
+            cfg,
+        );
+        probe.phases[0].frame.makespan_ns.max(20)
+    }
+
+    fn fleet_of(spec: &ClusterSpec, train: &ClusterJob, companion: &ClusterJob) -> FleetState {
+        let mut fleet = FleetState::new(spec.clone());
+        fleet.pin("train0", 0, train.demand(), train.checkpoint_bytes());
+        fleet.pin("other0", 1, companion.demand(), companion.checkpoint_bytes());
+        fleet
+    }
+
+    fn fleet(&self) -> FleetState {
+        Self::fleet_of(&self.spec, &self.train, &self.companion)
+    }
+
+    /// One governed pass through the storm: `FailRecover` under a
+    /// heartbeat cadence, periodic checkpoints every `ckpt_every` — the
+    /// whole scenario is the single chaos phase (the restore completes
+    /// the trainer in-phase).
+    fn governed_run(&self, ckpt_every: SimTime) -> ControlReport {
+        let phases = vec![self.phase0.clone()];
+        let mut fleet = self.fleet();
+        let mut policy = FailRecover;
+        run_governed_inline(
+            &mut fleet,
+            &phases,
+            &mut policy,
+            &self.cfg,
+            &GovernorConfig::cadence(self.cadence).with_checkpoint(ckpt_every),
+        )
+    }
+}
+
+/// The §7d acceptance scenario: the chaos storm under governed recovery
+/// vs a static world — same in-clock driver, same fault plan, same
+/// heartbeat cadence; only checkpoints and the recovery policy differ.
+/// The static world takes no checkpoints and runs no recovery: the
+/// abrupt failure loses the whole pinned trainer (every completed unit is
+/// the lost-work bill) and a full restart re-runs it from scratch in a
+/// recovery phase on the spare. The governed world restores from the last
+/// periodic checkpoint within the chaos phase itself and needs no
+/// recovery phase — it wins on makespan *and* on lost work.
+pub fn chaos_recovery(proto: &Protocol) -> GovernedComparison {
+    let calib = ChaosCalib::new(proto);
+    let governed = calib.governed_run((calib.span / 6).max(1));
+    let static_phases = vec![
+        calib.phase0.clone(),
+        PhaseSpec::new(
+            "recover",
+            vec![ClusterJob::training(
+                "train0-restart",
+                DlModel::ResNet50,
+                calib.steps,
+            )],
+        ),
+    ];
+    let mut static_fleet = calib.fleet();
+    let baseline = run_governed_inline(
+        &mut static_fleet,
+        &static_phases,
+        &mut StaticPolicy,
+        &calib.cfg,
+        &GovernorConfig::cadence(calib.cadence),
+    );
+    GovernedComparison {
+        scenario: "chaos-recovery",
+        governed,
+        baseline,
+    }
+}
+
+/// One point of the checkpoint-cadence sweep: the cadence, the run's end
+/// -to-end span, and its full fault account (`checkpoints` paid vs
+/// `lost_units` saved — the Young/Daly tradeoff).
+#[derive(Clone, Debug)]
+pub struct CadencePoint {
+    pub cadence_ns: SimTime,
+    pub total_span_ns: SimTime,
+    pub fault: FaultStats,
+}
+
+/// The periodic-checkpoint cadence swept over the chaos storm.
+#[derive(Clone, Debug)]
+pub struct CheckpointSweep {
+    pub points: Vec<CadencePoint>,
+}
+
+impl CheckpointSweep {
+    pub fn to_json(&self) -> String {
+        let mut j = String::from("[");
+        for (i, p) in self.points.iter().enumerate() {
+            if i > 0 {
+                j.push(',');
+            }
+            j.push_str(&format!(
+                "{{\"cadence_ns\":{},\"total_span_ns\":{},\"fault\":{}}}",
+                p.cadence_ns,
+                p.total_span_ns,
+                p.fault.to_json()
+            ));
+        }
+        j.push(']');
+        j
+    }
+}
+
+/// Sweep the Young/Daly knob empirically: the identical chaos storm under
+/// governed recovery at four checkpoint cadences, dense → effectively
+/// never. Short cadences pay steady-state drain+copy overhead and lose
+/// little to the failure; the never-checkpoint end restores from zero —
+/// all the trainer's work at the failure instant is lost, exactly the
+/// static world's bill.
+pub fn checkpoint_cadence_sweep(proto: &Protocol) -> CheckpointSweep {
+    let calib = ChaosCalib::new(proto);
+    let cadences = [
+        (calib.span / 12).max(1),
+        (calib.span / 6).max(1),
+        (calib.span / 3).max(1),
+        calib.span.saturating_mul(4),
+    ];
+    let points = cadences
+        .iter()
+        .map(|&c| {
+            let rep = calib.governed_run(c);
+            CadencePoint {
+                cadence_ns: c,
+                total_span_ns: rep.total_span_ns,
+                fault: rep.fault,
+            }
+        })
+        .collect();
+    CheckpointSweep { points }
+}
+
+/// The chaos perf workload (`bench_perf`'s gated `sweep: chaos recovery`
+/// entry): calibration probes, the governed storm (heartbeat detection,
+/// periodic checkpoints, backoff-retried restore), and the static storm
+/// with its restart phase.
+pub fn chaos_sweep_events(proto: &Protocol) -> u64 {
+    chaos_recovery(proto).total_events()
+}
+
 /// The control-plane perf workload (`bench_control`, shared with
 /// `bench_perf`'s gated sweep): the bursty re-slice scenario — calibration,
 /// four governed phases, four static phases — returning total simulated
@@ -704,5 +978,88 @@ mod tests {
             cmp.governed.total_span_s(),
             cmp.baseline.total_span_s()
         );
+    }
+
+    #[test]
+    fn chaos_recovery_beats_static_on_makespan_and_lost_work() {
+        let cmp = chaos_recovery(&proto());
+        // the identical 7-event storm was injected into both worlds, and
+        // heartbeat detection billed real latency for it
+        assert_eq!(cmp.governed.fault.injected, 7);
+        assert_eq!(cmp.baseline.fault.injected, 7);
+        assert_eq!(cmp.governed.fault.detected, 7);
+        assert_eq!(cmp.baseline.fault.detected, 7);
+        assert!(cmp.governed.fault.detect_latency_ns > 0);
+        // the abrupt failure cost the static world every completed unit…
+        assert!(cmp.baseline.fault.lost_units > 0);
+        assert_eq!(cmp.baseline.fault.checkpoints, 0);
+        assert_eq!(cmp.baseline.fault.recoveries, 0);
+        // …while periodic checkpoints bounded the governed world's loss
+        assert!(cmp.governed.fault.checkpoints >= 1, "{:?}", cmp.governed.fault);
+        assert!(
+            cmp.governed.fault.lost_units < cmp.baseline.fault.lost_units,
+            "governed lost {} !< static lost {}",
+            cmp.governed.fault.lost_units,
+            cmp.baseline.fault.lost_units
+        );
+        // the restore's transfer hit the link outage and backed off…
+        assert!(cmp.governed.fault.retries >= 1, "{:?}", cmp.governed.fault);
+        // …and eventually landed: one recovery, with a real MTTR
+        assert_eq!(cmp.governed.fault.recoveries, 1, "{:?}", cmp.governed.fault);
+        assert!(cmp.governed.fault.mttr_ns > 0);
+        let restored = cmp.governed.phases[0]
+            .inline_actions
+            .iter()
+            .any(|r| r.record.applied && matches!(r.record.action, Action::Migrate { .. }));
+        assert!(restored, "{:?}", cmp.governed.phases[0].inline_actions);
+        // the restored continuation completed on the spare within the
+        // chaos phase — the governed world needs no restart phase…
+        assert!(cmp.governed.phases[0].report.lanes[2]
+            .report
+            .train_done
+            .is_some());
+        // …and beats the restart world end-to-end under the same storm
+        assert!(
+            cmp.governed.total_span_ns < cmp.baseline.total_span_ns,
+            "governed {:.3} s !< static-restart {:.3} s",
+            cmp.governed.total_span_s(),
+            cmp.baseline.total_span_s()
+        );
+        // byte-deterministic per seed: the whole comparison reproduces
+        assert_eq!(cmp.to_json(), chaos_recovery(&proto()).to_json());
+    }
+
+    #[test]
+    fn checkpoint_cadence_sweep_shows_the_tradeoff() {
+        let sweep = checkpoint_cadence_sweep(&proto());
+        assert_eq!(sweep.points.len(), 4);
+        let dense = &sweep.points[0];
+        let never = &sweep.points[3];
+        // denser cadences take more checkpoints; the "never" end takes none
+        assert!(
+            dense.fault.checkpoints > never.fault.checkpoints,
+            "{} !> {}",
+            dense.fault.checkpoints,
+            never.fault.checkpoints
+        );
+        assert_eq!(never.fault.checkpoints, 0);
+        for w in sweep.points.windows(2) {
+            assert!(
+                w[0].fault.checkpoints >= w[1].fault.checkpoints,
+                "checkpoint counts must fall as the cadence stretches: {:?}",
+                sweep.points.iter().map(|p| p.fault.checkpoints).collect::<Vec<_>>()
+            );
+        }
+        // …and lose less work to the abrupt failure
+        assert!(
+            dense.fault.lost_units < never.fault.lost_units,
+            "{} !< {}",
+            dense.fault.lost_units,
+            never.fault.lost_units
+        );
+        // every point still recovers (the never end restores from zero)
+        assert!(sweep.points.iter().all(|p| p.fault.recoveries == 1));
+        // the sweep is itself byte-deterministic
+        assert_eq!(sweep.to_json(), checkpoint_cadence_sweep(&proto()).to_json());
     }
 }

@@ -1,0 +1,214 @@
+//! Fault injection (DESIGN.md §7d): seeded plans of typed platform faults
+//! delivered as first-class in-clock events.
+//!
+//! A [`FaultPlan`] is a time-ordered schedule of [`FleetEvent`]s — either
+//! *scripted* (exact instants, for scenarios and regression tests) or
+//! *stochastic* (a seeded random process over a horizon, for chaos sweeps
+//! and property tests). Both are pure functions of their inputs: the same
+//! seed always yields the same schedule, so chaos runs stay
+//! byte-reproducible end to end — the injection plane inherits the
+//! simulator's determinism contract instead of fighting it.
+//!
+//! Plans fold into a [`PhaseSpec`]'s `timed_events`
+//! ([`FaultPlan::apply_to`]), where the in-clock governor gives each fault
+//! its honest semantics: physical effect at the fault instant, governor
+//! *knowledge* only at the next heartbeat wake (`control::inline`).
+//!
+//! The stochastic generator draws exponential inter-arrival gaps (a
+//! Poisson fault process, the standard reliability model) and picks a
+//! fault type per arrival: abrupt loss, thermal throttle windows
+//! (degrade + recover), link degradation, link flaps (down + up pairs),
+//! and straggler-injection windows. `FailDevice` is deliberately the
+//! rarest draw — abrupt loss is catastrophic and would otherwise dominate
+//! every sweep.
+
+use crate::control::{FleetEvent, PhaseSpec};
+use crate::sim::{SimTime, MS};
+use crate::util::json::escape as esc;
+use crate::util::rng::Rng;
+
+/// A time-ordered, deterministic schedule of platform faults.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<(SimTime, FleetEvent)>,
+}
+
+impl FaultPlan {
+    /// An exact, hand-written schedule (sorted by instant; ties keep the
+    /// given order — `sort_by_key` is stable).
+    pub fn scripted(mut events: Vec<(SimTime, FleetEvent)>) -> FaultPlan {
+        events.sort_by_key(|&(t, _)| t);
+        FaultPlan { events }
+    }
+
+    /// A seeded Poisson fault process over `[0, horizon_ns)` across
+    /// `devices` devices with mean inter-arrival `mean_gap_ns`. Same
+    /// inputs → same schedule, byte for byte.
+    pub fn stochastic(
+        seed: u64,
+        horizon_ns: SimTime,
+        devices: usize,
+        mean_gap_ns: SimTime,
+    ) -> FaultPlan {
+        assert!(devices > 0, "a fault plan needs at least one device");
+        assert!(mean_gap_ns > 0, "mean inter-arrival must be positive");
+        let mut rng = Rng::new(seed ^ 0xFA17_FA17_FA17_FA17);
+        let mut events: Vec<(SimTime, FleetEvent)> = Vec::new();
+        let mut t: SimTime = 0;
+        loop {
+            let gap = rng.exponential(mean_gap_ns as f64).ceil() as SimTime;
+            t = t.saturating_add(gap.max(1));
+            if t >= horizon_ns {
+                break;
+            }
+            let d = rng.below(devices as u64) as usize;
+            match rng.below(8) {
+                // throttle window: degrade now, recover after a while
+                0 | 1 => {
+                    let factor = rng.range_u64(150, 400) as u32;
+                    let span = rng.range_u64(1, 4) * mean_gap_ns / 2;
+                    events.push((
+                        t,
+                        FleetEvent::DegradeDevice {
+                            device: d,
+                            factor_pct: factor,
+                        },
+                    ));
+                    events.push((t.saturating_add(span.max(1)), FleetEvent::RecoverDevice(d)));
+                }
+                // host-link bandwidth drop (a later draw may restore it)
+                2 | 3 => {
+                    let bw = rng.range_u64(10, 90) as u32;
+                    events.push((
+                        t,
+                        FleetEvent::DegradeLink {
+                            device: d,
+                            bw_pct: bw,
+                        },
+                    ));
+                }
+                // link flap: an outage window
+                4 | 5 => {
+                    let span = rng.range_u64(1, 3) * mean_gap_ns / 4;
+                    events.push((t, FleetEvent::LinkDown(d)));
+                    events.push((t.saturating_add(span.max(1)), FleetEvent::LinkUp(d)));
+                }
+                // straggler-injection window
+                6 => {
+                    let prob = rng.range_u64(5, 50) as u32;
+                    let factor = rng.range_u64(200, 500) as u32;
+                    events.push((
+                        t,
+                        FleetEvent::StragglerKernel {
+                            device: d,
+                            prob_pct: prob,
+                            factor_pct: factor,
+                        },
+                    ));
+                }
+                // abrupt loss — the rare catastrophe
+                _ => events.push((t, FleetEvent::FailDevice(d))),
+            }
+        }
+        events.sort_by_key(|&(at, _)| at);
+        FaultPlan { events }
+    }
+
+    /// The schedule, time-ordered.
+    pub fn events(&self) -> &[(SimTime, FleetEvent)] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Fold the plan into a phase's `timed_events` (keeping any the phase
+    /// already carries).
+    pub fn apply_to(&self, mut phase: PhaseSpec) -> PhaseSpec {
+        for &(t, ev) in &self.events {
+            phase = phase.with_timed_event(t, ev);
+        }
+        phase
+    }
+
+    /// Fixed-order JSON of the schedule (determinism oracle input).
+    pub fn to_json(&self) -> String {
+        let mut j = String::from("[");
+        for (i, (t, ev)) in self.events.iter().enumerate() {
+            if i > 0 {
+                j.push(',');
+            }
+            j.push_str(&format!("{{\"at\":{},\"event\":\"{}\"}}", t, esc(&format!("{ev:?}"))));
+        }
+        j.push(']');
+        j
+    }
+}
+
+/// A convenient default mean inter-arrival for chaos sweeps: one fault
+/// every ~5 ms of simulated time — dense enough to exercise every path in
+/// a short phase, sparse enough that recovery can land between faults.
+pub const DEFAULT_MEAN_GAP_NS: SimTime = 5 * MS;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stochastic_plans_are_deterministic_per_seed() {
+        let a = FaultPlan::stochastic(7, 100 * MS, 3, DEFAULT_MEAN_GAP_NS);
+        let b = FaultPlan::stochastic(7, 100 * MS, 3, DEFAULT_MEAN_GAP_NS);
+        assert_eq!(a, b);
+        assert_eq!(a.to_json(), b.to_json());
+        let c = FaultPlan::stochastic(8, 100 * MS, 3, DEFAULT_MEAN_GAP_NS);
+        assert_ne!(a.to_json(), c.to_json(), "seeds must decorrelate plans");
+        assert!(!a.is_empty(), "a 100 ms horizon at 5 ms mean gap yields events");
+    }
+
+    #[test]
+    fn stochastic_plans_are_ordered_in_horizon_and_typed() {
+        let plan = FaultPlan::stochastic(42, 200 * MS, 4, DEFAULT_MEAN_GAP_NS);
+        let evs = plan.events();
+        for w in evs.windows(2) {
+            assert!(w[0].0 <= w[1].0, "events must be time-ordered");
+        }
+        for &(t, ev) in evs {
+            assert!(t > 0);
+            assert!(ev.device() < 4, "device index in range: {ev:?}");
+            assert!(
+                !matches!(ev, FleetEvent::DrainDevice(_)),
+                "plans inject faults, not operator warnings"
+            );
+        }
+        // flaps are balanced: every LinkDown has a LinkUp scheduled
+        let downs = evs
+            .iter()
+            .filter(|(_, e)| matches!(e, FleetEvent::LinkDown(_)))
+            .count();
+        let ups = evs
+            .iter()
+            .filter(|(_, e)| matches!(e, FleetEvent::LinkUp(_)))
+            .count();
+        assert_eq!(downs, ups);
+    }
+
+    #[test]
+    fn scripted_plans_sort_and_fold_into_phases() {
+        let plan = FaultPlan::scripted(vec![
+            (9 * MS, FleetEvent::FailDevice(1)),
+            (2 * MS, FleetEvent::LinkDown(0)),
+            (5 * MS, FleetEvent::LinkUp(0)),
+        ]);
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan.events()[0], (2 * MS, FleetEvent::LinkDown(0)));
+        assert_eq!(plan.events()[2], (9 * MS, FleetEvent::FailDevice(1)));
+        let phase = plan.apply_to(PhaseSpec::new("p", Vec::new()));
+        assert_eq!(phase.timed_events.len(), 3);
+        assert_eq!(phase.timed_events[2], (9 * MS, FleetEvent::FailDevice(1)));
+    }
+}

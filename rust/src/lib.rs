@@ -26,6 +26,9 @@
 //! * [`control`] — the closed-loop control plane: unified telemetry
 //!   signals + a policy engine driving MIG re-slicing, cluster
 //!   autoscaling, and mid-run migration at phase boundaries;
+//! * [`fault`] — the fault-injection plane: seeded scripted/stochastic
+//!   `FaultPlan`s of typed platform faults with honest (heartbeat-latency)
+//!   detection and governed recovery;
 //! * [`coordinator`] — the serving coordinator (router/batcher/governor);
 //! * [`runtime`] — PJRT runtime loading AOT-compiled JAX/Pallas artifacts;
 //! * [`util`] — PRNG, stats, CLI, tables, property-testing, bench harness.
@@ -35,6 +38,7 @@ pub mod control;
 pub mod coordinator;
 pub mod examples_support;
 pub mod exp;
+pub mod fault;
 pub mod gpu;
 pub mod metrics;
 pub mod preempt;

@@ -35,6 +35,7 @@ use crate::preempt::PreemptCostModel;
 use crate::sched::contention::ContentionModel;
 use crate::sched::mechanism::{Mechanism, PlacementPolicy, PreemptConfig, PreemptFlavor, PreemptPolicy};
 use crate::sim::{EventQueue, SimTime, SEC, US};
+use crate::util::rng::Rng;
 use crate::workload::{Op, Source, SourceOut};
 use std::collections::VecDeque;
 
@@ -260,6 +261,18 @@ pub struct DeviceRt {
     /// Blocks currently resident on SMs across every kernel (running,
     /// frozen, or saving) — the drain-quiescence counter.
     inflight_total: u32,
+    // --- fault-plane state (DESIGN.md §7d) ---
+    /// Thermal-throttle service scaling in percent (100 = nominal): fresh
+    /// block placements run `pct/100×` their contention-stretched duration.
+    /// Resumed chunks owe their frozen remaining time and are never
+    /// re-scaled (the same no-compounding rule contention follows).
+    service_scale_pct: u32,
+    /// Seeded straggler injection: `(prob_pct, factor_pct, rng)` — each
+    /// issued kernel independently inflates its per-block duration by
+    /// `factor_pct/100×` with probability `prob_pct/100`.
+    straggler: Option<(u32, u32, Rng)>,
+    /// Kernels the straggler injector actually inflated.
+    straggler_hits: u64,
 }
 
 const H2D: usize = 0;
@@ -373,6 +386,9 @@ impl DeviceRt {
             finished: false,
             inst_masked: vec![false; n_inst],
             inflight_total: 0,
+            service_scale_pct: 100,
+            straggler: None,
+            straggler_hits: 0,
         }
     }
 
@@ -666,13 +682,24 @@ impl DeviceRt {
                     return;
                 }
                 let kid = self.kernels.len();
+                // Straggler injection (§7d): roll the fault plane's seeded
+                // RNG per issued kernel; a hit inflates every block of this
+                // kernel — the tail-latency shape straggler studies report.
+                let mut base_block_dur = spec.block_dur(&self.cfg.dev);
+                if let Some((prob_pct, factor_pct, rng)) = &mut self.straggler {
+                    if rng.range_u64(1, 100) <= *prob_pct as u64 {
+                        base_block_dur =
+                            (base_block_dur.saturating_mul(*factor_pct as u64) / 100).max(1);
+                        self.straggler_hits += 1;
+                    }
+                }
                 self.kernels.push(KernelRt {
                     ctx,
                     grid: spec.grid_blocks,
                     fp: spec.res.block_footprint(),
                     res: spec.res,
                     occ,
-                    base_block_dur: spec.block_dur(&self.cfg.dev),
+                    base_block_dur,
                     dur_iso: spec.dur_iso,
                     unplaced: spec.grid_blocks,
                     resume: VecDeque::new(),
@@ -1056,7 +1083,14 @@ impl DeviceRt {
                     .cfg
                     .contention
                     .factor(&self.cfg.dev, &self.sms[s], ctx, other_running);
-                ContentionModel::stretch(self.kernels[kid].base_block_dur, factor)
+                let d = ContentionModel::stretch(self.kernels[kid].base_block_dur, factor);
+                // Thermal throttle (§7d): scale fresh placements only —
+                // resumed chunks owe frozen time and never re-stretch.
+                if self.service_scale_pct == 100 {
+                    d
+                } else {
+                    (d.saturating_mul(self.service_scale_pct as u64) / 100).max(1)
+                }
             };
             let id = CohortId(self.next_cohort);
             self.next_cohort += 1;
@@ -1945,6 +1979,109 @@ impl DeviceRt {
         self.finished = false;
         self.events.push(at.max(self.now), Ev::Poll { ctx: idx });
         Ok(idx)
+    }
+
+    // ------------------------------------------------------------------
+    // Fault-plane entry points (DESIGN.md §7d). Unlike a masked-dispatch
+    // drain — which politely lets resident work finish — these model the
+    // adversity real fleets face: abrupt device loss, thermal throttling,
+    // and straggler kernels.
+    // ------------------------------------------------------------------
+
+    /// Abrupt device failure at the current clock: every resident cohort
+    /// is *lost* (removed without completing — the opposite of a drain),
+    /// queued work and in-flight transfers are dropped, every live context
+    /// ends without a completion record, and the device stops processing
+    /// events. Returns `(lost_blocks, survivors)` where `survivors` holds
+    /// each live context's name and *fully completed* source units at the
+    /// instant of failure — what an exactly-at-failure checkpoint would
+    /// have preserved (a periodic checkpoint preserves at most this much).
+    pub fn fail_now(&mut self) -> (u32, Vec<(String, u32)>) {
+        let survivors: Vec<(String, u32)> = self
+            .ctxs
+            .iter()
+            .filter(|c| c.state != CtxState::Done)
+            .map(|c| {
+                let emitted = c.source.units_emitted();
+                let mid_unit = c.source.unit_in_progress()
+                    || matches!(
+                        c.state,
+                        CtxState::RunningKernel | CtxState::Transferring | CtxState::InGap
+                    );
+                (c.name.clone(), emitted.saturating_sub(mid_unit as u32))
+            })
+            .collect();
+        let lost = self.inflight_total;
+        for s in 0..self.sms.len() {
+            let ids: Vec<CohortId> = self.sms[s].cohorts.iter().map(|c| c.id).collect();
+            for id in ids {
+                let cohort = self.sms[s].remove(id);
+                // Frozen/saving cohorts already released their running
+                // counters at freeze time; Running ones release here.
+                if cohort.state == BlockState::Running {
+                    self.running_blocks[cohort.ctx] -= cohort.blocks;
+                    self.ctxs[cohort.ctx].threads_resident = self.ctxs[cohort.ctx]
+                        .threads_resident
+                        .saturating_sub(cohort.held.threads);
+                }
+                self.inflight_total -= cohort.blocks;
+                let k = &mut self.kernels[cohort.kernel as usize];
+                k.inflight -= cohort.blocks;
+            }
+            self.sync_sm(s);
+        }
+        debug_assert_eq!(self.inflight_total, 0, "fail_now left blocks resident");
+        self.saving.clear();
+        for chan in &mut self.channels {
+            chan.active = None;
+            chan.queue.clear();
+        }
+        self.events.clear();
+        for c in &mut self.ctxs {
+            c.state = CtxState::Done;
+        }
+        self.finished = true;
+        self.report.sim_end = self.report.sim_end.max(self.now);
+        (lost, survivors)
+    }
+
+    /// Set the thermal-throttle service scale (percent of nominal; 100
+    /// restores full speed). Affects *fresh* block placements from now on;
+    /// blocks already running keep their scheduled completion — a throttle
+    /// changes the clock going forward, not retroactively.
+    pub fn set_service_scale(&mut self, pct: u32) {
+        self.service_scale_pct = pct.max(1);
+    }
+
+    /// Arm (or re-seed) the straggler injector: each subsequently issued
+    /// kernel inflates its per-block duration by `factor_pct/100×` with
+    /// probability `prob_pct/100`, from a dedicated seeded stream so runs
+    /// stay byte-reproducible.
+    pub fn set_straggler(&mut self, prob_pct: u32, factor_pct: u32, seed: u64) {
+        self.straggler = Some((prob_pct.min(100), factor_pct.max(100), Rng::new(seed)));
+    }
+
+    /// Kernels the straggler injector inflated so far.
+    pub fn straggler_hits(&self) -> u64 {
+        self.straggler_hits
+    }
+
+    /// Fully completed source units of a live context *right now* — the
+    /// [`DeviceRt::retire_ctx`] arithmetic without retiring: what a
+    /// checkpoint taken at this instant preserves (the in-flight unit is
+    /// lost, exactly what a checkpoint restore loses).
+    pub fn ctx_completed_units(&self, name: &str) -> Option<u32> {
+        let c = self.ctxs.iter().find(|c| c.name == name)?;
+        if c.state == CtxState::Done {
+            return None;
+        }
+        let emitted = c.source.units_emitted();
+        let mid_unit = c.source.unit_in_progress()
+            || matches!(
+                c.state,
+                CtxState::RunningKernel | CtxState::Transferring | CtxState::InGap
+            );
+        Some(emitted.saturating_sub(mid_unit as u32))
     }
 
     /// Validate every SM invariant plus every instance account's

@@ -174,6 +174,36 @@ impl GovernorRt {
         self.device_mut(d)?.admit_ctx(def, at)
     }
 
+    /// Abrupt failure of device `d` at the governor clock (see
+    /// [`DeviceRt::fail_now`]): resident cohorts are lost, live contexts
+    /// end without completion records. Returns `(lost_blocks, survivors)`
+    /// where survivors carry each live job's completed units at failure.
+    pub fn fail_device(&mut self, d: usize) -> Result<(u32, Vec<(String, u32)>)> {
+        Ok(self.device_mut(d)?.fail_now())
+    }
+
+    /// Thermal-throttle device `d` to `pct`% of nominal service speed
+    /// (100 recovers full speed); idle devices are a no-op.
+    pub fn set_service_scale(&mut self, d: usize, pct: u32) {
+        if let Some(Some(rt)) = self.rts.get_mut(d) {
+            rt.set_service_scale(pct);
+        }
+    }
+
+    /// Arm the seeded straggler injector on device `d` (see
+    /// [`DeviceRt::set_straggler`]); idle devices are a no-op.
+    pub fn set_straggler(&mut self, d: usize, prob_pct: u32, factor_pct: u32, seed: u64) {
+        if let Some(Some(rt)) = self.rts.get_mut(d) {
+            rt.set_straggler(prob_pct, factor_pct, seed);
+        }
+    }
+
+    /// Completed units of a live job on device `d` right now — the
+    /// periodic-checkpoint snapshot (see [`DeviceRt::ctx_completed_units`]).
+    pub fn job_completed_units(&self, d: usize, job: &str) -> Option<u32> {
+        self.device(d).and_then(|rt| rt.ctx_completed_units(job))
+    }
+
     /// Force-retire every context on stalled masked devices — the failure
     /// path: a drained device whose work nobody migrated loses it (killed
     /// jobs leave no completion record). Returns `(device, job)` pairs in
@@ -314,5 +344,119 @@ mod tests {
         assert!(gov.all_done());
         let rep = gov.into_reports().pop().unwrap().unwrap();
         assert!(rep.train_done.is_none(), "killed job must not complete");
+    }
+
+    #[test]
+    fn fail_loses_resident_cohort_drain_loses_nothing() {
+        // The DeviceFail-vs-DrainDevice regression: an abrupt failure loses
+        // exactly the blocks resident at the instant of failure, while a
+        // masked drain loses nothing — every resident block completes.
+        // Drive two identically-seeded runtimes to the same mid-kernel
+        // instant, then fail one and drain the other.
+        let mut failed = GovernorRt::new(vec![Some(train_rt(3, 11))], false);
+        let mut drained = GovernorRt::new(vec![Some(train_rt(3, 11))], false);
+        let mut t = 0;
+        while failed.device(0).unwrap().resident_blocks() == 0 {
+            t += MS;
+            failed.advance_to(t);
+            drained.advance_to(t);
+            assert!(t < 600_000 * MS, "kernel never dispatched");
+        }
+        let resident = failed.device(0).unwrap().resident_blocks();
+        assert_eq!(resident, drained.device(0).unwrap().resident_blocks());
+        assert!(resident > 0);
+        // abrupt failure: exactly the resident cohort is lost, the device
+        // is immediately done, and the job leaves no completion record
+        let (lost, survivors) = failed.fail_device(0).unwrap();
+        assert_eq!(lost, resident, "DeviceFail must lose the resident cohort");
+        assert_eq!(failed.device(0).unwrap().resident_blocks(), 0);
+        assert!(failed.all_done());
+        assert_eq!(survivors.len(), 1);
+        assert_eq!(survivors[0].0, "t");
+        let rep = failed.into_reports().pop().unwrap().unwrap();
+        assert!(rep.train_done.is_none(), "failed job must not complete");
+        // masked drain: every resident block completes (nothing lost), the
+        // device quiesces exactly at drain_end, and unmasking finishes the
+        // run with a completion record
+        drained.mask_device(0).unwrap();
+        let drain = drained.drain_end(0);
+        drained.advance_to(drain);
+        assert_eq!(
+            drained.device(0).unwrap().resident_blocks(),
+            0,
+            "DrainDevice must retire every resident block at drain_end"
+        );
+        drained.unmask_device(0).unwrap();
+        let mut t = drained.now();
+        while !drained.all_done() {
+            t += 10 * MS;
+            drained.advance_to(t);
+            assert!(t < 600_000 * MS, "device never finished after unmask");
+        }
+        let rep = drained.into_reports().pop().unwrap().unwrap();
+        assert!(rep.train_done.is_some(), "drained work must all complete");
+        assert!(rep.oom.is_none(), "{:?}", rep.oom);
+    }
+
+    #[test]
+    fn throttle_slows_and_recovery_restores_service() {
+        // A throttled device finishes the same workload strictly later;
+        // recovering mid-run lands between the two extremes.
+        let span = |pct: Option<u32>| {
+            let mut rt = train_rt(3, 21);
+            if let Some(p) = pct {
+                rt.set_service_scale(p);
+            }
+            rt.run().sim_end
+        };
+        let nominal = span(None);
+        let throttled = span(Some(300));
+        assert!(
+            throttled > nominal,
+            "300% service scale must slow the run: {throttled} !> {nominal}"
+        );
+        // recover mid-run: throttle until half the nominal span, then 100%
+        let mut gov = GovernorRt::new(vec![Some(train_rt(3, 21))], false);
+        gov.set_service_scale(0, 300);
+        gov.advance_to(nominal / 2);
+        gov.set_service_scale(0, 100);
+        let mut t = gov.now();
+        while !gov.all_done() {
+            t += 10 * MS;
+            gov.advance_to(t);
+            assert!(t < 600_000 * MS, "recovered device never finished");
+        }
+        let recovered = gov.into_reports().pop().unwrap().unwrap().sim_end;
+        assert!(recovered > nominal && recovered < throttled);
+    }
+
+    #[test]
+    fn straggler_injection_is_seeded_and_inflates_tails() {
+        // Same seed → byte-identical reports; straggler hits recorded; a
+        // 100%-probability 4× injector strictly lengthens the run.
+        let run = |prob: u32, seed: u64| {
+            let mut rt = train_rt(3, 5);
+            rt.set_straggler(prob, 400, seed);
+            rt.run()
+        };
+        let a = run(100, 77);
+        let b = run(100, 77);
+        assert_eq!(a.to_json(), b.to_json(), "straggler stream must be seeded");
+        let clean = train_rt(3, 5).run();
+        assert!(
+            a.sim_end > clean.sim_end,
+            "always-hit 4× stragglers must lengthen the run: {} !> {}",
+            a.sim_end,
+            clean.sim_end
+        );
+        // hit counter: always-on hits every kernel, off hits none
+        let mut rt = train_rt(1, 5);
+        rt.set_straggler(100, 400, 7);
+        rt.step_until(SimTime::MAX);
+        assert!(rt.straggler_hits() > 0);
+        let mut rt0 = train_rt(1, 5);
+        rt0.set_straggler(0, 400, 7);
+        rt0.step_until(SimTime::MAX);
+        assert_eq!(rt0.straggler_hits(), 0);
     }
 }

@@ -199,6 +199,48 @@ fn inclock_governed_scenarios_fanout_byte_identical() {
 }
 
 #[test]
+fn chaos_scenarios_fanout_byte_identical() {
+    // The guard extended through the fault plane (DESIGN.md §7d): the
+    // chaos storm — scripted faults, heartbeat detection, periodic
+    // checkpoints, a backoff-retried restore over a downed link — and
+    // the checkpoint-cadence sweep must serialize byte-identically with
+    // the device fan-out on and off. Fault injection, detection latency,
+    // and retry timing are simulated-clock constructs; thread scheduling
+    // must never leak into any of them.
+    use gpushare::exp::control::{chaos_recovery, checkpoint_cadence_sweep};
+    let mk = |parallel| Protocol {
+        requests: 6,
+        train_steps: 2,
+        parallel,
+        ..Protocol::default()
+    };
+    let a = chaos_recovery(&mk(true));
+    let b = chaos_recovery(&mk(false));
+    assert_eq!(
+        a.to_json(),
+        b.to_json(),
+        "chaos recovery: parallel and serial runs diverged"
+    );
+    // the fault plane is alive in this workload: faults were injected,
+    // detection paid real latency, and the restore recovered the trainer
+    assert!(a.governed.fault.injected >= 1);
+    assert!(a.governed.fault.detect_latency_ns > 0);
+    assert_eq!(a.governed.fault.recoveries, 1);
+    let sa = checkpoint_cadence_sweep(&mk(true));
+    let sb = checkpoint_cadence_sweep(&mk(false));
+    assert_eq!(
+        sa.to_json(),
+        sb.to_json(),
+        "checkpoint-cadence sweep: parallel and serial runs diverged"
+    );
+    // and the guard bites: a different seed changes the bytes
+    let mut p = mk(true);
+    p.seed = 20260808;
+    let c = chaos_recovery(&p);
+    assert_ne!(a.to_json(), c.to_json(), "seed must influence chaos runs");
+}
+
+#[test]
 fn repeated_runs_share_one_json_byte_for_byte() {
     let p = proto(true);
     let a = p

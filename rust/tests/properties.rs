@@ -1323,3 +1323,134 @@ fn prop_inclock_action_streams_conserve_jobs() {
         )
     });
 }
+
+/// One §7d chaos-fault case: a seeded stochastic fault plan (every fault
+/// type, Poisson instants) folded into a two-phase governed run under
+/// `FailRecover` with periodic checkpoints. Returns the report, the
+/// final fleet, the pinned-job multiset before the run, and the plan
+/// length. Shared by the property test and the CI chaos soak.
+fn run_chaos_fault_case(
+    seed: u64,
+    cadence: u64,
+    horizon: u64,
+    ckpt_every: u64,
+) -> (
+    gpushare::control::ControlReport,
+    gpushare::control::FleetState,
+    Vec<String>,
+    usize,
+) {
+    use gpushare::cluster::{ClusterJob, ClusterRunConfig, ClusterSpec, PlacePolicy};
+    use gpushare::control::policy::FailRecover;
+    use gpushare::control::{
+        run_governed_inline, ControlConfig, FleetState, GovernorConfig, PhaseSpec,
+    };
+    use gpushare::fault::{FaultPlan, DEFAULT_MEAN_GAP_NS};
+
+    // Faults only on the two powered devices: the dark spare is the
+    // recovery destination.
+    let plan = FaultPlan::stochastic(seed, horizon, 2, DEFAULT_MEAN_GAP_NS);
+    let spec = ClusterSpec::parse("a100:mig-3g,2xa100:mps").unwrap();
+    let phases = vec![
+        plan.apply_to(PhaseSpec::new(
+            "chaos",
+            vec![
+                ClusterJob::inference("i0", DlModel::AlexNet, 2, Some(50)),
+                ClusterJob::training("pinned", DlModel::AlexNet, 2),
+            ],
+        )),
+        PhaseSpec::new(
+            "after",
+            vec![ClusterJob::inference("i1", DlModel::AlexNet, 2, None)],
+        ),
+    ];
+    let cfg = ControlConfig {
+        run: ClusterRunConfig {
+            seed,
+            parallel: false,
+            ..ClusterRunConfig::default()
+        },
+        place: PlacePolicy::LeastLoaded,
+    };
+    let pin_job = ClusterJob::training("pinned", DlModel::AlexNet, 1);
+    let mut fleet = FleetState::with_powered(spec, vec![true, true, false]);
+    fleet.pin("pinned", 1, pin_job.demand(), pin_job.checkpoint_bytes());
+    let pinned_before = fleet.pinned_jobs();
+    let mut policy = FailRecover;
+    let rep = run_governed_inline(
+        &mut fleet,
+        &phases,
+        &mut policy,
+        &cfg,
+        &GovernorConfig::cadence(cadence).with_checkpoint(ckpt_every),
+    );
+    let n = plan.len();
+    (rep, fleet, pinned_before, n)
+}
+
+#[test]
+fn prop_fault_streams_conserve_and_reproduce() {
+    // §7d chaos property: whatever a seeded stochastic fault stream does
+    // — abrupt loss, throttle windows, link flaps, stragglers — the
+    // pinned-job multiset survives (a failed device keeps its pin; that
+    // orphan IS the recovery trigger), the fleet account still equals a
+    // from-scratch recompute, every injected fault is eventually
+    // detected at a heartbeat (none are dropped), and the whole run
+    // serializes byte-identically when repeated with the same seed.
+    let cfg_small = PropConfig {
+        cases: 5,
+        ..PropConfig::default()
+    };
+    run_prop("fault=chaos-conserves", cfg_small, |g| {
+        let seed = g.u64(1, 1 << 40);
+        let cadence = g.u64(2, 30) * MS;
+        let horizon = g.u64(20, 120) * MS;
+        let ckpt_every = g.u64(5, 40) * MS;
+        let (rep_a, fleet_a, pinned_before, plan_len) =
+            run_chaos_fault_case(seed, cadence, horizon, ckpt_every);
+        check_eq(
+            rep_a.fault.injected,
+            plan_len as u64,
+            "every planned fault injected",
+        )?;
+        check_eq(
+            rep_a.fault.detected,
+            rep_a.fault.injected,
+            "every injected fault detected at a heartbeat",
+        )?;
+        check_eq(
+            fleet_a.pinned_jobs(),
+            pinned_before,
+            "pinned-job multiset conserved through chaos",
+        )?;
+        if let Err(e) = fleet_a.check() {
+            return check(false, format!("fleet account != recompute: {e}"));
+        }
+        let (rep_b, _, _, _) = run_chaos_fault_case(seed, cadence, horizon, ckpt_every);
+        check_eq(
+            rep_a.to_json(),
+            rep_b.to_json(),
+            "chaos-fault run reproducible per seed",
+        )
+    });
+}
+
+#[test]
+#[ignore = "chaos soak: many seeded fault streams; run explicitly (CI does)"]
+fn chaos_soak_seeded_fault_streams() {
+    // The CI chaos-soak step: a wider sweep of seeds through the same
+    // invariants the property test samples, all deterministic.
+    for seed in 1..=24u64 {
+        let cadence = (2 + seed % 11) * MS;
+        let horizon = (30 + 7 * (seed % 9)) * MS;
+        let ckpt_every = (4 + seed % 13) * MS;
+        let (rep, fleet, pinned_before, plan_len) =
+            run_chaos_fault_case(seed, cadence, horizon, ckpt_every);
+        assert_eq!(rep.fault.injected, plan_len as u64, "seed {seed}");
+        assert_eq!(rep.fault.detected, rep.fault.injected, "seed {seed}");
+        assert_eq!(fleet.pinned_jobs(), pinned_before, "seed {seed}");
+        fleet.check().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let (rep2, _, _, _) = run_chaos_fault_case(seed, cadence, horizon, ckpt_every);
+        assert_eq!(rep.to_json(), rep2.to_json(), "seed {seed} not reproducible");
+    }
+}
