@@ -6,10 +6,12 @@
 //! regular perf-smoke job.
 
 use gpushare::exp::control::{
-    bursty_reslice, bursty_reslice_inline, control_inline_sweep_events, control_sweep_events,
-    diurnal_autoscale, failure_migrate, failure_migrate_inline,
+    bursty_reslice, bursty_reslice_inline, bursty_reslice_inline_traced,
+    control_inline_sweep_events, control_sweep_events, diurnal_autoscale, failure_migrate,
+    failure_migrate_inline,
 };
 use gpushare::exp::Protocol;
+use gpushare::trace::TraceConfig;
 use gpushare::util::bench::{black_box, BenchConfig, Bencher};
 use std::path::PathBuf;
 use std::time::Duration;
@@ -36,6 +38,10 @@ fn main() {
 
     // --- the gated control sweeps (same entry names as bench_perf) ---
     let events = control_sweep_events(&proto);
+    assert!(
+        events > 0,
+        "control sweep produced an empty report — the gated entry would be vacuous"
+    );
     b.bench_items(
         &format!("sweep: control governed vs static ({events} events)"),
         Some(events),
@@ -46,6 +52,10 @@ fn main() {
         },
     );
     let inline_events = control_inline_sweep_events(&proto);
+    assert!(
+        inline_events > 0,
+        "in-clock control sweep produced an empty report — the gated entry would be vacuous"
+    );
     b.bench_items(
         &format!("sweep: control in-clock vs boundary ({inline_events} events)"),
         Some(inline_events),
@@ -156,8 +166,42 @@ fn main() {
         },
     );
 
+    // --- flight recorder (§7e): overhead diagnostic + timeseries figure ---
+    // Non-gated: the zero-cost contract covers tracing *disabled* (the
+    // gated sweeps above); this entry prices tracing *enabled* so a
+    // recorder regression is visible in the CSV without failing the gate.
+    let trace_cfg = TraceConfig::enabled(1 << 16);
+    let (traced_cmp, trace_log) = bursty_reslice_inline_traced(&proto, &trace_cfg);
+    b.bench_items(
+        &format!(
+            "control: in-clock traced ({} events)",
+            traced_cmp.total_events()
+        ),
+        Some(traced_cmp.total_events()),
+        |iters| {
+            for _ in 0..iters {
+                black_box(bursty_reslice_inline_traced(&proto, &trace_cfg));
+            }
+        },
+    );
+    println!(
+        "\nflight recorder: {} events ({} decision points, {} dropped)",
+        trace_log.events.len(),
+        trace_log.decisions().count(),
+        trace_log.dropped
+    );
+
     let out = gpushare::util::table::bench_out_dir();
     std::fs::create_dir_all(&out).ok();
+    std::fs::write(
+        out.join("bursty_inline_timeseries.json"),
+        trace_log.timeseries_json(),
+    )
+    .ok();
+    println!(
+        "[trace] {}",
+        out.join("bursty_inline_timeseries.json").display()
+    );
     std::fs::write(out.join("bench_control.csv"), b.to_csv()).ok();
     println!("\n[csv] {}", out.join("bench_control.csv").display());
     let json_path = std::env::var("GPUSHARE_BENCH_JSON")

@@ -71,6 +71,7 @@ fn main() {
     // events per run measured once, then reported as throughput
     let probe = proto.pair(Mechanism::mps_default(), DlModel::ResNet50, DlModel::ResNet50);
     let events = probe.events;
+    assert!(events > 0, "mps probe produced an empty report");
     b.bench_items(
         &format!("sim: resnet50 pair under mps ({events} events)"),
         Some(events),
@@ -85,6 +86,7 @@ fn main() {
         },
     );
     let probe_ts = proto.pair(Mechanism::TimeSlicing, DlModel::ResNet50, DlModel::ResNet50);
+    assert!(probe_ts.events > 0, "time-slicing probe produced an empty report");
     b.bench_items(
         &format!("sim: resnet50 pair under time-slicing ({} events)", probe_ts.events),
         Some(probe_ts.events),
@@ -200,6 +202,17 @@ fn main() {
         Mechanism::Partitioned { ctx0_sms: 41 },
     ];
     let sweep_events = fast_sweep(&fast, &mechs); // probe + warm the caches
+    // Every gated sweep below feeds the perf gate's events/sec floors: a
+    // zero-event probe would gate on a vacuous workload, so fail loudly
+    // here instead of shipping an empty BENCH_perf.json entry.
+    let gated_probe = |name: &str, events: u64| {
+        assert!(
+            events > 0,
+            "{name} produced an empty report — the gated entry would be vacuous"
+        );
+        events
+    };
+    let sweep_events = gated_probe("mechanism sweep", sweep_events);
     let mut sweep_bench = Bencher::with_config(BenchConfig {
         warmup: Duration::from_millis(1),
         samples: 3,
@@ -230,7 +243,7 @@ fn main() {
     // device (per-instance accounts + dispatch are their own hot path) ---
     let mig_fast = Protocol::fast().on_device(DeviceConfig::a100());
     let mig_mechs = mig_mechanisms();
-    let mig_events = fast_sweep(&mig_fast, &mig_mechs);
+    let mig_events = gated_probe("mig sweep", fast_sweep(&mig_fast, &mig_mechs));
     sweep_bench.bench_items(
         &format!("sweep: Protocol::fast a100 mig splits ({mig_events} events)"),
         Some(mig_events),
@@ -245,7 +258,10 @@ fn main() {
     // scale-out + 3090+a100 MIG heterogeneous), one DeviceRt per thread —
     // shared with bench_cluster so the perf gate covers the fleet path ---
     let cluster_proto = Protocol::fast();
-    let cluster_events = cluster_sweep_events(&cluster_proto, DlModel::ResNet50);
+    let cluster_events = gated_probe(
+        "cluster sweep",
+        cluster_sweep_events(&cluster_proto, DlModel::ResNet50),
+    );
     sweep_bench.bench_items(
         &format!("sweep: cluster scale-out + hetero mig ({cluster_events} events)"),
         Some(cluster_events),
@@ -265,7 +281,7 @@ fn main() {
         train_steps: 4,
         ..Protocol::default()
     };
-    let control_events = control_sweep_events(&control_proto);
+    let control_events = gated_probe("control sweep", control_sweep_events(&control_proto));
     sweep_bench.bench_items(
         &format!("sweep: control governed vs static ({control_events} events)"),
         Some(control_events),
@@ -280,7 +296,10 @@ fn main() {
     // the policy running *inside* the event clock (lockstep stepping,
     // per-wake window frames, masked-dispatch drains, mid-phase re-slice)
     // against the boundary governor — gates the GovernorRt path ---
-    let inline_events = control_inline_sweep_events(&control_proto);
+    let inline_events = gated_probe(
+        "in-clock control sweep",
+        control_inline_sweep_events(&control_proto),
+    );
     sweep_bench.bench_items(
         &format!("sweep: control in-clock vs boundary ({inline_events} events)"),
         Some(inline_events),
@@ -295,7 +314,7 @@ fn main() {
     // recovery (heartbeat detection, periodic checkpoints, backoff-retried
     // restore over a downed link) vs the static restart world — gates the
     // injection + recovery hot path ---
-    let chaos_events = chaos_sweep_events(&control_proto);
+    let chaos_events = gated_probe("chaos sweep", chaos_sweep_events(&control_proto));
     sweep_bench.bench_items(
         &format!("sweep: chaos recovery ({chaos_events} events)"),
         Some(chaos_events),

@@ -1,9 +1,9 @@
 //! CI perf-regression gate: compare a fresh `BENCH_perf.json` against the
 //! committed `BENCH_baseline.json` and fail (exit 1) when any simulator
-//! events/sec entry regressed by more than the tolerance (default 20%).
+//! events/sec entry regressed by more than the tolerance (default 15%).
 //!
 //! Usage:
-//!   perf_gate <BENCH_baseline.json> <BENCH_perf.json> [--tolerance 0.20]
+//!   perf_gate <BENCH_baseline.json> <BENCH_perf.json> [--tolerance 0.15]
 //!             [--all] [--update]
 //!
 //! * Only entries whose names start with `sim:` or `sweep:` gate by
@@ -67,7 +67,7 @@ fn run() -> Result<bool, String> {
     let mut paths = Vec::new();
     let mut tolerance = match std::env::var("PERF_GATE_TOLERANCE") {
         Ok(v) => v.parse::<f64>().map_err(|e| format!("bad PERF_GATE_TOLERANCE: {e}"))?,
-        Err(_) => 0.20,
+        Err(_) => 0.15,
     };
     let mut all = false;
     let mut update = false;
@@ -86,7 +86,7 @@ fn run() -> Result<bool, String> {
     let [baseline_path, fresh_path] = paths.as_slice() else {
         return Err(
             "usage: perf_gate <BENCH_baseline.json> <BENCH_perf.json> \
-             [--tolerance 0.20] [--all] [--update]"
+             [--tolerance 0.15] [--all] [--update]"
                 .to_string(),
         );
     };

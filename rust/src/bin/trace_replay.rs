@@ -1,0 +1,152 @@
+//! CI trace-replay gate: record the two in-clock governed scenarios with
+//! the flight recorder on, replay each recorded run offline under a fresh
+//! instance of its own policy, and fail (exit 1) when the replayed
+//! decision trace diverges from the recorded one — a non-empty
+//! `DecisionDiff` means the control loop is no longer a pure function of
+//! its observed signal frames (hidden state, ambient nondeterminism, or a
+//! silently changed policy).
+//!
+//! Usage: trace_replay  (GPUSHARE_BENCH_FAST=1 shrinks the protocol;
+//!        GPUSHARE_BENCH_OUT overrides the artifact directory)
+//!
+//! Artifacts (for `actions/upload-artifact` and the bench figures):
+//!   TRACE_bursty.json / TRACE_chaos.json        full flight-recorder logs
+//!   TRACE_bursty_timeseries.json / ..chaos..    per-wake control timeseries
+//!
+//! The gate also refuses vacuous passes: a scenario whose comparison
+//! reports zero simulated events, or whose log records zero decision
+//! points, exits 2 loudly instead of green-lighting an empty run.
+
+use gpushare::exp::control::{
+    bursty_inline_policy, bursty_reslice_inline_traced, chaos_policy, chaos_recovery_traced,
+};
+use gpushare::exp::Protocol;
+use gpushare::trace::{replay, DecisionDiff, DecisionTrace, TraceConfig, TraceLog};
+use gpushare::util::table::bench_out_dir;
+use std::process::ExitCode;
+
+/// The CI gate's ring capacity: far above either scenario's event count,
+/// so no `Decision` event is ever dropped (a lossy ring would break
+/// stateful-policy replay — see `trace::replay`'s module docs).
+const RING: usize = 1 << 16;
+
+fn proto() -> Protocol {
+    if std::env::var("GPUSHARE_BENCH_FAST").is_ok() {
+        Protocol {
+            requests: 6,
+            train_steps: 2,
+            ..Protocol::default()
+        }
+    } else {
+        Protocol {
+            requests: 8,
+            train_steps: 4,
+            ..Protocol::default()
+        }
+    }
+}
+
+fn write_artifacts(dir: &std::path::Path, tag: &str, log: &TraceLog) -> Result<(), String> {
+    let full = dir.join(format!("TRACE_{tag}.json"));
+    std::fs::write(&full, log.to_json())
+        .map_err(|e| format!("cannot write {}: {e}", full.display()))?;
+    let ts = dir.join(format!("TRACE_{tag}_timeseries.json"));
+    std::fs::write(&ts, log.timeseries_json())
+        .map_err(|e| format!("cannot write {}: {e}", ts.display()))?;
+    println!(
+        "{tag}: wrote {} ({} events, {} dropped) and {}",
+        full.display(),
+        log.events.len(),
+        log.dropped,
+        ts.display()
+    );
+    Ok(())
+}
+
+/// Record → replay → diff one scenario; returns the diff for the gate.
+fn gate(
+    dir: &std::path::Path,
+    tag: &str,
+    total_events: u64,
+    log: &TraceLog,
+    replayed: DecisionTrace,
+) -> Result<DecisionDiff, String> {
+    // Loud-fail on vacuous runs: an empty report or a decision-free log
+    // would make the replay gate pass trivially while testing nothing.
+    if total_events == 0 {
+        return Err(format!(
+            "{tag}: scenario produced an empty report (0 simulated events) — \
+             the gate would be vacuous"
+        ));
+    }
+    let recorded = DecisionTrace::recorded(log);
+    if recorded.points.is_empty() {
+        return Err(format!(
+            "{tag}: recorded log carries no decision points — \
+             tracing is not reaching the governor"
+        ));
+    }
+    write_artifacts(dir, tag, log)?;
+    let diff = DecisionDiff::between(&recorded, &replayed);
+    println!(
+        "{tag}: {} recorded decision points, {} divergent",
+        recorded.points.len(),
+        diff.len()
+    );
+    if !diff.is_empty() {
+        println!("{tag}: first divergence: {}", diff.to_json());
+    }
+    Ok(diff)
+}
+
+fn run() -> Result<bool, String> {
+    let proto = proto();
+    let trace = TraceConfig::enabled(RING);
+    let dir = bench_out_dir();
+    std::fs::create_dir_all(&dir).map_err(|e| format!("cannot create {}: {e}", dir.display()))?;
+
+    let (bursty_cmp, bursty_log) = bursty_reslice_inline_traced(&proto, &trace);
+    let mut policy = bursty_inline_policy();
+    let bursty_replay = replay(&bursty_log, &mut policy);
+    let bursty_diff = gate(
+        &dir,
+        "bursty",
+        bursty_cmp.total_events(),
+        &bursty_log,
+        bursty_replay,
+    )?;
+
+    let (chaos_cmp, chaos_log) = chaos_recovery_traced(&proto, &trace);
+    let mut policy = chaos_policy();
+    let chaos_replay = replay(&chaos_log, &mut policy);
+    let chaos_diff = gate(
+        &dir,
+        "chaos",
+        chaos_cmp.total_events(),
+        &chaos_log,
+        chaos_replay,
+    )?;
+
+    let ok = bursty_diff.is_empty() && chaos_diff.is_empty();
+    if ok {
+        println!("trace-replay gate: both scenarios replay decision-identical");
+    } else {
+        println!(
+            "trace-replay gate: FAIL — bursty {} divergent, chaos {} divergent",
+            bursty_diff.len(),
+            chaos_diff.len()
+        );
+    }
+    Ok(ok)
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::from(1),
+        Err(e) => {
+            eprintln!("trace_replay: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -218,6 +218,32 @@ impl FleetState {
         }
     }
 
+    /// [`FleetState::apply`] with the flight recorder attached (§7e):
+    /// identical mutation and record, plus an `ActionApplied` trace
+    /// event stamped at `at` (boundary actuation is instantaneous on
+    /// the phase clock, so decided == applied). Zero-cost when the sink
+    /// is disabled.
+    pub fn apply_traced(
+        &mut self,
+        action: &Action,
+        last: Option<&ClusterRunReport>,
+        phase: usize,
+        at: SimTime,
+        sink: &mut crate::trace::TraceSink,
+    ) -> ActionRecord {
+        let rec = self.apply(action, last);
+        sink.emit(|| crate::trace::TraceEvent::ActionApplied {
+            phase,
+            decided_ns: at,
+            applied_ns: at,
+            action: rec.action.describe(),
+            applied: rec.applied,
+            cost_ns: rec.cost_ns,
+            note: rec.note.clone(),
+        });
+        rec
+    }
+
     /// Checkpoint transfer span for `bytes` moving `src → dst`: one leg
     /// off the source's host link, one onto the destination's, each at
     /// that device's PCIe bandwidth plus the fixed per-transfer latency.

@@ -54,6 +54,7 @@ use crate::gpu::partition;
 use crate::metrics::RunReport;
 use crate::sched::{CtxDef, EngineConfig, GovernorRt};
 use crate::sim::{SimTime, MS, SEC};
+use crate::trace::{TraceConfig, TraceEvent, TraceLog, TraceSink, TransferKind};
 
 /// Exponential-backoff base for transfers that land on a down host link
 /// (§7d): retry `k` waits `BACKOFF_BASE_NS << k` before re-arming. Six
@@ -316,6 +317,8 @@ fn stage_action(
     fail_time: &[Option<SimTime>],
     pending: &mut Vec<PendingAction>,
     records: &mut Vec<InlineActionRecord>,
+    phase_idx: usize,
+    sink: &mut TraceSink,
 ) {
     if busy(pending, &action) {
         // An action is already in flight on these devices; the policy will
@@ -328,6 +331,15 @@ fn stage_action(
     let mut probe = fleet.clone();
     let probe_rec = probe.apply(&action, None);
     if !probe_rec.applied {
+        sink.emit(|| TraceEvent::ActionApplied {
+            phase: phase_idx,
+            decided_ns: t,
+            applied_ns: t,
+            action: probe_rec.action.describe(),
+            applied: false,
+            cost_ns: probe_rec.cost_ns,
+            note: probe_rec.note.clone(),
+        });
         records.push(InlineActionRecord {
             decided_ns: t,
             applied_ns: t,
@@ -344,6 +356,12 @@ fn stage_action(
                 .unwrap_or(0);
             let _ = gov.mask_device(d);
             let apply_at = gov.drain_end(d).saturating_add(create_ns);
+            sink.emit(|| TraceEvent::ActionStaged {
+                phase: phase_idx,
+                at: t,
+                apply_at,
+                action: action.describe(),
+            });
             pending.push(PendingAction {
                 action,
                 decided_ns: t,
@@ -381,6 +399,15 @@ fn stage_action(
                 match validate_migrate(fleet, gov, phase_jobs, job, d_dst) {
                     Ok((ji, _footprint)) => Some(ji),
                     Err(note) => {
+                        sink.emit(|| TraceEvent::ActionApplied {
+                            phase: phase_idx,
+                            decided_ns: t,
+                            applied_ns: t,
+                            action: action.describe(),
+                            applied: false,
+                            cost_ns: 0,
+                            note: note.clone(),
+                        });
                         records.push(InlineActionRecord {
                             decided_ns: t,
                             applied_ns: t,
@@ -403,6 +430,26 @@ fn stage_action(
             } else {
                 t.saturating_add(transfer_ns)
             };
+            sink.emit(|| TraceEvent::ActionStaged {
+                phase: phase_idx,
+                at: t,
+                apply_at,
+                action: action.describe(),
+            });
+            // The transfer occupies the destination's host link until it
+            // lands — visible contention with workload traffic (§7e).
+            sink.emit(|| TraceEvent::LinkTransfer {
+                phase: phase_idx,
+                device: d_dst,
+                start_ns: apply_at.saturating_sub(transfer_ns),
+                end_ns: apply_at,
+                bytes,
+                kind: if restore {
+                    TransferKind::Restore
+                } else {
+                    TransferKind::Migrate
+                },
+            });
             pending.push(PendingAction {
                 action,
                 decided_ns: t,
@@ -418,6 +465,12 @@ fn stage_action(
                 ScaleChange::PowerUp { .. } => t.saturating_add(PROVISION_NS),
                 ScaleChange::PowerDown { .. } => t,
             };
+            sink.emit(|| TraceEvent::ActionStaged {
+                phase: phase_idx,
+                at: t,
+                apply_at,
+                action: action.describe(),
+            });
             pending.push(PendingAction {
                 action,
                 decided_ns: t,
@@ -632,12 +685,18 @@ fn run_phase_inclock(
     phase_idx: usize,
     phases_total: usize,
     fault: &mut FaultStats,
+    sink: &mut TraceSink,
 ) -> (ClusterRunReport, Vec<InlineActionRecord>, SignalFrame) {
+    sink.emit(|| TraceEvent::PhaseStart {
+        phase: phase_idx,
+        label: phase.label.clone(),
+    });
     let (placement, run_cfg) = place_phase(fleet, phase, cfg, phase_idx);
     let cluster = Cluster::new(fleet.spec.clone());
     let (rts, mut lane_jobs) = cluster.build_runtimes(&phase.jobs, &placement.assignment, &run_cfg);
     let ndev = fleet.spec.devices.len();
     let mut gov = GovernorRt::new(rts, run_cfg.parallel);
+    gov.set_recording(sink.is_enabled());
     // Devices already draining (a failure carried in from a prior phase)
     // start masked — placement gave them nothing, but the mask keeps the
     // semantics uniform.
@@ -765,6 +824,11 @@ fn run_phase_inclock(
             }
             fault.injected += 1;
             pending_detect.push((t_ev, ev));
+            sink.emit(|| TraceEvent::FaultInjected {
+                phase: phase_idx,
+                at: t_ev,
+                event: crate::fault::event_label(&ev),
+            });
         }
 
         // Checkpoint copies landing now (§7d): snapshot the pin at the
@@ -842,6 +906,15 @@ fn run_phase_inclock(
                         if !p.restore && !fleet.draining[s] && gov.device(s).is_some() {
                             let _ = gov.unmask_device(s);
                         }
+                        sink.emit(|| TraceEvent::ActionApplied {
+                            phase: phase_idx,
+                            decided_ns: p.decided_ns,
+                            applied_ns: t,
+                            action: p.action.describe(),
+                            applied: false,
+                            cost_ns: 0,
+                            note: "host link down; transfer retries exhausted".to_string(),
+                        });
                         records.push(InlineActionRecord {
                             decided_ns: p.decided_ns,
                             applied_ns: t,
@@ -861,6 +934,15 @@ fn run_phase_inclock(
                 fault.recoveries += 1;
                 fault.mttr_ns += t.saturating_sub(p.fault_at.unwrap_or(t));
             }
+            sink.emit(|| TraceEvent::ActionApplied {
+                phase: phase_idx,
+                decided_ns: p.decided_ns,
+                applied_ns: t,
+                action: rec.action.describe(),
+                applied: rec.applied,
+                cost_ns: rec.cost_ns,
+                note: rec.note.clone(),
+            });
             records.push(InlineActionRecord {
                 decided_ns: p.decided_ns,
                 applied_ns: t,
@@ -893,10 +975,23 @@ fn run_phase_inclock(
                     }
                     let _ = gov.mask_device(d);
                     let leg = ckpt_leg_ns(fleet, d, pin.ckpt_bytes, phys_link_pct[d]);
+                    let start_ns = gov.drain_end(d);
+                    let apply_at = start_ns.saturating_add(leg);
+                    // The D2H copy occupies the device's host link from
+                    // drain quiescence to landing — visible contention
+                    // with workload traffic (§7e).
+                    sink.emit(|| TraceEvent::LinkTransfer {
+                        phase: phase_idx,
+                        device: d,
+                        start_ns,
+                        end_ns: apply_at,
+                        bytes: pin.ckpt_bytes,
+                        kind: TransferKind::Checkpoint,
+                    });
                     staged.push(PendingCkpt {
                         job: pin.job.clone(),
                         device: d,
-                        apply_at: gov.drain_end(d).saturating_add(leg),
+                        apply_at,
                         attempt: 0,
                     });
                 }
@@ -914,6 +1009,12 @@ fn run_phase_inclock(
                 apply_fleet_event(fleet, &ev);
                 fault.detected += 1;
                 fault.detect_latency_ns += t.saturating_sub(t_ev);
+                sink.emit(|| TraceEvent::FaultDetected {
+                    phase: phase_idx,
+                    injected_at: t_ev,
+                    detected_at: t,
+                    event: crate::fault::event_label(&ev),
+                });
             }
             let lane_reports: Vec<Option<&RunReport>> = (0..ndev)
                 .map(|d| gov.device(d).map(|rt| rt.live_report()))
@@ -940,6 +1041,17 @@ fn run_phase_inclock(
                 };
                 policy.decide(&frame, &ctx)
             };
+            // The lossless decision point (§7e): the exact frame and
+            // fleet snapshot `decide` consumed, plus its answer —
+            // everything offline replay needs to re-make this decision.
+            sink.emit(|| TraceEvent::Decision {
+                phase: phase_idx,
+                phases_total,
+                at: t,
+                frame: frame.clone(),
+                fleet: fleet.clone(),
+                actions: actions.clone(),
+            });
             for action in actions {
                 stage_action(
                     fleet,
@@ -950,6 +1062,8 @@ fn run_phase_inclock(
                     &fail_time,
                     &mut pending,
                     &mut records,
+                    phase_idx,
+                    sink,
                 );
             }
         }
@@ -977,6 +1091,17 @@ fn run_phase_inclock(
         }
     }
 
+    // Drain the governor's micro-events (mask/unmask, re-slice, retire,
+    // admit, fail, kill) into the trace; empty unless recording.
+    for ge in gov.take_events() {
+        sink.emit(|| TraceEvent::Governor {
+            phase: phase_idx,
+            at: ge.at,
+            device: ge.device,
+            kind: format!("{:?}", ge.kind),
+            detail: ge.detail,
+        });
+    }
     let reports = gov.into_reports();
     let makespan_ns = reports
         .iter()
@@ -984,6 +1109,10 @@ fn run_phase_inclock(
         .map(|r| r.sim_end)
         .max()
         .unwrap_or(0);
+    sink.emit(|| TraceEvent::PhaseEnd {
+        phase: phase_idx,
+        makespan_ns,
+    });
     let report = cluster.assemble_report(
         reports,
         lane_jobs.clone(),
@@ -1028,6 +1157,37 @@ pub fn run_governed_inline(
     policy: &mut dyn Policy,
     cfg: &ControlConfig,
     gov_cfg: &GovernorConfig,
+) -> ControlReport {
+    let mut sink = TraceSink::disabled();
+    run_governed_inline_sink(fleet, phases, policy, cfg, gov_cfg, &mut sink)
+}
+
+/// [`run_governed_inline`] with the flight recorder attached (§7e).
+/// Tracing only observes — clones of frames and fleet snapshots, never
+/// mutation — so the returned report is byte-identical to the untraced
+/// run (the property test asserts it). The sealed [`TraceLog`] comes
+/// back with `scenario` empty for the caller to fill.
+pub fn run_governed_traced(
+    fleet: &mut FleetState,
+    phases: &[PhaseSpec],
+    policy: &mut dyn Policy,
+    cfg: &ControlConfig,
+    gov_cfg: &GovernorConfig,
+    trace: &TraceConfig,
+) -> (ControlReport, TraceLog) {
+    let mut sink = TraceSink::from_config(trace);
+    let report = run_governed_inline_sink(fleet, phases, policy, cfg, gov_cfg, &mut sink);
+    let log = sink.into_log("", &report.policy);
+    (report, log)
+}
+
+fn run_governed_inline_sink(
+    fleet: &mut FleetState,
+    phases: &[PhaseSpec],
+    policy: &mut dyn Policy,
+    cfg: &ControlConfig,
+    gov_cfg: &GovernorConfig,
+    sink: &mut TraceSink,
 ) -> ControlReport {
     let mut outcomes: Vec<PhaseOutcome> = Vec::with_capacity(phases.len());
     let mut total_span_ns: SimTime = 0;
@@ -1078,6 +1238,7 @@ pub fn run_governed_inline(
                     i,
                     phases.len(),
                     &mut fault,
+                    sink,
                 );
                 for ev in &phase.end_events {
                     apply_fleet_event(fleet, ev);
@@ -1094,9 +1255,19 @@ pub fn run_governed_inline(
             };
             policy.decide(&frame, &ctx)
         };
+        // The boundary decision point is traced too: replay re-decides
+        // the *whole* policy history, per-wake and per-phase alike.
+        sink.emit(|| TraceEvent::Decision {
+            phase: i,
+            phases_total: phases.len(),
+            at: frame.makespan_ns,
+            frame: frame.clone(),
+            fleet: fleet.clone(),
+            actions: actions.clone(),
+        });
         let records: Vec<ActionRecord> = actions
             .iter()
-            .map(|a| fleet.apply(a, Some(&report)))
+            .map(|a| fleet.apply_traced(a, Some(&report), i, frame.makespan_ns, sink))
             .collect();
         debug_assert!(fleet.check().is_ok());
         // Actions at one boundary overlap; no boundary after the last phase.

@@ -32,7 +32,7 @@ pub mod policy;
 pub mod signal;
 
 pub use actuate::{ActionRecord, FleetState};
-pub use inline::{run_governed_inline, GovernorConfig, InlineActionRecord};
+pub use inline::{run_governed_inline, run_governed_traced, GovernorConfig, InlineActionRecord};
 pub use policy::{Action, FailRecover, GapDecision, GapPolicy, Policy, PolicyCtx};
 pub use signal::{LaneSignal, SignalFrame};
 

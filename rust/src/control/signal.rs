@@ -204,6 +204,39 @@ impl LaneSignal {
         );
         j
     }
+
+    /// The *lossless* serialization, for the trace artifact (§7e): the
+    /// compact `to_json` above omits `total_turnaround_ms`, which the
+    /// gain-gated policies consume — a trace replayed from the compact
+    /// form would silently re-decide on corrupted inputs, so the flight
+    /// recorder serializes every field.
+    pub fn to_json_full(&self) -> String {
+        use std::fmt::Write as _;
+        let mut j = String::new();
+        let _ = write!(
+            j,
+            "{{\"device\":\"{}\",\"mechanism\":\"{}\",\"jobs\":{},\"completed\":{},\
+             \"violations\":{},\"mean_ms\":{},\"p99_ms\":{},\"total_ms\":{},\
+             \"overshoot_ms\":{},\"inflight_avg\":{},\"busy_ns\":{},\"residual_ns\":{},\
+             \"deadline_ms\":{},\"arrivals\":{},\"queue_now\":{}}}",
+            esc(&self.device),
+            esc(&self.mechanism),
+            self.jobs,
+            self.completed,
+            self.violations,
+            num(self.mean_turnaround_ms),
+            num(self.p99_turnaround_ms),
+            num(self.total_turnaround_ms),
+            num(self.overshoot_ms),
+            num(self.inflight_avg),
+            self.busy_ns,
+            self.residual_ns,
+            self.deadline_ms.map(num).unwrap_or_else(|| "null".into()),
+            self.arrivals,
+            self.queue_now,
+        );
+        j
+    }
 }
 
 /// The fleet's telemetry at one phase boundary — everything a
@@ -319,6 +352,27 @@ impl SignalFrame {
                 j.push(',');
             }
             j.push_str(&lane.to_json());
+        }
+        let _ = write!(
+            j,
+            "],\"admitted\":{},\"placed\":{},\"rejected\":{},\"makespan_ns\":{}}}",
+            self.admitted, self.placed, self.rejected, self.makespan_ns
+        );
+        j
+    }
+
+    /// Lossless variant of [`SignalFrame::to_json`] for the trace
+    /// artifact: identical shape, but lanes carry every field
+    /// (`LaneSignal::to_json_full`).
+    pub fn to_json_full(&self) -> String {
+        use std::fmt::Write as _;
+        let mut j = String::new();
+        let _ = write!(j, "{{\"phase\":{},\"lanes\":[", self.phase);
+        for (i, lane) in self.lanes.iter().enumerate() {
+            if i > 0 {
+                j.push(',');
+            }
+            j.push_str(&lane.to_json_full());
         }
         let _ = write!(
             j,

@@ -24,6 +24,7 @@
 use super::batcher::{BatchRunner, Batcher, BatcherConfig, InferResponse, WorkerHooks};
 use crate::cluster::account::{ClusterAccount, ClusterVec};
 use crate::control::signal::{LaneSignal, SignalFrame};
+use crate::trace::{TraceConfig, TraceEvent, TraceSink};
 use crate::util::rng::Rng;
 use crate::util::stats::{Summary, Welford};
 use std::sync::mpsc;
@@ -737,6 +738,11 @@ pub struct GovernedServeReport {
     pub ticks: u64,
     pub actions: Vec<String>,
     pub final_slots: Vec<u64>,
+    /// Per-tick `TraceEvent::ServeTick` flight-recorder events (§7e);
+    /// empty unless run through [`serve_cluster_governed_traced`].
+    /// Wall-clock timed, so observational only — not part of the
+    /// deterministic replay gate.
+    pub trace: Vec<TraceEvent>,
 }
 
 /// Configuration of the cluster-routed serving scenario.
@@ -815,7 +821,7 @@ pub fn serve_cluster_routed(
     cfg: ClusterServeConfig,
     lanes: Vec<(ClusterLaneSpec, LaneRunnerFactory)>,
 ) -> ClusterServeReport {
-    serve_cluster_inner(cfg, lanes, None).0
+    serve_cluster_inner(cfg, lanes, None, &TraceConfig::disabled()).0
 }
 
 /// [`serve_cluster_routed`] with a live governor: every `tick` of wall
@@ -829,15 +835,32 @@ pub fn serve_cluster_governed(
     policy: &mut dyn ServingPolicy,
     tick: Duration,
 ) -> GovernedServeReport {
+    serve_cluster_governed_traced(cfg, lanes, policy, tick, &TraceConfig::disabled())
+}
+
+/// [`serve_cluster_governed`] with the flight recorder attached: every
+/// governor tick also lands a [`TraceEvent::ServeTick`] carrying the
+/// frame the policy saw and the action descriptions it applied. Serving
+/// ticks ride wall time, so these events are observational evidence for
+/// post-mortems — the deterministic replay gate covers only the
+/// simulated control plane.
+pub fn serve_cluster_governed_traced(
+    cfg: ClusterServeConfig,
+    lanes: Vec<(ClusterLaneSpec, LaneRunnerFactory)>,
+    policy: &mut dyn ServingPolicy,
+    tick: Duration,
+    trace: &TraceConfig,
+) -> GovernedServeReport {
     let name = policy.name();
-    let (base, ticks, actions, final_slots) =
-        serve_cluster_inner(cfg, lanes, Some((policy, tick)));
+    let (base, ticks, actions, final_slots, trace) =
+        serve_cluster_inner(cfg, lanes, Some((policy, tick)), trace);
     GovernedServeReport {
         base,
         governor: name,
         ticks,
         actions,
         final_slots,
+        trace,
     }
 }
 
@@ -845,7 +868,8 @@ fn serve_cluster_inner(
     cfg: ClusterServeConfig,
     lanes: Vec<(ClusterLaneSpec, LaneRunnerFactory)>,
     governor: Option<(&mut dyn ServingPolicy, Duration)>,
-) -> (ClusterServeReport, u64, Vec<String>, Vec<u64>) {
+    trace: &TraceConfig,
+) -> (ClusterServeReport, u64, Vec<String>, Vec<u64>, Vec<TraceEvent>) {
     use std::sync::atomic::{AtomicBool, Ordering};
 
     let mut workers = Vec::with_capacity(lanes.len());
@@ -874,12 +898,14 @@ fn serve_cluster_inner(
     let stop = AtomicBool::new(false);
     let mut ticks = 0u64;
     let mut action_log: Vec<String> = Vec::new();
+    let mut sink = TraceSink::from_config(trace);
     std::thread::scope(|s| {
         let ticker = governor.map(|(policy, tick)| {
             let router = router.clone();
             let stop = &stop;
             let ticks = &mut ticks;
             let log = &mut action_log;
+            let sink = &mut sink;
             s.spawn(move || {
                 let mut n = 0u64;
                 let mut canaries: Vec<ClusterTicket> = Vec::new();
@@ -899,12 +925,15 @@ fn serve_cluster_inner(
                         }
                     }
                     canaries = still;
-                    let frame = router.signal_frame(n, start.elapsed().as_nanos() as u64);
+                    let wall_ns = start.elapsed().as_nanos() as u64;
+                    let frame = router.signal_frame(n, wall_ns);
                     let slots = router.lane_slots();
                     let batchers: Vec<BatcherConfig> = (0..router.lane_count())
                         .map(|i| router.lane_batcher(i).config())
                         .collect();
-                    for a in policy.decide(&frame, &slots, &batchers) {
+                    let decided = policy.decide(&frame, &slots, &batchers);
+                    let mut applied: Vec<String> = Vec::with_capacity(decided.len());
+                    for a in decided {
                         // Canary tickets need the Arc-owning caller — the
                         // ticker issues them; apply_lane_action describes.
                         if let LaneAction::Canary { lane, deadline } = &a {
@@ -912,8 +941,15 @@ fn serve_cluster_inner(
                                 canaries.push(t);
                             }
                         }
-                        log.push(router.apply_lane_action(&a));
+                        applied.push(router.apply_lane_action(&a));
                     }
+                    sink.emit(|| TraceEvent::ServeTick {
+                        tick: n,
+                        wall_ns,
+                        frame: frame.clone(),
+                        actions: applied.clone(),
+                    });
+                    log.extend(applied);
                 }
                 // Unanswered probes at shutdown settle as abandoned.
                 drop(canaries);
@@ -1006,7 +1042,13 @@ fn serve_cluster_inner(
         signals,
         conserved: stats.conserved(),
     };
-    (report, ticks, action_log, final_slots)
+    (
+        report,
+        ticks,
+        action_log,
+        final_slots,
+        sink.into_log("serve-cluster", "").events,
+    )
 }
 
 #[cfg(test)]

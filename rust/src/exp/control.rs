@@ -43,12 +43,13 @@ use crate::control::policy::{
     DrainMigrate, FailRecover, GainGatedReslice, RejectionAutoscale, StaticPolicy,
 };
 use crate::control::{
-    run_governed, run_governed_inline, ControlConfig, ControlReport, FaultStats, FleetEvent,
-    FleetState, GovernorConfig, PhaseSpec,
+    run_governed, run_governed_inline, run_governed_traced, ControlConfig, ControlReport,
+    FaultStats, FleetEvent, FleetState, GovernorConfig, PhaseSpec,
 };
 use crate::fault::FaultPlan;
 use crate::gpu::MigProfile;
 use crate::sim::{SimTime, MS};
+use crate::trace::{TraceConfig, TraceLog};
 use crate::workload::{ArrivalPattern, DlModel};
 
 /// One scenario's governed and static runs, plus the headline metrics.
@@ -205,6 +206,26 @@ pub fn bursty_reslice(proto: &Protocol) -> GovernedComparison {
 /// rightly favor riding it out, which is exactly what the queueing-aware
 /// gain gate prices.
 pub fn bursty_reslice_inline(proto: &Protocol) -> GovernedComparison {
+    bursty_reslice_inline_traced(proto, &TraceConfig::disabled()).0
+}
+
+/// A fresh instance of the in-clock bursty scenario's governing policy —
+/// the replay harness (`trace::replay`) needs an identical twin to
+/// re-decide a recorded run, and the scenario itself uses the same
+/// constructor so the two can never drift apart.
+pub fn bursty_inline_policy() -> GainGatedReslice {
+    GainGatedReslice::new(0, MigProfile::G3, MigProfile::G4, 1.3)
+}
+
+/// [`bursty_reslice_inline`] with the flight recorder attached to the
+/// governed (in-clock) leg. The baseline leg runs untraced: the recorder
+/// exists to audit the live loop, and the tracing-is-free contract is
+/// proven elsewhere by byte-comparing this pair against the untraced
+/// scenario.
+pub fn bursty_reslice_inline_traced(
+    proto: &Protocol,
+    trace: &TraceConfig,
+) -> (GovernedComparison, TraceLog) {
     let calib = BurstyCalib::new(proto);
     let spec = calib.spec.clone();
     // ~1.2 s of 2×-overloaded arrivals: enough that serving the tail on
@@ -223,22 +244,27 @@ pub fn bursty_reslice_inline(proto: &Protocol) -> GovernedComparison {
     let cadence: SimTime = ((calib.svc_ms * 2.0) * MS as f64).max(1.0) as SimTime;
     let cfg = control_cfg(proto, PlacePolicy::LeastLoaded);
     let mut inline_fleet = FleetState::new(spec.clone());
-    let mut inline_policy = GainGatedReslice::new(0, MigProfile::G3, MigProfile::G4, 1.3);
-    let governed = run_governed_inline(
+    let mut inline_policy = bursty_inline_policy();
+    let (governed, mut log) = run_governed_traced(
         &mut inline_fleet,
         &phases,
         &mut inline_policy,
         &cfg,
         &GovernorConfig::cadence(cadence),
+        trace,
     );
+    log.scenario = "bursty-reslice-inline".to_string();
     let mut boundary_fleet = FleetState::new(spec);
-    let mut boundary_policy = GainGatedReslice::new(0, MigProfile::G3, MigProfile::G4, 1.3);
+    let mut boundary_policy = bursty_inline_policy();
     let baseline = run_governed(&mut boundary_fleet, &phases, &mut boundary_policy, &cfg);
-    GovernedComparison {
-        scenario: "bursty-reslice-inline",
-        governed,
-        baseline,
-    }
+    (
+        GovernedComparison {
+            scenario: "bursty-reslice-inline",
+            governed,
+            baseline,
+        },
+        log,
+    )
 }
 
 /// Diurnal load with rejection-pressure autoscaling over `4x3090:mps`,
@@ -594,17 +620,34 @@ impl ChaosCalib {
     /// whole scenario is the single chaos phase (the restore completes
     /// the trainer in-phase).
     fn governed_run(&self, ckpt_every: SimTime) -> ControlReport {
+        self.governed_run_traced(ckpt_every, &TraceConfig::disabled()).0
+    }
+
+    /// [`Self::governed_run`] with the flight recorder attached.
+    fn governed_run_traced(
+        &self,
+        ckpt_every: SimTime,
+        trace: &TraceConfig,
+    ) -> (ControlReport, TraceLog) {
         let phases = vec![self.phase0.clone()];
         let mut fleet = self.fleet();
-        let mut policy = FailRecover;
-        run_governed_inline(
+        let mut policy = chaos_policy();
+        run_governed_traced(
             &mut fleet,
             &phases,
             &mut policy,
             &self.cfg,
             &GovernorConfig::cadence(self.cadence).with_checkpoint(ckpt_every),
+            trace,
         )
     }
+}
+
+/// A fresh instance of the chaos scenario's recovery policy — the replay
+/// twin of [`chaos_policy`]'s recorded decisions (see
+/// [`bursty_inline_policy`] for why the scenario shares the constructor).
+pub fn chaos_policy() -> FailRecover {
+    FailRecover
 }
 
 /// The §7d acceptance scenario: the chaos storm under governed recovery
@@ -617,8 +660,21 @@ impl ChaosCalib {
 /// periodic checkpoint within the chaos phase itself and needs no
 /// recovery phase — it wins on makespan *and* on lost work.
 pub fn chaos_recovery(proto: &Protocol) -> GovernedComparison {
+    chaos_recovery_traced(proto, &TraceConfig::disabled()).0
+}
+
+/// [`chaos_recovery`] with the flight recorder attached to the governed
+/// leg: the recorded log carries the full fault storm — inject/detect
+/// pairs with their heartbeat-billed latency, every periodic checkpoint
+/// and the backoff-retried restore as host-link transfer windows, and the
+/// per-wake decision points the replay gate re-decides.
+pub fn chaos_recovery_traced(
+    proto: &Protocol,
+    trace: &TraceConfig,
+) -> (GovernedComparison, TraceLog) {
     let calib = ChaosCalib::new(proto);
-    let governed = calib.governed_run((calib.span / 6).max(1));
+    let (governed, mut log) = calib.governed_run_traced((calib.span / 6).max(1), trace);
+    log.scenario = "chaos-recovery".to_string();
     let static_phases = vec![
         calib.phase0.clone(),
         PhaseSpec::new(
@@ -638,11 +694,14 @@ pub fn chaos_recovery(proto: &Protocol) -> GovernedComparison {
         &calib.cfg,
         &GovernorConfig::cadence(calib.cadence),
     );
-    GovernedComparison {
-        scenario: "chaos-recovery",
-        governed,
-        baseline,
-    }
+    (
+        GovernedComparison {
+            scenario: "chaos-recovery",
+            governed,
+            baseline,
+        },
+        log,
+    )
 }
 
 /// One point of the checkpoint-cadence sweep: the cadence, the run's end

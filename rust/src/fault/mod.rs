@@ -143,11 +143,18 @@ impl FaultPlan {
             if i > 0 {
                 j.push(',');
             }
-            j.push_str(&format!("{{\"at\":{},\"event\":\"{}\"}}", t, esc(&format!("{ev:?}"))));
+            j.push_str(&format!("{{\"at\":{},\"event\":\"{}\"}}", t, esc(&event_label(ev))));
         }
         j.push(']');
         j
     }
+}
+
+/// The canonical label of a fleet event, shared by [`FaultPlan::to_json`]
+/// and the flight recorder's inject/detect trace events (§7e) so a fault
+/// is grep-able across every artifact under one spelling.
+pub fn event_label(ev: &FleetEvent) -> String {
+    format!("{ev:?}")
 }
 
 /// A convenient default mean inter-arrival for chaos sweeps: one fault

@@ -30,6 +30,9 @@
 //!   `FaultPlan`s of typed platform faults with honest (heartbeat-latency)
 //!   detection and governed recovery;
 //! * [`coordinator`] — the serving coordinator (router/batcher/governor);
+//! * [`trace`] — the flight recorder: ring-buffered trace of governed
+//!   runs (decisions, actions, faults, link transfers) plus
+//!   deterministic offline policy replay and decision diffing;
 //! * [`runtime`] — PJRT runtime loading AOT-compiled JAX/Pallas artifacts;
 //! * [`util`] — PRNG, stats, CLI, tables, property-testing, bench harness.
 
@@ -45,5 +48,6 @@ pub mod preempt;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod trace;
 pub mod util;
 pub mod workload;

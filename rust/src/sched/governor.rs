@@ -38,12 +38,50 @@ use crate::metrics::RunReport;
 use crate::sim::SimTime;
 use crate::util::error::Result;
 
+/// What a recorded governor micro-event did (see [`GovEvent`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GovEventKind {
+    /// Dispatch masked (drain began).
+    Mask,
+    /// Dispatch re-opened.
+    Unmask,
+    /// Live MIG re-slice landed on a drained device.
+    Reslice,
+    /// A context was retired (checkpoint-off or kill).
+    Retire,
+    /// A context was admitted (migration resume).
+    Admit,
+    /// Abrupt device failure: resident cohort lost.
+    Fail,
+    /// Kill-on-stall: drained work nobody migrated was lost.
+    Kill,
+}
+
+/// One governor micro-event, recorded (opt-in, see
+/// [`GovernorRt::set_recording`]) for the flight recorder (§7e). The
+/// sched layer stays control- and trace-agnostic: it buffers plain
+/// events and the control loop drains them into the trace sink.
+#[derive(Clone, Debug)]
+pub struct GovEvent {
+    /// Governor clock at the event.
+    pub at: SimTime,
+    pub device: usize,
+    pub kind: GovEventKind,
+    /// Free-form payload: job name, target profile, loss counts.
+    pub detail: String,
+}
+
 /// A fleet of live device runtimes stepped in lockstep between governor
 /// events. `None` slots are idle devices (nothing was placed on them).
 pub struct GovernorRt {
     rts: Vec<Option<DeviceRt>>,
     parallel: bool,
     now: SimTime,
+    /// Micro-event buffer; empty unless `recording`. Lives on the
+    /// governor (not the worker closures), so the parallel fan-out in
+    /// `advance_to` never touches it.
+    events: Vec<GovEvent>,
+    recording: bool,
 }
 
 impl GovernorRt {
@@ -52,6 +90,32 @@ impl GovernorRt {
             rts,
             parallel,
             now: 0,
+            events: Vec::new(),
+            recording: false,
+        }
+    }
+
+    /// Opt in to micro-event recording (off by default — the buffer
+    /// costs nothing when off, which the traced≡untraced property and
+    /// the perf gate both rely on).
+    pub fn set_recording(&mut self, on: bool) {
+        self.recording = on;
+    }
+
+    /// Drain the recorded micro-events (emission order).
+    pub fn take_events(&mut self) -> Vec<GovEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    #[inline]
+    fn record(&mut self, device: usize, kind: GovEventKind, detail: impl FnOnce() -> String) {
+        if self.recording {
+            self.events.push(GovEvent {
+                at: self.now,
+                device,
+                kind,
+                detail: detail(),
+            });
         }
     }
 
@@ -127,6 +191,7 @@ impl GovernorRt {
     /// resident work completes, nothing new dispatches).
     pub fn mask_device(&mut self, d: usize) -> Result<()> {
         self.device_mut(d)?.set_dispatch_mask(true);
+        self.record(d, GovEventKind::Mask, String::new);
         Ok(())
     }
 
@@ -134,6 +199,7 @@ impl GovernorRt {
     /// the device's current clock.
     pub fn unmask_device(&mut self, d: usize) -> Result<()> {
         self.device_mut(d)?.set_dispatch_mask(false);
+        self.record(d, GovEventKind::Unmask, String::new);
         Ok(())
     }
 
@@ -145,13 +211,17 @@ impl GovernorRt {
 
     /// Live re-slice of a drained device (see [`DeviceRt::reslice_live`]).
     pub fn reslice(&mut self, d: usize, to: MigProfile) -> Result<()> {
-        self.device_mut(d)?.reslice_live(to)
+        self.device_mut(d)?.reslice_live(to)?;
+        self.record(d, GovEventKind::Reslice, || format!("{to:?}"));
+        Ok(())
     }
 
     /// Checkpoint a job off device `d`: retire its context (resident
     /// blocks must have drained) and return its completed units.
     pub fn retire_job(&mut self, d: usize, job: &str) -> Result<u32> {
-        self.device_mut(d)?.retire_ctx(job)
+        let done = self.device_mut(d)?.retire_ctx(job)?;
+        self.record(d, GovEventKind::Retire, || job.to_string());
+        Ok(done)
     }
 
     /// Make sure device `d` has a live runtime, building an empty one
@@ -171,7 +241,14 @@ impl GovernorRt {
 
     /// Resume a checkpointed job on device `d` at time `at`.
     pub fn admit_job(&mut self, d: usize, def: CtxDef, at: SimTime) -> Result<usize> {
-        self.device_mut(d)?.admit_ctx(def, at)
+        let job = if self.recording {
+            def.name.clone()
+        } else {
+            String::new()
+        };
+        let idx = self.device_mut(d)?.admit_ctx(def, at)?;
+        self.record(d, GovEventKind::Admit, || job);
+        Ok(idx)
     }
 
     /// Abrupt failure of device `d` at the governor clock (see
@@ -179,7 +256,9 @@ impl GovernorRt {
     /// end without completion records. Returns `(lost_blocks, survivors)`
     /// where survivors carry each live job's completed units at failure.
     pub fn fail_device(&mut self, d: usize) -> Result<(u32, Vec<(String, u32)>)> {
-        Ok(self.device_mut(d)?.fail_now())
+        let (lost, survivors) = self.device_mut(d)?.fail_now();
+        self.record(d, GovEventKind::Fail, || format!("lost_blocks={lost}"));
+        Ok((lost, survivors))
     }
 
     /// Thermal-throttle device `d` to `pct`% of nominal service speed
@@ -219,6 +298,12 @@ impl GovernorRt {
                 if rt.retire_ctx(&name).is_ok() {
                     killed.push((d, name));
                 }
+            }
+        }
+        if self.recording {
+            for (d, name) in &killed {
+                let (d, name) = (*d, name.clone());
+                self.record(d, GovEventKind::Kill, || name);
             }
         }
         killed

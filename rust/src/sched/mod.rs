@@ -9,5 +9,5 @@ pub mod mechanism;
 
 pub use contention::ContentionModel;
 pub use engine::{run, CtxDef, DeviceRt, Engine, EngineConfig};
-pub use governor::GovernorRt;
+pub use governor::{GovEvent, GovEventKind, GovernorRt};
 pub use mechanism::{Mechanism, PlacementPolicy, PreemptConfig, PreemptFlavor, PreemptPolicy};

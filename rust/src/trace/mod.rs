@@ -1,0 +1,671 @@
+//! The flight recorder (DESIGN.md §7e): a bounded, zero-cost-when-off
+//! trace of everything a governed run decides and does, and the
+//! artifact it serializes to.
+//!
+//! Debugging a governor decision used to mean re-running the whole
+//! simulation and reading `ControlReport` aggregates. The recorder
+//! captures the run as it happens — typed [`TraceEvent`]s for phase
+//! boundaries, per-wake policy decisions (with the full [`SignalFrame`]
+//! and [`FleetState`] the policy saw), staged and applied actions with
+//! decided/applied timestamps, fault inject/detect pairs, host-link
+//! transfer occupancy windows, and the governor's own mask/drain/
+//! re-slice/retire micro-events — into a bounded [`TraceRing`] that
+//! drops oldest on overflow while keeping counts exact.
+//!
+//! **Zero cost when disabled.** Every emission site goes through
+//! [`TraceSink::emit`], which takes a closure: when the sink is
+//! disabled the closure is never called, so the frame/fleet clones a
+//! `Decision` event carries are never made. The perf gate holds the
+//! tracing-disabled governed sweeps to their pre-recorder floors.
+//!
+//! **Lossless decision points.** A `Decision` event stores the *actual*
+//! `SignalFrame` and `FleetState` structs, not their JSON: the frame's
+//! serialized form historically omitted `total_turnaround_ms` (a policy
+//! gain-math input), so replaying from JSON would silently corrupt
+//! decisions. [`replay`] re-decides against the in-memory structs; the
+//! JSON artifact (via [`TraceLog::to_json`], which serializes frames in
+//! full) is for humans and CI evidence, not for re-deciding.
+//!
+//! The ring-buffer bound is honest: if early `Decision` events are
+//! dropped on overflow, a stateful policy (one that learns from its
+//! first frames) cannot be replayed faithfully — `TraceLog::dropped`
+//! says so, and the CI gate runs with a capacity that never overflows.
+
+pub mod replay;
+
+pub use replay::{replay, DecisionDiff, DecisionPoint, DecisionTrace, DiffEntry};
+
+use crate::control::{Action, FleetState, SignalFrame};
+use crate::sim::SimTime;
+use crate::util::json::escape as esc;
+use std::collections::VecDeque;
+
+/// Recorder knobs, threaded from the scenario entry points down to the
+/// emission sites. The default is disabled: tracing is strictly opt-in
+/// and governed runs pay nothing for the plumbing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TraceConfig {
+    /// Record events at all. When false every `emit` is a branch on a
+    /// `None` and the event-construction closure never runs.
+    pub enabled: bool,
+    /// Ring capacity in events; oldest are dropped beyond it.
+    pub capacity: usize,
+}
+
+impl TraceConfig {
+    /// No recording (the default; `Default` matches).
+    pub fn disabled() -> TraceConfig {
+        TraceConfig {
+            enabled: false,
+            capacity: 0,
+        }
+    }
+
+    /// Record up to `capacity` events, dropping oldest beyond that.
+    pub fn enabled(capacity: usize) -> TraceConfig {
+        assert!(capacity > 0, "an enabled trace needs a positive capacity");
+        TraceConfig {
+            enabled: true,
+            capacity,
+        }
+    }
+}
+
+/// What a host-link occupancy window was carrying (§7d transfers made
+/// visible: these contend with workload traffic on the same wires).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransferKind {
+    /// Periodic stop-the-world checkpoint: one D2H leg on the pinned
+    /// trainer's link.
+    Checkpoint,
+    /// Live drain-and-migrate: checkpoint out of the source, in to the
+    /// destination.
+    Migrate,
+    /// Restore-from-checkpoint after an abrupt failure: the destination
+    /// pays the transfer, nothing drained.
+    Restore,
+}
+
+impl TransferKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransferKind::Checkpoint => "checkpoint",
+            TransferKind::Migrate => "migrate",
+            TransferKind::Restore => "restore",
+        }
+    }
+}
+
+/// One recorded moment of a governed run. Times are the phase's
+/// simulation clock (ns) except `ServeTick`, which comes from the
+/// wall-clock serving layer and is observational only — it is not part
+/// of the deterministic-replay contract.
+#[derive(Clone, Debug)]
+pub enum TraceEvent {
+    /// A phase began.
+    PhaseStart { phase: usize, label: String },
+    /// A phase's devices quiesced; `makespan_ns` is the phase makespan.
+    PhaseEnd { phase: usize, makespan_ns: SimTime },
+    /// A policy decision point — per-wake in-clock, or the end-of-phase
+    /// boundary decide. Carries everything `Policy::decide` saw
+    /// (`frame`, `fleet`, the `PolicyCtx` shape) plus what it returned,
+    /// so the decision can be re-made offline.
+    Decision {
+        phase: usize,
+        phases_total: usize,
+        at: SimTime,
+        frame: SignalFrame,
+        fleet: FleetState,
+        actions: Vec<Action>,
+    },
+    /// A validated action was staged for its true completion event.
+    ActionStaged {
+        phase: usize,
+        at: SimTime,
+        apply_at: SimTime,
+        action: String,
+    },
+    /// An action's outcome was recorded — landed, or rejected (at stage
+    /// time, at land time, or after transfer retries were exhausted).
+    ActionApplied {
+        phase: usize,
+        decided_ns: SimTime,
+        applied_ns: SimTime,
+        action: String,
+        applied: bool,
+        cost_ns: SimTime,
+        note: String,
+    },
+    /// A fault took physical effect (§7d) — the governor does not know
+    /// yet.
+    FaultInjected {
+        phase: usize,
+        at: SimTime,
+        event: String,
+    },
+    /// The heartbeat wake at `detected_at` learned of the fault
+    /// injected at `injected_at`; the gap is the billed detection
+    /// latency.
+    FaultDetected {
+        phase: usize,
+        injected_at: SimTime,
+        detected_at: SimTime,
+        event: String,
+    },
+    /// A transfer occupied `device`'s host link over
+    /// `[start_ns, end_ns]` — checkpoint and migration traffic
+    /// contending with the workload's own H2D/D2H copies.
+    LinkTransfer {
+        phase: usize,
+        device: usize,
+        start_ns: SimTime,
+        end_ns: SimTime,
+        bytes: u64,
+        kind: TransferKind,
+    },
+    /// A `GovernorRt` micro-event: mask/unmask, re-slice, retire,
+    /// admit, device failure, kill-on-stall.
+    Governor {
+        phase: usize,
+        at: SimTime,
+        device: usize,
+        kind: String,
+        detail: String,
+    },
+    /// One governed-serving ticker wake (wall clock; observational).
+    ServeTick {
+        tick: u64,
+        wall_ns: u64,
+        frame: SignalFrame,
+        actions: Vec<String>,
+    },
+}
+
+fn bools(v: &[bool]) -> String {
+    let body: Vec<&str> = v.iter().map(|&b| if b { "true" } else { "false" }).collect();
+    format!("[{}]", body.join(","))
+}
+
+fn u32s(v: &[u32]) -> String {
+    let body: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", body.join(","))
+}
+
+fn strs(v: &[String]) -> String {
+    let body: Vec<String> = v.iter().map(|s| format!("\"{}\"", esc(s))).collect();
+    format!("[{}]", body.join(","))
+}
+
+/// The governor-belief summary of a [`FleetState`] — enough to audit a
+/// decision from the artifact (power/drain masks, link state, pinned
+/// jobs and their checkpoint water marks) without dumping the full spec
+/// every event.
+fn fleet_json(f: &FleetState) -> String {
+    let pins: Vec<String> = f
+        .pins
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"job\":\"{}\",\"device\":{},\"ckpt_units\":{},\"ckpt_bytes\":{}}}",
+                esc(&p.job),
+                p.device,
+                p.ckpt_units,
+                p.ckpt_bytes
+            )
+        })
+        .collect();
+    format!(
+        "{{\"powered\":{},\"draining\":{},\"degraded_pct\":{},\"link_bw_pct\":{},\"link_up\":{},\"pins\":[{}]}}",
+        bools(&f.powered),
+        bools(&f.draining),
+        u32s(&f.degraded_pct),
+        u32s(&f.link_bw_pct),
+        bools(&f.link_up),
+        pins.join(",")
+    )
+}
+
+impl TraceEvent {
+    /// Fixed-field-order JSON, tagged by `"type"`. Decision frames use
+    /// the *full* lane serialization (every `LaneSignal` field,
+    /// including the gain-math inputs the compact form omits).
+    pub fn to_json(&self) -> String {
+        match self {
+            TraceEvent::PhaseStart { phase, label } => format!(
+                "{{\"type\":\"phase-start\",\"phase\":{},\"label\":\"{}\"}}",
+                phase,
+                esc(label)
+            ),
+            TraceEvent::PhaseEnd { phase, makespan_ns } => format!(
+                "{{\"type\":\"phase-end\",\"phase\":{phase},\"makespan_ns\":{makespan_ns}}}"
+            ),
+            TraceEvent::Decision {
+                phase,
+                phases_total,
+                at,
+                frame,
+                fleet,
+                actions,
+            } => {
+                let acts: Vec<String> = actions.iter().map(|a| a.describe()).collect();
+                format!(
+                    "{{\"type\":\"decision\",\"phase\":{},\"phases_total\":{},\"at\":{},\"frame\":{},\"fleet\":{},\"actions\":{}}}",
+                    phase,
+                    phases_total,
+                    at,
+                    frame.to_json_full(),
+                    fleet_json(fleet),
+                    strs(&acts)
+                )
+            }
+            TraceEvent::ActionStaged {
+                phase,
+                at,
+                apply_at,
+                action,
+            } => format!(
+                "{{\"type\":\"action-staged\",\"phase\":{},\"at\":{},\"apply_at\":{},\"action\":\"{}\"}}",
+                phase,
+                at,
+                apply_at,
+                esc(action)
+            ),
+            TraceEvent::ActionApplied {
+                phase,
+                decided_ns,
+                applied_ns,
+                action,
+                applied,
+                cost_ns,
+                note,
+            } => format!(
+                "{{\"type\":\"action-applied\",\"phase\":{},\"decided_ns\":{},\"applied_ns\":{},\"action\":\"{}\",\"applied\":{},\"cost_ns\":{},\"note\":\"{}\"}}",
+                phase,
+                decided_ns,
+                applied_ns,
+                esc(action),
+                applied,
+                cost_ns,
+                esc(note)
+            ),
+            TraceEvent::FaultInjected { phase, at, event } => format!(
+                "{{\"type\":\"fault-injected\",\"phase\":{},\"at\":{},\"event\":\"{}\"}}",
+                phase,
+                at,
+                esc(event)
+            ),
+            TraceEvent::FaultDetected {
+                phase,
+                injected_at,
+                detected_at,
+                event,
+            } => format!(
+                "{{\"type\":\"fault-detected\",\"phase\":{},\"injected_at\":{},\"detected_at\":{},\"event\":\"{}\"}}",
+                phase,
+                injected_at,
+                detected_at,
+                esc(event)
+            ),
+            TraceEvent::LinkTransfer {
+                phase,
+                device,
+                start_ns,
+                end_ns,
+                bytes,
+                kind,
+            } => format!(
+                "{{\"type\":\"link-transfer\",\"phase\":{},\"device\":{},\"start_ns\":{},\"end_ns\":{},\"bytes\":{},\"kind\":\"{}\"}}",
+                phase,
+                device,
+                start_ns,
+                end_ns,
+                bytes,
+                kind.name()
+            ),
+            TraceEvent::Governor {
+                phase,
+                at,
+                device,
+                kind,
+                detail,
+            } => format!(
+                "{{\"type\":\"governor\",\"phase\":{},\"at\":{},\"device\":{},\"kind\":\"{}\",\"detail\":\"{}\"}}",
+                phase,
+                at,
+                device,
+                esc(kind),
+                esc(detail)
+            ),
+            TraceEvent::ServeTick {
+                tick,
+                wall_ns,
+                frame,
+                actions,
+            } => format!(
+                "{{\"type\":\"serve-tick\",\"tick\":{},\"wall_ns\":{},\"frame\":{},\"actions\":{}}}",
+                tick,
+                wall_ns,
+                frame.to_json_full(),
+                strs(actions)
+            ),
+        }
+    }
+}
+
+/// Bounded event buffer: pushes beyond capacity drop the *oldest*
+/// event, and the `seen`/`dropped` counters stay exact regardless —
+/// `seen == dropped + len` always.
+#[derive(Clone, Debug, Default)]
+pub struct TraceRing {
+    cap: usize,
+    events: VecDeque<TraceEvent>,
+    seen: u64,
+    dropped: u64,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> TraceRing {
+        TraceRing {
+            cap,
+            // Don't pre-reserve huge rings; they fill only if the run
+            // actually emits that much.
+            events: VecDeque::with_capacity(cap.min(1024)),
+            seen: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn push(&mut self, ev: TraceEvent) {
+        self.seen += 1;
+        if self.cap == 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Total events ever pushed (retained + dropped).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Oldest-first drops on overflow.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.events.iter()
+    }
+}
+
+/// The emission façade threaded through the governed-run machinery.
+/// Disabled is the common case and costs one `Option` branch per site;
+/// the closure argument means event payloads (frame/fleet clones) are
+/// never built unless recording.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSink {
+    ring: Option<TraceRing>,
+}
+
+impl TraceSink {
+    pub fn disabled() -> TraceSink {
+        TraceSink { ring: None }
+    }
+
+    pub fn from_config(cfg: &TraceConfig) -> TraceSink {
+        if cfg.enabled {
+            TraceSink {
+                ring: Some(TraceRing::new(cfg.capacity)),
+            }
+        } else {
+            TraceSink { ring: None }
+        }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.ring.is_some()
+    }
+
+    /// Record one event. `f` runs only when the sink is enabled — keep
+    /// all cloning inside the closure.
+    #[inline]
+    pub fn emit(&mut self, f: impl FnOnce() -> TraceEvent) {
+        if let Some(ring) = &mut self.ring {
+            ring.push(f());
+        }
+    }
+
+    /// Seal the recording into the serializable artifact.
+    pub fn into_log(self, scenario: &str, policy: &str) -> TraceLog {
+        let (capacity, seen, dropped, events) = match self.ring {
+            Some(r) => (r.cap, r.seen, r.dropped, r.events.into_iter().collect()),
+            None => (0, 0, 0, Vec::new()),
+        };
+        TraceLog {
+            scenario: scenario.to_string(),
+            policy: policy.to_string(),
+            capacity,
+            seen,
+            dropped,
+            events,
+        }
+    }
+}
+
+/// One point of the trace's time series — a per-wake cut through the
+/// fleet (from a `Decision` event) with link contention at that
+/// instant, for the bench figures.
+#[derive(Clone, Debug)]
+pub struct TimePoint {
+    pub at: SimTime,
+    pub phase: usize,
+    /// Worst finite per-lane p99 turnaround in the wake window.
+    pub p99_ms: f64,
+    /// Queued blocks across all lanes at the wake.
+    pub queue: u64,
+    /// Summed mean in-flight contexts across lanes.
+    pub inflight: f64,
+    /// Cumulative rejected admissions.
+    pub rejected: u64,
+    /// Actions the policy returned at this wake.
+    pub actions: usize,
+    /// Checkpoint/migrate transfers occupying host links at `at`.
+    pub links_busy: usize,
+}
+
+fn num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:?}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl TimePoint {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"at\":{},\"phase\":{},\"p99_ms\":{},\"queue\":{},\"inflight\":{},\"rejected\":{},\"actions\":{},\"links_busy\":{}}}",
+            self.at,
+            self.phase,
+            num(self.p99_ms),
+            self.queue,
+            num(self.inflight),
+            self.rejected,
+            self.actions,
+            self.links_busy
+        )
+    }
+}
+
+/// The sealed flight-recorder artifact: the retained events plus exact
+/// totals, serializable to the repo's hand-rolled JSON.
+#[derive(Clone, Debug)]
+pub struct TraceLog {
+    pub scenario: String,
+    pub policy: String,
+    pub capacity: usize,
+    pub seen: u64,
+    pub dropped: u64,
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceLog {
+    /// The recorded decision points, in emission order.
+    pub fn decisions(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Decision { .. }))
+    }
+
+    /// Host-link occupancy windows, in emission order.
+    pub fn link_transfers(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::LinkTransfer { .. }))
+    }
+
+    /// Per-wake time series for the bench figures: one point per
+    /// `Decision` event, with the number of transfer windows spanning
+    /// that instant — the link-contention view the aggregates hide.
+    pub fn timeseries(&self) -> Vec<TimePoint> {
+        let windows: Vec<(SimTime, SimTime)> = self
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::LinkTransfer {
+                    start_ns, end_ns, ..
+                } => Some((*start_ns, *end_ns)),
+                _ => None,
+            })
+            .collect();
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Decision {
+                    phase,
+                    at,
+                    frame,
+                    actions,
+                    ..
+                } => {
+                    let p99 = frame
+                        .lanes
+                        .iter()
+                        .map(|l| l.p99_turnaround_ms)
+                        .filter(|x| x.is_finite())
+                        .fold(0.0_f64, f64::max);
+                    Some(TimePoint {
+                        at: *at,
+                        phase: *phase,
+                        p99_ms: p99,
+                        queue: frame.lanes.iter().map(|l| l.queue_now).sum(),
+                        inflight: frame.lanes.iter().map(|l| l.inflight_avg).sum(),
+                        rejected: frame.rejected,
+                        actions: actions.len(),
+                        links_busy: windows
+                            .iter()
+                            .filter(|&&(s, e2)| s < *at && *at <= e2)
+                            .count(),
+                    })
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    pub fn timeseries_json(&self) -> String {
+        let pts: Vec<String> = self.timeseries().iter().map(|p| p.to_json()).collect();
+        format!(
+            "{{\"scenario\":\"{}\",\"policy\":\"{}\",\"points\":[{}]}}",
+            esc(&self.scenario),
+            esc(&self.policy),
+            pts.join(",")
+        )
+    }
+
+    pub fn to_json(&self) -> String {
+        let evs: Vec<String> = self.events.iter().map(|e| e.to_json()).collect();
+        format!(
+            "{{\"schema\":\"gpushare-trace-v1\",\"scenario\":\"{}\",\"policy\":\"{}\",\"capacity\":{},\"seen\":{},\"dropped\":{},\"events\":[{}]}}",
+            esc(&self.scenario),
+            esc(&self.policy),
+            self.capacity,
+            self.seen,
+            self.dropped,
+            evs.join(",")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(i: usize) -> TraceEvent {
+        TraceEvent::PhaseStart {
+            phase: i,
+            label: format!("p{i}"),
+        }
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_keeps_counts_exact() {
+        let mut r = TraceRing::new(3);
+        for i in 0..7 {
+            r.push(ev(i));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.seen(), 7);
+        assert_eq!(r.dropped(), 4);
+        let phases: Vec<usize> = r
+            .events()
+            .map(|e| match e {
+                TraceEvent::PhaseStart { phase, .. } => *phase,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(phases, vec![4, 5, 6]);
+    }
+
+    #[test]
+    fn disabled_sink_never_builds_events() {
+        let mut sink = TraceSink::disabled();
+        sink.emit(|| unreachable!("disabled sink must not construct events"));
+        let log = sink.into_log("s", "p");
+        assert_eq!(log.seen, 0);
+        assert!(log.events.is_empty());
+    }
+
+    #[test]
+    fn log_json_is_reproducible() {
+        let mut sink = TraceSink::from_config(&TraceConfig::enabled(8));
+        sink.emit(|| ev(0));
+        sink.emit(|| TraceEvent::PhaseEnd {
+            phase: 0,
+            makespan_ns: 42,
+        });
+        let log = sink.into_log("unit", "static");
+        assert_eq!(log.to_json(), log.to_json());
+        assert!(log.to_json().contains("\"phase-end\""));
+        assert_eq!(log.seen, 2);
+        assert_eq!(log.dropped, 0);
+    }
+}

@@ -1,0 +1,245 @@
+//! Deterministic offline policy replay (DESIGN.md §7e): re-decide a
+//! recorded governed run under a `Policy` without re-simulating any
+//! device.
+//!
+//! Every [`TraceEvent::Decision`] carries exactly what
+//! `Policy::decide` consumed — the wake's `SignalFrame` and the
+//! `FleetState` behind its `PolicyCtx` — so walking the decisions in
+//! emission order against a *fresh* policy instance reproduces the
+//! policy's entire state evolution: stateful policies (gain gates that
+//! learn a service time from their first frames) re-learn from the
+//! same frames in the same order. Replay under the original policy
+//! must therefore yield a [`DecisionDiff`] that is empty; CI gates on
+//! exactly that. Replay under a *different* policy (or a changed
+//! build of the same one) turns a policy regression into a readable
+//! diff of decision points instead of a divergent end-state aggregate.
+//!
+//! What the gate can and cannot promise: it proves the policy is a
+//! pure function of its observed frame/fleet sequence (no hidden
+//! clocks, no RNG, no out-of-band state), and it localizes *which
+//! wake* two policies first disagree at. It does **not** simulate the
+//! consequences of a changed decision — after the first divergence
+//! the recorded frames reflect the recorded actions, so downstream
+//! diff entries compare policies against the *original* history, not
+//! a counterfactual one.
+
+use super::{TraceEvent, TraceLog};
+use crate::control::{Policy, PolicyCtx};
+use crate::sim::SimTime;
+use crate::util::json::escape as esc;
+
+/// One decision point: where a policy was asked, and what it answered
+/// (as stable `Action::describe` strings).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DecisionPoint {
+    pub phase: usize,
+    pub at: SimTime,
+    pub actions: Vec<String>,
+}
+
+fn strs(v: &[String]) -> String {
+    let body: Vec<String> = v.iter().map(|s| format!("\"{}\"", esc(s))).collect();
+    format!("[{}]", body.join(","))
+}
+
+impl DecisionPoint {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"phase\":{},\"at\":{},\"actions\":{}}}",
+            self.phase,
+            self.at,
+            strs(&self.actions)
+        )
+    }
+}
+
+/// A policy's answers over one recorded run, in decision order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DecisionTrace {
+    pub policy: String,
+    pub points: Vec<DecisionPoint>,
+}
+
+impl DecisionTrace {
+    /// The decisions as recorded at run time (what the live policy
+    /// actually returned).
+    pub fn recorded(log: &TraceLog) -> DecisionTrace {
+        let points = log
+            .events
+            .iter()
+            .filter_map(|ev| match ev {
+                TraceEvent::Decision {
+                    phase, at, actions, ..
+                } => Some(DecisionPoint {
+                    phase: *phase,
+                    at: *at,
+                    actions: actions.iter().map(|a| a.describe()).collect(),
+                }),
+                _ => None,
+            })
+            .collect();
+        DecisionTrace {
+            policy: log.policy.clone(),
+            points,
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        let pts: Vec<String> = self.points.iter().map(|p| p.to_json()).collect();
+        format!(
+            "{{\"policy\":\"{}\",\"points\":[{}]}}",
+            esc(&self.policy),
+            pts.join(",")
+        )
+    }
+}
+
+/// Re-decide a recorded run: walk the log's `Decision` events in
+/// order, rebuild each wake's `PolicyCtx` from the recorded fleet
+/// snapshot, and ask `policy` afresh. Pass a *fresh* policy instance —
+/// a stateful policy replays faithfully only if it starts from its
+/// initial state, exactly as the live run did.
+pub fn replay(log: &TraceLog, policy: &mut dyn Policy) -> DecisionTrace {
+    let mut points = Vec::new();
+    for ev in &log.events {
+        if let TraceEvent::Decision {
+            phase,
+            phases_total,
+            at,
+            frame,
+            fleet,
+            ..
+        } = ev
+        {
+            let ctx = PolicyCtx {
+                fleet,
+                phase: *phase,
+                phases_total: *phases_total,
+            };
+            let actions = policy.decide(frame, &ctx);
+            points.push(DecisionPoint {
+                phase: *phase,
+                at: *at,
+                actions: actions.iter().map(|a| a.describe()).collect(),
+            });
+        }
+    }
+    DecisionTrace {
+        policy: policy.name().to_string(),
+        points,
+    }
+}
+
+/// One disagreement between two decision traces at the same ordinal
+/// decision point.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DiffEntry {
+    pub phase: usize,
+    pub at: SimTime,
+    /// The left-hand (typically recorded) answer; empty if the left
+    /// trace ended before this point.
+    pub recorded: Vec<String>,
+    /// The right-hand (typically replayed) answer; empty if the right
+    /// trace ended before this point.
+    pub replayed: Vec<String>,
+}
+
+impl DiffEntry {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"phase\":{},\"at\":{},\"recorded\":{},\"replayed\":{}}}",
+            self.phase,
+            self.at,
+            strs(&self.recorded),
+            strs(&self.replayed)
+        )
+    }
+}
+
+/// The regression artifact: every decision point where two traces
+/// disagree (by phase, instant, or returned actions), sorted stably by
+/// `(phase, at)`. Empty means the policies are indistinguishable over
+/// this history — the CI replay gate requires exactly that for
+/// recorded-vs-replayed under the original policy.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DecisionDiff {
+    pub entries: Vec<DiffEntry>,
+}
+
+impl DecisionDiff {
+    pub fn between(a: &DecisionTrace, b: &DecisionTrace) -> DecisionDiff {
+        let n = a.points.len().max(b.points.len());
+        let mut entries = Vec::new();
+        for i in 0..n {
+            let pa = a.points.get(i);
+            let pb = b.points.get(i);
+            if let (Some(x), Some(y)) = (pa, pb) {
+                if x == y {
+                    continue;
+                }
+            }
+            let (phase, at) = pa.or(pb).map(|p| (p.phase, p.at)).unwrap_or((0, 0));
+            entries.push(DiffEntry {
+                phase,
+                at,
+                recorded: pa.map(|p| p.actions.clone()).unwrap_or_default(),
+                replayed: pb.map(|p| p.actions.clone()).unwrap_or_default(),
+            });
+        }
+        entries.sort_by_key(|e| (e.phase, e.at));
+        DecisionDiff { entries }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn to_json(&self) -> String {
+        let es: Vec<String> = self.entries.iter().map(|e| e.to_json()).collect();
+        format!("{{\"entries\":[{}]}}", es.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(phase: usize, at: SimTime, actions: &[&str]) -> DecisionPoint {
+        DecisionPoint {
+            phase,
+            at,
+            actions: actions.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    fn trace(points: Vec<DecisionPoint>) -> DecisionTrace {
+        DecisionTrace {
+            policy: "t".to_string(),
+            points,
+        }
+    }
+
+    #[test]
+    fn identical_traces_diff_empty() {
+        let a = trace(vec![pt(0, 10, &["reslice d0 3g->4g"]), pt(1, 20, &[])]);
+        let d = DecisionDiff::between(&a, &a.clone());
+        assert!(d.is_empty());
+        assert_eq!(d.to_json(), "{\"entries\":[]}");
+    }
+
+    #[test]
+    fn action_mismatch_and_length_mismatch_both_surface() {
+        let a = trace(vec![pt(0, 10, &["power-up d2"]), pt(1, 20, &[])]);
+        let b = trace(vec![pt(0, 10, &[])]);
+        let d = DecisionDiff::between(&a, &b);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.entries[0].recorded, vec!["power-up d2".to_string()]);
+        assert!(d.entries[0].replayed.is_empty());
+        assert_eq!(d.entries[1].phase, 1);
+        assert!(d.entries[1].replayed.is_empty());
+    }
+}

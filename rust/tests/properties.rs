@@ -1454,3 +1454,129 @@ fn chaos_soak_seeded_fault_streams() {
         assert_eq!(rep.to_json(), rep2.to_json(), "seed {seed} not reproducible");
     }
 }
+
+// ---------------------------------------------------------------------
+// Flight recorder (DESIGN.md §7e)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_trace_ring_overflow_drops_oldest_and_keeps_counts_exact() {
+    // Whatever the capacity and push count, the ring retains exactly the
+    // newest min(cap, n) events in order, and seen/dropped stay exact —
+    // overflow loses events, never arithmetic.
+    use gpushare::trace::{TraceEvent, TraceRing};
+
+    run_prop("trace=ring-overflow-exact", cfgd(), |g| {
+        let cap = g.usize(1, 8);
+        let n = g.usize(0, 20);
+        let mut ring = TraceRing::new(cap);
+        for i in 0..n {
+            ring.push(TraceEvent::PhaseStart {
+                phase: i,
+                label: format!("p{i}"),
+            });
+        }
+        let kept = n.min(cap);
+        check_eq(ring.len(), kept, "len == min(cap, n)")?;
+        check_eq(ring.seen(), n as u64, "seen counts every push")?;
+        check_eq(ring.dropped(), (n - kept) as u64, "dropped == seen - retained")?;
+        for (k, ev) in ring.events().enumerate() {
+            let want = n - kept + k;
+            match ev {
+                gpushare::trace::TraceEvent::PhaseStart { phase, .. } => {
+                    check_eq(*phase, want, "retained events are the newest, in order")?;
+                }
+                other => return check(false, format!("unexpected variant {other:?}")),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_traced_governed_run_is_byte_identical_to_untraced() {
+    // The tracing-is-free contract over random small in-clock governed
+    // workloads: attaching the flight recorder (any capacity, including
+    // overflowing ones) never changes a byte of the report, and the
+    // recorded log itself reproduces run to run.
+    use gpushare::cluster::{ClusterJob, ClusterRunConfig, ClusterSpec, PlacePolicy};
+    use gpushare::control::policy::RejectionAutoscale;
+    use gpushare::control::{
+        run_governed_inline, run_governed_traced, ControlConfig, FleetState, GovernorConfig,
+        PhaseSpec,
+    };
+    use gpushare::trace::TraceConfig;
+
+    let cfg_small = PropConfig {
+        cases: 4,
+        ..PropConfig::default()
+    };
+    run_prop("trace=zero-perturbation", cfg_small, |g| {
+        let seed = g.u64(1, 1 << 40);
+        let cadence = g.u64(1, 20) * MS;
+        let capacity = g.usize(1, 64); // deliberately small: overflow too
+        let phases: Vec<PhaseSpec> = (0..g.usize(1, 2))
+            .map(|i| {
+                let mut jobs = Vec::new();
+                for k in 0..g.usize(1, 3) {
+                    if g.bool() {
+                        jobs.push(ClusterJob::inference(
+                            &format!("i{i}{k}"),
+                            DlModel::AlexNet,
+                            g.u64(1, 3) as u32,
+                            Some(5),
+                        ));
+                    } else {
+                        jobs.push(ClusterJob::training(
+                            &format!("t{i}{k}"),
+                            DlModel::ResNet50,
+                            g.u64(1, 2) as u32,
+                        ));
+                    }
+                }
+                PhaseSpec::new(&format!("p{i}"), jobs)
+            })
+            .collect();
+        let spec = ClusterSpec::parse("3x3090:mps").unwrap();
+        let cfg = ControlConfig {
+            run: ClusterRunConfig {
+                seed,
+                parallel: false,
+                ..ClusterRunConfig::default()
+            },
+            place: PlacePolicy::LeastLoaded,
+        };
+        let gov = GovernorConfig::cadence(cadence);
+        let untraced = {
+            let mut fleet = FleetState::with_powered(spec.clone(), vec![true, true, false]);
+            let mut policy = RejectionAutoscale { min_powered: 1 };
+            run_governed_inline(&mut fleet, &phases, &mut policy, &cfg, &gov)
+        };
+        let run_traced = || {
+            let mut fleet = FleetState::with_powered(spec.clone(), vec![true, true, false]);
+            let mut policy = RejectionAutoscale { min_powered: 1 };
+            run_governed_traced(
+                &mut fleet,
+                &phases,
+                &mut policy,
+                &cfg,
+                &gov,
+                &TraceConfig::enabled(capacity),
+            )
+        };
+        let (traced, log_a) = run_traced();
+        check_eq(
+            traced.to_json(),
+            untraced.to_json(),
+            "traced run must be byte-identical to untraced",
+        )?;
+        check_eq(
+            log_a.seen,
+            log_a.dropped + log_a.events.len() as u64,
+            "seen == dropped + retained",
+        )?;
+        check_le(log_a.events.len(), capacity, "retention bounded by capacity")?;
+        let (_, log_b) = run_traced();
+        check_eq(log_a.to_json(), log_b.to_json(), "trace log reproducible")
+    });
+}

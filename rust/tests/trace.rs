@@ -1,0 +1,156 @@
+//! Integration tests for the §7e flight recorder + deterministic replay:
+//! the CI trace-replay gate's guarantees (replaying a recorded governed
+//! run under its original policy reproduces every decision; a different
+//! policy visibly diverges), the tracing-is-free contract (a traced run
+//! is byte-identical to an untraced one), and link-contention visibility
+//! (checkpoint/restore transfers appear as host-link occupancy windows,
+//! and the degraded-link restore is visibly stretched).
+
+use gpushare::control::policy::StaticPolicy;
+use gpushare::exp::control::{
+    bursty_inline_policy, bursty_reslice_inline, bursty_reslice_inline_traced, chaos_policy,
+    chaos_recovery, chaos_recovery_traced,
+};
+use gpushare::exp::Protocol;
+use gpushare::trace::{replay, DecisionDiff, DecisionTrace, TraceConfig, TraceEvent, TransferKind};
+
+fn proto() -> Protocol {
+    Protocol {
+        requests: 6,
+        train_steps: 2,
+        ..Protocol::default()
+    }
+}
+
+/// The CI gate's lossless capacity: no `Decision` event may be dropped,
+/// or stateful-policy replay would start from a truncated history.
+fn trace_cfg() -> TraceConfig {
+    TraceConfig::enabled(1 << 16)
+}
+
+#[test]
+fn bursty_replay_under_original_policy_is_decision_identical() {
+    let (_, log) = bursty_reslice_inline_traced(&proto(), &trace_cfg());
+    assert_eq!(log.dropped, 0, "gate capacity must be lossless");
+    assert_eq!(log.scenario, "bursty-reslice-inline");
+    let recorded = DecisionTrace::recorded(&log);
+    assert!(
+        !recorded.points.is_empty(),
+        "the in-clock run must record per-wake decision points"
+    );
+    // …including at least one with a real action (the mid-burst swap)
+    assert!(
+        recorded.points.iter().any(|p| !p.actions.is_empty()),
+        "no recorded decision carries an action: {recorded:?}"
+    );
+    let mut policy = bursty_inline_policy();
+    let replayed = replay(&log, &mut policy);
+    let diff = DecisionDiff::between(&recorded, &replayed);
+    assert!(diff.is_empty(), "replay diverged: {}", diff.to_json());
+}
+
+#[test]
+fn chaos_replay_under_original_policy_is_decision_identical() {
+    let (_, log) = chaos_recovery_traced(&proto(), &trace_cfg());
+    assert_eq!(log.dropped, 0, "gate capacity must be lossless");
+    assert_eq!(log.scenario, "chaos-recovery");
+    let recorded = DecisionTrace::recorded(&log);
+    assert!(!recorded.points.is_empty());
+    let mut policy = chaos_policy();
+    let replayed = replay(&log, &mut policy);
+    let diff = DecisionDiff::between(&recorded, &replayed);
+    assert!(diff.is_empty(), "replay diverged: {}", diff.to_json());
+}
+
+#[test]
+fn chaos_replay_under_a_different_policy_diverges() {
+    // The gate actually discriminates: re-deciding the chaos storm under
+    // StaticPolicy (which never recovers) must disagree with the recorded
+    // FailRecover decisions — the recorded restore cannot reappear.
+    let (_, log) = chaos_recovery_traced(&proto(), &trace_cfg());
+    let recorded = DecisionTrace::recorded(&log);
+    let replayed = replay(&log, &mut StaticPolicy);
+    let diff = DecisionDiff::between(&recorded, &replayed);
+    assert!(
+        !diff.is_empty(),
+        "a do-nothing policy replayed identically to FailRecover"
+    );
+    // …and the diff names the divergent wake with both action lists
+    let first = &diff.entries[0];
+    assert_ne!(first.recorded, first.replayed);
+}
+
+#[test]
+fn tracing_is_invisible_to_the_simulation() {
+    // The zero-cost contract, semantic half: recording a run must not
+    // perturb a single byte of its report — for the in-clock bursty
+    // scenario and the chaos storm (faults, checkpoints, restore).
+    let traced = bursty_reslice_inline_traced(&proto(), &trace_cfg()).0;
+    let untraced = bursty_reslice_inline(&proto());
+    assert_eq!(traced.to_json(), untraced.to_json());
+
+    let chaos_traced = chaos_recovery_traced(&proto(), &trace_cfg()).0;
+    let chaos_untraced = chaos_recovery(&proto());
+    assert_eq!(chaos_traced.to_json(), chaos_untraced.to_json());
+}
+
+#[test]
+fn trace_log_and_timeseries_are_byte_reproducible() {
+    let (_, a) = bursty_reslice_inline_traced(&proto(), &trace_cfg());
+    let (_, b) = bursty_reslice_inline_traced(&proto(), &trace_cfg());
+    assert_eq!(a.to_json(), b.to_json());
+    assert_eq!(a.timeseries_json(), b.timeseries_json());
+    assert!(!a.timeseries().is_empty(), "per-wake points must exist");
+}
+
+#[test]
+fn chaos_link_transfers_make_contention_visible() {
+    // §7e link-occupancy regression: the chaos storm's periodic
+    // checkpoints and the backoff-retried restore must surface as
+    // host-link transfer windows, and the restore — two PCIe legs, the
+    // destination leg on the half-bandwidth degraded link — must be
+    // visibly longer than any single full-bandwidth checkpoint leg.
+    let (cmp, log) = chaos_recovery_traced(&proto(), &trace_cfg());
+    assert!(cmp.governed.fault.checkpoints >= 1);
+    let mut ckpt_durs: Vec<u64> = Vec::new();
+    let mut restore_durs: Vec<u64> = Vec::new();
+    for ev in log.link_transfers() {
+        let TraceEvent::LinkTransfer {
+            device,
+            start_ns,
+            end_ns,
+            bytes,
+            kind,
+            ..
+        } = ev
+        else {
+            unreachable!("link_transfers yields only LinkTransfer events");
+        };
+        assert!(end_ns > start_ns, "transfer window must have extent: {ev:?}");
+        assert!(*bytes > 0, "transfer must move bytes: {ev:?}");
+        match kind {
+            TransferKind::Checkpoint => ckpt_durs.push(end_ns - start_ns),
+            TransferKind::Migrate | TransferKind::Restore => {
+                // the restore lands on the spare (device 2), whose link
+                // the storm degraded to half bandwidth
+                assert_eq!(*device, 2, "restore must target the spare: {ev:?}");
+                restore_durs.push(end_ns - start_ns);
+            }
+        }
+    }
+    assert!(
+        !ckpt_durs.is_empty(),
+        "periodic checkpoints left no transfer windows"
+    );
+    assert!(
+        !restore_durs.is_empty(),
+        "the recovery restore left no transfer window"
+    );
+    let max_ckpt = *ckpt_durs.iter().max().unwrap();
+    let max_restore = *restore_durs.iter().max().unwrap();
+    assert!(
+        max_restore > max_ckpt,
+        "degraded-link restore ({max_restore} ns) should visibly exceed a \
+         full-bandwidth checkpoint leg ({max_ckpt} ns)"
+    );
+}
