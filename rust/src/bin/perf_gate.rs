@@ -4,7 +4,7 @@
 //!
 //! Usage:
 //!   perf_gate <BENCH_baseline.json> <BENCH_perf.json> [--tolerance 0.15]
-//!             [--all] [--update]
+//!             [--all] [--update] [--ratio "A=B" ...]
 //!
 //! * Only entries whose names start with `sim:` or `sweep:` gate by
 //!   default (events/sec — the stable, machine-comparable series);
@@ -15,6 +15,12 @@
 //! * `--update` rewrites the baseline after a passing run as the
 //!   per-entry max of baseline and fresh throughput — an upward-only
 //!   ratchet (commit the result to move the bar; the floor never drops).
+//! * `--ratio "A=B"` (repeatable) additionally gates the *relative* cost
+//!   of A against B: `fresh(A)/fresh(B)` must not fall more than the
+//!   tolerance below `baseline(A)/baseline(B)`. Absolute floors move with
+//!   runner speed; the ratio pins a structural overhead — e.g. the
+//!   governed in-clock floor over the ungoverned sweep floor (§7f) —
+//!   so a regression in one side cannot hide behind a fast machine.
 //!
 //! The committed baseline is deliberately conservative (a floor any CI
 //! runner clears), so the gate catches order-of-magnitude regressions —
@@ -71,6 +77,7 @@ fn run() -> Result<bool, String> {
     };
     let mut all = false;
     let mut update = false;
+    let mut ratios: Vec<(String, String)> = Vec::new();
     let mut it = args.into_iter();
     while let Some(a) = it.next() {
         match a.as_str() {
@@ -80,13 +87,23 @@ fn run() -> Result<bool, String> {
             }
             "--all" => all = true,
             "--update" => update = true,
+            "--ratio" => {
+                let v = it.next().ok_or("--ratio needs \"A=B\"")?;
+                let (a, b) = v
+                    .split_once('=')
+                    .ok_or_else(|| format!("--ratio {v:?}: expected \"A=B\""))?;
+                if a.is_empty() || b.is_empty() {
+                    return Err(format!("--ratio {v:?}: both names must be non-empty"));
+                }
+                ratios.push((a.to_string(), b.to_string()));
+            }
             _ => paths.push(a),
         }
     }
     let [baseline_path, fresh_path] = paths.as_slice() else {
         return Err(
             "usage: perf_gate <BENCH_baseline.json> <BENCH_perf.json> \
-             [--tolerance 0.15] [--all] [--update]"
+             [--tolerance 0.15] [--all] [--update] [--ratio \"A=B\" ...]"
                 .to_string(),
         );
     };
@@ -135,6 +152,34 @@ fn run() -> Result<bool, String> {
     if compared == 0 {
         return Err("no comparable benchmarks between baseline and fresh run".to_string());
     }
+    // Relative gates: fresh(A)/fresh(B) vs baseline(A)/baseline(B).
+    let mut ratio_failed = 0usize;
+    for (a, b) in &ratios {
+        let find = |entries: &[Entry], name: &str| -> Result<f64, String> {
+            entries
+                .iter()
+                .find(|e| normalized(&e.name) == normalized(name))
+                .map(|e| e.throughput)
+                .ok_or_else(|| format!("--ratio: no benchmark named {name:?}"))
+        };
+        let base_ratio = find(&baseline, a)? / find(&baseline, b)?;
+        let fresh_ratio = find(&fresh, a)? / find(&fresh, b)?;
+        let delta = fresh_ratio / base_ratio - 1.0;
+        let verdict = if fresh_ratio < base_ratio * (1.0 - tolerance) {
+            ratio_failed += 1;
+            "FAIL"
+        } else {
+            "ok"
+        };
+        println!(
+            "ratio {:<38} {:>14.3} {:>14.3} {:>+7.1}% {}",
+            format!("{} / {}", normalized(a), normalized(b)),
+            base_ratio,
+            fresh_ratio,
+            delta * 100.0,
+            verdict
+        );
+    }
     if missing > 0 {
         println!(
             "\n{missing} gated baseline entr{} missing from the fresh run — \
@@ -146,6 +191,14 @@ fn run() -> Result<bool, String> {
     if regressed > 0 {
         println!(
             "\n{regressed}/{compared} gated benchmarks regressed > {:.0}% vs {baseline_path}",
+            tolerance * 100.0
+        );
+        return Ok(false);
+    }
+    if ratio_failed > 0 {
+        println!(
+            "\n{ratio_failed}/{} ratio gates regressed > {:.0}% vs {baseline_path}",
+            ratios.len(),
             tolerance * 100.0
         );
         return Ok(false);

@@ -34,10 +34,17 @@
 //! `ControlReport` JSON.
 //!
 //! **Determinism.** Governor events are pure functions of (spec, phases,
-//! seed, cadence); devices are independent between governor events, so the
-//! lockstep advance fans out one device per worker thread with
-//! byte-identical results (§8a) — the determinism guard covers the
-//! in-clock scenarios too.
+//! seed, cadence); devices are independent between governor events, so
+//! advancing them — in lockstep, or event-driven through the §7f
+//! component scheduler ([`GovernorRt::step_to_horizon`]), serially or
+//! one device per pool worker — is observationally identical (§8a). The
+//! driver computes each horizon as the conservative lookahead: the
+//! earliest of the next cadence wake, the next timed fault, the next
+//! staged-action or checkpoint-copy completion, and (when every prior
+//! term is provably idle) fast-forwards over empty wakes entirely. The
+//! lockstep sweep stays available behind [`GovernorConfig::with_lockstep`]
+//! as the differential oracle; the determinism guard asserts both modes
+//! byte-for-byte on every governed scenario.
 
 use super::actuate::{ActionRecord, FleetState, CHECKPOINT_LATENCY_NS, PROVISION_NS};
 use super::policy::{Action, Policy, PolicyCtx, ScaleChange};
@@ -79,6 +86,11 @@ pub struct GovernorConfig {
     /// The Young/Daly knob: short cadences pay steady-state drain+copy
     /// overhead, long ones lose more work to an abrupt failure.
     pub ckpt_every_ns: Option<SimTime>,
+    /// Step the fleet in lockstep (every live device to every horizon)
+    /// instead of event-driven (§7f). Off by default; the lockstep path
+    /// is the differential oracle the determinism suite runs both modes
+    /// through, byte-compared.
+    pub lockstep: bool,
 }
 
 impl GovernorConfig {
@@ -87,6 +99,7 @@ impl GovernorConfig {
         GovernorConfig {
             cadence_ns: None,
             ckpt_every_ns: None,
+            lockstep: false,
         }
     }
 
@@ -96,6 +109,7 @@ impl GovernorConfig {
         GovernorConfig {
             cadence_ns: Some(ns),
             ckpt_every_ns: None,
+            lockstep: false,
         }
     }
 
@@ -104,6 +118,14 @@ impl GovernorConfig {
     pub fn with_checkpoint(mut self, ns: SimTime) -> GovernorConfig {
         assert!(ns > 0, "checkpoint cadence must be positive");
         self.ckpt_every_ns = Some(ns);
+        self
+    }
+
+    /// Force lockstep stepping — the pre-§7f oracle mode. Observable
+    /// behavior is byte-identical to event-driven stepping; only the
+    /// wall-clock cost differs.
+    pub fn with_lockstep(mut self) -> GovernorConfig {
+        self.lockstep = true;
         self
     }
 }
@@ -177,13 +199,64 @@ fn action_devices(action: &Action) -> Vec<usize> {
     }
 }
 
-fn busy(pending: &[PendingAction], action: &Action) -> bool {
-    let devices = action_devices(action);
-    pending.iter().any(|p| {
-        action_devices(&p.action)
-            .iter()
-            .any(|d| devices.contains(d))
-    })
+/// Per-device link-reservation tickets (§7f): a staged action or an
+/// in-flight checkpoint copy reserves the devices (and so the host links)
+/// it will use and releases them at final disposition — landed, abandoned,
+/// or retries exhausted. Staging consults ticket counts instead of
+/// scanning the pending queues: the governor-mediated barrier becomes a
+/// backpressured reservation check, O(devices-touched) per decision. A
+/// backoff retry keeps its ticket — the transfer is still in flight, just
+/// waiting out the outage.
+struct LinkLedger {
+    /// Tickets held by staged actions, per device.
+    action: Vec<u32>,
+    /// Tickets held by periodic-checkpoint copies, per device.
+    ckpt: Vec<u32>,
+}
+
+impl LinkLedger {
+    fn new(ndev: usize) -> LinkLedger {
+        LinkLedger {
+            action: vec![0; ndev],
+            ckpt: vec![0; ndev],
+        }
+    }
+
+    /// Any of `devices` already reserved by a staged action? (Checkpoint
+    /// tickets deliberately do not block actions — they never did: a
+    /// policy action may land on a device mid-checkpoint, exactly as the
+    /// old pending-queue scan allowed.)
+    fn action_busy(&self, devices: &[usize]) -> bool {
+        devices.iter().any(|&d| self.action[d] > 0)
+    }
+
+    fn reserve_action(&mut self, devices: &[usize]) {
+        for &d in devices {
+            self.action[d] += 1;
+        }
+    }
+
+    fn release_action(&mut self, devices: &[usize]) {
+        for &d in devices {
+            debug_assert!(self.action[d] > 0, "double release of action ticket on {d}");
+            self.action[d] = self.action[d].saturating_sub(1);
+        }
+    }
+
+    /// No reservation of any kind on device `d` — the precondition for
+    /// staging a periodic checkpoint there.
+    fn link_clear(&self, d: usize) -> bool {
+        self.action[d] == 0 && self.ckpt[d] == 0
+    }
+
+    fn reserve_ckpt(&mut self, d: usize) {
+        self.ckpt[d] += 1;
+    }
+
+    fn release_ckpt(&mut self, d: usize) {
+        debug_assert!(self.ckpt[d] > 0, "double release of ckpt ticket on {d}");
+        self.ckpt[d] = self.ckpt[d].saturating_sub(1);
+    }
 }
 
 /// Feasibility of resuming the *live* job `job` on `dst` — shared by
@@ -252,15 +325,16 @@ fn ckpt_leg_ns(fleet: &FleetState, d: usize, bytes: u64, link_pct: u32) -> SimTi
 
 /// Build a windowed frame: one lane signal per device over
 /// `(since, until]`, plus the phase's (constant) routing pressure.
-/// `lane_reports[d]` is the device's report at snapshot time — the live
+/// `lane_report(d)` is the device's report at snapshot time — the live
 /// mid-run report at a wake, the assembled lane report at the phase end
 /// (`None` for idle devices) — so the per-wake and end-of-phase frames
-/// share one assembly. `prev_arrivals` carries the cumulative arrival
-/// counters between windows.
+/// share one assembly with no per-wake collection allocated.
+/// `prev_arrivals` carries the cumulative arrival counters between
+/// windows.
 #[allow(clippy::too_many_arguments)]
-fn window_frame(
+fn window_frame<'r>(
     fleet: &FleetState,
-    lane_reports: &[Option<&RunReport>],
+    lane_report: impl Fn(usize) -> Option<&'r RunReport>,
     lane_jobs: &[Vec<String>],
     phase_jobs: &[ClusterJob],
     stats: &PlacementStats,
@@ -276,7 +350,7 @@ fn window_frame(
         .map(|d| {
             let device = fleet.spec.devices[d].name();
             let mechanism = fleet.spec.devices[d].mechanism.name();
-            let (rep, jobs) = match lane_reports[d] {
+            let (rep, jobs) = match lane_report(d) {
                 Some(rep) => (rep, lane_jobs[d].len() as u64),
                 None => (&empty, 0),
             };
@@ -316,12 +390,13 @@ fn stage_action(
     t: SimTime,
     fail_time: &[Option<SimTime>],
     pending: &mut Vec<PendingAction>,
+    ledger: &mut LinkLedger,
     records: &mut Vec<InlineActionRecord>,
     phase_idx: usize,
     sink: &mut TraceSink,
 ) {
-    if busy(pending, &action) {
-        // An action is already in flight on these devices; the policy will
+    if ledger.action_busy(&action_devices(&action)) {
+        // An action is already ticketed on these devices; the policy will
         // re-observe once it lands. Not recorded: per-wake duplicates of
         // one decision are noise, not actions.
         return;
@@ -362,6 +437,7 @@ fn stage_action(
                 apply_at,
                 action: action.describe(),
             });
+            ledger.reserve_action(&action_devices(&action));
             pending.push(PendingAction {
                 action,
                 decided_ns: t,
@@ -450,6 +526,7 @@ fn stage_action(
                     TransferKind::Migrate
                 },
             });
+            ledger.reserve_action(&action_devices(&action));
             pending.push(PendingAction {
                 action,
                 decided_ns: t,
@@ -471,6 +548,7 @@ fn stage_action(
                 apply_at,
                 action: action.describe(),
             });
+            ledger.reserve_action(&action_devices(&action));
             pending.push(PendingAction {
                 action,
                 decided_ns: t,
@@ -681,6 +759,7 @@ fn run_phase_inclock(
     cfg: &ControlConfig,
     cadence: SimTime,
     ckpt_every: Option<SimTime>,
+    lockstep: bool,
     policy: &mut dyn Policy,
     phase_idx: usize,
     phases_total: usize,
@@ -696,6 +775,7 @@ fn run_phase_inclock(
     let (rts, mut lane_jobs) = cluster.build_runtimes(&phase.jobs, &placement.assignment, &run_cfg);
     let ndev = fleet.spec.devices.len();
     let mut gov = GovernorRt::new(rts, run_cfg.parallel);
+    gov.set_lockstep(lockstep);
     gov.set_recording(sink.is_enabled());
     // Devices already draining (a failure carried in from a prior phase)
     // start masked — placement gave them nothing, but the mask keeps the
@@ -712,13 +792,18 @@ fn run_phase_inclock(
     }
     let mut records: Vec<InlineActionRecord> = Vec::new();
     let mut pending: Vec<PendingAction> = Vec::new();
-    let mut timed: Vec<(SimTime, FleetEvent)> = phase.timed_events.clone();
-    timed.sort_by_key(|&(t, _)| t);
-    let mut timed_next = 0usize;
+    let mut ledger = LinkLedger::new(ndev);
+    let mut timed = crate::fault::TimedEvents::new(phase.timed_events.clone());
     let mut last_wake: SimTime = 0;
     let mut prev_arrivals: Vec<u64> = vec![0; ndev];
     let mut wake_no: u64 = 0;
-    let mut stalled_wakes: u32 = 0;
+    // Consecutive-stall tracking for kill-on-stall: the previous horizon
+    // already found the fleet stalled with nothing in flight.
+    let mut stalled_prev = false;
+    // Did the last *fired* wake observe nothing and decide nothing? Gates
+    // the empty-wake fast-forward below: the policy always gets one wake
+    // on any new state before the clock may leap.
+    let mut last_wake_idle = false;
     // Fault-plane state (§7d). Faults take *physical* effect at their
     // instant (the simulation doesn't wait to be observed); the fleet
     // bookkeeping — the governor's belief — lands only at the next
@@ -730,42 +815,79 @@ fn run_phase_inclock(
     let mut fail_time: Vec<Option<SimTime>> = vec![None; ndev];
     let mut phys_link_pct: Vec<u32> = fleet.link_bw_pct.clone();
     let mut phys_link_down: Vec<bool> = fleet.link_up.iter().map(|&u| !u).collect();
+    // Per-horizon scratch, hoisted so the steady-state loop allocates
+    // nothing.
+    let mut due_actions: Vec<PendingAction> = Vec::new();
+    let mut due_ckpts: Vec<PendingCkpt> = Vec::new();
     loop {
         if pending.is_empty()
             && pending_ckpt.is_empty()
             && pending_detect.is_empty()
             && gov.all_done()
-            && timed_next >= timed.len()
+            && timed.exhausted()
         {
             break;
         }
+        // The conservative lookahead (§7f): the earliest instant anything
+        // outside the device clocks can happen. `ext` collects the
+        // governor-external terms (staged completions, checkpoint copies,
+        // the periodic-checkpoint tick, the next timed fault); the next
+        // cadence wake joins it below.
         let next_wake = cadence.saturating_mul(wake_no + 1);
-        let mut t = next_wake;
+        let mut ext = SimTime::MAX;
         for p in &pending {
-            t = t.min(p.apply_at);
+            ext = ext.min(p.apply_at);
         }
         for c in &pending_ckpt {
-            t = t.min(c.apply_at);
+            ext = ext.min(c.apply_at);
         }
         if let Some(every) = ckpt_every {
-            let live_pinned = fleet.pins.iter().any(|p| {
-                gov.device(p.device)
-                    .is_some_and(|rt| rt.live_ctx_names().iter().any(|n| *n == p.job))
-            });
+            let live_pinned = fleet
+                .pins
+                .iter()
+                .any(|p| gov.device(p.device).is_some_and(|rt| rt.has_live_ctx(&p.job)));
             if live_pinned {
-                t = t.min(every.saturating_mul(ckpt_no + 1));
+                ext = ext.min(every.saturating_mul(ckpt_no + 1));
             }
         }
-        if timed_next < timed.len() {
-            t = t.min(timed[timed_next].0);
+        if let Some(at) = timed.peek_at() {
+            ext = ext.min(at);
+        }
+        let mut t = next_wake.min(ext);
+        // Empty-wake fast-forward: when the last fired wake was idle, no
+        // detection is waiting to be billed at a heartbeat, and no device
+        // can act before the next external event, the intervening cadence
+        // wakes are provably no-ops — leap straight to `ext` instead of
+        // burning them. The wake grid stays absolute (`wake_no` is
+        // realigned to the grid point before `t`), so a fault landed here
+        // is still detected at the same heartbeat instant it always was.
+        let mut jumped = false;
+        if last_wake_idle
+            && t == next_wake
+            && ext > next_wake
+            && ext < SimTime::MAX
+            && pending_detect.is_empty()
+            && gov.earliest_device_event().map_or(true, |e| e >= ext)
+        {
+            t = ext;
+            jumped = true;
         }
         let t = t.max(gov.now());
+        if jumped {
+            wake_no = t.saturating_sub(1) / cadence;
+        }
         assert!(
             t <= 3_600 * SEC,
             "in-clock governor runaway in phase '{}'",
             phase.label
         );
-        gov.advance_to(t);
+        gov.step_to_horizon(t);
+        // Does a cadence wake fire at this horizon? (Identical to the
+        // pre-jump `t >= next_wake` when no jump happened; after a jump,
+        // only if the landing fell exactly on the wake grid.)
+        let wake_fires = t >= cadence.saturating_mul(wake_no + 1);
+        // Anything observed or decided this horizon clears the idle flag.
+        let mut quiet = true;
 
         // Timed platform events. A `DrainDevice` is an *operator warning*
         // — known instantly, bookkeeping and mask land now. Every other
@@ -773,9 +895,8 @@ fn run_phase_inclock(
         // instant, but the governor's fleet bookkeeping is deferred to the
         // next heartbeat wake via `pending_detect` — detection latency is
         // a real, measured cost.
-        while timed_next < timed.len() && timed[timed_next].0 <= t {
-            let (t_ev, ev) = timed[timed_next];
-            timed_next += 1;
+        while let Some((t_ev, ev)) = timed.next_due(t) {
+            quiet = false;
             match ev {
                 FleetEvent::DrainDevice(d) => {
                     apply_fleet_event(fleet, &ev);
@@ -833,21 +954,18 @@ fn run_phase_inclock(
 
         // Checkpoint copies landing now (§7d): snapshot the pin at the
         // drain point and resume dispatch — unless the link is down, in
-        // which case the copy failed in flight and backs off.
-        let due_ckpt: Vec<PendingCkpt> = {
-            let mut still = Vec::with_capacity(pending_ckpt.len());
-            let mut due = Vec::new();
-            for c in pending_ckpt {
-                if c.apply_at <= t {
-                    due.push(c);
-                } else {
-                    still.push(c);
-                }
+        // which case the copy failed in flight and backs off (keeping its
+        // link ticket: the transfer is still in flight).
+        let mut i = 0;
+        while i < pending_ckpt.len() {
+            if pending_ckpt[i].apply_at <= t {
+                due_ckpts.push(pending_ckpt.remove(i));
+            } else {
+                i += 1;
             }
-            pending_ckpt = still;
-            due
-        };
-        for c in due_ckpt {
+        }
+        for c in due_ckpts.drain(..) {
+            quiet = false;
             if phys_link_down[c.device] {
                 if c.attempt < MAX_TRANSFER_RETRIES {
                     fault.retries += 1;
@@ -857,12 +975,16 @@ fn run_phase_inclock(
                         attempt,
                         ..c
                     });
-                } else if !fleet.draining[c.device] {
-                    // abandoned: the old snapshot stands; dispatch resumes
+                    continue;
+                }
+                // abandoned: the old snapshot stands; dispatch resumes
+                ledger.release_ckpt(c.device);
+                if !fleet.draining[c.device] {
                     let _ = gov.unmask_device(c.device);
                 }
                 continue;
             }
+            ledger.release_ckpt(c.device);
             let base0 = base_units(&phase.jobs, &c.job);
             if let Some(done) = gov.job_completed_units(c.device, &c.job) {
                 if let Some(pin) = fleet.pins.iter_mut().find(|p| p.job == c.job) {
@@ -876,23 +998,20 @@ fn run_phase_inclock(
         }
 
         // Staged-action completions due now.
-        let due: Vec<PendingAction> = {
-            let mut still = Vec::with_capacity(pending.len());
-            let mut due = Vec::new();
-            for p in pending {
-                if p.apply_at <= t {
-                    due.push(p);
-                } else {
-                    still.push(p);
-                }
+        let mut i = 0;
+        while i < pending.len() {
+            if pending[i].apply_at <= t {
+                due_actions.push(pending.remove(i));
+            } else {
+                i += 1;
             }
-            pending = still;
-            due
-        };
-        for p in due {
+        }
+        for p in due_actions.drain(..) {
+            quiet = false;
             // A transfer landing on a down host link failed in flight:
-            // back off exponentially, then give up (unmasking what the
-            // stage masked) once retries are exhausted (§7d).
+            // back off exponentially (ticket kept), then give up
+            // (releasing the ticket and unmasking what the stage masked)
+            // once retries are exhausted (§7d).
             if let Action::Migrate { src, dst, .. } = &p.action {
                 let (s, d) = (*src, *dst);
                 if phys_link_down[s] || phys_link_down[d] {
@@ -903,6 +1022,7 @@ fn run_phase_inclock(
                         p.apply_at = t.saturating_add(BACKOFF_BASE_NS << p.attempt);
                         pending.push(p);
                     } else {
+                        ledger.release_action(&action_devices(&p.action));
                         if !p.restore && !fleet.draining[s] && gov.device(s).is_some() {
                             let _ = gov.unmask_device(s);
                         }
@@ -929,6 +1049,7 @@ fn run_phase_inclock(
                     continue;
                 }
             }
+            ledger.release_action(&action_devices(&p.action));
             let rec = apply_pending(fleet, &mut gov, &phase.jobs, &run_cfg, &mut lane_jobs, &p);
             if p.restore && rec.applied {
                 fault.recoveries += 1;
@@ -959,20 +1080,17 @@ fn run_phase_inclock(
             let next_ckpt = every.saturating_mul(ckpt_no + 1);
             if t >= next_ckpt {
                 ckpt_no = t / every;
-                let mut staged: Vec<PendingCkpt> = Vec::new();
                 for pin in &fleet.pins {
                     let d = pin.device;
-                    let live = gov
-                        .device(d)
-                        .is_some_and(|rt| rt.live_ctx_names().iter().any(|n| *n == pin.job));
-                    if !live
-                        || phys_link_down[d]
-                        || pending_ckpt.iter().any(|c| c.device == d)
-                        || staged.iter().any(|c| c.device == d)
-                        || pending.iter().any(|pa| action_devices(&pa.action).contains(&d))
-                    {
+                    let live = gov.device(d).is_some_and(|rt| rt.has_live_ctx(&pin.job));
+                    // Backpressure is the ticket ledger (§7f): a device
+                    // with any reservation — in-flight copy, or a staged
+                    // action about to use its link — waits for the next
+                    // cycle instead of queueing behind a barrier.
+                    if !live || phys_link_down[d] || !ledger.link_clear(d) {
                         continue;
                     }
+                    quiet = false;
                     let _ = gov.mask_device(d);
                     let leg = ckpt_leg_ns(fleet, d, pin.ckpt_bytes, phys_link_pct[d]);
                     let start_ns = gov.drain_end(d);
@@ -988,23 +1106,26 @@ fn run_phase_inclock(
                         bytes: pin.ckpt_bytes,
                         kind: TransferKind::Checkpoint,
                     });
-                    staged.push(PendingCkpt {
+                    ledger.reserve_ckpt(d);
+                    pending_ckpt.push(PendingCkpt {
                         job: pin.job.clone(),
                         device: d,
                         apply_at,
                         attempt: 0,
                     });
                 }
-                pending_ckpt.extend(staged);
             }
         }
 
         // Cadence wake: observe the window, let the policy decide, stage.
-        if t >= next_wake {
+        if wake_fires {
             wake_no += 1;
             // Heartbeat detection (§7d): faults took physical effect at
             // their instants; the governor only *learns* of them now —
             // the fleet bookkeeping lands here, latency billed.
+            if !pending_detect.is_empty() {
+                quiet = false;
+            }
             for (t_ev, ev) in pending_detect.drain(..) {
                 apply_fleet_event(fleet, &ev);
                 fault.detected += 1;
@@ -1016,12 +1137,9 @@ fn run_phase_inclock(
                     event: crate::fault::event_label(&ev),
                 });
             }
-            let lane_reports: Vec<Option<&RunReport>> = (0..ndev)
-                .map(|d| gov.device(d).map(|rt| rt.live_report()))
-                .collect();
             let frame = window_frame(
                 fleet,
-                &lane_reports,
+                |d| gov.device(d).map(|rt| rt.live_report()),
                 &lane_jobs,
                 &phase.jobs,
                 &placement.stats,
@@ -1031,7 +1149,6 @@ fn run_phase_inclock(
                 t,
                 &mut prev_arrivals,
             );
-            drop(lane_reports);
             last_wake = t;
             let actions = {
                 let ctx = PolicyCtx {
@@ -1052,6 +1169,9 @@ fn run_phase_inclock(
                 fleet: fleet.clone(),
                 actions: actions.clone(),
             });
+            if !actions.is_empty() {
+                quiet = false;
+            }
             for action in actions {
                 stage_action(
                     fleet,
@@ -1061,6 +1181,7 @@ fn run_phase_inclock(
                     t,
                     &fail_time,
                     &mut pending,
+                    &mut ledger,
                     &mut records,
                     phase_idx,
                     sink,
@@ -1070,25 +1191,37 @@ fn run_phase_inclock(
 
         // Kill-on-stall: everything is either done or drained-and-stuck,
         // nothing is staged (actions, checkpoints, undelivered
-        // detections), no failure events remain, and the policy has had a
-        // full wake to react — the stalled work is lost (the honest
-        // failure outcome: no completion records).
-        if pending.is_empty()
+        // detections), no fault events remain, and the policy has had a
+        // full horizon to react — the stalled work is lost (the honest
+        // failure outcome: no completion records). Tracked by a flag, not
+        // a counter: with empty horizons coalesced away (§7f) a stalled
+        // fleet reaches this point at most twice, so two consecutive
+        // stalled horizons *must* kill — a silent spin is a bug.
+        let stalled_now = pending.is_empty()
             && pending_ckpt.is_empty()
             && pending_detect.is_empty()
-            && timed_next >= timed.len()
+            && timed.exhausted()
             && !gov.all_done()
-            && gov.all_done_or_stalled()
-        {
-            stalled_wakes += 1;
-            if stalled_wakes >= 2 {
-                let killed = gov.kill_stalled();
-                fault.kills += killed.len() as u64;
-                stalled_wakes = 0;
-            }
+            && gov.all_done_or_stalled();
+        if stalled_now && stalled_prev {
+            let killed = gov.kill_stalled();
+            assert!(
+                !killed.is_empty(),
+                "stalled fleet with nothing to kill in phase '{}'",
+                phase.label
+            );
+            fault.kills += killed.len() as u64;
+            quiet = false;
+            stalled_prev = false;
         } else {
-            stalled_wakes = 0;
+            stalled_prev = stalled_now;
         }
+
+        // Remember whether the horizon that just closed was pure idle
+        // heartbeat — the precondition for fast-forwarding the next one.
+        // A non-wake horizon keeps the previous verdict (it can only have
+        // run because real work was due, which clears `quiet` above).
+        last_wake_idle = quiet && (wake_fires || last_wake_idle);
     }
 
     // Drain the governor's micro-events (mask/unmask, re-slice, retire,
@@ -1123,14 +1256,9 @@ fn run_phase_inclock(
     // window span stays a real duration — carrying the *phase* makespan
     // (the boundary decision and the total-span accounting read it).
     let phase_end = makespan_ns.max(last_wake.saturating_add(1));
-    let lane_reports: Vec<Option<&RunReport>> = report
-        .lanes
-        .iter()
-        .map(|lane| Some(&lane.report))
-        .collect();
     let frame = window_frame(
         fleet,
-        &lane_reports,
+        |d| report.lanes.get(d).map(|lane| &lane.report),
         &lane_jobs,
         &phase.jobs,
         &report.stats,
@@ -1140,7 +1268,6 @@ fn run_phase_inclock(
         makespan_ns,
         &mut prev_arrivals,
     );
-    drop(lane_reports);
     (report, records, frame)
 }
 
@@ -1234,6 +1361,7 @@ fn run_governed_inline_sink(
                     cfg,
                     cadence,
                     gov_cfg.ckpt_every_ns,
+                    gov_cfg.lockstep,
                     policy,
                     i,
                     phases.len(),

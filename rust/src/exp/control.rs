@@ -85,6 +85,27 @@ impl GovernedComparison {
     }
 }
 
+/// How the in-clock governor advances the fleet between horizons (§7f):
+/// event-driven through the component scheduler (the default everywhere),
+/// or the historical lockstep sweep kept alive as the differential
+/// oracle. The `_stepped` scenario variants take this so the determinism
+/// and property suites can byte-compare the two modes on the real
+/// scenarios end to end.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stepping {
+    EventDriven,
+    Lockstep,
+}
+
+impl Stepping {
+    fn apply(self, cfg: GovernorConfig) -> GovernorConfig {
+        match self {
+            Stepping::EventDriven => cfg,
+            Stepping::Lockstep => cfg.with_lockstep(),
+        }
+    }
+}
+
 fn control_cfg(proto: &Protocol, place: PlacePolicy) -> ControlConfig {
     ControlConfig {
         run: ClusterRunConfig {
@@ -226,6 +247,16 @@ pub fn bursty_reslice_inline_traced(
     proto: &Protocol,
     trace: &TraceConfig,
 ) -> (GovernedComparison, TraceLog) {
+    bursty_reslice_inline_stepped(proto, trace, Stepping::EventDriven)
+}
+
+/// [`bursty_reslice_inline_traced`] with the stepping mode explicit — the
+/// lockstep-vs-event-driven oracle runs the in-clock leg both ways.
+pub fn bursty_reslice_inline_stepped(
+    proto: &Protocol,
+    trace: &TraceConfig,
+    stepping: Stepping,
+) -> (GovernedComparison, TraceLog) {
     let calib = BurstyCalib::new(proto);
     let spec = calib.spec.clone();
     // ~1.2 s of 2×-overloaded arrivals: enough that serving the tail on
@@ -250,7 +281,7 @@ pub fn bursty_reslice_inline_traced(
         &phases,
         &mut inline_policy,
         &cfg,
-        &GovernorConfig::cadence(cadence),
+        &stepping.apply(GovernorConfig::cadence(cadence)),
         trace,
     );
     log.scenario = "bursty-reslice-inline".to_string();
@@ -412,6 +443,12 @@ pub fn failure_migrate(proto: &Protocol) -> GovernedComparison {
 /// from scratch in the next phase. Both runs use the same in-clock
 /// driver and cadence; only the policy differs.
 pub fn failure_migrate_inline(proto: &Protocol) -> GovernedComparison {
+    failure_migrate_inline_stepped(proto, Stepping::EventDriven)
+}
+
+/// [`failure_migrate_inline`] with the stepping mode explicit — both
+/// in-clock legs (governed and static) run under the same mode.
+pub fn failure_migrate_inline_stepped(proto: &Protocol, stepping: Stepping) -> GovernedComparison {
     let spec = ClusterSpec::parse("2xa100:mps").expect("valid spec");
     let steps = proto.train_steps.max(6);
     let total = steps * 2;
@@ -452,7 +489,7 @@ pub fn failure_migrate_inline(proto: &Protocol) -> GovernedComparison {
         &governed_phases,
         &mut policy,
         &cfg,
-        &GovernorConfig::cadence(cadence),
+        &stepping.apply(GovernorConfig::cadence(cadence)),
     );
 
     let static_phases = vec![
@@ -474,7 +511,7 @@ pub fn failure_migrate_inline(proto: &Protocol) -> GovernedComparison {
         &static_phases,
         &mut StaticPolicy,
         &cfg,
-        &GovernorConfig::cadence(cadence),
+        &stepping.apply(GovernorConfig::cadence(cadence)),
     );
     GovernedComparison {
         scenario: "failure-migrate-inline",
@@ -619,8 +656,9 @@ impl ChaosCalib {
     /// heartbeat cadence, periodic checkpoints every `ckpt_every` — the
     /// whole scenario is the single chaos phase (the restore completes
     /// the trainer in-phase).
-    fn governed_run(&self, ckpt_every: SimTime) -> ControlReport {
-        self.governed_run_traced(ckpt_every, &TraceConfig::disabled()).0
+    fn governed_run(&self, ckpt_every: SimTime, stepping: Stepping) -> ControlReport {
+        self.governed_run_traced(ckpt_every, &TraceConfig::disabled(), stepping)
+            .0
     }
 
     /// [`Self::governed_run`] with the flight recorder attached.
@@ -628,6 +666,7 @@ impl ChaosCalib {
         &self,
         ckpt_every: SimTime,
         trace: &TraceConfig,
+        stepping: Stepping,
     ) -> (ControlReport, TraceLog) {
         let phases = vec![self.phase0.clone()];
         let mut fleet = self.fleet();
@@ -637,7 +676,7 @@ impl ChaosCalib {
             &phases,
             &mut policy,
             &self.cfg,
-            &GovernorConfig::cadence(self.cadence).with_checkpoint(ckpt_every),
+            &stepping.apply(GovernorConfig::cadence(self.cadence).with_checkpoint(ckpt_every)),
             trace,
         )
     }
@@ -672,8 +711,18 @@ pub fn chaos_recovery_traced(
     proto: &Protocol,
     trace: &TraceConfig,
 ) -> (GovernedComparison, TraceLog) {
+    chaos_recovery_stepped(proto, trace, Stepping::EventDriven)
+}
+
+/// [`chaos_recovery_traced`] with the stepping mode explicit — both
+/// in-clock legs (governed storm and static restart) run under it.
+pub fn chaos_recovery_stepped(
+    proto: &Protocol,
+    trace: &TraceConfig,
+    stepping: Stepping,
+) -> (GovernedComparison, TraceLog) {
     let calib = ChaosCalib::new(proto);
-    let (governed, mut log) = calib.governed_run_traced((calib.span / 6).max(1), trace);
+    let (governed, mut log) = calib.governed_run_traced((calib.span / 6).max(1), trace, stepping);
     log.scenario = "chaos-recovery".to_string();
     let static_phases = vec![
         calib.phase0.clone(),
@@ -692,7 +741,7 @@ pub fn chaos_recovery_traced(
         &static_phases,
         &mut StaticPolicy,
         &calib.cfg,
-        &GovernorConfig::cadence(calib.cadence),
+        &stepping.apply(GovernorConfig::cadence(calib.cadence)),
     );
     (
         GovernedComparison {
@@ -746,6 +795,11 @@ impl CheckpointSweep {
 /// all the trainer's work at the failure instant is lost, exactly the
 /// static world's bill.
 pub fn checkpoint_cadence_sweep(proto: &Protocol) -> CheckpointSweep {
+    checkpoint_cadence_sweep_stepped(proto, Stepping::EventDriven)
+}
+
+/// [`checkpoint_cadence_sweep`] with the stepping mode explicit.
+pub fn checkpoint_cadence_sweep_stepped(proto: &Protocol, stepping: Stepping) -> CheckpointSweep {
     let calib = ChaosCalib::new(proto);
     let cadences = [
         (calib.span / 12).max(1),
@@ -756,7 +810,7 @@ pub fn checkpoint_cadence_sweep(proto: &Protocol) -> CheckpointSweep {
     let points = cadences
         .iter()
         .map(|&c| {
-            let rep = calib.governed_run(c);
+            let rep = calib.governed_run(c, stepping);
             CadencePoint {
                 cadence_ns: c,
                 total_span_ns: rep.total_span_ns,

@@ -33,9 +33,24 @@ thread_local! {
     static IN_POOL: Cell<bool> = const { Cell::new(false) };
 }
 
+/// Is the current thread a fan-out (or governor step-pool) worker?
+/// Nested parallel layers consult this to degrade to serial execution
+/// rather than oversubscribe the machine.
+pub(crate) fn in_worker() -> bool {
+    IN_POOL.with(|c| c.get())
+}
+
+/// Mark the current thread as a pool worker (see [`in_worker`]); called
+/// once from each governor step-pool thread at spawn.
+pub(crate) fn mark_worker_thread() {
+    IN_POOL.with(|c| c.set(true));
+}
+
 /// Worker-thread budget: `GPUSHARE_JOBS` override, else the number of
-/// available cores (one independent simulation per core).
-fn fanout_workers() -> usize {
+/// available cores (one independent simulation per core). Shared with
+/// the governor's persistent [`crate::sched::governor`] step pool so
+/// both layers size against the same budget.
+pub(crate) fn fanout_workers() -> usize {
     if let Ok(v) = std::env::var("GPUSHARE_JOBS") {
         if let Ok(n) = v.trim().parse::<usize>() {
             return n.max(1);

@@ -157,6 +157,55 @@ pub fn event_label(ev: &FleetEvent) -> String {
     format!("{ev:?}")
 }
 
+/// Cursor over a phase's timed fleet events, in delivery order — the
+/// §7f component scheduler's view of the fault schedule. The next
+/// undelivered instant ([`TimedEvents::peek_at`]) is one of the
+/// conservative-lookahead horizon terms: a device may advance past a
+/// governor wake, but never past the next scripted fault that could
+/// touch it. (A fault's *detection* needs no horizon term of its own:
+/// the physical effect lands here at the instant, and governor belief
+/// is billed at the next heartbeat wake, which is always a horizon
+/// term already — §7d.)
+#[derive(Clone, Debug)]
+pub struct TimedEvents {
+    events: Vec<(SimTime, FleetEvent)>,
+    next: usize,
+}
+
+impl TimedEvents {
+    /// Build from a phase's `timed_events` (stable-sorted by instant, so
+    /// a scripted plan's same-instant ordering is preserved).
+    pub fn new(mut events: Vec<(SimTime, FleetEvent)>) -> TimedEvents {
+        events.sort_by_key(|&(t, _)| t);
+        TimedEvents { events, next: 0 }
+    }
+
+    /// Instant of the next undelivered event, if any.
+    pub fn peek_at(&self) -> Option<SimTime> {
+        self.events.get(self.next).map(|&(t, _)| t)
+    }
+
+    /// Deliver the next event if it is due at or before `t`.
+    pub fn next_due(&mut self, t: SimTime) -> Option<(SimTime, FleetEvent)> {
+        let &(at, ev) = self.events.get(self.next)?;
+        if at > t {
+            return None;
+        }
+        self.next += 1;
+        Some((at, ev))
+    }
+
+    /// All events delivered?
+    pub fn exhausted(&self) -> bool {
+        self.next >= self.events.len()
+    }
+
+    /// Events not yet delivered.
+    pub fn remaining(&self) -> usize {
+        self.events.len() - self.next
+    }
+}
+
 /// A convenient default mean inter-arrival for chaos sweeps: one fault
 /// every ~5 ms of simulated time — dense enough to exercise every path in
 /// a short phase, sparse enough that recovery can land between faults.
@@ -217,5 +266,27 @@ mod tests {
         let phase = plan.apply_to(PhaseSpec::new("p", Vec::new()));
         assert_eq!(phase.timed_events.len(), 3);
         assert_eq!(phase.timed_events[2], (9 * MS, FleetEvent::FailDevice(1)));
+    }
+
+    #[test]
+    fn timed_events_cursor_delivers_in_order_and_peeks_the_horizon() {
+        let mut cur = TimedEvents::new(vec![
+            (9 * MS, FleetEvent::FailDevice(1)),
+            (2 * MS, FleetEvent::LinkDown(0)),
+            (2 * MS, FleetEvent::LinkUp(0)),
+        ]);
+        assert_eq!(cur.remaining(), 3);
+        assert_eq!(cur.peek_at(), Some(2 * MS));
+        assert_eq!(cur.next_due(MS), None, "nothing due before 2 ms");
+        // same-instant events keep their given order (stable sort)
+        assert_eq!(cur.next_due(2 * MS), Some((2 * MS, FleetEvent::LinkDown(0))));
+        assert_eq!(cur.next_due(2 * MS), Some((2 * MS, FleetEvent::LinkUp(0))));
+        assert_eq!(cur.next_due(2 * MS), None);
+        assert_eq!(cur.peek_at(), Some(9 * MS));
+        assert!(!cur.exhausted());
+        assert_eq!(cur.next_due(SimTime::MAX), Some((9 * MS, FleetEvent::FailDevice(1))));
+        assert!(cur.exhausted());
+        assert_eq!(cur.peek_at(), None);
+        assert_eq!(cur.remaining(), 0);
     }
 }

@@ -540,6 +540,45 @@ impl DeviceRt {
         self.started && !self.finished && self.events.is_empty()
     }
 
+    /// Earliest time at which this device can do anything on its own —
+    /// the §7f component-scheduler key. `None` means the device will
+    /// never act again without governor intervention: finished, or
+    /// stalled with an empty queue (a masked drain that ran dry). An
+    /// unstarted device reports `Some(0)`: its initial Poll events land
+    /// at t=0 the moment it is first stepped. The returned time is a
+    /// conservative bound — the device may do *nothing* before it, and
+    /// the bound only moves by stepping the device or by governor
+    /// mutation (unmask/admit/re-slice), after which callers must
+    /// re-query (see `GovernorRt::refresh`).
+    pub fn next_event_at(&self) -> Option<SimTime> {
+        if self.finished {
+            None
+        } else if !self.started {
+            Some(0)
+        } else {
+            self.events.peek_time()
+        }
+    }
+
+    /// Advance the clock to `t` without processing anything — the §7f
+    /// skip path for a device whose next event lies beyond the horizon.
+    /// Semantically identical to `step_until(t)` when no event is due
+    /// (same tail: clock bump only), minus the queue peek; the
+    /// debug assertions pin that equivalence. Finished devices must not
+    /// be skipped: `step_until` leaves their clock at the final event.
+    pub fn skip_to(&mut self, t: SimTime) {
+        debug_assert!(self.started, "skip_to on an unstarted device");
+        debug_assert!(!self.finished, "skip_to on a finished device");
+        debug_assert!(
+            self.events.peek_time().map_or(true, |e| e > t),
+            "skip_to({t}) would leap over a pending event at {:?}",
+            self.events.peek_time()
+        );
+        if t < SimTime::MAX && self.now < t {
+            self.now = t;
+        }
+    }
+
     /// Process every event with timestamp ≤ `until`, then (for finite
     /// horizons) advance the clock to `until` so state injected by an
     /// in-clock governor (masks, admitted contexts, live re-slices) is
@@ -1856,6 +1895,15 @@ impl DeviceRt {
             self.kernels[kid].occ = occ;
         }
         Ok(())
+    }
+
+    /// Allocation-free liveness probe for one named context — the hot
+    /// per-iteration check the in-clock driver runs per pinned job
+    /// (where [`DeviceRt::live_ctx_names`] would clone every name).
+    pub fn has_live_ctx(&self, name: &str) -> bool {
+        self.ctxs
+            .iter()
+            .any(|c| c.state != CtxState::Done && c.name == name)
     }
 
     /// Names of the contexts that have not completed (the kill-on-stall

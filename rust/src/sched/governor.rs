@@ -8,12 +8,22 @@
 //!
 //! The contract with [`DeviceRt`] is narrow and deterministic:
 //!
-//! * [`GovernorRt::advance_to`] steps every device to the next governor
-//!   event time. Devices are mutually independent between governor events
-//!   (they share nothing but the governor itself), so stepping them
-//!   serially or one-per-worker-thread is observationally identical — the
-//!   §8a fan-out rule extends through the in-clock loop, and the
-//!   determinism guard asserts it byte-for-byte.
+//! * [`GovernorRt::step_to_horizon`] advances the fleet to the next
+//!   governor event time as a discrete-event *component scheduler*
+//!   (DESIGN.md §7f): a min-heap of `(next_event_at, device)` picks out
+//!   only the devices with an event due at or before the horizon; those
+//!   are stepped (through a persistent worker pool when parallel), and
+//!   every other live device just gets its clock bumped — no boxed job,
+//!   no `step_until` call, no thread handoff. Devices are mutually
+//!   independent between governor events (they share nothing but the
+//!   governor itself), so stepping only the busy subset — serially or
+//!   one-per-worker — is observationally identical to the historical
+//!   lockstep sweep: a `step_until(t)` on a device with no event ≤ `t`
+//!   is provably a clock bump. [`GovernorRt::advance_to`] keeps that
+//!   lockstep sweep alive (O(N) scan, never the heap) as the
+//!   differential oracle, and the §8a fan-out rule extends through the
+//!   in-clock loop with the determinism guard asserting both modes
+//!   byte-for-byte.
 //! * Drain is *masked dispatch*: [`GovernorRt::mask_device`] stops new
 //!   block admission; resident cohorts run to completion, and their max
 //!   finish time ([`GovernorRt::drain_end`]) is exact because masking
@@ -31,12 +41,14 @@
 //! policy layer.
 
 use super::engine::{CtxDef, DeviceRt};
+use super::pool::StepPool;
 use crate::bail;
-use crate::exp::{run_parallel, Job};
 use crate::gpu::partition::MigProfile;
 use crate::metrics::RunReport;
 use crate::sim::SimTime;
 use crate::util::error::Result;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// What a recorded governor micro-event did (see [`GovEvent`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -71,27 +83,79 @@ pub struct GovEvent {
     pub detail: String,
 }
 
-/// A fleet of live device runtimes stepped in lockstep between governor
-/// events. `None` slots are idle devices (nothing was placed on them).
+/// A fleet of live device runtimes advanced between governor events by
+/// the §7f component scheduler. `None` slots are idle devices (nothing
+/// was placed on them).
 pub struct GovernorRt {
     rts: Vec<Option<DeviceRt>>,
     parallel: bool,
+    /// Differential-oracle mode: step every live device to every horizon
+    /// (the pre-§7f lockstep behavior), computing the busy set by O(N)
+    /// scan so the oracle never trusts the heap it is checking.
+    lockstep: bool,
     now: SimTime,
+    /// `(next_event_at, device)` min-heap with lazy deletion: entries go
+    /// stale when a device is stepped or mutated; stale-late entries are
+    /// dropped or re-armed on pop, and `busy_mark` dedups a device armed
+    /// more than once. The invariant the mutators maintain is one-sided:
+    /// an unfinished device with pending events always has *at least*
+    /// one entry (possibly early), never zero.
+    heap: BinaryHeap<Reverse<(SimTime, usize)>>,
+    /// Persistent step workers, created lazily on the first parallel
+    /// multi-device wake and reused for the rest of the run.
+    pool: Option<StepPool>,
+    /// Per-wake scratch (busy device list), reused allocation-free.
+    scratch_busy: Vec<usize>,
+    /// Per-wake dedup marks, one per device slot.
+    busy_mark: Vec<bool>,
     /// Micro-event buffer; empty unless `recording`. Lives on the
-    /// governor (not the worker closures), so the parallel fan-out in
-    /// `advance_to` never touches it.
+    /// governor (not the step workers), so pooled stepping never
+    /// touches it.
     events: Vec<GovEvent>,
     recording: bool,
 }
 
 impl GovernorRt {
     pub fn new(rts: Vec<Option<DeviceRt>>, parallel: bool) -> GovernorRt {
-        GovernorRt {
+        let ndev = rts.len();
+        let mut gov = GovernorRt {
             rts,
             parallel,
+            lockstep: false,
             now: 0,
+            heap: BinaryHeap::with_capacity(ndev),
+            pool: None,
+            scratch_busy: Vec::with_capacity(ndev),
+            busy_mark: vec![false; ndev],
             events: Vec::new(),
             recording: false,
+        };
+        for d in 0..ndev {
+            gov.refresh(d);
+        }
+        gov
+    }
+
+    /// Switch to lockstep stepping — the pre-§7f behavior kept as the
+    /// differential oracle ([`GovernorRt::step_to_horizon`] then steps
+    /// every live device to every horizon, busy set by O(N) scan). The
+    /// two modes are byte-identical on every governed scenario; the
+    /// determinism and property suites assert it.
+    pub fn set_lockstep(&mut self, on: bool) {
+        self.lockstep = on;
+    }
+
+    /// Re-arm device `d`'s heap entry from its current `next_event_at`.
+    /// Called after construction, after stepping, and after any governor
+    /// mutation that can schedule new device events (unmask, re-slice,
+    /// admit, retire, spare bring-up): the heap tolerates stale *early*
+    /// entries (lazy deletion re-arms them) but never discovers missing
+    /// ones on its own.
+    fn refresh(&mut self, d: usize) {
+        if let Some(Some(rt)) = self.rts.get(d) {
+            if let Some(at) = rt.next_event_at() {
+                self.heap.push(Reverse((at, d)));
+            }
         }
     }
 
@@ -140,35 +204,170 @@ impl GovernorRt {
         }
     }
 
-    /// Step every device to `t` — one device per worker thread when
-    /// `parallel` (results byte-identical either way; devices only
-    /// interact through the governor, which is quiescent during a step).
+    /// Step every live device with pending events to `t` — the lockstep
+    /// sweep, kept as the historical API and the differential oracle for
+    /// [`GovernorRt::step_to_horizon`]. Devices that can do nothing
+    /// (finished, or stalled under a mask) are no longer boxed into jobs:
+    /// stalled ones get a clock bump, finished ones are untouched, and
+    /// the fan-out runs only when more than one device is actually busy.
     pub fn advance_to(&mut self, t: SimTime) {
         assert!(t >= self.now, "governor clock may not rewind");
         self.now = t;
-        let live = self.rts.iter().filter(|r| r.is_some()).count();
-        if self.parallel && live > 1 {
-            let rts = std::mem::take(&mut self.rts);
-            let jobs: Vec<Job<'static, Option<DeviceRt>>> = rts
-                .into_iter()
-                .map(|mut slot| {
-                    let job: Job<'static, Option<DeviceRt>> = Box::new(move || {
-                        if let Some(rt) = slot.as_mut() {
-                            rt.step_until(t);
-                        }
-                        slot
-                    });
-                    job
-                })
-                .collect();
-            self.rts = run_parallel(jobs);
-        } else {
-            for slot in self.rts.iter_mut() {
-                if let Some(rt) = slot.as_mut() {
-                    rt.step_until(t);
+        self.lockstep_sweep(t);
+    }
+
+    /// Advance the fleet to horizon `t`, stepping only the devices with
+    /// an event due at or before `t` (DESIGN.md §7f). The caller owns the
+    /// conservative-lookahead contract: `t` must not exceed the earliest
+    /// time the governor itself could affect a device (next wake, next
+    /// timed fault, next staged completion). Under that contract this is
+    /// observationally identical to the lockstep sweep — every elided
+    /// `step_until` call would have processed zero events — and the
+    /// determinism suite asserts the equivalence byte-for-byte. In
+    /// lockstep mode ([`GovernorRt::set_lockstep`]) this *is* the sweep.
+    pub fn step_to_horizon(&mut self, t: SimTime) {
+        assert!(t >= self.now, "governor clock may not rewind");
+        self.now = t;
+        if self.lockstep {
+            self.lockstep_sweep(t);
+            return;
+        }
+        let mut busy = std::mem::take(&mut self.scratch_busy);
+        busy.clear();
+        while let Some(&Reverse((at, d))) = self.heap.peek() {
+            if at > t {
+                break;
+            }
+            self.heap.pop();
+            if self.busy_mark[d] {
+                continue; // duplicate entry for a device already claimed
+            }
+            let Some(Some(rt)) = self.rts.get(d) else {
+                continue; // stale: slot emptied since the entry was armed
+            };
+            match rt.next_event_at() {
+                // stale: finished or stalled since armed; a mutator
+                // (unmask/admit) re-arms it if it ever wakes again
+                None => {}
+                // stale-early: re-arm at the device's true next time
+                Some(cur) if cur > t => self.heap.push(Reverse((cur, d))),
+                Some(_) => {
+                    self.busy_mark[d] = true;
+                    busy.push(d);
                 }
             }
         }
+        #[cfg(debug_assertions)]
+        {
+            // Cross-check the heap against first principles: exactly the
+            // live devices with an event due ≤ t must be stepped.
+            let expect: Vec<usize> = self
+                .rts
+                .iter()
+                .enumerate()
+                .filter_map(|(d, slot)| {
+                    let rt = slot.as_ref()?;
+                    match rt.next_event_at() {
+                        Some(at) if at <= t => Some(d),
+                        _ => None,
+                    }
+                })
+                .collect();
+            let mut got = busy.clone();
+            got.sort_unstable();
+            assert_eq!(
+                got, expect,
+                "component heap diverged from device truth at t={t}"
+            );
+        }
+        // Skipped-but-live devices still follow the governor clock
+        // (drain_end and admissions are computed against it); finished
+        // devices keep theirs at the final event, exactly as step_until
+        // would have left them.
+        for (d, slot) in self.rts.iter_mut().enumerate() {
+            if self.busy_mark[d] {
+                continue;
+            }
+            if let Some(rt) = slot.as_mut() {
+                if !rt.finished() {
+                    rt.skip_to(t);
+                }
+            }
+        }
+        self.step_busy(&busy, t);
+        for &d in &busy {
+            self.busy_mark[d] = false;
+            self.refresh(d);
+        }
+        self.scratch_busy = busy;
+    }
+
+    /// The lockstep busy set and sweep: O(N) scan, deliberately blind to
+    /// the heap, so oracle runs validate the event-driven path instead of
+    /// inheriting its bookkeeping.
+    fn lockstep_sweep(&mut self, t: SimTime) {
+        let mut busy = std::mem::take(&mut self.scratch_busy);
+        busy.clear();
+        for (d, slot) in self.rts.iter_mut().enumerate() {
+            let Some(rt) = slot.as_mut() else { continue };
+            if rt.finished() {
+                continue;
+            }
+            if rt.next_event_at().is_some() {
+                busy.push(d);
+            } else {
+                rt.skip_to(t); // stalled: clock bump only
+            }
+        }
+        self.step_busy(&busy, t);
+        self.scratch_busy = busy;
+    }
+
+    /// Step the busy set to `t`: through the persistent worker pool when
+    /// parallel and more than one device has work, serially in place
+    /// otherwise (a 0- or 1-device wake never pays for threads).
+    fn step_busy(&mut self, busy: &[usize], t: SimTime) {
+        let use_pool = self.parallel && busy.len() > 1 && !crate::exp::in_worker();
+        if use_pool && self.pool.is_none() {
+            let workers = crate::exp::fanout_workers().min(self.rts.len());
+            if workers > 1 {
+                self.pool = Some(StepPool::new(workers));
+            } else {
+                // One core: pooling cannot help this fleet; stop asking.
+                self.parallel = false;
+            }
+        }
+        match (use_pool, self.pool.as_ref()) {
+            (true, Some(pool)) => {
+                for &d in busy {
+                    let rt = self.rts[d].take().expect("busy device has no runtime");
+                    pool.dispatch(d, rt, t);
+                }
+                for _ in 0..busy.len() {
+                    let (d, rt) = pool.collect();
+                    self.rts[d] = Some(rt);
+                }
+            }
+            _ => {
+                for &d in busy {
+                    if let Some(rt) = self.rts[d].as_mut() {
+                        rt.step_until(t);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Earliest pending event across the fleet (`None` when no device
+    /// can act without governor intervention) — the driver's guard for
+    /// fast-forwarding over empty wakes. Reads live device truth, not
+    /// the heap (which may hold stale entries).
+    pub fn earliest_device_event(&self) -> Option<SimTime> {
+        self.rts
+            .iter()
+            .flatten()
+            .filter_map(DeviceRt::next_event_at)
+            .min()
     }
 
     /// Every device completed its work (idle devices count as done).
@@ -196,9 +395,11 @@ impl GovernorRt {
     }
 
     /// Re-open dispatch on device `d`; placement re-runs immediately at
-    /// the device's current clock.
+    /// the device's current clock. Re-arms the component heap: unmasking
+    /// is exactly how a stalled (entry-less) device comes back to life.
     pub fn unmask_device(&mut self, d: usize) -> Result<()> {
         self.device_mut(d)?.set_dispatch_mask(false);
+        self.refresh(d);
         self.record(d, GovEventKind::Unmask, String::new);
         Ok(())
     }
@@ -212,6 +413,7 @@ impl GovernorRt {
     /// Live re-slice of a drained device (see [`DeviceRt::reslice_live`]).
     pub fn reslice(&mut self, d: usize, to: MigProfile) -> Result<()> {
         self.device_mut(d)?.reslice_live(to)?;
+        self.refresh(d);
         self.record(d, GovEventKind::Reslice, || format!("{to:?}"));
         Ok(())
     }
@@ -232,6 +434,10 @@ impl GovernorRt {
             Some(slot) => {
                 if slot.is_none() {
                     *slot = Some(DeviceRt::new_idle(cfg));
+                    // A fresh spare must enter the heap or the
+                    // event-driven path would never step (and so never
+                    // finish) it.
+                    self.refresh(d);
                 }
                 Ok(())
             }
@@ -247,6 +453,7 @@ impl GovernorRt {
             String::new()
         };
         let idx = self.device_mut(d)?.admit_ctx(def, at)?;
+        self.refresh(d);
         self.record(d, GovEventKind::Admit, || job);
         Ok(idx)
     }
@@ -543,5 +750,107 @@ mod tests {
         rt0.set_straggler(0, 400, 7);
         rt0.step_until(SimTime::MAX);
         assert_eq!(rt0.straggler_hits(), 0);
+    }
+
+    #[test]
+    fn event_driven_matches_lockstep_byte_for_byte() {
+        // The §7f core claim: stepping only heap-due devices to each
+        // horizon produces the same fleet, byte for byte, as the
+        // lockstep sweep (which steps everything, scanning — never
+        // consulting the heap).
+        let run = |lockstep: bool| {
+            let rts = vec![Some(train_rt(3, 7)), None, Some(train_rt(2, 13))];
+            let mut gov = GovernorRt::new(rts, false);
+            gov.set_lockstep(lockstep);
+            let mut t = 0;
+            while !gov.all_done() {
+                t += 5 * MS;
+                gov.step_to_horizon(t);
+                assert!(t < 600_000 * MS, "runaway stepping");
+            }
+            gov.into_reports()
+                .into_iter()
+                .map(|r| r.map(|r| r.to_json()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn pooled_and_serial_event_driven_agree() {
+        // Same fleet through the persistent step pool and serially:
+        // results are re-slotted by device tag, so completion order
+        // never leaks (§8a through the pool).
+        let run = |parallel: bool| {
+            let rts = vec![Some(train_rt(2, 1)), None, Some(train_rt(2, 2))];
+            let mut gov = GovernorRt::new(rts, parallel);
+            let mut t = 0;
+            while !gov.all_done() {
+                t += 10 * MS;
+                gov.step_to_horizon(t);
+                assert!(t < 600_000 * MS, "runaway stepping");
+            }
+            gov.into_reports()
+                .into_iter()
+                .map(|r| r.map(|r| r.to_json()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn unmask_rearms_the_component_heap() {
+        // A stalled device has no heap entry (next_event_at is None); if
+        // unmask_device failed to re-arm it, the event-driven path would
+        // skip the device forever. Also checks the skip path bumps the
+        // stalled device's clock — drain_end and admissions read it.
+        let mut gov = GovernorRt::new(vec![Some(train_rt(2, 9))], false);
+        gov.step_to_horizon(2 * MS);
+        gov.mask_device(0).unwrap();
+        let mut t = gov.now();
+        while !gov.all_done_or_stalled() {
+            t += MS;
+            gov.step_to_horizon(t);
+            assert!(t < 600_000 * MS, "masked device never stalled");
+        }
+        assert!(gov.device(0).unwrap().next_event_at().is_none());
+        let far = gov.now() + 50 * MS;
+        gov.step_to_horizon(far);
+        assert_eq!(
+            gov.device(0).unwrap().now(),
+            far,
+            "skipped stalled device must still follow the governor clock"
+        );
+        gov.unmask_device(0).unwrap();
+        let mut t = gov.now();
+        while !gov.all_done() {
+            t += 10 * MS;
+            gov.step_to_horizon(t);
+            assert!(t < 600_000 * MS, "device never finished after unmask");
+        }
+        let rep = gov.into_reports().pop().unwrap().unwrap();
+        assert!(rep.train_done.is_some());
+        assert!(rep.oom.is_none(), "{:?}", rep.oom);
+    }
+
+    #[test]
+    fn earliest_device_event_tracks_fleet_truth() {
+        let mut gov = GovernorRt::new(vec![Some(train_rt(2, 9)), None], false);
+        // unstarted fleet: earliest event is the initial poll at 0
+        assert_eq!(gov.earliest_device_event(), Some(0));
+        gov.step_to_horizon(MS);
+        let next = gov.earliest_device_event().expect("live device has events");
+        assert!(next > 0);
+        assert_eq!(next, gov.device(0).unwrap().next_event_at().unwrap());
+        // a stalled fleet reports None: nothing can happen without the
+        // governor, which is exactly when the driver may fast-forward
+        gov.mask_device(0).unwrap();
+        let mut t = gov.now();
+        while !gov.all_done_or_stalled() {
+            t += MS;
+            gov.step_to_horizon(t);
+            assert!(t < 600_000 * MS, "masked device never stalled");
+        }
+        assert_eq!(gov.earliest_device_event(), None);
     }
 }

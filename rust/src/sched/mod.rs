@@ -6,6 +6,7 @@ pub mod contention;
 pub mod engine;
 pub mod governor;
 pub mod mechanism;
+mod pool;
 
 pub use contention::ContentionModel;
 pub use engine::{run, CtxDef, DeviceRt, Engine, EngineConfig};

@@ -1,0 +1,88 @@
+//! Persistent step-worker pool for the §7f component scheduler: long-lived
+//! threads that step [`DeviceRt`]s to a horizon, reused across governor
+//! wakes. Replaces the per-wake scoped-thread spawn of the old lockstep
+//! `advance_to` — steady-state per-wake cost is two channel sends per busy
+//! device, with no boxed jobs and no thread creation.
+//!
+//! Determinism: workers pull jobs in arrival order but finish in any
+//! order; the governor re-slots each returned device by its tag, so
+//! completion order never leaks into results (the §8a fan-out rule).
+
+use super::engine::DeviceRt;
+use crate::sim::SimTime;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+pub(crate) struct StepPool {
+    /// `Some` until drop; closing the channel is the shutdown signal.
+    job_tx: Option<Sender<(usize, DeviceRt, SimTime)>>,
+    done_rx: Receiver<(usize, DeviceRt)>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl StepPool {
+    /// Spawn `workers` long-lived step threads. Callers size this from
+    /// `crate::exp::fanout_workers()` capped by fleet width, and should
+    /// not build a pool at all for `workers <= 1`.
+    pub(crate) fn new(workers: usize) -> StepPool {
+        let (job_tx, job_rx) = channel::<(usize, DeviceRt, SimTime)>();
+        let (done_tx, done_rx) = channel();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = Arc::clone(&job_rx);
+                let tx = done_tx.clone();
+                std::thread::spawn(move || {
+                    // Nested fan-out inside a pooled step degrades to
+                    // serial instead of oversubscribing the machine.
+                    crate::exp::mark_worker_thread();
+                    loop {
+                        // The receiver lock is held across the blocking
+                        // recv (one waiter at a time takes a job); the
+                        // step itself runs unlocked and concurrent.
+                        let job = rx.lock().expect("step pool lock poisoned").recv();
+                        let Ok((slot, mut rt, horizon)) = job else {
+                            break; // channel closed: shutdown
+                        };
+                        rt.step_until(horizon);
+                        if tx.send((slot, rt)).is_err() {
+                            break; // governor dropped mid-step: shutdown
+                        }
+                    }
+                })
+            })
+            .collect();
+        StepPool {
+            job_tx: Some(job_tx),
+            done_rx,
+            handles,
+        }
+    }
+
+    /// Hand a device to the pool to be stepped to `horizon`. It comes
+    /// back, same `slot` tag, through [`StepPool::collect`].
+    pub(crate) fn dispatch(&self, slot: usize, rt: DeviceRt, horizon: SimTime) {
+        self.job_tx
+            .as_ref()
+            .expect("step pool already shut down")
+            .send((slot, rt, horizon))
+            .expect("step worker exited early");
+    }
+
+    /// Receive one stepped device (completion order — the caller must
+    /// re-slot by the tag and must collect exactly as many devices as it
+    /// dispatched before touching the fleet again).
+    pub(crate) fn collect(&self) -> (usize, DeviceRt) {
+        self.done_rx.recv().expect("step worker exited early")
+    }
+}
+
+impl Drop for StepPool {
+    fn drop(&mut self) {
+        self.job_tx = None; // close the job channel: workers drain and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

@@ -86,6 +86,15 @@ impl<E> EventQueue<E> {
         self.heap.peek().map(|Reverse(e)| e.time)
     }
 
+    /// Highest time ever popped — the no-time-travel floor every
+    /// subsequent [`EventQueue::push`] is checked against. The §7f
+    /// component scheduler reads it as the conservative "this queue
+    /// cannot produce anything earlier" bound: `peek_time()` (when an
+    /// event is pending) is always ≥ the watermark.
+    pub fn watermark(&self) -> SimTime {
+        self.watermark
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -168,6 +177,25 @@ mod tests {
         assert_eq!(q.pop(), Some((5, "c")));
         assert_eq!(q.pop(), Some((5, "d")));
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn peek_time_agrees_with_watermark_after_clear() {
+        let mut q = EventQueue::new();
+        q.push(40, ());
+        q.push(90, ());
+        q.pop();
+        assert_eq!(q.watermark(), 40);
+        // The conservative bound §7f relies on: whatever is pending is
+        // never earlier than the watermark.
+        assert!(q.peek_time().unwrap() >= q.watermark());
+        q.clear();
+        // After clear() both rewind together: nothing pending, floor at 0.
+        assert_eq!(q.watermark(), 0);
+        assert_eq!(q.peek_time(), None);
+        q.push(3, ());
+        assert_eq!(q.peek_time(), Some(3));
+        assert!(q.peek_time().unwrap() >= q.watermark());
     }
 
     #[test]

@@ -30,6 +30,14 @@
 //! dropped on overflow, a stateful policy (one that learns from its
 //! first frames) cannot be replayed faithfully — `TraceLog::dropped`
 //! says so, and the CI gate runs with a capacity that never overflows.
+//!
+//! **Stepping-mode invariance (§7f).** Every timestamp in a trace comes
+//! from a device clock or the governor clock, and the event-driven
+//! component scheduler perturbs neither: devices skipped as provably
+//! idle advance by the same clock write their elided `step_until` would
+//! have been, and coalesced wakes are exactly the wakes that emitted no
+//! events. Traces are therefore byte-identical under event-driven and
+//! lockstep stepping — asserted by the §7f differential oracle.
 
 pub mod replay;
 

@@ -241,6 +241,62 @@ fn chaos_scenarios_fanout_byte_identical() {
 }
 
 #[test]
+fn event_driven_stepping_matches_lockstep_byte_identical() {
+    // The §7f differential oracle, end to end: every governed in-clock
+    // scenario — bursty re-slice, mid-phase failure migration, the chaos
+    // storm, and the checkpoint-cadence sweep — must serialize
+    // byte-identically whether the governor steps the fleet event-driven
+    // (component heap, conservative lookahead, skipped idle devices) or
+    // in the historical lockstep sweep. Any divergence means the
+    // component scheduler stepped a device it shouldn't have skipped, or
+    // skipped one it should have stepped.
+    use gpushare::exp::control::{
+        bursty_reslice_inline_stepped, chaos_recovery_stepped, checkpoint_cadence_sweep_stepped,
+        failure_migrate_inline_stepped, Stepping,
+    };
+    use gpushare::trace::TraceConfig;
+    let p = Protocol {
+        requests: 6,
+        train_steps: 2,
+        parallel: true,
+        ..Protocol::default()
+    };
+    let untraced = TraceConfig::disabled();
+    let ed = bursty_reslice_inline_stepped(&p, &untraced, Stepping::EventDriven).0;
+    let ls = bursty_reslice_inline_stepped(&p, &untraced, Stepping::Lockstep).0;
+    assert_eq!(
+        ed.to_json(),
+        ls.to_json(),
+        "bursty re-slice inline: event-driven and lockstep stepping diverged"
+    );
+    assert!(ed.governed.inline_actions_applied() >= 1);
+    let ed = failure_migrate_inline_stepped(&p, Stepping::EventDriven);
+    let ls = failure_migrate_inline_stepped(&p, Stepping::Lockstep);
+    assert_eq!(
+        ed.to_json(),
+        ls.to_json(),
+        "failure migrate inline: event-driven and lockstep stepping diverged"
+    );
+    let ed = chaos_recovery_stepped(&p, &untraced, Stepping::EventDriven).0;
+    let ls = chaos_recovery_stepped(&p, &untraced, Stepping::Lockstep).0;
+    assert_eq!(
+        ed.to_json(),
+        ls.to_json(),
+        "chaos recovery: event-driven and lockstep stepping diverged"
+    );
+    // the oracle exercises the full fault plane, not a quiet run
+    assert_eq!(ed.governed.fault.recoveries, 1);
+    assert!(ed.governed.fault.retries >= 1);
+    let ed = checkpoint_cadence_sweep_stepped(&p, Stepping::EventDriven);
+    let ls = checkpoint_cadence_sweep_stepped(&p, Stepping::Lockstep);
+    assert_eq!(
+        ed.to_json(),
+        ls.to_json(),
+        "checkpoint-cadence sweep: event-driven and lockstep stepping diverged"
+    );
+}
+
+#[test]
 fn repeated_runs_share_one_json_byte_for_byte() {
     let p = proto(true);
     let a = p

@@ -1334,6 +1334,7 @@ fn run_chaos_fault_case(
     cadence: u64,
     horizon: u64,
     ckpt_every: u64,
+    lockstep: bool,
 ) -> (
     gpushare::control::ControlReport,
     gpushare::control::FleetState,
@@ -1377,13 +1378,11 @@ fn run_chaos_fault_case(
     fleet.pin("pinned", 1, pin_job.demand(), pin_job.checkpoint_bytes());
     let pinned_before = fleet.pinned_jobs();
     let mut policy = FailRecover;
-    let rep = run_governed_inline(
-        &mut fleet,
-        &phases,
-        &mut policy,
-        &cfg,
-        &GovernorConfig::cadence(cadence).with_checkpoint(ckpt_every),
-    );
+    let mut gcfg = GovernorConfig::cadence(cadence).with_checkpoint(ckpt_every);
+    if lockstep {
+        gcfg = gcfg.with_lockstep();
+    }
+    let rep = run_governed_inline(&mut fleet, &phases, &mut policy, &cfg, &gcfg);
     let n = plan.len();
     (rep, fleet, pinned_before, n)
 }
@@ -1407,7 +1406,7 @@ fn prop_fault_streams_conserve_and_reproduce() {
         let horizon = g.u64(20, 120) * MS;
         let ckpt_every = g.u64(5, 40) * MS;
         let (rep_a, fleet_a, pinned_before, plan_len) =
-            run_chaos_fault_case(seed, cadence, horizon, ckpt_every);
+            run_chaos_fault_case(seed, cadence, horizon, ckpt_every, false);
         check_eq(
             rep_a.fault.injected,
             plan_len as u64,
@@ -1426,11 +1425,39 @@ fn prop_fault_streams_conserve_and_reproduce() {
         if let Err(e) = fleet_a.check() {
             return check(false, format!("fleet account != recompute: {e}"));
         }
-        let (rep_b, _, _, _) = run_chaos_fault_case(seed, cadence, horizon, ckpt_every);
+        let (rep_b, _, _, _) = run_chaos_fault_case(seed, cadence, horizon, ckpt_every, false);
         check_eq(
             rep_a.to_json(),
             rep_b.to_json(),
             "chaos-fault run reproducible per seed",
+        )
+    });
+}
+
+#[test]
+fn prop_event_driven_stepping_equals_lockstep_on_fault_streams() {
+    // §7f property: over random seeds × cadences × checkpoint knobs ×
+    // stochastic fault plans, the event-driven component scheduler and
+    // the historical lockstep sweep produce byte-identical reports. The
+    // conservative-lookahead contract ("a device skipped to the horizon
+    // had no event before it") must hold through every path the storm
+    // can take — masked drains, backoff retries, heartbeat detection,
+    // restores onto the dark spare, kill-on-stall.
+    let cfg_small = PropConfig {
+        cases: 5,
+        ..PropConfig::default()
+    };
+    run_prop("stepping=lockstep-oracle", cfg_small, |g| {
+        let seed = g.u64(1, 1 << 40);
+        let cadence = g.u64(2, 30) * MS;
+        let horizon = g.u64(20, 120) * MS;
+        let ckpt_every = g.u64(5, 40) * MS;
+        let (ed, ..) = run_chaos_fault_case(seed, cadence, horizon, ckpt_every, false);
+        let (ls, ..) = run_chaos_fault_case(seed, cadence, horizon, ckpt_every, true);
+        check_eq(
+            ed.to_json(),
+            ls.to_json(),
+            "event-driven and lockstep stepping byte-identical",
         )
     });
 }
@@ -1445,13 +1472,16 @@ fn chaos_soak_seeded_fault_streams() {
         let horizon = (30 + 7 * (seed % 9)) * MS;
         let ckpt_every = (4 + seed % 13) * MS;
         let (rep, fleet, pinned_before, plan_len) =
-            run_chaos_fault_case(seed, cadence, horizon, ckpt_every);
+            run_chaos_fault_case(seed, cadence, horizon, ckpt_every, false);
         assert_eq!(rep.fault.injected, plan_len as u64, "seed {seed}");
         assert_eq!(rep.fault.detected, rep.fault.injected, "seed {seed}");
         assert_eq!(fleet.pinned_jobs(), pinned_before, "seed {seed}");
         fleet.check().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
-        let (rep2, _, _, _) = run_chaos_fault_case(seed, cadence, horizon, ckpt_every);
+        let (rep2, _, _, _) = run_chaos_fault_case(seed, cadence, horizon, ckpt_every, false);
         assert_eq!(rep.to_json(), rep2.to_json(), "seed {seed} not reproducible");
+        // §7f oracle through the soak: lockstep agrees byte-for-byte
+        let (rep3, _, _, _) = run_chaos_fault_case(seed, cadence, horizon, ckpt_every, true);
+        assert_eq!(rep.to_json(), rep3.to_json(), "seed {seed}: lockstep diverged");
     }
 }
 

@@ -104,6 +104,48 @@ fn trace_log_and_timeseries_are_byte_reproducible() {
 }
 
 #[test]
+fn traced_stepping_modes_agree_byte_for_byte() {
+    // The §7f oracle through the flight recorder: the event-driven and
+    // lockstep stepping modes must record byte-identical trace logs, not
+    // just byte-identical reports — every decision point, fault
+    // inject/detect pair, transfer window, and governor micro-event
+    // lands at the same instant with the same payload. Device clocks are
+    // never perturbed by skipping provably idle devices, so the traces
+    // cannot tell the modes apart.
+    use gpushare::exp::control::{
+        bursty_reslice_inline_stepped, chaos_recovery_stepped, Stepping,
+    };
+    let (ed_cmp, ed_log) = bursty_reslice_inline_stepped(&proto(), &trace_cfg(), Stepping::EventDriven);
+    let (ls_cmp, ls_log) = bursty_reslice_inline_stepped(&proto(), &trace_cfg(), Stepping::Lockstep);
+    assert_eq!(
+        ed_cmp.to_json(),
+        ls_cmp.to_json(),
+        "traced bursty inline: stepping modes diverged on the report"
+    );
+    assert_eq!(
+        ed_log.to_json(),
+        ls_log.to_json(),
+        "traced bursty inline: stepping modes diverged on the trace log"
+    );
+    let (ed_cmp, ed_log) = chaos_recovery_stepped(&proto(), &trace_cfg(), Stepping::EventDriven);
+    let (ls_cmp, ls_log) = chaos_recovery_stepped(&proto(), &trace_cfg(), Stepping::Lockstep);
+    assert_eq!(
+        ed_cmp.to_json(),
+        ls_cmp.to_json(),
+        "traced chaos recovery: stepping modes diverged on the report"
+    );
+    assert_eq!(
+        ed_log.to_json(),
+        ls_log.to_json(),
+        "traced chaos recovery: stepping modes diverged on the trace log"
+    );
+    assert!(
+        ed_log.link_transfers().count() > 0,
+        "the compared chaos traces must carry real transfer windows"
+    );
+}
+
+#[test]
 fn chaos_link_transfers_make_contention_visible() {
     // §7e link-occupancy regression: the chaos storm's periodic
     // checkpoints and the backoff-retried restore must surface as
