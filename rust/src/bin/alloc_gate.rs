@@ -1,0 +1,184 @@
+//! CI allocation gate (§8b): measure allocations-per-event on the gated
+//! scenarios under the counting global allocator and fail (exit 1) when
+//! any probe exceeds its committed budget in `ALLOC_budget.json`.
+//!
+//! Usage:
+//!   alloc_gate <ALLOC_budget.json> [--update]
+//!
+//! Requires the `alloc-count` feature (enforced via `required-features`
+//! in Cargo.toml): without it the counting allocator is not registered,
+//! every probe reads 0 allocations, and the gate would pass vacuously.
+//!
+//! Probes:
+//! * `alloc: engine steady-state pair loop (mps)` — a ResNet-50
+//!   inference+training pair is stepped to half its (pre-measured)
+//!   horizon to warm every container, then the second half is measured.
+//!   The steady-state event loop allocates nothing per event; the only
+//!   counts here are amortized container doublings, so the budget is a
+//!   small constant per 1000 events — not a per-event allowance.
+//! * `alloc: in-clock governed sweep` / `alloc: chaos recovery sweep` —
+//!   whole governed runs (setup, placement, staged actions, recovery
+//!   included), gating the per-wake scratch reuse end to end.
+//!
+//! `--update` ratchets budgets *downward only*: a passing run rewrites
+//! each budget to `min(committed, measured * 1.25 + 0.5)`. The committed
+//! numbers start conservative (a ceiling any runner clears); they only
+//! ever tighten, mirroring `perf_gate --update`'s upward-only floors.
+
+use gpushare::exp::control::{chaos_sweep_events, control_inline_sweep_events};
+use gpushare::exp::Protocol;
+use gpushare::sched::Mechanism;
+use gpushare::sim::SimTime;
+use gpushare::util::bench::{alloc_probe, AllocProbe};
+use gpushare::util::json::Json;
+use gpushare::workload::DlModel;
+use std::process::ExitCode;
+
+/// Engine steady-state probe: warm to half the horizon, measure the rest.
+fn engine_steady_probe(name: &str) -> AllocProbe {
+    let mut proto = Protocol::fast();
+    proto.parallel = false;
+    // Dry run to learn the horizon (also warms any lazy process state —
+    // model profiles, panic machinery — so the measured run sees none of
+    // it).
+    let dry = proto
+        .pair_rt(Mechanism::mps_default(), DlModel::ResNet50, DlModel::ResNet50)
+        .run();
+    let half = dry.sim_end / 2;
+    let mut rt = proto.pair_rt(Mechanism::mps_default(), DlModel::ResNet50, DlModel::ResNet50);
+    rt.step_until(half);
+    let warm_events = rt.live_report().events;
+    let mut probe = alloc_probe(name, || {
+        rt.step_until(SimTime::MAX);
+        rt.live_report().events
+    });
+    probe.events = probe.events.saturating_sub(warm_events);
+    probe
+}
+
+fn load_budgets(path: &str) -> Result<Vec<(String, f64)>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    let json = Json::parse(&text).map_err(|e| format!("cannot parse {path}: {e}"))?;
+    let entries = json
+        .get("budgets")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{path}: no `budgets` array"))?;
+    let mut out = Vec::new();
+    for e in entries {
+        let name = e.get("name").and_then(Json::as_str).unwrap_or_default();
+        let per_1k = e
+            .get("per_1k_events")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("{path}: budget {name:?} has no `per_1k_events`"))?;
+        if name.is_empty() || !per_1k.is_finite() || per_1k < 0.0 {
+            return Err(format!("{path}: malformed budget entry {name:?}"));
+        }
+        out.push((name.to_string(), per_1k));
+    }
+    Ok(out)
+}
+
+fn write_budgets(budgets: &[(String, f64)]) -> String {
+    use gpushare::util::json::escape;
+    use std::fmt::Write as _;
+    let mut out = String::from(
+        "{\"schema\":\"gpushare-alloc-v1\",\"note\":\"allocations per 1000 simulated \
+         events per probe window; conservative ceilings, alloc_gate --update ratchets \
+         downward only\",\"budgets\":[",
+    );
+    for (i, (name, per_1k)) in budgets.iter().enumerate() {
+        let _ = write!(
+            out,
+            "{}{{\"name\":\"{}\",\"per_1k_events\":{per_1k:.2}}}",
+            if i == 0 { "" } else { "," },
+            escape(name)
+        );
+    }
+    out.push_str("]}");
+    out
+}
+
+fn run() -> Result<bool, String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut update = false;
+    let mut paths = Vec::new();
+    for a in args {
+        match a.as_str() {
+            "--update" => update = true,
+            _ => paths.push(a),
+        }
+    }
+    let [budget_path] = paths.as_slice() else {
+        return Err("usage: alloc_gate <ALLOC_budget.json> [--update]".to_string());
+    };
+    let mut budgets = load_budgets(budget_path)?;
+
+    let probes = [
+        engine_steady_probe("alloc: engine steady-state pair loop (mps)"),
+        alloc_probe("alloc: in-clock governed sweep", || {
+            let mut proto = Protocol::fast();
+            proto.parallel = false;
+            control_inline_sweep_events(&proto)
+        }),
+        alloc_probe("alloc: chaos recovery sweep", || {
+            let mut proto = Protocol::fast();
+            proto.parallel = false;
+            chaos_sweep_events(&proto)
+        }),
+    ];
+
+    let mut failed = 0usize;
+    for p in &probes {
+        let budget = budgets.iter().find(|(n, _)| n == &p.name).map(|&(_, b)| b);
+        println!("{}", p.report_line(budget));
+        match budget {
+            // A probe with no committed budget is a failure, not a skip:
+            // a renamed probe must not silently drop its gate coverage.
+            None => {
+                failed += 1;
+                println!("  no budget entry for {:?} in {budget_path}", p.name);
+            }
+            Some(b) if p.per_1k_events() > b => {
+                failed += 1;
+                println!(
+                    "  measured {:.2} allocs/1k events over budget {b:.2} \
+                     ({} allocs / {} events)",
+                    p.per_1k_events(),
+                    p.allocs,
+                    p.events
+                );
+            }
+            Some(_) => {}
+        }
+    }
+    if failed > 0 {
+        println!("\n{failed}/{} allocation probes over budget vs {budget_path}", probes.len());
+        return Ok(false);
+    }
+    println!(
+        "\nall {} allocation probes within the budgets in {budget_path}",
+        probes.len()
+    );
+    if update {
+        for (name, b) in budgets.iter_mut() {
+            if let Some(p) = probes.iter().find(|p| &p.name == name) {
+                *b = (*b).min(p.per_1k_events() * 1.25 + 0.5);
+            }
+        }
+        std::fs::write(budget_path, write_budgets(&budgets))
+            .map_err(|e| format!("cannot update {budget_path}: {e}"))?;
+        println!("budgets ratcheted (downward only, 25% + 0.5 headroom over measured)");
+    }
+    Ok(true)
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::from(1),
+        Err(e) => {
+            eprintln!("alloc_gate: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -4,7 +4,7 @@
 //!
 //! Usage:
 //!   perf_gate <BENCH_baseline.json> <BENCH_perf.json> [--tolerance 0.15]
-//!             [--all] [--update] [--ratio "A=B" ...]
+//!             [--all] [--update] [--ratio "A=B" ...] [--markdown FILE]
 //!
 //! * Only entries whose names start with `sim:` or `sweep:` gate by
 //!   default (events/sec — the stable, machine-comparable series);
@@ -21,6 +21,10 @@
 //!   runner speed; the ratio pins a structural overhead — e.g. the
 //!   governed in-clock floor over the ungoverned sweep floor (§7f) —
 //!   so a regression in one side cannot hide behind a fast machine.
+//! * `--markdown FILE` writes the comparison (absolute floors *and* ratio
+//!   gates) as a markdown table — the `BENCH_trajectory.md` artifact CI
+//!   uploads. Written before the pass/fail verdict, so a failing run still
+//!   leaves the table behind for triage.
 //!
 //! The committed baseline is deliberately conservative (a floor any CI
 //! runner clears), so the gate catches order-of-magnitude regressions —
@@ -77,6 +81,7 @@ fn run() -> Result<bool, String> {
     };
     let mut all = false;
     let mut update = false;
+    let mut markdown: Option<String> = None;
     let mut ratios: Vec<(String, String)> = Vec::new();
     let mut it = args.into_iter();
     while let Some(a) = it.next() {
@@ -87,6 +92,9 @@ fn run() -> Result<bool, String> {
             }
             "--all" => all = true,
             "--update" => update = true,
+            "--markdown" => {
+                markdown = Some(it.next().ok_or("--markdown needs a file path")?);
+            }
             "--ratio" => {
                 let v = it.next().ok_or("--ratio needs \"A=B\"")?;
                 let (a, b) = v
@@ -103,7 +111,8 @@ fn run() -> Result<bool, String> {
     let [baseline_path, fresh_path] = paths.as_slice() else {
         return Err(
             "usage: perf_gate <BENCH_baseline.json> <BENCH_perf.json> \
-             [--tolerance 0.15] [--all] [--update] [--ratio \"A=B\" ...]"
+             [--tolerance 0.15] [--all] [--update] [--ratio \"A=B\" ...] \
+             [--markdown FILE]"
                 .to_string(),
         );
     };
@@ -117,6 +126,8 @@ fn run() -> Result<bool, String> {
     let mut compared = 0usize;
     let mut regressed = 0usize;
     let mut missing = 0usize;
+    // (name, baseline, fresh) rows for the --markdown trajectory table.
+    let mut rows: Vec<(String, f64, Option<f64>)> = Vec::new();
     println!(
         "{:<44} {:>14} {:>14} {:>8}",
         "benchmark", "baseline/s", "fresh/s", "delta"
@@ -130,6 +141,7 @@ fn run() -> Result<bool, String> {
             // baseline too, or remove the row deliberately).
             println!("{:<44} {:>14.0} {:>14} {:>8}", key, b.throughput, "-", "MISSING");
             missing += 1;
+            rows.push((key, b.throughput, None));
             continue;
         };
         compared += 1;
@@ -148,12 +160,16 @@ fn run() -> Result<bool, String> {
             delta * 100.0,
             verdict
         );
+        rows.push((key, b.throughput, Some(f.throughput)));
     }
     if compared == 0 {
         return Err("no comparable benchmarks between baseline and fresh run".to_string());
     }
     // Relative gates: fresh(A)/fresh(B) vs baseline(A)/baseline(B).
     let mut ratio_failed = 0usize;
+    let mut ratio_failures: Vec<String> = Vec::new();
+    // (label, baseline ratio, fresh ratio) rows for --markdown.
+    let mut ratio_rows: Vec<(String, f64, f64)> = Vec::new();
     for (a, b) in &ratios {
         let find = |entries: &[Entry], name: &str| -> Result<f64, String> {
             entries
@@ -167,6 +183,16 @@ fn run() -> Result<bool, String> {
         let delta = fresh_ratio / base_ratio - 1.0;
         let verdict = if fresh_ratio < base_ratio * (1.0 - tolerance) {
             ratio_failed += 1;
+            ratio_failures.push(format!(
+                "  {} / {}: measured {:.3} below pinned bound {:.3} \
+                 (baseline ratio {:.3} - {:.0}% tolerance)",
+                normalized(a),
+                normalized(b),
+                fresh_ratio,
+                base_ratio * (1.0 - tolerance),
+                base_ratio,
+                tolerance * 100.0
+            ));
             "FAIL"
         } else {
             "ok"
@@ -179,6 +205,16 @@ fn run() -> Result<bool, String> {
             delta * 100.0,
             verdict
         );
+        ratio_rows.push((
+            format!("{} / {}", normalized(a), normalized(b)),
+            base_ratio,
+            fresh_ratio,
+        ));
+    }
+    if let Some(md_path) = &markdown {
+        let md = write_trajectory_md(&rows, &ratio_rows, tolerance);
+        std::fs::write(md_path, md).map_err(|e| format!("cannot write {md_path}: {e}"))?;
+        println!("trajectory table written to {md_path}");
     }
     if missing > 0 {
         println!(
@@ -196,11 +232,17 @@ fn run() -> Result<bool, String> {
         return Ok(false);
     }
     if ratio_failed > 0 {
+        // Measured-vs-pinned detail: a bare count hides how far off the
+        // structural overhead drifted, which is the first thing a triage
+        // needs.
         println!(
-            "\n{ratio_failed}/{} ratio gates regressed > {:.0}% vs {baseline_path}",
+            "\n{ratio_failed}/{} ratio gates regressed > {:.0}% vs {baseline_path}:",
             ratios.len(),
             tolerance * 100.0
         );
+        for line in &ratio_failures {
+            println!("{line}");
+        }
         return Ok(false);
     }
     println!(
@@ -217,6 +259,52 @@ fn run() -> Result<bool, String> {
         println!("baseline ratcheted from {fresh_path} (per-entry max, never lowered)");
     }
     Ok(true)
+}
+
+/// Render the `--markdown` trajectory: the gated absolute floors and every
+/// `--ratio` structural pin, fresh vs committed, so the uploaded artifact
+/// shows the relative overheads — not just raw events/s — run over run.
+fn write_trajectory_md(
+    rows: &[(String, f64, Option<f64>)],
+    ratio_rows: &[(String, f64, f64)],
+    tolerance: f64,
+) -> String {
+    use std::fmt::Write as _;
+    let mut md = String::from("# events/s trajectory: committed floors vs this run\n\n");
+    let _ = writeln!(
+        md,
+        "Gate tolerance: {:.0}% below the committed floor fails.\n",
+        tolerance * 100.0
+    );
+    md.push_str("| benchmark | baseline/s | fresh/s | delta |\n|---|---:|---:|---:|\n");
+    for (name, base, fresh) in rows {
+        match fresh {
+            Some(f) => {
+                let _ = writeln!(
+                    md,
+                    "| {name} | {base:.0} | {f:.0} | {:+.1}% |",
+                    (f / base - 1.0) * 100.0
+                );
+            }
+            None => {
+                let _ = writeln!(md, "| {name} | {base:.0} | — | missing |");
+            }
+        }
+    }
+    if !ratio_rows.is_empty() {
+        md.push_str(
+            "\n## ratio gates (structural overheads, runner-speed independent)\n\n\
+             | ratio | baseline | fresh | delta |\n|---|---:|---:|---:|\n",
+        );
+        for (label, base, fresh) in ratio_rows {
+            let _ = writeln!(
+                md,
+                "| {label} | {base:.3} | {fresh:.3} | {:+.1}% |",
+                (fresh / base - 1.0) * 100.0
+            );
+        }
+    }
+    md
 }
 
 /// Serialize the ratcheted baseline: every fresh entry at

@@ -79,7 +79,18 @@ pub struct DeviceSpec {
 impl DeviceSpec {
     /// Canonical `model:mechanism` form (`"a100:mig-3g"`).
     pub fn name(&self) -> String {
-        format!("{}:{}", self.model.name(), self.mechanism.name())
+        let mut out = String::new();
+        self.write_name(&mut out);
+        out
+    }
+
+    /// [`DeviceSpec::name`] into a caller-owned buffer (§8b): the in-clock
+    /// governor renders lane names every wake, so the steady-state path
+    /// reuses one warm `String` instead of formatting a fresh allocation.
+    pub fn write_name(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        out.clear();
+        let _ = write!(out, "{}:{}", self.model.name(), self.mechanism.name());
     }
 
     /// Job-slot capacity this device advertises to the placement account.

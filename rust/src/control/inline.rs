@@ -184,18 +184,43 @@ struct PendingCkpt {
     attempt: u32,
 }
 
+/// The devices an action touches, stored inline (§8b): every action maps
+/// to at most two devices, so the busy-guard set never needs the heap —
+/// staging, reserving, and releasing tickets all borrow it as a slice.
+#[derive(Clone, Copy)]
+struct ActionDevices {
+    buf: [usize; 2],
+    len: usize,
+}
+
+impl std::ops::Deref for ActionDevices {
+    type Target = [usize];
+    fn deref(&self) -> &[usize] {
+        &self.buf[..self.len]
+    }
+}
+
 /// The devices an action touches — the busy-guard's unit (one mapping,
 /// used for both the staged and the incoming side).
-fn action_devices(action: &Action) -> Vec<usize> {
+fn action_devices(action: &Action) -> ActionDevices {
     match action {
-        Action::Reslice { device, .. } => vec![*device],
+        Action::Reslice { device, .. } => ActionDevices {
+            buf: [*device, 0],
+            len: 1,
+        },
         Action::Scale {
             change: ScaleChange::PowerUp { device },
         }
         | Action::Scale {
             change: ScaleChange::PowerDown { device },
-        } => vec![*device],
-        Action::Migrate { src, dst, .. } => vec![*src, *dst],
+        } => ActionDevices {
+            buf: [*device, 0],
+            len: 1,
+        },
+        Action::Migrate { src, dst, .. } => ActionDevices {
+            buf: [*src, *dst],
+            len: 2,
+        },
     }
 }
 
@@ -323,8 +348,26 @@ fn ckpt_leg_ns(fleet: &FleetState, d: usize, bytes: u64, link_pct: u32) -> SimTi
     base.saturating_mul(100) / link_pct.max(1) as SimTime
 }
 
-/// Build a windowed frame: one lane signal per device over
-/// `(since, until]`, plus the phase's (constant) routing pressure.
+/// Per-phase wake scratch (§8b): every buffer the cadence-wake frame
+/// assembly needs, allocated once per phase and reused across wakes. After
+/// the first few wakes warm the string/vec capacities, the steady-state
+/// loop rebuilds the frame in place without touching the allocator.
+#[derive(Default)]
+struct WakeScratch {
+    /// The frame handed to `Policy::decide` each wake, rebuilt in place.
+    frame: SignalFrame,
+    /// Per-lane deadline scratch for `SignalFrame::lane_deadlines_into`.
+    deadlines: Vec<Option<f64>>,
+    /// Window turnaround spans, reused by `LaneSignal::fill_window`.
+    spans_ms: Vec<f64>,
+    /// Lane-name render buffer for `DeviceSpec::write_name`.
+    name_buf: String,
+    /// Stand-in report for idle lanes (no runtime this phase).
+    empty: RunReport,
+}
+
+/// Build a windowed frame into `scratch.frame`: one lane signal per device
+/// over `(since, until]`, plus the phase's (constant) routing pressure.
 /// `lane_report(d)` is the device's report at snapshot time — the live
 /// mid-run report at a wake, the assembled lane report at the phase end
 /// (`None` for idle devices) — so the per-wake and end-of-phase frames
@@ -333,6 +376,7 @@ fn ckpt_leg_ns(fleet: &FleetState, d: usize, bytes: u64, link_pct: u32) -> SimTi
 /// windows.
 #[allow(clippy::too_many_arguments)]
 fn window_frame<'r>(
+    scratch: &mut WakeScratch,
     fleet: &FleetState,
     lane_report: impl Fn(usize) -> Option<&'r RunReport>,
     lane_jobs: &[Vec<String>],
@@ -343,39 +387,36 @@ fn window_frame<'r>(
     until: SimTime,
     makespan_ns: SimTime,
     prev_arrivals: &mut [u64],
-) -> SignalFrame {
-    let deadlines = SignalFrame::lane_deadlines_for(lane_jobs, phase_jobs);
-    let empty = RunReport::default();
-    let lanes = (0..fleet.spec.devices.len())
-        .map(|d| {
-            let device = fleet.spec.devices[d].name();
-            let mechanism = fleet.spec.devices[d].mechanism.name();
-            let (rep, jobs) = match lane_report(d) {
-                Some(rep) => (rep, lane_jobs[d].len() as u64),
-                None => (&empty, 0),
-            };
-            let arrivals = rep.arrivals.saturating_sub(prev_arrivals[d]);
-            prev_arrivals[d] = rep.arrivals;
-            LaneSignal::from_window(
-                &device,
-                mechanism,
-                jobs,
-                rep,
-                deadlines[d],
-                since,
-                until,
-                arrivals,
-            )
-        })
-        .collect();
-    SignalFrame {
-        phase: phase_idx as u64,
-        lanes,
-        admitted: stats.admitted,
-        placed: stats.placed,
-        rejected: stats.rejected,
-        makespan_ns,
+) {
+    SignalFrame::lane_deadlines_into(lane_jobs, phase_jobs, &mut scratch.deadlines);
+    let ndev = fleet.spec.devices.len();
+    scratch.frame.lanes.resize_with(ndev, LaneSignal::default);
+    for d in 0..ndev {
+        fleet.spec.devices[d].write_name(&mut scratch.name_buf);
+        let mechanism = fleet.spec.devices[d].mechanism.name();
+        let (rep, jobs) = match lane_report(d) {
+            Some(rep) => (rep, lane_jobs[d].len() as u64),
+            None => (&scratch.empty, 0),
+        };
+        let arrivals = rep.arrivals.saturating_sub(prev_arrivals[d]);
+        prev_arrivals[d] = rep.arrivals;
+        scratch.frame.lanes[d].fill_window(
+            &scratch.name_buf,
+            mechanism,
+            jobs,
+            rep,
+            scratch.deadlines[d],
+            since,
+            until,
+            arrivals,
+            &mut scratch.spans_ms,
+        );
     }
+    scratch.frame.phase = phase_idx as u64;
+    scratch.frame.admitted = stats.admitted;
+    scratch.frame.placed = stats.placed;
+    scratch.frame.rejected = stats.rejected;
+    scratch.frame.makespan_ns = makespan_ns;
 }
 
 /// Validate-and-stage one policy action at wake time `t`: a rejected
@@ -459,7 +500,7 @@ fn stage_action(
             let transfer_ns = fleet.migrate_transfer_ns(d_src, d_dst, bytes);
             let live = gov
                 .device(d_src)
-                .is_some_and(|rt| rt.live_ctx_names().iter().any(|n| n == job));
+                .is_some_and(|rt| rt.has_live_ctx(job));
             // Restore mode (§7d): a detected abrupt failure left the pin
             // stranded on an unpowered device. Nothing is live to drain or
             // retire — the job resumes on the destination from its last
@@ -819,6 +860,9 @@ fn run_phase_inclock(
     // nothing.
     let mut due_actions: Vec<PendingAction> = Vec::new();
     let mut due_ckpts: Vec<PendingCkpt> = Vec::new();
+    // Wake-window scratch (§8b): the frame and its buffers, rebuilt in
+    // place every cadence wake.
+    let mut scratch = WakeScratch::default();
     loop {
         if pending.is_empty()
             && pending_ckpt.is_empty()
@@ -1137,7 +1181,8 @@ fn run_phase_inclock(
                     event: crate::fault::event_label(&ev),
                 });
             }
-            let frame = window_frame(
+            window_frame(
+                &mut scratch,
                 fleet,
                 |d| gov.device(d).map(|rt| rt.live_report()),
                 &lane_jobs,
@@ -1156,7 +1201,7 @@ fn run_phase_inclock(
                     phase: phase_idx,
                     phases_total,
                 };
-                policy.decide(&frame, &ctx)
+                policy.decide(&scratch.frame, &ctx)
             };
             // The lossless decision point (§7e): the exact frame and
             // fleet snapshot `decide` consumed, plus its answer —
@@ -1165,7 +1210,7 @@ fn run_phase_inclock(
                 phase: phase_idx,
                 phases_total,
                 at: t,
-                frame: frame.clone(),
+                frame: scratch.frame.clone(),
                 fleet: fleet.clone(),
                 actions: actions.clone(),
             });
@@ -1256,7 +1301,8 @@ fn run_phase_inclock(
     // window span stays a real duration — carrying the *phase* makespan
     // (the boundary decision and the total-span accounting read it).
     let phase_end = makespan_ns.max(last_wake.saturating_add(1));
-    let frame = window_frame(
+    window_frame(
+        &mut scratch,
         fleet,
         |d| report.lanes.get(d).map(|lane| &lane.report),
         &lane_jobs,
@@ -1268,7 +1314,7 @@ fn run_phase_inclock(
         makespan_ns,
         &mut prev_arrivals,
     );
-    (report, records, frame)
+    (report, records, std::mem::take(&mut scratch.frame))
 }
 
 /// Run a phased scenario under a control policy, with the governor either

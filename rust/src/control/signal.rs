@@ -35,7 +35,7 @@ fn num(x: f64) -> String {
 }
 
 /// One lane's (device's or serving lane's) signals at a phase boundary.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct LaneSignal {
     /// Lane name, e.g. `"a100:mig-3g"`.
     pub device: String,
@@ -134,9 +134,45 @@ impl LaneSignal {
         until: SimTime,
         arrivals: u64,
     ) -> LaneSignal {
+        let mut lane = LaneSignal::default();
+        let mut spans_ms = Vec::new();
+        lane.fill_window(
+            device,
+            mechanism,
+            jobs,
+            report,
+            deadline_ms,
+            since,
+            until,
+            arrivals,
+            &mut spans_ms,
+        );
+        lane
+    }
+
+    /// In-place form of [`LaneSignal::from_window`] (§8b): overwrites every
+    /// field of `self`, reusing its `device`/`mechanism` string buffers and
+    /// the caller's `spans_ms` scratch. Once those buffers are warm the
+    /// in-clock governor's steady-state wakes rebuild lane signals without
+    /// touching the allocator; the values written are identical to what
+    /// `from_window` constructs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fill_window(
+        &mut self,
+        device: &str,
+        mechanism: &str,
+        jobs: u64,
+        report: &RunReport,
+        deadline_ms: Option<f64>,
+        since: SimTime,
+        until: SimTime,
+        arrivals: u64,
+        spans_ms: &mut Vec<f64>,
+    ) {
         let window = report.window_requests(since, until);
-        let spans_ms: Vec<f64> = window.iter().map(|r| ns_to_ms(r.turnaround_ns())).collect();
-        let s = Summary::of(&spans_ms);
+        spans_ms.clear();
+        spans_ms.extend(window.iter().map(|r| ns_to_ms(r.turnaround_ns())));
+        let s = Summary::of(spans_ms);
         let deadline_ns = deadline_ms.map(|d| (d * MS as f64) as SimTime);
         let violations = deadline_ns.map_or(0, |d| {
             window.iter().filter(|r| r.turnaround_ns() > d).count() as u64
@@ -159,23 +195,23 @@ impl LaneSignal {
         } else {
             (sum_sq / (2.0 * sum)).ceil() as SimTime
         };
-        LaneSignal {
-            device: device.to_string(),
-            mechanism: mechanism.to_string(),
-            jobs,
-            completed: window.len() as u64,
-            violations,
-            mean_turnaround_ms: s.mean,
-            p99_turnaround_ms: s.p99,
-            total_turnaround_ms: spans_ms.iter().sum(),
-            overshoot_ms,
-            inflight_avg: sum / span as f64,
-            busy_ns: span,
-            residual_ns,
-            deadline_ms,
-            arrivals,
-            queue_now: report.arrivals.saturating_sub(report.requests.len() as u64),
-        }
+        self.device.clear();
+        self.device.push_str(device);
+        self.mechanism.clear();
+        self.mechanism.push_str(mechanism);
+        self.jobs = jobs;
+        self.completed = window.len() as u64;
+        self.violations = violations;
+        self.mean_turnaround_ms = s.mean;
+        self.p99_turnaround_ms = s.p99;
+        self.total_turnaround_ms = spans_ms.iter().sum();
+        self.overshoot_ms = overshoot_ms;
+        self.inflight_avg = sum / span as f64;
+        self.busy_ns = span;
+        self.residual_ns = residual_ns;
+        self.deadline_ms = deadline_ms;
+        self.arrivals = arrivals;
+        self.queue_now = report.arrivals.saturating_sub(report.requests.len() as u64);
     }
 
     fn to_json(&self) -> String {
@@ -241,7 +277,7 @@ impl LaneSignal {
 
 /// The fleet's telemetry at one phase boundary — everything a
 /// `control::policy::Policy` is allowed to observe.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct SignalFrame {
     /// Phase index this frame closes.
     pub phase: u64,
@@ -271,20 +307,32 @@ impl SignalFrame {
     /// [`SignalFrame::lane_deadlines`] from bare lane job-name lists — the
     /// in-clock governor's variant, usable before any report exists.
     pub fn lane_deadlines_for(lane_jobs: &[Vec<String>], jobs: &[ClusterJob]) -> Vec<Option<f64>> {
-        lane_jobs
-            .iter()
-            .map(|names| {
-                names
-                    .iter()
-                    .filter_map(|name| {
-                        jobs.iter()
-                            .find(|j| &j.name == name)
-                            .and_then(|j| j.deadline_ms)
-                    })
-                    .min()
-                    .map(|d| d as f64)
-            })
-            .collect()
+        let mut out = Vec::new();
+        Self::lane_deadlines_into(lane_jobs, jobs, &mut out);
+        out
+    }
+
+    /// [`SignalFrame::lane_deadlines_for`] into a caller-owned buffer
+    /// (§8b): the in-clock governor recomputes lane deadlines every wake
+    /// (lane membership shifts when migrations land), so the steady-state
+    /// path reuses one warm `Vec` instead of collecting a fresh one.
+    pub fn lane_deadlines_into(
+        lane_jobs: &[Vec<String>],
+        jobs: &[ClusterJob],
+        out: &mut Vec<Option<f64>>,
+    ) {
+        out.clear();
+        out.extend(lane_jobs.iter().map(|names| {
+            names
+                .iter()
+                .filter_map(|name| {
+                    jobs.iter()
+                        .find(|j| &j.name == name)
+                        .and_then(|j| j.deadline_ms)
+                })
+                .min()
+                .map(|d| d as f64)
+        }));
     }
 
     /// Build the frame for a completed cluster phase. `deadlines` is one

@@ -12,7 +12,7 @@
 
 use crate::gpu::{DeviceConfig, MigProfile};
 use crate::metrics::RunReport;
-use crate::sched::{run, CtxDef, EngineConfig, Mechanism};
+use crate::sched::{run, CtxDef, DeviceRt, EngineConfig, Mechanism};
 use crate::sim::{SimTime, MS};
 use crate::util::rng::Rng;
 use crate::workload::{ArrivalPattern, DlModel, Source};
@@ -234,8 +234,27 @@ impl Protocol {
         infer_model: DlModel,
         train_model: DlModel,
     ) -> RunReport {
-        let mut rep = run(
-            self.engine_cfg(mechanism.clone()),
+        let mut rep = self.pair_rt(mechanism.clone(), infer_model, train_model).run();
+        rep.workload = format!(
+            "{}-infer+{}-train/{}",
+            infer_model.name(),
+            train_model.name(),
+            mechanism.name()
+        );
+        rep
+    }
+
+    /// The [`Protocol::pair`] scenario as an un-run [`DeviceRt`] (§8b):
+    /// the allocation gate steps it manually so it can snapshot the
+    /// allocator counter mid-run and measure only the steady-state window.
+    pub fn pair_rt(
+        &self,
+        mechanism: Mechanism,
+        infer_model: DlModel,
+        train_model: DlModel,
+    ) -> DeviceRt {
+        DeviceRt::new(
+            self.engine_cfg(mechanism),
             vec![
                 CtxDef {
                     name: format!("{}-infer", infer_model.name()),
@@ -248,14 +267,7 @@ impl Protocol {
                     priority: -2,
                 },
             ],
-        );
-        rep.workload = format!(
-            "{}-infer+{}-train/{}",
-            infer_model.name(),
-            train_model.name(),
-            mechanism.name()
-        );
-        rep
+        )
     }
 }
 

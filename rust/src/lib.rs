@@ -51,3 +51,11 @@ pub mod sim;
 pub mod trace;
 pub mod util;
 pub mod workload;
+
+/// §8b enforcement: under the `alloc-count` feature every allocation in
+/// the process is counted, which is what lets the `alloc_gate` binary
+/// turn "the steady-state event loop performs no allocation" into a
+/// CI-gated measurement instead of a comment.
+#[cfg(feature = "alloc-count")]
+#[global_allocator]
+static COUNTING_ALLOC: util::alloc::CountingAlloc = util::alloc::CountingAlloc;

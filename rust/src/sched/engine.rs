@@ -86,6 +86,14 @@ pub struct CtxDef {
     pub priority: i8,
 }
 
+/// Interned context identifier (DESIGN.md §8b): a context's index in its
+/// device's runtime order. The name `String` is stored exactly once, in
+/// the [`DeviceRt`] symbol table ([`DeviceRt::ctx_name`] renders it), so
+/// the hot paths — dispatch, liveness probes, kill-on-stall, failure
+/// survivors — trade in copyable ids instead of cloned `String`s, and
+/// rendering is deferred to report/bookkeeping assembly.
+pub type CtxId = usize;
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum CtxState {
     /// Between ops; a Poll event is pending.
@@ -99,7 +107,6 @@ enum CtxState {
 }
 
 struct CtxRt {
-    name: String,
     source: Source,
     priority: i8,
     state: CtxState,
@@ -203,6 +210,9 @@ struct InstanceRt {
 pub struct DeviceRt {
     cfg: EngineConfig,
     ctxs: Vec<CtxRt>,
+    /// Interned context names (DESIGN.md §8b): one entry per `ctxs` slot,
+    /// the only place a context's name lives. [`CtxId`] indexes both.
+    ctx_names: Vec<String>,
     sms: Vec<SmState>,
     /// Isolated scheduling domains over `sms` (DESIGN.md §6b). Exactly one
     /// unless the mechanism partitions the device.
@@ -302,18 +312,21 @@ impl DeviceRt {
             .collect();
         let n = defs.len();
         let (instances, sm_owner, ctx_inst, infeasible) = Self::build_instances(&cfg, &sms, n);
+        let mut ctx_names = Vec::with_capacity(n);
         let ctxs: Vec<CtxRt> = defs
             .into_iter()
-            .map(|d| CtxRt {
-                name: d.name,
-                is_inference: d.source.is_inference(),
-                source: d.source,
-                priority: d.priority,
-                state: CtxState::Idle,
-                req: None,
-                threads_resident: 0,
-                done_at: None,
-                op_issued: 0,
+            .map(|d| {
+                ctx_names.push(d.name);
+                CtxRt {
+                    is_inference: d.source.is_inference(),
+                    source: d.source,
+                    priority: d.priority,
+                    state: CtxState::Idle,
+                    req: None,
+                    threads_resident: 0,
+                    done_at: None,
+                    op_issued: 0,
+                }
             })
             .collect();
         let mut report = RunReport {
@@ -357,6 +370,7 @@ impl DeviceRt {
         Self {
             cfg,
             ctxs,
+            ctx_names,
             sms,
             instances,
             sm_owner,
@@ -591,8 +605,7 @@ impl DeviceRt {
         if self.finished {
             return true;
         }
-        while self.events.peek_time().is_some_and(|t| t <= until) {
-            let (t, ev) = self.events.pop().expect("peeked event vanished");
+        while let Some((t, ev)) = self.events.pop_due(until) {
             self.now = t;
             if t > self.cfg.max_sim_ns {
                 self.report.oom.get_or_insert(format!(
@@ -922,7 +935,7 @@ impl DeviceRt {
                     self.report.oom = Some(format!(
                         "process '{}' cannot schedule any block: registers/shared memory \
                          held resident by the other process across time slices (O3)",
-                        self.ctxs[ctx].name
+                        self.ctx_names[ctx]
                     ));
                     return 0;
                 }
@@ -1903,35 +1916,67 @@ impl DeviceRt {
     pub fn has_live_ctx(&self, name: &str) -> bool {
         self.ctxs
             .iter()
-            .any(|c| c.state != CtxState::Done && c.name == name)
+            .zip(&self.ctx_names)
+            .any(|(c, n)| c.state != CtxState::Done && n == name)
     }
 
-    /// Names of the contexts that have not completed (the kill-on-stall
-    /// and migration bookkeeping input).
+    /// Number of contexts ever pinned to this device ([`CtxId`] range);
+    /// retired/completed ones keep their slot, so ids never shift.
+    pub fn ctx_count(&self) -> usize {
+        self.ctxs.len()
+    }
+
+    /// Has context `ctx` not completed? Allocation-free: with
+    /// [`DeviceRt::ctx_count`] this is the id-based iteration the
+    /// kill-on-stall sweep uses instead of cloning every live name.
+    pub fn ctx_live(&self, ctx: CtxId) -> bool {
+        self.ctxs.get(ctx).is_some_and(|c| c.state != CtxState::Done)
+    }
+
+    /// Render an interned context name (§8b) — report/bookkeeping
+    /// assembly only; the hot paths carry the [`CtxId`].
+    pub fn ctx_name(&self, ctx: CtxId) -> &str {
+        &self.ctx_names[ctx]
+    }
+
+    /// Names of the contexts that have not completed. Clones every live
+    /// name — report/bookkeeping assembly only; hot paths iterate
+    /// [`CtxId`]s via [`DeviceRt::ctx_count`] + [`DeviceRt::ctx_live`].
     pub fn live_ctx_names(&self) -> Vec<String> {
         self.ctxs
             .iter()
-            .filter(|c| c.state != CtxState::Done)
-            .map(|c| c.name.clone())
+            .zip(&self.ctx_names)
+            .filter(|(c, _)| c.state != CtxState::Done)
+            .map(|(_, n)| n.clone())
             .collect()
     }
 
     /// Retire a context mid-run without a completion record — the
-    /// migrate-out (or kill-on-failure) path. Its resident blocks must
+    /// migrate-out (or kill-on-failure) path, by name (see
+    /// [`DeviceRt::retire_ctx_id`] for the interned form).
+    pub fn retire_ctx(&mut self, name: &str) -> Result<u32> {
+        let Some(ctx) = self.ctx_names.iter().position(|n| n == name) else {
+            bail!("no context named '{name}'");
+        };
+        self.retire_ctx_id(ctx)
+    }
+
+    /// [`DeviceRt::retire_ctx`] by interned id. Its resident blocks must
     /// have drained; queued kernels are tombstoned and queued transfers
     /// dropped. Returns the number of *fully completed* source units
     /// (training steps past this source's own start point): the in-flight
     /// unit is lost, exactly what a checkpoint restore loses.
-    pub fn retire_ctx(&mut self, name: &str) -> Result<u32> {
-        let Some(ctx) = self.ctxs.iter().position(|c| c.name == name) else {
-            bail!("no context named '{name}'");
-        };
+    pub fn retire_ctx_id(&mut self, ctx: CtxId) -> Result<u32> {
+        if ctx >= self.ctxs.len() {
+            bail!("no context with id {ctx}");
+        }
         if self.ctxs[ctx].state == CtxState::Done {
-            bail!("context '{name}' already completed");
+            bail!("context '{}' already completed", self.ctx_names[ctx]);
         }
         if self.running_blocks[ctx] > 0 {
             bail!(
-                "context '{name}' still has {} blocks resident — drain first",
+                "context '{}' still has {} blocks resident — drain first",
+                self.ctx_names[ctx],
                 self.running_blocks[ctx]
             );
         }
@@ -2011,8 +2056,8 @@ impl DeviceRt {
         self.can_admit(&def.name, def.source.profile().dram_footprint)?;
         let idx = self.ctxs.len();
         let inst = if idx == 0 { 0 } else { self.instances.len() - 1 };
+        self.ctx_names.push(def.name);
         self.ctxs.push(CtxRt {
-            name: def.name,
             is_inference: def.source.is_inference(),
             source: def.source,
             priority: def.priority,
@@ -2041,22 +2086,24 @@ impl DeviceRt {
     /// queued work and in-flight transfers are dropped, every live context
     /// ends without a completion record, and the device stops processing
     /// events. Returns `(lost_blocks, survivors)` where `survivors` holds
-    /// each live context's name and *fully completed* source units at the
-    /// instant of failure — what an exactly-at-failure checkpoint would
-    /// have preserved (a periodic checkpoint preserves at most this much).
-    pub fn fail_now(&mut self) -> (u32, Vec<(String, u32)>) {
-        let survivors: Vec<(String, u32)> = self
+    /// each live context's interned id ([`DeviceRt::ctx_name`] renders
+    /// it) and *fully completed* source units at the instant of failure —
+    /// what an exactly-at-failure checkpoint would have preserved (a
+    /// periodic checkpoint preserves at most this much).
+    pub fn fail_now(&mut self) -> (u32, Vec<(CtxId, u32)>) {
+        let survivors: Vec<(CtxId, u32)> = self
             .ctxs
             .iter()
-            .filter(|c| c.state != CtxState::Done)
-            .map(|c| {
+            .enumerate()
+            .filter(|(_, c)| c.state != CtxState::Done)
+            .map(|(ctx, c)| {
                 let emitted = c.source.units_emitted();
                 let mid_unit = c.source.unit_in_progress()
                     || matches!(
                         c.state,
                         CtxState::RunningKernel | CtxState::Transferring | CtxState::InGap
                     );
-                (c.name.clone(), emitted.saturating_sub(mid_unit as u32))
+                (ctx, emitted.saturating_sub(mid_unit as u32))
             })
             .collect();
         let lost = self.inflight_total;
@@ -2119,7 +2166,8 @@ impl DeviceRt {
     /// checkpoint taken at this instant preserves (the in-flight unit is
     /// lost, exactly what a checkpoint restore loses).
     pub fn ctx_completed_units(&self, name: &str) -> Option<u32> {
-        let c = self.ctxs.iter().find(|c| c.name == name)?;
+        let ctx = self.ctx_names.iter().position(|n| n == name)?;
+        let c = &self.ctxs[ctx];
         if c.state == CtxState::Done {
             return None;
         }
@@ -2392,12 +2440,12 @@ mod tests {
                 }
             }
             eng.check_all_sms();
-            for c in &eng.ctxs {
+            for (c, ctx) in eng.ctxs.iter().enumerate() {
                 assert!(
-                    c.threads_resident <= cap,
+                    ctx.threads_resident <= cap,
                     "ctx '{}' resident {} > cap {cap}",
-                    c.name,
-                    c.threads_resident
+                    eng.ctx_names[c],
+                    ctx.threads_resident
                 );
             }
             if eng.ctxs.iter().all(|c| c.state == CtxState::Done) {
@@ -2781,7 +2829,7 @@ mod tests {
                 assert!(
                     ctx.threads_resident <= caps[c],
                     "ctx '{}' resident {} > instance cap {}",
-                    ctx.name,
+                    eng.ctx_names[c],
                     ctx.threads_resident,
                     caps[c]
                 );

@@ -115,6 +115,21 @@ pub struct GovernorRt {
     recording: bool,
 }
 
+/// Single-touch pop of the next component key due at or before `horizon`
+/// — the component-heap mirror of [`crate::sim::EventQueue::pop_due`]:
+/// one call decides *and* extracts, so the §7f claim loop touches the
+/// heap head once per entry instead of peek-then-pop twice.
+#[inline]
+fn pop_component_due(
+    heap: &mut BinaryHeap<Reverse<(SimTime, usize)>>,
+    horizon: SimTime,
+) -> Option<usize> {
+    match heap.peek() {
+        Some(&Reverse((at, _))) if at <= horizon => heap.pop().map(|Reverse((_, d))| d),
+        _ => None,
+    }
+}
+
 impl GovernorRt {
     pub fn new(rts: Vec<Option<DeviceRt>>, parallel: bool) -> GovernorRt {
         let ndev = rts.len();
@@ -234,11 +249,7 @@ impl GovernorRt {
         }
         let mut busy = std::mem::take(&mut self.scratch_busy);
         busy.clear();
-        while let Some(&Reverse((at, d))) = self.heap.peek() {
-            if at > t {
-                break;
-            }
-            self.heap.pop();
+        while let Some(d) = pop_component_due(&mut self.heap, t) {
             if self.busy_mark[d] {
                 continue; // duplicate entry for a device already claimed
             }
@@ -462,8 +473,16 @@ impl GovernorRt {
     /// [`DeviceRt::fail_now`]): resident cohorts are lost, live contexts
     /// end without completion records. Returns `(lost_blocks, survivors)`
     /// where survivors carry each live job's completed units at failure.
+    /// The device hands back interned [`crate::sched::CtxId`]s; names are
+    /// rendered here, once, at the (rare) failure instant — recovery
+    /// bookkeeping wants them, the hot path never does.
     pub fn fail_device(&mut self, d: usize) -> Result<(u32, Vec<(String, u32)>)> {
-        let (lost, survivors) = self.device_mut(d)?.fail_now();
+        let rt = self.device_mut(d)?;
+        let (lost, survivors) = rt.fail_now();
+        let survivors = survivors
+            .into_iter()
+            .map(|(ctx, done)| (rt.ctx_name(ctx).to_string(), done))
+            .collect();
         self.record(d, GovEventKind::Fail, || format!("lost_blocks={lost}"));
         Ok((lost, survivors))
     }
@@ -501,9 +520,11 @@ impl GovernorRt {
             if rt.finished() || !rt.stalled() {
                 continue;
             }
-            for name in rt.live_ctx_names() {
-                if rt.retire_ctx(&name).is_ok() {
-                    killed.push((d, name));
+            // id-based sweep (§8b): no name cloning unless a kill lands,
+            // and then exactly one render per killed job.
+            for ctx in 0..rt.ctx_count() {
+                if rt.ctx_live(ctx) && rt.retire_ctx_id(ctx).is_ok() {
+                    killed.push((d, rt.ctx_name(ctx).to_string()));
                 }
             }
         }

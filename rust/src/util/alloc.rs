@@ -1,0 +1,52 @@
+//! Counting global allocator (§8b): the enforcement half of the
+//! "steady-state event loop performs no allocation" claim.
+//!
+//! [`CountingAlloc`] wraps the system allocator and counts every
+//! `alloc`/`alloc_zeroed`/`realloc` call (deallocations are free to the
+//! claim and not counted). It is registered as the `#[global_allocator]`
+//! only under the `alloc-count` feature — see `lib.rs` — so the normal
+//! build pays nothing; the `alloc_gate` binary (which requires the
+//! feature) runs the gated scenarios and compares allocations-per-event
+//! against the committed budgets in `ALLOC_budget.json`.
+//!
+//! Counters are relaxed atomics: probes run their scenarios
+//! single-threaded for stable numbers, and the count is read only between
+//! scenario runs, so ordering never matters.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// System-allocator wrapper that counts allocation calls. Does nothing
+/// unless registered as the global allocator (`alloc-count` feature).
+pub struct CountingAlloc;
+
+// SAFETY: defers every operation to `System`, adding only a relaxed
+// counter bump — the layout contracts are untouched.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Allocation calls counted so far. Always `0` unless [`CountingAlloc`]
+/// is the registered global allocator (`alloc-count` feature).
+pub fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}

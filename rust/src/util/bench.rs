@@ -249,6 +249,64 @@ impl Bencher {
     }
 }
 
+/// One allocation-count measurement (§8b): allocator calls over a scenario
+/// window, normalized per 1000 simulated events. Produced by
+/// [`alloc_probe`]; gated by the `alloc_gate` binary against the budgets
+/// committed in `ALLOC_budget.json`.
+#[derive(Clone, Debug)]
+pub struct AllocProbe {
+    pub name: String,
+    /// Allocation calls counted inside the probe window.
+    pub allocs: u64,
+    /// Simulated events processed inside the probe window.
+    pub events: u64,
+}
+
+impl AllocProbe {
+    /// Allocations per 1000 events — the gated metric. Amortized container
+    /// doublings show up as a small constant here; per-event allocation
+    /// shows up as ≥1000.
+    pub fn per_1k_events(&self) -> f64 {
+        if self.events == 0 {
+            return f64::INFINITY;
+        }
+        self.allocs as f64 * 1000.0 / self.events as f64
+    }
+
+    pub fn report_line(&self, budget: Option<f64>) -> String {
+        let verdict = match budget {
+            Some(b) if self.per_1k_events() <= b => format!("≤ {b:.1} ok"),
+            Some(b) => format!("> {b:.1} FAIL"),
+            None => "(no budget)".to_string(),
+        };
+        format!(
+            "{:<44} {:>10} allocs {:>12} events {:>10.2} per-1k  {}",
+            self.name,
+            self.allocs,
+            self.events,
+            self.per_1k_events(),
+            verdict
+        )
+    }
+}
+
+/// Measure allocator calls across `f` (which returns the number of
+/// simulated events its window covered). Meaningful only when the
+/// `alloc-count` feature has registered the counting allocator; without
+/// it the count reads 0 and the probe would vacuously pass, so callers
+/// gate themselves behind the feature (`alloc_gate` via
+/// `required-features`).
+pub fn alloc_probe(name: &str, f: impl FnOnce() -> u64) -> AllocProbe {
+    let before = crate::util::alloc::alloc_count();
+    let events = f();
+    let allocs = crate::util::alloc::alloc_count().saturating_sub(before);
+    AllocProbe {
+        name: name.to_string(),
+        allocs,
+        events,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

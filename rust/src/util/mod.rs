@@ -2,6 +2,7 @@
 //! ships the vendor set from /opt/xla-example (no rand/clap/criterion/
 //! proptest). See DESIGN.md §2 "Dependency reality".
 
+pub mod alloc;
 pub mod bench;
 pub mod cli;
 pub mod error;

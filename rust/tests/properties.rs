@@ -8,6 +8,7 @@ use gpushare::gpu::{
 };
 use gpushare::preempt::HidingAnalysis;
 use gpushare::sched::{run, CtxDef, EngineConfig, Mechanism};
+use gpushare::sim::queue::shadow::ShadowQueue;
 use gpushare::sim::{EventQueue, MS, US};
 use gpushare::util::prop::{check, check_eq, check_le, run_prop, Gen, PropConfig};
 use gpushare::util::rng::Rng;
@@ -452,6 +453,57 @@ fn prop_event_queue_total_order() {
         for w in fifo_check.windows(2) {
             if w[0].0 == w[1].0 {
                 check(w[0].1 < w[1].1, "FIFO within equal times")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_arena_queue_matches_shadow() {
+    // §8b differential: the arena/SoA queue and the historical
+    // payload-in-heap implementation (`sim::queue::shadow`) produce
+    // identical pop sequences, watermarks and clear semantics under
+    // random interleaved push/pop streams — the §8a nothing-may-reorder
+    // rule applied to the storage rewrite.
+    run_prop("arena-queue-vs-shadow", cfgd(), |g| {
+        let mut arena = EventQueue::new();
+        let mut shadow = ShadowQueue::new();
+        let steps = g.usize(1, 400);
+        let mut next_id = 0u32;
+        for _ in 0..steps {
+            if g.chance(0.6) || arena.is_empty() {
+                // at or after the watermark (pushing in the past panics)
+                let t = arena.watermark() + g.u64(0, 50);
+                arena.push(t, next_id);
+                shadow.push(t, next_id);
+                next_id += 1;
+            } else {
+                check_eq(arena.pop(), shadow.pop(), "interleaved pop")?;
+                check_eq(arena.watermark(), shadow.watermark(), "watermark")?;
+            }
+            check_eq(arena.len(), shadow.len(), "len")?;
+            check_eq(arena.peek_time(), shadow.peek_time(), "peek_time")?;
+            // peek reads the arena payload in place; it must agree with
+            // what the shadow will pop next
+            if let Some((t, &id)) = arena.peek() {
+                check_eq(Some(t), shadow.peek_time(), "peek time agrees")?;
+                check(id < next_id, "peeked id was pushed")?;
+            }
+        }
+        if g.chance(0.5) {
+            // clear-and-reuse mid-stream: both rewind seq + watermark
+            arena.clear();
+            shadow.clear();
+            check_eq(arena.watermark(), shadow.watermark(), "cleared watermark")?;
+            arena.push(1, 0);
+            shadow.push(1, 0);
+        }
+        loop {
+            let (a, s) = (arena.pop(), shadow.pop());
+            check_eq(a, s, "drain pop")?;
+            if a.is_none() {
+                break;
             }
         }
         Ok(())
