@@ -6,7 +6,10 @@
 use gpushare::coordinator::batcher::{BatchRunner, Batcher, BatcherConfig};
 use gpushare::coordinator::{serve, GovernorMode, ServeConfig};
 use gpushare::exp::cluster::cluster_sweep_events;
-use gpushare::exp::control::{chaos_sweep_events, control_inline_sweep_events, control_sweep_events};
+use gpushare::exp::control::{
+    chaos_sweep_events, control_inline_observed_sweep_events, control_inline_sweep_events,
+    control_sweep_events,
+};
 use gpushare::exp::{mig_mechanisms, run_parallel, Job, Protocol};
 use gpushare::gpu::DeviceConfig;
 use gpushare::runtime::{MockExecutor, ModelExecutor};
@@ -306,6 +309,24 @@ fn main() {
         |iters| {
             for _ in 0..iters {
                 black_box(control_inline_sweep_events(&control_proto));
+            }
+        },
+    );
+
+    // --- the telemetry-on twin of the in-clock sweep (§8c): identical
+    // workload with the counter registry, occupancy sampling, and
+    // contention attribution live — the perf gate's telemetry-overhead
+    // ratio pins this entry against the telemetry-off one above ---
+    let observed_events = gated_probe(
+        "in-clock telemetry-on sweep",
+        control_inline_observed_sweep_events(&control_proto),
+    );
+    sweep_bench.bench_items(
+        &format!("sweep: control in-clock telemetry-on ({observed_events} events)"),
+        Some(observed_events),
+        |iters| {
+            for _ in 0..iters {
+                black_box(control_inline_observed_sweep_events(&control_proto));
             }
         },
     );

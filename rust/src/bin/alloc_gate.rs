@@ -19,13 +19,18 @@
 //! * `alloc: in-clock governed sweep` / `alloc: chaos recovery sweep` —
 //!   whole governed runs (setup, placement, staged actions, recovery
 //!   included), gating the per-wake scratch reuse end to end.
+//! * `alloc: in-clock governed sweep, telemetry on` — the same in-clock
+//!   run with the §8c telemetry plane attached: registration allocates
+//!   once, the steady-state hooks must not.
 //!
 //! `--update` ratchets budgets *downward only*: a passing run rewrites
 //! each budget to `min(committed, measured * 1.25 + 0.5)`. The committed
 //! numbers start conservative (a ceiling any runner clears); they only
 //! ever tighten, mirroring `perf_gate --update`'s upward-only floors.
 
-use gpushare::exp::control::{chaos_sweep_events, control_inline_sweep_events};
+use gpushare::exp::control::{
+    chaos_sweep_events, control_inline_observed_sweep_events, control_inline_sweep_events,
+};
 use gpushare::exp::Protocol;
 use gpushare::sched::Mechanism;
 use gpushare::sim::SimTime;
@@ -124,6 +129,16 @@ fn run() -> Result<bool, String> {
             let mut proto = Protocol::fast();
             proto.parallel = false;
             chaos_sweep_events(&proto)
+        }),
+        // Telemetry-on twin of the in-clock sweep (§8c): registration
+        // (registry, rings, matrices) is allowed; the steady state —
+        // counter bumps, histogram observes, attribution billing through
+        // the reused culprit scratch — must stay allocation-free, so the
+        // budget is only modestly above the telemetry-off probe's.
+        alloc_probe("alloc: in-clock governed sweep, telemetry on", || {
+            let mut proto = Protocol::fast();
+            proto.parallel = false;
+            control_inline_observed_sweep_events(&proto)
         }),
     ];
 

@@ -1,0 +1,138 @@
+//! CI telemetry-export step (§8c): run the two in-clock governed
+//! scenarios with the telemetry plane and the flight recorder both
+//! attached, and emit their metrics snapshots and Perfetto timelines as
+//! artifacts next to the trace-replay logs.
+//!
+//! Usage: obs_export  (GPUSHARE_BENCH_FAST=1 shrinks the protocol;
+//!        GPUSHARE_BENCH_OUT overrides the artifact directory)
+//!
+//! Artifacts (for `actions/upload-artifact` and ui.perfetto.dev):
+//!   METRICS_bursty.json / METRICS_chaos.json     gpushare-metrics-v1 snapshots
+//!   PERFETTO_bursty.json / PERFETTO_chaos.json   Chrome-trace timelines
+//!
+//! Loud-fail contract: a scenario that produces zero simulated events,
+//! zero telemetry counters, or a Perfetto export that fails validation
+//! exits 2 — an empty export must never upload green.
+
+use gpushare::exp::control::{bursty_reslice_inline_observed, chaos_recovery_observed};
+use gpushare::exp::Protocol;
+use gpushare::obs::perfetto::{perfetto_json, validate_chrome_trace};
+use gpushare::obs::{ctr, ObsConfig, ObsReport};
+use gpushare::trace::{TraceConfig, TraceLog};
+use gpushare::util::table::bench_out_dir;
+use std::process::ExitCode;
+
+/// Same ring capacity as the trace-replay gate: the Perfetto timeline is
+/// assembled from the recorded events, so nothing may be dropped.
+const RING: usize = 1 << 16;
+
+fn proto() -> Protocol {
+    if std::env::var("GPUSHARE_BENCH_FAST").is_ok() {
+        Protocol {
+            requests: 6,
+            train_steps: 2,
+            ..Protocol::default()
+        }
+    } else {
+        Protocol {
+            requests: 8,
+            train_steps: 4,
+            ..Protocol::default()
+        }
+    }
+}
+
+/// Validate and write one scenario's metrics + Perfetto artifacts.
+fn export(
+    dir: &std::path::Path,
+    tag: &str,
+    total_events: u64,
+    log: &TraceLog,
+    obs: &ObsReport,
+) -> Result<(), String> {
+    if total_events == 0 {
+        return Err(format!(
+            "{tag}: scenario produced an empty report (0 simulated events) — \
+             the export would be vacuous"
+        ));
+    }
+    if obs.counters.get(ctr::KERNELS_DISPATCHED).copied().unwrap_or(0) == 0 {
+        return Err(format!(
+            "{tag}: telemetry saw no kernel dispatches — \
+             the plane is not reaching the engine"
+        ));
+    }
+    if obs.counters.get(ctr::CONTROL_WAKES).copied().unwrap_or(0) == 0 {
+        return Err(format!(
+            "{tag}: telemetry saw no control wakes — \
+             the plane is not reaching the governor"
+        ));
+    }
+    if log.dropped > 0 {
+        return Err(format!(
+            "{tag}: {} trace events dropped (ring {}) — \
+             the Perfetto timeline would be truncated; raise RING",
+            log.dropped, log.capacity
+        ));
+    }
+    let metrics = obs.to_json();
+    let timeline = perfetto_json(log, obs);
+    let n = validate_chrome_trace(&timeline)
+        .map_err(|e| format!("{tag}: Perfetto export failed validation: {e}"))?;
+    if n == 0 {
+        return Err(format!("{tag}: Perfetto export carries zero events"));
+    }
+    let mpath = dir.join(format!("METRICS_{tag}.json"));
+    std::fs::write(&mpath, &metrics)
+        .map_err(|e| format!("cannot write {}: {e}", mpath.display()))?;
+    let ppath = dir.join(format!("PERFETTO_{tag}.json"));
+    std::fs::write(&ppath, &timeline)
+        .map_err(|e| format!("cannot write {}: {e}", ppath.display()))?;
+    println!(
+        "{tag}: wrote {} ({} counters live) and {} ({n} timeline events)",
+        mpath.display(),
+        obs.counters.iter().filter(|&&c| c > 0).count(),
+        ppath.display()
+    );
+    Ok(())
+}
+
+fn run() -> Result<(), String> {
+    let proto = proto();
+    let trace = TraceConfig::enabled(RING);
+    let obs_cfg = ObsConfig::default();
+    let dir = bench_out_dir();
+    std::fs::create_dir_all(&dir).map_err(|e| format!("cannot create {}: {e}", dir.display()))?;
+
+    let (bursty_cmp, bursty_log, bursty_obs) =
+        bursty_reslice_inline_observed(&proto, &trace, &obs_cfg);
+    export(
+        &dir,
+        "bursty",
+        bursty_cmp.total_events(),
+        &bursty_log,
+        &bursty_obs,
+    )?;
+
+    let (chaos_cmp, chaos_log, chaos_obs) = chaos_recovery_observed(&proto, &trace, &obs_cfg);
+    export(
+        &dir,
+        "chaos",
+        chaos_cmp.total_events(),
+        &chaos_log,
+        &chaos_obs,
+    )?;
+
+    println!("obs-export: both scenarios exported and validated");
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("obs_export: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -4,7 +4,7 @@
 //!
 //! Usage:
 //!   perf_gate <BENCH_baseline.json> <BENCH_perf.json> [--tolerance 0.15]
-//!             [--all] [--update] [--ratio "A=B" ...] [--markdown FILE]
+//!             [--all] [--update] [--ratio "A=B[@tol]" ...] [--markdown FILE]
 //!
 //! * Only entries whose names start with `sim:` or `sweep:` gate by
 //!   default (events/sec — the stable, machine-comparable series);
@@ -20,7 +20,10 @@
 //!   tolerance below `baseline(A)/baseline(B)`. Absolute floors move with
 //!   runner speed; the ratio pins a structural overhead — e.g. the
 //!   governed in-clock floor over the ungoverned sweep floor (§7f) —
-//!   so a regression in one side cannot hide behind a fast machine.
+//!   so a regression in one side cannot hide behind a fast machine. An
+//!   optional `@tol` suffix ("A=B@0.05") overrides the global tolerance
+//!   for that ratio alone — tight pins (the telemetry-overhead bound,
+//!   §8c) coexist with the conservative default.
 //! * `--markdown FILE` writes the comparison (absolute floors *and* ratio
 //!   gates) as a markdown table — the `BENCH_trajectory.md` artifact CI
 //!   uploads. Written before the pass/fail verdict, so a failing run still
@@ -82,7 +85,7 @@ fn run() -> Result<bool, String> {
     let mut all = false;
     let mut update = false;
     let mut markdown: Option<String> = None;
-    let mut ratios: Vec<(String, String)> = Vec::new();
+    let mut ratios: Vec<(String, String, Option<f64>)> = Vec::new();
     let mut it = args.into_iter();
     while let Some(a) = it.next() {
         match a.as_str() {
@@ -96,14 +99,30 @@ fn run() -> Result<bool, String> {
                 markdown = Some(it.next().ok_or("--markdown needs a file path")?);
             }
             "--ratio" => {
-                let v = it.next().ok_or("--ratio needs \"A=B\"")?;
-                let (a, b) = v
+                let v = it.next().ok_or("--ratio needs \"A=B\" or \"A=B@tol\"")?;
+                // Optional per-ratio tolerance: "A=B@0.05" pins this ratio
+                // tighter (or looser) than the global --tolerance — e.g.
+                // the telemetry-overhead pin gates at 5% while the
+                // absolute floors keep the conservative 15%.
+                let (spec, tol) = match v.rsplit_once('@') {
+                    Some((spec, t)) => {
+                        let t = t
+                            .parse::<f64>()
+                            .map_err(|e| format!("--ratio {v:?}: bad tolerance: {e}"))?;
+                        if !(0.0..1.0).contains(&t) {
+                            return Err(format!("--ratio {v:?}: tolerance {t} not in [0, 1)"));
+                        }
+                        (spec, Some(t))
+                    }
+                    None => (v.as_str(), None),
+                };
+                let (a, b) = spec
                     .split_once('=')
                     .ok_or_else(|| format!("--ratio {v:?}: expected \"A=B\""))?;
                 if a.is_empty() || b.is_empty() {
                     return Err(format!("--ratio {v:?}: both names must be non-empty"));
                 }
-                ratios.push((a.to_string(), b.to_string()));
+                ratios.push((a.to_string(), b.to_string(), tol));
             }
             _ => paths.push(a),
         }
@@ -111,7 +130,7 @@ fn run() -> Result<bool, String> {
     let [baseline_path, fresh_path] = paths.as_slice() else {
         return Err(
             "usage: perf_gate <BENCH_baseline.json> <BENCH_perf.json> \
-             [--tolerance 0.15] [--all] [--update] [--ratio \"A=B\" ...] \
+             [--tolerance 0.15] [--all] [--update] [--ratio \"A=B[@tol]\" ...] \
              [--markdown FILE]"
                 .to_string(),
         );
@@ -170,7 +189,7 @@ fn run() -> Result<bool, String> {
     let mut ratio_failures: Vec<String> = Vec::new();
     // (label, baseline ratio, fresh ratio) rows for --markdown.
     let mut ratio_rows: Vec<(String, f64, f64)> = Vec::new();
-    for (a, b) in &ratios {
+    for (a, b, per_tol) in &ratios {
         let find = |entries: &[Entry], name: &str| -> Result<f64, String> {
             entries
                 .iter()
@@ -178,10 +197,11 @@ fn run() -> Result<bool, String> {
                 .map(|e| e.throughput)
                 .ok_or_else(|| format!("--ratio: no benchmark named {name:?}"))
         };
+        let tol = per_tol.unwrap_or(tolerance);
         let base_ratio = find(&baseline, a)? / find(&baseline, b)?;
         let fresh_ratio = find(&fresh, a)? / find(&fresh, b)?;
         let delta = fresh_ratio / base_ratio - 1.0;
-        let verdict = if fresh_ratio < base_ratio * (1.0 - tolerance) {
+        let verdict = if fresh_ratio < base_ratio * (1.0 - tol) {
             ratio_failed += 1;
             ratio_failures.push(format!(
                 "  {} / {}: measured {:.3} below pinned bound {:.3} \
@@ -189,9 +209,9 @@ fn run() -> Result<bool, String> {
                 normalized(a),
                 normalized(b),
                 fresh_ratio,
-                base_ratio * (1.0 - tolerance),
+                base_ratio * (1.0 - tol),
                 base_ratio,
-                tolerance * 100.0
+                tol * 100.0
             ));
             "FAIL"
         } else {

@@ -79,6 +79,20 @@ fn gate(
              the gate would be vacuous"
         ));
     }
+    // A truncated ring cannot support stateful replay — early decisions
+    // the policy's state depends on are gone. Gating on it would compare
+    // a replay against a partial history and could fail (or pass)
+    // spuriously. Surface the overflow loudly and skip the diff instead
+    // of silently green-lighting a lossy recording (§8c).
+    if log.dropped > 0 {
+        write_artifacts(dir, tag, log)?;
+        println!(
+            "::warning title=trace ring overflow::{tag}: {} of {} trace events dropped \
+             (ring capacity {}); decision-replay gate skipped for this scenario",
+            log.dropped, log.seen, log.capacity
+        );
+        return Ok(DecisionDiff::default());
+    }
     let recorded = DecisionTrace::recorded(log);
     if recorded.points.is_empty() {
         return Err(format!(

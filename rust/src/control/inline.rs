@@ -806,6 +806,7 @@ fn run_phase_inclock(
     phases_total: usize,
     fault: &mut FaultStats,
     sink: &mut TraceSink,
+    obs: &mut crate::obs::ObsSink,
 ) -> (ClusterRunReport, Vec<InlineActionRecord>, SignalFrame) {
     sink.emit(|| TraceEvent::PhaseStart {
         phase: phase_idx,
@@ -818,6 +819,11 @@ fn run_phase_inclock(
     let mut gov = GovernorRt::new(rts, run_cfg.parallel);
     gov.set_lockstep(lockstep);
     gov.set_recording(sink.is_enabled());
+    // Attach the telemetry plane (§8c) — read-only hooks, so the run is
+    // byte-identical with or without it (tests/obs.rs gates on this).
+    if let Some(reg) = obs.registry() {
+        gov.set_obs(reg, obs.cfg());
+    }
     // Devices already draining (a failure carried in from a prior phase)
     // start masked — placement gave them nothing, but the mask keeps the
     // semantics uniform.
@@ -1034,6 +1040,7 @@ fn run_phase_inclock(
                 if let Some(pin) = fleet.pins.iter_mut().find(|p| p.job == c.job) {
                     pin.ckpt_units = base0 + done;
                     fault.checkpoints += 1;
+                    obs.inc(crate::obs::ctr::CHECKPOINTS);
                 }
             }
             if !fleet.draining[c.device] {
@@ -1164,6 +1171,7 @@ fn run_phase_inclock(
         // Cadence wake: observe the window, let the policy decide, stage.
         if wake_fires {
             wake_no += 1;
+            obs.inc(crate::obs::ctr::CONTROL_WAKES);
             // Heartbeat detection (§7d): faults took physical effect at
             // their instants; the governor only *learns* of them now —
             // the fleet bookkeeping lands here, latency billed.
@@ -1173,6 +1181,7 @@ fn run_phase_inclock(
             for (t_ev, ev) in pending_detect.drain(..) {
                 apply_fleet_event(fleet, &ev);
                 fault.detected += 1;
+                obs.inc(crate::obs::ctr::FAULTS_DETECTED);
                 fault.detect_latency_ns += t.saturating_sub(t_ev);
                 sink.emit(|| TraceEvent::FaultDetected {
                     phase: phase_idx,
@@ -1216,6 +1225,7 @@ fn run_phase_inclock(
             });
             if !actions.is_empty() {
                 quiet = false;
+                obs.add(crate::obs::ctr::ACTIONS_STAGED, actions.len() as u64);
             }
             for action in actions {
                 stage_action(
@@ -1280,6 +1290,22 @@ fn run_phase_inclock(
             detail: ge.detail,
         });
     }
+    // Action disposition accounting (§8c) at one site: every in-clock
+    // record lands in `records`, whether applied, rejected, or abandoned.
+    if obs.is_enabled() {
+        for r in &records {
+            if r.record.applied {
+                obs.inc(crate::obs::ctr::ACTIONS_APPLIED);
+                obs.observe(
+                    crate::obs::hist::ACTION_LATENCY_NS,
+                    r.applied_ns.saturating_sub(r.decided_ns),
+                );
+            } else {
+                obs.inc(crate::obs::ctr::ACTIONS_REJECTED);
+            }
+        }
+        obs.absorb_phase(phase_idx, gov.take_obs());
+    }
     let reports = gov.into_reports();
     let makespan_ns = reports
         .iter()
@@ -1332,7 +1358,8 @@ pub fn run_governed_inline(
     gov_cfg: &GovernorConfig,
 ) -> ControlReport {
     let mut sink = TraceSink::disabled();
-    run_governed_inline_sink(fleet, phases, policy, cfg, gov_cfg, &mut sink)
+    let mut obs = crate::obs::ObsSink::disabled();
+    run_governed_inline_sink(fleet, phases, policy, cfg, gov_cfg, &mut sink, &mut obs)
 }
 
 /// [`run_governed_inline`] with the flight recorder attached (§7e).
@@ -1349,9 +1376,39 @@ pub fn run_governed_traced(
     trace: &TraceConfig,
 ) -> (ControlReport, TraceLog) {
     let mut sink = TraceSink::from_config(trace);
-    let report = run_governed_inline_sink(fleet, phases, policy, cfg, gov_cfg, &mut sink);
+    let mut obs = crate::obs::ObsSink::disabled();
+    let mut report =
+        run_governed_inline_sink(fleet, phases, policy, cfg, gov_cfg, &mut sink, &mut obs);
+    report.trace_dropped = sink.dropped();
     let log = sink.into_log("", &report.policy);
     (report, log)
+}
+
+/// [`run_governed_traced`] with the telemetry plane attached as well
+/// (§8c): the registry counts control wakes, staged/applied actions,
+/// detections, and checkpoints; every phase's governor contributes
+/// per-device occupancy timelines and contention-attribution matrices.
+/// Telemetry only reads — the returned `ControlReport` is byte-identical
+/// to the unobserved run (property-tested in `tests/obs.rs`). The sealed
+/// [`ObsReport`](crate::obs::ObsReport) comes back with `scenario` empty
+/// for the caller to fill, mirroring the trace log.
+pub fn run_governed_observed(
+    fleet: &mut FleetState,
+    phases: &[PhaseSpec],
+    policy: &mut dyn Policy,
+    cfg: &ControlConfig,
+    gov_cfg: &GovernorConfig,
+    trace: &TraceConfig,
+    obs_cfg: &crate::obs::ObsConfig,
+) -> (ControlReport, TraceLog, crate::obs::ObsReport) {
+    let mut sink = TraceSink::from_config(trace);
+    let mut obs = crate::obs::ObsSink::enabled(*obs_cfg);
+    let mut report =
+        run_governed_inline_sink(fleet, phases, policy, cfg, gov_cfg, &mut sink, &mut obs);
+    report.trace_dropped = sink.dropped();
+    let log = sink.into_log("", &report.policy);
+    let obs_report = obs.into_report("", &report.policy);
+    (report, log, obs_report)
 }
 
 fn run_governed_inline_sink(
@@ -1361,6 +1418,7 @@ fn run_governed_inline_sink(
     cfg: &ControlConfig,
     gov_cfg: &GovernorConfig,
     sink: &mut TraceSink,
+    obs: &mut crate::obs::ObsSink,
 ) -> ControlReport {
     let mut outcomes: Vec<PhaseOutcome> = Vec::with_capacity(phases.len());
     let mut total_span_ns: SimTime = 0;
@@ -1413,6 +1471,7 @@ fn run_governed_inline_sink(
                     phases.len(),
                     &mut fault,
                     sink,
+                    obs,
                 );
                 for ev in &phase.end_events {
                     apply_fleet_event(fleet, ev);
@@ -1443,6 +1502,17 @@ fn run_governed_inline_sink(
             .iter()
             .map(|a| fleet.apply_traced(a, Some(&report), i, frame.makespan_ns, sink))
             .collect();
+        // Boundary actions decide and land at the same instant, so they
+        // count toward the action totals but not the latency histogram.
+        if obs.is_enabled() {
+            for r in &records {
+                obs.inc(if r.applied {
+                    crate::obs::ctr::ACTIONS_APPLIED
+                } else {
+                    crate::obs::ctr::ACTIONS_REJECTED
+                });
+            }
+        }
         debug_assert!(fleet.check().is_ok());
         // Actions at one boundary overlap; no boundary after the last phase.
         let gap_ns = if i + 1 < phases.len() {
@@ -1472,6 +1542,7 @@ fn run_governed_inline_sink(
         phases: outcomes,
         total_span_ns,
         fault,
+        trace_dropped: 0,
     }
 }
 

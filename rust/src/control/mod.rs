@@ -32,7 +32,10 @@ pub mod policy;
 pub mod signal;
 
 pub use actuate::{ActionRecord, FleetState};
-pub use inline::{run_governed_inline, run_governed_traced, GovernorConfig, InlineActionRecord};
+pub use inline::{
+    run_governed_inline, run_governed_observed, run_governed_traced, GovernorConfig,
+    InlineActionRecord,
+};
 pub use policy::{Action, FailRecover, GapDecision, GapPolicy, Policy, PolicyCtx};
 pub use signal::{LaneSignal, SignalFrame};
 
@@ -262,6 +265,11 @@ pub struct ControlReport {
     /// Fault-plane accounting over the whole run (§7d) — all zeros when
     /// no faults were injected.
     pub fault: FaultStats,
+    /// Trace events lost to ring overflow during a traced run (§8c).
+    /// 0 on untraced runs and on traced runs whose ring kept up; only a
+    /// non-zero count appears in the JSON, so the traced≡untraced byte
+    /// oracle is unaffected.
+    pub trace_dropped: u64,
 }
 
 impl ControlReport {
@@ -368,7 +376,11 @@ impl ControlReport {
             }
             j.push_str("]}");
         }
-        j.push_str("]}");
+        j.push(']');
+        if self.trace_dropped > 0 {
+            let _ = write!(j, ",\"trace_dropped\":{}", self.trace_dropped);
+        }
+        j.push('}');
         j
     }
 }

@@ -172,6 +172,8 @@ impl ClusterTicket {
         }
         let mut rs = self.router.route.lock().unwrap();
         rs.account.release(self.lane, &ClusterVec::new(0, 1, 0));
+        drop(rs);
+        self.router.obs_inc(crate::obs::ctr::FLEET_RELEASES);
     }
 
     /// Wait for the response, recording stats and releasing the lane's
@@ -219,6 +221,10 @@ pub struct ClusterRouter {
     policy: ClusterRoutePolicy,
     route: Mutex<RouteState>,
     pub stats: Mutex<ClusterRouterStats>,
+    /// Telemetry registry (§8c), attached at most once. When absent every
+    /// billing site is a branch on a cold `OnceLock` — the serving hot
+    /// path pays nothing for the plane it isn't using.
+    obs: std::sync::OnceLock<Arc<crate::obs::Registry>>,
 }
 
 impl ClusterRouter {
@@ -256,7 +262,29 @@ impl ClusterRouter {
                 lane_turnaround_ms: vec![Welford::new(); n],
                 ..Default::default()
             }),
+            obs: std::sync::OnceLock::new(),
         })
+    }
+
+    /// Attach the telemetry registry (§8c): slot commits/releases and
+    /// governor ticks bill fleet counters from here on. Idempotent — the
+    /// first registry wins.
+    pub fn attach_obs(&self, reg: Arc<crate::obs::Registry>) {
+        let _ = self.obs.set(reg);
+    }
+
+    #[inline]
+    fn obs_inc(&self, idx: usize) {
+        if let Some(r) = self.obs.get() {
+            r.inc(idx);
+        }
+    }
+
+    #[inline]
+    fn obs_add(&self, idx: usize, n: u64) {
+        if let Some(r) = self.obs.get() {
+            r.add(idx, n);
+        }
     }
 
     pub fn lane_name(&self, lane: usize) -> &str {
@@ -301,6 +329,7 @@ impl ClusterRouter {
             if let Some(d) = pick {
                 let ok = state.account.commit(d, &unit);
                 debug_assert!(ok, "policy chose a full lane");
+                self.obs_inc(crate::obs::ctr::FLEET_COMMITS);
             }
             pick
         };
@@ -310,6 +339,7 @@ impl ClusterRouter {
         };
         if input.len() != self.lanes[lane].batcher.in_features() {
             self.route.lock().unwrap().account.release(lane, &unit);
+            self.obs_inc(crate::obs::ctr::FLEET_RELEASES);
             self.stats.lock().unwrap().rejected += 1;
             return None;
         }
@@ -396,6 +426,7 @@ impl ClusterRouter {
             }
             let ok = rs.account.commit(lane, &unit);
             debug_assert!(ok, "fits() admitted a full lane");
+            self.obs_inc(crate::obs::ctr::FLEET_COMMITS);
         }
         let input = vec![0.0; self.lanes[lane].batcher.in_features()];
         let (id, rx) = self.lanes[lane].batcher.submit(input);
@@ -821,7 +852,7 @@ pub fn serve_cluster_routed(
     cfg: ClusterServeConfig,
     lanes: Vec<(ClusterLaneSpec, LaneRunnerFactory)>,
 ) -> ClusterServeReport {
-    serve_cluster_inner(cfg, lanes, None, &TraceConfig::disabled()).0
+    serve_cluster_inner(cfg, lanes, None, &TraceConfig::disabled(), None).0
 }
 
 /// [`serve_cluster_routed`] with a live governor: every `tick` of wall
@@ -853,7 +884,33 @@ pub fn serve_cluster_governed_traced(
 ) -> GovernedServeReport {
     let name = policy.name();
     let (base, ticks, actions, final_slots, trace) =
-        serve_cluster_inner(cfg, lanes, Some((policy, tick)), trace);
+        serve_cluster_inner(cfg, lanes, Some((policy, tick)), trace, None);
+    GovernedServeReport {
+        base,
+        governor: name,
+        ticks,
+        actions,
+        final_slots,
+        trace,
+    }
+}
+
+/// [`serve_cluster_governed_traced`] with the telemetry registry attached
+/// to the router (§8c): every slot commit/release and governor tick bills
+/// the fleet counters. Serving runs on wall time, so the counters are
+/// observational evidence (exact conservation: commits − releases = 0 at
+/// quiescence, tested), not part of the deterministic replay gate.
+pub fn serve_cluster_governed_observed(
+    cfg: ClusterServeConfig,
+    lanes: Vec<(ClusterLaneSpec, LaneRunnerFactory)>,
+    policy: &mut dyn ServingPolicy,
+    tick: Duration,
+    trace: &TraceConfig,
+    reg: Arc<crate::obs::Registry>,
+) -> GovernedServeReport {
+    let name = policy.name();
+    let (base, ticks, actions, final_slots, trace) =
+        serve_cluster_inner(cfg, lanes, Some((policy, tick)), trace, Some(reg));
     GovernedServeReport {
         base,
         governor: name,
@@ -869,6 +926,7 @@ fn serve_cluster_inner(
     lanes: Vec<(ClusterLaneSpec, LaneRunnerFactory)>,
     governor: Option<(&mut dyn ServingPolicy, Duration)>,
     trace: &TraceConfig,
+    obs: Option<Arc<crate::obs::Registry>>,
 ) -> (ClusterServeReport, u64, Vec<String>, Vec<u64>, Vec<TraceEvent>) {
     use std::sync::atomic::{AtomicBool, Ordering};
 
@@ -893,6 +951,9 @@ fn serve_cluster_inner(
         let _ = ready_rx.recv();
     }
     let router = ClusterRouter::new(routed_lanes, cfg.policy);
+    if let Some(reg) = obs {
+        router.attach_obs(reg);
+    }
     let start = Instant::now();
 
     let stop = AtomicBool::new(false);
@@ -943,6 +1004,8 @@ fn serve_cluster_inner(
                         }
                         applied.push(router.apply_lane_action(&a));
                     }
+                    router.obs_inc(crate::obs::ctr::SERVE_TICKS);
+                    router.obs_add(crate::obs::ctr::SERVE_ACTIONS, applied.len() as u64);
                     sink.emit(|| TraceEvent::ServeTick {
                         tick: n,
                         wall_ns,

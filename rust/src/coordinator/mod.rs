@@ -13,7 +13,8 @@ pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig, BatcherStats, InferResponse, WorkerHooks};
 pub use cluster::{
-    serve_cluster_governed, serve_cluster_governed_traced, serve_cluster_routed, ClusterLaneSpec,
+    serve_cluster_governed, serve_cluster_governed_observed, serve_cluster_governed_traced,
+    serve_cluster_routed, ClusterLaneSpec,
     ClusterRoutePolicy,
     ClusterRouter, ClusterRouterStats, ClusterServeConfig, ClusterServeReport, ClusterTicket,
     DeviceLaneReport, GovernedServeReport, LaneAction, LaneRunnerFactory, ServingPolicy,

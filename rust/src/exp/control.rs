@@ -43,9 +43,10 @@ use crate::control::policy::{
     DrainMigrate, FailRecover, GainGatedReslice, RejectionAutoscale, StaticPolicy,
 };
 use crate::control::{
-    run_governed, run_governed_inline, run_governed_traced, ControlConfig, ControlReport,
-    FaultStats, FleetEvent, FleetState, GovernorConfig, PhaseSpec,
+    run_governed, run_governed_inline, run_governed_observed, run_governed_traced, ControlConfig,
+    ControlReport, FaultStats, FleetEvent, FleetState, GovernorConfig, PhaseSpec,
 };
+use crate::obs::{ObsConfig, ObsReport};
 use crate::fault::FaultPlan;
 use crate::gpu::MigProfile;
 use crate::sim::{SimTime, MS};
@@ -250,13 +251,11 @@ pub fn bursty_reslice_inline_traced(
     bursty_reslice_inline_stepped(proto, trace, Stepping::EventDriven)
 }
 
-/// [`bursty_reslice_inline_traced`] with the stepping mode explicit — the
-/// lockstep-vs-event-driven oracle runs the in-clock leg both ways.
-pub fn bursty_reslice_inline_stepped(
-    proto: &Protocol,
-    trace: &TraceConfig,
-    stepping: Stepping,
-) -> (GovernedComparison, TraceLog) {
+/// Shared calibration of the in-clock bursty scenario — the fleet spec,
+/// the calm/burst/calm phase list, the wake cadence, and the control
+/// config. One constructor, so the traced and observed variants can
+/// never drift apart (the zero-perturbation oracle byte-compares them).
+fn bursty_inline_setup(proto: &Protocol) -> (ClusterSpec, Vec<PhaseSpec>, SimTime, ControlConfig) {
     let calib = BurstyCalib::new(proto);
     let spec = calib.spec.clone();
     // ~1.2 s of 2×-overloaded arrivals: enough that serving the tail on
@@ -274,6 +273,17 @@ pub fn bursty_reslice_inline_stepped(
     ];
     let cadence: SimTime = ((calib.svc_ms * 2.0) * MS as f64).max(1.0) as SimTime;
     let cfg = control_cfg(proto, PlacePolicy::LeastLoaded);
+    (spec, phases, cadence, cfg)
+}
+
+/// [`bursty_reslice_inline_traced`] with the stepping mode explicit — the
+/// lockstep-vs-event-driven oracle runs the in-clock leg both ways.
+pub fn bursty_reslice_inline_stepped(
+    proto: &Protocol,
+    trace: &TraceConfig,
+    stepping: Stepping,
+) -> (GovernedComparison, TraceLog) {
+    let (spec, phases, cadence, cfg) = bursty_inline_setup(proto);
     let mut inline_fleet = FleetState::new(spec.clone());
     let mut inline_policy = bursty_inline_policy();
     let (governed, mut log) = run_governed_traced(
@@ -295,6 +305,55 @@ pub fn bursty_reslice_inline_stepped(
             baseline,
         },
         log,
+    )
+}
+
+/// [`bursty_reslice_inline_traced`] with the telemetry plane attached to
+/// the governed leg as well (§8c): the returned [`ObsReport`] carries the
+/// fleet counters, the per-device occupancy timelines, and the
+/// contention-attribution matrices for the whole in-clock run. The
+/// baseline leg stays unobserved, mirroring the traced variant.
+pub fn bursty_reslice_inline_observed(
+    proto: &Protocol,
+    trace: &TraceConfig,
+    obs_cfg: &ObsConfig,
+) -> (GovernedComparison, TraceLog, ObsReport) {
+    bursty_reslice_inline_observed_stepped(proto, trace, Stepping::EventDriven, obs_cfg)
+}
+
+/// [`bursty_reslice_inline_observed`] with the stepping mode explicit —
+/// the zero-perturbation oracle runs telemetry-on under both modes.
+pub fn bursty_reslice_inline_observed_stepped(
+    proto: &Protocol,
+    trace: &TraceConfig,
+    stepping: Stepping,
+    obs_cfg: &ObsConfig,
+) -> (GovernedComparison, TraceLog, ObsReport) {
+    let (spec, phases, cadence, cfg) = bursty_inline_setup(proto);
+    let mut inline_fleet = FleetState::new(spec.clone());
+    let mut inline_policy = bursty_inline_policy();
+    let (governed, mut log, mut obs) = run_governed_observed(
+        &mut inline_fleet,
+        &phases,
+        &mut inline_policy,
+        &cfg,
+        &stepping.apply(GovernorConfig::cadence(cadence)),
+        trace,
+        obs_cfg,
+    );
+    log.scenario = "bursty-reslice-inline".to_string();
+    obs.scenario = "bursty-reslice-inline".to_string();
+    let mut boundary_fleet = FleetState::new(spec);
+    let mut boundary_policy = bursty_inline_policy();
+    let baseline = run_governed(&mut boundary_fleet, &phases, &mut boundary_policy, &cfg);
+    (
+        GovernedComparison {
+            scenario: "bursty-reslice-inline",
+            governed,
+            baseline,
+        },
+        log,
+        obs,
     )
 }
 
@@ -680,6 +739,28 @@ impl ChaosCalib {
             trace,
         )
     }
+
+    /// [`Self::governed_run_traced`] with the telemetry plane attached.
+    fn governed_run_observed(
+        &self,
+        ckpt_every: SimTime,
+        trace: &TraceConfig,
+        stepping: Stepping,
+        obs_cfg: &ObsConfig,
+    ) -> (ControlReport, TraceLog, ObsReport) {
+        let phases = vec![self.phase0.clone()];
+        let mut fleet = self.fleet();
+        let mut policy = chaos_policy();
+        run_governed_observed(
+            &mut fleet,
+            &phases,
+            &mut policy,
+            &self.cfg,
+            &stepping.apply(GovernorConfig::cadence(self.cadence).with_checkpoint(ckpt_every)),
+            trace,
+            obs_cfg,
+        )
+    }
 }
 
 /// A fresh instance of the chaos scenario's recovery policy — the replay
@@ -750,6 +831,60 @@ pub fn chaos_recovery_stepped(
             baseline,
         },
         log,
+    )
+}
+
+/// [`chaos_recovery_traced`] with the telemetry plane attached to the
+/// governed storm (§8c): the [`ObsReport`] carries the fault counters
+/// (detections, checkpoints), action latencies, and the storm's
+/// contention-attribution matrices. The static leg stays unobserved.
+pub fn chaos_recovery_observed(
+    proto: &Protocol,
+    trace: &TraceConfig,
+    obs_cfg: &ObsConfig,
+) -> (GovernedComparison, TraceLog, ObsReport) {
+    chaos_recovery_observed_stepped(proto, trace, Stepping::EventDriven, obs_cfg)
+}
+
+/// [`chaos_recovery_observed`] with the stepping mode explicit.
+pub fn chaos_recovery_observed_stepped(
+    proto: &Protocol,
+    trace: &TraceConfig,
+    stepping: Stepping,
+    obs_cfg: &ObsConfig,
+) -> (GovernedComparison, TraceLog, ObsReport) {
+    let calib = ChaosCalib::new(proto);
+    let (governed, mut log, mut obs) =
+        calib.governed_run_observed((calib.span / 6).max(1), trace, stepping, obs_cfg);
+    log.scenario = "chaos-recovery".to_string();
+    obs.scenario = "chaos-recovery".to_string();
+    let static_phases = vec![
+        calib.phase0.clone(),
+        PhaseSpec::new(
+            "recover",
+            vec![ClusterJob::training(
+                "train0-restart",
+                DlModel::ResNet50,
+                calib.steps,
+            )],
+        ),
+    ];
+    let mut static_fleet = calib.fleet();
+    let baseline = run_governed_inline(
+        &mut static_fleet,
+        &static_phases,
+        &mut StaticPolicy,
+        &calib.cfg,
+        &stepping.apply(GovernorConfig::cadence(calib.cadence)),
+    );
+    (
+        GovernedComparison {
+            scenario: "chaos-recovery",
+            governed,
+            baseline,
+        },
+        log,
+        obs,
     )
 }
 
@@ -844,6 +979,16 @@ pub fn control_sweep_events(proto: &Protocol) -> u64 {
 /// mid-phase actuation), and the boundary-governed baseline.
 pub fn control_inline_sweep_events(proto: &Protocol) -> u64 {
     let cmp = bursty_reslice_inline(proto);
+    cmp.total_events()
+}
+
+/// The telemetry-on twin of [`control_inline_sweep_events`] (the perf
+/// gate's `--ratio` pin bounds telemetry's overhead by comparing the two
+/// sweeps): the identical in-clock workload with the §8c plane attached —
+/// counters, occupancy sampling, and contention attribution all live.
+pub fn control_inline_observed_sweep_events(proto: &Protocol) -> u64 {
+    let (cmp, _log, _obs) =
+        bursty_reslice_inline_observed(proto, &TraceConfig::disabled(), &ObsConfig::default());
     cmp.total_events()
 }
 

@@ -244,6 +244,42 @@ impl Protocol {
         rep
     }
 
+    /// [`Protocol::pair`] with the §8c telemetry plane attached. The
+    /// returned `RunReport` is byte-identical to [`Protocol::pair`]'s —
+    /// telemetry only reads — which the zero-perturbation oracle in
+    /// `tests/obs.rs` pins.
+    pub fn pair_observed(
+        &self,
+        mechanism: Mechanism,
+        infer_model: DlModel,
+        train_model: DlModel,
+        obs_cfg: &crate::obs::ObsConfig,
+    ) -> (RunReport, crate::obs::ObsReport) {
+        let (mut rep, obs) = crate::sched::run_observed(
+            self.engine_cfg(mechanism.clone()),
+            vec![
+                CtxDef {
+                    name: format!("{}-infer", infer_model.name()),
+                    source: self.infer_source(infer_model),
+                    priority: 0,
+                },
+                CtxDef {
+                    name: format!("{}-train", train_model.name()),
+                    source: self.train_source(train_model),
+                    priority: -2,
+                },
+            ],
+            obs_cfg,
+        );
+        rep.workload = format!(
+            "{}-infer+{}-train/{}",
+            infer_model.name(),
+            train_model.name(),
+            mechanism.name()
+        );
+        (rep, obs)
+    }
+
     /// The [`Protocol::pair`] scenario as an un-run [`DeviceRt`] (§8b):
     /// the allocation gate steps it manually so it can snapshot the
     /// allocator counter mid-run and measure only the steady-state window.

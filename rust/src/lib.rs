@@ -33,6 +33,10 @@
 //! * [`trace`] — the flight recorder: ring-buffered trace of governed
 //!   runs (decisions, actions, faults, link transfers) plus
 //!   deterministic offline policy replay and decision diffing;
+//! * [`obs`] — the telemetry plane beneath the recorder (§8c): lock-free
+//!   counter/histogram registry, per-SM occupancy timelines, contention
+//!   attribution matrices, and the `gpushare-metrics-v1`/Perfetto
+//!   exporters;
 //! * [`runtime`] — PJRT runtime loading AOT-compiled JAX/Pallas artifacts;
 //! * [`util`] — PRNG, stats, CLI, tables, property-testing, bench harness.
 
@@ -44,6 +48,7 @@ pub mod exp;
 pub mod fault;
 pub mod gpu;
 pub mod metrics;
+pub mod obs;
 pub mod preempt;
 pub mod runtime;
 pub mod sched;

@@ -1,0 +1,1115 @@
+//! §8c telemetry plane: an always-available, zero-cost-when-disabled
+//! counter/histogram registry with per-device contention attribution and a
+//! Chrome-trace exporter (see [`perfetto`]).
+//!
+//! The plane sits *beneath* the `trace/` flight recorder: where the recorder
+//! captures governor **decisions**, this module captures the hardware-level
+//! behaviour those decisions act on — per-SM occupancy timelines, block and
+//! link wait distributions, and an interference matrix that bills every
+//! observed stall to the resident contexts causing it. Three disciplines
+//! carry over from §7e/§8b:
+//!
+//! - **Zero cost when disabled.** Every hook is an `Option` branch; a run
+//!   with telemetry off produces byte-identical `RunReport`/`ControlReport`
+//!   JSON (property-tested in `tests/obs.rs`, same oracle pattern as
+//!   traced≡untraced).
+//! - **No allocation after registration.** The [`Registry`] is a fixed
+//!   const-indexed schema ([`ctr`]/[`hist`]) allocated once at construction;
+//!   per-device state pre-allocates its rings and reuses a culprit scratch
+//!   vector. The `alloc_gate` CI step budgets the telemetry-on hot path.
+//! - **Exact conservation.** [`AttrMatrix::bill`] distributes each measured
+//!   wait with a deterministic integer remainder, so Σ attributed ≡ Σ
+//!   measured holds by construction and is asserted end-to-end.
+
+pub mod perfetto;
+
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::sim::{SimTime, US};
+use crate::util::json::escape;
+
+/// Log2 histogram bucket count: bucket 0 holds the value 0, bucket
+/// `1 + log2(v)` holds `v > 0`, so bucket 64 holds the top half of the u64
+/// range (including `u64::MAX`).
+pub const HIST_BUCKETS: usize = 65;
+
+/// Bucket index for a value (see [`HIST_BUCKETS`]).
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        1 + v.ilog2() as usize
+    }
+}
+
+/// Inclusive lower bound of bucket `i` — for rendering axes.
+pub fn bucket_floor(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << (i - 1)
+    }
+}
+
+/// Counter schema. Fixed at compile time: the registry never allocates after
+/// construction, and exporters iterate `NAMES` in index order so the JSON
+/// field order is deterministic.
+pub mod ctr {
+    pub const KERNELS_DISPATCHED: usize = 0;
+    pub const KERNELS_RETIRED: usize = 1;
+    pub const BLOCKS_PLACED: usize = 2;
+    pub const COHORTS_RETIRED: usize = 3;
+    pub const ACCOUNT_SYNCS: usize = 4;
+    pub const TRANSFERS_STARTED: usize = 5;
+    pub const TRANSFERS_DONE: usize = 6;
+    pub const GOV_WAKES: usize = 7;
+    pub const GOV_DEVICES_STEPPED: usize = 8;
+    pub const CONTROL_WAKES: usize = 9;
+    pub const ACTIONS_STAGED: usize = 10;
+    pub const ACTIONS_APPLIED: usize = 11;
+    pub const ACTIONS_REJECTED: usize = 12;
+    pub const CHECKPOINTS: usize = 13;
+    pub const FAULTS_DETECTED: usize = 14;
+    pub const FLEET_COMMITS: usize = 15;
+    pub const FLEET_RELEASES: usize = 16;
+    pub const SERVE_TICKS: usize = 17;
+    pub const SERVE_ACTIONS: usize = 18;
+    pub const COUNT: usize = 19;
+    pub const NAMES: [&str; COUNT] = [
+        "engine.kernels_dispatched",
+        "engine.kernels_retired",
+        "engine.blocks_placed",
+        "engine.cohorts_retired",
+        "engine.account_syncs",
+        "engine.link_transfers_started",
+        "engine.link_transfers_done",
+        "governor.wakes",
+        "governor.devices_stepped",
+        "control.wakes",
+        "control.actions_staged",
+        "control.actions_applied",
+        "control.actions_rejected",
+        "control.checkpoints",
+        "control.faults_detected",
+        "fleet.account_commits",
+        "fleet.account_releases",
+        "serve.ticks",
+        "serve.actions",
+    ];
+}
+
+/// Histogram schema (see [`ctr`] for the indexing discipline).
+pub mod hist {
+    pub const BLOCK_WAIT_NS: usize = 0;
+    pub const LINK_WAIT_NS: usize = 1;
+    pub const KERNEL_SPAN_NS: usize = 2;
+    pub const ACTION_LATENCY_NS: usize = 3;
+    pub const GOV_BUSY_DEVICES: usize = 4;
+    pub const COUNT: usize = 5;
+    pub const NAMES: [&str; COUNT] = [
+        "engine.block_wait_ns",
+        "engine.link_wait_ns",
+        "engine.kernel_span_ns",
+        "control.action_latency_ns",
+        "governor.busy_devices",
+    ];
+}
+
+/// Plain (single-owner) log2 histogram. The engine records into one of these
+/// per device *and* into the shared atomic registry, so the per-device →
+/// fleet merge can be checked for exact count conservation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Hist {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hist {
+    pub const fn new() -> Hist {
+        Hist {
+            buckets: [0; HIST_BUCKETS],
+            count: 0,
+            sum: 0,
+        }
+    }
+
+    pub fn observe(&mut self, v: u64) {
+        let b = bucket_of(v);
+        self.buckets[b] = self.buckets[b].saturating_add(1);
+        self.count = self.count.saturating_add(1);
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    pub fn merge(&mut self, other: &Hist) {
+        for i in 0..HIST_BUCKETS {
+            self.buckets[i] = self.buckets[i].saturating_add(other.buckets[i]);
+        }
+        self.count = self.count.saturating_add(other.count);
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    /// `{"count":N,"sum":N,"buckets":[[idx,count],...]}` — sparse: only
+    /// non-empty buckets are emitted, in index order.
+    pub fn to_json(&self) -> String {
+        let mut j = String::new();
+        let _ = write!(j, "{{\"count\":{},\"sum\":{},\"buckets\":[", self.count, self.sum);
+        let mut first = true;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if !first {
+                j.push(',');
+            }
+            first = false;
+            let _ = write!(j, "[{i},{c}]");
+        }
+        j.push_str("]}");
+        j
+    }
+}
+
+struct AtomicHist {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+#[inline]
+fn saturating_fetch_add(a: &AtomicU64, n: u64) {
+    // fetch_update with a total closure never returns Err-from-None; the
+    // CAS loop is the price of saturating (rather than wrapping) counters.
+    let _ = a.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+        Some(v.saturating_add(n))
+    });
+}
+
+impl AtomicHist {
+    fn new() -> AtomicHist {
+        AtomicHist {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    fn observe(&self, v: u64) {
+        saturating_fetch_add(&self.buckets[bucket_of(v)], 1);
+        saturating_fetch_add(&self.count, 1);
+        saturating_fetch_add(&self.sum, v);
+    }
+
+    fn snapshot(&self) -> Hist {
+        let mut h = Hist::new();
+        for i in 0..HIST_BUCKETS {
+            h.buckets[i] = self.buckets[i].load(Ordering::Relaxed);
+        }
+        h.count = self.count.load(Ordering::Relaxed);
+        h.sum = self.sum.load(Ordering::Relaxed);
+        h
+    }
+}
+
+/// Lock-free fleet-wide registry: saturating u64 counters and atomic log2
+/// histograms behind the fixed [`ctr`]/[`hist`] schemas. One `Arc<Registry>`
+/// is shared by every device runtime, the governor, the in-clock driver, and
+/// the serving ticker; all writes are relaxed atomics (telemetry needs no
+/// ordering, only eventual totals).
+pub struct Registry {
+    counters: Vec<AtomicU64>,
+    hists: Vec<AtomicHist>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            counters: (0..ctr::COUNT).map(|_| AtomicU64::new(0)).collect(),
+            hists: (0..hist::COUNT).map(|_| AtomicHist::new()).collect(),
+        }
+    }
+
+    pub fn shared() -> Arc<Registry> {
+        Arc::new(Registry::new())
+    }
+
+    #[inline]
+    pub fn add(&self, idx: usize, n: u64) {
+        saturating_fetch_add(&self.counters[idx], n);
+    }
+
+    #[inline]
+    pub fn inc(&self, idx: usize) {
+        self.add(idx, 1);
+    }
+
+    #[inline]
+    pub fn observe(&self, idx: usize, v: u64) {
+        self.hists[idx].observe(v);
+    }
+
+    pub fn counter(&self, idx: usize) -> u64 {
+        self.counters[idx].load(Ordering::Relaxed)
+    }
+
+    pub fn hist(&self, idx: usize) -> Hist {
+        self.hists[idx].snapshot()
+    }
+}
+
+/// Interference matrix: `cells[victim][culprit]` nanoseconds of wait billed
+/// to each culprit context, plus the total `measured` wait. [`Self::bill`]
+/// splits each wait proportionally to the culprit weights with the integer
+/// remainder assigned to the first culprit, so `attributed() == measured`
+/// holds exactly — this is the conservation property the acceptance test
+/// pins.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct AttrMatrix {
+    n: usize,
+    cells: Vec<u64>,
+    pub measured: u64,
+}
+
+impl AttrMatrix {
+    pub fn new() -> AttrMatrix {
+        AttrMatrix::default()
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn get(&self, victim: usize, culprit: usize) -> u64 {
+        if victim < self.n && culprit < self.n {
+            self.cells[victim * self.n + culprit]
+        } else {
+            0
+        }
+    }
+
+    /// Grow to at least `n` contexts, preserving existing cells. Growth only
+    /// happens on context admission — never in the per-event hot path.
+    pub fn ensure(&mut self, n: usize) {
+        if n <= self.n {
+            return;
+        }
+        let mut next = vec![0u64; n * n];
+        for v in 0..self.n {
+            for c in 0..self.n {
+                next[v * n + c] = self.cells[v * self.n + c];
+            }
+        }
+        self.cells = next;
+        self.n = n;
+    }
+
+    /// Bill `wait` ns of `victim`'s stall to `culprits` (context, weight)
+    /// pairs. Empty or zero-weight culprit sets self-bill (the victim was
+    /// only ever waiting on itself — e.g. its own earlier transfer on the
+    /// channel).
+    pub fn bill(&mut self, victim: usize, culprits: &[(usize, u64)], wait: u64) {
+        let hi = culprits
+            .iter()
+            .map(|&(c, _)| c)
+            .max()
+            .unwrap_or(0)
+            .max(victim);
+        self.ensure(hi + 1);
+        self.measured = self.measured.saturating_add(wait);
+        let n = self.n;
+        let total: u64 = culprits.iter().map(|&(_, w)| w).sum();
+        if total == 0 {
+            self.cells[victim * n + victim] = self.cells[victim * n + victim].saturating_add(wait);
+            return;
+        }
+        let mut assigned = 0u64;
+        for &(c, w) in culprits {
+            let share = (wait as u128 * w as u128 / total as u128) as u64;
+            self.cells[victim * n + c] = self.cells[victim * n + c].saturating_add(share);
+            assigned += share;
+        }
+        // Deterministic remainder: the first culprit (dispatch order is
+        // already deterministic) absorbs the integer slack, keeping
+        // Σ attributed ≡ Σ measured exact.
+        let c0 = culprits[0].0;
+        self.cells[victim * n + c0] = self.cells[victim * n + c0].saturating_add(wait - assigned);
+    }
+
+    /// Total nanoseconds attributed across all cells.
+    pub fn attributed(&self) -> u64 {
+        self.cells.iter().fold(0u64, |a, &c| a.saturating_add(c))
+    }
+
+    /// Merge into a fleet matrix under an index remap (`map[local] =
+    /// fleet index`). Conservation carries over: every cell is re-billed
+    /// 1:1, so the fleet's `attributed == measured` stays exact.
+    pub fn merge_mapped(&self, map: &[usize], into: &mut AttrMatrix) {
+        for v in 0..self.n {
+            for c in 0..self.n {
+                let w = self.cells[v * self.n + c];
+                if w > 0 {
+                    into.bill(map[v], &[(map[c], 1)], w);
+                }
+            }
+        }
+    }
+
+    /// `{"measured":N,"attributed":N,"cells":[[..],..]}` rendered at `dim`
+    /// rows/cols (cells outside the grown region read as 0).
+    pub fn to_json(&self, dim: usize) -> String {
+        let mut j = String::new();
+        let _ = write!(
+            j,
+            "{{\"measured\":{},\"attributed\":{},\"cells\":[",
+            self.measured,
+            self.attributed()
+        );
+        for v in 0..dim {
+            if v > 0 {
+                j.push(',');
+            }
+            j.push('[');
+            for c in 0..dim {
+                if c > 0 {
+                    j.push(',');
+                }
+                let _ = write!(j, "{}", self.get(v, c));
+            }
+            j.push(']');
+        }
+        j.push_str("]}");
+        j
+    }
+}
+
+/// Bounded oldest-first ring with exact seen/dropped accounting — the same
+/// contract as `trace::TraceRing`, pre-allocated so steady-state pushes
+/// never touch the allocator.
+#[derive(Clone, Debug)]
+pub struct ObsRing<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    pub seen: u64,
+    pub dropped: u64,
+}
+
+impl<T> ObsRing<T> {
+    pub fn new(cap: usize) -> ObsRing<T> {
+        let cap = cap.max(1);
+        ObsRing {
+            buf: VecDeque::with_capacity(cap),
+            cap,
+            seen: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn push(&mut self, v: T) {
+        self.seen += 1;
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.buf.iter()
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.buf.into_iter().collect()
+    }
+}
+
+/// One point on a device's per-SM occupancy timeline: how many SMs held at
+/// least one resident cohort, plus a 128-bit residency bitmask (SMs beyond
+/// index 127 are counted in `active_sms` but not masked — no shipping NVIDIA
+/// part exceeds this today).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SmPoint {
+    pub t: SimTime,
+    pub active_sms: u32,
+    pub mask: [u64; 2],
+}
+
+/// One kernel's issue→retire span, for timeline rendering.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelSpan {
+    pub ctx: usize,
+    pub start: SimTime,
+    pub end: SimTime,
+    pub blocks: u32,
+}
+
+/// Tunables for the per-device side of the plane. `Copy` so the governor can
+/// stash one and hand it to late-admitted runtimes.
+#[derive(Clone, Copy, Debug)]
+pub struct ObsConfig {
+    /// Cadence of per-SM occupancy samples (independent of the report-level
+    /// `occupancy_sample_ns`, which is usually off).
+    pub sample_every_ns: SimTime,
+    /// Ring capacity for timeline points.
+    pub timeline_cap: usize,
+    /// Ring capacity for kernel spans.
+    pub span_cap: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            sample_every_ns: 200 * US,
+            timeline_cap: 4096,
+            span_cap: 4096,
+        }
+    }
+}
+
+/// Per-device observation state, owned by `DeviceRt` as
+/// `Option<Box<DeviceObs>>` (one pointer when disabled; the box travels with
+/// the runtime across step-pool workers). Plain fields — no atomics — plus
+/// an `Arc<Registry>` clone so every engine observation lands in *both* the
+/// local histogram and the fleet aggregate (which is what makes the merge
+/// conservation test non-trivial).
+pub struct DeviceObs {
+    reg: Arc<Registry>,
+    pub sm_wait: AttrMatrix,
+    pub link_wait: AttrMatrix,
+    pub block_wait_hist: Hist,
+    pub link_wait_hist: Hist,
+    pub kernel_span_hist: Hist,
+    pub account_syncs: u64,
+    blocked_since: Vec<Option<SimTime>>,
+    link_holder: [Option<usize>; 2],
+    culprits: Vec<(usize, u64)>,
+    sample_every: SimTime,
+    next_sample: SimTime,
+    pub timeline: ObsRing<SmPoint>,
+    pub spans: ObsRing<KernelSpan>,
+}
+
+impl DeviceObs {
+    pub fn new(reg: Arc<Registry>, cfg: &ObsConfig) -> Box<DeviceObs> {
+        Box::new(DeviceObs {
+            reg,
+            sm_wait: AttrMatrix::new(),
+            link_wait: AttrMatrix::new(),
+            block_wait_hist: Hist::new(),
+            link_wait_hist: Hist::new(),
+            kernel_span_hist: Hist::new(),
+            account_syncs: 0,
+            blocked_since: Vec::with_capacity(64),
+            link_holder: [None; 2],
+            culprits: Vec::with_capacity(16),
+            sample_every: cfg.sample_every_ns.max(1),
+            next_sample: 0,
+            timeline: ObsRing::new(cfg.timeline_cap),
+            spans: ObsRing::new(cfg.span_cap),
+        })
+    }
+
+    #[inline]
+    pub fn reg(&self) -> &Registry {
+        &self.reg
+    }
+
+    /// A kernel with pending blocks placed nothing this round: open its wait
+    /// window (idempotent while it stays blocked).
+    pub fn note_blocked(&mut self, kid: usize, now: SimTime) {
+        if kid >= self.blocked_since.len() {
+            self.blocked_since.resize(kid + 1, None);
+        }
+        if self.blocked_since[kid].is_none() {
+            self.blocked_since[kid] = Some(now);
+        }
+    }
+
+    /// A previously-blocked kernel placed blocks: close the window, record
+    /// the wait, and bill it to the foreign contexts resident on the same
+    /// instance, weighted by their running block counts.
+    pub fn note_placed(
+        &mut self,
+        kid: usize,
+        ctx: usize,
+        inst: usize,
+        now: SimTime,
+        running_blocks: &[u32],
+        ctx_inst: &[usize],
+    ) {
+        let Some(since) = self.blocked_since.get_mut(kid).and_then(|s| s.take()) else {
+            return;
+        };
+        let wait = now.saturating_sub(since);
+        self.block_wait_hist.observe(wait);
+        self.reg.observe(hist::BLOCK_WAIT_NS, wait);
+        if wait == 0 {
+            return;
+        }
+        self.culprits.clear();
+        for c in 0..running_blocks.len() {
+            if c != ctx && ctx_inst.get(c).copied() == Some(inst) && running_blocks[c] > 0 {
+                self.culprits.push((c, running_blocks[c] as u64));
+            }
+        }
+        self.sm_wait.bill(ctx, &self.culprits, wait);
+    }
+
+    /// Kernel retired: record its span and drop any open wait window.
+    pub fn note_kernel_done(
+        &mut self,
+        kid: usize,
+        ctx: usize,
+        issued_at: SimTime,
+        now: SimTime,
+        blocks: u32,
+    ) {
+        if let Some(slot) = self.blocked_since.get_mut(kid) {
+            *slot = None;
+        }
+        let span = now.saturating_sub(issued_at);
+        self.kernel_span_hist.observe(span);
+        self.reg.observe(hist::KERNEL_SPAN_NS, span);
+        self.reg.inc(ctr::KERNELS_RETIRED);
+        self.spans.push(KernelSpan {
+            ctx,
+            start: issued_at,
+            end: now,
+            blocks,
+        });
+    }
+
+    /// A queued transfer was promoted to the channel after `wait` ns: bill
+    /// the wait to the channel's previous holder (the transfer that was
+    /// occupying it), self-billing when the channel has no prior holder
+    /// (slice-ineligibility stalls).
+    pub fn note_link_wait(&mut self, chan: usize, ctx: usize, wait: SimTime) {
+        self.link_wait_hist.observe(wait);
+        self.reg.observe(hist::LINK_WAIT_NS, wait);
+        self.reg.inc(ctr::TRANSFERS_STARTED);
+        let slot = chan.min(1);
+        if wait > 0 {
+            let holder = self.link_holder[slot].unwrap_or(ctx);
+            self.link_wait.bill(ctx, &[(holder, 1)], wait);
+        }
+        self.link_holder[slot] = Some(ctx);
+    }
+
+    #[inline]
+    pub fn sample_due(&self, now: SimTime) -> bool {
+        now >= self.next_sample
+    }
+
+    pub fn record_sample(&mut self, now: SimTime, active_sms: u32, mask: [u64; 2]) {
+        self.timeline.push(SmPoint {
+            t: now,
+            active_sms,
+            mask,
+        });
+        self.next_sample = now.saturating_add(self.sample_every);
+    }
+
+    /// Freeze into a report, rendering context ids to names.
+    pub fn into_report(self: Box<Self>, device: usize, ctx_names: Vec<String>) -> DeviceObsReport {
+        let me = *self;
+        DeviceObsReport {
+            device,
+            phase: 0,
+            ctx_names,
+            sm_wait: me.sm_wait,
+            link_wait: me.link_wait,
+            block_wait_hist: me.block_wait_hist,
+            link_wait_hist: me.link_wait_hist,
+            kernel_span_hist: me.kernel_span_hist,
+            account_syncs: me.account_syncs,
+            timeline_seen: me.timeline.seen,
+            timeline_dropped: me.timeline.dropped,
+            timeline: me.timeline.into_vec(),
+            spans_seen: me.spans.seen,
+            spans_dropped: me.spans.dropped,
+            spans: me.spans.into_vec(),
+        }
+    }
+}
+
+/// Frozen per-device observations, ready for export.
+#[derive(Clone, Debug)]
+pub struct DeviceObsReport {
+    pub device: usize,
+    /// Which phase of the governed run this runtime served (phases rebuild
+    /// their runtimes, so one device yields one report per phase). Used by
+    /// the Perfetto exporter to lay phases end-to-end.
+    pub phase: usize,
+    pub ctx_names: Vec<String>,
+    pub sm_wait: AttrMatrix,
+    pub link_wait: AttrMatrix,
+    pub block_wait_hist: Hist,
+    pub link_wait_hist: Hist,
+    pub kernel_span_hist: Hist,
+    pub account_syncs: u64,
+    pub timeline: Vec<SmPoint>,
+    pub timeline_seen: u64,
+    pub timeline_dropped: u64,
+    pub spans: Vec<KernelSpan>,
+    pub spans_seen: u64,
+    pub spans_dropped: u64,
+}
+
+impl DeviceObsReport {
+    pub fn to_json(&self) -> String {
+        let mut j = String::new();
+        let _ = write!(j, "{{\"device\":{},\"phase\":{},\"ctxs\":[", self.device, self.phase);
+        for (i, n) in self.ctx_names.iter().enumerate() {
+            if i > 0 {
+                j.push(',');
+            }
+            let _ = write!(j, "\"{}\"", escape(n));
+        }
+        let dim = self.ctx_names.len();
+        let _ = write!(
+            j,
+            "],\"account_syncs\":{},\"sm_wait\":{},\"link_wait\":{},\"block_wait_ns\":{},\"link_wait_ns\":{},\"kernel_span_ns\":{}",
+            self.account_syncs,
+            self.sm_wait.to_json(dim),
+            self.link_wait.to_json(dim),
+            self.block_wait_hist.to_json(),
+            self.link_wait_hist.to_json(),
+            self.kernel_span_hist.to_json(),
+        );
+        let _ = write!(
+            j,
+            ",\"timeline\":{{\"seen\":{},\"dropped\":{},\"points\":[",
+            self.timeline_seen, self.timeline_dropped
+        );
+        for (i, p) in self.timeline.iter().enumerate() {
+            if i > 0 {
+                j.push(',');
+            }
+            let _ = write!(j, "[{},{},{},{}]", p.t, p.active_sms, p.mask[0], p.mask[1]);
+        }
+        let _ = write!(
+            j,
+            "]}},\"spans\":{{\"seen\":{},\"dropped\":{},\"list\":[",
+            self.spans_seen, self.spans_dropped
+        );
+        for (i, s) in self.spans.iter().enumerate() {
+            if i > 0 {
+                j.push(',');
+            }
+            let _ = write!(j, "[{},{},{},{}]", s.ctx, s.start, s.end, s.blocks);
+        }
+        j.push_str("]}}");
+        j
+    }
+}
+
+/// Driver-side handle threaded through the in-clock control loop, mirroring
+/// `TraceSink`: [`ObsSink::disabled`] is a `None` and every hook is a single
+/// branch; [`ObsSink::enabled`] owns the registry and accumulates frozen
+/// device reports as phases retire their runtimes.
+pub struct ObsSink {
+    reg: Option<Arc<Registry>>,
+    cfg: ObsConfig,
+    devices: Vec<DeviceObsReport>,
+}
+
+impl ObsSink {
+    pub fn disabled() -> ObsSink {
+        ObsSink {
+            reg: None,
+            cfg: ObsConfig::default(),
+            devices: Vec::new(),
+        }
+    }
+
+    pub fn enabled(cfg: ObsConfig) -> ObsSink {
+        ObsSink {
+            reg: Some(Registry::shared()),
+            cfg,
+            devices: Vec::new(),
+        }
+    }
+
+    /// Wrap an existing registry (for callers that attached devices
+    /// themselves and only need report assembly).
+    pub fn from_registry(reg: Arc<Registry>, cfg: ObsConfig) -> ObsSink {
+        ObsSink {
+            reg: Some(reg),
+            cfg,
+            devices: Vec::new(),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.reg.is_some()
+    }
+
+    pub fn registry(&self) -> Option<Arc<Registry>> {
+        self.reg.clone()
+    }
+
+    pub fn cfg(&self) -> ObsConfig {
+        self.cfg
+    }
+
+    #[inline]
+    pub fn inc(&self, idx: usize) {
+        if let Some(r) = &self.reg {
+            r.inc(idx);
+        }
+    }
+
+    #[inline]
+    pub fn add(&self, idx: usize, n: u64) {
+        if let Some(r) = &self.reg {
+            r.add(idx, n);
+        }
+    }
+
+    #[inline]
+    pub fn observe(&self, idx: usize, v: u64) {
+        if let Some(r) = &self.reg {
+            r.observe(idx, v);
+        }
+    }
+
+    pub fn absorb(&mut self, devs: Vec<DeviceObsReport>) {
+        self.devices.extend(devs);
+    }
+
+    /// Absorb a phase's device reports, stamping them with the phase index
+    /// (the Perfetto exporter lays phases end-to-end by this tag).
+    pub fn absorb_phase(&mut self, phase: usize, devs: Vec<DeviceObsReport>) {
+        for mut d in devs {
+            d.phase = phase;
+            self.devices.push(d);
+        }
+    }
+
+    /// Freeze into the exportable `gpushare-metrics-v1` report. A disabled
+    /// sink yields an all-zero report (callers normally don't ask).
+    pub fn into_report(self, scenario: &str, policy: &str) -> ObsReport {
+        let (counters, hists) = match &self.reg {
+            Some(r) => (
+                (0..ctr::COUNT).map(|i| r.counter(i)).collect(),
+                (0..hist::COUNT).map(|i| r.hist(i)).collect(),
+            ),
+            None => (
+                vec![0u64; ctr::COUNT],
+                (0..hist::COUNT).map(|_| Hist::new()).collect(),
+            ),
+        };
+        ObsReport {
+            scenario: scenario.to_string(),
+            policy: policy.to_string(),
+            counters,
+            hists,
+            devices: self.devices,
+        }
+    }
+}
+
+/// The `gpushare-metrics-v1` snapshot: fleet counters and histograms, the
+/// per-device observations, and a name-keyed fleet interference matrix (the
+/// signal ROADMAP item 3's contention-aware placer consumes).
+#[derive(Clone, Debug)]
+pub struct ObsReport {
+    pub scenario: String,
+    pub policy: String,
+    /// Indexed by [`ctr`].
+    pub counters: Vec<u64>,
+    /// Indexed by [`hist`].
+    pub hists: Vec<Hist>,
+    pub devices: Vec<DeviceObsReport>,
+}
+
+impl ObsReport {
+    /// Merge every device's matrices into fleet matrices keyed by context
+    /// *name* (the same workload on two devices is one fleet row). Returns
+    /// `(names, sm_wait, link_wait)`.
+    pub fn fleet_interference(&self) -> (Vec<String>, AttrMatrix, AttrMatrix) {
+        let mut names: Vec<String> = Vec::new();
+        let mut sm = AttrMatrix::new();
+        let mut link = AttrMatrix::new();
+        for d in &self.devices {
+            let map: Vec<usize> = d
+                .ctx_names
+                .iter()
+                .map(|n| {
+                    if let Some(i) = names.iter().position(|x| x == n) {
+                        i
+                    } else {
+                        names.push(n.clone());
+                        names.len() - 1
+                    }
+                })
+                .collect();
+            d.sm_wait.merge_mapped(&map, &mut sm);
+            d.link_wait.merge_mapped(&map, &mut link);
+        }
+        (names, sm, link)
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut j = String::new();
+        let _ = write!(
+            j,
+            "{{\"schema\":\"gpushare-metrics-v1\",\"scenario\":\"{}\",\"policy\":\"{}\",\"counters\":{{",
+            escape(&self.scenario),
+            escape(&self.policy)
+        );
+        for (i, name) in ctr::NAMES.iter().enumerate() {
+            if i > 0 {
+                j.push(',');
+            }
+            let _ = write!(j, "\"{}\":{}", name, self.counters.get(i).copied().unwrap_or(0));
+        }
+        j.push_str("},\"histograms\":{");
+        for (i, name) in hist::NAMES.iter().enumerate() {
+            if i > 0 {
+                j.push(',');
+            }
+            let h = self.hists.get(i).cloned().unwrap_or_default();
+            let _ = write!(j, "\"{}\":{}", name, h.to_json());
+        }
+        let (names, sm, link) = self.fleet_interference();
+        j.push_str("},\"interference\":{\"ctxs\":[");
+        for (i, n) in names.iter().enumerate() {
+            if i > 0 {
+                j.push(',');
+            }
+            let _ = write!(j, "\"{}\"", escape(n));
+        }
+        let _ = write!(
+            j,
+            "],\"sm_wait\":{},\"link_wait\":{}}},\"devices\":[",
+            sm.to_json(names.len()),
+            link.to_json(names.len())
+        );
+        for (i, d) in self.devices.iter().enumerate() {
+            if i > 0 {
+                j.push(',');
+            }
+            j.push_str(&d.to_json());
+        }
+        j.push_str("]}");
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_exact() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        for k in 0..63 {
+            let v = 1u64 << k;
+            assert_eq!(bucket_of(v), k as usize + 1, "2^{k}");
+            if v > 1 {
+                assert_eq!(bucket_of(v - 1), k as usize, "2^{k} - 1");
+            }
+        }
+        assert_eq!(bucket_of(u64::MAX), 64);
+        assert_eq!(bucket_floor(0), 0);
+        assert_eq!(bucket_floor(1), 1);
+        assert_eq!(bucket_floor(64), 1u64 << 63);
+    }
+
+    #[test]
+    fn empty_hist_renders_and_merges() {
+        let h = Hist::new();
+        assert_eq!(h.count, 0);
+        assert_eq!(h.sum, 0);
+        assert_eq!(h.to_json(), "{\"count\":0,\"sum\":0,\"buckets\":[]}");
+        let mut m = Hist::new();
+        m.merge(&h);
+        assert_eq!(m, Hist::new());
+    }
+
+    #[test]
+    fn hist_saturates_at_u64_max() {
+        let mut h = Hist::new();
+        h.observe(u64::MAX);
+        h.observe(u64::MAX);
+        assert_eq!(h.sum, u64::MAX, "sum saturates instead of wrapping");
+        assert_eq!(h.count, 2);
+        assert_eq!(h.buckets[64], 2);
+
+        let r = Registry::new();
+        r.add(ctr::GOV_WAKES, u64::MAX);
+        r.add(ctr::GOV_WAKES, 5);
+        assert_eq!(r.counter(ctr::GOV_WAKES), u64::MAX);
+        r.observe(hist::BLOCK_WAIT_NS, u64::MAX);
+        r.observe(hist::BLOCK_WAIT_NS, u64::MAX);
+        assert_eq!(r.hist(hist::BLOCK_WAIT_NS).sum, u64::MAX);
+    }
+
+    #[test]
+    fn merged_device_hists_conserve_counts() {
+        // Seeded LCG — deterministic, no external entropy.
+        let mut state = 0x2545F4914F6CDD1Du64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            state >> 33
+        };
+        let mut parts: Vec<Hist> = (0..4).map(|_| Hist::new()).collect();
+        let mut fleet = Hist::new();
+        for i in 0..10_000 {
+            let v = next();
+            parts[i % 4].observe(v);
+            fleet.observe(v);
+        }
+        let mut merged = Hist::new();
+        for p in &parts {
+            merged.merge(p);
+        }
+        assert_eq!(merged, fleet, "per-device merge must equal the fleet aggregate exactly");
+        let total: u64 = merged.buckets.iter().sum();
+        assert_eq!(total, merged.count, "bucket counts conserve the observation count");
+    }
+
+    #[test]
+    fn attr_matrix_conserves_wait() {
+        let mut state = 99u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            state >> 33
+        };
+        let mut m = AttrMatrix::new();
+        let mut expect = 0u64;
+        for _ in 0..5_000 {
+            let victim = (next() % 7) as usize;
+            let wait = next() % 1_000_003;
+            let nc = (next() % 4) as usize;
+            let culprits: Vec<(usize, u64)> =
+                (0..nc).map(|_| ((next() % 7) as usize, next() % 17)).collect();
+            m.bill(victim, &culprits, wait);
+            expect += wait;
+        }
+        assert_eq!(m.measured, expect);
+        assert_eq!(m.attributed(), m.measured, "Σ attributed ≡ Σ measured");
+
+        // Growth preserves cells and the merge remap conserves too.
+        let before = m.attributed();
+        m.ensure(32);
+        assert_eq!(m.attributed(), before);
+        let mut fleet = AttrMatrix::new();
+        let map: Vec<usize> = (0..32).map(|i| i % 3).collect();
+        m.merge_mapped(&map, &mut fleet);
+        assert_eq!(fleet.attributed(), before);
+        assert_eq!(fleet.measured, before);
+    }
+
+    #[test]
+    fn zero_weight_culprits_self_bill() {
+        let mut m = AttrMatrix::new();
+        m.bill(2, &[], 100);
+        m.bill(2, &[(5, 0)], 50);
+        assert_eq!(m.get(2, 2), 150);
+        assert_eq!(m.attributed(), m.measured);
+    }
+
+    #[test]
+    fn obs_ring_drops_oldest_with_exact_counts() {
+        let mut r: ObsRing<u64> = ObsRing::new(4);
+        for i in 0..10 {
+            r.push(i);
+        }
+        assert_eq!(r.seen, 10);
+        assert_eq!(r.dropped, 6);
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.into_vec(), vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn device_obs_bills_block_and_link_waits() {
+        let reg = Registry::shared();
+        let mut o = DeviceObs::new(reg.clone(), &ObsConfig::default());
+        // ctx 0 blocked at t=100 on instance 0; ctx 1 has 8 running blocks
+        // there; placement succeeds at t=400 → 300ns billed to ctx 1.
+        o.note_blocked(3, 100);
+        o.note_blocked(3, 200); // idempotent while still blocked
+        o.note_placed(3, 0, 0, 400, &[0, 8], &[0, 0]);
+        assert_eq!(o.sm_wait.get(0, 1), 300);
+        assert_eq!(o.sm_wait.measured, 300);
+        assert_eq!(o.block_wait_hist.count, 1);
+        assert_eq!(reg.hist(hist::BLOCK_WAIT_NS).count, 1, "dual-recorded into the fleet hist");
+
+        // Link: first transfer (no wait) seeds the holder; the second waits
+        // 500ns and bills it to the first's context.
+        o.note_link_wait(0, 1, 0);
+        o.note_link_wait(0, 2, 500);
+        assert_eq!(o.link_wait.get(2, 1), 500);
+        assert_eq!(o.link_wait.attributed(), o.link_wait.measured);
+
+        o.note_kernel_done(3, 0, 1000, 4000, 12);
+        let rep = o.into_report(7, vec!["a".into(), "b".into(), "c".into()]);
+        assert_eq!(rep.spans.len(), 1);
+        assert_eq!(rep.spans[0].end - rep.spans[0].start, 3000);
+        let j = rep.to_json();
+        assert!(j.contains("\"device\":7"));
+        assert!(j.contains("\"sm_wait\""));
+    }
+
+    #[test]
+    fn obs_report_json_has_schema_and_conserved_fleet_matrix() {
+        let reg = Registry::shared();
+        let mut a = DeviceObs::new(reg.clone(), &ObsConfig::default());
+        a.note_blocked(0, 0);
+        a.note_placed(0, 0, 0, 90, &[0, 3], &[0, 0]);
+        let mut b = DeviceObs::new(reg.clone(), &ObsConfig::default());
+        b.note_blocked(0, 0);
+        b.note_placed(0, 0, 0, 60, &[0, 5], &[0, 0]);
+
+        // Hand-build the sink around the registry the devices recorded into.
+        let mut sink = ObsSink {
+            reg: Some(reg),
+            cfg: ObsConfig::default(),
+            devices: Vec::new(),
+        };
+        sink.absorb(vec![
+            a.into_report(0, vec!["train".into(), "infer".into()]),
+            b.into_report(1, vec!["train".into(), "infer".into()]),
+        ]);
+        let rep = sink.into_report("unit", "none");
+        let (names, sm, _) = rep.fleet_interference();
+        assert_eq!(names, vec!["train".to_string(), "infer".to_string()]);
+        assert_eq!(sm.measured, 150, "two devices' waits merge by context name");
+        assert_eq!(sm.attributed(), sm.measured);
+        assert_eq!(sm.get(0, 1), 150);
+        let j = rep.to_json();
+        assert!(j.starts_with("{\"schema\":\"gpushare-metrics-v1\""));
+        assert!(j.contains("\"interference\""));
+        assert!(j.contains("\"engine.block_wait_ns\""));
+        assert!(crate::util::json::Json::parse(&j).is_ok(), "metrics JSON must parse");
+    }
+}

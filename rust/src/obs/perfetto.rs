@@ -1,0 +1,421 @@
+//! Chrome-trace (Perfetto) exporter: renders a recorded run — kernel spans,
+//! per-SM occupancy counters, governor micro-events, staged/applied actions,
+//! fault inject→detect windows, and host-link transfers — as a JSON array of
+//! trace events openable in `ui.perfetto.dev` or `chrome://tracing`.
+//!
+//! Layout: each device is a process (`pid` = device index) with one thread
+//! track per context (`tid` = 1 + ctx), an `active_sms` counter track, a
+//! governor micro-event track, and a host-link track; the control plane gets
+//! a synthetic process [`CONTROL_PID`] with phase/decision/action/fault
+//! tracks. Trace timestamps are phase-local simulation ns, so phases are
+//! laid end-to-end using the `PhaseEnd` makespans as offsets. `ServeTick`
+//! events are wall-clock and observational — they are deliberately not
+//! rendered onto the simulation timeline.
+//!
+//! Every emitted object carries `ph`/`ts`/`pid`/`tid` (the acceptance
+//! contract; [`validate_chrome_trace`] checks it and `obs_export` refuses to
+//! write an artifact that fails it).
+
+use std::collections::BTreeMap;
+
+use crate::sim::SimTime;
+use crate::trace::{TraceEvent, TraceLog};
+use crate::util::json::{escape, Json};
+
+use super::ObsReport;
+
+/// Synthetic `pid` for the control-plane tracks (no real device has this
+/// index; device count tops out far below it).
+pub const CONTROL_PID: u64 = 999;
+
+/// `tid` of the per-device occupancy counter track.
+pub const OCC_TID: u64 = 70;
+/// `tid` of the per-device governor micro-event track.
+pub const GOV_TID: u64 = 80;
+/// `tid` of the per-device host-link track.
+pub const LINK_TID: u64 = 90;
+
+/// Nanoseconds → microseconds with sub-µs precision kept as decimals.
+fn ts_us(ns: SimTime) -> String {
+    format!("{}.{:03}", ns / 1_000, ns % 1_000)
+}
+
+fn meta(out: &mut Vec<String>, what: &str, pid: u64, tid: u64, label: &str) {
+    out.push(format!(
+        "{{\"name\":\"{}\",\"ph\":\"M\",\"ts\":0,\"pid\":{},\"tid\":{},\"args\":{{\"name\":\"{}\"}}}}",
+        what,
+        pid,
+        tid,
+        escape(label)
+    ));
+}
+
+fn span(out: &mut Vec<String>, name: &str, ts: SimTime, dur: SimTime, pid: u64, tid: u64, args: &str) {
+    out.push(format!(
+        "{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":{},\"tid\":{}{}}}",
+        escape(name),
+        ts_us(ts),
+        ts_us(dur),
+        pid,
+        tid,
+        args
+    ));
+}
+
+fn instant(out: &mut Vec<String>, name: &str, ts: SimTime, pid: u64, tid: u64, args: &str) {
+    out.push(format!(
+        "{{\"name\":\"{}\",\"ph\":\"i\",\"ts\":{},\"pid\":{},\"tid\":{},\"s\":\"t\"{}}}",
+        escape(name),
+        ts_us(ts),
+        pid,
+        tid,
+        args
+    ));
+}
+
+fn counter(out: &mut Vec<String>, name: &str, ts: SimTime, pid: u64, tid: u64, value: u64) {
+    out.push(format!(
+        "{{\"name\":\"{}\",\"ph\":\"C\",\"ts\":{},\"pid\":{},\"tid\":{},\"args\":{{\"value\":{}}}}}",
+        escape(name),
+        ts_us(ts),
+        pid,
+        tid,
+        value
+    ));
+}
+
+/// Cumulative start offset per phase, from the recorded `PhaseEnd`
+/// makespans (phases the ring dropped inherit the running offset, which
+/// keeps the export well-formed on truncated traces).
+fn phase_offsets(log: &TraceLog) -> BTreeMap<usize, SimTime> {
+    let mut offsets = BTreeMap::new();
+    let mut cum: SimTime = 0;
+    for e in &log.events {
+        if let TraceEvent::PhaseEnd { phase, makespan_ns } = e {
+            offsets.entry(*phase).or_insert(cum);
+            cum = cum.saturating_add(*makespan_ns);
+        }
+    }
+    offsets
+}
+
+/// Render the run as a Chrome trace JSON array. `log` supplies the control
+/// plane and link windows; `obs` supplies kernel spans and occupancy
+/// timelines (pass a report with no devices to export a bare trace).
+pub fn perfetto_json(log: &TraceLog, obs: &ObsReport) -> String {
+    let offsets = phase_offsets(log);
+    let off = |phase: usize| offsets.get(&phase).copied().unwrap_or(0);
+    let mut out: Vec<String> = Vec::new();
+
+    meta(&mut out, "process_name", CONTROL_PID, 0, "control-plane");
+    meta(&mut out, "thread_name", CONTROL_PID, 0, "phases");
+    meta(&mut out, "thread_name", CONTROL_PID, 1, "decisions");
+    meta(&mut out, "thread_name", CONTROL_PID, 2, "actions");
+    meta(&mut out, "thread_name", CONTROL_PID, 3, "faults");
+
+    for d in &obs.devices {
+        let pid = d.device as u64;
+        let poff = off(d.phase);
+        meta(&mut out, "process_name", pid, 0, &format!("device {}", d.device));
+        meta(&mut out, "thread_name", pid, OCC_TID, "occupancy");
+        meta(&mut out, "thread_name", pid, GOV_TID, "governor");
+        meta(&mut out, "thread_name", pid, LINK_TID, "host-link");
+        for (i, name) in d.ctx_names.iter().enumerate() {
+            meta(&mut out, "thread_name", pid, 1 + i as u64, name);
+        }
+        for s in &d.spans {
+            let name = d
+                .ctx_names
+                .get(s.ctx)
+                .cloned()
+                .unwrap_or_else(|| format!("ctx{}", s.ctx));
+            span(
+                &mut out,
+                &name,
+                poff.saturating_add(s.start),
+                s.end.saturating_sub(s.start),
+                pid,
+                1 + s.ctx as u64,
+                &format!(",\"args\":{{\"blocks\":{}}}", s.blocks),
+            );
+        }
+        for p in &d.timeline {
+            counter(
+                &mut out,
+                "active_sms",
+                poff.saturating_add(p.t),
+                pid,
+                OCC_TID,
+                p.active_sms as u64,
+            );
+        }
+    }
+
+    for e in &log.events {
+        match e {
+            TraceEvent::PhaseStart { phase, label } => instant(
+                &mut out,
+                &format!("phase {phase} start: {label}"),
+                off(*phase),
+                CONTROL_PID,
+                0,
+                "",
+            ),
+            TraceEvent::PhaseEnd { phase, makespan_ns } => instant(
+                &mut out,
+                &format!("phase {phase} end"),
+                off(*phase).saturating_add(*makespan_ns),
+                CONTROL_PID,
+                0,
+                "",
+            ),
+            TraceEvent::Decision {
+                phase, at, actions, ..
+            } => instant(
+                &mut out,
+                &format!("decide ({} actions)", actions.len()),
+                off(*phase).saturating_add(*at),
+                CONTROL_PID,
+                1,
+                "",
+            ),
+            TraceEvent::ActionStaged {
+                phase,
+                at,
+                apply_at,
+                action,
+            } => span(
+                &mut out,
+                &format!("staged: {action}"),
+                off(*phase).saturating_add(*at),
+                apply_at.saturating_sub(*at),
+                CONTROL_PID,
+                2,
+                "",
+            ),
+            TraceEvent::ActionApplied {
+                phase,
+                decided_ns,
+                applied_ns,
+                action,
+                applied,
+                cost_ns,
+                note,
+            } => span(
+                &mut out,
+                action,
+                off(*phase).saturating_add(*decided_ns),
+                applied_ns.saturating_sub(*decided_ns),
+                CONTROL_PID,
+                2,
+                &format!(
+                    ",\"args\":{{\"applied\":{},\"cost_ns\":{},\"note\":\"{}\"}}",
+                    applied,
+                    cost_ns,
+                    escape(note)
+                ),
+            ),
+            TraceEvent::FaultInjected { phase, at, event } => instant(
+                &mut out,
+                &format!("inject: {event}"),
+                off(*phase).saturating_add(*at),
+                CONTROL_PID,
+                3,
+                "",
+            ),
+            TraceEvent::FaultDetected {
+                phase,
+                injected_at,
+                detected_at,
+                event,
+            } => span(
+                &mut out,
+                &format!("detect: {event}"),
+                off(*phase).saturating_add(*injected_at),
+                detected_at.saturating_sub(*injected_at),
+                CONTROL_PID,
+                3,
+                "",
+            ),
+            TraceEvent::LinkTransfer {
+                phase,
+                device,
+                start_ns,
+                end_ns,
+                bytes,
+                kind,
+            } => span(
+                &mut out,
+                kind.name(),
+                off(*phase).saturating_add(*start_ns),
+                end_ns.saturating_sub(*start_ns),
+                *device as u64,
+                LINK_TID,
+                &format!(",\"args\":{{\"bytes\":{bytes}}}"),
+            ),
+            TraceEvent::Governor {
+                phase,
+                at,
+                device,
+                kind,
+                detail,
+            } => instant(
+                &mut out,
+                kind,
+                off(*phase).saturating_add(*at),
+                *device as u64,
+                GOV_TID,
+                &format!(",\"args\":{{\"detail\":\"{}\"}}", escape(detail)),
+            ),
+            // Wall-clock and observational — not on the simulation timeline.
+            TraceEvent::ServeTick { .. } => {}
+        }
+    }
+
+    format!("[{}]", out.join(","))
+}
+
+/// Strict validity check for the acceptance contract: the export must parse
+/// as a JSON array whose every element carries `ph`, `ts`, `pid`, and
+/// `tid`. Returns the event count.
+pub fn validate_chrome_trace(s: &str) -> Result<usize, String> {
+    let v = Json::parse(s).map_err(|e| format!("not valid JSON: {e}"))?;
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| "top level is not a JSON array".to_string())?;
+    for (i, e) in arr.iter().enumerate() {
+        for key in ["ph", "ts", "pid", "tid"] {
+            if e.get(key).is_none() {
+                return Err(format!("event {i} is missing \"{key}\""));
+            }
+        }
+    }
+    Ok(arr.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{DeviceObs, ObsConfig, ObsSink, Registry};
+    use crate::trace::{TraceLog, TransferKind};
+
+    fn sample_log() -> TraceLog {
+        TraceLog {
+            scenario: "unit".into(),
+            policy: "none".into(),
+            capacity: 64,
+            seen: 7,
+            dropped: 0,
+            events: vec![
+                TraceEvent::PhaseStart {
+                    phase: 0,
+                    label: "calm".into(),
+                },
+                TraceEvent::ActionStaged {
+                    phase: 0,
+                    at: 1_000,
+                    apply_at: 5_000,
+                    action: "reslice d0".into(),
+                },
+                TraceEvent::ActionApplied {
+                    phase: 0,
+                    decided_ns: 1_000,
+                    applied_ns: 5_000,
+                    action: "reslice d0".into(),
+                    applied: true,
+                    cost_ns: 4_000,
+                    note: "landed".into(),
+                },
+                TraceEvent::FaultInjected {
+                    phase: 0,
+                    at: 2_000,
+                    event: "device-loss d1".into(),
+                },
+                TraceEvent::FaultDetected {
+                    phase: 0,
+                    injected_at: 2_000,
+                    detected_at: 9_000,
+                    event: "device-loss d1".into(),
+                },
+                TraceEvent::LinkTransfer {
+                    phase: 0,
+                    device: 0,
+                    start_ns: 3_000,
+                    end_ns: 8_000,
+                    bytes: 1 << 20,
+                    kind: TransferKind::Checkpoint,
+                },
+                TraceEvent::Governor {
+                    phase: 0,
+                    at: 4_000,
+                    device: 0,
+                    kind: "drain-end".into(),
+                    detail: "quiesced".into(),
+                },
+                TraceEvent::PhaseEnd {
+                    phase: 0,
+                    makespan_ns: 10_000,
+                },
+                TraceEvent::PhaseStart {
+                    phase: 1,
+                    label: "burst".into(),
+                },
+                TraceEvent::PhaseEnd {
+                    phase: 1,
+                    makespan_ns: 20_000,
+                },
+            ],
+        }
+    }
+
+    fn sample_obs() -> ObsReport {
+        let reg = Registry::shared();
+        let mut o = DeviceObs::new(reg, &ObsConfig::default());
+        o.record_sample(0, 3, [0b111, 0]);
+        o.record_sample(500, 1, [0b1, 0]);
+        o.note_kernel_done(0, 1, 100, 900, 24);
+        let mut sink = ObsSink::enabled(ObsConfig::default());
+        let mut rep = o.into_report(0, vec!["train".into(), "infer".into()]);
+        rep.phase = 1;
+        sink.absorb(vec![rep]);
+        sink.into_report("unit", "none")
+    }
+
+    #[test]
+    fn export_is_a_valid_chrome_trace() {
+        let log = sample_log();
+        let obs = sample_obs();
+        let j = perfetto_json(&log, &obs);
+        let n = validate_chrome_trace(&j).expect("export must validate");
+        assert!(n > 10, "metadata + events expected, got {n}");
+        assert!(j.contains("\"ph\":\"X\""), "duration spans present");
+        assert!(j.contains("\"ph\":\"C\""), "occupancy counters present");
+        assert!(j.contains("\"ph\":\"i\""), "instants present");
+        assert!(j.contains("checkpoint"), "link transfer rendered");
+    }
+
+    #[test]
+    fn phases_lay_end_to_end() {
+        let log = sample_log();
+        let offs = phase_offsets(&log);
+        assert_eq!(offs.get(&0), Some(&0));
+        assert_eq!(offs.get(&1), Some(&10_000));
+        // The device report tagged phase 1 lands after phase 0's makespan:
+        // its kernel span starts at 100ns → ts 10.100µs.
+        let j = perfetto_json(&log, &sample_obs());
+        assert!(j.contains("\"ts\":10.100"), "phase-1 span offset by phase-0 makespan");
+    }
+
+    #[test]
+    fn validator_rejects_missing_fields() {
+        assert!(validate_chrome_trace("{\"ph\":\"X\"}").is_err(), "not an array");
+        assert!(
+            validate_chrome_trace("[{\"ph\":\"X\",\"ts\":0,\"pid\":0}]").is_err(),
+            "missing tid"
+        );
+        assert_eq!(
+            validate_chrome_trace("[{\"ph\":\"X\",\"ts\":0,\"pid\":0,\"tid\":1}]"),
+            Ok(1)
+        );
+    }
+}

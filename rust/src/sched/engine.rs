@@ -159,6 +159,9 @@ struct ActiveTransfer {
 struct QueuedTransfer {
     ctx: usize,
     bytes: u64,
+    /// When this entry joined the queue (re-stamped on a pause re-queue) —
+    /// the telemetry plane bills `promotion − enqueued_at` as link wait.
+    enqueued_at: SimTime,
 }
 
 #[derive(Default)]
@@ -283,6 +286,12 @@ pub struct DeviceRt {
     straggler: Option<(u32, u32, Rng)>,
     /// Kernels the straggler injector actually inflated.
     straggler_hits: u64,
+    // --- telemetry plane (DESIGN.md §8c) ---
+    /// Per-device observation state: `None` (one branch per hook) unless a
+    /// registry was attached via [`DeviceRt::set_obs`]. Purely read-side —
+    /// attaching it never perturbs scheduling, which is what keeps
+    /// telemetry-on runs byte-identical to telemetry-off.
+    obs: Option<Box<crate::obs::DeviceObs>>,
 }
 
 const H2D: usize = 0;
@@ -403,7 +412,73 @@ impl DeviceRt {
             service_scale_pct: 100,
             straggler: None,
             straggler_hits: 0,
+            obs: None,
         }
+    }
+
+    /// Attach the telemetry plane (§8c): every subsequent dispatch/retire/
+    /// transfer observation is recorded into `reg` and the device's own
+    /// [`crate::obs::DeviceObs`]. Safe to call on a live runtime (the
+    /// governor attaches late-admitted devices this way).
+    pub fn set_obs(&mut self, reg: std::sync::Arc<crate::obs::Registry>, cfg: &crate::obs::ObsConfig) {
+        if self.obs.is_none() {
+            self.obs = Some(crate::obs::DeviceObs::new(reg, cfg));
+        }
+    }
+
+    /// Detach and freeze this device's observations (context ids rendered
+    /// to names). Returns `None` when telemetry was never attached.
+    pub fn take_obs(&mut self, device: usize) -> Option<crate::obs::DeviceObsReport> {
+        self.obs
+            .take()
+            .map(|o| o.into_report(device, self.ctx_names.clone()))
+    }
+
+    /// Telemetry hook after a placement round for `kid`: opens the wait
+    /// window when a kernel with pending blocks placed nothing, closes and
+    /// bills it on the next successful placement. Split-borrows `self` so
+    /// the hook stays a single `Option` branch when telemetry is off.
+    #[inline]
+    fn obs_note_place(&mut self, kid: usize, placed: u32, pending: u32) {
+        let Self {
+            obs,
+            kernels,
+            ctx_inst,
+            running_blocks,
+            now,
+            ..
+        } = self;
+        let Some(o) = obs.as_deref_mut() else { return };
+        let ctx = kernels[kid].ctx;
+        if placed > 0 {
+            o.reg().add(crate::obs::ctr::BLOCKS_PLACED, placed as u64);
+            o.note_placed(kid, ctx, ctx_inst[ctx], *now, running_blocks, ctx_inst);
+        } else if pending > 0 {
+            o.note_blocked(kid, *now);
+        }
+    }
+
+    /// Telemetry hook per processed event: samples the per-SM occupancy
+    /// timeline on the obs plane's own cadence (independent of the
+    /// report-level `occupancy_sample_ns`, which is usually off).
+    #[inline]
+    fn obs_sample(&mut self) {
+        let Self { obs, sms, now, .. } = self;
+        let Some(o) = obs.as_deref_mut() else { return };
+        if !o.sample_due(*now) {
+            return;
+        }
+        let mut mask = [0u64; 2];
+        let mut active: u32 = 0;
+        for (i, sm) in sms.iter().enumerate() {
+            if !sm.cohorts.is_empty() {
+                active += 1;
+                if i < 128 {
+                    mask[i / 64] |= 1u64 << (i % 64);
+                }
+            }
+        }
+        o.record_sample(*now, active, mask);
     }
 
     fn is_timeslicing(&self) -> bool {
@@ -502,6 +577,10 @@ impl DeviceRt {
         if owner != usize::MAX {
             let inst = &mut self.instances[owner];
             inst.acct.sync(s - inst.base, &self.sms[s]);
+            if let Some(o) = self.obs.as_deref_mut() {
+                o.account_syncs += 1;
+                o.reg().inc(crate::obs::ctr::ACCOUNT_SYNCS);
+            }
         }
     }
 
@@ -617,6 +696,7 @@ impl DeviceRt {
             }
             self.report.events += 1;
             self.maybe_sample_occupancy();
+            self.obs_sample();
             match ev {
                 Ev::Poll { ctx } => self.do_poll(ctx),
                 Ev::CohortDone { sm, id } => self.on_cohort_done(sm, id),
@@ -760,6 +840,9 @@ impl DeviceRt {
                     issued_at: self.now,
                     done: false,
                 });
+                if let Some(o) = self.obs.as_deref() {
+                    o.reg().inc(crate::obs::ctr::KERNELS_DISPATCHED);
+                }
                 let hide = self.kernels[kid].dur_iso;
                 self.queue.push(kid);
                 self.ctxs[ctx].state = CtxState::RunningKernel;
@@ -874,6 +957,10 @@ impl DeviceRt {
                 let placed = self.place_kernel(kid);
                 if placed > 0 {
                     placed_any = true;
+                }
+                if self.obs.is_some() {
+                    let pending = self.kernels[kid].pending_blocks();
+                    self.obs_note_place(kid, placed, pending);
                 }
                 if self.kernels[kid].pending_blocks() > 0 {
                     // An MPS client at its thread limit does not block
@@ -1192,6 +1279,16 @@ impl DeviceRt {
             debug_assert!(k.finished <= k.grid);
             k.finished == k.grid
         };
+        if let Some(o) = self.obs.as_deref_mut() {
+            o.reg().inc(crate::obs::ctr::COHORTS_RETIRED);
+            if kernel_done {
+                let (issued_at, grid) = {
+                    let k = &self.kernels[kid];
+                    (k.issued_at, k.grid)
+                };
+                o.note_kernel_done(kid, ctx, issued_at, self.now, grid);
+            }
+        }
         if kernel_done {
             self.kernels[kid].done = true;
             // Tombstone instead of O(n) retain per completion: done kernels
@@ -1234,7 +1331,10 @@ impl DeviceRt {
     }
 
     fn enqueue_transfer(&mut self, chan: usize, ctx: usize, bytes: u64) {
-        self.channels[chan].queue.push_back(QueuedTransfer { ctx, bytes });
+        let enqueued_at = self.now;
+        self.channels[chan]
+            .queue
+            .push_back(QueuedTransfer { ctx, bytes, enqueued_at });
         self.reeval_slicing();
         self.pump_channel(chan);
     }
@@ -1276,6 +1376,9 @@ impl DeviceRt {
         }
         let Some((_, pos)) = best else { return };
         let t = self.channels[chan].queue.remove(pos).unwrap();
+        if let Some(o) = self.obs.as_deref_mut() {
+            o.note_link_wait(chan, t.ctx, self.now.saturating_sub(t.enqueued_at));
+        }
         self.channels[chan].next_inst = (self.ctx_inst[t.ctx].min(ninst - 1) + 1) % ninst;
         let dur = self.transfer_ns(t.bytes);
         self.channels[chan].active = Some(ActiveTransfer {
@@ -1297,6 +1400,9 @@ impl DeviceRt {
         }
         let a = self.channels[chan].active.take().unwrap();
         let ctx = a.ctx;
+        if let Some(o) = self.obs.as_deref() {
+            o.reg().inc(crate::obs::ctr::TRANSFERS_DONE);
+        }
         if self.cfg.record_ops && self.ctxs[ctx].is_inference {
             self.report.ops.push(OpRecord {
                 kind: if chan == H2D {
@@ -1336,6 +1442,9 @@ impl DeviceRt {
         self.channels[chan].queue.push_front(QueuedTransfer {
             ctx: a.ctx,
             bytes: bytes_left.max(1),
+            // Re-stamped: the wait already served before the pause is not
+            // re-billed when the remainder is promoted again.
+            enqueued_at: self.now,
         });
         self.pump_channel(chan);
     }
@@ -2230,6 +2339,26 @@ impl Engine {
 /// Convenience: build and run in one call.
 pub fn run(cfg: EngineConfig, defs: Vec<CtxDef>) -> RunReport {
     Engine::new(cfg, defs).run()
+}
+
+/// [`run`] with the telemetry plane attached (§8c): same simulation, plus a
+/// `gpushare-metrics-v1` snapshot. The `RunReport` is byte-identical to the
+/// unobserved run's — telemetry only reads.
+pub fn run_observed(
+    cfg: EngineConfig,
+    defs: Vec<CtxDef>,
+    obs_cfg: &crate::obs::ObsConfig,
+) -> (RunReport, crate::obs::ObsReport) {
+    let reg = crate::obs::Registry::shared();
+    let mut rt = DeviceRt::new(cfg, defs);
+    rt.set_obs(reg.clone(), obs_cfg);
+    rt.step_until(SimTime::MAX);
+    let dev = rt.take_obs(0);
+    let report = rt.into_report();
+    let mut sink = crate::obs::ObsSink::from_registry(reg, *obs_cfg);
+    sink.absorb(dev.into_iter().collect());
+    let obs = sink.into_report("engine", &report.mechanism);
+    (report, obs)
 }
 
 #[cfg(test)]

@@ -113,6 +113,10 @@ pub struct GovernorRt {
     /// touches it.
     events: Vec<GovEvent>,
     recording: bool,
+    /// Telemetry plane (§8c): when attached, every wake records its busy
+    /// set and each runtime carries a `DeviceObs`. Late-built runtimes
+    /// (spares) are attached in [`GovernorRt::ensure_runtime`].
+    obs: Option<(std::sync::Arc<crate::obs::Registry>, crate::obs::ObsConfig)>,
 }
 
 /// Single-touch pop of the next component key due at or before `horizon`
@@ -144,6 +148,7 @@ impl GovernorRt {
             busy_mark: vec![false; ndev],
             events: Vec::new(),
             recording: false,
+            obs: None,
         };
         for d in 0..ndev {
             gov.refresh(d);
@@ -184,6 +189,34 @@ impl GovernorRt {
     /// Drain the recorded micro-events (emission order).
     pub fn take_events(&mut self) -> Vec<GovEvent> {
         std::mem::take(&mut self.events)
+    }
+
+    /// Attach the telemetry plane (§8c): every live runtime grows a
+    /// `DeviceObs`, and runtimes built later (idle spares) are attached
+    /// at creation. Idempotent per runtime. The hooks only *read* engine
+    /// state, so attaching never perturbs scheduling — the
+    /// observed≡unobserved property in `tests/obs.rs` gates on it.
+    pub fn set_obs(
+        &mut self,
+        reg: std::sync::Arc<crate::obs::Registry>,
+        cfg: crate::obs::ObsConfig,
+    ) {
+        for rt in self.rts.iter_mut().flatten() {
+            rt.set_obs(reg.clone(), &cfg);
+        }
+        self.obs = Some((reg, cfg));
+    }
+
+    /// Harvest every live runtime's device-local telemetry (occupancy
+    /// timeline, attribution matrices, histograms). Call before
+    /// [`GovernorRt::into_reports`]; slots only ever transition
+    /// idle→live, so this sees every device that did work.
+    pub fn take_obs(&mut self) -> Vec<crate::obs::DeviceObsReport> {
+        self.rts
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(d, slot)| slot.as_mut().and_then(|rt| rt.take_obs(d)))
+            .collect()
     }
 
     #[inline]
@@ -338,6 +371,14 @@ impl GovernorRt {
     /// parallel and more than one device has work, serially in place
     /// otherwise (a 0- or 1-device wake never pays for threads).
     fn step_busy(&mut self, busy: &[usize], t: SimTime) {
+        // Single choke point shared by the event-driven and lockstep
+        // paths, so telemetry counts identically across modes (the
+        // lockstep differential oracle runs with telemetry on).
+        if let Some((reg, _)) = &self.obs {
+            reg.inc(crate::obs::ctr::GOV_WAKES);
+            reg.add(crate::obs::ctr::GOV_DEVICES_STEPPED, busy.len() as u64);
+            reg.observe(crate::obs::hist::GOV_BUSY_DEVICES, busy.len() as u64);
+        }
         let use_pool = self.parallel && busy.len() > 1 && !crate::exp::in_worker();
         if use_pool && self.pool.is_none() {
             let workers = crate::exp::fanout_workers().min(self.rts.len());
@@ -444,7 +485,11 @@ impl GovernorRt {
         match self.rts.get_mut(d) {
             Some(slot) => {
                 if slot.is_none() {
-                    *slot = Some(DeviceRt::new_idle(cfg));
+                    let mut rt = DeviceRt::new_idle(cfg);
+                    if let Some((reg, ocfg)) = &self.obs {
+                        rt.set_obs(reg.clone(), ocfg);
+                    }
+                    *slot = Some(rt);
                     // A fresh spare must enter the heap or the
                     // event-driven path would never step (and so never
                     // finish) it.

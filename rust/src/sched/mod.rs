@@ -9,6 +9,6 @@ pub mod mechanism;
 mod pool;
 
 pub use contention::ContentionModel;
-pub use engine::{run, CtxDef, CtxId, DeviceRt, Engine, EngineConfig};
+pub use engine::{run, run_observed, CtxDef, CtxId, DeviceRt, Engine, EngineConfig};
 pub use governor::{GovEvent, GovEventKind, GovernorRt};
 pub use mechanism::{Mechanism, PlacementPolicy, PreemptConfig, PreemptFlavor, PreemptPolicy};

@@ -452,6 +452,13 @@ impl TraceSink {
         self.ring.is_some()
     }
 
+    /// Events lost to ring overflow so far. Report assembly surfaces a
+    /// non-zero count in the `ControlReport` JSON (§8c) — a truncated
+    /// ring must never gate CI silently.
+    pub fn dropped(&self) -> u64 {
+        self.ring.as_ref().map_or(0, TraceRing::dropped)
+    }
+
     /// Record one event. `f` runs only when the sink is enabled — keep
     /// all cloning inside the closure.
     #[inline]

@@ -1,0 +1,265 @@
+//! Integration tests for the §8c telemetry plane: the zero-perturbation
+//! contract (attaching the plane must not change a single byte of any
+//! report, across fan-out on/off and event-driven vs lockstep stepping),
+//! end-to-end contention-attribution conservation (Σ attributed ≡
+//! Σ measured on every matrix, per device and fleet-merged), per-device →
+//! fleet histogram merge conservation, Perfetto export validity on a real
+//! recorded run, and the loud surfacing of trace-ring drops in the
+//! `ControlReport` JSON.
+
+use gpushare::exp::control::{
+    bursty_reslice_inline_observed, bursty_reslice_inline_observed_stepped,
+    bursty_reslice_inline_stepped, bursty_reslice_inline_traced, chaos_recovery_observed,
+    chaos_recovery_observed_stepped, chaos_recovery_stepped, Stepping,
+};
+use gpushare::exp::Protocol;
+use gpushare::obs::perfetto::{perfetto_json, validate_chrome_trace};
+use gpushare::obs::{ctr, hist, AttrMatrix, Hist, ObsConfig};
+use gpushare::sched::Mechanism;
+use gpushare::trace::TraceConfig;
+use gpushare::workload::DlModel;
+
+fn proto() -> Protocol {
+    Protocol {
+        requests: 6,
+        train_steps: 2,
+        ..Protocol::default()
+    }
+}
+
+fn obs_cfg() -> ObsConfig {
+    ObsConfig::default()
+}
+
+/// Lossless capacity for the runs that also carry the flight recorder.
+fn trace_cfg() -> TraceConfig {
+    TraceConfig::enabled(1 << 16)
+}
+
+fn assert_conserved(tag: &str, m: &AttrMatrix) {
+    assert_eq!(
+        m.attributed(),
+        m.measured,
+        "{tag}: attribution leaked — Σ cells {} != measured {}",
+        m.attributed(),
+        m.measured
+    );
+}
+
+#[test]
+fn telemetry_is_invisible_to_the_engine() {
+    // The zero-perturbation contract at the lowest layer: a raw engine
+    // pair run with the plane attached must produce a byte-identical
+    // RunReport — the hooks only read engine state.
+    let p = proto();
+    let plain = p.pair(Mechanism::mps_default(), DlModel::ResNet50, DlModel::ResNet50);
+    let (observed, obs) =
+        p.pair_observed(Mechanism::mps_default(), DlModel::ResNet50, DlModel::ResNet50, &obs_cfg());
+    assert_eq!(plain.to_json(), observed.to_json());
+    // …and the plane actually measured the run it rode along on.
+    assert!(obs.counters[ctr::KERNELS_DISPATCHED] > 0);
+    assert!(obs.counters[ctr::KERNELS_RETIRED] > 0);
+    assert_eq!(obs.devices.len(), 1, "one device, one report");
+    assert!(
+        obs.hists[hist::KERNEL_SPAN_NS].count > 0,
+        "retired kernels must leave span observations"
+    );
+}
+
+#[test]
+fn telemetry_is_invisible_to_governed_runs() {
+    // The same contract through the whole in-clock control loop, across
+    // the experiment fan-out (parallel stepping pool on/off) and both
+    // governor stepping modes: the telemetry-on GovernedComparison is
+    // byte-identical to the telemetry-off one.
+    for parallel in [false, true] {
+        for stepping in [Stepping::EventDriven, Stepping::Lockstep] {
+            let mut p = proto();
+            p.parallel = parallel;
+            let off = bursty_reslice_inline_stepped(&p, &TraceConfig::disabled(), stepping).0;
+            let (on, _, obs) = bursty_reslice_inline_observed_stepped(
+                &p,
+                &TraceConfig::disabled(),
+                stepping,
+                &obs_cfg(),
+            );
+            assert_eq!(
+                off.to_json(),
+                on.to_json(),
+                "bursty inline: telemetry perturbed the run \
+                 (parallel={parallel}, stepping={stepping:?})"
+            );
+            assert!(obs.counters[ctr::CONTROL_WAKES] > 0, "the plane must be live");
+        }
+    }
+    for stepping in [Stepping::EventDriven, Stepping::Lockstep] {
+        let p = proto();
+        let off = chaos_recovery_stepped(&p, &TraceConfig::disabled(), stepping).0;
+        let (on, _, obs) =
+            chaos_recovery_observed_stepped(&p, &TraceConfig::disabled(), stepping, &obs_cfg());
+        assert_eq!(
+            off.to_json(),
+            on.to_json(),
+            "chaos recovery: telemetry perturbed the run (stepping={stepping:?})"
+        );
+        assert!(
+            obs.counters[ctr::FAULTS_DETECTED] >= 1,
+            "the storm's detection must be counted"
+        );
+        assert!(
+            obs.counters[ctr::CHECKPOINTS] >= 1,
+            "periodic checkpoints must be counted"
+        );
+    }
+}
+
+#[test]
+fn observed_stepping_modes_agree_on_the_full_snapshot() {
+    // The §7f oracle extended to telemetry: event-driven and lockstep
+    // stepping must produce byte-identical metrics snapshots — every
+    // counter, histogram bucket, occupancy sample, and attribution cell.
+    // Device clocks are never perturbed by skipping provably idle
+    // devices, and occupancy samples ride processed events, so the
+    // snapshots cannot tell the modes apart.
+    let p = proto();
+    let (_, _, ed) = bursty_reslice_inline_observed_stepped(
+        &p,
+        &TraceConfig::disabled(),
+        Stepping::EventDriven,
+        &obs_cfg(),
+    );
+    let (_, _, ls) = bursty_reslice_inline_observed_stepped(
+        &p,
+        &TraceConfig::disabled(),
+        Stepping::Lockstep,
+        &obs_cfg(),
+    );
+    assert_eq!(
+        ed.to_json(),
+        ls.to_json(),
+        "telemetry snapshots diverged between stepping modes"
+    );
+}
+
+#[test]
+fn contention_attribution_conserves_every_measured_wait() {
+    // The acceptance property: on every attribution matrix — per device,
+    // per phase, and after the name-keyed fleet merge — the attributed
+    // cells sum exactly to the measured wait. Integer remainders are
+    // assigned deterministically, never dropped.
+    let p = proto();
+    let (_, _, bursty) =
+        bursty_reslice_inline_observed(&p, &TraceConfig::disabled(), &obs_cfg());
+    let (_, _, chaos) = chaos_recovery_observed(&p, &TraceConfig::disabled(), &obs_cfg());
+    for obs in [&bursty, &chaos] {
+        assert!(
+            !obs.devices.is_empty(),
+            "{}: governed phases must leave device reports",
+            obs.scenario
+        );
+        for d in &obs.devices {
+            assert_conserved(&format!("{} dev {} sm_wait", obs.scenario, d.device), &d.sm_wait);
+            assert_conserved(
+                &format!("{} dev {} link_wait", obs.scenario, d.device),
+                &d.link_wait,
+            );
+        }
+        let (names, sm, link) = obs.fleet_interference();
+        assert_conserved(&format!("{} fleet sm_wait", obs.scenario), &sm);
+        assert_conserved(&format!("{} fleet link_wait", obs.scenario), &link);
+        assert!(!names.is_empty(), "{}: fleet merge saw no contexts", obs.scenario);
+        // The merge must not invent or lose wait either.
+        let dev_sm: u64 = obs.devices.iter().map(|d| d.sm_wait.measured).sum();
+        let dev_link: u64 = obs.devices.iter().map(|d| d.link_wait.measured).sum();
+        assert_eq!(sm.measured, dev_sm, "{}: fleet sm merge changed the total", obs.scenario);
+        assert_eq!(link.measured, dev_link, "{}: fleet link merge changed the total", obs.scenario);
+    }
+    // The bursty burst overloads the shared 7g instance: some block wait
+    // must exist and be attributed, or the matrix is vacuous.
+    assert!(
+        bursty.hists[hist::BLOCK_WAIT_NS].count > 0,
+        "bursty run recorded no block waits at all"
+    );
+}
+
+#[test]
+fn fleet_histograms_are_exact_merges_of_device_histograms() {
+    // Dual recording: every engine observation lands in the device-local
+    // histogram and the shared atomic registry. Merging the per-device
+    // histograms must reproduce the fleet histogram exactly — same
+    // counts, same sums, same buckets. (Bursty only: no faults, so every
+    // runtime survives to be harvested.)
+    let p = proto();
+    let (_, _, obs) = bursty_reslice_inline_observed(&p, &TraceConfig::disabled(), &obs_cfg());
+    for (idx, sel) in [
+        (hist::BLOCK_WAIT_NS, 0usize),
+        (hist::LINK_WAIT_NS, 1),
+        (hist::KERNEL_SPAN_NS, 2),
+    ] {
+        let mut merged = Hist::new();
+        for d in &obs.devices {
+            let h = match sel {
+                0 => &d.block_wait_hist,
+                1 => &d.link_wait_hist,
+                _ => &d.kernel_span_hist,
+            };
+            merged.merge(h);
+        }
+        assert_eq!(
+            merged,
+            obs.hists[idx],
+            "fleet histogram {:?} is not the exact device merge",
+            hist::NAMES[idx]
+        );
+    }
+    assert!(
+        obs.hists[hist::KERNEL_SPAN_NS].count > 0,
+        "merge equality must not hold vacuously"
+    );
+}
+
+#[test]
+fn perfetto_export_of_a_real_run_is_valid() {
+    // The exporter contract on a real recorded run: a JSON array whose
+    // every element carries ph/ts/pid/tid, non-empty, and with occupancy
+    // counter tracks from the device timelines.
+    let p = proto();
+    let (_, log, obs) = bursty_reslice_inline_observed(&p, &trace_cfg(), &obs_cfg());
+    assert_eq!(log.dropped, 0, "lossless capacity expected");
+    assert!(
+        obs.devices.iter().any(|d| !d.timeline.is_empty()),
+        "occupancy timelines must carry samples"
+    );
+    let json = perfetto_json(&log, &obs);
+    let events = validate_chrome_trace(&json).expect("chrome-trace validation");
+    assert!(events > 0, "export must contain events");
+    // The governed chaos storm exports too (faults + transfers render).
+    let (_, clog, cobs) = chaos_recovery_observed(&p, &trace_cfg(), &obs_cfg());
+    let cjson = perfetto_json(&clog, &cobs);
+    let cevents = validate_chrome_trace(&cjson).expect("chaos chrome-trace validation");
+    assert!(cevents > 0);
+}
+
+#[test]
+fn trace_ring_drops_surface_loudly_in_the_report() {
+    // Satellite (a): a truncated ring is not a silent truncation. An
+    // 8-event ring under the bursty scenario must drop, the drop count
+    // must surface in ControlReport.trace_dropped and its JSON — and a
+    // lossless run must omit the key entirely, keeping the traced ≡
+    // untraced byte-identity oracle intact.
+    let p = proto();
+    let (cmp, log) = bursty_reslice_inline_traced(&p, &TraceConfig::enabled(8));
+    assert!(log.dropped > 0, "an 8-event ring cannot hold the bursty run");
+    assert_eq!(cmp.governed.trace_dropped, log.dropped);
+    assert!(
+        cmp.governed.to_json().contains("\"trace_dropped\":"),
+        "dropped events must be visible in the report JSON"
+    );
+    let (kept, kept_log) = bursty_reslice_inline_traced(&p, &trace_cfg());
+    assert_eq!(kept_log.dropped, 0);
+    assert_eq!(kept.governed.trace_dropped, 0);
+    assert!(
+        !kept.governed.to_json().contains("trace_dropped"),
+        "a kept-up ring must not perturb the report serialization"
+    );
+}
